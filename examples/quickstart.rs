@@ -1,0 +1,58 @@
+//! Quickstart: predict the training cost of a model before running it.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Collects a small profiled dataset with the simulator, trains the
+//! AutoML predictor, then predicts time/memory for a configuration it
+//! has never seen and compares with the simulated ground truth.
+
+use dnnabacus::experiments::Ctx;
+use dnnabacus::features::{feature_vector, StructureRep};
+use dnnabacus::predictor::{AutoMl, Target};
+use dnnabacus::sim::{simulate_training, DatasetKind, TrainConfig};
+use dnnabacus::zoo;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A profiled dataset (cached under target/ after the first run).
+    let ctx = Ctx::default();
+    let corpus = ctx.training_corpus();
+    println!("profiled dataset: {} points", corpus.len());
+
+    // 2. Train the two predictors (paper §3.3: pick best family by MRE).
+    let time_model = AutoMl::train_opt(&corpus, Target::Time, 7, true);
+    let mem_model = AutoMl::train_opt(&corpus, Target::Memory, 7, true);
+    println!(
+        "winners: time={}, memory={}",
+        time_model.report.winner.name(),
+        mem_model.report.winner.name()
+    );
+
+    // 3. Predict an unseen configuration of a known model.
+    let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, 200);
+    let g = zoo::build("vgg16", 3, 100)?;
+    let f = feature_vector(&g, &cfg, StructureRep::Nsm);
+    let pred_time = time_model.predict(&f);
+    let pred_mem = mem_model.predict(&f);
+    println!("\nvgg16 @ batch 200 on {}:", cfg.device.name);
+    println!(
+        "  predicted: {:.1} s, {:.0} MiB",
+        pred_time,
+        pred_mem / (1 << 20) as f64
+    );
+
+    // 4. Check against ground truth.
+    let m = simulate_training(&g, &cfg)?;
+    println!(
+        "  measured : {:.1} s, {:.0} MiB",
+        m.total_time,
+        (m.peak_mem >> 20) as f64
+    );
+    println!(
+        "  rel. err : {:.2}% (time), {:.2}% (memory)",
+        ((pred_time - m.total_time) / m.total_time).abs() * 100.0,
+        ((pred_mem - m.peak_mem as f64) / m.peak_mem as f64).abs() * 100.0
+    );
+    Ok(())
+}

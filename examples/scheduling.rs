@@ -1,0 +1,17 @@
+//! Scheduling application (paper §4.3 / Figure 14): place 20 training
+//! jobs on two machines with predicted costs; compare optimal, random
+//! and genetic-algorithm plans.
+//!
+//! ```bash
+//! cargo run --release --example scheduling
+//! ```
+
+use dnnabacus::experiments::{self, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::fast();
+    for table in experiments::run("fig14", &ctx)? {
+        println!("{}", table.render());
+    }
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Online prediction service under load: start the coordinator with the
+//! AutoML backend (add `--features`-free `mlp` via `BACKEND=mlp` env to
+//! use the AOT PJRT MLP), fire concurrent requests, report throughput
+//! and latency percentiles.
+//!
+//! ```bash
+//! cargo run --release --example serve_load
+//! BACKEND=mlp cargo run --release --example serve_load   # PJRT backend
+//! ```
+
+use dnnabacus::coordinator::{
+    service::{AutoMlBackend, MlpBackend},
+    CostModel, PredictRequest, PredictionService, ServiceConfig,
+};
+use dnnabacus::experiments::Ctx;
+use dnnabacus::predictor::{AutoMl, Target};
+use dnnabacus::sim::{DatasetKind, TrainConfig};
+use dnnabacus::zoo;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::fast();
+    let backend: Arc<dyn CostModel> = if std::env::var("BACKEND").as_deref() == Ok("mlp") {
+        Arc::new(MlpBackend::spawn(1)?)
+    } else {
+        let corpus = ctx.training_corpus();
+        Arc::new(AutoMlBackend {
+            time_model: AutoMl::train_opt(&corpus, Target::Time, 1, true),
+            memory_model: AutoMl::train_opt(&corpus, Target::Memory, 1, true),
+        })
+    };
+    println!("backend: {}", backend.name());
+    let svc = PredictionService::start(ServiceConfig::default(), backend);
+
+    let names: Vec<&str> = zoo::all_names();
+    let n = 512;
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            svc.submit(PredictRequest {
+                id: i as u64,
+                model: names[i % names.len()].to_string(),
+                config: TrainConfig::paper_default(
+                    if i % 2 == 0 { DatasetKind::Cifar100 } else { DatasetKind::Mnist },
+                    16 + (i % 16) * 16,
+                ),
+            })
+        })
+        .collect();
+    let mut ok = 0usize;
+    let mut oom = 0usize;
+    for rx in rxs {
+        match rx.recv()? {
+            Ok(p) => {
+                ok += 1;
+                if !p.fits_device {
+                    oom += 1;
+                }
+            }
+            Err(_) => {}
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let m = svc.shutdown();
+    println!("served {ok}/{n} in {elapsed:.2}s = {:.0} req/s", ok as f64 / elapsed);
+    println!("predicted-OOM flags: {oom}");
+    println!(
+        "latency p50 {:.2} ms, p99 {:.2} ms | mean batch {:.1} over {} batches",
+        m.p50_latency_s * 1e3,
+        m.p99_latency_s * 1e3,
+        m.mean_batch_size,
+        m.batches
+    );
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! End-to-end driver (the workload that proves all three layers
+//! compose): collect a real profiled dataset with the simulator (L3
+//! substrate), then train the predictor MLP **through the AOT-compiled
+//! XLA train step** — the L2 JAX model over the L1 Pallas fused-dense
+//! kernel, executed from Rust via PJRT — logging the loss curve, and
+//! finally compare its test MRE against the Rust GBDT.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_predictor
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use dnnabacus::experiments::Ctx;
+use dnnabacus::predictor::{AutoMl, Dataset, Target};
+use dnnabacus::runtime::MlpPredictor;
+use dnnabacus::util::prng::Rng;
+use dnnabacus::util::stats;
+
+fn feature_stats(d: &Dataset) -> (Vec<f64>, Vec<f64>) {
+    let dim = d.points[0].features.len();
+    let n = d.len() as f64;
+    let mut mean = vec![0.0; dim];
+    let mut std = vec![0.0; dim];
+    for p in &d.points {
+        for (m, v) in mean.iter_mut().zip(&p.features) {
+            *m += v;
+        }
+    }
+    mean.iter_mut().for_each(|m| *m /= n);
+    for p in &d.points {
+        for (s, (v, m)) in std.iter_mut().zip(p.features.iter().zip(&mean)) {
+            *s += (v - m) * (v - m);
+        }
+    }
+    std.iter_mut().for_each(|s| *s = (*s / n).sqrt().max(1e-9));
+    (mean, std)
+}
+
+fn main() -> anyhow::Result<()> {
+    if !dnnabacus::runtime::artifacts_available() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    // 1. Collect the profiled dataset (L3 simulator substrate).
+    let ctx = Ctx {
+        scale: 0.25,
+        ..Ctx::default()
+    };
+    let corpus = ctx.training_corpus();
+    let (train, test) = corpus.split(0.7, 42);
+    println!(
+        "dataset: {} train / {} test points, {} features",
+        train.len(),
+        test.len(),
+        train.points[0].features.len()
+    );
+
+    // 2. Train the MLP through PJRT (SGD over the AOT train step).
+    let mut mlp = MlpPredictor::new(42)?;
+    let b = mlp.manifest.train_batch;
+    let (mean, std) = feature_stats(&train);
+    let norm = |f: &[f64]| -> Vec<f64> {
+        f.iter().enumerate().map(|(i, &v)| (v - mean[i]) / std[i]).collect()
+    };
+    let steps = 400;
+    let mut rng = Rng::new(7);
+    println!("\ntraining MLP via AOT XLA train step ({steps} steps, batch {b}):");
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let idx = rng.sample_indices(train.len(), b);
+        let x: Vec<Vec<f64>> = idx.iter().map(|&i| norm(&train.points[i].features)).collect();
+        let y: Vec<[f64; 2]> = idx
+            .iter()
+            .map(|&i| {
+                let p = &train.points[i];
+                [p.time.max(1e-9).ln(), p.memory.max(1e-9).ln()]
+            })
+            .collect();
+        let loss = mlp.train_step(&x, &y, 3e-3)?;
+        if step % 50 == 0 || step == steps - 1 {
+            println!("  step {step:>4}  loss {loss:.4}");
+        }
+    }
+    println!("trained in {:.1}s (pure PJRT, no Python)", t0.elapsed().as_secs_f64());
+
+    // 3. Evaluate both targets on the test split.
+    let feats: Vec<Vec<f64>> = test.points.iter().map(|p| norm(&p.features)).collect();
+    let rows = mlp.predict_batch(&feats)?;
+    let pred_time: Vec<f64> = rows.iter().map(|r| r[0].exp()).collect();
+    let pred_mem: Vec<f64> = rows.iter().map(|r| r[1].exp()).collect();
+    let mre_time = stats::mre(&pred_time, &test.raw_targets(Target::Time));
+    let mre_mem = stats::mre(&pred_mem, &test.raw_targets(Target::Memory));
+    println!("\nMLP (PJRT) test MRE: time {:.2}%, memory {:.2}%", mre_time * 100.0, mre_mem * 100.0);
+
+    // 4. Compare with the AutoML shallow models (the paper's winner).
+    for target in [Target::Time, Target::Memory] {
+        let m = AutoMl::train_opt(&train, target, 42, true);
+        println!(
+            "AutoML {}: winner={}, test MRE {:.2}%",
+            target.name(),
+            m.report.winner.name(),
+            m.mre_on(&test) * 100.0
+        );
+    }
+    Ok(())
+}

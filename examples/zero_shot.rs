@@ -1,0 +1,33 @@
+//! Zero-shot prediction on unseen networks (paper §4.2 / Figure 13):
+//! train on the 29 classic networks only, predict the costs of five
+//! architectures the model has never seen.
+//!
+//! ```bash
+//! cargo run --release --example zero_shot
+//! ```
+
+use dnnabacus::experiments::Ctx;
+use dnnabacus::predictor::{AutoMl, Target};
+use dnnabacus::util::table::fmt_pct;
+use dnnabacus::zoo;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::fast();
+    let train = ctx.classic_dataset();
+    let unseen = ctx.unseen_dataset();
+    println!(
+        "training on {} points from 29 classic nets; evaluating {} points from 5 unseen nets",
+        train.len(),
+        unseen.len()
+    );
+    for target in [Target::Time, Target::Memory] {
+        let m = AutoMl::train_opt(&train, target, 11, true);
+        println!("\n=== zero-shot {} MRE (winner {})", target.name(), m.report.winner.name());
+        for (name, _) in zoo::UNSEEN_5 {
+            let sub = unseen.filter_model(name);
+            println!("  {:<22} {}", name, fmt_pct(m.mre_on(&sub)));
+        }
+        println!("  {:<22} {}", "ALL UNSEEN", fmt_pct(m.mre_on(&unseen)));
+    }
+    Ok(())
+}

@@ -1,0 +1,112 @@
+"""AOT lowering: JAX → HLO text → `artifacts/` for the Rust runtime.
+
+HLO *text* (not `.serialize()`) is the interchange format — jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Artifacts:
+  mlp_infer_b{B}.hlo.txt       batched inference, B ∈ INFER_BATCHES
+  mlp_train_step_b{B}.hlo.txt  one SGD step at the training minibatch
+  manifest.json                shapes + calling convention for Rust
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+INFER_BATCHES = (1, 32, 256)
+TRAIN_BATCH = 64
+TRAIN_LR_DTYPE = "f32"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _param_specs():
+    return [
+        spec
+        for din, dout in model.LAYER_DIMS
+        for spec in (
+            jax.ShapeDtypeStruct((din, dout), jnp.float32),
+            jax.ShapeDtypeStruct((dout,), jnp.float32),
+        )
+    ]
+
+
+def lower_infer(batch: int) -> str:
+    args = _param_specs() + [jax.ShapeDtypeStruct((batch, model.INPUT_DIM), jnp.float32)]
+    return to_hlo_text(jax.jit(model.infer_flat).lower(*args))
+
+
+def lower_train_step(batch: int) -> str:
+    args = _param_specs() + [
+        jax.ShapeDtypeStruct((batch, model.INPUT_DIM), jnp.float32),
+        jax.ShapeDtypeStruct((batch, model.OUTPUT_DIM), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    ]
+    return to_hlo_text(jax.jit(model.train_step_flat).lower(*args))
+
+
+def manifest() -> dict:
+    return {
+        "input_dim": model.INPUT_DIM,
+        "output_dim": model.OUTPUT_DIM,
+        "hidden": list(model.HIDDEN),
+        "layer_dims": [list(d) for d in model.LAYER_DIMS],
+        "infer_batches": list(INFER_BATCHES),
+        "train_batch": TRAIN_BATCH,
+        "params": [
+            {"shape": list(s.shape), "dtype": "f32"} for s in _param_specs()
+        ],
+        "calling_convention": {
+            "infer": "params..., x[B,input_dim] -> (y[B,output_dim],)",
+            "train_step": "params..., x, y, lr[] -> (params'..., loss[])",
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for batch in INFER_BATCHES:
+        path = os.path.join(args.out_dir, f"mlp_infer_b{batch}.hlo.txt")
+        text = lower_infer(batch)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    path = os.path.join(args.out_dir, f"mlp_train_step_b{TRAIN_BATCH}.hlo.txt")
+    text = lower_train_step(TRAIN_BATCH)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest(), f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""L1 — fused dense-layer Pallas kernel.
+
+The predictor MLP's hot op is `act(x @ W + b)`. This kernel fuses the
+matmul, bias add and activation into one pass so the activation tensor
+makes a single HBM round-trip instead of three.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the output
+into (bm × bn) blocks — each grid step's working set (an x-tile, a
+W-tile and the f32 accumulator) is sized for VMEM, and the inner k-grid
+dimension marches HBM→VMEM tiles through the MXU, accumulating in the
+output block. `interpret=True` everywhere: the CPU PJRT plugin cannot
+run Mosaic custom-calls, and correctness is what the build-time pytest
+checks; TPU perf is estimated analytically (DESIGN.md §Perf).
+
+The kernel is shape-polymorphic over (M, K, N) with padding handled by
+the wrapper, so hypothesis can sweep arbitrary shapes against ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block sizes: 8×128 is the TPU f32 tile; 128×128 feeds the MXU.
+# (bm, bk, bn) chosen so bm*bk + bk*bn + bm*bn floats ≈ 192 KiB ≪ VMEM.
+BM, BK, BN = 128, 128, 128
+
+
+def _fused_dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str, k_steps: int):
+    """One (m, n, k) grid step: o[m,n] += x[m,k] @ w[k,n]; epilogue on
+    the last k step adds bias and applies the activation."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-shaped accumulation in f32.
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...][None, :]
+        if activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        elif activation == "tanh":
+            acc = jnp.tanh(acc)
+        # "none": leave linear.
+        o_ref[...] = acc
+
+
+def _pad_to(a: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def _fused_dense_impl(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    activation: str = "relu",
+    bm: int = BM,
+    bk: int = BK,
+    bn: int = BN,
+):
+    """`act(x @ w + b)` via the Pallas kernel. x: (M, K); w: (K, N); b: (N,)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    assert b.shape == (n,)
+    # Shrink blocks for small problems, then pad up to block multiples.
+    bm_, bk_, bn_ = (min(bm, max(m, 1)), min(bk, max(k, 1)), min(bn, max(n, 1)))
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), 0, bm_), 1, bk_)
+    wp = _pad_to(_pad_to(w.astype(jnp.float32), 0, bk_), 1, bn_)
+    bp = _pad_to(b.astype(jnp.float32), 0, bn_)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_dense_kernel, activation=activation, k_steps=grid[2]
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn_,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def fused_dense(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    activation: str = "relu",
+    bm: int = BM,
+    bk: int = BK,
+    bn: int = BN,
+):
+    """Differentiable fused dense layer.
+
+    Pallas AD cannot transpose the accumulate-in-place kernel, so the
+    VJP is supplied explicitly — and the backward matmuls (`g·Wᵀ`,
+    `xᵀ·g`) run through the *same* Pallas kernel, keeping the entire
+    train-step HLO on the L1 path.
+    """
+    return _fused_dense_impl(x, w, b, activation, bm, bk, bn)
+
+
+def _fused_dense_fwd(x, w, b, activation, bm, bk, bn):
+    y = _fused_dense_impl(x, w, b, activation, bm, bk, bn)
+    return y, (x, w, y)
+
+
+def _fused_dense_bwd(activation, bm, bk, bn, res, g):
+    x, w, y = res
+    # Activation gradient from saved outputs.
+    if activation == "relu":
+        g = g * (y > 0.0)
+    elif activation == "tanh":
+        g = g * (1.0 - y * y)
+    zeros_k = jnp.zeros((x.shape[1],), jnp.float32)
+    zeros_n = jnp.zeros((w.shape[1],), jnp.float32)
+    dx = _fused_dense_impl(g, w.T, zeros_k, "none", bm, bk, bn)
+    dw = _fused_dense_impl(x.T, g, zeros_n, "none", bm, bk, bn)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+fused_dense.defvjp(_fused_dense_fwd, _fused_dense_bwd)
+
+
+def vmem_bytes(bm: int = BM, bk: int = BK, bn: int = BN) -> int:
+    """Per-grid-step VMEM working set (f32): x-tile + w-tile + out-tile +
+    bias tile. Used by the DESIGN.md §Perf roofline estimate."""
+    return 4 * (bm * bk + bk * bn + bm * bn + bn)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the L1 kernels — the correctness reference the
+build-time pytest (and hypothesis sweeps) compare against."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array, activation: str = "relu") -> jax.Array:
+    """`act(x @ w + b)` in plain jnp, f32 accumulation."""
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)[None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+def mlp_ref(params, x: jax.Array) -> jax.Array:
+    """Reference forward pass of the predictor MLP: hidden layers ReLU,
+    linear head."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        last = i == len(params) - 1
+        h = dense_ref(h, w, b, activation="none" if last else "relu")
+    return h

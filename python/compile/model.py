@@ -1,0 +1,93 @@
+"""L2 — the predictor MLP in JAX (the paper's learned-MLP comparison
+model [27][29], and this repo's densest compute path).
+
+The network maps the 270-dim DNNAbacus feature vector (14 structure-
+independent + 256 NSM features) to two log-space targets
+(ln time-seconds, ln memory-bytes). Every layer runs through the L1
+fused-dense Pallas kernel, so the whole forward/backward lowers into a
+single HLO module that the Rust runtime executes via PJRT — Python never
+sits on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.fused_dense import fused_dense
+
+# Feature layout must match rust/src/features (INDEP_DIM + NSM_DIM).
+INPUT_DIM = 14 + 256
+HIDDEN = (256, 128, 64)
+OUTPUT_DIM = 2  # (ln time, ln memory)
+
+#: Layer dims, e.g. [(270, 256), (256, 128), (128, 64), (64, 2)].
+LAYER_DIMS = list(zip((INPUT_DIM,) + HIDDEN, HIDDEN + (OUTPUT_DIM,)))
+
+
+def init_params(seed: int = 0):
+    """He-initialized [(w, b), ...]."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for din, dout in LAYER_DIMS:
+        key, wk = jax.random.split(key)
+        w = jax.random.normal(wk, (din, dout), jnp.float32) * jnp.sqrt(2.0 / din)
+        params.append((w, jnp.zeros((dout,), jnp.float32)))
+    return params
+
+
+def flatten_params(params):
+    """[(w, b), ...] -> [w0, b0, w1, b1, ...] (the AOT calling convention:
+    the Rust runtime passes each tensor as a separate PJRT argument)."""
+    flat = []
+    for w, b in params:
+        flat.extend((w, b))
+    return flat
+
+
+def unflatten_params(flat):
+    return [(flat[i], flat[i + 1]) for i in range(0, len(flat), 2)]
+
+
+def forward(params, x: jax.Array) -> jax.Array:
+    """MLP forward through the fused Pallas kernel."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        last = i == len(params) - 1
+        h = fused_dense(h, w, b, activation="none" if last else "relu")
+    return h
+
+
+def loss_fn(params, x: jax.Array, y: jax.Array) -> jax.Array:
+    """Mean squared error over both log targets."""
+    pred = forward(params, x)
+    return jnp.mean((pred - y) ** 2)
+
+
+def train_step(params, x, y, lr):
+    """One SGD step; returns (new_params, loss). Differentiates *through*
+    the Pallas kernel (interpret mode supports AD)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    new_params = [
+        (w - lr * gw, b - lr * gb) for (w, b), (gw, gb) in zip(params, grads)
+    ]
+    return new_params, loss
+
+
+# ---- AOT entrypoints (flat calling convention) --------------------------
+
+
+def infer_flat(*args):
+    """args = [w0, b0, ..., wn, bn, x] -> (y,)."""
+    params = unflatten_params(list(args[:-1]))
+    return (forward(params, args[-1]),)
+
+
+def train_step_flat(*args):
+    """args = [w0, b0, ..., wn, bn, x, y, lr] -> (w0', b0', ..., loss)."""
+    params = unflatten_params(list(args[:-3]))
+    x, y, lr = args[-3], args[-2], args[-1]
+    new_params, loss = train_step(params, x, y, lr)
+    out = flatten_params(new_params)
+    out.append(loss)
+    return tuple(out)

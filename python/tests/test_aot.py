@@ -1,0 +1,40 @@
+"""AOT path: lowering emits parseable HLO text with the expected
+parameter counts, and the manifest matches the model."""
+
+import json
+
+from compile import aot, model
+
+
+def entry_arg_count(text: str) -> int:
+    """Number of entry-computation arguments, from the layout header."""
+    header = text.splitlines()[0]
+    args = header.split("entry_computation_layout={(")[1].split(")->")[0]
+    return args.count("f32[")
+
+
+def test_infer_hlo_text_wellformed():
+    text = aot.lower_infer(batch=1)
+    assert "ENTRY" in text and "HloModule" in text
+    # 4 layers × (w, b) + x = 9 entry parameters.
+    assert entry_arg_count(text) == len(model.LAYER_DIMS) * 2 + 1
+
+
+def test_train_step_hlo_text_wellformed():
+    text = aot.lower_train_step(batch=8)
+    assert "ENTRY" in text
+    # params + x + y + lr
+    assert entry_arg_count(text) == len(model.LAYER_DIMS) * 2 + 3
+
+
+def test_manifest_consistency():
+    m = aot.manifest()
+    assert m["input_dim"] == model.INPUT_DIM
+    assert m["layer_dims"][0][0] == model.INPUT_DIM
+    assert len(m["params"]) == len(model.LAYER_DIMS) * 2
+    json.dumps(m)  # serializable
+
+
+def test_infer_batch_shape_encoded():
+    text = aot.lower_infer(batch=32)
+    assert f"f32[32,{model.INPUT_DIM}]" in text

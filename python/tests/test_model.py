@@ -1,0 +1,66 @@
+"""L2 correctness: MLP forward vs the pure-jnp reference, training-step
+behaviour, and the flat AOT calling convention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels.ref import mlp_ref
+
+
+def test_forward_matches_ref():
+    params = model.init_params(0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, model.INPUT_DIM), jnp.float32)
+    np.testing.assert_allclose(
+        model.forward(params, x), mlp_ref(params, x), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_output_shape():
+    params = model.init_params(0)
+    x = jnp.zeros((5, model.INPUT_DIM), jnp.float32)
+    assert model.forward(params, x).shape == (5, model.OUTPUT_DIM)
+
+
+def test_flatten_roundtrip():
+    params = model.init_params(2)
+    back = model.unflatten_params(model.flatten_params(params))
+    for (w, b), (w2, b2) in zip(params, back):
+        assert w is w2 and b is b2
+
+
+def test_train_step_reduces_loss():
+    params = model.init_params(3)
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (64, model.INPUT_DIM), jnp.float32)
+    # Learnable synthetic targets.
+    y = jnp.stack([x[:, 0] * 0.5 + 1.0, x[:, 1] - 0.25], axis=1)
+    losses = []
+    lr = jnp.float32(1e-3)
+    for _ in range(25):
+        params, loss = model.train_step(params, x, y, lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[::6]
+
+
+def test_flat_entrypoints_agree_with_structured():
+    params = model.init_params(5)
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, model.INPUT_DIM), jnp.float32)
+    flat = model.flatten_params(params)
+    (y_flat,) = model.infer_flat(*flat, x)
+    np.testing.assert_allclose(y_flat, model.forward(params, x), rtol=1e-6)
+
+    y = jnp.zeros((4, model.OUTPUT_DIM), jnp.float32)
+    out = model.train_step_flat(*flat, x, y, jnp.float32(0.01))
+    assert len(out) == len(flat) + 1
+    new_params, loss = model.train_step(params, x, y, jnp.float32(0.01))
+    np.testing.assert_allclose(out[0], new_params[0][0], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(out[-1]), float(loss), rtol=1e-5)
+
+
+def test_layer_dims_match_feature_layout():
+    # Rust features: 14 indep + 16×16 NSM = 270.
+    assert model.INPUT_DIM == 270
+    assert model.LAYER_DIMS[0][0] == 270
+    assert model.LAYER_DIMS[-1][1] == 2

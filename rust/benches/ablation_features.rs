@@ -1,0 +1,11 @@
+//! `cargo bench --bench ablation_features` — the design-choice ablation
+//! DESIGN.md calls out: does the NSM (structure-dependent) block earn
+//! its 256 features over the 9(+5 platform) structure-independent ones?
+use dnnabacus::experiments::{self, Ctx};
+
+fn main() {
+    let ctx = Ctx::default();
+    for t in experiments::run("ablation", &ctx).expect("experiment runs") {
+        println!("{}", t.render());
+    }
+}

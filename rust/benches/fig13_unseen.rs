@@ -1,0 +1,37 @@
+//! `cargo bench --bench fig13_unseen` — regenerates Figure 13 (zero-shot
+//! MRE on unseen networks: NSM vs graph embedding) and times the two
+//! featurization paths, whose gap is the NSM's selling point (§3.2.2:
+//! "NSM can be built in one-time scanning of the input graph").
+
+use dnnabacus::bench_harness;
+use dnnabacus::experiments::{self, Ctx};
+use dnnabacus::features::{embed::GraphEmbedder, nsm_features};
+use dnnabacus::zoo;
+
+fn main() {
+    // Featurization micro-benches first (cheap), figure second.
+    let g = zoo::build("resnet101", 3, 100).unwrap();
+    let r_nsm = bench_harness::bench("NSM featurization (resnet101)", 1.0, || {
+        std::hint::black_box(nsm_features(&g));
+    });
+    println!("{}", r_nsm.report());
+    let graphs = vec![
+        zoo::build("vgg16", 3, 100).unwrap(),
+        zoo::build("resnet18", 3, 100).unwrap(),
+    ];
+    let refs: Vec<&dnnabacus::graph::Graph> = graphs.iter().collect();
+    let embedder = GraphEmbedder::fit(&refs, 1);
+    let r_ge = bench_harness::bench("graph2vec embed (resnet101)", 2.0, || {
+        std::hint::black_box(embedder.embed(&g));
+    });
+    println!("{}", r_ge.report());
+    println!(
+        "NSM is {:.0}× faster than graph-embedding inference\n",
+        r_ge.mean_s / r_nsm.mean_s
+    );
+
+    let ctx = Ctx::default();
+    for t in experiments::run("fig13", &ctx).expect("experiment runs") {
+        println!("{}", t.render());
+    }
+}

@@ -1,0 +1,15 @@
+//! `cargo bench --bench fig1_batch_sweep` — regenerates Figure 1 (batch sweep) and times the run.
+use dnnabacus::bench_harness;
+use dnnabacus::experiments::{self, Ctx};
+
+fn main() {
+    let ctx = Ctx::default();
+    let mut tables = Vec::new();
+    let r = bench_harness::bench("Figure 1 (batch sweep) regeneration", 3.0, || {
+        tables = experiments::run("fig1", &ctx).expect("experiment runs");
+    });
+    for t in &tables {
+        println!("{}", t.render());
+    }
+    println!("{}", r.report());
+}

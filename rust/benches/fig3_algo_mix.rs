@@ -1,0 +1,15 @@
+//! `cargo bench --bench fig3_algo_mix` — regenerates Figure 3 (conv algorithm mix) and times the run.
+use dnnabacus::bench_harness;
+use dnnabacus::experiments::{self, Ctx};
+
+fn main() {
+    let ctx = Ctx::default();
+    let mut tables = Vec::new();
+    let r = bench_harness::bench("Figure 3 (conv algorithm mix) regeneration", 3.0, || {
+        tables = experiments::run("fig3", &ctx).expect("experiment runs");
+    });
+    for t in &tables {
+        println!("{}", t.render());
+    }
+    println!("{}", r.report());
+}

@@ -1,0 +1,15 @@
+//! `cargo bench --bench fig4_op_memory` — regenerates Figure 4 (per-op workspace) and times the run.
+use dnnabacus::bench_harness;
+use dnnabacus::experiments::{self, Ctx};
+
+fn main() {
+    let ctx = Ctx::default();
+    let mut tables = Vec::new();
+    let r = bench_harness::bench("Figure 4 (per-op workspace) regeneration", 3.0, || {
+        tables = experiments::run("fig4", &ctx).expect("experiment runs");
+    });
+    for t in &tables {
+        println!("{}", t.render());
+    }
+    println!("{}", r.report());
+}

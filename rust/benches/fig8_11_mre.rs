@@ -1,0 +1,35 @@
+//! `cargo bench --bench fig8_11_mre` — regenerates Figures 8–11 (MRE of
+//! memory/time prediction per framework vs the shape-inference and MLP
+//! baselines) and reports train/predict timings.
+
+use dnnabacus::bench_harness;
+use dnnabacus::experiments::{self, Ctx};
+use dnnabacus::predictor::{AutoMl, Target};
+
+fn main() {
+    let ctx = Ctx::default();
+    for fig in ["fig8", "fig9", "fig10", "fig11"] {
+        for t in experiments::run(fig, &ctx).expect("experiment runs") {
+            println!("{}", t.render());
+        }
+    }
+    // Timings for the underlying AutoML train + predict path.
+    let corpus = ctx.training_corpus();
+    let (train, test) = corpus.split(0.7, ctx.seed);
+    let r = bench_harness::bench("automl train (memory target)", 5.0, || {
+        let _ = AutoMl::train_opt(&train, Target::Memory, 1, true);
+    });
+    println!("{}", r.report());
+    let model = AutoMl::train_opt(&train, Target::Memory, 1, true);
+    let feats: Vec<Vec<f64>> = test.points.iter().map(|p| p.features.clone()).collect();
+    let rp = bench_harness::bench("automl predict (full test split)", 2.0, || {
+        for f in &feats {
+            std::hint::black_box(model.predict(f));
+        }
+    });
+    println!(
+        "{}  [{:.0} predictions/s]",
+        rp.report(),
+        rp.throughput(feats.len() as f64)
+    );
+}

@@ -1,0 +1,81 @@
+//! `cargo bench --bench perf_hotpaths` — the §Perf L3 profile: timings
+//! for every stage of the online path (simulate, featurize, train,
+//! predict, serve) recorded before/after optimization in EXPERIMENTS.md.
+
+use dnnabacus::bench_harness::{self, BenchResult};
+use dnnabacus::coordinator::{
+    service::AutoMlBackend, PredictRequest, PredictionService, ServiceConfig,
+};
+use dnnabacus::experiments::Ctx;
+use dnnabacus::features::{feature_vector, StructureRep};
+use dnnabacus::predictor::{AutoMl, Target};
+use dnnabacus::sim::{simulate_training, DatasetKind, TrainConfig};
+use dnnabacus::zoo;
+use std::sync::Arc;
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // 1. Simulator throughput (the dataset-collection bottleneck).
+    for name in ["vgg11", "resnet152", "densenet121", "mobilenet-v2"] {
+        let g = zoo::build(name, 3, 100).unwrap();
+        let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, 128);
+        results.push(bench_harness::run(
+            &format!("simulate_training({name}, b=128)"),
+            1.5,
+            || {
+                std::hint::black_box(simulate_training(&g, &cfg).ok());
+            },
+        ));
+    }
+
+    // 2. Featurization.
+    let g = zoo::build("densenet169", 3, 100).unwrap();
+    let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, 64);
+    results.push(bench_harness::run("feature_vector(densenet169)", 1.0, || {
+        std::hint::black_box(feature_vector(&g, &cfg, StructureRep::Nsm));
+    }));
+
+    // 3. Predictor train + single-prediction latency.
+    let ctx = Ctx::fast();
+    let corpus = ctx.training_corpus();
+    results.push(bench_harness::run("automl train (time, fast)", 6.0, || {
+        std::hint::black_box(AutoMl::train_opt(&corpus, Target::Time, 1, true));
+    }));
+    let model = AutoMl::train_opt(&corpus, Target::Time, 1, true);
+    let f = feature_vector(&g, &cfg, StructureRep::Nsm);
+    results.push(bench_harness::run("predict one (gbdt path)", 1.0, || {
+        std::hint::black_box(model.predict(&f));
+    }));
+
+    // 4. End-to-end service throughput.
+    let backend = Arc::new(AutoMlBackend {
+        time_model: AutoMl::train_opt(&corpus, Target::Time, 2, true),
+        memory_model: AutoMl::train_opt(&corpus, Target::Memory, 2, true),
+    });
+    let names: Vec<&str> = zoo::CLASSIC_29.iter().map(|(n, _)| *n).collect();
+    let r = bench_harness::bench("service e2e (64 requests)", 5.0, || {
+        let svc = PredictionService::start(ServiceConfig::default(), backend.clone());
+        let rxs: Vec<_> = (0..64)
+            .map(|i| {
+                svc.submit(PredictRequest {
+                    id: i,
+                    model: names[i as usize % names.len()].into(),
+                    config: TrainConfig::paper_default(DatasetKind::Cifar100, 64),
+                })
+            })
+            .collect();
+        for rx in rxs {
+            let _ = rx.recv().unwrap();
+        }
+        svc.shutdown();
+    });
+    println!(
+        "{}  [{:.0} req/s]",
+        r.report(),
+        r.throughput(64.0)
+    );
+    results.push(r);
+
+    println!("\n{} hot paths measured.", results.len());
+}

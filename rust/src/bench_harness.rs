@@ -1,0 +1,98 @@
+//! Criterion-less benchmarking harness (the offline crate set has no
+//! `criterion`): warmup + timed iterations with mean/σ/percentiles,
+//! plus throughput reporting. Used by every target in `benches/`.
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<42} {:>10} it  mean {:>11}  p50 {:>11}  p99 {:>11}  min {:>11}",
+            self.name,
+            self.iters,
+            crate::util::table::fmt_secs(self.mean_s),
+            crate::util::table::fmt_secs(self.p50_s),
+            crate::util::table::fmt_secs(self.p99_s),
+            crate::util::table::fmt_secs(self.min_s),
+        )
+    }
+
+    /// Items/second at a given batch-per-iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_s
+    }
+}
+
+/// Time `f` with automatic iteration-count targeting ~`budget_s` of
+/// total run time (min 5 iterations), after one warmup call.
+pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / once) as usize).clamp(5, 10_000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: stats::mean(&samples),
+        stddev_s: stats::stddev(&samples),
+        p50_s: stats::quantile(&samples, 0.5),
+        p99_s: stats::quantile(&samples, 0.99),
+        min_s: stats::min(&samples),
+    }
+}
+
+/// Convenience: run + print.
+pub fn run<F: FnMut()>(name: &str, budget_s: f64, f: F) -> BenchResult {
+    let r = bench(name, budget_s, f);
+    println!("{}", r.report());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("noop-ish", 0.02, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_s >= 0.0 && r.min_s <= r.mean_s);
+        assert!(r.p50_s <= r.p99_s + 1e-12);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 10,
+            mean_s: 0.5,
+            stddev_s: 0.0,
+            p50_s: 0.5,
+            p99_s: 0.5,
+            min_s: 0.5,
+        };
+        assert_eq!(r.throughput(100.0), 200.0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Dynamic batching: accumulate requests until either the target batch
+//! size is reached or the oldest request has waited `max_wait` —
+//! whichever comes first — then hand the batch to a worker. The classic
+//! serving trade-off (throughput vs tail latency), sized to the AOT
+//! MLP's compiled batch variants.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A queue item carries its enqueue time for latency accounting.
+pub struct Enqueued<T> {
+    pub item: T,
+    pub enqueued_at: Instant,
+}
+
+/// Thread-safe dynamic batching queue.
+pub struct Batcher<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+struct Inner<T> {
+    queue: VecDeque<Enqueued<T>>,
+    closed: bool,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        Batcher {
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            max_batch: max_batch.max(1),
+            max_wait,
+        }
+    }
+
+    /// Enqueue one item (never blocks).
+    pub fn push(&self, item: T) {
+        let mut inner = self.inner.lock().unwrap();
+        assert!(!inner.closed, "push after close");
+        inner.queue.push_back(Enqueued {
+            item,
+            enqueued_at: Instant::now(),
+        });
+        self.cv.notify_one();
+    }
+
+    /// Block until a batch is ready (full, or deadline hit with ≥1 item,
+    /// or queue closed). Returns `None` when closed and drained.
+    pub fn next_batch(&self) -> Option<Vec<Enqueued<T>>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.queue.len() >= self.max_batch {
+                return Some(drain(&mut inner.queue, self.max_batch));
+            }
+            if let Some(front) = inner.queue.front() {
+                let waited = front.enqueued_at.elapsed();
+                if waited >= self.max_wait {
+                    let n = inner.queue.len().min(self.max_batch);
+                    return Some(drain(&mut inner.queue, n));
+                }
+                // Sleep at most until the deadline.
+                let timeout = self.max_wait - waited;
+                let (guard, _) = self.cv.wait_timeout(inner, timeout).unwrap();
+                inner = guard;
+            } else if inner.closed {
+                return None;
+            } else {
+                inner = self.cv.wait(inner).unwrap();
+            }
+        }
+    }
+
+    /// Close the queue; `next_batch` drains the remainder then yields None.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn drain<T>(q: &mut VecDeque<Enqueued<T>>, n: usize) -> Vec<Enqueued<T>> {
+    q.drain(..n).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn full_batch_released_immediately() {
+        let b = Batcher::new(4, Duration::from_secs(60));
+        for i in 0..4 {
+            b.push(i);
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+    }
+
+    #[test]
+    fn deadline_releases_partial_batch() {
+        let b = Arc::new(Batcher::new(100, Duration::from_millis(30)));
+        b.push(1);
+        let start = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(start.elapsed() >= Duration::from_millis(25));
+        assert!(start.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = Batcher::new(10, Duration::from_millis(5));
+        b.push(1);
+        b.push(2);
+        b.close();
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn no_request_lost_or_duplicated_under_concurrency() {
+        let b = Arc::new(Batcher::new(8, Duration::from_millis(10)));
+        let n_producers = 4;
+        let per_producer = 200usize;
+        let mut handles = Vec::new();
+        for p in 0..n_producers {
+            let b = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_producer {
+                    b.push(p * per_producer + i);
+                }
+            }));
+        }
+        let consumer = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                while let Some(batch) = b.next_batch() {
+                    seen.extend(batch.into_iter().map(|e| e.item));
+                }
+                seen
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        b.close();
+        let mut seen = consumer.join().unwrap();
+        seen.sort_unstable();
+        let expect: Vec<usize> = (0..n_producers * per_producer).collect();
+        assert_eq!(seen, expect);
+    }
+}

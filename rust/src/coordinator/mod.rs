@@ -1,0 +1,21 @@
+//! The online prediction service — the L3 coordination layer.
+//!
+//! The paper's deployment story (§3.1, Figure 5) is an *online
+//! prediction stage* sitting in front of a datacenter scheduler: jobs
+//! arrive, the service featurizes their (model, config), runs the
+//! trained predictor, and hands (time, memory) estimates to placement.
+//! This module is that stage as a real service:
+//!
+//! * [`request`] — request/response types and the featurization step;
+//! * [`batcher`] — dynamic batching queue (size- and deadline-bound),
+//!   sized to the AOT-compiled MLP batch variants;
+//! * [`service`] — worker threads, backend dispatch (shallow AutoML
+//!   model or the PJRT MLP artifact), metrics (throughput, latency
+//!   percentiles).
+
+pub mod request;
+pub mod batcher;
+pub mod service;
+
+pub use request::{PredictRequest, Prediction};
+pub use service::{CostModel, PredictionService, ServiceConfig, ServiceMetrics};

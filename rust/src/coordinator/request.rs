@@ -1,0 +1,69 @@
+//! Prediction requests and responses.
+
+use crate::features::{feature_vector, StructureRep};
+use crate::sim::TrainConfig;
+use crate::zoo;
+
+/// A request: predict the training cost of (model, config).
+#[derive(Debug, Clone)]
+pub struct PredictRequest {
+    pub id: u64,
+    /// Zoo model name (classic or unseen).
+    pub model: String,
+    pub config: TrainConfig,
+}
+
+impl PredictRequest {
+    /// Featurize: build the graph for the config's dataset and extract
+    /// the NSM feature vector. This is the request-path CPU work the
+    /// batcher amortizes.
+    pub fn featurize(&self) -> anyhow::Result<Vec<f64>> {
+        let g = zoo::build(
+            &self.model,
+            self.config.dataset.in_channels(),
+            self.config.dataset.classes(),
+        )?;
+        Ok(feature_vector(&g, &self.config, StructureRep::Nsm))
+    }
+}
+
+/// The service's answer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    pub id: u64,
+    /// Predicted total training time (seconds).
+    pub time_s: f64,
+    /// Predicted peak memory (bytes).
+    pub memory_bytes: f64,
+    /// Would this job OOM on its configured device?
+    pub fits_device: bool,
+    /// End-to-end service latency for this request (seconds).
+    pub latency_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::DatasetKind;
+
+    #[test]
+    fn featurize_known_model() {
+        let req = PredictRequest {
+            id: 1,
+            model: "resnet18".into(),
+            config: TrainConfig::paper_default(DatasetKind::Cifar100, 64),
+        };
+        let f = req.featurize().unwrap();
+        assert_eq!(f.len(), crate::features::feature_dim(StructureRep::Nsm));
+    }
+
+    #[test]
+    fn featurize_unknown_model_errors() {
+        let req = PredictRequest {
+            id: 2,
+            model: "gpt-17".into(),
+            config: TrainConfig::paper_default(DatasetKind::Mnist, 32),
+        };
+        assert!(req.featurize().is_err());
+    }
+}

@@ -1,0 +1,368 @@
+//! The prediction service: worker threads pull dynamic batches from the
+//! [`Batcher`], featurize, run the cost model, and answer over per-request
+//! channels. Backends: the AutoML shallow model (pure Rust) or the
+//! AOT-compiled MLP through PJRT — either way, no Python on this path.
+
+use super::batcher::Batcher;
+use super::request::{PredictRequest, Prediction};
+use crate::predictor::{AutoMl, Target};
+use crate::runtime::MlpPredictor;
+use crate::util::stats;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A cost model: features → (time seconds, memory bytes).
+pub trait CostModel: Send + Sync {
+    fn predict_costs(&self, features: &[Vec<f64>]) -> anyhow::Result<Vec<(f64, f64)>>;
+    fn name(&self) -> &'static str;
+}
+
+/// Shallow AutoML backend (one model per target, as the paper trains).
+pub struct AutoMlBackend {
+    pub time_model: AutoMl,
+    pub memory_model: AutoMl,
+}
+
+impl CostModel for AutoMlBackend {
+    fn predict_costs(&self, features: &[Vec<f64>]) -> anyhow::Result<Vec<(f64, f64)>> {
+        assert_eq!(self.time_model.target, Target::Time);
+        assert_eq!(self.memory_model.target, Target::Memory);
+        Ok(features
+            .iter()
+            .map(|f| (self.time_model.predict(f), self.memory_model.predict(f)))
+            .collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "automl"
+    }
+}
+
+/// AOT MLP backend via PJRT. The `xla` crate's client is not `Send`
+/// (`Rc` internals), so the predictor lives on a dedicated inference
+/// thread and this handle forwards batches over a channel — an actor,
+/// exactly how a GPU worker would be isolated in a real serving stack.
+pub struct MlpBackend {
+    tx: Mutex<Sender<MlpJob>>,
+    _worker: std::thread::JoinHandle<()>,
+}
+
+type MlpJob = (Vec<Vec<f64>>, Sender<anyhow::Result<Vec<(f64, f64)>>>);
+
+impl MlpBackend {
+    /// Spawn the inference thread (loads artifacts there).
+    pub fn spawn(seed: u64) -> anyhow::Result<MlpBackend> {
+        let (tx, rx) = channel::<MlpJob>();
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        let worker = std::thread::Builder::new()
+            .name("mlp-pjrt".into())
+            .spawn(move || {
+                let mlp = match MlpPredictor::new(seed) {
+                    Ok(m) => {
+                        let _ = ready_tx.send(Ok(()));
+                        m
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok((features, out)) = rx.recv() {
+                    let result = mlp.predict_batch(&features).map(|rows| {
+                        rows.iter()
+                            .map(|r| (r[0].exp(), r[1].exp()))
+                            .collect::<Vec<_>>()
+                    });
+                    let _ = out.send(result);
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("mlp worker died"))??;
+        Ok(MlpBackend {
+            tx: Mutex::new(tx),
+            _worker: worker,
+        })
+    }
+}
+
+impl CostModel for MlpBackend {
+    fn predict_costs(&self, features: &[Vec<f64>]) -> anyhow::Result<Vec<(f64, f64)>> {
+        let (out_tx, out_rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send((features.to_vec(), out_tx))
+            .map_err(|_| anyhow::anyhow!("mlp worker gone"))?;
+        out_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("mlp worker gone"))?
+    }
+
+    fn name(&self) -> &'static str {
+        "mlp-pjrt"
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub workers: usize,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            max_batch: 32, // matches an AOT-compiled MLP batch variant
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Rolled-up service metrics.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceMetrics {
+    pub served: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub mean_batch_size: f64,
+}
+
+struct MetricsInner {
+    latencies: Vec<f64>,
+    batch_sizes: Vec<usize>,
+}
+
+type Job = (PredictRequest, Sender<anyhow::Result<Prediction>>);
+
+/// Handle to a running service.
+pub struct PredictionService {
+    queue: Arc<Batcher<Job>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    served: Arc<AtomicU64>,
+    errors: Arc<AtomicU64>,
+    metrics: Arc<Mutex<MetricsInner>>,
+}
+
+impl PredictionService {
+    /// Spawn workers over a shared dynamic-batching queue.
+    pub fn start(cfg: ServiceConfig, model: Arc<dyn CostModel>) -> PredictionService {
+        let queue = Arc::new(Batcher::new(cfg.max_batch, cfg.max_wait));
+        let served = Arc::new(AtomicU64::new(0));
+        let errors = Arc::new(AtomicU64::new(0));
+        let metrics = Arc::new(Mutex::new(MetricsInner {
+            latencies: Vec::new(),
+            batch_sizes: Vec::new(),
+        }));
+        let workers = (0..cfg.workers.max(1))
+            .map(|wid| {
+                let queue = Arc::clone(&queue);
+                let model = Arc::clone(&model);
+                let served = Arc::clone(&served);
+                let errors = Arc::clone(&errors);
+                let metrics = Arc::clone(&metrics);
+                std::thread::Builder::new()
+                    .name(format!("predict-worker-{wid}"))
+                    .spawn(move || {
+                        while let Some(batch) = queue.next_batch() {
+                            let size = batch.len();
+                            // Featurize the whole batch (drop failures).
+                            let mut feats = Vec::with_capacity(size);
+                            let mut ok_jobs = Vec::with_capacity(size);
+                            for e in batch {
+                                let (req, tx): Job = e.item;
+                                match req.featurize() {
+                                    Ok(f) => {
+                                        feats.push(f);
+                                        ok_jobs.push((req, tx, e.enqueued_at));
+                                    }
+                                    Err(err) => {
+                                        errors.fetch_add(1, Ordering::SeqCst);
+                                        let _ = tx.send(Err(err));
+                                    }
+                                }
+                            }
+                            if feats.is_empty() {
+                                continue;
+                            }
+                            match model.predict_costs(&feats) {
+                                Ok(costs) => {
+                                    for ((req, tx, t0), (time_s, mem)) in
+                                        ok_jobs.into_iter().zip(costs)
+                                    {
+                                        let latency = t0.elapsed().as_secs_f64();
+                                        let vram = (req.config.device.vram
+                                            - req.config.device.context_bytes)
+                                            as f64;
+                                        let pred = Prediction {
+                                            id: req.id,
+                                            time_s,
+                                            memory_bytes: mem,
+                                            fits_device: mem
+                                                <= vram + req.config.device.context_bytes as f64,
+                                            latency_s: latency,
+                                        };
+                                        served.fetch_add(1, Ordering::SeqCst);
+                                        metrics.lock().unwrap().latencies.push(latency);
+                                        let _ = tx.send(Ok(pred));
+                                    }
+                                }
+                                Err(err) => {
+                                    for (_, tx, _) in ok_jobs {
+                                        errors.fetch_add(1, Ordering::SeqCst);
+                                        let _ =
+                                            tx.send(Err(anyhow::anyhow!("backend: {err}")));
+                                    }
+                                }
+                            }
+                            metrics.lock().unwrap().batch_sizes.push(size);
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        PredictionService {
+            queue,
+            workers,
+            served,
+            errors,
+            metrics,
+        }
+    }
+
+    /// Submit a request; the receiver yields the prediction.
+    pub fn submit(&self, req: PredictRequest) -> Receiver<anyhow::Result<Prediction>> {
+        let (tx, rx) = channel();
+        self.queue.push((req, tx));
+        rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn predict(&self, req: PredictRequest) -> anyhow::Result<Prediction> {
+        self.submit(req)
+            .recv()
+            .map_err(|_| anyhow::anyhow!("service shut down"))?
+    }
+
+    pub fn metrics(&self) -> ServiceMetrics {
+        let inner = self.metrics.lock().unwrap();
+        let sizes: Vec<f64> = inner.batch_sizes.iter().map(|&s| s as f64).collect();
+        ServiceMetrics {
+            served: self.served.load(Ordering::SeqCst),
+            errors: self.errors.load(Ordering::SeqCst),
+            batches: inner.batch_sizes.len() as u64,
+            p50_latency_s: stats::quantile(&inner.latencies, 0.5),
+            p99_latency_s: stats::quantile(&inner.latencies, 0.99),
+            mean_batch_size: stats::mean(&sizes),
+        }
+    }
+
+    /// Drain and stop workers.
+    pub fn shutdown(mut self) -> ServiceMetrics {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{DatasetKind, TrainConfig};
+
+    /// A trivial backend for service-logic tests.
+    struct FakeModel;
+
+    impl CostModel for FakeModel {
+        fn predict_costs(&self, features: &[Vec<f64>]) -> anyhow::Result<Vec<(f64, f64)>> {
+            Ok(features
+                .iter()
+                .map(|f| (f[0], 1e9 + f[0] * 1e6)) // time = batch feature
+                .collect())
+        }
+
+        fn name(&self) -> &'static str {
+            "fake"
+        }
+    }
+
+    fn req(id: u64, model: &str, batch: usize) -> PredictRequest {
+        PredictRequest {
+            id,
+            model: model.into(),
+            config: TrainConfig::paper_default(DatasetKind::Cifar100, batch),
+        }
+    }
+
+    #[test]
+    fn serves_requests_and_counts() {
+        let svc = PredictionService::start(ServiceConfig::default(), Arc::new(FakeModel));
+        let rx: Vec<_> = (0..20)
+            .map(|i| svc.submit(req(i, "resnet18", 32 + i as usize)))
+            .collect();
+        for (i, r) in rx.into_iter().enumerate() {
+            let p = r.recv().unwrap().unwrap();
+            assert_eq!(p.id, i as u64);
+            assert_eq!(p.time_s, (32 + i) as f64); // batch feature echoed
+        }
+        let m = svc.shutdown();
+        assert_eq!(m.served, 20);
+        assert_eq!(m.errors, 0);
+        assert!(m.batches >= 1);
+    }
+
+    #[test]
+    fn unknown_model_reports_error_not_hang() {
+        let svc = PredictionService::start(ServiceConfig::default(), Arc::new(FakeModel));
+        let result = svc.predict(req(1, "not-a-model", 8));
+        assert!(result.is_err());
+        let m = svc.shutdown();
+        assert_eq!(m.errors, 1);
+    }
+
+    #[test]
+    fn batching_amortizes_under_load() {
+        let cfg = ServiceConfig {
+            workers: 1,
+            max_batch: 16,
+            max_wait: Duration::from_millis(20),
+        };
+        let svc = PredictionService::start(cfg, Arc::new(FakeModel));
+        let rx: Vec<_> = (0..64).map(|i| svc.submit(req(i, "lenet5", 16))).collect();
+        for r in rx {
+            r.recv().unwrap().unwrap();
+        }
+        let m = svc.shutdown();
+        assert_eq!(m.served, 64);
+        assert!(
+            m.mean_batch_size > 2.0,
+            "expected batching, mean {}",
+            m.mean_batch_size
+        );
+    }
+
+    #[test]
+    fn oom_flag_set_for_huge_predictions() {
+        struct HugeModel;
+        impl CostModel for HugeModel {
+            fn predict_costs(&self, f: &[Vec<f64>]) -> anyhow::Result<Vec<(f64, f64)>> {
+                Ok(f.iter().map(|_| (1.0, 1e18)).collect())
+            }
+            fn name(&self) -> &'static str {
+                "huge"
+            }
+        }
+        let svc = PredictionService::start(ServiceConfig::default(), Arc::new(HugeModel));
+        let p = svc.predict(req(1, "lenet5", 8)).unwrap();
+        assert!(!p.fits_device);
+        svc.shutdown();
+    }
+}

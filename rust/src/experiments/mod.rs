@@ -1,0 +1,152 @@
+//! Regeneration harnesses for every table and figure in the paper's
+//! evaluation (see DESIGN.md §5 for the experiment index). Each
+//! experiment returns plain-text [`Table`]s so the CLI, the benches and
+//! EXPERIMENTS.md all share one source of truth.
+//!
+//! * [`phenomena`] — §2 profiling study: Table 1, Figures 1–4.
+//! * [`prediction`] — §4.1: Figures 8–11 (per-model MRE vs baselines),
+//!   Figure 12 (batch-size generalization), and the headline MRE.
+//! * [`unseen`] — §4.2: Figure 13 zero-shot (NSM vs graph embedding).
+//! * [`scheduling`] — §4.3: Figure 14 (optimal / random / GA).
+
+pub mod phenomena;
+pub mod prediction;
+pub mod unseen;
+pub mod scheduling;
+
+use crate::predictor::Dataset;
+use crate::profiler::{self, SweepCfg};
+use crate::util::table::Table;
+use std::path::PathBuf;
+
+/// Shared experiment context: sweep scale and dataset caching (the
+/// classic sweep is reused by several figures; collecting it once and
+/// caching to disk keeps `dnnabacus fig8 … fig13` fast).
+#[derive(Debug, Clone)]
+pub struct Ctx {
+    /// Sweep density (1.0 = the paper's full dataset sizes).
+    pub scale: f64,
+    pub seed: u64,
+    /// Cache directory for collected datasets (None disables caching).
+    pub cache_dir: Option<PathBuf>,
+}
+
+impl Default for Ctx {
+    fn default() -> Self {
+        Ctx {
+            scale: 0.25,
+            seed: 0xDA7A,
+            cache_dir: Some(PathBuf::from("target/dnnabacus-cache")),
+        }
+    }
+}
+
+impl Ctx {
+    pub fn fast() -> Ctx {
+        Ctx {
+            scale: 0.12,
+            ..Default::default()
+        }
+    }
+
+    fn sweep_cfg(&self) -> SweepCfg {
+        SweepCfg {
+            scale: self.scale,
+            seed: self.seed,
+            ..Default::default()
+        }
+    }
+
+    fn cached(&self, name: &str, build: impl FnOnce() -> Dataset) -> Dataset {
+        let Some(dir) = &self.cache_dir else {
+            return build();
+        };
+        let path = dir.join(format!("{name}-s{:.2}-{}.json", self.scale, self.seed));
+        if let Ok(d) = Dataset::load(&path) {
+            return d;
+        }
+        let d = build();
+        let _ = std::fs::create_dir_all(dir);
+        let _ = d.save(&path);
+        d
+    }
+
+    /// The classic-29 sweep (cached).
+    pub fn classic_dataset(&self) -> Dataset {
+        let cfg = self.sweep_cfg();
+        self.cached("classic", || profiler::collect_classic(&cfg))
+    }
+
+    /// The random-network sweep (cached). Paper size: 5,500.
+    pub fn random_dataset(&self) -> Dataset {
+        let cfg = self.sweep_cfg();
+        let count = ((5500.0 * self.scale) as usize).max(50);
+        self.cached("random", || profiler::collect_random(&cfg, count))
+    }
+
+    /// Classic + random combined — the paper's full training corpus.
+    pub fn training_corpus(&self) -> Dataset {
+        let mut d = self.classic_dataset();
+        d.points.extend(self.random_dataset().points);
+        d
+    }
+
+    /// The unseen-model sweep (cached).
+    pub fn unseen_dataset(&self) -> Dataset {
+        let cfg = self.sweep_cfg();
+        self.cached("unseen", || profiler::collect_unseen(&cfg))
+    }
+}
+
+/// All experiment names, in paper order.
+pub const ALL_EXPERIMENTS: [&str; 11] = [
+    "table1", "fig1", "fig2", "fig3", "fig4", "fig8", "fig9", "fig10", "fig11", "fig12",
+    "fig14",
+];
+
+/// Run an experiment by name (fig13 takes long; run explicitly).
+pub fn run(name: &str, ctx: &Ctx) -> anyhow::Result<Vec<Table>> {
+    Ok(match name {
+        "table1" => vec![phenomena::table1()],
+        "fig1" => phenomena::fig1(ctx),
+        "fig2" => phenomena::fig2(ctx),
+        "fig3" => phenomena::fig3(),
+        "fig4" => phenomena::fig4(),
+        "fig8" => vec![prediction::fig8_11(ctx, crate::predictor::Target::Memory, "pytorch")],
+        "fig9" => vec![prediction::fig8_11(ctx, crate::predictor::Target::Memory, "tensorflow")],
+        "fig10" => vec![prediction::fig8_11(ctx, crate::predictor::Target::Time, "pytorch")],
+        "fig11" => vec![prediction::fig8_11(ctx, crate::predictor::Target::Time, "tensorflow")],
+        "fig12" => vec![prediction::fig12(ctx)],
+        "fig13" => unseen::fig13(ctx),
+        "fig14" => scheduling::fig14(ctx),
+        "headline" => vec![prediction::headline(ctx)],
+        "ablation" => vec![prediction::ablation(ctx)],
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx_cache_roundtrip() {
+        let dir = std::env::temp_dir().join("dnnabacus-test-cache");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = Ctx {
+            scale: 0.05,
+            seed: 1,
+            cache_dir: Some(dir.clone()),
+        };
+        let a = ctx.classic_dataset();
+        let b = ctx.classic_dataset(); // hits cache
+        assert_eq!(a.len(), b.len());
+        assert!(dir.read_dir().unwrap().count() >= 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(run("fig99", &Ctx::fast()).is_err());
+    }
+}

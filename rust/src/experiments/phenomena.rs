@@ -1,0 +1,250 @@
+//! §2 profiling study: Table 1 and Figures 1–4 — the observations that
+//! motivate a black-box predictor.
+
+use super::Ctx;
+use crate::sim::{
+    simulate_training, ConvAlgo, DatasetKind, DeviceProfile, TrainConfig,
+};
+use crate::util::table::{fmt_bytes, Table};
+use crate::zoo;
+
+/// Table 1: the two systems.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table 1 — System setup (simulated device profiles)",
+        &["Specification", "System 1", "System 2"],
+    );
+    let (a, b) = (DeviceProfile::rtx2080(), DeviceProfile::rtx3090());
+    t.row(vec!["GPU Device".into(), a.name.into(), b.name.into()]);
+    t.row(vec!["GPU Model".into(), a.arch.into(), b.arch.into()]);
+    t.row(vec![
+        "GPU Memory".into(),
+        fmt_bytes(a.vram),
+        fmt_bytes(b.vram),
+    ]);
+    t.row(vec![
+        "Peak FP32".into(),
+        format!("{:.1} TFLOPS", a.peak_flops / 1e12),
+        format!("{:.1} TFLOPS", b.peak_flops / 1e12),
+    ]);
+    t.row(vec![
+        "Mem bandwidth".into(),
+        format!("{:.0} GB/s", a.mem_bw / 1e9),
+        format!("{:.0} GB/s", b.mem_bw / 1e9),
+    ]);
+    t.row(vec![
+        "SM count".into(),
+        a.sm_count.to_string(),
+        b.sm_count.to_string(),
+    ]);
+    t
+}
+
+/// Nets plotted in Figure 1 (light 1×1 nets vs heavier nets).
+const FIG1_NETS: [&str; 8] = [
+    "squeezenet",
+    "mobilenet-v1",
+    "shufflenet-v1",
+    "mobilenet-v2",
+    "vgg11",
+    "vgg13",
+    "googlenet",
+    "resnet18",
+];
+
+/// Figure 1: batch size vs total run time (a) and max memory (b), on
+/// MNIST and CIFAR-100 (lr 0.1, data size 0.1, epoch 1).
+pub fn fig1(ctx: &Ctx) -> Vec<Table> {
+    let batches: Vec<usize> = vec![16, 32, 64, 96, 128, 160, 192, 256, 320, 384, 448, 512];
+    let mut out = Vec::new();
+    for dataset in [DatasetKind::Mnist, DatasetKind::Cifar100] {
+        let mut time_t = Table::new(
+            &format!("Figure 1(a) — batch size vs total run time [{}]", dataset.name()),
+            &std::iter::once("net")
+                .chain(batches.iter().map(|b| Box::leak(format!("b{b}").into_boxed_str()) as &str))
+                .collect::<Vec<_>>(),
+        );
+        let mut mem_t = Table::new(
+            &format!("Figure 1(b) — batch size vs max memory [{}]", dataset.name()),
+            &std::iter::once("net")
+                .chain(batches.iter().map(|b| Box::leak(format!("b{b}").into_boxed_str()) as &str))
+                .collect::<Vec<_>>(),
+        );
+        for name in FIG1_NETS {
+            let g = zoo::build(name, dataset.in_channels(), dataset.classes()).unwrap();
+            let mut trow = vec![name.to_string()];
+            let mut mrow = vec![name.to_string()];
+            for &b in &batches {
+                let mut cfg = TrainConfig::paper_default(dataset, b);
+                cfg.seed = ctx.seed;
+                match simulate_training(&g, &cfg) {
+                    Ok(m) => {
+                        trow.push(format!("{:.2}", m.total_time));
+                        mrow.push(format!("{:.0}", m.peak_mem >> 20));
+                    }
+                    Err(_) => {
+                        trow.push("OOM".into());
+                        mrow.push("OOM".into());
+                    }
+                }
+            }
+            time_t.row(trow);
+            mem_t.row(mrow);
+        }
+        out.push(time_t);
+        out.push(mem_t);
+    }
+    out
+}
+
+/// Figure 2: fine sweep (interval 2) of batch 100..200 — time and max
+/// memory, showing the fluctuation band for non-1×1 networks.
+pub fn fig2(ctx: &Ctx) -> Vec<Table> {
+    let nets = ["vgg11", "vgg13", "googlenet", "mobilenet-v1"];
+    let mut time_t = Table::new(
+        "Figure 2 — total run time, batch 100..200 step 2 [cifar100]",
+        &std::iter::once("batch")
+            .chain(nets.iter().copied())
+            .collect::<Vec<_>>(),
+    );
+    let mut mem_t = Table::new(
+        "Figure 2 — max memory (MiB), batch 100..200 step 2 [cifar100]",
+        &std::iter::once("batch")
+            .chain(nets.iter().copied())
+            .collect::<Vec<_>>(),
+    );
+    let graphs: Vec<_> = nets
+        .iter()
+        .map(|n| zoo::build(n, 3, 100).unwrap())
+        .collect();
+    for batch in (100..=200).step_by(2) {
+        let mut trow = vec![batch.to_string()];
+        let mut mrow = vec![batch.to_string()];
+        for g in &graphs {
+            let mut cfg = TrainConfig::paper_default(DatasetKind::Cifar100, batch);
+            cfg.seed = ctx.seed;
+            match simulate_training(g, &cfg) {
+                Ok(m) => {
+                    trow.push(format!("{:.3}", m.total_time));
+                    mrow.push(format!("{}", m.peak_mem >> 20));
+                }
+                Err(_) => {
+                    trow.push("OOM".into());
+                    mrow.push("OOM".into());
+                }
+            }
+        }
+        time_t.row(trow);
+        mem_t.row(mrow);
+    }
+    vec![time_t, mem_t]
+}
+
+/// Figure 3: normalized convolution-operator call mix vs batch size for
+/// VGG-11 (fluctuating) and MobileNet (stable).
+pub fn fig3() -> Vec<Table> {
+    let batches = [16usize, 32, 64, 100, 128, 160, 200, 256, 384, 512];
+    let mut out = Vec::new();
+    for name in ["vgg11", "mobilenet-v1"] {
+        let g = zoo::build(name, 3, 100).unwrap();
+        let mut t = Table::new(
+            &format!("Figure 3 — normalized conv-algorithm mix vs batch [{name}]"),
+            &["batch", "IMPLICIT_GEMM", "IMPLICIT_PRECOMP", "GEMM", "WINOGRAD", "FFT", "FFT_TILING"],
+        );
+        for &b in &batches {
+            let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, b);
+            let Ok(m) = simulate_training(&g, &cfg) else {
+                t.row(vec![b.to_string(), "OOM".into(), "".into(), "".into(), "".into(), "".into(), "".into()]);
+                continue;
+            };
+            let mix = m.log.normalized_mix();
+            t.row(vec![
+                b.to_string(),
+                format!("{:.2}", mix[&ConvAlgo::ImplicitGemm]),
+                format!("{:.2}", mix[&ConvAlgo::ImplicitPrecompGemm]),
+                format!("{:.2}", mix[&ConvAlgo::Gemm]),
+                format!("{:.2}", mix[&ConvAlgo::WinogradNonfused]),
+                format!("{:.2}", mix[&ConvAlgo::Fft]),
+                format!("{:.2}", mix[&ConvAlgo::FftTiling]),
+            ]);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Figure 4: per-convolution-config workspace memory by algorithm
+/// (labels `[input hw]-[in depth]-[out depth]-[kernel]`, as the paper).
+pub fn fig4() -> Vec<Table> {
+    let mut out = Vec::new();
+    for (name, batch) in [("vgg11", 160usize), ("mobilenet-v1", 160)] {
+        let g = zoo::build(name, 3, 100).unwrap();
+        let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, batch);
+        let m = simulate_training(&g, &cfg).unwrap();
+        let mut t = Table::new(
+            &format!("Figure 4 — conv workspace by config [{name}, batch {batch}]"),
+            &["config", "algo", "workspace", "phase"],
+        );
+        // The largest workspace per (config, algo) pair.
+        let grouped = m.log.workspace_by_config();
+        for (config, per_algo) in grouped {
+            for (algo, ws) in per_algo {
+                if ws > 0 {
+                    t.row(vec![
+                        config.clone(),
+                        algo.name().into(),
+                        fmt_bytes(ws),
+                        "max-over-phases".into(),
+                    ]);
+                }
+            }
+        }
+        // And the single peak call (the paper's “peak caused by FFT…”).
+        if let Some(peak) = m.log.peak_workspace_call() {
+            t.row(vec![
+                format!("PEAK {}", peak.config),
+                peak.algo.name().into(),
+                fmt_bytes(peak.workspace),
+                peak.phase.name().into(),
+            ]);
+        }
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_capacities() {
+        let t = table1();
+        let r = t.render();
+        assert!(r.contains("11.00GiB") && r.contains("24.00GiB"));
+        assert!(r.contains("Turing") && r.contains("Ampere"));
+    }
+
+    #[test]
+    fn fig3_mobilenet_no_winograd_vgg_some() {
+        let tables = fig3();
+        let vgg = tables[0].render();
+        let mob = tables[1].render();
+        // MobileNet's WINOGRAD column is all zeros.
+        for line in mob.lines().skip(3) {
+            let cols: Vec<&str> = line.split_whitespace().collect();
+            if cols.len() >= 5 && cols[0].parse::<usize>().is_ok() {
+                assert_eq!(cols[4], "0.00", "mobilenet winograd: {line}");
+            }
+        }
+        assert!(vgg.contains("0.7") || vgg.contains("0.8"), "{vgg}");
+    }
+
+    #[test]
+    fn fig4_has_fft_tiling_entries_for_vgg() {
+        let tables = fig4();
+        let vgg = tables[0].render();
+        assert!(vgg.contains("WINOGRAD") || vgg.contains("FFT"), "{vgg}");
+        assert!(vgg.contains("PEAK"));
+    }
+}

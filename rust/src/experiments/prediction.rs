@@ -1,0 +1,358 @@
+//! §4.1 prediction accuracy: Figures 8–11 (per-model MRE for memory and
+//! time, per framework, against the shape-inference and MLP baselines),
+//! Figure 12 (batch-size generalization of memory prediction), and the
+//! headline MRE numbers.
+
+use super::Ctx;
+use crate::predictor::{shape_inference, AutoMl, Dataset, Target};
+use crate::sim::{DatasetKind, DeviceProfile, Framework, Optimizer, TrainConfig};
+use crate::util::stats;
+use crate::util::table::{fmt_pct, Table};
+use crate::zoo;
+
+/// Shape-inference baseline MRE on a dataset slice (recomputes the
+/// estimate per point from the model graph + config stored in features).
+fn shape_inference_mre(points: &Dataset, target: Target) -> f64 {
+    let mut pred = Vec::new();
+    let mut truth = Vec::new();
+    for p in &points.points {
+        // Rebuild the config from the data point's metadata: features[0]
+        // is the batch; dataset inferred from channel feature.
+        let dataset = if p.features[2] as usize == 1 {
+            DatasetKind::Mnist
+        } else {
+            DatasetKind::Cifar100
+        };
+        let Ok(g) = zoo::build(&p.model, dataset.in_channels(), dataset.classes()) else {
+            continue;
+        };
+        let cfg = TrainConfig {
+            dataset,
+            batch: p.batch,
+            data_fraction: p.features[9],
+            epochs: p.features[4] as usize,
+            lr: p.features[3],
+            optimizer: match p.features[5] as u64 {
+                0 => Optimizer::Sgd,
+                1 => Optimizer::SgdMomentum,
+                _ => Optimizer::Adam,
+            },
+            framework: if p.framework == "pytorch" {
+                Framework::TorchSim
+            } else {
+                Framework::TfSim
+            },
+            device: DeviceProfile::by_name(p.device).unwrap(),
+            seed: 0,
+        };
+        let est = match target {
+            Target::Memory => shape_inference::estimate_memory(&g, &cfg) as f64,
+            Target::Time => shape_inference::estimate_time(&g, &cfg),
+        };
+        pred.push(est);
+        truth.push(p.target(target));
+    }
+    stats::mre(&pred, &truth)
+}
+
+/// Figures 8–11: per-model MRE of DNNAbacus vs the two baselines for one
+/// (target, framework) pair — fig8 = (Memory, pytorch), fig9 = (Memory,
+/// tensorflow), fig10 = (Time, pytorch), fig11 = (Time, tensorflow).
+pub fn fig8_11(ctx: &Ctx, target: Target, framework: &str) -> Table {
+    let fignum = match (target, framework) {
+        (Target::Memory, "pytorch") => 8,
+        (Target::Memory, _) => 9,
+        (Target::Time, "pytorch") => 10,
+        (Target::Time, _) => 11,
+    };
+    let corpus = ctx.training_corpus();
+    let (train, test) = corpus.split(0.7, ctx.seed);
+    let fast = ctx.scale < 0.3;
+    let model = AutoMl::train_opt(&train, target, ctx.seed, fast);
+    let test_fw = test.filter_framework(framework);
+    let mut t = Table::new(
+        &format!(
+            "Figure {fignum} — MRE of {} prediction for {framework} (winner: {})",
+            target.name(),
+            model.report.winner.name()
+        ),
+        &["model", "dnnabacus", "shape-inference", "mlp-baseline"],
+    );
+    // Train the paper's MLP baseline comparison (pure-rust fallback if
+    // the PJRT artifacts are absent): a ridge model over raw features is
+    // our closest stand-in when artifacts are missing.
+    let mlp_mre_per_model = mlp_baseline_mre(ctx, &train, &test_fw, target);
+    for name in zoo::CLASSIC_29.iter().map(|(n, _)| *n) {
+        let sub = test_fw.filter_model(name);
+        if sub.is_empty() {
+            continue;
+        }
+        let ours = model.mre_on(&sub);
+        let shape = shape_inference_mre(&sub, target);
+        let mlp = mlp_mre_per_model
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(f64::NAN);
+        t.row(vec![
+            name.to_string(),
+            fmt_pct(ours),
+            fmt_pct(shape),
+            fmt_pct(mlp),
+        ]);
+    }
+    // Averages row.
+    let overall = model.mre_on(&test_fw);
+    t.row(vec![
+        "AVERAGE".into(),
+        fmt_pct(overall),
+        fmt_pct(shape_inference_mre(&test_fw, target)),
+        fmt_pct(stats::mean(
+            &mlp_mre_per_model.iter().map(|(_, v)| *v).collect::<Vec<_>>(),
+        )),
+    ]);
+    t
+}
+
+/// The MLP comparison baseline [27][29]: trained through the AOT PJRT
+/// train-step artifact when available, else a ridge stand-in.
+fn mlp_baseline_mre(
+    ctx: &Ctx,
+    train: &Dataset,
+    test: &Dataset,
+    target: Target,
+) -> Vec<(String, f64)> {
+    if crate::runtime::artifacts_available() {
+        if let Ok(per_model) = mlp_via_pjrt(ctx, train, test, target) {
+            return per_model;
+        }
+    }
+    // Fallback: linear model (documented stand-in).
+    let (x, y) = train.xy(target);
+    let ridge = crate::predictor::linear::Ridge::train(&x, &y, 10.0);
+    test.model_names()
+        .into_iter()
+        .map(|name| {
+            let sub = test.filter_model(&name);
+            let pred: Vec<f64> = sub
+                .points
+                .iter()
+                .map(|p| {
+                    use crate::predictor::Regressor;
+                    ridge.predict_one(&p.features).exp()
+                })
+                .collect();
+            let mre = stats::mre(&pred, &sub.raw_targets(target));
+            (name, mre)
+        })
+        .collect()
+}
+
+/// Train the AOT MLP (both targets at once) with SGD via PJRT and report
+/// per-model MRE for the requested target.
+fn mlp_via_pjrt(
+    ctx: &Ctx,
+    train: &Dataset,
+    test: &Dataset,
+    target: Target,
+) -> anyhow::Result<Vec<(String, f64)>> {
+    use crate::runtime::MlpPredictor;
+    let mut mlp = MlpPredictor::new(ctx.seed)?;
+    let b = mlp.manifest.train_batch;
+    // Standardize features (the MLP needs it; trees don't).
+    let (mean, std) = feature_stats(train);
+    let norm = |f: &[f64]| -> Vec<f64> {
+        f.iter()
+            .enumerate()
+            .map(|(i, &v)| (v - mean[i]) / std[i])
+            .collect()
+    };
+    let steps = ((train.len() * 6 / b).max(60)).min(800);
+    let mut rng = crate::util::prng::Rng::new(ctx.seed ^ 0x117);
+    for _ in 0..steps {
+        let idx = rng.sample_indices(train.len(), b);
+        let x: Vec<Vec<f64>> = idx.iter().map(|&i| norm(&train.points[i].features)).collect();
+        let y: Vec<[f64; 2]> = idx
+            .iter()
+            .map(|&i| {
+                let p = &train.points[i];
+                [p.time.max(1e-9).ln(), p.memory.max(1e-9).ln()]
+            })
+            .collect();
+        mlp.train_step(&x, &y, 3e-3)?;
+    }
+    let col = match target {
+        Target::Time => 0,
+        Target::Memory => 1,
+    };
+    let mut out = Vec::new();
+    for name in test.model_names() {
+        let sub = test.filter_model(&name);
+        let feats: Vec<Vec<f64>> = sub.points.iter().map(|p| norm(&p.features)).collect();
+        let pred_rows = mlp.predict_batch(&feats)?;
+        let pred: Vec<f64> = pred_rows.iter().map(|r| r[col].exp()).collect();
+        out.push((name, stats::mre(&pred, &sub.raw_targets(target))));
+    }
+    Ok(out)
+}
+
+fn feature_stats(d: &Dataset) -> (Vec<f64>, Vec<f64>) {
+    let dim = d.points[0].features.len();
+    let n = d.len() as f64;
+    let mut mean = vec![0.0; dim];
+    for p in &d.points {
+        for (m, v) in mean.iter_mut().zip(&p.features) {
+            *m += v;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n;
+    }
+    let mut std = vec![0.0; dim];
+    for p in &d.points {
+        for (s, (v, m)) in std.iter_mut().zip(p.features.iter().zip(&mean)) {
+            *s += (v - m) * (v - m);
+        }
+    }
+    for s in std.iter_mut() {
+        *s = (*s / n).sqrt().max(1e-9);
+    }
+    (mean, std)
+}
+
+/// Figure 12: memory prediction MRE for five models across batch sizes
+/// 32–512 (trained on the full corpus, evaluated per batch).
+pub fn fig12(ctx: &Ctx) -> Table {
+    let corpus = ctx.training_corpus();
+    let (train, _) = corpus.split(0.7, ctx.seed);
+    let model = AutoMl::train_opt(&train, Target::Memory, ctx.seed, ctx.scale < 0.3);
+    let batches = [32usize, 64, 128, 256, 512];
+    let mut t = Table::new(
+        "Figure 12 — memory-prediction MRE across batch sizes",
+        &["model", "b32", "b64", "b128", "b256", "b512", "avg"],
+    );
+    for name in zoo::FIG12_MODELS {
+        let g = zoo::build(name, 3, 100).unwrap();
+        let mut row = vec![name.to_string()];
+        let mut errs = Vec::new();
+        for &b in &batches {
+            let mut cfg = TrainConfig::paper_default(DatasetKind::Cifar100, b);
+            cfg.seed = ctx.seed ^ b as u64;
+            match crate::profiler::profile_one(&g, &cfg, crate::features::StructureRep::Nsm) {
+                Some(p) => {
+                    let pred = model.predict(&p.features);
+                    let err = ((pred - p.memory) / p.memory).abs();
+                    errs.push(err);
+                    row.push(fmt_pct(err));
+                }
+                None => row.push("OOM".into()),
+            }
+        }
+        row.push(fmt_pct(stats::mean(&errs)));
+        t.row(row);
+    }
+    t
+}
+
+/// Feature ablation — the claim behind the paper's §3.2 design: the
+/// structure-dependent NSM features must add accuracy over the nine
+/// structure-independent features alone, especially on *unseen* models
+/// where config features cannot identify the architecture.
+pub fn ablation(ctx: &Ctx) -> Table {
+    use crate::features::INDEP_DIM;
+    let truncate = |d: &Dataset| -> Dataset {
+        Dataset {
+            points: d
+                .points
+                .iter()
+                .map(|p| {
+                    let mut p2 = p.clone();
+                    p2.features.truncate(INDEP_DIM);
+                    p2
+                })
+                .collect(),
+        }
+    };
+    let corpus = ctx.training_corpus();
+    let (train, test) = corpus.split(0.7, ctx.seed);
+    let unseen = ctx.unseen_dataset();
+    let (train_i, test_i, unseen_i) = (truncate(&train), truncate(&test), truncate(&unseen));
+    let fast = ctx.scale < 0.3;
+    let mut t = Table::new(
+        "Ablation — structure-independent features only vs + NSM",
+        &["target", "features", "test MRE", "unseen-model MRE"],
+    );
+    for target in [Target::Time, Target::Memory] {
+        let full = AutoMl::train_opt(&train, target, ctx.seed, fast);
+        let indep = AutoMl::train_opt(&train_i, target, ctx.seed, fast);
+        t.row(vec![
+            target.name().into(),
+            format!("indep+NSM ({}d)", train.points[0].features.len()),
+            fmt_pct(full.mre_on(&test)),
+            fmt_pct(full.mre_on(&unseen)),
+        ]);
+        t.row(vec![
+            target.name().into(),
+            format!("indep only ({INDEP_DIM}d)"),
+            fmt_pct(indep.mre_on(&test_i)),
+            fmt_pct(indep.mre_on(&unseen_i)),
+        ]);
+    }
+    t
+}
+
+/// §4.1 headline: overall MRE for time and memory over the held-out test
+/// split (paper: ≈0.9% time, ≈2.8% memory).
+pub fn headline(ctx: &Ctx) -> Table {
+    let corpus = ctx.training_corpus();
+    let (train, test) = corpus.split(0.7, ctx.seed);
+    let fast = ctx.scale < 0.3;
+    let mut t = Table::new(
+        "Headline — overall test MRE (paper: time 0.9%, memory 2.8%)",
+        &["target", "winner", "test MRE", "points(train/test)"],
+    );
+    for target in [Target::Time, Target::Memory] {
+        let m = AutoMl::train_opt(&train, target, ctx.seed, fast);
+        t.row(vec![
+            target.name().into(),
+            m.report.winner.name().into(),
+            fmt_pct(m.mre_on(&test)),
+            format!("{}/{}", train.len(), test.len()),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_ctx() -> Ctx {
+        Ctx {
+            scale: 0.05,
+            seed: 3,
+            cache_dir: None,
+        }
+    }
+
+    #[test]
+    fn headline_mre_beats_baselines_by_far() {
+        let ctx = tiny_ctx();
+        let corpus = ctx.training_corpus();
+        let (train, test) = corpus.split(0.7, 1);
+        let m = AutoMl::train_opt(&train, Target::Memory, 1, true);
+        let ours = m.mre_on(&test);
+        let shape = shape_inference_mre(&test, Target::Memory);
+        assert!(ours < 0.25, "our MRE {ours}");
+        assert!(
+            shape > 2.0 * ours,
+            "shape-inference {shape} should be ≫ ours {ours}"
+        );
+    }
+
+    #[test]
+    fn fig12_table_has_five_models() {
+        let t = fig12(&tiny_ctx());
+        assert_eq!(t.rows.len(), 5);
+    }
+}

@@ -1,0 +1,140 @@
+//! §4.2 / Figure 13: zero-shot generalization to unseen networks, with
+//! both network representations (DNNAbacus_NSM vs DNNAbacus_GE).
+
+use super::Ctx;
+use crate::features::{embed::GraphEmbedder, indep_features};
+use crate::graph::Graph;
+use crate::predictor::{AutoMl, Dataset, Target};
+use crate::sim::{DatasetKind, DeviceProfile, Framework, Optimizer, TrainConfig};
+use crate::util::table::{fmt_pct, Table};
+use crate::zoo;
+
+/// Replace each point's structure features with graph embeddings from a
+/// shared embedder fitted on the *training* graphs only (zero-shot
+/// discipline: unseen graphs are embedded by inference).
+fn re_featurize_ge(data: &Dataset, embedder: &GraphEmbedder) -> Dataset {
+    let mut graphs: std::collections::BTreeMap<(String, usize), Graph> = Default::default();
+    let points = data
+        .points
+        .iter()
+        .map(|p| {
+            let in_ch = p.features[2] as usize;
+            let key = (p.model.clone(), in_ch);
+            let g = graphs.entry(key).or_insert_with(|| {
+                let classes = if in_ch == 1 { 10 } else { 100 };
+                zoo::build(&p.model, in_ch, classes).expect("zoo model")
+            });
+            let cfg = reconstruct_cfg(p);
+            let mut features = indep_features(g, &cfg);
+            features.extend(embedder.embed(g));
+            let mut p2 = p.clone();
+            p2.features = features;
+            p2
+        })
+        .collect();
+    Dataset { points }
+}
+
+fn reconstruct_cfg(p: &crate::predictor::DataPoint) -> TrainConfig {
+    TrainConfig {
+        dataset: if p.features[2] as usize == 1 {
+            DatasetKind::Mnist
+        } else {
+            DatasetKind::Cifar100
+        },
+        batch: p.batch,
+        data_fraction: p.features[9],
+        epochs: (p.features[4] as usize).max(1),
+        lr: p.features[3],
+        optimizer: match p.features[5] as u64 {
+            0 => Optimizer::Sgd,
+            1 => Optimizer::SgdMomentum,
+            _ => Optimizer::Adam,
+        },
+        framework: if p.framework == "pytorch" {
+            Framework::TorchSim
+        } else {
+            Framework::TfSim
+        },
+        device: DeviceProfile::by_name(p.device).unwrap_or_else(|_| DeviceProfile::rtx2080()),
+        seed: 0,
+    }
+}
+
+/// Figure 13: per-unseen-model MRE for NSM-based and graph-embedding
+/// based DNNAbacus, for both targets.
+pub fn fig13(ctx: &Ctx) -> Vec<Table> {
+    // NSM-rep corpora come straight from the sweeps.
+    let train_nsm = ctx.classic_dataset();
+    let unseen_nsm = ctx.unseen_dataset();
+    // GE-rep corpora re-featurize both with an embedder fitted only on
+    // the classic (training) graphs.
+    let train_graphs: Vec<Graph> = zoo::CLASSIC_29
+        .iter()
+        .flat_map(|(_, b)| [b(1, 10), b(3, 100)])
+        .collect();
+    let refs: Vec<&Graph> = train_graphs.iter().collect();
+    let embedder = GraphEmbedder::fit(&refs, ctx.seed);
+    let train_ge = re_featurize_ge(&train_nsm, &embedder);
+    let unseen_ge = re_featurize_ge(&unseen_nsm, &embedder);
+
+    let fast = ctx.scale < 0.3;
+    let mut out = Vec::new();
+    for target in [Target::Memory, Target::Time] {
+        let m_nsm = AutoMl::train_opt(&train_nsm, target, ctx.seed, fast);
+        let m_ge = AutoMl::train_opt(&train_ge, target, ctx.seed, fast);
+        let mut t = Table::new(
+            &format!(
+                "Figure 13 — zero-shot {} MRE on unseen models (NSM vs graph embedding)",
+                target.name()
+            ),
+            &["model", "DNNAbacus_NSM", "DNNAbacus_GE"],
+        );
+        let mut worst_nsm = 0.0f64;
+        let mut worst_ge = 0.0f64;
+        for (name, _) in zoo::UNSEEN_5 {
+            let sub_nsm = unseen_nsm.filter_model(name);
+            let sub_ge = unseen_ge.filter_model(name);
+            let e_nsm = m_nsm.mre_on(&sub_nsm);
+            let e_ge = m_ge.mre_on(&sub_ge);
+            worst_nsm = worst_nsm.max(e_nsm);
+            worst_ge = worst_ge.max(e_ge);
+            t.row(vec![name.to_string(), fmt_pct(e_nsm), fmt_pct(e_ge)]);
+        }
+        t.row(vec![
+            "MAX (paper: 8.38% / 8.16%)".into(),
+            fmt_pct(worst_nsm),
+            fmt_pct(worst_ge),
+        ]);
+        t.row(vec![
+            "AVERAGE".into(),
+            fmt_pct(m_nsm.mre_on(&unseen_nsm)),
+            fmt_pct(m_ge.mre_on(&unseen_ge)),
+        ]);
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::StructureRep;
+
+    #[test]
+    fn ge_refeaturization_changes_dim_consistently() {
+        let ctx = Ctx {
+            scale: 0.05,
+            seed: 5,
+            cache_dir: None,
+        };
+        let d = ctx.unseen_dataset();
+        let graphs: Vec<Graph> = vec![zoo::build("resnet18", 3, 100).unwrap()];
+        let refs: Vec<&Graph> = graphs.iter().collect();
+        let embedder = GraphEmbedder::fit(&refs, 1);
+        let ge = re_featurize_ge(&d, &embedder);
+        let dim = crate::features::feature_dim(StructureRep::GraphEmbedding);
+        assert!(ge.points.iter().all(|p| p.features.len() == dim));
+        assert_eq!(ge.len(), d.len());
+    }
+}

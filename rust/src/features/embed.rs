@@ -1,0 +1,232 @@
+//! Graph embeddings — the paper's comparison representation (§3.2.2
+//! "Graph embedding", Figure 13's `DNNAbacus_GE`).
+//!
+//! Reimplements the essence of graph2vec (Narayanan 2017): each graph is
+//! a "document" whose "words" are Weisfeiler-Lehman rooted-subgraph
+//! labels up to depth `WL_DEPTH`; a PV-DBOW skip-gram with negative
+//! sampling learns a fixed-width embedding per graph. Token identity
+//! uses the hashing trick (`VOCAB` buckets), so unseen graphs embed
+//! without refitting the vocabulary — the doc vector is inferred by a
+//! few gradient steps against the frozen token matrix, exactly how
+//! gensim infers unseen documents.
+
+use crate::graph::Graph;
+use crate::util::prng::Rng;
+use std::collections::BTreeMap;
+
+/// Embedding width (graph2vec's default magnitude; small enough for the
+/// shallow predictors).
+pub const EMBED_DIM: usize = 32;
+/// WL relabeling depth.
+pub const WL_DEPTH: usize = 2;
+/// Hashed token vocabulary.
+const VOCAB: usize = 4096;
+const NEGATIVES: usize = 5;
+const EPOCHS: usize = 12;
+const LR: f64 = 0.05;
+
+fn mix(h: u64, x: u64) -> u64 {
+    (h ^ x)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .rotate_left(29)
+        .wrapping_mul(0xBF58_476D_1CE4_E5B9)
+}
+
+/// WL rooted-subgraph tokens of a graph (all depths pooled), hashed into
+/// the vocabulary.
+pub fn wl_tokens(g: &Graph) -> Vec<usize> {
+    let n = g.len();
+    // Undirected adjacency (graph2vec treats neighborhoods symmetrically).
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (s, d) in g.edges() {
+        adj[s].push(d);
+        adj[d].push(s);
+    }
+    let mut labels: Vec<u64> = g.nodes.iter().map(|nd| nd.kind.ty() as u64 + 1).collect();
+    let mut tokens: Vec<usize> = labels.iter().map(|&l| (l as usize) % VOCAB).collect();
+    for depth in 0..WL_DEPTH {
+        let mut next = vec![0u64; n];
+        for i in 0..n {
+            let mut neigh: Vec<u64> = adj[i].iter().map(|&j| labels[j]).collect();
+            neigh.sort_unstable();
+            let mut h = mix(0x57AB_1E_5EED, labels[i]);
+            for l in neigh {
+                h = mix(h, l);
+            }
+            next[i] = mix(h, depth as u64 + 1);
+        }
+        labels = next;
+        tokens.extend(labels.iter().map(|&l| (l as usize) % VOCAB));
+    }
+    tokens
+}
+
+/// A fitted graph2vec-lite model.
+#[derive(Debug, Clone)]
+pub struct GraphEmbedder {
+    /// Token output matrix `VOCAB × EMBED_DIM`.
+    token_vecs: Vec<[f64; EMBED_DIM]>,
+    /// Unigram table for negative sampling (token ids, frequency-weighted).
+    neg_table: Vec<usize>,
+    seed: u64,
+}
+
+impl GraphEmbedder {
+    /// Fit token vectors from a corpus of graphs (PV-DBOW: doc vectors
+    /// and token vectors co-trained; we keep the token matrix).
+    pub fn fit(graphs: &[&Graph], seed: u64) -> GraphEmbedder {
+        let mut rng = Rng::new(seed ^ 0x6E_4B_ED);
+        let docs: Vec<Vec<usize>> = graphs.iter().map(|g| wl_tokens(g)).collect();
+        // Frequency table for negative sampling.
+        let mut freq: BTreeMap<usize, usize> = BTreeMap::new();
+        for d in &docs {
+            for &t in d {
+                *freq.entry(t).or_insert(0) += 1;
+            }
+        }
+        let mut neg_table = Vec::with_capacity(4 * freq.len());
+        for (&t, &f) in &freq {
+            let reps = ((f as f64).powf(0.75).ceil() as usize).max(1);
+            for _ in 0..reps.min(64) {
+                neg_table.push(t);
+            }
+        }
+        let mut token_vecs = vec![[0.0f64; EMBED_DIM]; VOCAB];
+        for v in token_vecs.iter_mut() {
+            for x in v.iter_mut() {
+                *x = rng.range_f64(-0.5, 0.5) / EMBED_DIM as f64;
+            }
+        }
+        let mut doc_vecs = vec![[0.0f64; EMBED_DIM]; docs.len()];
+        for v in doc_vecs.iter_mut() {
+            for x in v.iter_mut() {
+                *x = rng.range_f64(-0.5, 0.5) / EMBED_DIM as f64;
+            }
+        }
+        let mut model = GraphEmbedder {
+            token_vecs,
+            neg_table,
+            seed,
+        };
+        for epoch in 0..EPOCHS {
+            let lr = LR * (1.0 - epoch as f64 / EPOCHS as f64).max(0.1);
+            for (di, doc) in docs.iter().enumerate() {
+                model.train_doc(&mut doc_vecs[di], doc, lr, true, &mut rng);
+            }
+        }
+        model
+    }
+
+    /// One pass of PV-DBOW negative-sampling updates for a document.
+    fn train_doc(
+        &mut self,
+        dvec: &mut [f64; EMBED_DIM],
+        doc: &[usize],
+        lr: f64,
+        update_tokens: bool,
+        rng: &mut Rng,
+    ) {
+        for &target in doc {
+            // Positive + k negative samples.
+            for s in 0..=NEGATIVES {
+                let (tok, label) = if s == 0 {
+                    (target, 1.0)
+                } else if self.neg_table.is_empty() {
+                    (rng.below(VOCAB), 0.0)
+                } else {
+                    (*rng.choose(&self.neg_table), 0.0)
+                };
+                let w = self.token_vecs[tok];
+                let dot: f64 = dvec.iter().zip(w.iter()).map(|(a, b)| a * b).sum();
+                let sig = 1.0 / (1.0 + (-dot).exp());
+                let gscale = lr * (label - sig);
+                for k in 0..EMBED_DIM {
+                    let dv = dvec[k];
+                    dvec[k] += gscale * w[k];
+                    if update_tokens {
+                        self.token_vecs[tok][k] += gscale * dv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Infer the embedding of a (possibly unseen) graph against the
+    /// frozen token matrix.
+    pub fn embed(&self, g: &Graph) -> Vec<f64> {
+        let doc = wl_tokens(g);
+        let mut rng = Rng::new(self.seed ^ g.fingerprint());
+        let mut dvec = [0.0f64; EMBED_DIM];
+        for x in dvec.iter_mut() {
+            *x = rng.range_f64(-0.5, 0.5) / EMBED_DIM as f64;
+        }
+        // Clone-free trick: token updates disabled, so `self` is logically
+        // immutable; work on a local copy of the mutable-API state.
+        let mut scratch = self.clone();
+        for epoch in 0..EPOCHS {
+            let lr = LR * (1.0 - epoch as f64 / EPOCHS as f64).max(0.1);
+            scratch.train_doc(&mut dvec, &doc, lr, false, &mut rng);
+        }
+        dvec.to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    #[test]
+    fn tokens_deterministic_and_nonempty() {
+        let g = zoo::build("resnet18", 3, 100).unwrap();
+        let a = wl_tokens(&g);
+        let b = wl_tokens(&g);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), g.len() * (WL_DEPTH + 1));
+    }
+
+    #[test]
+    fn embedding_deterministic() {
+        let g = zoo::build("vgg11", 3, 100).unwrap();
+        let r = zoo::build("resnet18", 3, 100).unwrap();
+        let graphs = vec![&g, &r];
+        let e1 = GraphEmbedder::fit(&graphs, 11);
+        let e2 = GraphEmbedder::fit(&graphs, 11);
+        assert_eq!(e1.embed(&g), e2.embed(&g));
+    }
+
+    #[test]
+    fn similar_graphs_closer_than_dissimilar() {
+        // ResNet-18 vs ResNet-34 (same family) should be closer than
+        // ResNet-18 vs VGG-16.
+        let r18 = zoo::build("resnet18", 3, 100).unwrap();
+        let r34 = zoo::build("resnet34", 3, 100).unwrap();
+        let vgg = zoo::build("vgg16", 3, 100).unwrap();
+        let corpus = vec![&r18, &r34, &vgg];
+        let model = GraphEmbedder::fit(&corpus, 5);
+        let d = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>()
+        };
+        let (er18, er34, evgg) = (model.embed(&r18), model.embed(&r34), model.embed(&vgg));
+        assert!(
+            d(&er18, &er34) < d(&er18, &evgg),
+            "family distance {} vs cross {}",
+            d(&er18, &er34),
+            d(&er18, &evgg)
+        );
+    }
+
+    #[test]
+    fn unseen_graph_embeds_without_refit() {
+        let seen: Vec<Graph> = ["vgg11", "resnet18", "mobilenet-v1"]
+            .iter()
+            .map(|n| zoo::build(n, 3, 100).unwrap())
+            .collect();
+        let refs: Vec<&Graph> = seen.iter().collect();
+        let model = GraphEmbedder::fit(&refs, 3);
+        let unseen = zoo::build("inception-v3", 3, 100).unwrap();
+        let e = model.embed(&unseen);
+        assert_eq!(e.len(), EMBED_DIM);
+        assert!(e.iter().any(|&x| x.abs() > 1e-6), "embedding collapsed");
+    }
+}

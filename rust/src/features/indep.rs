@@ -1,0 +1,109 @@
+//! Structure-independent features — the paper's Table 2.
+//!
+//! | Feature       | Source                                             |
+//! |---------------|----------------------------------------------------|
+//! | Batch Size    | training config                                    |
+//! | Input Size    | dataset (height/width of input samples)            |
+//! | Channel       | dataset (input channels)                           |
+//! | Learning Rate | training config (cost-neutral, kept as a feature)  |
+//! | Epoch         | training config                                    |
+//! | Optimizer     | training config (encoded by device-state multiple) |
+//! | Layers        | weighted-layer count of the graph                  |
+//! | FLOPs         | forward FLOPs per sample (log-scaled)              |
+//! | Params        | trainable parameter count (log-scaled)             |
+//!
+//! Plus three *platform* features (device peak FLOPs, memory bandwidth,
+//! VRAM) so one model generalizes across the two systems of Table 1 —
+//! the paper trains over data from both servers.
+
+use crate::graph::Graph;
+use crate::sim::TrainConfig;
+
+/// Feature count (9 paper features + 3 platform + 1 framework + 1 data
+/// fraction).
+pub const INDEP_DIM: usize = 14;
+
+/// Human-readable names, index-aligned with [`indep_features`].
+pub const INDEP_NAMES: [&str; INDEP_DIM] = [
+    "batch_size",
+    "input_size",
+    "channel",
+    "learning_rate",
+    "epoch",
+    "optimizer_state",
+    "layers",
+    "log_flops",
+    "log_params",
+    "data_fraction",
+    "framework",
+    "dev_peak_tflops",
+    "dev_bw_gbps",
+    "dev_vram_gib",
+];
+
+/// Compute the structure-independent feature vector.
+pub fn indep_features(g: &Graph, cfg: &TrainConfig) -> Vec<f64> {
+    let flops = g
+        .flops_per_sample(cfg.dataset.in_channels(), cfg.dataset.hw())
+        .unwrap_or(1) as f64;
+    let params = g.param_count().max(1) as f64;
+    vec![
+        cfg.batch as f64,
+        cfg.dataset.hw() as f64,
+        cfg.dataset.in_channels() as f64,
+        cfg.lr,
+        cfg.epochs as f64,
+        cfg.optimizer.state_multiple() as f64,
+        g.weighted_layers() as f64,
+        flops.ln(),
+        params.ln(),
+        cfg.data_fraction,
+        match cfg.framework {
+            crate::sim::Framework::TorchSim => 0.0,
+            crate::sim::Framework::TfSim => 1.0,
+        },
+        cfg.device.peak_flops / 1e12,
+        cfg.device.mem_bw / 1e9,
+        cfg.device.vram as f64 / (1u64 << 30) as f64,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{DatasetKind, DeviceProfile, Optimizer};
+    use crate::zoo;
+
+    #[test]
+    fn names_align_with_values() {
+        assert_eq!(INDEP_NAMES.len(), INDEP_DIM);
+        let g = zoo::build("vgg16", 3, 100).unwrap();
+        let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, 128);
+        let v = indep_features(&g, &cfg);
+        assert_eq!(v.len(), INDEP_DIM);
+        assert_eq!(v[0], 128.0); // batch
+        assert_eq!(v[1], 32.0); // input size
+        assert_eq!(v[2], 3.0); // channels
+        assert_eq!(v[6], 16.0); // vgg16 has 16 weighted layers
+    }
+
+    #[test]
+    fn optimizer_and_device_reflected() {
+        let g = zoo::build("lenet5", 1, 10).unwrap();
+        let mut cfg = TrainConfig::paper_default(DatasetKind::Mnist, 32);
+        cfg.optimizer = Optimizer::Adam;
+        cfg.device = DeviceProfile::rtx3090();
+        let v = indep_features(&g, &cfg);
+        assert_eq!(v[5], 2.0);
+        assert_eq!(v[13], 24.0);
+    }
+
+    #[test]
+    fn log_scaling_keeps_magnitudes_sane() {
+        let g = zoo::build("vgg19", 3, 100).unwrap();
+        let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, 256);
+        let v = indep_features(&g, &cfg);
+        assert!(v[7] > 10.0 && v[7] < 40.0, "log flops {}", v[7]);
+        assert!(v[8] > 10.0 && v[8] < 25.0, "log params {}", v[8]);
+    }
+}

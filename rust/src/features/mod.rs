@@ -1,0 +1,82 @@
+//! Feature engineering (paper §3.2).
+//!
+//! Two feature categories feed the predictor:
+//! * **structure-independent** ([`indep`]) — Table 2's nine features
+//!   describing the training configuration and overall model magnitude;
+//! * **structure-dependent** — the network-structure representation:
+//!   either the paper's novel **Network Structural Matrix** ([`nsm`]) or
+//!   the graph2vec-style **graph embedding** baseline ([`embed`]).
+//!
+//! [`feature_vector`] assembles them into the fixed-width input consumed
+//! by every predictor (shallow models in Rust, the MLP artifact via XLA).
+
+pub mod indep;
+pub mod nsm;
+pub mod embed;
+
+pub use indep::{indep_features, INDEP_DIM, INDEP_NAMES};
+pub use nsm::{nsm_features, Nsm, NSM_DIM};
+
+use crate::graph::Graph;
+use crate::sim::TrainConfig;
+
+/// Which structure representation to use (Figure 13 compares them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StructureRep {
+    /// The paper's Network Structural Matrix.
+    Nsm,
+    /// graph2vec-style embedding (DNNAbacus_GE in Figure 13).
+    GraphEmbedding,
+}
+
+/// Total feature dimension for a representation.
+pub fn feature_dim(rep: StructureRep) -> usize {
+    match rep {
+        StructureRep::Nsm => INDEP_DIM + NSM_DIM,
+        StructureRep::GraphEmbedding => INDEP_DIM + embed::EMBED_DIM,
+    }
+}
+
+/// Assemble the full feature vector for (graph, training config).
+///
+/// For [`StructureRep::GraphEmbedding`] the embedding is trained on the
+/// fly from the single graph's WL vocabulary — callers batching many
+/// graphs should use [`embed::GraphEmbedder`] directly and concatenate.
+pub fn feature_vector(g: &Graph, cfg: &TrainConfig, rep: StructureRep) -> Vec<f64> {
+    let mut out = indep_features(g, cfg);
+    match rep {
+        StructureRep::Nsm => out.extend(nsm_features(g)),
+        StructureRep::GraphEmbedding => {
+            let embedder = embed::GraphEmbedder::fit(&[g], cfg.seed);
+            out.extend(embedder.embed(g));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::DatasetKind;
+    use crate::zoo;
+
+    #[test]
+    fn dims_consistent() {
+        let g = zoo::build("resnet18", 3, 100).unwrap();
+        let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, 64);
+        let v = feature_vector(&g, &cfg, StructureRep::Nsm);
+        assert_eq!(v.len(), feature_dim(StructureRep::Nsm));
+        let v = feature_vector(&g, &cfg, StructureRep::GraphEmbedding);
+        assert_eq!(v.len(), feature_dim(StructureRep::GraphEmbedding));
+    }
+
+    #[test]
+    fn all_features_finite_for_all_models() {
+        let cfg = TrainConfig::paper_default(DatasetKind::Mnist, 32);
+        for name in zoo::all_names() {
+            let g = zoo::build(name, 1, 10).unwrap();
+            let v = feature_vector(&g, &cfg, StructureRep::Nsm);
+            assert!(v.iter().all(|x| x.is_finite()), "{name}");
+        }
+    }
+}

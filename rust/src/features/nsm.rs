@@ -1,0 +1,183 @@
+//! Network Structural Matrix (NSM) — the paper's novel representation
+//! (§3.2.2, Figures 6–7).
+//!
+//! The NSM is a `|S| × |S|` matrix over the operator vocabulary `S`:
+//! entry `(i, j)` counts the edges whose source operator has type `i`
+//! and sink operator type `j`. It is built in a *single scan* of the
+//! graph's topologically-ordered edge list (the paper's selling point
+//! over graph embeddings / GNNs), and flattened row-major into 256
+//! features.
+
+use crate::graph::op::{OpType, OP_TYPE_COUNT};
+use crate::graph::Graph;
+
+/// NSM feature width: 16 × 16 operator-pair counts.
+pub const NSM_DIM: usize = OP_TYPE_COUNT * OP_TYPE_COUNT;
+
+/// The Network Structural Matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Nsm {
+    /// Row-major counts: `m[src_type][dst_type]`.
+    pub m: [[u32; OP_TYPE_COUNT]; OP_TYPE_COUNT],
+}
+
+impl Nsm {
+    /// Build from a graph in one edge-list scan.
+    pub fn build(g: &Graph) -> Nsm {
+        let mut m = [[0u32; OP_TYPE_COUNT]; OP_TYPE_COUNT];
+        for (src, dst) in g.edges() {
+            let si = g.nodes[src].kind.ty() as usize;
+            let di = g.nodes[dst].kind.ty() as usize;
+            m[si][di] += 1;
+        }
+        Nsm { m }
+    }
+
+    pub fn get(&self, src: OpType, dst: OpType) -> u32 {
+        self.m[src as usize][dst as usize]
+    }
+
+    /// Sum of all entries == number of edges in the graph.
+    pub fn total(&self) -> u64 {
+        self.m
+            .iter()
+            .flat_map(|row| row.iter())
+            .map(|&x| x as u64)
+            .sum()
+    }
+
+    /// Row-major flattening into the predictor's feature space,
+    /// log1p-scaled (counts span 1..10³ across the zoo).
+    pub fn features(&self) -> Vec<f64> {
+        self.m
+            .iter()
+            .flat_map(|row| row.iter())
+            .map(|&x| (x as f64).ln_1p())
+            .collect()
+    }
+
+    /// Pretty-print the non-zero block (debugging / the `nsm-demo` CLI).
+    pub fn render(&self) -> String {
+        let used: Vec<usize> = (0..OP_TYPE_COUNT)
+            .filter(|&i| {
+                (0..OP_TYPE_COUNT).any(|j| self.m[i][j] > 0 || self.m[j][i] > 0)
+            })
+            .collect();
+        let mut out = String::new();
+        out.push_str(&format!("{:>15}", ""));
+        for &j in &used {
+            out.push_str(&format!("{:>15}", OpType::ALL[j].name()));
+        }
+        out.push('\n');
+        for &i in &used {
+            out.push_str(&format!("{:>15}", OpType::ALL[i].name()));
+            for &j in &used {
+                if self.m[i][j] > 0 {
+                    out.push_str(&format!("{:>15}", self.m[i][j]));
+                } else {
+                    out.push_str(&format!("{:>15}", "."));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Convenience: build + flatten.
+pub fn nsm_features(g: &Graph) -> Vec<f64> {
+    Nsm::build(g).features()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, OpKind};
+    use crate::util::prop;
+    use crate::zoo;
+
+    /// The worked example of the paper's Figures 6–7: a 7-operator graph
+    /// `Conv→BN→ReLU` ×? … with final NSM
+    /// `Conv→BN = 2`, `BN→ReLU = 2`, `ReLU→Conv = 1`, `ReLU→Linear = 1`.
+    fn paper_example() -> Graph {
+        // Figure 6 reading: x → Conv(1) → BN(2) → ReLU(3) → Conv(4) →
+        // BN(5) → ReLU(6) → Linear(7). (Square nodes only; the NSM in
+        // Figure 7 counts Conv→BN twice, BN→ReLU twice, ReLU→Conv once,
+        // ReLU→Linear once.)
+        let mut g = Graph::new("paper-fig6");
+        let x = g.add(OpKind::input(3, 8), &[]);
+        let c1 = g.add(OpKind::conv(3, 4, 3, 1, 1), &[x]);
+        let b1 = g.add(OpKind::BatchNorm { channels: 4 }, &[c1]);
+        let r1 = g.add(OpKind::ReLU, &[b1]);
+        let c2 = g.add(OpKind::conv(4, 4, 3, 1, 1), &[r1]);
+        let b2 = g.add(OpKind::BatchNorm { channels: 4 }, &[c2]);
+        let r2 = g.add(OpKind::ReLU, &[b2]);
+        let f = g.add(OpKind::Flatten, &[r2]);
+        g.add(
+            OpKind::Linear {
+                in_features: 4 * 8 * 8,
+                out_features: 10,
+            },
+            &[f],
+        );
+        g
+    }
+
+    #[test]
+    fn paper_fig7_example() {
+        let nsm = Nsm::build(&paper_example());
+        assert_eq!(nsm.get(OpType::Conv2d, OpType::BatchNorm), 2);
+        assert_eq!(nsm.get(OpType::BatchNorm, OpType::ReLU), 2);
+        assert_eq!(nsm.get(OpType::ReLU, OpType::Conv2d), 1);
+        // (Our IR interposes an explicit Flatten before Linear.)
+        assert_eq!(nsm.get(OpType::ReLU, OpType::Flatten), 1);
+        assert_eq!(nsm.get(OpType::Flatten, OpType::Linear), 1);
+        assert_eq!(nsm.get(OpType::Linear, OpType::Conv2d), 0);
+    }
+
+    #[test]
+    fn total_equals_edge_count_for_all_models() {
+        for name in zoo::all_names() {
+            let g = zoo::build(name, 3, 100).unwrap();
+            let nsm = Nsm::build(&g);
+            assert_eq!(nsm.total(), g.edge_count() as u64, "{name}");
+        }
+    }
+
+    #[test]
+    fn prop_random_graph_total_matches_edges() {
+        let cfg = zoo::RandomNetCfg::default();
+        prop::check("nsm-total-edges", 48, move |rng| {
+            let g = zoo::random_net(&cfg, rng.next_u64());
+            assert_eq!(Nsm::build(&g).total(), g.edge_count() as u64);
+        });
+    }
+
+    #[test]
+    fn distinguishes_architectures() {
+        let a = nsm_features(&zoo::build("vgg16", 3, 100).unwrap());
+        let b = nsm_features(&zoo::build("resnet18", 3, 100).unwrap());
+        assert_ne!(a, b);
+        // Residual nets have Add rows; VGG has none.
+        let vgg_nsm = Nsm::build(&zoo::build("vgg16", 3, 100).unwrap());
+        let res_nsm = Nsm::build(&zoo::build("resnet18", 3, 100).unwrap());
+        let add_row =
+            |n: &Nsm| -> u32 { (0..OP_TYPE_COUNT).map(|j| n.m[OpType::Add as usize][j]).sum() };
+        assert_eq!(add_row(&vgg_nsm), 0);
+        assert!(add_row(&res_nsm) > 0);
+    }
+
+    #[test]
+    fn features_are_log_scaled_and_wide() {
+        let f = nsm_features(&zoo::build("densenet121", 3, 100).unwrap());
+        assert_eq!(f.len(), NSM_DIM);
+        assert!(f.iter().cloned().fold(0.0f64, f64::max) < 12.0);
+    }
+
+    #[test]
+    fn render_contains_nonzero_types() {
+        let r = Nsm::build(&paper_example()).render();
+        assert!(r.contains("Conv2d") && r.contains("BatchNorm"));
+        assert!(!r.contains("ChannelShuffle"));
+    }
+}

@@ -1,0 +1,108 @@
+//! Forward-pass FLOP counting per node.
+//!
+//! "FLOPs" is one of the paper's nine structure-independent features
+//! (Table 2). We count multiply-accumulates as 2 FLOPs, the convention
+//! used by torchvision/fvcore-style profilers.
+
+use super::op::OpKind;
+use super::shape::TensorShape;
+use super::{Graph, NodeId};
+
+/// Forward FLOPs of one node given the inferred shapes for the whole graph.
+pub fn node_flops(g: &Graph, shapes: &[TensorShape], id: NodeId, kind: &OpKind) -> u64 {
+    let node = &g.nodes[id];
+    let out = &shapes[id];
+    let in0 = node.inputs.first().map(|&s| &shapes[s]);
+    match kind {
+        OpKind::Input { .. } => 0,
+        OpKind::Conv2d(c) => {
+            // out elements × (2 × k² × Cin/groups) MAC-FLOPs (+ bias add).
+            let macs = out.elements() * (c.kh * c.kw * c.in_ch / c.groups) as u64;
+            2 * macs + if c.bias { out.elements() } else { 0 }
+        }
+        OpKind::BatchNorm { .. } => 2 * out.elements(),
+        OpKind::ReLU | OpKind::Sigmoid | OpKind::Dropout { .. } => out.elements(),
+        OpKind::Softmax => 3 * out.elements(),
+        OpKind::MaxPool(p) | OpKind::AvgPool(p) => {
+            out.elements() * (p.kernel * p.kernel) as u64
+        }
+        OpKind::GlobalAvgPool => in0.map(|s| s.elements()).unwrap_or(0),
+        OpKind::Linear {
+            in_features,
+            out_features,
+        } => {
+            let n = out.batch() as u64;
+            2 * n * (*in_features as u64) * (*out_features as u64) + n * *out_features as u64
+        }
+        OpKind::Add | OpKind::Mul => out.elements() * node.inputs.len().max(1) as u64,
+        OpKind::Concat | OpKind::Flatten | OpKind::ChannelShuffle { .. } => 0,
+    }
+}
+
+/// Total forward FLOPs for a whole graph at a batch size.
+pub fn graph_flops(g: &Graph, batch: usize, channels: usize, hw: usize) -> anyhow::Result<u64> {
+    let shapes = super::shape::infer_shapes(g, batch, channels, hw)?;
+    Ok(g.nodes
+        .iter()
+        .enumerate()
+        .map(|(id, n)| node_flops(g, &shapes, id, &n.kind))
+        .sum())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::OpKind;
+
+    #[test]
+    fn conv_flops_formula() {
+        let mut g = Graph::new("c");
+        let x = g.add(OpKind::input(3, 32), &[]);
+        g.add(OpKind::conv_nobias(3, 16, 3, 1, 1), &[x]);
+        // out: 16×32×32, macs = 16*32*32 * 9*3, flops = 2×macs.
+        let f = graph_flops(&g, 1, 3, 32).unwrap();
+        assert_eq!(f, 2 * 16 * 32 * 32 * 9 * 3);
+    }
+
+    #[test]
+    fn flops_scale_linearly_with_batch() {
+        let mut g = Graph::new("c");
+        let x = g.add(OpKind::input(3, 32), &[]);
+        let c = g.add(OpKind::conv_nobias(3, 16, 3, 1, 1), &[x]);
+        g.add(OpKind::ReLU, &[c]);
+        let f1 = graph_flops(&g, 1, 3, 32).unwrap();
+        let f8 = graph_flops(&g, 8, 3, 32).unwrap();
+        assert_eq!(f8, 8 * f1);
+    }
+
+    #[test]
+    fn depthwise_cheaper_than_full() {
+        let mut gd = Graph::new("dw");
+        let x = gd.add(OpKind::input(32, 16), &[]);
+        gd.add(OpKind::dwconv(32, 3, 1, 1), &[x]);
+
+        let mut gf = Graph::new("full");
+        let y = gf.add(OpKind::input(32, 16), &[]);
+        gf.add(OpKind::conv_nobias(32, 32, 3, 1, 1), &[y]);
+
+        let fd = graph_flops(&gd, 1, 32, 16).unwrap();
+        let ff = graph_flops(&gf, 1, 32, 16).unwrap();
+        assert_eq!(ff, 32 * fd); // groups=32 divides MACs by 32
+    }
+
+    #[test]
+    fn linear_flops() {
+        let mut g = Graph::new("l");
+        let x = g.add(OpKind::input(1, 4), &[]);
+        let f = g.add(OpKind::Flatten, &[x]);
+        g.add(
+            OpKind::Linear {
+                in_features: 16,
+                out_features: 10,
+            },
+            &[f],
+        );
+        // 2·n·in·out MACs-as-FLOPs + n·out bias adds, n = 2.
+        assert_eq!(graph_flops(&g, 2, 1, 4).unwrap(), 2 * 2 * 16 * 10 + 2 * 10);
+    }
+}

@@ -1,0 +1,262 @@
+//! Tensor-oriented computation-graph IR.
+//!
+//! The paper formalizes a model as a DAG `G = <u, e>` whose nodes are
+//! operator calls (Conv2D, BatchNorm2D, …) and whose edges carry tensors
+//! (paper §3.2.2, Eq. 1). This module is that IR: a compact arena graph
+//! with NCHW shape inference, parameter and FLOP counting. It is consumed
+//! by three clients:
+//!
+//! * [`crate::sim`] — walks the graph to simulate a training step,
+//! * [`crate::features`] — extracts the NSM and graph embeddings,
+//! * [`crate::predictor::shape_inference`] — the paper's baseline.
+
+pub mod op;
+pub mod shape;
+pub mod flops;
+
+pub use op::{ConvAttrs, OpKind, PoolAttrs, OP_TYPE_COUNT};
+pub use shape::infer_shapes;
+
+use crate::util::prng::Rng;
+
+/// Node identifier: index into [`Graph::nodes`].
+pub type NodeId = usize;
+
+/// One operator call in the computation graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub kind: OpKind,
+    /// Producers whose output tensors feed this node, in input order.
+    pub inputs: Vec<NodeId>,
+}
+
+/// A computation graph. Nodes are stored in a construction order that is
+/// guaranteed topological (a node may only reference earlier nodes), which
+/// both the simulator and the NSM builder rely on.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            nodes: Vec::new(),
+        }
+    }
+
+    /// Append a node; all inputs must already exist (enforces topological
+    /// construction order).
+    pub fn add(&mut self, kind: OpKind, inputs: &[NodeId]) -> NodeId {
+        let id = self.nodes.len();
+        for &i in inputs {
+            assert!(i < id, "graph '{}': input {i} of node {id} not yet defined", self.name);
+        }
+        self.nodes.push(Node {
+            kind,
+            inputs: inputs.to_vec(),
+        });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// All directed edges `(src, dst)` in deterministic order: for each
+    /// node in topological order, its input edges in input order. This is
+    /// the traversal order `E` the paper uses to build the NSM.
+    pub fn edges(&self) -> Vec<(NodeId, NodeId)> {
+        let mut out = Vec::new();
+        for (dst, node) in self.nodes.iter().enumerate() {
+            for &src in &node.inputs {
+                out.push((src, dst));
+            }
+        }
+        out
+    }
+
+    /// Number of edges.
+    pub fn edge_count(&self) -> usize {
+        self.nodes.iter().map(|n| n.inputs.len()).sum()
+    }
+
+    /// Out-degree per node.
+    pub fn out_degree(&self) -> Vec<usize> {
+        let mut deg = vec![0usize; self.nodes.len()];
+        for node in &self.nodes {
+            for &src in &node.inputs {
+                deg[src] += 1;
+            }
+        }
+        deg
+    }
+
+    /// Verify the DAG invariants: inputs precede consumers, `Input` nodes
+    /// have no inputs, non-`Input` nodes have at least one.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (id, node) in self.nodes.iter().enumerate() {
+            for &src in &node.inputs {
+                if src >= id {
+                    anyhow::bail!("node {id} references later node {src}");
+                }
+            }
+            match node.kind {
+                OpKind::Input { .. } => {
+                    if !node.inputs.is_empty() {
+                        anyhow::bail!("input node {id} has predecessors");
+                    }
+                }
+                _ => {
+                    if node.inputs.is_empty() {
+                        anyhow::bail!("non-input node {id} ({:?}) has no inputs", node.kind.ty());
+                    }
+                }
+            }
+        }
+        if !matches!(self.nodes.first().map(|n| &n.kind), Some(OpKind::Input { .. })) {
+            anyhow::bail!("graph must start with an Input node");
+        }
+        Ok(())
+    }
+
+    /// Count of trainable parameters.
+    pub fn param_count(&self) -> u64 {
+        self.nodes.iter().map(|n| n.kind.param_count()).sum()
+    }
+
+    /// Count of "layers" in the paper's sense (weighted layers: conv +
+    /// linear), e.g. VGG-16 has 16.
+    pub fn weighted_layers(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::Conv2d(_) | OpKind::Linear { .. }))
+            .count()
+    }
+
+    /// Total forward FLOPs for one sample at the given input resolution
+    /// (batch handled by callers).
+    pub fn flops_per_sample(&self, channels: usize, hw: usize) -> anyhow::Result<u64> {
+        let shapes = infer_shapes(self, 1, channels, hw)?;
+        Ok(self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(id, n)| flops::node_flops(self, &shapes, id, &n.kind))
+            .sum())
+    }
+
+    /// A deterministic structural fingerprint (used to dedupe random
+    /// models and to key caches).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut mix = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        };
+        for node in &self.nodes {
+            mix(node.kind.ty() as u64 + 1);
+            mix(node.kind.attr_hash());
+            for &src in &node.inputs {
+                mix(src as u64 + 0x9E37);
+            }
+        }
+        h
+    }
+
+    /// Pick a random node id (used by the random model generator and by
+    /// property tests).
+    pub fn random_node(&self, rng: &mut Rng) -> NodeId {
+        rng.below(self.nodes.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new("tiny");
+        let x = g.add(OpKind::input(3, 32), &[]);
+        let c = g.add(OpKind::conv(3, 8, 3, 1, 1), &[x]);
+        let b = g.add(OpKind::BatchNorm { channels: 8 }, &[c]);
+        let r = g.add(OpKind::ReLU, &[b]);
+        let p = g.add(OpKind::GlobalAvgPool, &[r]);
+        let f = g.add(OpKind::Flatten, &[p]);
+        g.add(
+            OpKind::Linear {
+                in_features: 8,
+                out_features: 10,
+            },
+            &[f],
+        );
+        g
+    }
+
+    #[test]
+    fn construction_is_topological() {
+        let g = tiny();
+        g.validate().unwrap();
+        for (src, dst) in g.edges() {
+            assert!(src < dst);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not yet defined")]
+    fn forward_reference_panics() {
+        let mut g = Graph::new("bad");
+        g.add(OpKind::ReLU, &[5]);
+    }
+
+    #[test]
+    fn edge_count_matches_edges() {
+        let g = tiny();
+        assert_eq!(g.edges().len(), g.edge_count());
+        assert_eq!(g.edge_count(), 6);
+    }
+
+    #[test]
+    fn param_count_conv_bn_linear() {
+        let g = tiny();
+        // conv: 3*8*3*3 + 8 bias = 224; bn: 2*8 = 16; linear: 8*10+10 = 90.
+        assert_eq!(g.param_count(), 224 + 16 + 90);
+    }
+
+    #[test]
+    fn weighted_layers_counts_conv_and_linear() {
+        assert_eq!(tiny().weighted_layers(), 2);
+    }
+
+    #[test]
+    fn fingerprint_stable_and_sensitive() {
+        let a = tiny();
+        let b = tiny();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let mut c = tiny();
+        c.add(OpKind::ReLU, &[6]);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn validate_rejects_inputless_op() {
+        let mut g = Graph::new("bad");
+        g.nodes.push(Node {
+            kind: OpKind::ReLU,
+            inputs: vec![],
+        });
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn flops_positive() {
+        let g = tiny();
+        assert!(g.flops_per_sample(3, 32).unwrap() > 0);
+    }
+}

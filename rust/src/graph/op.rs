@@ -1,0 +1,370 @@
+//! Operator vocabulary.
+//!
+//! The NSM (paper §3.2.2) is indexed by operator *type*, so the vocabulary
+//! is a closed enum: 16 types covering everything the 29 networks plus the
+//! random generator emit. [`OpType`] is the NSM row/column index; [`OpKind`]
+//! carries per-call attributes (channels, kernel, stride, …).
+
+/// Number of operator types == NSM dimension (16×16 = 256 NSM features).
+pub const OP_TYPE_COUNT: usize = 16;
+
+/// Operator *type* — the NSM vocabulary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum OpType {
+    Input = 0,
+    Conv2d = 1,
+    BatchNorm = 2,
+    ReLU = 3,
+    Sigmoid = 4,
+    MaxPool = 5,
+    AvgPool = 6,
+    GlobalAvgPool = 7,
+    Linear = 8,
+    Add = 9,
+    Concat = 10,
+    Flatten = 11,
+    Dropout = 12,
+    Softmax = 13,
+    ChannelShuffle = 14,
+    Mul = 15,
+}
+
+impl OpType {
+    pub const ALL: [OpType; OP_TYPE_COUNT] = [
+        OpType::Input,
+        OpType::Conv2d,
+        OpType::BatchNorm,
+        OpType::ReLU,
+        OpType::Sigmoid,
+        OpType::MaxPool,
+        OpType::AvgPool,
+        OpType::GlobalAvgPool,
+        OpType::Linear,
+        OpType::Add,
+        OpType::Concat,
+        OpType::Flatten,
+        OpType::Dropout,
+        OpType::Softmax,
+        OpType::ChannelShuffle,
+        OpType::Mul,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpType::Input => "Input",
+            OpType::Conv2d => "Conv2d",
+            OpType::BatchNorm => "BatchNorm",
+            OpType::ReLU => "ReLU",
+            OpType::Sigmoid => "Sigmoid",
+            OpType::MaxPool => "MaxPool",
+            OpType::AvgPool => "AvgPool",
+            OpType::GlobalAvgPool => "GlobalAvgPool",
+            OpType::Linear => "Linear",
+            OpType::Add => "Add",
+            OpType::Concat => "Concat",
+            OpType::Flatten => "Flatten",
+            OpType::Dropout => "Dropout",
+            OpType::Softmax => "Softmax",
+            OpType::ChannelShuffle => "ChannelShuffle",
+            OpType::Mul => "Mul",
+        }
+    }
+}
+
+/// Convolution attributes (depthwise is expressed via `groups == in_ch`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ConvAttrs {
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub padding: usize,
+    pub groups: usize,
+    pub bias: bool,
+}
+
+impl ConvAttrs {
+    /// Is this a 1×1 (pointwise) convolution? The paper singles these out:
+    /// lightweight nets built from 1×1 convs have smooth cost curves
+    /// because only the GEMM algorithm family applies.
+    pub fn is_pointwise(&self) -> bool {
+        self.kh == 1 && self.kw == 1
+    }
+
+    pub fn is_depthwise(&self) -> bool {
+        self.groups == self.in_ch && self.in_ch == self.out_ch
+    }
+
+    /// Trainable parameters.
+    pub fn params(&self) -> u64 {
+        let w = (self.in_ch / self.groups) as u64
+            * self.out_ch as u64
+            * (self.kh * self.kw) as u64;
+        w + if self.bias { self.out_ch as u64 } else { 0 }
+    }
+
+    /// Output spatial size for a given input spatial size.
+    pub fn out_hw(&self, h: usize) -> usize {
+        (h + 2 * self.padding).saturating_sub(self.kh) / self.stride + 1
+    }
+}
+
+/// Pooling attributes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PoolAttrs {
+    pub kernel: usize,
+    pub stride: usize,
+    pub padding: usize,
+}
+
+impl PoolAttrs {
+    pub fn out_hw(&self, h: usize) -> usize {
+        (h + 2 * self.padding).saturating_sub(self.kernel) / self.stride + 1
+    }
+}
+
+/// One operator call with attributes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Graph input: `channels × hw × hw` image batch.
+    Input { channels: usize, hw: usize },
+    Conv2d(ConvAttrs),
+    BatchNorm { channels: usize },
+    ReLU,
+    Sigmoid,
+    MaxPool(PoolAttrs),
+    AvgPool(PoolAttrs),
+    GlobalAvgPool,
+    Linear { in_features: usize, out_features: usize },
+    /// Elementwise sum of all inputs (residual connections).
+    Add,
+    /// Channel-axis concatenation of all inputs (Inception / DenseNet).
+    Concat,
+    Flatten,
+    Dropout { p_keep_x100: usize },
+    Softmax,
+    /// ShuffleNet channel shuffle.
+    ChannelShuffle { groups: usize },
+    /// Elementwise product (squeeze-and-excitation scaling).
+    Mul,
+}
+
+impl OpKind {
+    pub fn input(channels: usize, hw: usize) -> OpKind {
+        OpKind::Input { channels, hw }
+    }
+
+    /// Standard convolution, bias folded into BN by convention (bias=false).
+    pub fn conv(in_ch: usize, out_ch: usize, k: usize, stride: usize, padding: usize) -> OpKind {
+        OpKind::Conv2d(ConvAttrs {
+            in_ch,
+            out_ch,
+            kh: k,
+            kw: k,
+            stride,
+            padding,
+            groups: 1,
+            bias: true,
+        })
+    }
+
+    pub fn conv_nobias(in_ch: usize, out_ch: usize, k: usize, stride: usize, padding: usize) -> OpKind {
+        OpKind::Conv2d(ConvAttrs {
+            in_ch,
+            out_ch,
+            kh: k,
+            kw: k,
+            stride,
+            padding,
+            groups: 1,
+            bias: false,
+        })
+    }
+
+    pub fn conv_grouped(
+        in_ch: usize,
+        out_ch: usize,
+        k: usize,
+        stride: usize,
+        padding: usize,
+        groups: usize,
+    ) -> OpKind {
+        assert!(in_ch % groups == 0 && out_ch % groups == 0);
+        OpKind::Conv2d(ConvAttrs {
+            in_ch,
+            out_ch,
+            kh: k,
+            kw: k,
+            stride,
+            padding,
+            groups,
+            bias: false,
+        })
+    }
+
+    /// Depthwise convolution.
+    pub fn dwconv(ch: usize, k: usize, stride: usize, padding: usize) -> OpKind {
+        OpKind::Conv2d(ConvAttrs {
+            in_ch: ch,
+            out_ch: ch,
+            kh: k,
+            kw: k,
+            stride,
+            padding,
+            groups: ch,
+            bias: false,
+        })
+    }
+
+    pub fn maxpool(kernel: usize, stride: usize) -> OpKind {
+        OpKind::MaxPool(PoolAttrs {
+            kernel,
+            stride,
+            padding: 0,
+        })
+    }
+
+    pub fn avgpool(kernel: usize, stride: usize) -> OpKind {
+        OpKind::AvgPool(PoolAttrs {
+            kernel,
+            stride,
+            padding: 0,
+        })
+    }
+
+    /// Operator type (NSM index).
+    pub fn ty(&self) -> OpType {
+        match self {
+            OpKind::Input { .. } => OpType::Input,
+            OpKind::Conv2d(_) => OpType::Conv2d,
+            OpKind::BatchNorm { .. } => OpType::BatchNorm,
+            OpKind::ReLU => OpType::ReLU,
+            OpKind::Sigmoid => OpType::Sigmoid,
+            OpKind::MaxPool(_) => OpType::MaxPool,
+            OpKind::AvgPool(_) => OpType::AvgPool,
+            OpKind::GlobalAvgPool => OpType::GlobalAvgPool,
+            OpKind::Linear { .. } => OpType::Linear,
+            OpKind::Add => OpType::Add,
+            OpKind::Concat => OpType::Concat,
+            OpKind::Flatten => OpType::Flatten,
+            OpKind::Dropout { .. } => OpType::Dropout,
+            OpKind::Softmax => OpType::Softmax,
+            OpKind::ChannelShuffle { .. } => OpType::ChannelShuffle,
+            OpKind::Mul => OpType::Mul,
+        }
+    }
+
+    /// Trainable parameter count of this call.
+    pub fn param_count(&self) -> u64 {
+        match self {
+            OpKind::Conv2d(c) => c.params(),
+            OpKind::BatchNorm { channels } => 2 * *channels as u64,
+            OpKind::Linear {
+                in_features,
+                out_features,
+            } => (*in_features as u64) * (*out_features as u64) + *out_features as u64,
+            _ => 0,
+        }
+    }
+
+    /// Hash of the attributes (for graph fingerprints).
+    pub fn attr_hash(&self) -> u64 {
+        fn mix(h: u64, x: u64) -> u64 {
+            (h ^ x).wrapping_mul(0x1000_0000_01b3)
+        }
+        let h = 0xcbf2_9ce4_8422_2325u64;
+        match self {
+            OpKind::Input { channels, hw } => mix(mix(h, *channels as u64), *hw as u64),
+            OpKind::Conv2d(c) => {
+                let mut v = h;
+                for x in [c.in_ch, c.out_ch, c.kh, c.kw, c.stride, c.padding, c.groups] {
+                    v = mix(v, x as u64);
+                }
+                mix(v, c.bias as u64)
+            }
+            OpKind::BatchNorm { channels } => mix(h, *channels as u64),
+            OpKind::MaxPool(p) | OpKind::AvgPool(p) => {
+                mix(mix(mix(h, p.kernel as u64), p.stride as u64), p.padding as u64)
+            }
+            OpKind::Linear {
+                in_features,
+                out_features,
+            } => mix(mix(h, *in_features as u64), *out_features as u64),
+            OpKind::Dropout { p_keep_x100 } => mix(h, *p_keep_x100 as u64),
+            OpKind::ChannelShuffle { groups } => mix(h, *groups as u64),
+            _ => h,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_types_distinct_and_indexed() {
+        for (i, t) in OpType::ALL.iter().enumerate() {
+            assert_eq!(*t as usize, i);
+        }
+        assert_eq!(OpType::ALL.len(), OP_TYPE_COUNT);
+    }
+
+    #[test]
+    fn conv_params() {
+        // 3x3 conv, 64->128, bias: 64*128*9 + 128.
+        let c = ConvAttrs {
+            in_ch: 64,
+            out_ch: 128,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            padding: 1,
+            groups: 1,
+            bias: true,
+        };
+        assert_eq!(c.params(), 64 * 128 * 9 + 128);
+    }
+
+    #[test]
+    fn depthwise_detection() {
+        let OpKind::Conv2d(dw) = OpKind::dwconv(32, 3, 1, 1) else {
+            unreachable!()
+        };
+        assert!(dw.is_depthwise());
+        assert!(!dw.is_pointwise());
+        assert_eq!(dw.params(), 32 * 9);
+    }
+
+    #[test]
+    fn pointwise_detection() {
+        let OpKind::Conv2d(pw) = OpKind::conv_nobias(64, 128, 1, 1, 0) else {
+            unreachable!()
+        };
+        assert!(pw.is_pointwise());
+    }
+
+    #[test]
+    fn conv_out_hw() {
+        let c = ConvAttrs {
+            in_ch: 3,
+            out_ch: 8,
+            kh: 3,
+            kw: 3,
+            stride: 2,
+            padding: 1,
+            groups: 1,
+            bias: false,
+        };
+        assert_eq!(c.out_hw(32), 16);
+        assert_eq!(c.out_hw(224), 112);
+    }
+
+    #[test]
+    fn attr_hash_distinguishes() {
+        let a = OpKind::conv(3, 8, 3, 1, 1).attr_hash();
+        let b = OpKind::conv(3, 8, 3, 2, 1).attr_hash();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,54 @@
+//! # DNNAbacus
+//!
+//! A reproduction of *"DNNAbacus: Toward Accurate Computational Cost
+//! Prediction for Deep Neural Networks"* (Bai et al., 2022) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! DNNAbacus predicts the **training time** and **maximum GPU memory**
+//! of a DNN training job before it runs, from
+//!
+//! * 9 structure-independent features (batch size, input size, FLOPs, …),
+//! * the **Network Structural Matrix** (NSM) — an operator-pair adjacency
+//!   count matrix extracted from the computation graph,
+//!
+//! using an AutoML-selected shallow model (GBDT / random forest /
+//! extra-trees / ridge), with a learned-MLP baseline executed through an
+//! AOT-compiled XLA artifact (JAX + Pallas at build time, PJRT at run
+//! time — Python never on the request path).
+//!
+//! Because this sandbox has no GPU, ground truth comes from [`sim`] — a
+//! faithful simulator of the mechanisms the paper identifies as the
+//! source of cost non-linearity: cuDNN-style convolution-algorithm
+//! selection (GEMM / Winograd / FFT / FFT_TILING) interacting with a
+//! PyTorch-style caching allocator / TF-style BFC arena. See DESIGN.md.
+//!
+//! ## Layout
+//!
+//! * [`graph`] — computation-graph IR, shape inference, FLOPs/params.
+//! * [`zoo`] — builders for the paper's 29 networks, the 5 unseen
+//!   networks, and the random model generator.
+//! * [`sim`] — the GPU training simulator (ground-truth oracle).
+//! * [`features`] — structure-independent features, NSM, graph2vec-lite.
+//! * [`predictor`] — learned predictors + AutoML + baselines.
+//! * [`profiler`] — dataset collection sweeps.
+//! * [`runtime`] — PJRT loader/executor for `artifacts/*.hlo.txt`.
+//! * [`coordinator`] — the online prediction service (queue + batcher).
+//! * [`scheduler`] — the §4.3 genetic-algorithm job scheduler.
+//! * [`experiments`] — one regeneration harness per paper figure/table.
+//! * [`util`] — support substrates (PRNG, JSON, stats, CLI, threads).
+
+pub mod util;
+pub mod graph;
+pub mod zoo;
+pub mod sim;
+pub mod features;
+pub mod predictor;
+pub mod profiler;
+pub mod runtime;
+pub mod coordinator;
+pub mod scheduler;
+pub mod experiments;
+pub mod bench_harness;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,247 @@
+//! `dnnabacus` — the command-line launcher.
+//!
+//! ```text
+//! dnnabacus <command> [--flags]
+//!
+//! Experiments (regenerate the paper's tables/figures):
+//!   table1 fig1 fig2 fig3 fig4 fig8 fig9 fig10 fig11 fig12 fig13 fig14
+//!   headline        overall test MRE (paper: 0.9% time / 2.8% memory)
+//!   all             every experiment above except fig13 (slow)
+//!
+//! Pipeline:
+//!   collect         run the profiling sweeps, write dataset JSON
+//!   train           train AutoML predictors, write model JSON
+//!   predict         predict one (model, config) cost
+//!   serve           run the prediction service demo (load generator)
+//!   nsm-demo        print the NSM of a model (paper Figures 6-7)
+//!
+//! Common flags: --scale 0.35 --seed 42 --out dir --model vgg16
+//!               --batch 128 --dataset cifar100|mnist --device rtx2080
+//!               --framework pytorch|tensorflow --backend automl|mlp
+//! ```
+
+use dnnabacus::coordinator::{
+    service::{AutoMlBackend, MlpBackend},
+    PredictRequest, PredictionService, ServiceConfig,
+};
+use dnnabacus::experiments::{self, Ctx};
+use dnnabacus::features::Nsm;
+use dnnabacus::predictor::{AutoMl, Target};
+use dnnabacus::sim::{DatasetKind, DeviceProfile, Framework, Optimizer, TrainConfig};
+use dnnabacus::util::cli::Args;
+use dnnabacus::zoo;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.command.as_deref() {
+        Some("all") => run_all(&args),
+        Some("collect") => collect(&args),
+        Some("train") => train(&args),
+        Some("predict") => predict(&args),
+        Some("serve") => serve(&args),
+        Some("nsm-demo") => nsm_demo(&args),
+        Some(cmd) => run_experiment(cmd, &args),
+        None => {
+            eprintln!("usage: dnnabacus <command> [--flags]; see the README");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn ctx_from(args: &Args) -> Ctx {
+    Ctx {
+        scale: args.f64_or("scale", 0.25),
+        seed: args.u64_or("seed", 0xDA7A),
+        cache_dir: Some(PathBuf::from(
+            args.str_or("cache-dir", "target/dnnabacus-cache"),
+        )),
+    }
+}
+
+fn run_experiment(name: &str, args: &Args) -> anyhow::Result<()> {
+    let ctx = ctx_from(args);
+    for table in experiments::run(name, &ctx)? {
+        println!("{}", table.render());
+        if args.bool("csv") {
+            println!("{}", table.to_csv());
+        }
+    }
+    Ok(())
+}
+
+fn run_all(args: &Args) -> anyhow::Result<()> {
+    let ctx = ctx_from(args);
+    for name in experiments::ALL_EXPERIMENTS {
+        println!("==== {name} ====");
+        for table in experiments::run(name, &ctx)? {
+            println!("{}", table.render());
+        }
+    }
+    println!("==== headline ====");
+    for table in experiments::run("headline", &ctx)? {
+        println!("{}", table.render());
+    }
+    Ok(())
+}
+
+fn collect(args: &Args) -> anyhow::Result<()> {
+    let ctx = ctx_from(args);
+    let out = PathBuf::from(args.str_or("out", "target/dnnabacus-data"));
+    std::fs::create_dir_all(&out)?;
+    let classic = ctx.classic_dataset();
+    classic.save(&out.join("classic.json"))?;
+    println!(
+        "classic sweep: {} points -> {}",
+        classic.len(),
+        out.join("classic.json").display()
+    );
+    let random = ctx.random_dataset();
+    random.save(&out.join("random.json"))?;
+    println!("random sweep: {} points", random.len());
+    let unseen = ctx.unseen_dataset();
+    unseen.save(&out.join("unseen.json"))?;
+    println!("unseen sweep: {} points", unseen.len());
+    Ok(())
+}
+
+fn train(args: &Args) -> anyhow::Result<()> {
+    let ctx = ctx_from(args);
+    let out = PathBuf::from(args.str_or("out", "target/dnnabacus-models"));
+    std::fs::create_dir_all(&out)?;
+    let corpus = ctx.training_corpus();
+    let (train, test) = corpus.split(0.7, ctx.seed);
+    for target in [Target::Time, Target::Memory] {
+        let m = AutoMl::train_opt(&train, target, ctx.seed, ctx.scale < 0.3);
+        let path = out.join(format!("{}.json", target.name()));
+        m.save(&path)?;
+        println!(
+            "{}: winner={} test-MRE={:.2}% -> {}",
+            target.name(),
+            m.report.winner.name(),
+            m.mre_on(&test) * 100.0,
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+fn parse_config(args: &Args) -> anyhow::Result<TrainConfig> {
+    let dataset = match args.str_or("dataset", "cifar100").as_str() {
+        "mnist" => DatasetKind::Mnist,
+        _ => DatasetKind::Cifar100,
+    };
+    Ok(TrainConfig {
+        dataset,
+        batch: args.usize_or("batch", 128),
+        data_fraction: args.f64_or("data-fraction", 0.1),
+        epochs: args.usize_or("epochs", 1),
+        lr: args.f64_or("lr", 0.1),
+        optimizer: Optimizer::by_name(&args.str_or("optimizer", "sgd-momentum"))?,
+        framework: match args.str_or("framework", "pytorch").as_str() {
+            "tensorflow" => Framework::TfSim,
+            _ => Framework::TorchSim,
+        },
+        device: DeviceProfile::by_name(&args.str_or("device", "rtx2080"))?,
+        seed: args.u64_or("seed", 0),
+    })
+}
+
+fn predict(args: &Args) -> anyhow::Result<()> {
+    let ctx = ctx_from(args);
+    let model_name = args.str_or("model", "vgg16");
+    let cfg = parse_config(args)?;
+    let corpus = ctx.training_corpus();
+    let time_model = AutoMl::train_opt(&corpus, Target::Time, ctx.seed, true);
+    let mem_model = AutoMl::train_opt(&corpus, Target::Memory, ctx.seed, true);
+    let g = zoo::build(&model_name, cfg.dataset.in_channels(), cfg.dataset.classes())?;
+    let f = dnnabacus::features::feature_vector(&g, &cfg, dnnabacus::features::StructureRep::Nsm);
+    let (pt, pm) = (time_model.predict(&f), mem_model.predict(&f));
+    println!(
+        "predicted: time {:.2}s, memory {:.0} MiB",
+        pt,
+        pm / (1u64 << 20) as f64
+    );
+    match dnnabacus::sim::simulate_training(&g, &cfg) {
+        Ok(m) => println!(
+            "simulated: time {:.2}s, memory {:.0} MiB  (rel err {:.2}% / {:.2}%)",
+            m.total_time,
+            (m.peak_mem >> 20) as f64,
+            ((pt - m.total_time) / m.total_time).abs() * 100.0,
+            ((pm - m.peak_mem as f64) / m.peak_mem as f64).abs() * 100.0
+        ),
+        Err(e) => println!("simulated: {e}"),
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let ctx = ctx_from(args);
+    let n_requests = args.usize_or("requests", 256);
+    let backend: Arc<dyn dnnabacus::coordinator::CostModel> =
+        match args.str_or("backend", "automl").as_str() {
+            "mlp" => Arc::new(MlpBackend::spawn(ctx.seed)?),
+            _ => {
+                let corpus = ctx.training_corpus();
+                Arc::new(AutoMlBackend {
+                    time_model: AutoMl::train_opt(&corpus, Target::Time, ctx.seed, true),
+                    memory_model: AutoMl::train_opt(&corpus, Target::Memory, ctx.seed, true),
+                })
+            }
+        };
+    println!("backend: {}", backend.name());
+    let svc = PredictionService::start(ServiceConfig::default(), backend);
+    let names: Vec<&str> = zoo::CLASSIC_29.iter().map(|(n, _)| *n).collect();
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|i| {
+            let cfg = TrainConfig::paper_default(
+                if i % 2 == 0 {
+                    DatasetKind::Cifar100
+                } else {
+                    DatasetKind::Mnist
+                },
+                32 + (i % 8) * 32,
+            );
+            svc.submit(PredictRequest {
+                id: i as u64,
+                model: names[i % names.len()].to_string(),
+                config: cfg,
+            })
+        })
+        .collect();
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let m = svc.shutdown();
+    println!(
+        "served {ok}/{n_requests} in {elapsed:.2}s ({:.0} req/s) | p50 {:.2}ms p99 {:.2}ms | mean batch {:.1}",
+        ok as f64 / elapsed,
+        m.p50_latency_s * 1e3,
+        m.p99_latency_s * 1e3,
+        m.mean_batch_size
+    );
+    Ok(())
+}
+
+fn nsm_demo(args: &Args) -> anyhow::Result<()> {
+    let model = args.str_or("model", "resnet18");
+    let g = zoo::build(&model, 3, 100)?;
+    let nsm = Nsm::build(&g);
+    println!(
+        "NSM of {model} ({} nodes, {} edges):",
+        g.len(),
+        g.edge_count()
+    );
+    println!("{}", nsm.render());
+    Ok(())
+}

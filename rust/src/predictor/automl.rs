@@ -1,0 +1,260 @@
+//! The AutoML selection loop (paper §3.3): train every candidate family,
+//! score each on a validation split by MRE, keep the winner — the same
+//! select-best-by-validation policy as AutoGluon restricted to shallow
+//! models.
+//!
+//! Targets are modeled in log space; [`AutoMl::predict`] exponentiates
+//! back, so reported MREs are on the raw seconds / bytes.
+
+use super::dataset::{Dataset, Target};
+use super::forest::{Forest, ForestParams};
+use super::gbdt::{Gbdt, GbdtParams};
+use super::linear::Ridge;
+use super::Regressor;
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Candidate families.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    Gbdt,
+    RandomForest,
+    ExtraTrees,
+    Ridge,
+}
+
+impl ModelKind {
+    pub const ALL: [ModelKind; 4] = [
+        ModelKind::Gbdt,
+        ModelKind::RandomForest,
+        ModelKind::ExtraTrees,
+        ModelKind::Ridge,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Gbdt => "gbdt",
+            ModelKind::RandomForest => "random-forest",
+            ModelKind::ExtraTrees => "extra-trees",
+            ModelKind::Ridge => "ridge",
+        }
+    }
+
+    fn train(self, xs: &[Vec<f64>], ys: &[f64], seed: u64, fast: bool) -> Box<dyn Regressor> {
+        match self {
+            ModelKind::Gbdt => {
+                let params = if fast { GbdtParams::small() } else { GbdtParams::default() };
+                Box::new(Gbdt::train(xs, ys, &params, seed))
+            }
+            ModelKind::RandomForest => {
+                let params = if fast {
+                    ForestParams::small(false)
+                } else {
+                    ForestParams::random_forest()
+                };
+                Box::new(Forest::train(xs, ys, &params, seed))
+            }
+            ModelKind::ExtraTrees => {
+                let params = if fast {
+                    ForestParams::small(true)
+                } else {
+                    ForestParams::extra_trees()
+                };
+                Box::new(Forest::train(xs, ys, &params, seed))
+            }
+            ModelKind::Ridge => Box::new(Ridge::train(xs, ys, 10.0)),
+        }
+    }
+}
+
+/// Per-candidate validation score.
+#[derive(Debug, Clone)]
+pub struct AutoMlReport {
+    pub target: Target,
+    /// (family, validation MRE) for every candidate.
+    pub scores: Vec<(ModelKind, f64)>,
+    pub winner: ModelKind,
+}
+
+/// A trained cost predictor for one target.
+pub struct AutoMl {
+    pub target: Target,
+    pub model: Box<dyn Regressor>,
+    pub report: AutoMlReport,
+}
+
+impl AutoMl {
+    /// Train on `data` with an internal validation split; the returned
+    /// model is refit on the full `data` with the winning family.
+    pub fn train(data: &Dataset, target: Target, seed: u64) -> AutoMl {
+        Self::train_opt(data, target, seed, false)
+    }
+
+    /// `fast = true` uses the small hyperparameters (tests, smoke runs).
+    pub fn train_opt(data: &Dataset, target: Target, seed: u64, fast: bool) -> AutoMl {
+        assert!(data.len() >= 10, "need at least 10 points");
+        let (tr, val) = data.split(0.8, seed ^ 0xA7);
+        let (trx, try_) = tr.xy(target);
+        let val_raw = val.raw_targets(target);
+        let (valx, _) = val.xy(target);
+        let mut scores = Vec::new();
+        for kind in ModelKind::ALL {
+            let m = kind.train(&trx, &try_, seed, fast);
+            let pred: Vec<f64> = valx.iter().map(|x| m.predict_one(x).exp()).collect();
+            scores.push((kind, stats::mre(&pred, &val_raw)));
+        }
+        let winner = scores
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap()
+            .0;
+        // Refit winner on all data.
+        let (x, y) = data.xy(target);
+        let model = winner.train(&x, &y, seed, fast);
+        AutoMl {
+            target,
+            model,
+            report: AutoMlReport {
+                target,
+                scores,
+                winner,
+            },
+        }
+    }
+
+    /// Predict the raw-space target for a feature vector.
+    pub fn predict(&self, features: &[f64]) -> f64 {
+        self.model.predict_one(features).exp()
+    }
+
+    /// MRE of this predictor over a dataset.
+    pub fn mre_on(&self, data: &Dataset) -> f64 {
+        let pred: Vec<f64> = data.points.iter().map(|p| self.predict(&p.features)).collect();
+        stats::mre(&pred, &data.raw_targets(self.target))
+    }
+
+    /// Per-model MRE breakdown (the bars of Figures 8–11).
+    pub fn mre_per_model(&self, data: &Dataset) -> Vec<(String, f64)> {
+        data.model_names()
+            .into_iter()
+            .map(|name| {
+                let sub = data.filter_model(&name);
+                (name, self.mre_on(&sub))
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("target", self.target.name())
+            .set("winner", self.report.winner.name())
+            .set("model", self.model.to_json());
+        o
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<AutoMl> {
+        let target = match j.str("target")? {
+            "time" => Target::Time,
+            _ => Target::Memory,
+        };
+        let model = super::regressor_from_json(
+            j.get("model").ok_or_else(|| anyhow::anyhow!("missing model"))?,
+        )?;
+        let winner = ModelKind::ALL
+            .into_iter()
+            .find(|k| k.name() == j.str("winner").unwrap_or("gbdt"))
+            .unwrap_or(ModelKind::Gbdt);
+        Ok(AutoMl {
+            target,
+            model,
+            report: AutoMlReport {
+                target,
+                scores: vec![],
+                winner,
+            },
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<AutoMl> {
+        AutoMl::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::dataset::DataPoint;
+    use crate::util::prng::Rng;
+
+    /// Synthetic dataset whose time/memory follow a nonlinear function of
+    /// the features, mimicking the simulator's structure.
+    fn fake_dataset(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let batch = 16.0 + rng.below(500) as f64;
+                let flops = rng.range_f64(15.0, 25.0);
+                let params = rng.range_f64(12.0, 19.0);
+                let time = 0.01 * batch.sqrt() * flops + 5.0 * ((batch > 128.0) as u64 as f64);
+                let mem = 1e6 * (batch * params + 300.0);
+                DataPoint {
+                    model: format!("m{}", i % 7),
+                    framework: "pytorch",
+                    device: "rtx2080",
+                    batch: batch as usize,
+                    features: vec![batch, flops, params, rng.f64()],
+                    time,
+                    memory: mem,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn trains_and_beats_20_percent_mre() {
+        let data = fake_dataset(600, 41);
+        let (tr, te) = data.split(0.7, 1);
+        let m = AutoMl::train_opt(&tr, Target::Time, 1, true);
+        let mre = m.mre_on(&te);
+        assert!(mre < 0.2, "time MRE {mre}");
+        let m = AutoMl::train_opt(&tr, Target::Memory, 1, true);
+        let mre = m.mre_on(&te);
+        assert!(mre < 0.1, "memory MRE {mre}");
+    }
+
+    #[test]
+    fn report_covers_all_families() {
+        let data = fake_dataset(200, 42);
+        let m = AutoMl::train_opt(&data, Target::Time, 2, true);
+        assert_eq!(m.report.scores.len(), ModelKind::ALL.len());
+        assert!(m
+            .report
+            .scores
+            .iter()
+            .any(|(k, _)| *k == m.report.winner));
+    }
+
+    #[test]
+    fn per_model_breakdown_has_all_models() {
+        let data = fake_dataset(300, 43);
+        let m = AutoMl::train_opt(&data, Target::Memory, 3, true);
+        let per = m.mre_per_model(&data);
+        assert_eq!(per.len(), 7);
+        assert!(per.iter().all(|(_, mre)| mre.is_finite()));
+    }
+
+    #[test]
+    fn persistence_roundtrip() {
+        let data = fake_dataset(150, 44);
+        let m = AutoMl::train_opt(&data, Target::Time, 4, true);
+        let j = m.to_json();
+        let back = AutoMl::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        let x = &data.points[0].features;
+        assert!((m.predict(x) - back.predict(x)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,275 @@
+//! Profiled datasets: (feature vector, time, memory) triples plus the
+//! metadata needed to slice the paper's evaluations (per-model MRE bars,
+//! per-framework figures, unseen-model holdouts).
+
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+
+/// Which target a predictor is trained for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// Total training time (seconds).
+    Time,
+    /// Peak device memory (bytes).
+    Memory,
+}
+
+impl Target {
+    pub fn name(self) -> &'static str {
+        match self {
+            Target::Time => "time",
+            Target::Memory => "memory",
+        }
+    }
+}
+
+/// One profiled training run.
+#[derive(Debug, Clone)]
+pub struct DataPoint {
+    pub model: String,
+    pub framework: &'static str,
+    pub device: &'static str,
+    pub batch: usize,
+    pub features: Vec<f64>,
+    /// Total training time (seconds).
+    pub time: f64,
+    /// Peak memory (bytes).
+    pub memory: f64,
+}
+
+impl DataPoint {
+    pub fn target(&self, t: Target) -> f64 {
+        match t {
+            Target::Time => self.time,
+            Target::Memory => self.memory,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("model", self.model.as_str())
+            .set("framework", self.framework)
+            .set("device", self.device)
+            .set("batch", self.batch)
+            .set("features", self.features.as_slice())
+            .set("time", self.time)
+            .set("memory", self.memory);
+        o
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<DataPoint> {
+        let features = j
+            .arr("features")?
+            .iter()
+            .map(|x| x.as_f64().unwrap_or(0.0))
+            .collect();
+        let fw = match j.str("framework")? {
+            "pytorch" => "pytorch",
+            _ => "tensorflow",
+        };
+        let dev = match j.str("device")? {
+            "rtx2080" => "rtx2080",
+            _ => "rtx3090",
+        };
+        Ok(DataPoint {
+            model: j.str("model")?.to_string(),
+            framework: fw,
+            device: dev,
+            batch: j.num("batch")? as usize,
+            features,
+            time: j.num("time")?,
+            memory: j.num("memory")?,
+        })
+    }
+}
+
+/// A collection of data points with split/serialization helpers.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub points: Vec<DataPoint>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Shuffled train/test split (the paper: 70% train / 30% test).
+    pub fn split(&self, train_fraction: f64, seed: u64) -> (Dataset, Dataset) {
+        let mut idx: Vec<usize> = (0..self.points.len()).collect();
+        Rng::new(seed).shuffle(&mut idx);
+        let cut = ((self.points.len() as f64) * train_fraction).round() as usize;
+        let train = idx[..cut].iter().map(|&i| self.points[i].clone()).collect();
+        let test = idx[cut..].iter().map(|&i| self.points[i].clone()).collect();
+        (Dataset { points: train }, Dataset { points: test })
+    }
+
+    /// Leave-models-out split for the Figure 13 zero-shot evaluation.
+    pub fn split_by_models(&self, holdout: &[&str]) -> (Dataset, Dataset) {
+        let (test, train): (Vec<_>, Vec<_>) = self
+            .points
+            .iter()
+            .cloned()
+            .partition(|p| holdout.contains(&p.model.as_str()));
+        (Dataset { points: train }, Dataset { points: test })
+    }
+
+    /// Restrict to one framework (Figures 8/10 vs 9/11).
+    pub fn filter_framework(&self, fw: &str) -> Dataset {
+        Dataset {
+            points: self
+                .points
+                .iter()
+                .filter(|p| p.framework == fw)
+                .cloned()
+                .collect(),
+        }
+    }
+
+    /// Restrict to one model.
+    pub fn filter_model(&self, model: &str) -> Dataset {
+        Dataset {
+            points: self
+                .points
+                .iter()
+                .filter(|p| p.model == model)
+                .cloned()
+                .collect(),
+        }
+    }
+
+    /// Distinct model names, sorted.
+    pub fn model_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.points.iter().map(|p| p.model.clone()).collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+
+    /// Feature matrix and a chosen target vector (targets in log space —
+    /// see module docs).
+    pub fn xy(&self, target: Target) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let xs = self.points.iter().map(|p| p.features.clone()).collect();
+        let ys = self
+            .points
+            .iter()
+            .map(|p| p.target(target).max(1e-9).ln())
+            .collect();
+        (xs, ys)
+    }
+
+    /// Raw (linear-space) target values.
+    pub fn raw_targets(&self, target: Target) -> Vec<f64> {
+        self.points.iter().map(|p| p.target(target)).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.points.iter().map(|p| p.to_json()).collect())
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Dataset> {
+        let arr = j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("dataset json must be an array"))?;
+        Ok(Dataset {
+            points: arr.iter().map(DataPoint::from_json).collect::<anyhow::Result<_>>()?,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Dataset> {
+        let text = std::fs::read_to_string(path)?;
+        Dataset::from_json(&Json::parse(&text)?)
+    }
+}
+
+impl FromIterator<DataPoint> for Dataset {
+    fn from_iter<T: IntoIterator<Item = DataPoint>>(iter: T) -> Self {
+        Dataset {
+            points: iter.into_iter().collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(model: &str, fw: &'static str, batch: usize) -> DataPoint {
+        DataPoint {
+            model: model.into(),
+            framework: fw,
+            device: "rtx2080",
+            batch,
+            features: vec![batch as f64, 1.0, 2.0],
+            time: batch as f64 * 0.5,
+            memory: batch as f64 * 1e6,
+        }
+    }
+
+    fn sample() -> Dataset {
+        (0..100)
+            .map(|i| {
+                point(
+                    if i % 2 == 0 { "vgg16" } else { "resnet18" },
+                    if i % 3 == 0 { "tensorflow" } else { "pytorch" },
+                    16 + i,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn split_fractions_and_disjoint() {
+        let d = sample();
+        let (tr, te) = d.split(0.7, 9);
+        assert_eq!(tr.len(), 70);
+        assert_eq!(te.len(), 30);
+        let batches: std::collections::BTreeSet<usize> =
+            tr.points.iter().chain(&te.points).map(|p| p.batch).collect();
+        assert_eq!(batches.len(), 100); // nothing lost or duplicated
+    }
+
+    #[test]
+    fn split_by_models_holds_out() {
+        let d = sample();
+        let (tr, te) = d.split_by_models(&["vgg16"]);
+        assert!(tr.points.iter().all(|p| p.model != "vgg16"));
+        assert!(te.points.iter().all(|p| p.model == "vgg16"));
+        assert_eq!(tr.len() + te.len(), d.len());
+    }
+
+    #[test]
+    fn xy_log_space() {
+        let d = sample();
+        let (xs, ys) = d.xy(Target::Memory);
+        assert_eq!(xs.len(), ys.len());
+        assert!((ys[0] - d.points[0].memory.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let d = sample();
+        let j = d.to_json();
+        let back = Dataset::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.len(), d.len());
+        assert_eq!(back.points[7].model, d.points[7].model);
+        assert!((back.points[7].time - d.points[7].time).abs() < 1e-12);
+    }
+
+    #[test]
+    fn framework_filter() {
+        let d = sample();
+        let tf = d.filter_framework("tensorflow");
+        assert!(tf.points.iter().all(|p| p.framework == "tensorflow"));
+        assert!(!tf.is_empty());
+    }
+}

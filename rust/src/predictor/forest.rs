@@ -1,0 +1,180 @@
+//! Random forest and extra-trees regressors — two more of the shallow
+//! families AutoGluon stacks (paper §3.3 lists "Random Forest, Gradient
+//! Boost Decision Tree, and Extra-Trees").
+
+use super::tree::{Binning, Tree, TreeParams};
+use super::Regressor;
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct ForestParams {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub min_leaf: usize,
+    pub feature_fraction: f64,
+    /// Bootstrap rows (random forest) vs full rows (extra-trees).
+    pub bootstrap: bool,
+    /// Extra-trees: random thresholds instead of best splits.
+    pub extra: bool,
+}
+
+impl ForestParams {
+    pub fn random_forest() -> Self {
+        Self {
+            n_trees: 100,
+            max_depth: 14,
+            min_leaf: 2,
+            feature_fraction: 0.4,
+            bootstrap: true,
+            extra: false,
+        }
+    }
+
+    pub fn extra_trees() -> Self {
+        Self {
+            n_trees: 100,
+            max_depth: 16,
+            min_leaf: 2,
+            feature_fraction: 0.6,
+            bootstrap: false,
+            extra: true,
+        }
+    }
+
+    /// Fast configuration for unit tests.
+    pub fn small(extra: bool) -> Self {
+        Self {
+            n_trees: 20,
+            max_depth: 10,
+            min_leaf: 2,
+            feature_fraction: 0.8,
+            bootstrap: !extra,
+            extra,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Forest {
+    pub trees: Vec<Tree>,
+    pub extra: bool,
+}
+
+impl Forest {
+    pub fn train(xs: &[Vec<f64>], ys: &[f64], params: &ForestParams, seed: u64) -> Forest {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let mut rng = Rng::new(seed ^ 0xF0BE57);
+        let tree_params = TreeParams {
+            max_depth: params.max_depth,
+            min_leaf: params.min_leaf,
+            feature_fraction: params.feature_fraction,
+            random_thresholds: params.extra,
+        };
+        let n = xs.len();
+        let all_rows: Vec<usize> = (0..n).collect();
+        let binning = Binning::build(xs, &all_rows);
+        let trees = (0..params.n_trees)
+            .map(|_| {
+                let rows: Vec<usize> = if params.bootstrap {
+                    (0..n).map(|_| rng.below(n)).collect()
+                } else {
+                    (0..n).collect()
+                };
+                Tree::train_prebinned(xs, ys, &rows, &binning, &tree_params, &mut rng)
+            })
+            .collect();
+        Forest {
+            trees,
+            extra: params.extra,
+        }
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Forest> {
+        Ok(Forest {
+            extra: j.get("extra").and_then(Json::as_bool).unwrap_or(false),
+            trees: j
+                .arr("trees")?
+                .iter()
+                .map(Tree::from_json)
+                .collect::<anyhow::Result<_>>()?,
+        })
+    }
+}
+
+impl Regressor for Forest {
+    fn predict_one(&self, x: &[f64]) -> f64 {
+        self.trees.iter().map(|t| t.predict_one(x)).sum::<f64>() / self.trees.len() as f64
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("kind", "forest").set("extra", self.extra).set(
+            "trees",
+            Json::Arr(self.trees.iter().map(|t| t.to_json()).collect()),
+        );
+        o
+    }
+
+    fn name(&self) -> &'static str {
+        if self.extra {
+            "extra-trees"
+        } else {
+            "random-forest"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn rf_fits_synthetic() {
+        let (xs, ys) = super::super::tests::synthetic(500, 21);
+        let m = Forest::train(&xs, &ys, &ForestParams::small(false), 1);
+        assert!(stats::r2(&m.predict(&xs), &ys) > 0.9);
+    }
+
+    #[test]
+    fn extra_trees_fit_synthetic() {
+        let (xs, ys) = super::super::tests::synthetic(500, 22);
+        let m = Forest::train(&xs, &ys, &ForestParams::small(true), 1);
+        assert!(stats::r2(&m.predict(&xs), &ys) > 0.85);
+    }
+
+    #[test]
+    fn averaging_smooths_single_tree_variance() {
+        let (xs, ys) = super::super::tests::synthetic(700, 23);
+        let (trx, tex) = xs.split_at(500);
+        let (try_, tey) = ys.split_at(500);
+        let forest = Forest::train(trx, try_, &ForestParams::small(false), 2);
+        let one = Forest::train(
+            trx,
+            try_,
+            &ForestParams {
+                n_trees: 1,
+                ..ForestParams::small(false)
+            },
+            2,
+        );
+        let rf: Vec<f64> = tex.iter().map(|x| forest.predict_one(x)).collect();
+        let t1: Vec<f64> = tex.iter().map(|x| one.predict_one(x)).collect();
+        assert!(stats::rmse(&rf, tey) < stats::rmse(&t1, tey));
+    }
+
+    #[test]
+    fn names_distinguish_variants() {
+        let (xs, ys) = super::super::tests::synthetic(60, 24);
+        assert_eq!(
+            Forest::train(&xs, &ys, &ForestParams::small(false), 1).name(),
+            "random-forest"
+        );
+        assert_eq!(
+            Forest::train(&xs, &ys, &ForestParams::small(true), 1).name(),
+            "extra-trees"
+        );
+    }
+}

@@ -1,0 +1,182 @@
+//! Gradient-boosted decision trees (squared loss): the model family
+//! AutoGluon most often selects, and — as in the paper — the usual
+//! AutoML winner on this dataset.
+
+use super::tree::{Binning, Tree, TreeParams};
+use super::Regressor;
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct GbdtParams {
+    pub n_trees: usize,
+    pub learning_rate: f64,
+    pub max_depth: usize,
+    pub min_leaf: usize,
+    /// Row subsample per tree (stochastic gradient boosting).
+    pub subsample: f64,
+    pub feature_fraction: f64,
+}
+
+impl Default for GbdtParams {
+    fn default() -> Self {
+        Self {
+            n_trees: 400,
+            learning_rate: 0.06,
+            max_depth: 8,
+            min_leaf: 3,
+            subsample: 0.85,
+            feature_fraction: 0.8,
+        }
+    }
+}
+
+impl GbdtParams {
+    /// Fast configuration for unit tests.
+    pub fn small() -> Self {
+        Self {
+            n_trees: 40,
+            learning_rate: 0.15,
+            max_depth: 5,
+            ..Default::default()
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Gbdt {
+    pub base: f64,
+    pub learning_rate: f64,
+    pub trees: Vec<Tree>,
+}
+
+impl Gbdt {
+    pub fn train(xs: &[Vec<f64>], ys: &[f64], params: &GbdtParams, seed: u64) -> Gbdt {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let mut rng = Rng::new(seed ^ 0x6BD7);
+        let base = ys.iter().sum::<f64>() / ys.len() as f64;
+        let mut pred = vec![base; ys.len()];
+        let mut trees = Vec::with_capacity(params.n_trees);
+        let tree_params = TreeParams {
+            max_depth: params.max_depth,
+            min_leaf: params.min_leaf,
+            feature_fraction: params.feature_fraction,
+            random_thresholds: false,
+        };
+        let all_rows: Vec<usize> = (0..xs.len()).collect();
+        // Bin the feature matrix once for the whole ensemble (§Perf L3
+        // optimization #1).
+        let binning = Binning::build(xs, &all_rows);
+        for _ in 0..params.n_trees {
+            // Residuals are the negative gradient of squared loss.
+            let resid: Vec<f64> = ys.iter().zip(&pred).map(|(y, p)| y - p).collect();
+            let rows: Vec<usize> = if params.subsample < 1.0 {
+                let k = ((xs.len() as f64) * params.subsample).ceil() as usize;
+                rng.sample_indices(xs.len(), k.max(2))
+            } else {
+                all_rows.clone()
+            };
+            let tree = Tree::train_prebinned(xs, &resid, &rows, &binning, &tree_params, &mut rng);
+            for (i, p) in pred.iter_mut().enumerate() {
+                *p += params.learning_rate * tree.predict_one(&xs[i]);
+            }
+            trees.push(tree);
+        }
+        Gbdt {
+            base,
+            learning_rate: params.learning_rate,
+            trees,
+        }
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Gbdt> {
+        Ok(Gbdt {
+            base: j.num("base")?,
+            learning_rate: j.num("lr")?,
+            trees: j
+                .arr("trees")?
+                .iter()
+                .map(Tree::from_json)
+                .collect::<anyhow::Result<_>>()?,
+        })
+    }
+}
+
+impl Regressor for Gbdt {
+    fn predict_one(&self, x: &[f64]) -> f64 {
+        self.base
+            + self.learning_rate
+                * self
+                    .trees
+                    .iter()
+                    .map(|t| t.predict_one(x))
+                    .sum::<f64>()
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("kind", "gbdt")
+            .set("base", self.base)
+            .set("lr", self.learning_rate)
+            .set(
+                "trees",
+                Json::Arr(self.trees.iter().map(|t| t.to_json()).collect()),
+            );
+        o
+    }
+
+    fn name(&self) -> &'static str {
+        "gbdt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn fits_nonlinear_function() {
+        let (xs, ys) = super::super::tests::synthetic(600, 7);
+        let m = Gbdt::train(&xs, &ys, &GbdtParams::small(), 1);
+        let pred = m.predict(&xs);
+        assert!(stats::r2(&pred, &ys) > 0.95, "r2={}", stats::r2(&pred, &ys));
+    }
+
+    #[test]
+    fn generalizes_to_test_split() {
+        let (xs, ys) = super::super::tests::synthetic(800, 8);
+        let (trx, tex) = xs.split_at(600);
+        let (try_, tey) = ys.split_at(600);
+        let m = Gbdt::train(trx, try_, &GbdtParams::small(), 2);
+        let pred: Vec<f64> = tex.iter().map(|x| m.predict_one(x)).collect();
+        assert!(stats::r2(&pred, tey) > 0.85);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (xs, ys) = super::super::tests::synthetic(200, 9);
+        let a = Gbdt::train(&xs, &ys, &GbdtParams::small(), 5);
+        let b = Gbdt::train(&xs, &ys, &GbdtParams::small(), 5);
+        assert_eq!(a.predict_one(&xs[0]), b.predict_one(&xs[0]));
+    }
+
+    #[test]
+    fn more_trees_reduce_training_error() {
+        let (xs, ys) = super::super::tests::synthetic(400, 10);
+        let small = Gbdt::train(
+            &xs,
+            &ys,
+            &GbdtParams {
+                n_trees: 5,
+                ..GbdtParams::small()
+            },
+            3,
+        );
+        let big = Gbdt::train(&xs, &ys, &GbdtParams::small(), 3);
+        let rmse_small = stats::rmse(&small.predict(&xs), &ys);
+        let rmse_big = stats::rmse(&big.predict(&xs), &ys);
+        assert!(rmse_big < rmse_small);
+    }
+}

@@ -1,0 +1,196 @@
+//! Ridge regression (closed form via Cholesky) — the linear member of
+//! the AutoML pool, and a useful sanity floor: if trees can't beat
+//! ridge, the features are broken.
+
+use super::Regressor;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Ridge {
+    /// Weights over standardized features, plus intercept.
+    pub w: Vec<f64>,
+    pub intercept: f64,
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl Ridge {
+    /// Train with L2 penalty `lambda` on standardized features.
+    pub fn train(xs: &[Vec<f64>], ys: &[f64], lambda: f64) -> Ridge {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let n = xs.len();
+        let d = xs[0].len();
+        // Standardize (keeps the normal equations well-conditioned).
+        let mut mean = vec![0.0; d];
+        for x in xs {
+            for (m, v) in mean.iter_mut().zip(x) {
+                *m += v;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        let mut std = vec![0.0; d];
+        for x in xs {
+            for (s, (v, m)) in std.iter_mut().zip(x.iter().zip(&mean)) {
+                *s += (v - m) * (v - m);
+            }
+        }
+        for s in std.iter_mut() {
+            *s = (*s / n as f64).sqrt().max(1e-9);
+        }
+        let z = |x: &[f64], j: usize| (x[j] - mean[j]) / std[j];
+        let ymean = ys.iter().sum::<f64>() / n as f64;
+        // Normal equations A w = b, A = ZᵀZ + λI, b = Zᵀ(y - ȳ).
+        let mut a = vec![vec![0.0f64; d]; d];
+        let mut b = vec![0.0f64; d];
+        for (x, &y) in xs.iter().zip(ys) {
+            for i in 0..d {
+                let zi = z(x, i);
+                b[i] += zi * (y - ymean);
+                for j in i..d {
+                    a[i][j] += zi * z(x, j);
+                }
+            }
+        }
+        for i in 0..d {
+            for j in 0..i {
+                a[i][j] = a[j][i];
+            }
+            a[i][i] += lambda.max(1e-9);
+        }
+        let w = cholesky_solve(&mut a, &b).unwrap_or_else(|| vec![0.0; d]);
+        Ridge {
+            w,
+            intercept: ymean,
+            mean,
+            std,
+        }
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Ridge> {
+        let vecf = |k: &str| -> anyhow::Result<Vec<f64>> {
+            Ok(j.arr(k)?.iter().map(|x| x.as_f64().unwrap_or(0.0)).collect())
+        };
+        Ok(Ridge {
+            w: vecf("w")?,
+            intercept: j.num("intercept")?,
+            mean: vecf("mean")?,
+            std: vecf("std")?,
+        })
+    }
+}
+
+/// In-place Cholesky solve; returns None when not positive-definite.
+fn cholesky_solve(a: &mut [Vec<f64>], b: &[f64]) -> Option<Vec<f64>> {
+    let d = b.len();
+    // Factor A = L Lᵀ (overwrite lower triangle).
+    for i in 0..d {
+        for j in 0..=i {
+            let mut s = a[i][j];
+            for k in 0..j {
+                s -= a[i][k] * a[j][k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                a[i][i] = s.sqrt();
+            } else {
+                a[i][j] = s / a[j][j];
+            }
+        }
+    }
+    // Solve L y = b.
+    let mut y = vec![0.0; d];
+    for i in 0..d {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= a[i][k] * y[k];
+        }
+        y[i] = s / a[i][i];
+    }
+    // Solve Lᵀ w = y.
+    let mut w = vec![0.0; d];
+    for i in (0..d).rev() {
+        let mut s = y[i];
+        for k in i + 1..d {
+            s -= a[k][i] * w[k];
+        }
+        w[i] = s / a[i][i];
+    }
+    Some(w)
+}
+
+impl Regressor for Ridge {
+    fn predict_one(&self, x: &[f64]) -> f64 {
+        self.intercept
+            + self
+                .w
+                .iter()
+                .enumerate()
+                .map(|(j, w)| w * (x[j] - self.mean[j]) / self.std[j])
+                .sum::<f64>()
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("kind", "ridge")
+            .set("w", self.w.as_slice())
+            .set("intercept", self.intercept)
+            .set("mean", self.mean.as_slice())
+            .set("std", self.std.as_slice());
+        o
+    }
+
+    fn name(&self) -> &'static str {
+        "ridge"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::stats;
+
+    #[test]
+    fn recovers_linear_coefficients() {
+        let mut rng = Rng::new(31);
+        let xs: Vec<Vec<f64>> = (0..500)
+            .map(|_| (0..3).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x[0] - 0.5 * x[1] + 4.0).collect();
+        let m = Ridge::train(&xs, &ys, 1e-6);
+        let pred = m.predict(&xs);
+        assert!(stats::rmse(&pred, &ys) < 1e-6);
+    }
+
+    #[test]
+    fn lambda_shrinks_weights() {
+        let (xs, ys) = super::super::tests::synthetic(300, 32);
+        let loose = Ridge::train(&xs, &ys, 1e-6);
+        let tight = Ridge::train(&xs, &ys, 1e4);
+        let norm = |w: &[f64]| w.iter().map(|x| x * x).sum::<f64>();
+        assert!(norm(&tight.w) < norm(&loose.w));
+    }
+
+    #[test]
+    fn handles_constant_feature() {
+        let mut xs: Vec<Vec<f64>> = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..100 {
+            xs.push(vec![i as f64, 1.0]); // second feature constant
+            ys.push(3.0 * i as f64);
+        }
+        let m = Ridge::train(&xs, &ys, 1.0);
+        assert!((m.predict_one(&[50.0, 1.0]) - 150.0).abs() < 2.0);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = vec![vec![0.0, 1.0], vec![1.0, 0.0]];
+        assert!(cholesky_solve(&mut a, &[1.0, 1.0]).is_none());
+    }
+}

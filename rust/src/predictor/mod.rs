@@ -1,0 +1,89 @@
+//! Learned cost predictors + the AutoML selection loop (paper §3.3) and
+//! the two comparison baselines (§4.1: shape inference and MLP).
+//!
+//! The paper feeds its features to AutoGluon and keeps the shallow model
+//! with the lowest test MRE. We reproduce the same loop over the model
+//! families AutoGluon stacks — histogram-GBDT, random forest,
+//! extra-trees and a ridge linear model — all implemented here, trained
+//! on `ln(target)` (time in seconds / memory in bytes span 4 orders of
+//! magnitude across the zoo).
+
+pub mod dataset;
+pub mod tree;
+pub mod gbdt;
+pub mod forest;
+pub mod linear;
+pub mod automl;
+pub mod shape_inference;
+
+pub use automl::{AutoMl, AutoMlReport, ModelKind};
+pub use dataset::{DataPoint, Dataset, Target};
+
+use crate::util::json::Json;
+
+/// A trained regressor over feature vectors.
+pub trait Regressor: Send + Sync {
+    /// Predict the (log-space) target for one feature vector.
+    fn predict_one(&self, x: &[f64]) -> f64;
+
+    /// Vectorized convenience.
+    fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| self.predict_one(x)).collect()
+    }
+
+    /// Serialize for persistence.
+    fn to_json(&self) -> Json;
+
+    /// Model family name.
+    fn name(&self) -> &'static str;
+}
+
+/// Deserialize any regressor written by [`Regressor::to_json`].
+pub fn regressor_from_json(j: &Json) -> anyhow::Result<Box<dyn Regressor>> {
+    match j.str("kind")? {
+        "gbdt" => Ok(Box::new(gbdt::Gbdt::from_json(j)?)),
+        "forest" => Ok(Box::new(forest::Forest::from_json(j)?)),
+        "ridge" => Ok(Box::new(linear::Ridge::from_json(j)?)),
+        other => anyhow::bail!("unknown regressor kind '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// Shared synthetic regression task: y = 3x0 - 2x1 + x2² + noise.
+    pub fn synthetic(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let xs: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..5).map(|_| rng.range_f64(-2.0, 2.0)).collect())
+            .collect();
+        let ys = xs
+            .iter()
+            .map(|x| 3.0 * x[0] - 2.0 * x[1] + x[2] * x[2] + 0.01 * rng.normal())
+            .collect();
+        (xs, ys)
+    }
+
+    #[test]
+    fn roundtrip_all_regressor_kinds() {
+        let (xs, ys) = synthetic(200, 1);
+        let models: Vec<Box<dyn Regressor>> = vec![
+            Box::new(gbdt::Gbdt::train(&xs, &ys, &gbdt::GbdtParams::small(), 1)),
+            Box::new(forest::Forest::train(&xs, &ys, &forest::ForestParams::small(false), 1)),
+            Box::new(linear::Ridge::train(&xs, &ys, 1.0)),
+        ];
+        for m in models {
+            let j = m.to_json();
+            let back = regressor_from_json(&j).unwrap();
+            for x in xs.iter().take(10) {
+                assert!(
+                    (m.predict_one(x) - back.predict_one(x)).abs() < 1e-9,
+                    "{} roundtrip",
+                    m.name()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,437 @@
+//! Histogram-based regression trees — the shared building block of the
+//! GBDT and forest models. Splits minimize child variance over 32
+//! quantile bins per feature (LightGBM-style), which keeps training
+//! tractable on the 20k-point datasets with 270 features.
+
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+
+/// Bins per feature.
+const BINS: usize = 32;
+
+#[derive(Debug, Clone)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub min_leaf: usize,
+    /// Features considered per split: `(d as f64 * feature_fraction)`.
+    pub feature_fraction: f64,
+    /// Extra-trees mode: one random threshold per feature instead of the
+    /// best histogram split.
+    pub random_thresholds: bool,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        Self {
+            max_depth: 8,
+            min_leaf: 4,
+            feature_fraction: 1.0,
+            random_thresholds: false,
+        }
+    }
+}
+
+/// Flat node array; `left == usize::MAX` marks a leaf.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub feature: usize,
+    pub threshold: f64,
+    pub left: usize,
+    pub right: usize,
+    pub value: f64,
+}
+
+const LEAF: usize = usize::MAX;
+
+#[derive(Debug, Clone)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+}
+
+impl Tree {
+    /// Train on `(xs, ys)` restricted to `rows`.
+    pub fn train(
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        rows: &[usize],
+        params: &TreeParams,
+        rng: &mut Rng,
+    ) -> Tree {
+        let binned = Binning::build(xs, rows);
+        Tree::train_prebinned(xs, ys, rows, &binned, params, rng)
+    }
+
+    /// Train against a shared [`Binning`] — ensembles (GBDT / forests)
+    /// bin the matrix once and train every tree against it instead of
+    /// re-binning per tree: §Perf L3 optimization #1.
+    pub fn train_prebinned(
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        rows: &[usize],
+        binned: &Binning,
+        params: &TreeParams,
+        rng: &mut Rng,
+    ) -> Tree {
+        assert!(!rows.is_empty(), "empty training set");
+        let mut tree = Tree { nodes: Vec::new() };
+        tree.grow(xs, ys, rows.to_vec(), &binned.edges, binned, params, 0, rng);
+        tree
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn grow(
+        &mut self,
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        rows: Vec<usize>,
+        edges: &[Vec<f64>],
+        binned: &Binning,
+        params: &TreeParams,
+        depth: usize,
+        rng: &mut Rng,
+    ) -> usize {
+        let mean = rows.iter().map(|&r| ys[r]).sum::<f64>() / rows.len() as f64;
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            feature: 0,
+            threshold: 0.0,
+            left: LEAF,
+            right: LEAF,
+            value: mean,
+        });
+        if depth >= params.max_depth || rows.len() < 2 * params.min_leaf {
+            return id;
+        }
+        let Some((feat, thr)) = best_split(xs, ys, &rows, edges, binned, params, rng) else {
+            return id;
+        };
+        let (lrows, rrows): (Vec<usize>, Vec<usize>) =
+            rows.into_iter().partition(|&r| xs[r][feat] <= thr);
+        if lrows.len() < params.min_leaf || rrows.len() < params.min_leaf {
+            return id;
+        }
+        let left = self.grow(xs, ys, lrows, edges, binned, params, depth + 1, rng);
+        let right = self.grow(xs, ys, rrows, edges, binned, params, depth + 1, rng);
+        self.nodes[id].feature = feat;
+        self.nodes[id].threshold = thr;
+        self.nodes[id].left = left;
+        self.nodes[id].right = right;
+        id
+    }
+
+    pub fn predict_one(&self, x: &[f64]) -> f64 {
+        let mut i = 0;
+        loop {
+            let n = &self.nodes[i];
+            if n.left == LEAF {
+                return n.value;
+            }
+            i = if x[n.feature] <= n.threshold {
+                n.left
+            } else {
+                n.right
+            };
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        fn d(nodes: &[Node], i: usize) -> usize {
+            if nodes[i].left == LEAF {
+                1
+            } else {
+                1 + d(nodes, nodes[i].left).max(d(nodes, nodes[i].right))
+            }
+        }
+        d(&self.nodes, 0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.nodes
+                .iter()
+                .map(|n| {
+                    let mut o = Json::obj();
+                    o.set("f", n.feature)
+                        .set("t", n.threshold)
+                        .set("l", if n.left == LEAF { -1i64 } else { n.left as i64 })
+                        .set("r", if n.right == LEAF { -1i64 } else { n.right as i64 })
+                        .set("v", n.value);
+                    o
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Tree> {
+        let arr = j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("tree json must be an array"))?;
+        let nodes = arr
+            .iter()
+            .map(|o| {
+                let idx = |k: &str| -> anyhow::Result<usize> {
+                    let v = o.num(k)?;
+                    Ok(if v < 0.0 { LEAF } else { v as usize })
+                };
+                Ok(Node {
+                    feature: o.num("f")? as usize,
+                    threshold: o.num("t")?,
+                    left: idx("l")?,
+                    right: idx("r")?,
+                    value: o.num("v")?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Tree { nodes })
+    }
+}
+
+/// Quantile bin edges per feature (≤ BINS-1 thresholds each).
+fn bin_edges(xs: &[Vec<f64>], rows: &[usize], dim: usize) -> Vec<Vec<f64>> {
+    let sample: Vec<usize> = if rows.len() > 2048 {
+        rows.iter().step_by(rows.len() / 2048 + 1).cloned().collect()
+    } else {
+        rows.to_vec()
+    };
+    (0..dim)
+        .map(|f| {
+            let mut vals: Vec<f64> = sample.iter().map(|&r| xs[r][f]).collect();
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.dedup();
+            if vals.len() <= 1 {
+                return Vec::new();
+            }
+            let mut edges = Vec::with_capacity(BINS - 1);
+            for b in 1..BINS {
+                let pos = b * (vals.len() - 1) / BINS;
+                let e = (vals[pos] + vals[(pos + 1).min(vals.len() - 1)]) / 2.0;
+                if edges.last().map(|&l: &f64| e > l).unwrap_or(true) {
+                    edges.push(e);
+                }
+            }
+            edges
+        })
+        .collect()
+}
+
+/// Quantile bin edges + row-major pre-binned feature matrix (u8 bin ids
+/// per (row, feature)), shared across an ensemble's trees.
+pub struct Binning {
+    pub edges: Vec<Vec<f64>>,
+    bins: Vec<u8>,
+    dim: usize,
+}
+
+impl Binning {
+    /// Compute edges from `rows` and bin the full matrix.
+    pub fn build(xs: &[Vec<f64>], rows: &[usize]) -> Binning {
+        let dim = xs[0].len();
+        let edges = bin_edges(xs, rows, dim);
+        let mut bins = vec![0u8; xs.len() * dim];
+        for (r, x) in xs.iter().enumerate() {
+            let row = &mut bins[r * dim..(r + 1) * dim];
+            for (f, cell) in row.iter_mut().enumerate() {
+                *cell = edges[f].partition_point(|&e| x[f] > e) as u8;
+            }
+        }
+        Binning { edges, bins, dim }
+    }
+
+    #[inline]
+    fn get(&self, row: usize, feature: usize) -> usize {
+        self.bins[row * self.dim + feature] as usize
+    }
+}
+
+/// Best (feature, threshold) by SSE reduction over histogram bins.
+#[allow(clippy::too_many_arguments)]
+fn best_split(
+    xs: &[Vec<f64>],
+    ys: &[f64],
+    rows: &[usize],
+    edges: &[Vec<f64>],
+    binned: &Binning,
+    params: &TreeParams,
+    rng: &mut Rng,
+) -> Option<(usize, f64)> {
+    let dim = edges.len();
+    let n_feats = ((dim as f64 * params.feature_fraction).ceil() as usize).clamp(1, dim);
+    let feats: Vec<usize> = if n_feats == dim {
+        (0..dim).collect()
+    } else {
+        rng.sample_indices(dim, n_feats)
+    };
+    let total_sum: f64 = rows.iter().map(|&r| ys[r]).sum();
+    let total_n = rows.len() as f64;
+    let mut best: Option<(f64, usize, f64)> = None;
+    for &f in &feats {
+        if edges[f].is_empty() {
+            continue;
+        }
+        if params.random_thresholds {
+            // Extra-trees: a single random threshold in the value range.
+            let lo = edges[f][0];
+            let hi = *edges[f].last().unwrap();
+            let thr = if hi > lo { rng.range_f64(lo, hi) } else { lo };
+            if let Some(gain) = split_gain(xs, ys, rows, f, thr, total_sum, total_n) {
+                if best.map(|(g, _, _)| gain > g).unwrap_or(true) {
+                    best = Some((gain, f, thr));
+                }
+            }
+            continue;
+        }
+        // Histogram pass: accumulate per-bin sums, scan prefix.
+        let nb = edges[f].len() + 1;
+        let mut sum = vec![0.0f64; nb];
+        let mut cnt = vec![0usize; nb];
+        for &r in rows {
+            let b = binned.get(r, f);
+            sum[b] += ys[r];
+            cnt[b] += 1;
+        }
+        let mut lsum = 0.0;
+        let mut lcnt = 0usize;
+        for b in 0..nb - 1 {
+            lsum += sum[b];
+            lcnt += cnt[b];
+            if lcnt == 0 || lcnt == rows.len() {
+                continue;
+            }
+            let rsum = total_sum - lsum;
+            let rcnt = total_n - lcnt as f64;
+            let gain = lsum * lsum / lcnt as f64 + rsum * rsum / rcnt
+                - total_sum * total_sum / total_n;
+            if gain > 1e-12 && best.map(|(g, _, _)| gain > g).unwrap_or(true) {
+                best = Some((gain, f, edges[f][b]));
+            }
+        }
+    }
+    best.map(|(_, f, t)| (f, t))
+}
+
+fn split_gain(
+    xs: &[Vec<f64>],
+    ys: &[f64],
+    rows: &[usize],
+    f: usize,
+    thr: f64,
+    total_sum: f64,
+    total_n: f64,
+) -> Option<f64> {
+    let mut lsum = 0.0;
+    let mut lcnt = 0usize;
+    for &r in rows {
+        if xs[r][f] <= thr {
+            lsum += ys[r];
+            lcnt += 1;
+        }
+    }
+    if lcnt == 0 || lcnt == rows.len() {
+        return None;
+    }
+    let rsum = total_sum - lsum;
+    let rcnt = total_n - lcnt as f64;
+    Some(lsum * lsum / lcnt as f64 + rsum * rsum / rcnt - total_sum * total_sum / total_n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xor_like() -> (Vec<Vec<f64>>, Vec<f64>) {
+        // Step function only a tree can fit.
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..200 {
+            let x = i as f64 / 200.0;
+            xs.push(vec![x, 0.0]);
+            ys.push(if x < 0.5 { 1.0 } else { 5.0 });
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn fits_step_function() {
+        let (xs, ys) = xor_like();
+        let rows: Vec<usize> = (0..xs.len()).collect();
+        let mut rng = Rng::new(1);
+        let t = Tree::train(&xs, &ys, &rows, &TreeParams::default(), &mut rng);
+        assert!((t.predict_one(&[0.2, 0.0]) - 1.0).abs() < 0.05);
+        assert!((t.predict_one(&[0.9, 0.0]) - 5.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn depth_limit_respected() {
+        let (xs, ys) = super::super::tests::synthetic(300, 3);
+        let rows: Vec<usize> = (0..xs.len()).collect();
+        let params = TreeParams {
+            max_depth: 3,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(1);
+        let t = Tree::train(&xs, &ys, &rows, &params, &mut rng);
+        assert!(t.depth() <= 4);
+    }
+
+    #[test]
+    fn min_leaf_respected() {
+        let (xs, ys) = super::super::tests::synthetic(100, 4);
+        let rows: Vec<usize> = (0..xs.len()).collect();
+        let params = TreeParams {
+            min_leaf: 20,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(2);
+        let t = Tree::train(&xs, &ys, &rows, &params, &mut rng);
+        // Count rows reaching each leaf.
+        let mut counts = std::collections::BTreeMap::new();
+        for x in &xs {
+            let mut i = 0;
+            loop {
+                let n = &t.nodes[i];
+                if n.left == LEAF {
+                    *counts.entry(i).or_insert(0usize) += 1;
+                    break;
+                }
+                i = if x[n.feature] <= n.threshold { n.left } else { n.right };
+            }
+        }
+        assert!(counts.values().all(|&c| c >= 20), "{counts:?}");
+    }
+
+    #[test]
+    fn constant_target_single_leaf() {
+        let xs: Vec<Vec<f64>> = (0..50).map(|i| vec![i as f64]).collect();
+        let ys = vec![7.0; 50];
+        let rows: Vec<usize> = (0..50).collect();
+        let mut rng = Rng::new(3);
+        let t = Tree::train(&xs, &ys, &rows, &TreeParams::default(), &mut rng);
+        assert_eq!(t.nodes.len(), 1);
+        assert_eq!(t.predict_one(&[25.0]), 7.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let (xs, ys) = super::super::tests::synthetic(150, 5);
+        let rows: Vec<usize> = (0..xs.len()).collect();
+        let mut rng = Rng::new(4);
+        let t = Tree::train(&xs, &ys, &rows, &TreeParams::default(), &mut rng);
+        let back = Tree::from_json(&Json::parse(&t.to_json().to_string()).unwrap()).unwrap();
+        for x in xs.iter().take(20) {
+            assert_eq!(t.predict_one(x), back.predict_one(x));
+        }
+    }
+
+    #[test]
+    fn random_thresholds_mode_trains() {
+        let (xs, ys) = xor_like();
+        let rows: Vec<usize> = (0..xs.len()).collect();
+        let params = TreeParams {
+            random_thresholds: true,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(6);
+        let t = Tree::train(&xs, &ys, &rows, &params, &mut rng);
+        assert!(t.nodes.len() > 1);
+    }
+}

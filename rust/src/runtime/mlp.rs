@@ -1,0 +1,203 @@
+//! The predictor-MLP bridge: owns the parameter tensors and drives the
+//! AOT-compiled inference and train-step executables from Rust.
+//!
+//! This is the paper's MLP comparison model [27][29] *and* the repo's
+//! proof that the three-layer architecture composes: the MLP was written
+//! in JAX (L2) over a Pallas kernel (L1), lowered once to HLO, and here
+//! trains and serves entirely through PJRT with Python long gone.
+
+use super::pjrt::{Executable, Tensor, XlaRuntime};
+use super::{artifact_path, artifacts_dir, Manifest};
+use crate::util::prng::Rng;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// A ready predictor: parameters + compiled executables.
+pub struct MlpPredictor {
+    pub manifest: Manifest,
+    rt: Arc<XlaRuntime>,
+    /// Flattened parameters: [w0, b0, w1, b1, ...].
+    params: Vec<Tensor>,
+    infer: BTreeMap<usize, Executable>,
+    train: Option<Executable>,
+}
+
+impl MlpPredictor {
+    /// Load artifacts and He-initialize parameters.
+    pub fn new(seed: u64) -> anyhow::Result<MlpPredictor> {
+        let manifest = Manifest::load(&artifacts_dir())?;
+        let rt = XlaRuntime::cpu()?;
+        let mut infer = BTreeMap::new();
+        for &b in &manifest.infer_batches {
+            let exe = rt.load_hlo_text(&artifact_path(&format!("mlp_infer_b{b}.hlo.txt")))?;
+            infer.insert(b, exe);
+        }
+        let train = rt
+            .load_hlo_text(&artifact_path(&format!(
+                "mlp_train_step_b{}.hlo.txt",
+                manifest.train_batch
+            )))
+            .ok();
+        let mut rng = Rng::new(seed ^ 0x3317);
+        let mut params = Vec::new();
+        for &(din, dout) in &manifest.layer_dims {
+            let scale = (2.0 / din as f64).sqrt();
+            let w: Vec<f32> = (0..din * dout)
+                .map(|_| (rng.normal() * scale) as f32)
+                .collect();
+            params.push(Tensor::matrix(din, dout, w));
+            params.push(Tensor::vector(vec![0.0; dout]));
+        }
+        Ok(MlpPredictor {
+            manifest,
+            rt,
+            params,
+            infer,
+            train,
+        })
+    }
+
+    /// Smallest compiled batch ≥ n (or the largest available).
+    pub fn pick_batch(&self, n: usize) -> usize {
+        self.manifest
+            .infer_batches
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| *self.manifest.infer_batches.last().unwrap())
+    }
+
+    /// Predict (ln time, ln memory) rows for up to `pick_batch` inputs;
+    /// inputs are padded to the compiled batch and the padding rows are
+    /// dropped from the result.
+    pub fn predict_batch(&self, features: &[Vec<f64>]) -> anyhow::Result<Vec<[f64; 2]>> {
+        let mut out = Vec::with_capacity(features.len());
+        let max_b = *self.manifest.infer_batches.last().unwrap();
+        for chunk in features.chunks(max_b) {
+            out.extend(self.predict_chunk(chunk)?);
+        }
+        Ok(out)
+    }
+
+    fn predict_chunk(&self, chunk: &[Vec<f64>]) -> anyhow::Result<Vec<[f64; 2]>> {
+        let b = self.pick_batch(chunk.len());
+        let exe = &self.infer[&b];
+        let dim = self.manifest.input_dim;
+        let mut x = vec![0.0f32; b * dim];
+        for (i, f) in chunk.iter().enumerate() {
+            anyhow::ensure!(f.len() == dim, "feature dim {} != {dim}", f.len());
+            for (j, &v) in f.iter().enumerate() {
+                x[i * dim + j] = v as f32;
+            }
+        }
+        let mut args = self.params.clone();
+        args.push(Tensor::matrix(b, dim, x));
+        let result = exe.run(&args)?;
+        let y = &result[0];
+        Ok((0..chunk.len())
+            .map(|i| [y.data[i * 2] as f64, y.data[i * 2 + 1] as f64])
+            .collect())
+    }
+
+    /// One SGD step on a (train_batch × dim) minibatch of features and
+    /// (train_batch × 2) log-targets. Returns the loss.
+    pub fn train_step(&mut self, x: &[Vec<f64>], y: &[[f64; 2]], lr: f32) -> anyhow::Result<f32> {
+        let exe = self
+            .train
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("train-step artifact not loaded"))?;
+        let b = self.manifest.train_batch;
+        anyhow::ensure!(x.len() == b && y.len() == b, "minibatch must be exactly {b}");
+        let dim = self.manifest.input_dim;
+        let xt = Tensor::matrix(
+            b,
+            dim,
+            x.iter()
+                .flat_map(|row| row.iter().map(|&v| v as f32))
+                .collect(),
+        );
+        let yt = Tensor::matrix(
+            b,
+            2,
+            y.iter().flat_map(|r| r.iter().map(|&v| v as f32)).collect(),
+        );
+        let mut args = self.params.clone();
+        args.extend([xt, yt, Tensor::scalar(lr)]);
+        let mut out = exe.run(&args)?;
+        let loss = out
+            .pop()
+            .ok_or_else(|| anyhow::anyhow!("empty train-step result"))?;
+        self.params = out;
+        Ok(loss.data[0])
+    }
+
+    /// The runtime handle (shared for ad-hoc executions).
+    pub fn runtime(&self) -> Arc<XlaRuntime> {
+        Arc::clone(&self.rt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts_available;
+    use crate::util::prng::Rng;
+
+    fn skip() -> bool {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            true
+        } else {
+            false
+        }
+    }
+
+    #[test]
+    fn predict_shapes_and_padding() {
+        if skip() {
+            return;
+        }
+        let p = MlpPredictor::new(1).unwrap();
+        let dim = p.manifest.input_dim;
+        let feats: Vec<Vec<f64>> = (0..5).map(|i| vec![i as f64 * 0.01; dim]).collect();
+        let out = p.predict_batch(&feats).unwrap();
+        assert_eq!(out.len(), 5);
+        assert!(out.iter().all(|r| r.iter().all(|v| v.is_finite())));
+    }
+
+    #[test]
+    fn train_step_reduces_loss_through_pjrt() {
+        if skip() {
+            return;
+        }
+        let mut p = MlpPredictor::new(2).unwrap();
+        let b = p.manifest.train_batch;
+        let dim = p.manifest.input_dim;
+        let mut rng = Rng::new(3);
+        let x: Vec<Vec<f64>> = (0..b)
+            .map(|_| (0..dim).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+            .collect();
+        let y: Vec<[f64; 2]> = x.iter().map(|r| [0.5 * r[0] + 1.0, r[1] - 0.5]).collect();
+        let first = p.train_step(&x, &y, 1e-3).unwrap();
+        let mut last = first;
+        for _ in 0..30 {
+            last = p.train_step(&x, &y, 1e-3).unwrap();
+        }
+        assert!(
+            last < first * 0.8,
+            "loss should fall: first {first} last {last}"
+        );
+    }
+
+    #[test]
+    fn pick_batch_rounds_up() {
+        if skip() {
+            return;
+        }
+        let p = MlpPredictor::new(4).unwrap();
+        assert_eq!(p.pick_batch(1), 1);
+        assert_eq!(p.pick_batch(2), 32);
+        assert_eq!(p.pick_batch(33), 256);
+        assert_eq!(p.pick_batch(9999), 256);
+    }
+}

@@ -1,0 +1,107 @@
+//! The XLA/PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`) and executes them on the
+//! request path — no Python anywhere at run time.
+//!
+//! * [`pjrt`] — thin wrapper over the `xla` crate: HLO text →
+//!   `HloModuleProto` → compile → execute.
+//! * [`mlp`] — the predictor-MLP bridge: parameter state, batched
+//!   inference at the compiled batch sizes (with padding), and the
+//!   AOT-compiled SGD train step.
+
+pub mod pjrt;
+pub mod mlp;
+
+pub use mlp::MlpPredictor;
+pub use pjrt::{Executable, XlaRuntime};
+
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: `$DNNABACUS_ARTIFACTS`, else
+/// `artifacts/` relative to the workspace root.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("DNNABACUS_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // Walk up from cwd until an `artifacts/` dir with a manifest appears
+    // (cargo test runs from the workspace root; binaries may not).
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// True when `make artifacts` has produced a loadable manifest — tests
+/// that need the artifacts skip (with a note) when absent.
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Path of a named artifact.
+pub fn artifact_path(name: &str) -> PathBuf {
+    artifacts_dir().join(name)
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub input_dim: usize,
+    pub output_dim: usize,
+    pub layer_dims: Vec<(usize, usize)>,
+    pub infer_batches: Vec<usize>,
+    pub train_batch: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let j = crate::util::json::Json::parse(&text)?;
+        let layer_dims = j
+            .arr("layer_dims")?
+            .iter()
+            .map(|d| {
+                let a = d.as_arr().unwrap();
+                (a[0].as_usize().unwrap(), a[1].as_usize().unwrap())
+            })
+            .collect();
+        Ok(Manifest {
+            input_dim: j.num("input_dim")? as usize,
+            output_dim: j.num("output_dim")? as usize,
+            layer_dims,
+            infer_batches: j
+                .arr("infer_batches")?
+                .iter()
+                .map(|x| x.as_usize().unwrap())
+                .collect(),
+            train_batch: j.num("train_batch")? as usize,
+        })
+    }
+
+    /// Total parameter tensor count (w, b per layer).
+    pub fn param_tensors(&self) -> usize {
+        self.layer_dims.len() * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_when_artifacts_built() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert_eq!(m.input_dim, 270);
+        assert_eq!(m.output_dim, 2);
+        assert_eq!(m.layer_dims.len(), 4);
+        assert!(m.infer_batches.contains(&32));
+    }
+}

@@ -1,0 +1,157 @@
+//! PJRT wrapper: compile HLO-text artifacts on the CPU client and
+//! execute them with `f32` tensors. Follows /opt/xla-example/load_hlo.
+
+use std::path::Path;
+use std::sync::Arc;
+
+/// Shared PJRT client (one per process; compilation and execution are
+/// routed through it).
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+impl XlaRuntime {
+    pub fn cpu() -> anyhow::Result<Arc<XlaRuntime>> {
+        Ok(Arc::new(XlaRuntime {
+            client: xla::PjRtClient::cpu()?,
+        }))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (the AOT interchange format; see
+    /// python/compile/aot.py for why text rather than serialized proto).
+    pub fn load_hlo_text(self: &Arc<Self>, path: &Path) -> anyhow::Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// An f32 tensor argument/result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<i64>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            dims.iter().product::<i64>() as usize,
+            data.len(),
+            "dims {dims:?} vs data {}",
+            data.len()
+        );
+        Tensor { dims, data }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor {
+            dims: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn matrix(rows: usize, cols: usize, data: Vec<f32>) -> Tensor {
+        Tensor::new(vec![rows as i64, cols as i64], data)
+    }
+
+    pub fn vector(data: Vec<f32>) -> Tensor {
+        Tensor {
+            dims: vec![data.len() as i64],
+            data,
+        }
+    }
+
+    fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.dims.is_empty() {
+            // Rank-0: reshape to scalar.
+            Ok(lit.reshape(&[])?)
+        } else {
+            Ok(lit.reshape(&self.dims)?)
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal) -> anyhow::Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<i64> = shape.dims().to_vec();
+        let data = lit.to_vec::<f32>()?;
+        Ok(Tensor { dims, data })
+    }
+}
+
+/// A compiled artifact ready to run.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with f32 tensors; returns the flattened output tuple (the
+    /// AOT entrypoints lower with `return_tuple=True`).
+    pub fn run(&self, args: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<anyhow::Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifact_path, artifacts_available, artifacts_dir, Manifest};
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::matrix(2, 3, vec![0.0; 6]);
+        assert_eq!(t.dims, vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dims")]
+    fn tensor_dim_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn infer_artifact_runs_end_to_end() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let rt = XlaRuntime::cpu().unwrap();
+        let exe = rt
+            .load_hlo_text(&artifact_path("mlp_infer_b1.hlo.txt"))
+            .unwrap();
+        // Zero params, zero input -> zero output (linear head, zero bias).
+        let mut args: Vec<Tensor> = Vec::new();
+        for (din, dout) in &m.layer_dims {
+            args.push(Tensor::matrix(*din, *dout, vec![0.0; din * dout]));
+            args.push(Tensor::vector(vec![0.0; *dout]));
+        }
+        args.push(Tensor::matrix(1, m.input_dim, vec![0.5; m.input_dim]));
+        let out = exe.run(&args).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].dims, vec![1, m.output_dim as i64]);
+        assert!(out[0].data.iter().all(|&x| x == 0.0));
+    }
+}

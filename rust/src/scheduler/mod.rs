@@ -1,0 +1,173 @@
+//! Training-job scheduling on two machines (paper §4.3, Figure 14).
+//!
+//! The application the paper builds on top of DNNAbacus: place 20
+//! training jobs on the two servers of Table 1 so the makespan is
+//! minimal and nothing OOMs. Three planners are compared:
+//! exhaustive **optimal**, **random** assignment (averaged over trials),
+//! and a **genetic algorithm** over 0/1 gene strings that — as in the
+//! paper — reaches the optimal plan within ~20 generations.
+
+pub mod ga;
+
+use crate::util::prng::Rng;
+
+/// Per-job costs on each of the two machines (predicted or measured).
+#[derive(Debug, Clone)]
+pub struct JobCost {
+    pub name: String,
+    /// Training time on machine 0 / machine 1 (seconds).
+    pub time: [f64; 2],
+    /// Peak memory on machine 0 / machine 1 (bytes).
+    pub mem: [u64; 2],
+}
+
+/// The two machines' memory capacities (bytes).
+#[derive(Debug, Clone, Copy)]
+pub struct Machines {
+    pub vram: [u64; 2],
+}
+
+impl Machines {
+    /// Table 1: RTX 2080 (11 GB) + RTX 3090 (24 GB).
+    pub fn paper() -> Machines {
+        Machines {
+            vram: [11 << 30, 24 << 30],
+        }
+    }
+}
+
+/// An assignment: `plan[j] == 0/1` places job j on machine 0/1 (the
+/// paper's "0-1 string with a length of 20").
+pub type Plan = Vec<u8>;
+
+/// Jobs run sequentially per machine; the plan's cost is the makespan.
+/// Returns `None` if any job OOMs on its assigned machine.
+pub fn makespan(jobs: &[JobCost], machines: &Machines, plan: &Plan) -> Option<f64> {
+    assert_eq!(jobs.len(), plan.len());
+    let mut total = [0.0f64; 2];
+    for (job, &m) in jobs.iter().zip(plan) {
+        let m = m as usize;
+        if job.mem[m] > machines.vram[m] {
+            return None; // the OOM failure the predictor exists to avoid
+        }
+        total[m] += job.time[m];
+    }
+    Some(total[0].max(total[1]))
+}
+
+/// Exhaustive optimal plan (2^n enumeration; n = 20 ⇒ ~1M plans).
+pub fn optimal(jobs: &[JobCost], machines: &Machines) -> Option<(Plan, f64)> {
+    let n = jobs.len();
+    assert!(n <= 24, "exhaustive search capped at 24 jobs");
+    let mut best: Option<(Plan, f64)> = None;
+    for mask in 0u32..(1 << n) {
+        let plan: Plan = (0..n).map(|j| ((mask >> j) & 1) as u8).collect();
+        if let Some(t) = makespan(jobs, machines, &plan) {
+            if best.as_ref().map(|(_, bt)| t < *bt).unwrap_or(true) {
+                best = Some((plan, t));
+            }
+        }
+    }
+    best
+}
+
+/// Random planning: mean makespan over `trials` uniformly random valid
+/// plans (invalid plans are re-drawn, as a random scheduler would retry
+/// after OOM — the paper reports the 100-trial average).
+pub fn random_average(jobs: &[JobCost], machines: &Machines, trials: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut total = 0.0;
+    let mut done = 0;
+    let mut attempts = 0;
+    while done < trials && attempts < trials * 100 {
+        attempts += 1;
+        let plan: Plan = (0..jobs.len()).map(|_| rng.below(2) as u8).collect();
+        if let Some(t) = makespan(jobs, machines, &plan) {
+            total += t;
+            done += 1;
+        }
+    }
+    if done == 0 {
+        f64::INFINITY
+    } else {
+        total / done as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn fake_jobs(n: usize, seed: u64) -> Vec<JobCost> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let t0 = rng.range_f64(20.0, 120.0);
+                JobCost {
+                    name: format!("job{i}"),
+                    // Machine 1 (3090) is ~2.2× faster.
+                    time: [t0, t0 / rng.range_f64(1.8, 2.6)],
+                    mem: [
+                        rng.range(1, 9) as u64 * (1 << 30),
+                        rng.range(1, 9) as u64 * (1 << 30),
+                    ],
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn makespan_is_max_of_machine_sums() {
+        let jobs = vec![
+            JobCost {
+                name: "a".into(),
+                time: [10.0, 5.0],
+                mem: [1, 1],
+            },
+            JobCost {
+                name: "b".into(),
+                time: [20.0, 10.0],
+                mem: [1, 1],
+            },
+        ];
+        let m = Machines::paper();
+        assert_eq!(makespan(&jobs, &m, &vec![0, 0]), Some(30.0));
+        assert_eq!(makespan(&jobs, &m, &vec![0, 1]), Some(10.0));
+        assert_eq!(makespan(&jobs, &m, &vec![1, 1]), Some(15.0));
+    }
+
+    #[test]
+    fn oom_plans_rejected() {
+        let jobs = vec![JobCost {
+            name: "big".into(),
+            time: [10.0, 10.0],
+            mem: [12 << 30, 12 << 30], // > 11 GB, < 24 GB
+        }];
+        let m = Machines::paper();
+        assert_eq!(makespan(&jobs, &m, &vec![0]), None);
+        assert!(makespan(&jobs, &m, &vec![1]).is_some());
+    }
+
+    #[test]
+    fn optimal_beats_or_ties_every_plan() {
+        let jobs = fake_jobs(10, 7);
+        let m = Machines::paper();
+        let (_, best) = optimal(&jobs, &m).unwrap();
+        let mut rng = Rng::new(8);
+        for _ in 0..200 {
+            let plan: Plan = (0..jobs.len()).map(|_| rng.below(2) as u8).collect();
+            if let Some(t) = makespan(&jobs, &m, &plan) {
+                assert!(best <= t + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn random_average_worse_than_optimal() {
+        let jobs = fake_jobs(12, 9);
+        let m = Machines::paper();
+        let (_, best) = optimal(&jobs, &m).unwrap();
+        let avg = random_average(&jobs, &m, 100, 10);
+        assert!(avg > best);
+    }
+}

@@ -1,0 +1,407 @@
+//! Convolution algorithm cost models — the heart of the simulator.
+//!
+//! The paper's central observation (§2.2, Figures 2–4) is that cuDNN
+//! chooses among convolution algorithms with very different time and
+//! *workspace memory* profiles, and that this selection — not the tensor
+//! sizes — drives the abrupt fluctuations in training time and peak
+//! memory. We model the six cuDNN forward algorithms the paper's logs
+//! show (IMPLICIT_GEMM, IMPLICIT_PRECOMP_GEMM, GEMM, WINOGRAD_NONFUSED,
+//! FFT, FFT_TILING) with analytic workspace formulas and throughput
+//! models parameterized by the device profile:
+//!
+//! * **GEMM** materializes an im2col buffer (`B·Cin·k²·Ho·Wo` floats) —
+//!   for 1×1 kernels im2col is the identity, so GEMM runs without
+//!   workspace at high efficiency: exactly why the paper's lightweight
+//!   1×1 networks have smooth curves.
+//! * **WINOGRAD_NONFUSED** (3×3, stride 1) cuts arithmetic 2.25× but
+//!   needs per-tile transform buffers; strongest at small batch.
+//! * **FFT / FFT_TILING** pay a batch-independent filter-spectrum
+//!   transform (`Cin·Cout·S` — *quadratic in depth*, the Figure 4 memory
+//!   spike) that amortizes as batch grows: why selection flips between
+//!   batch 100 and 200 in Figure 2.
+
+use crate::graph::ConvAttrs;
+use crate::sim::device::DeviceProfile;
+
+/// Which pass of training this convolution call belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ConvPhase {
+    Forward,
+    BackwardData,
+    BackwardFilter,
+}
+
+impl ConvPhase {
+    pub fn name(self) -> &'static str {
+        match self {
+            ConvPhase::Forward => "fwd",
+            ConvPhase::BackwardData => "bwd_data",
+            ConvPhase::BackwardFilter => "bwd_filter",
+        }
+    }
+}
+
+/// The modeled cuDNN algorithms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ConvAlgo {
+    ImplicitGemm,
+    ImplicitPrecompGemm,
+    Gemm,
+    WinogradNonfused,
+    Fft,
+    FftTiling,
+}
+
+pub const ALL_ALGOS: [ConvAlgo; 6] = [
+    ConvAlgo::ImplicitGemm,
+    ConvAlgo::ImplicitPrecompGemm,
+    ConvAlgo::Gemm,
+    ConvAlgo::WinogradNonfused,
+    ConvAlgo::Fft,
+    ConvAlgo::FftTiling,
+];
+
+impl ConvAlgo {
+    pub fn name(self) -> &'static str {
+        match self {
+            ConvAlgo::ImplicitGemm => "IMPLICIT_GEMM",
+            ConvAlgo::ImplicitPrecompGemm => "IMPLICIT_PRECOMP_GEMM",
+            ConvAlgo::Gemm => "GEMM",
+            ConvAlgo::WinogradNonfused => "WINOGRAD_NONFUSED",
+            ConvAlgo::Fft => "FFT",
+            ConvAlgo::FftTiling => "FFT_TILING",
+        }
+    }
+}
+
+/// A fully-resolved convolution call: attrs + concrete shapes.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvCall {
+    pub attrs: ConvAttrs,
+    pub batch: usize,
+    /// Input spatial size (square).
+    pub in_hw: usize,
+    /// Output spatial size (square).
+    pub out_hw: usize,
+}
+
+impl ConvCall {
+    /// Direct-convolution FLOPs (the baseline all efficiencies reference).
+    pub fn direct_flops(&self) -> f64 {
+        2.0 * self.batch as f64
+            * self.attrs.out_ch as f64
+            * (self.out_hw * self.out_hw) as f64
+            * (self.attrs.in_ch / self.attrs.groups) as f64
+            * (self.attrs.kh * self.attrs.kw) as f64
+    }
+
+    /// Bytes moved by an ideal implementation (input + weights + output).
+    pub fn min_bytes(&self) -> f64 {
+        let a = &self.attrs;
+        4.0 * (self.batch as f64 * a.in_ch as f64 * (self.in_hw * self.in_hw) as f64
+            + a.params() as f64
+            + self.batch as f64 * a.out_ch as f64 * (self.out_hw * self.out_hw) as f64)
+    }
+
+    /// FFT padded size for the full-image algorithm: cuFFT power-of-two
+    /// padding (fast plans, wasteful for sizes just above a power of two).
+    fn fft_pad(&self) -> usize {
+        (self.in_hw + self.attrs.kh - 1).next_power_of_two()
+    }
+
+    /// FFT_TILING: 32-output tiles padded to the next even composite size
+    /// (slower per-point plans, but much less padding waste) — the reason
+    /// cuDNN prefers TILING on most feature-map sizes while its *filter
+    /// spectrum* (`Cin·Cout·spectrum`) is what blows up the workspace.
+    fn fft_tile_pad(&self) -> usize {
+        let t = self.out_hw.min(32) + self.attrs.kh - 1;
+        (t + 1) & !1 // round up to even
+    }
+
+    fn fft_tiles(&self) -> usize {
+        let per_dim = self.out_hw.div_ceil(32);
+        self.batch * per_dim * per_dim
+    }
+}
+
+/// Is `algo` implementable for this call (cuDNN support matrix, slightly
+/// simplified)?
+pub fn applicable(algo: ConvAlgo, call: &ConvCall, phase: ConvPhase) -> bool {
+    let a = &call.attrs;
+    let grouped = a.groups > 1;
+    match algo {
+        ConvAlgo::ImplicitGemm => true,
+        ConvAlgo::ImplicitPrecompGemm => true,
+        // GEMM path supports groups poorly; cuDNN exposes it ungrouped.
+        ConvAlgo::Gemm => !grouped,
+        // Winograd: 3×3, stride 1, ungrouped only.
+        ConvAlgo::WinogradNonfused => {
+            !grouped && a.kh == 3 && a.kw == 3 && a.stride == 1 && !a.is_pointwise()
+        }
+        // FFT family: stride 1, small kernels, ungrouped, never 1×1
+        // (spectral pointwise would be pure overhead); input must fit the
+        // padded transform (cuDNN: <= 256).
+        ConvAlgo::Fft | ConvAlgo::FftTiling => {
+            let ok = !grouped
+                && a.stride == 1
+                && a.kh <= 5
+                && !a.is_pointwise()
+                && call.in_hw + a.kh - 1 <= 256;
+            // FFT_TILING only pays off once the image is at least one tile.
+            if algo == ConvAlgo::FftTiling {
+                ok && call.out_hw >= 8 && phase != ConvPhase::BackwardFilter
+            } else {
+                ok
+            }
+        }
+    }
+}
+
+/// Workspace bytes the algorithm requests for this call.
+pub fn workspace_bytes(algo: ConvAlgo, call: &ConvCall) -> u64 {
+    let a = &call.attrs;
+    let b = call.batch as u64;
+    let (cin, cout) = (a.in_ch as u64, a.out_ch as u64);
+    let k2 = (a.kh * a.kw) as u64;
+    let out_sp = (call.out_hw * call.out_hw) as u64;
+    match algo {
+        ConvAlgo::ImplicitGemm => 0,
+        // Precomputed offset indices, batch-independent.
+        ConvAlgo::ImplicitPrecompGemm => k2 * out_sp * 8,
+        ConvAlgo::Gemm => {
+            if a.is_pointwise() {
+                0 // im2col is the identity for 1×1 stride-1
+            } else {
+                b * (cin / a.groups as u64) * k2 * out_sp * 4
+            }
+        }
+        ConvAlgo::WinogradNonfused => {
+            // F(2×2, 3×3), nonfused: separate input- and output-transform
+            // staging buffers (4×4=16 values per tile per channel) plus
+            // the transformed filter bank.
+            let tiles = b * ((call.out_hw as u64).div_ceil(2)).pow(2);
+            2 * tiles * (cin + cout) * 16 * 4 + cin * cout * 16 * 4
+        }
+        ConvAlgo::Fft => {
+            let p = call.fft_pad() as u64;
+            let spectrum = p * (p / 2 + 1) * 8; // complex f32, rfft
+            (b * cin + b * cout) * spectrum + cin * cout * spectrum
+        }
+        ConvAlgo::FftTiling => {
+            // Time-domain tile staging + spectra for inputs and outputs,
+            // plus the filter spectrum (cuDNN keeps both domains live).
+            let q = call.fft_tile_pad() as u64;
+            let spectrum = q * (q / 2 + 1) * 8;
+            let tiles = call.fft_tiles() as u64;
+            2 * tiles * (cin + cout) * spectrum + cin * cout * spectrum
+        }
+    }
+}
+
+/// Estimated kernel time (seconds) on `dev`. Monotone decreasing per
+/// sample in batch until SMs saturate, with algorithm-specific fixed
+/// costs that create the crossovers the paper observes.
+pub fn kernel_time(algo: ConvAlgo, call: &ConvCall, phase: ConvPhase, dev: &DeviceProfile) -> f64 {
+    let flops = call.direct_flops();
+    // Thread-block parallelism exposed: output tiles × batch.
+    let tiles = (call.batch as f64) * ((call.out_hw as f64 / 16.0).ceil().powi(2)).max(1.0)
+        * (call.attrs.out_ch as f64 / 64.0).max(1.0);
+    let occ = dev.occupancy(tiles);
+    let phase_mult = match phase {
+        ConvPhase::Forward => 1.0,
+        ConvPhase::BackwardData => 1.05,
+        ConvPhase::BackwardFilter => 1.15,
+    };
+    let mem_time = call.min_bytes() / dev.mem_bw;
+    let t = match algo {
+        ConvAlgo::ImplicitGemm => flops / (dev.peak_flops * 0.33 * occ),
+        ConvAlgo::ImplicitPrecompGemm => flops / (dev.peak_flops * 0.42 * occ),
+        ConvAlgo::Gemm => {
+            let eff = if call.attrs.is_pointwise() { 0.62 } else { 0.50 };
+            let ws_traffic = workspace_bytes(ConvAlgo::Gemm, call) as f64 * 2.0 / dev.mem_bw;
+            flops / (dev.peak_flops * eff * occ) + ws_traffic
+        }
+        ConvAlgo::WinogradNonfused => {
+            // 2.25× arithmetic reduction, transform traffic through DRAM.
+            let ws_traffic = workspace_bytes(ConvAlgo::WinogradNonfused, call) as f64 / dev.mem_bw;
+            (flops / 2.25) / (dev.peak_flops * 0.60 * occ) + ws_traffic
+        }
+        ConvAlgo::Fft => fft_time(call, dev, call.fft_pad(), 1, occ),
+        ConvAlgo::FftTiling => fft_time(
+            call,
+            dev,
+            call.fft_tile_pad(),
+            call.fft_tiles().div_ceil(call.batch.max(1)),
+            occ,
+        ),
+    };
+    t * phase_mult + mem_time + dev.launch_overhead
+}
+
+/// Shared FFT cost model: batch-independent filter transform + per-sample
+/// input/output transforms + spectral pointwise product.
+///
+/// The filter-spectrum stage is `Cin·Cout` *tiny* FFTs — severely
+/// launch/latency-bound on real GPUs, so it runs at a far lower effective
+/// throughput (`FILTER_EFF`). That batch-independent intercept is what
+/// makes Winograd/GEMM win at small batch and the FFT family take over
+/// once the batch amortizes it — calibrated so the takeover lands in the
+/// batch ≈100–200 band on VGG-scale layers, where the paper's Figure 2
+/// sees its fluctuations.
+fn fft_time(call: &ConvCall, dev: &DeviceProfile, pad: usize, tiles_per_sample: usize, occ: f64) -> f64 {
+    const FILTER_EFF: f64 = 0.012; // tiny batched FFTs: ~1% of peak
+    const DATA_EFF: f64 = 0.50;
+    const POINTWISE_EFF: f64 = 0.75; // cgemm batched over spectrum points
+    let a = &call.attrs;
+    let b = call.batch as f64;
+    let (cin, cout) = (a.in_ch as f64, a.out_ch as f64);
+    let p2 = (pad * pad) as f64;
+    let logp = (pad as f64).log2().max(1.0);
+    let spec = (pad * (pad / 2 + 1)) as f64; // rfft points
+    let tps = tiles_per_sample as f64;
+    // Filter spectra: Cin·Cout transforms, re-done every kernel call.
+    let filter_tf = cin * cout * p2 * logp * 5.0 / (dev.peak_flops * FILTER_EFF);
+    // Input + inverse-output transforms (batched: much better shaped).
+    let data_tf =
+        b * tps * (cin + cout) * p2 * logp * 5.0 / (dev.peak_flops * DATA_EFF * occ);
+    // Spectral pointwise complex multiply-accumulate (6 real flops).
+    let pointwise =
+        b * tps * cin * cout * spec * 6.0 / (dev.peak_flops * POINTWISE_EFF * occ);
+    filter_tf + data_tf + pointwise
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ConvAttrs;
+
+    fn conv3x3(cin: usize, cout: usize, hw: usize, batch: usize) -> ConvCall {
+        ConvCall {
+            attrs: ConvAttrs {
+                in_ch: cin,
+                out_ch: cout,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                padding: 1,
+                groups: 1,
+                bias: false,
+            },
+            batch,
+            in_hw: hw,
+            out_hw: hw,
+        }
+    }
+
+    fn conv1x1(cin: usize, cout: usize, hw: usize, batch: usize) -> ConvCall {
+        ConvCall {
+            attrs: ConvAttrs {
+                in_ch: cin,
+                out_ch: cout,
+                kh: 1,
+                kw: 1,
+                stride: 1,
+                padding: 0,
+                groups: 1,
+                bias: false,
+            },
+            batch,
+            in_hw: hw,
+            out_hw: hw,
+        }
+    }
+
+    #[test]
+    fn pointwise_excludes_winograd_and_fft() {
+        let c = conv1x1(64, 128, 32, 8);
+        assert!(!applicable(ConvAlgo::WinogradNonfused, &c, ConvPhase::Forward));
+        assert!(!applicable(ConvAlgo::Fft, &c, ConvPhase::Forward));
+        assert!(!applicable(ConvAlgo::FftTiling, &c, ConvPhase::Forward));
+        assert!(applicable(ConvAlgo::Gemm, &c, ConvPhase::Forward));
+    }
+
+    #[test]
+    fn pointwise_gemm_needs_no_workspace() {
+        let c = conv1x1(64, 128, 32, 64);
+        assert_eq!(workspace_bytes(ConvAlgo::Gemm, &c), 0);
+    }
+
+    #[test]
+    fn strided_excludes_winograd_fft() {
+        let mut c = conv3x3(64, 64, 32, 8);
+        c.attrs.stride = 2;
+        assert!(!applicable(ConvAlgo::WinogradNonfused, &c, ConvPhase::Forward));
+        assert!(!applicable(ConvAlgo::Fft, &c, ConvPhase::Forward));
+        assert!(applicable(ConvAlgo::ImplicitGemm, &c, ConvPhase::Forward));
+    }
+
+    #[test]
+    fn grouped_only_implicit() {
+        let mut c = conv3x3(64, 64, 16, 8);
+        c.attrs.groups = 64;
+        assert!(applicable(ConvAlgo::ImplicitGemm, &c, ConvPhase::Forward));
+        assert!(!applicable(ConvAlgo::Gemm, &c, ConvPhase::Forward));
+        assert!(!applicable(ConvAlgo::WinogradNonfused, &c, ConvPhase::Forward));
+    }
+
+    #[test]
+    fn fft_filter_term_quadratic_in_depth() {
+        // Paper Fig 4: FFT(_TILING) memory explodes when in/out depth large.
+        let small = workspace_bytes(ConvAlgo::Fft, &conv3x3(64, 64, 32, 8));
+        let big = workspace_bytes(ConvAlgo::Fft, &conv3x3(512, 512, 32, 8));
+        assert!(big as f64 > 20.0 * small as f64, "small={small} big={big}");
+    }
+
+    #[test]
+    fn gemm_workspace_linear_in_batch() {
+        let w1 = workspace_bytes(ConvAlgo::Gemm, &conv3x3(64, 64, 32, 1));
+        let w8 = workspace_bytes(ConvAlgo::Gemm, &conv3x3(64, 64, 32, 8));
+        assert_eq!(w8, 8 * w1);
+    }
+
+    #[test]
+    fn implicit_gemm_zero_workspace() {
+        assert_eq!(workspace_bytes(ConvAlgo::ImplicitGemm, &conv3x3(512, 512, 32, 256)), 0);
+    }
+
+    #[test]
+    fn winograd_wins_small_batch_fft_wins_large_batch() {
+        // The crossover behind the paper's Figure 2 fluctuations.
+        let dev = DeviceProfile::rtx2080();
+        let small = conv3x3(256, 256, 16, 4);
+        let large = conv3x3(256, 256, 16, 512);
+        let wg_s = kernel_time(ConvAlgo::WinogradNonfused, &small, ConvPhase::Forward, &dev);
+        let ff_s = kernel_time(ConvAlgo::Fft, &small, ConvPhase::Forward, &dev);
+        let wg_l = kernel_time(ConvAlgo::WinogradNonfused, &large, ConvPhase::Forward, &dev);
+        let ff_l = kernel_time(ConvAlgo::Fft, &large, ConvPhase::Forward, &dev);
+        assert!(wg_s < ff_s, "small batch: winograd {wg_s} vs fft {ff_s}");
+        // At large batch FFT's fixed filter transform has amortized.
+        assert!(ff_l / wg_l < ff_s / wg_s * 0.9, "fft should close the gap");
+    }
+
+    #[test]
+    fn time_decreases_per_sample_with_batch() {
+        let dev = DeviceProfile::rtx3090();
+        let t8 = kernel_time(ConvAlgo::ImplicitGemm, &conv3x3(64, 64, 32, 8), ConvPhase::Forward, &dev);
+        let t256 =
+            kernel_time(ConvAlgo::ImplicitGemm, &conv3x3(64, 64, 32, 256), ConvPhase::Forward, &dev);
+        assert!(t256 / 256.0 < t8 / 8.0);
+    }
+
+    #[test]
+    fn backward_filter_slower_than_forward() {
+        let dev = DeviceProfile::rtx2080();
+        let c = conv3x3(128, 128, 16, 32);
+        let f = kernel_time(ConvAlgo::ImplicitGemm, &c, ConvPhase::Forward, &dev);
+        let bw = kernel_time(ConvAlgo::ImplicitGemm, &c, ConvPhase::BackwardFilter, &dev);
+        assert!(bw > f);
+    }
+
+    #[test]
+    fn ampere_faster_than_turing_same_call() {
+        let c = conv3x3(256, 256, 16, 64);
+        let t = kernel_time(ConvAlgo::Gemm, &c, ConvPhase::Forward, &DeviceProfile::rtx2080());
+        let a = kernel_time(ConvAlgo::Gemm, &c, ConvPhase::Forward, &DeviceProfile::rtx3090());
+        assert!(a < t);
+    }
+}

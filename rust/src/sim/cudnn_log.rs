@@ -1,0 +1,118 @@
+//! Log of convolution-algorithm invocations, mirroring the CuDNN API logs
+//! the paper extracts to produce Figures 3 and 4.
+
+use crate::sim::convalgo::{ConvAlgo, ConvPhase, ALL_ALGOS};
+use std::collections::BTreeMap;
+
+/// One convolution kernel invocation.
+#[derive(Debug, Clone)]
+pub struct ConvCallRecord {
+    /// Graph node id of the convolution.
+    pub node: usize,
+    pub phase: ConvPhase,
+    pub algo: ConvAlgo,
+    /// Workspace requested for this call (bytes).
+    pub workspace: u64,
+    /// Kernel time (seconds).
+    pub time: f64,
+    /// `[input hw]-[input depth]-[output depth]-[kernel hw]`, the label
+    /// format of the paper's Figure 4.
+    pub config: String,
+}
+
+/// All convolution calls of one simulated run (one iteration's worth —
+/// iterations repeat the identical pattern).
+#[derive(Debug, Clone, Default)]
+pub struct CudnnLog {
+    pub calls: Vec<ConvCallRecord>,
+}
+
+impl CudnnLog {
+    pub fn push(&mut self, rec: ConvCallRecord) {
+        self.calls.push(rec);
+    }
+
+    /// Normalized call-count mix per algorithm (Figure 3: "normalize the
+    /// total number of each convolutional kernel by dividing it over the
+    /// sum of all kernels called").
+    pub fn normalized_mix(&self) -> BTreeMap<ConvAlgo, f64> {
+        let mut counts: BTreeMap<ConvAlgo, f64> = BTreeMap::new();
+        for a in ALL_ALGOS {
+            counts.insert(a, 0.0);
+        }
+        for c in &self.calls {
+            *counts.get_mut(&c.algo).unwrap() += 1.0;
+        }
+        let total: f64 = counts.values().sum();
+        if total > 0.0 {
+            for v in counts.values_mut() {
+                *v /= total;
+            }
+        }
+        counts
+    }
+
+    /// Does the log ever call `algo`?
+    pub fn calls_algo(&self, algo: ConvAlgo) -> bool {
+        self.calls.iter().any(|c| c.algo == algo)
+    }
+
+    /// The call with the largest workspace (Figure 4's "peak" culprit).
+    pub fn peak_workspace_call(&self) -> Option<&ConvCallRecord> {
+        self.calls.iter().max_by_key(|c| c.workspace)
+    }
+
+    /// Group max workspace by config label (Figure 4 series).
+    pub fn workspace_by_config(&self) -> BTreeMap<String, BTreeMap<ConvAlgo, u64>> {
+        let mut out: BTreeMap<String, BTreeMap<ConvAlgo, u64>> = BTreeMap::new();
+        for c in &self.calls {
+            let per = out.entry(c.config.clone()).or_default();
+            let e = per.entry(c.algo).or_insert(0);
+            *e = (*e).max(c.workspace);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(algo: ConvAlgo, ws: u64) -> ConvCallRecord {
+        ConvCallRecord {
+            node: 0,
+            phase: ConvPhase::Forward,
+            algo,
+            workspace: ws,
+            time: 1e-3,
+            config: "32-64-128-3".into(),
+        }
+    }
+
+    #[test]
+    fn mix_normalizes_to_one() {
+        let mut log = CudnnLog::default();
+        log.push(rec(ConvAlgo::Gemm, 0));
+        log.push(rec(ConvAlgo::Gemm, 0));
+        log.push(rec(ConvAlgo::Fft, 10));
+        let mix = log.normalized_mix();
+        let total: f64 = mix.values().sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        assert!((mix[&ConvAlgo::Gemm] - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peak_workspace_found() {
+        let mut log = CudnnLog::default();
+        log.push(rec(ConvAlgo::Gemm, 5));
+        log.push(rec(ConvAlgo::FftTiling, 500));
+        log.push(rec(ConvAlgo::Fft, 50));
+        assert_eq!(log.peak_workspace_call().unwrap().algo, ConvAlgo::FftTiling);
+    }
+
+    #[test]
+    fn empty_log_mix_is_zero() {
+        let mix = CudnnLog::default().normalized_mix();
+        assert!(mix.values().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,106 @@
+//! GPU device profiles — the paper's two systems (Table 1).
+//!
+//! The simulator never executes kernels; a profile captures the handful
+//! of machine constants the per-algorithm cost models need: peak FP32
+//! throughput, memory bandwidth, VRAM capacity, kernel-launch overhead,
+//! and the CUDA-context baseline that `pynvml` measurements include.
+
+/// A simulated GPU.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Microarchitecture, reported in Table 1 ("Turing"/"Ampere").
+    pub arch: &'static str,
+    /// Peak FP32 throughput in FLOP/s.
+    pub peak_flops: f64,
+    /// Effective DRAM bandwidth in bytes/s.
+    pub mem_bw: f64,
+    /// Total device memory in bytes.
+    pub vram: u64,
+    /// Streaming-multiprocessor count (drives small-kernel utilization).
+    pub sm_count: usize,
+    /// Per-kernel launch + driver overhead (seconds).
+    pub launch_overhead: f64,
+    /// CUDA context + cuDNN handles resident in VRAM (pynvml sees this).
+    pub context_bytes: u64,
+}
+
+impl DeviceProfile {
+    /// System 1: RTX 2080 (Turing), 11 GB — Table 1.
+    pub fn rtx2080() -> Self {
+        DeviceProfile {
+            name: "rtx2080",
+            arch: "Turing",
+            peak_flops: 10.1e12,
+            mem_bw: 448e9,
+            vram: 11 * (1 << 30),
+            sm_count: 46,
+            launch_overhead: 4.0e-6,
+            context_bytes: 620 * (1 << 20),
+        }
+    }
+
+    /// System 2: RTX 3090 (Ampere), 24 GB — Table 1.
+    pub fn rtx3090() -> Self {
+        DeviceProfile {
+            name: "rtx3090",
+            arch: "Ampere",
+            peak_flops: 35.6e12,
+            mem_bw: 936e9,
+            vram: 24 * (1 << 30),
+            sm_count: 82,
+            launch_overhead: 3.5e-6,
+            context_bytes: 730 * (1 << 20),
+        }
+    }
+
+    pub fn by_name(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "rtx2080" => Ok(Self::rtx2080()),
+            "rtx3090" => Ok(Self::rtx3090()),
+            _ => anyhow::bail!("unknown device '{name}' (rtx2080|rtx3090)"),
+        }
+    }
+
+    /// Utilization factor for a kernel that exposes `parallel_tiles` units
+    /// of thread-block-level parallelism: small launches cannot fill the
+    /// SM array (why bigger batches run *faster per sample* — paper Fig 1a).
+    pub fn occupancy(&self, parallel_tiles: f64) -> f64 {
+        // 4 resident blocks per SM saturates; below that, proportional.
+        let saturating = (self.sm_count * 4) as f64;
+        (parallel_tiles / saturating).min(1.0).max(0.05)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_capacities() {
+        assert_eq!(DeviceProfile::rtx2080().vram, 11 << 30);
+        assert_eq!(DeviceProfile::rtx3090().vram, 24 << 30);
+    }
+
+    #[test]
+    fn ampere_faster_than_turing() {
+        let a = DeviceProfile::rtx3090();
+        let t = DeviceProfile::rtx2080();
+        assert!(a.peak_flops > t.peak_flops);
+        assert!(a.mem_bw > t.mem_bw);
+    }
+
+    #[test]
+    fn occupancy_monotone_and_clamped() {
+        let d = DeviceProfile::rtx2080();
+        assert!(d.occupancy(1.0) < d.occupancy(100.0));
+        assert_eq!(d.occupancy(1e9), 1.0);
+        assert!(d.occupancy(0.0) >= 0.05);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(DeviceProfile::by_name("rtx2080").is_ok());
+        assert!(DeviceProfile::by_name("a100").is_err());
+    }
+}

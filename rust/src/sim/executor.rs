@@ -1,0 +1,471 @@
+//! The training-run executor: simulates forward, backward and optimizer
+//! phases of every iteration against the allocator + algorithm-selector
+//! models and accumulates time and peak memory.
+//!
+//! The memory timeline follows framework training semantics:
+//! 1. parameters, gradients and optimizer state are resident for the
+//!    whole run;
+//! 2. forward activations stay live until their backward consumes them;
+//! 3. convolution workspaces are transient (alloc → kernel → free) but
+//!    pass through the allocator, so they raise the reserved high-water
+//!    mark — the paper's Figure 4 memory spikes;
+//! 4. backward frees activations as it walks the graph in reverse.
+
+use crate::graph::{infer_shapes, Graph, OpKind};
+use crate::sim::allocator::{BfcAllocator, CachingAllocator, DeviceAllocator};
+use crate::sim::convalgo::{ConvCall, ConvPhase};
+use crate::sim::cudnn_log::{ConvCallRecord, CudnnLog};
+use crate::sim::selector::{select, Framework};
+use crate::sim::TrainConfig;
+use crate::util::prng::Rng;
+
+/// Training would exceed device memory — the failure mode the paper's
+/// predictor exists to prevent (§1: "training tasks may fail due to
+/// insufficient memory").
+#[derive(Debug, thiserror::Error)]
+#[error("OOM: {needed} bytes reserved exceeds budget {budget} on {device} ({model})")]
+pub struct OomError {
+    pub model: String,
+    pub device: &'static str,
+    pub needed: u64,
+    pub budget: u64,
+}
+
+/// What the profiler observes for one training run.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Total wall-clock of the training run (seconds) — paper's "time".
+    pub total_time: f64,
+    /// One steady-state iteration (seconds).
+    pub iter_time: f64,
+    /// One-time startup (context init, graph build, cuDNN benchmark).
+    pub startup: f64,
+    /// Peak device memory (bytes), allocator high-water mark + context —
+    /// paper's "maximum memory" as sampled by pynvml.
+    pub peak_mem: u64,
+    pub iterations: usize,
+    /// Convolution-call log for one iteration (Figures 3–4).
+    pub log: CudnnLog,
+}
+
+/// Simulate a full training run of `graph` under `cfg`.
+pub fn simulate_training(graph: &Graph, cfg: &TrainConfig) -> Result<Measurement, OomError> {
+    let shapes = infer_shapes(graph, cfg.batch, cfg.dataset.in_channels(), cfg.dataset.hw())
+        .expect("zoo graphs always infer; random graphs validated at build");
+    let budget = cfg.device.vram - cfg.device.context_bytes;
+    let mut rng = Rng::new(cfg.seed ^ 0xABAC_05);
+
+    // Framework-specific allocator.
+    let mut torch_alloc;
+    let mut tf_alloc;
+    let alloc: &mut dyn DeviceAllocator = match cfg.framework {
+        Framework::TorchSim => {
+            torch_alloc = CachingAllocator::new(budget);
+            &mut torch_alloc
+        }
+        Framework::TfSim => {
+            tf_alloc = BfcAllocator::new(budget);
+            &mut tf_alloc
+        }
+    };
+
+    let oom = |needed: u64| OomError {
+        model: graph.name.clone(),
+        device: cfg.device.name,
+        needed,
+        budget,
+    };
+    macro_rules! check {
+        ($alloc:expr) => {
+            if $alloc.reserved() > budget {
+                return Err(oom($alloc.reserved()));
+            }
+        };
+    }
+
+    let mut log = CudnnLog::default();
+    // Config labels ("[hw]-[cin]-[cout]-[k]", Figure 4 format) are built
+    // once per conv node, not per phase — §Perf L3 optimization #3.
+    let config_label: Vec<String> = graph
+        .nodes
+        .iter()
+        .map(|node| match &node.kind {
+            OpKind::Conv2d(attrs) => format!(
+                "{}-{}-{}-{}",
+                shapes[node.inputs[0]].spatial(),
+                attrs.in_ch,
+                attrs.out_ch,
+                attrs.kh
+            ),
+            _ => String::new(),
+        })
+        .collect();
+    let mut time = 0.0f64;
+    let dispatch = cfg.framework.dispatch_overhead();
+    let bw = cfg.device.mem_bw;
+
+    // --- Persistent state: weights + grads + optimizer ------------------
+    // One block per parameterized node (per-tensor rounding, as real
+    // frameworks allocate per-Parameter).
+    let copies = 2 + cfg.optimizer.state_multiple(); // w + g + state
+    let mut param_bytes = 0u64;
+    for node in &graph.nodes {
+        let p = node.kind.param_count() * 4;
+        if p > 0 {
+            for _ in 0..copies {
+                alloc.alloc(p);
+            }
+            param_bytes += p;
+        }
+    }
+    check!(alloc);
+
+    // --- Steady-state iteration ----------------------------------------
+    // Input batch.
+    let input_block = alloc.alloc(shapes[0].bytes());
+    check!(alloc);
+
+    // Forward: activation per node, conv workspaces transient.
+    let mut act_blocks: Vec<Option<usize>> = vec![None; graph.nodes.len()];
+    act_blocks[0] = Some(input_block);
+    let mut startup_bench = 0.0f64; // torch cudnn.benchmark probe cost
+    for (id, node) in graph.nodes.iter().enumerate().skip(1) {
+        let out_bytes = shapes[id].bytes();
+        act_blocks[id] = Some(alloc.alloc(out_bytes));
+        check!(alloc);
+        match &node.kind {
+            OpKind::Conv2d(attrs) => {
+                let in_shape = &shapes[node.inputs[0]];
+                let call = ConvCall {
+                    attrs: *attrs,
+                    batch: cfg.batch,
+                    in_hw: in_shape.spatial(),
+                    out_hw: shapes[id].spatial(),
+                };
+                let sel = {
+                    // Borrow-friendly closure over an immutable probe.
+                    let probe = &*alloc;
+                    select(
+                        cfg.framework,
+                        &call,
+                        ConvPhase::Forward,
+                        &cfg.device,
+                        cfg.seed,
+                        id,
+                        |ws| probe.can_fit(ws),
+                    )
+                };
+                let ws_block = alloc.alloc(sel.workspace);
+                check!(alloc);
+                alloc.free(ws_block);
+                log.push(ConvCallRecord {
+                    node: id,
+                    phase: ConvPhase::Forward,
+                    algo: sel.algo,
+                    workspace: sel.workspace,
+                    time: sel.time,
+                    config: config_label[id].clone(),
+                });
+                time += sel.time + dispatch;
+                if cfg.framework == Framework::TorchSim {
+                    // benchmark mode probes every candidate once at startup
+                    startup_bench += sel.time * 4.0;
+                }
+            }
+            _ => {
+                time += elementwise_time(graph, &shapes, id, bw) + dispatch
+                    + cfg.device.launch_overhead;
+            }
+        }
+    }
+
+    // Backward: reverse order; grads transient, activations freed.
+    for (id, node) in graph.nodes.iter().enumerate().skip(1).rev() {
+        // Gradient buffers for each input tensor.
+        let mut grad_blocks = Vec::new();
+        for &src in &node.inputs {
+            grad_blocks.push(alloc.alloc(shapes[src].bytes()));
+        }
+        check!(alloc);
+        match &node.kind {
+            OpKind::Conv2d(attrs) => {
+                let in_shape = &shapes[node.inputs[0]];
+                let call = ConvCall {
+                    attrs: *attrs,
+                    batch: cfg.batch,
+                    in_hw: in_shape.spatial(),
+                    out_hw: shapes[id].spatial(),
+                };
+                for phase in [ConvPhase::BackwardData, ConvPhase::BackwardFilter] {
+                    let sel = {
+                        let probe = &*alloc;
+                        select(
+                            cfg.framework,
+                            &call,
+                            phase,
+                            &cfg.device,
+                            cfg.seed,
+                            id,
+                            |ws| probe.can_fit(ws),
+                        )
+                    };
+                    let ws_block = alloc.alloc(sel.workspace);
+                    check!(alloc);
+                    alloc.free(ws_block);
+                    log.push(ConvCallRecord {
+                        node: id,
+                        phase,
+                        algo: sel.algo,
+                        workspace: sel.workspace,
+                        time: sel.time,
+                        config: config_label[id].clone(),
+                    });
+                    time += sel.time + dispatch;
+                }
+            }
+            _ => {
+                time += 2.0 * elementwise_time(graph, &shapes, id, bw) + dispatch
+                    + cfg.device.launch_overhead;
+            }
+        }
+        // Free this node's activation (backward has consumed it) and the
+        // transient gradient buffers.
+        if let Some(b) = act_blocks[id].take() {
+            alloc.free(b);
+        }
+        for b in grad_blocks {
+            alloc.free(b);
+        }
+    }
+    if let Some(b) = act_blocks[0].take() {
+        alloc.free(b);
+    }
+
+    // Optimizer step: streams weights + grads + states.
+    time += param_bytes as f64 * (2 + cfg.optimizer.state_multiple()) as f64 / bw;
+    // Per-iteration host-side overhead (dataloader, python loop / session).
+    time += match cfg.framework {
+        Framework::TorchSim => 2.5e-3,
+        Framework::TfSim => 1.2e-3,
+    };
+
+    // --- Roll out the run ------------------------------------------------
+    let iterations = cfg.iterations();
+    let jitter = 1.0 + rng.normal_ms(0.0, 0.012);
+    let startup = cfg.framework.startup_seconds()
+        + if cfg.framework == Framework::TorchSim {
+            startup_bench
+        } else {
+            0.0
+        };
+    let total_time = startup + time * iterations as f64 * jitter.max(0.9);
+    Ok(Measurement {
+        total_time,
+        iter_time: time,
+        startup,
+        peak_mem: alloc.peak_reserved() + cfg.device.context_bytes,
+        iterations,
+        log,
+    })
+}
+
+/// Memory-bound cost of a non-convolution op: read inputs + write output.
+fn elementwise_time(
+    graph: &Graph,
+    shapes: &[crate::graph::shape::TensorShape],
+    id: usize,
+    bw: f64,
+) -> f64 {
+    let node = &graph.nodes[id];
+    let in_bytes: u64 = node.inputs.iter().map(|&s| shapes[s].bytes()).sum();
+    let out_bytes = shapes[id].bytes();
+    let factor = match node.kind {
+        // Linear layers are compute-ish but small here; BN does two passes.
+        OpKind::BatchNorm { .. } => 2.0,
+        OpKind::Linear { .. } => 1.5,
+        _ => 1.0,
+    };
+    (in_bytes + out_bytes) as f64 * factor / bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{DatasetKind, DeviceProfile, Optimizer};
+    use crate::zoo;
+
+    fn cfg(batch: usize) -> TrainConfig {
+        TrainConfig::paper_default(DatasetKind::Cifar100, batch)
+    }
+
+    #[test]
+    fn vgg11_runs_and_reports() {
+        let g = zoo::build("vgg11", 3, 100).unwrap();
+        let m = simulate_training(&g, &cfg(128)).unwrap();
+        assert!(m.total_time > 0.0);
+        assert!(m.peak_mem > 1 << 30, "vgg11@128 should exceed 1GiB");
+        assert!(!m.log.calls.is_empty());
+        assert_eq!(m.iterations, 40); // 50k*0.1/128 = 39.06 -> 40
+    }
+
+    #[test]
+    fn time_roughly_linear_in_data_fraction() {
+        let g = zoo::build("resnet18", 3, 100).unwrap();
+        let mut c1 = cfg(128);
+        c1.data_fraction = 0.1;
+        let mut c2 = cfg(128);
+        c2.data_fraction = 0.2;
+        let m1 = simulate_training(&g, &c1).unwrap();
+        let m2 = simulate_training(&g, &c2).unwrap();
+        let ratio = (m2.total_time - m2.startup) / (m1.total_time - m1.startup);
+        assert!((ratio - 2.0).abs() < 0.1, "ratio={ratio}");
+    }
+
+    #[test]
+    fn memory_insensitive_to_data_fraction() {
+        let g = zoo::build("resnet18", 3, 100).unwrap();
+        let mut c1 = cfg(128);
+        c1.data_fraction = 0.1;
+        let mut c2 = cfg(128);
+        c2.data_fraction = 0.9;
+        assert_eq!(
+            simulate_training(&g, &c1).unwrap().peak_mem,
+            simulate_training(&g, &c2).unwrap().peak_mem
+        );
+    }
+
+    #[test]
+    fn memory_insensitive_to_lr() {
+        let g = zoo::build("mobilenet-v2", 3, 100).unwrap();
+        let mut c1 = cfg(64);
+        c1.lr = 0.001;
+        let mut c2 = cfg(64);
+        c2.lr = 0.5;
+        let m1 = simulate_training(&g, &c1).unwrap();
+        let m2 = simulate_training(&g, &c2).unwrap();
+        assert_eq!(m1.peak_mem, m2.peak_mem);
+        assert!((m1.iter_time - m2.iter_time).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adam_uses_more_memory_than_sgd() {
+        let g = zoo::build("vgg16", 3, 100).unwrap();
+        let mut c_sgd = cfg(64);
+        c_sgd.optimizer = Optimizer::Sgd;
+        let mut c_adam = cfg(64);
+        c_adam.optimizer = Optimizer::Adam;
+        let sgd = simulate_training(&g, &c_sgd).unwrap().peak_mem;
+        let adam = simulate_training(&g, &c_adam).unwrap().peak_mem;
+        // VGG-16 has ~40M params -> Adam adds ~2×160MB.
+        assert!(adam > sgd + 200 * (1 << 20), "sgd={sgd} adam={adam}");
+    }
+
+    #[test]
+    fn bigger_batch_more_memory_less_time_per_sample_lightweight() {
+        // Paper Fig 1: lightweight nets behave monotonically.
+        let g = zoo::build("mobilenet-v1", 3, 100).unwrap();
+        let m64 = simulate_training(&g, &cfg(64)).unwrap();
+        let m256 = simulate_training(&g, &cfg(256)).unwrap();
+        assert!(m256.peak_mem > m64.peak_mem);
+        let per64 = m64.iter_time / 64.0;
+        let per256 = m256.iter_time / 256.0;
+        assert!(per256 < per64);
+    }
+
+    #[test]
+    fn oom_on_huge_batch() {
+        let g = zoo::build("vgg16", 3, 100).unwrap();
+        let mut c = cfg(16384);
+        c.device = DeviceProfile::rtx2080();
+        assert!(simulate_training(&g, &c).is_err());
+    }
+
+    #[test]
+    fn rtx3090_fits_what_rtx2080_cannot() {
+        let g = zoo::build("wideresnet28-10", 3, 100).unwrap();
+        let mut big = cfg(1024);
+        big.device = DeviceProfile::rtx2080();
+        let small_dev = simulate_training(&g, &big);
+        big.device = DeviceProfile::rtx3090();
+        let big_dev = simulate_training(&g, &big);
+        // 24GB must handle at least everything 11GB handles; typically more.
+        if small_dev.is_ok() {
+            assert!(big_dev.is_ok());
+        }
+    }
+
+    #[test]
+    fn frameworks_differ() {
+        let g = zoo::build("resnet18", 3, 100).unwrap();
+        let mut ct = cfg(128);
+        ct.framework = Framework::TorchSim;
+        let mut cf = cfg(128);
+        cf.framework = Framework::TfSim;
+        let mt = simulate_training(&g, &ct).unwrap();
+        let mf = simulate_training(&g, &cf).unwrap();
+        assert_ne!(mt.peak_mem, mf.peak_mem);
+        assert!((mt.iter_time - mf.iter_time).abs() > 1e-6);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let g = zoo::build("googlenet", 3, 100).unwrap();
+        let m1 = simulate_training(&g, &cfg(96)).unwrap();
+        let m2 = simulate_training(&g, &cfg(96)).unwrap();
+        assert_eq!(m1.peak_mem, m2.peak_mem);
+        assert_eq!(m1.total_time, m2.total_time);
+    }
+
+    #[test]
+    fn fig2_shape_vgg_fluctuates_mobilenet_smooth() {
+        // Paper Figure 2: between batch 100 and 200 (interval 2) networks
+        // *without* 1×1 convolutions fluctuate; 1×1-dominated nets don't.
+        let vgg = zoo::build("vgg11", 3, 100).unwrap();
+        let mob = zoo::build("mobilenet-v1", 3, 100).unwrap();
+        let mem = |g: &Graph, b: usize| simulate_training(g, &cfg(b)).unwrap().peak_mem;
+        let vgg_mem: Vec<u64> = (100..=200).step_by(2).map(|b| mem(&vgg, b)).collect();
+        let mob_mem: Vec<u64> = (100..=200).step_by(2).map(|b| mem(&mob, b)).collect();
+        // Total relative dip mass: Σ (drop / previous) over decreasing steps.
+        let dip_mass = |xs: &[u64]| -> f64 {
+            xs.windows(2)
+                .filter(|w| w[1] < w[0])
+                .map(|w| (w[0] - w[1]) as f64 / w[0] as f64)
+                .sum()
+        };
+        let (v, m) = (dip_mass(&vgg_mem), dip_mass(&mob_mem));
+        assert!(v > 0.15, "vgg11 should fluctuate strongly, dip mass {v}");
+        assert!(
+            v > 2.0 * m,
+            "vgg11 (no 1×1) must fluctuate ≫ mobilenet (1×1-heavy): {v} vs {m}"
+        );
+    }
+
+    #[test]
+    fn fig3_shape_mobilenet_never_calls_winograd() {
+        // Paper: "MobileNet does not call WINOGRAD_NONFUSED … because it
+        // does not support 1×1 convolution" (its 3×3s are depthwise).
+        let g = zoo::build("mobilenet-v1", 3, 100).unwrap();
+        let m = simulate_training(&g, &cfg(128)).unwrap();
+        assert!(!m.log.calls_algo(crate::sim::ConvAlgo::WinogradNonfused));
+        // While VGG-11 at small batch mostly calls WINOGRAD_NONFUSED.
+        let v = zoo::build("vgg11", 3, 100).unwrap();
+        let mv = simulate_training(&v, &cfg(16)).unwrap();
+        let mix = mv.log.normalized_mix();
+        assert!(mix[&crate::sim::ConvAlgo::WinogradNonfused] > 0.5, "{mix:?}");
+    }
+
+    #[test]
+    fn log_contains_fwd_and_bwd_phases() {
+        let g = zoo::build("vgg11", 3, 100).unwrap();
+        let m = simulate_training(&g, &cfg(128)).unwrap();
+        let fwd = m.log.calls.iter().filter(|c| c.phase == ConvPhase::Forward).count();
+        let bwd_f = m
+            .log
+            .calls
+            .iter()
+            .filter(|c| c.phase == ConvPhase::BackwardFilter)
+            .count();
+        assert_eq!(fwd, 8); // VGG-11 has 8 convs
+        assert_eq!(bwd_f, 8);
+    }
+}

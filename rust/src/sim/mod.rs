@@ -1,0 +1,182 @@
+//! The GPU training simulator — the ground-truth oracle standing in for
+//! the paper's RTX 2080 / RTX 3090 testbeds (see DESIGN.md §2).
+//!
+//! [`simulate_training`] walks a computation graph through a full
+//! training run (forward, backward, optimizer step × iterations) against
+//! a device profile, a framework policy (allocator + algorithm
+//! selection), and the convolution cost models, producing the two
+//! observables the paper predicts: **total run time** and **maximum
+//! memory consumption** (allocator high-water mark + CUDA context, i.e.
+//! what `pynvml` reports).
+
+pub mod device;
+pub mod convalgo;
+pub mod allocator;
+pub mod selector;
+pub mod cudnn_log;
+pub mod executor;
+
+pub use convalgo::{ConvAlgo, ConvPhase};
+pub use cudnn_log::CudnnLog;
+pub use device::DeviceProfile;
+pub use executor::{simulate_training, Measurement, OomError};
+pub use selector::Framework;
+
+/// The two datasets the paper profiles on (§2.1). MNIST is zero-padded
+/// to 32×32 (the LeNet convention) so every zoo model applies to both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DatasetKind {
+    Mnist,
+    Cifar100,
+}
+
+impl DatasetKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            DatasetKind::Mnist => "mnist",
+            DatasetKind::Cifar100 => "cifar100",
+        }
+    }
+
+    pub fn samples(self) -> usize {
+        match self {
+            DatasetKind::Mnist => 60_000,
+            DatasetKind::Cifar100 => 50_000,
+        }
+    }
+
+    pub fn in_channels(self) -> usize {
+        match self {
+            DatasetKind::Mnist => 1,
+            DatasetKind::Cifar100 => 3,
+        }
+    }
+
+    pub fn classes(self) -> usize {
+        match self {
+            DatasetKind::Mnist => 10,
+            DatasetKind::Cifar100 => 100,
+        }
+    }
+
+    pub fn hw(self) -> usize {
+        32
+    }
+}
+
+/// Optimizers the paper varies (Table 2 "Optimizer"). The state multiple
+/// is the number of extra parameter-sized buffers kept on device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Optimizer {
+    Sgd,
+    SgdMomentum,
+    Adam,
+}
+
+impl Optimizer {
+    pub fn name(self) -> &'static str {
+        match self {
+            Optimizer::Sgd => "sgd",
+            Optimizer::SgdMomentum => "sgd-momentum",
+            Optimizer::Adam => "adam",
+        }
+    }
+
+    pub fn state_multiple(self) -> u64 {
+        match self {
+            Optimizer::Sgd => 0,
+            Optimizer::SgdMomentum => 1,
+            Optimizer::Adam => 2,
+        }
+    }
+
+    pub fn by_name(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "sgd" => Ok(Optimizer::Sgd),
+            "sgd-momentum" => Ok(Optimizer::SgdMomentum),
+            "adam" => Ok(Optimizer::Adam),
+            _ => anyhow::bail!("unknown optimizer '{name}'"),
+        }
+    }
+}
+
+/// A training-job configuration — the paper's hyperparameter vector
+/// (§2.1: data size, batch size, epoch, learning rate, optimizer, plus
+/// platform and framework).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub dataset: DatasetKind,
+    pub batch: usize,
+    /// Fraction of the dataset used per epoch (the paper's "data size",
+    /// typically fixed to 0.1).
+    pub data_fraction: f64,
+    pub epochs: usize,
+    /// Learning rate: carried as a feature; training cost is insensitive
+    /// to it (the paper verifies this empirically, §2.2).
+    pub lr: f64,
+    pub optimizer: Optimizer,
+    pub framework: Framework,
+    pub device: DeviceProfile,
+    /// Seed for run-to-run jitter + benchmark noise.
+    pub seed: u64,
+}
+
+impl TrainConfig {
+    /// The paper's default profiling configuration: lr 0.1, epoch 1,
+    /// data size 0.1 (§2.2).
+    pub fn paper_default(dataset: DatasetKind, batch: usize) -> Self {
+        TrainConfig {
+            dataset,
+            batch,
+            data_fraction: 0.1,
+            epochs: 1,
+            lr: 0.1,
+            optimizer: Optimizer::SgdMomentum,
+            framework: Framework::TorchSim,
+            device: DeviceProfile::rtx2080(),
+            seed: 0,
+        }
+    }
+
+    pub fn iterations(&self) -> usize {
+        let per_epoch = ((self.dataset.samples() as f64 * self.data_fraction)
+            / self.batch as f64)
+            .ceil() as usize;
+        per_epoch.max(1) * self.epochs.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iteration_count() {
+        let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, 100);
+        // 50_000 × 0.1 / 100 = 50 iterations.
+        assert_eq!(cfg.iterations(), 50);
+    }
+
+    #[test]
+    fn epochs_multiply_iterations() {
+        let mut cfg = TrainConfig::paper_default(DatasetKind::Mnist, 64);
+        let base = cfg.iterations();
+        cfg.epochs = 3;
+        assert_eq!(cfg.iterations(), base * 3);
+    }
+
+    #[test]
+    fn dataset_constants() {
+        assert_eq!(DatasetKind::Mnist.in_channels(), 1);
+        assert_eq!(DatasetKind::Cifar100.classes(), 100);
+        assert_eq!(DatasetKind::Mnist.hw(), 32);
+    }
+
+    #[test]
+    fn optimizer_state() {
+        assert_eq!(Optimizer::Sgd.state_multiple(), 0);
+        assert_eq!(Optimizer::Adam.state_multiple(), 2);
+        assert!(Optimizer::by_name("adam").is_ok());
+        assert!(Optimizer::by_name("lion").is_err());
+    }
+}

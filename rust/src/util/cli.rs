@@ -1,0 +1,116 @@
+//! Tiny CLI argument parser (the offline crate set has no `clap`).
+//!
+//! Supports `command --flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors and defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn command_and_flags() {
+        let a = parse("fig1 --nets vgg16,resnet50 --seed 42 --verbose");
+        assert_eq!(a.command.as_deref(), Some("fig1"));
+        assert_eq!(a.get("nets"), Some("vgg16,resnet50"));
+        assert_eq!(a.u64_or("seed", 0), 42);
+        assert!(a.bool("verbose"));
+    }
+
+    #[test]
+    fn eq_form_and_positional() {
+        let a = parse("predict model.json --batch=64 extra");
+        assert_eq!(a.command.as_deref(), Some("predict"));
+        assert_eq!(a.positional, vec!["model.json", "extra"]);
+        assert_eq!(a.usize_or("batch", 0), 64);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.f64_or("missing", 0.5), 0.5);
+        assert!(!a.bool("missing"));
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse("cmd --fast");
+        assert!(a.bool("fast"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Support substrates built in-tree because the sandbox is offline:
+//! PRNG (no `rand`), minimal JSON (no `serde`), stats, CLI parsing
+//! (no `clap`), a thread pool (no `tokio`/`rayon`), and a small
+//! property-testing driver (no `proptest`).
+
+pub mod prng;
+pub mod json;
+pub mod stats;
+pub mod cli;
+pub mod threadpool;
+pub mod prop;
+pub mod table;

@@ -1,0 +1,96 @@
+//! A small property-testing driver (the offline crate set has no
+//! `proptest`).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` seeded RNGs derived
+//! from a fixed master seed (override with `DNNABACUS_PROP_SEED` to
+//! replay). On failure it panics with the failing case seed so the exact
+//! input can be reproduced with `check_one`.
+
+use crate::util::prng::Rng;
+
+/// Default number of cases per property (kept modest: the suite has
+/// hundreds of properties and runs on one core).
+pub const DEFAULT_CASES: usize = 64;
+
+fn master_seed() -> u64 {
+    std::env::var("DNNABACUS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD11A_BAC5u64)
+}
+
+/// Run `f` on `cases` independent seeded RNGs; panic with replay info on
+/// the first failure (any panic inside `f` counts as a failure).
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cases: usize, f: F) {
+    let mut root = Rng::new(master_seed() ^ fxhash(name));
+    for case in 0..cases {
+        let seed = root.next_u64();
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        });
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn check_one<F: FnMut(&mut Rng)>(seed: u64, mut f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+/// FNV-1a over the property name so each property has its own stream.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 32, |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 4, |_rng| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut first = None;
+        check_one(42, |rng| {
+            let v = rng.next_u64();
+            if let Some(prev) = first {
+                assert_eq!(prev, v);
+            }
+            first = Some(v);
+        });
+        check_one(42, |rng| {
+            assert_eq!(first.unwrap(), rng.next_u64());
+        });
+    }
+}

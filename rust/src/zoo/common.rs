@@ -1,0 +1,162 @@
+//! Shared building blocks for the model zoo.
+//!
+//! All networks are built in their CIFAR adaptations (3×3 stem, 32×32
+//! inputs, global-average-pool classifier) — the paper profiles training
+//! on MNIST (zero-padded to 32×32, as LeNet does) and CIFAR-100, where
+//! ImageNet stems would collapse the spatial dimensions.
+
+use crate::graph::{Graph, NodeId, OpKind};
+
+/// `Conv → BN → ReLU`, the workhorse block. Returns the ReLU node.
+pub fn conv_bn_relu(
+    g: &mut Graph,
+    x: NodeId,
+    in_ch: usize,
+    out_ch: usize,
+    k: usize,
+    stride: usize,
+    padding: usize,
+) -> NodeId {
+    let c = g.add(OpKind::conv_nobias(in_ch, out_ch, k, stride, padding), &[x]);
+    let b = g.add(OpKind::BatchNorm { channels: out_ch }, &[c]);
+    g.add(OpKind::ReLU, &[b])
+}
+
+/// `Conv → BN` (no activation — residual trunks). Returns the BN node.
+pub fn conv_bn(
+    g: &mut Graph,
+    x: NodeId,
+    in_ch: usize,
+    out_ch: usize,
+    k: usize,
+    stride: usize,
+    padding: usize,
+) -> NodeId {
+    let c = g.add(OpKind::conv_nobias(in_ch, out_ch, k, stride, padding), &[x]);
+    g.add(OpKind::BatchNorm { channels: out_ch }, &[c])
+}
+
+/// Grouped `Conv → BN → ReLU` (ResNeXt / ShuffleNet).
+pub fn gconv_bn_relu(
+    g: &mut Graph,
+    x: NodeId,
+    in_ch: usize,
+    out_ch: usize,
+    k: usize,
+    stride: usize,
+    padding: usize,
+    groups: usize,
+) -> NodeId {
+    let c = g.add(
+        OpKind::conv_grouped(in_ch, out_ch, k, stride, padding, groups),
+        &[x],
+    );
+    let b = g.add(OpKind::BatchNorm { channels: out_ch }, &[c]);
+    g.add(OpKind::ReLU, &[b])
+}
+
+/// Depthwise `Conv → BN → ReLU`.
+pub fn dwconv_bn_relu(g: &mut Graph, x: NodeId, ch: usize, k: usize, stride: usize) -> NodeId {
+    let c = g.add(OpKind::dwconv(ch, k, stride, k / 2), &[x]);
+    let b = g.add(OpKind::BatchNorm { channels: ch }, &[c]);
+    g.add(OpKind::ReLU, &[b])
+}
+
+/// Depthwise `Conv → BN` without activation (MobileNet-V2 style).
+pub fn dwconv_bn(g: &mut Graph, x: NodeId, ch: usize, k: usize, stride: usize) -> NodeId {
+    let c = g.add(OpKind::dwconv(ch, k, stride, k / 2), &[x]);
+    g.add(OpKind::BatchNorm { channels: ch }, &[c])
+}
+
+/// Squeeze-and-excitation gate applied to `x` (`ch` channels, reduction
+/// `r`): GAP → 1×1 conv down → ReLU → 1×1 conv up → Sigmoid → Mul.
+pub fn se_block(g: &mut Graph, x: NodeId, ch: usize, r: usize) -> NodeId {
+    let squeeze = (ch / r).max(1);
+    let gp = g.add(OpKind::GlobalAvgPool, &[x]);
+    let d = g.add(OpKind::conv(ch, squeeze, 1, 1, 0), &[gp]);
+    let d = g.add(OpKind::ReLU, &[d]);
+    let u = g.add(OpKind::conv(squeeze, ch, 1, 1, 0), &[d]);
+    let s = g.add(OpKind::Sigmoid, &[u]);
+    g.add(OpKind::Mul, &[x, s])
+}
+
+/// Global-average-pool classifier head: GAP → Flatten → Linear(ch→classes).
+pub fn gap_classifier(g: &mut Graph, x: NodeId, ch: usize, classes: usize) -> NodeId {
+    let gp = g.add(OpKind::GlobalAvgPool, &[x]);
+    let f = g.add(OpKind::Flatten, &[gp]);
+    g.add(
+        OpKind::Linear {
+            in_features: ch,
+            out_features: classes,
+        },
+        &[f],
+    )
+}
+
+/// Classifier with hidden fully-connected layers and dropout (VGG/AlexNet).
+pub fn fc_classifier(
+    g: &mut Graph,
+    x: NodeId,
+    in_features: usize,
+    hidden: &[usize],
+    classes: usize,
+) -> NodeId {
+    let mut cur = g.add(OpKind::Flatten, &[x]);
+    let mut feats = in_features;
+    for &h in hidden {
+        cur = g.add(
+            OpKind::Linear {
+                in_features: feats,
+                out_features: h,
+            },
+            &[cur],
+        );
+        cur = g.add(OpKind::ReLU, &[cur]);
+        cur = g.add(OpKind::Dropout { p_keep_x100: 50 }, &[cur]);
+        feats = h;
+    }
+    g.add(
+        OpKind::Linear {
+            in_features: feats,
+            out_features: classes,
+        },
+        &[cur],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::infer_shapes;
+
+    #[test]
+    fn se_block_preserves_shape() {
+        let mut g = Graph::new("se");
+        let x = g.add(OpKind::input(3, 32), &[]);
+        let c = conv_bn_relu(&mut g, x, 3, 16, 3, 1, 1);
+        let s = se_block(&mut g, c, 16, 4);
+        let shapes = infer_shapes(&g, 2, 3, 32).unwrap();
+        assert_eq!(shapes[s], shapes[c]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn gap_classifier_output() {
+        let mut g = Graph::new("head");
+        let x = g.add(OpKind::input(3, 32), &[]);
+        let c = conv_bn_relu(&mut g, x, 3, 64, 3, 1, 1);
+        gap_classifier(&mut g, c, 64, 100);
+        let shapes = infer_shapes(&g, 4, 3, 32).unwrap();
+        assert_eq!(shapes.last().unwrap().channels(), 100);
+    }
+
+    #[test]
+    fn fc_classifier_hidden_layers() {
+        let mut g = Graph::new("fc");
+        let x = g.add(OpKind::input(1, 4), &[]);
+        fc_classifier(&mut g, x, 16, &[32, 32], 10);
+        let shapes = infer_shapes(&g, 2, 1, 4).unwrap();
+        assert_eq!(shapes.last().unwrap().channels(), 10);
+        g.validate().unwrap();
+    }
+}

@@ -1,0 +1,99 @@
+//! DenseNet (Huang 2017): every layer concatenates all previous feature
+//! maps. Structurally the densest Concat user in the zoo — stresses the
+//! NSM's Concat row and the allocator (many live tensors).
+
+use super::common::{conv_bn_relu, gap_classifier};
+use crate::graph::{Graph, NodeId, OpKind, PoolAttrs};
+
+/// Dense layer: BN→ReLU→1×1 (bottleneck 4k) → BN→ReLU→3×3 (k), output
+/// concatenated with the input.
+fn dense_layer(g: &mut Graph, x: NodeId, in_ch: usize, growth: usize) -> (NodeId, usize) {
+    let b1 = g.add(OpKind::BatchNorm { channels: in_ch }, &[x]);
+    let r1 = g.add(OpKind::ReLU, &[b1]);
+    let c1 = g.add(OpKind::conv_nobias(in_ch, 4 * growth, 1, 1, 0), &[r1]);
+    let b2 = g.add(OpKind::BatchNorm { channels: 4 * growth }, &[c1]);
+    let r2 = g.add(OpKind::ReLU, &[b2]);
+    let c2 = g.add(OpKind::conv_nobias(4 * growth, growth, 3, 1, 1), &[r2]);
+    let cat = g.add(OpKind::Concat, &[x, c2]);
+    (cat, in_ch + growth)
+}
+
+/// Transition: 1×1 halving conv + 2×2 avg-pool.
+fn transition(g: &mut Graph, x: NodeId, in_ch: usize) -> (NodeId, usize) {
+    let out = in_ch / 2;
+    let c = conv_bn_relu(g, x, in_ch, out, 1, 1, 0);
+    let p = g.add(
+        OpKind::AvgPool(PoolAttrs {
+            kernel: 2,
+            stride: 2,
+            padding: 0,
+        }),
+        &[c],
+    );
+    (p, out)
+}
+
+fn densenet(name: &str, block_cfg: &[usize], growth: usize, in_ch: usize, classes: usize) -> Graph {
+    let mut g = Graph::new(name);
+    let x0 = g.add(OpKind::input(in_ch, 32), &[]);
+    let mut ch = 2 * growth;
+    let mut x = conv_bn_relu(&mut g, x0, in_ch, ch, 3, 1, 1);
+    for (i, &n) in block_cfg.iter().enumerate() {
+        for _ in 0..n {
+            let (nx, nch) = dense_layer(&mut g, x, ch, growth);
+            x = nx;
+            ch = nch;
+        }
+        if i + 1 != block_cfg.len() {
+            let (nx, nch) = transition(&mut g, x, ch);
+            x = nx;
+            ch = nch;
+        }
+    }
+    gap_classifier(&mut g, x, ch, classes);
+    g
+}
+
+pub fn densenet121(in_ch: usize, classes: usize) -> Graph {
+    densenet("densenet121", &[6, 12, 24, 16], 32, in_ch, classes)
+}
+
+pub fn densenet169(in_ch: usize, classes: usize) -> Graph {
+    densenet("densenet169", &[6, 12, 32, 32], 32, in_ch, classes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::infer_shapes;
+
+    #[test]
+    fn densenets_validate() {
+        for g in [densenet121(3, 100), densenet169(3, 100)] {
+            g.validate().unwrap();
+            let shapes = infer_shapes(&g, 2, 3, 32).unwrap();
+            assert_eq!(shapes.last().unwrap().channels(), 100, "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn growth_accumulates_channels() {
+        let g = densenet121(3, 100);
+        let shapes = infer_shapes(&g, 1, 3, 32).unwrap();
+        // Last dense block output: entering channels + 16×32 growth.
+        let pre_gap = &shapes[shapes.len() - 4];
+        assert!(pre_gap.channels() > 16 * 32);
+    }
+
+    #[test]
+    fn densenet121_params_plausible() {
+        // Torchvision DenseNet-121 ≈ 8.0M.
+        let p = densenet121(3, 100).param_count();
+        assert!(p > 6_000_000 && p < 10_000_000, "params={p}");
+    }
+
+    #[test]
+    fn deeper_means_more_params() {
+        assert!(densenet169(3, 100).param_count() > densenet121(3, 100).param_count());
+    }
+}

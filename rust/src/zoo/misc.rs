@@ -1,0 +1,199 @@
+//! The remaining classic networks: LeNet-5, AlexNet, SqueezeNet, NiN and
+//! DarkNet-19.
+
+use super::common::{conv_bn_relu, fc_classifier};
+use crate::graph::{Graph, OpKind};
+
+/// LeNet-5 (LeCun 1998) — the smallest model in the zoo; 32×32 inputs
+/// exactly as the original (MNIST zero-padded).
+pub fn lenet5(in_ch: usize, classes: usize) -> Graph {
+    let mut g = Graph::new("lenet5");
+    let x0 = g.add(OpKind::input(in_ch, 32), &[]);
+    let c1 = g.add(OpKind::conv(in_ch, 6, 5, 1, 0), &[x0]); // 28
+    let r1 = g.add(OpKind::ReLU, &[c1]);
+    let p1 = g.add(OpKind::maxpool(2, 2), &[r1]); // 14
+    let c2 = g.add(OpKind::conv(6, 16, 5, 1, 0), &[p1]); // 10
+    let r2 = g.add(OpKind::ReLU, &[c2]);
+    let p2 = g.add(OpKind::maxpool(2, 2), &[r2]); // 5
+    fc_classifier(&mut g, p2, 16 * 5 * 5, &[120, 84], classes);
+    g
+}
+
+/// AlexNet (Krizhevsky 2012), CIFAR adaptation.
+pub fn alexnet(in_ch: usize, classes: usize) -> Graph {
+    let mut g = Graph::new("alexnet");
+    let x0 = g.add(OpKind::input(in_ch, 32), &[]);
+    let c1 = g.add(OpKind::conv(in_ch, 64, 3, 1, 1), &[x0]);
+    let r1 = g.add(OpKind::ReLU, &[c1]);
+    let p1 = g.add(OpKind::maxpool(2, 2), &[r1]); // 16
+    let c2 = g.add(OpKind::conv(64, 192, 3, 1, 1), &[p1]);
+    let r2 = g.add(OpKind::ReLU, &[c2]);
+    let p2 = g.add(OpKind::maxpool(2, 2), &[r2]); // 8
+    let c3 = g.add(OpKind::conv(192, 384, 3, 1, 1), &[p2]);
+    let r3 = g.add(OpKind::ReLU, &[c3]);
+    let c4 = g.add(OpKind::conv(384, 256, 3, 1, 1), &[r3]);
+    let r4 = g.add(OpKind::ReLU, &[c4]);
+    let c5 = g.add(OpKind::conv(256, 256, 3, 1, 1), &[r4]);
+    let r5 = g.add(OpKind::ReLU, &[c5]);
+    let p5 = g.add(OpKind::maxpool(2, 2), &[r5]); // 4
+    fc_classifier(&mut g, p5, 256 * 4 * 4, &[4096, 4096], classes);
+    g
+}
+
+/// SqueezeNet (Iandola 2016): Fire modules (1×1 squeeze, 1×1+3×3 expand).
+pub fn squeezenet(in_ch: usize, classes: usize) -> Graph {
+    fn fire(
+        g: &mut Graph,
+        x: crate::graph::NodeId,
+        in_ch: usize,
+        squeeze: usize,
+        expand: usize,
+    ) -> (crate::graph::NodeId, usize) {
+        let s = g.add(OpKind::conv(in_ch, squeeze, 1, 1, 0), &[x]);
+        let sr = g.add(OpKind::ReLU, &[s]);
+        let e1 = g.add(OpKind::conv(squeeze, expand, 1, 1, 0), &[sr]);
+        let e1r = g.add(OpKind::ReLU, &[e1]);
+        let e3 = g.add(OpKind::conv(squeeze, expand, 3, 1, 1), &[sr]);
+        let e3r = g.add(OpKind::ReLU, &[e3]);
+        let cat = g.add(OpKind::Concat, &[e1r, e3r]);
+        (cat, 2 * expand)
+    }
+    let mut g = Graph::new("squeezenet");
+    let x0 = g.add(OpKind::input(in_ch, 32), &[]);
+    let c = g.add(OpKind::conv(in_ch, 96, 3, 1, 1), &[x0]);
+    let mut x = g.add(OpKind::ReLU, &[c]);
+    let mut ch = 96;
+    x = g.add(OpKind::maxpool(2, 2), &[x]); // 16
+    for (s, e) in [(16, 64), (16, 64), (32, 128)] {
+        let (nx, nch) = fire(&mut g, x, ch, s, e);
+        x = nx;
+        ch = nch;
+    }
+    x = g.add(OpKind::maxpool(2, 2), &[x]); // 8
+    for (s, e) in [(32, 128), (48, 192), (48, 192), (64, 256)] {
+        let (nx, nch) = fire(&mut g, x, ch, s, e);
+        x = nx;
+        ch = nch;
+    }
+    x = g.add(OpKind::maxpool(2, 2), &[x]); // 4
+    let (nx, nch) = fire(&mut g, x, ch, 64, 256);
+    // Classifier: 1×1 conv to classes then GAP, as in the original.
+    let cc = g.add(OpKind::conv(nch, classes, 1, 1, 0), &[nx]);
+    let cr = g.add(OpKind::ReLU, &[cc]);
+    let gp = g.add(OpKind::GlobalAvgPool, &[cr]);
+    g.add(OpKind::Flatten, &[gp]);
+    g
+}
+
+/// Network-in-Network (Lin 2013): 1×1 "mlpconv" stacks.
+pub fn nin(in_ch: usize, classes: usize) -> Graph {
+    let mut g = Graph::new("nin");
+    let x0 = g.add(OpKind::input(in_ch, 32), &[]);
+    let mut x = x0;
+    let mut ch = in_ch;
+    for (k, c1, c2, c3, pool) in [
+        (5usize, 192usize, 160usize, 96usize, true),
+        (5, 192, 192, 192, true),
+        (3, 192, 192, 0, false), // last mlpconv maps to classes below
+    ] {
+        x = conv_bn_relu(&mut g, x, ch, c1, k, 1, k / 2);
+        x = conv_bn_relu(&mut g, x, c1, c2, 1, 1, 0);
+        let c3 = if c3 == 0 { classes } else { c3 };
+        x = conv_bn_relu(&mut g, x, c2, c3, 1, 1, 0);
+        ch = c3;
+        if pool {
+            x = g.add(OpKind::maxpool(2, 2), &[x]);
+            x = g.add(OpKind::Dropout { p_keep_x100: 50 }, &[x]);
+        }
+    }
+    let gp = g.add(OpKind::GlobalAvgPool, &[x]);
+    let f = g.add(OpKind::Flatten, &[gp]);
+    g.add(OpKind::Softmax, &[f]);
+    g
+}
+
+/// DarkNet-19 (Redmon 2016), the YOLOv2 backbone, CIFAR adaptation:
+/// alternating 3×3 and 1×1 convolutions.
+pub fn darknet19(in_ch: usize, classes: usize) -> Graph {
+    let mut g = Graph::new("darknet19");
+    let x0 = g.add(OpKind::input(in_ch, 32), &[]);
+    let mut x = conv_bn_relu(&mut g, x0, in_ch, 32, 3, 1, 1);
+    let mut ch = 32;
+    x = g.add(OpKind::maxpool(2, 2), &[x]); // 16
+    x = conv_bn_relu(&mut g, x, ch, 64, 3, 1, 1);
+    ch = 64;
+    x = g.add(OpKind::maxpool(2, 2), &[x]); // 8
+    for (a, b) in [(128usize, 64usize), (256, 128)] {
+        x = conv_bn_relu(&mut g, x, ch, a, 3, 1, 1);
+        x = conv_bn_relu(&mut g, x, a, b, 1, 1, 0);
+        x = conv_bn_relu(&mut g, x, b, a, 3, 1, 1);
+        ch = a;
+        x = g.add(OpKind::maxpool(2, 2), &[x]);
+    }
+    // 2×: five-conv groups at 512 / 1024.
+    for big in [512usize, 1024] {
+        let small = big / 2;
+        x = conv_bn_relu(&mut g, x, ch, big, 3, 1, 1);
+        x = conv_bn_relu(&mut g, x, big, small, 1, 1, 0);
+        x = conv_bn_relu(&mut g, x, small, big, 3, 1, 1);
+        x = conv_bn_relu(&mut g, x, big, small, 1, 1, 0);
+        x = conv_bn_relu(&mut g, x, small, big, 3, 1, 1);
+        ch = big;
+    }
+    let cc = g.add(OpKind::conv(ch, classes, 1, 1, 0), &[x]);
+    let gp = g.add(OpKind::GlobalAvgPool, &[cc]);
+    let f = g.add(OpKind::Flatten, &[gp]);
+    g.add(OpKind::Softmax, &[f]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::infer_shapes;
+
+    #[test]
+    fn all_validate_and_classify() {
+        for (g, want) in [
+            (lenet5(1, 10), 10),
+            (alexnet(3, 100), 100),
+            (squeezenet(3, 100), 100),
+            (nin(3, 100), 100),
+            (darknet19(3, 100), 100),
+        ] {
+            g.validate().unwrap();
+            let ch = match g.nodes[0].kind {
+                OpKind::Input { channels, .. } => channels,
+                _ => unreachable!(),
+            };
+            let shapes = infer_shapes(&g, 2, ch, 32).unwrap();
+            assert_eq!(shapes.last().unwrap().channels(), want, "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn lenet_is_tiny() {
+        assert!(lenet5(1, 10).param_count() < 100_000);
+    }
+
+    #[test]
+    fn squeezenet_small_but_alexnet_level_depth() {
+        let sq = squeezenet(3, 100);
+        let ax = alexnet(3, 100);
+        assert!(sq.param_count() < ax.param_count() / 10);
+    }
+
+    #[test]
+    fn darknet_alternates_kernel_sizes() {
+        let g = darknet19(3, 100);
+        let has_1x1 = g.nodes.iter().any(|n| match &n.kind {
+            OpKind::Conv2d(c) => c.is_pointwise(),
+            _ => false,
+        });
+        let has_3x3 = g.nodes.iter().any(|n| match &n.kind {
+            OpKind::Conv2d(c) => c.kh == 3,
+            _ => false,
+        });
+        assert!(has_1x1 && has_3x3);
+    }
+}

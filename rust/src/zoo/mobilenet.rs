@@ -1,0 +1,212 @@
+//! MobileNet-V1/V2, MnasNet and EfficientNet-B0 — the paper's
+//! "lightweight" family: dominated by 1×1 pointwise and depthwise
+//! convolutions, hence smooth cost curves (only the GEMM algorithm
+//! family applies; see paper §2.2 / Figure 1).
+
+use super::common::{conv_bn, conv_bn_relu, dwconv_bn_relu, gap_classifier, se_block};
+use crate::graph::{Graph, NodeId, OpKind};
+
+/// MobileNet-V1 (Howard 2017): depthwise-separable stacks.
+pub fn mobilenet_v1(in_ch: usize, classes: usize) -> Graph {
+    let mut g = Graph::new("mobilenet-v1");
+    let x0 = g.add(OpKind::input(in_ch, 32), &[]);
+    let mut x = conv_bn_relu(&mut g, x0, in_ch, 32, 3, 1, 1);
+    let mut ch = 32;
+    // (out_ch, stride) pairs, CIFAR strides.
+    for (out, s) in [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ] {
+        x = dwconv_bn_relu(&mut g, x, ch, 3, s);
+        x = conv_bn_relu(&mut g, x, ch, out, 1, 1, 0);
+        ch = out;
+    }
+    gap_classifier(&mut g, x, ch, classes);
+    g
+}
+
+/// MobileNet-V2 inverted residual block.
+fn inverted_residual(
+    g: &mut Graph,
+    x: NodeId,
+    in_ch: usize,
+    out_ch: usize,
+    stride: usize,
+    expand: usize,
+    with_se: bool,
+) -> (NodeId, usize) {
+    let mid = in_ch * expand;
+    let mut h = if expand != 1 {
+        conv_bn_relu(g, x, in_ch, mid, 1, 1, 0)
+    } else {
+        x
+    };
+    h = dwconv_bn_relu(g, h, mid, 3, stride);
+    if with_se {
+        h = se_block(g, h, mid, 4);
+    }
+    let y = conv_bn(g, h, mid, out_ch, 1, 1, 0); // linear bottleneck
+    let out = if stride == 1 && in_ch == out_ch {
+        g.add(OpKind::Add, &[y, x])
+    } else {
+        y
+    };
+    (out, out_ch)
+}
+
+/// MobileNet-V2 (Sandler 2018), CIFAR adaptation.
+pub fn mobilenet_v2(in_ch: usize, classes: usize) -> Graph {
+    let mut g = Graph::new("mobilenet-v2");
+    let x0 = g.add(OpKind::input(in_ch, 32), &[]);
+    let mut x = conv_bn_relu(&mut g, x0, in_ch, 32, 3, 1, 1);
+    let mut ch = 32;
+    // (expansion, out_ch, repeats, stride)
+    for (t, c, n, s) in [
+        (1, 16, 1, 1),
+        (6, 24, 2, 1),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ] {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            let (nx, nch) = inverted_residual(&mut g, x, ch, c, stride, t, false);
+            x = nx;
+            ch = nch;
+        }
+    }
+    x = conv_bn_relu(&mut g, x, ch, 1280, 1, 1, 0);
+    gap_classifier(&mut g, x, 1280, classes);
+    g
+}
+
+/// MnasNet-B1-ish (Tan 2019): inverted residuals with mixed expansion.
+pub fn mnasnet(in_ch: usize, classes: usize) -> Graph {
+    let mut g = Graph::new("mnasnet");
+    let x0 = g.add(OpKind::input(in_ch, 32), &[]);
+    let mut x = conv_bn_relu(&mut g, x0, in_ch, 32, 3, 1, 1);
+    let mut ch = 32;
+    for (t, c, n, s, se) in [
+        (1, 16, 1, 1, false),
+        (3, 24, 3, 2, false),
+        (3, 40, 3, 2, true),
+        (6, 80, 3, 2, false),
+        (6, 96, 2, 1, true),
+        (6, 192, 4, 2, true),
+        (6, 320, 1, 1, false),
+    ] {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            let (nx, nch) = inverted_residual(&mut g, x, ch, c, stride, t, se);
+            x = nx;
+            ch = nch;
+        }
+    }
+    x = conv_bn_relu(&mut g, x, ch, 1280, 1, 1, 0);
+    gap_classifier(&mut g, x, 1280, classes);
+    g
+}
+
+/// EfficientNet-B0 (Tan & Le 2019), CIFAR adaptation: MBConv + SE blocks.
+pub fn efficientnet_b0(in_ch: usize, classes: usize) -> Graph {
+    let mut g = Graph::new("efficientnet-b0");
+    let x0 = g.add(OpKind::input(in_ch, 32), &[]);
+    let mut x = conv_bn_relu(&mut g, x0, in_ch, 32, 3, 1, 1);
+    let mut ch = 32;
+    for (t, c, n, s) in [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 40, 2, 2),
+        (6, 80, 3, 2),
+        (6, 112, 3, 1),
+        (6, 192, 4, 2),
+        (6, 320, 1, 1),
+    ] {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            let (nx, nch) = inverted_residual(&mut g, x, ch, c, stride, t, true);
+            x = nx;
+            ch = nch;
+        }
+    }
+    x = conv_bn_relu(&mut g, x, ch, 1280, 1, 1, 0);
+    gap_classifier(&mut g, x, 1280, classes);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{infer_shapes, ConvAttrs};
+
+    fn pointwise_fraction(g: &Graph) -> f64 {
+        let convs: Vec<&ConvAttrs> = g
+            .nodes
+            .iter()
+            .filter_map(|n| match &n.kind {
+                OpKind::Conv2d(c) => Some(c),
+                _ => None,
+            })
+            .collect();
+        let pw = convs.iter().filter(|c| c.is_pointwise()).count();
+        pw as f64 / convs.len() as f64
+    }
+
+    #[test]
+    fn all_validate() {
+        for g in [
+            mobilenet_v1(3, 100),
+            mobilenet_v2(3, 100),
+            mnasnet(3, 100),
+            efficientnet_b0(3, 100),
+        ] {
+            g.validate().unwrap();
+            let shapes = infer_shapes(&g, 2, 3, 32).unwrap();
+            assert_eq!(shapes.last().unwrap().channels(), 100, "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn lightweight_nets_are_pointwise_dominated() {
+        // The paper's observation: these nets use "a large number of 1×1
+        // convolutional kernels".
+        assert!(pointwise_fraction(&mobilenet_v1(3, 100)) > 0.45);
+        assert!(pointwise_fraction(&mobilenet_v2(3, 100)) > 0.5);
+        assert!(pointwise_fraction(&efficientnet_b0(3, 100)) > 0.5);
+    }
+
+    #[test]
+    fn v2_residuals_present() {
+        let g = mobilenet_v2(3, 100);
+        let adds = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::Add))
+            .count();
+        assert!(adds >= 8, "adds={adds}");
+    }
+
+    #[test]
+    fn efficientnet_has_se_gates() {
+        let g = efficientnet_b0(3, 100);
+        let muls = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::Mul))
+            .count();
+        assert_eq!(muls, 16); // one per MBConv block
+    }
+}

@@ -1,0 +1,178 @@
+//! The model zoo: every network the paper profiles.
+//!
+//! 29 "classic" networks (paper §2.1 — used for the 17,300-point
+//! dataset and Figures 1–12), 5 "unseen" networks held out for the
+//! zero-shot evaluation (Figure 13), and the random model generator
+//! (5,500 extra points, §3.1).
+
+pub mod common;
+pub mod vgg;
+pub mod resnet;
+pub mod googlenet;
+pub mod mobilenet;
+pub mod shufflenet;
+pub mod densenet;
+pub mod misc;
+pub mod random;
+
+pub use random::{random_net, RandomNetCfg};
+
+use crate::graph::Graph;
+
+/// A model builder: `(input channels, classes) -> Graph`.
+pub type Builder = fn(usize, usize) -> Graph;
+
+/// The paper's 29 classic networks (training set).
+pub const CLASSIC_29: [(&str, Builder); 29] = [
+    ("lenet5", misc::lenet5),
+    ("alexnet", misc::alexnet),
+    ("vgg11", vgg::vgg11),
+    ("vgg13", vgg::vgg13),
+    ("vgg16", vgg::vgg16),
+    ("vgg19", vgg::vgg19),
+    ("googlenet", googlenet::googlenet),
+    ("resnet18", resnet::resnet18),
+    ("resnet34", resnet::resnet34),
+    ("resnet101", resnet::resnet101),
+    ("resnet152", resnet::resnet152),
+    ("preact-resnet18", resnet::preact_resnet18),
+    ("preact-resnet34", resnet::preact_resnet34),
+    ("se-resnet18", resnet::se_resnet18),
+    ("se-resnet50", resnet::se_resnet50),
+    ("stochasticdepth18", resnet::stochastic_depth_resnet18),
+    ("wideresnet28-10", resnet::wide_resnet28_10),
+    ("resnext29", resnet::resnext29),
+    ("mobilenet-v1", mobilenet::mobilenet_v1),
+    ("mobilenet-v2", mobilenet::mobilenet_v2),
+    ("mnasnet", mobilenet::mnasnet),
+    ("efficientnet-b0", mobilenet::efficientnet_b0),
+    ("squeezenet", misc::squeezenet),
+    ("shufflenet-v1", shufflenet::shufflenet_v1),
+    ("shufflenet-v2", shufflenet::shufflenet_v2),
+    ("densenet121", densenet::densenet121),
+    ("densenet169", densenet::densenet169),
+    ("nin", misc::nin),
+    ("darknet19", misc::darknet19),
+];
+
+/// The 5 unseen networks (Figure 13 zero-shot set). None of these are in
+/// [`CLASSIC_29`].
+pub const UNSEEN_5: [(&str, Builder); 5] = [
+    ("inception-v3", googlenet::inception_v3),
+    ("stochasticdepth34", resnet::stochastic_depth_resnet34),
+    ("resnet50", resnet::resnet50),
+    ("preact-resnet152", resnet::preact_resnet152),
+    ("se-resnet34", resnet::se_resnet34),
+];
+
+/// The models the paper implements in "PyTorch" (18) vs "TensorFlow" (17),
+/// 6 shared — mapped onto our TorchSim/TfSim framework policies.
+pub fn torch_models() -> Vec<&'static str> {
+    CLASSIC_29[..18].iter().map(|(n, _)| *n).collect()
+}
+
+pub fn tf_models() -> Vec<&'static str> {
+    // Last 17, overlapping the torch set by 6.
+    CLASSIC_29[12..].iter().map(|(n, _)| *n).collect()
+}
+
+/// Figure 12's five batch-size-generalization models.
+pub const FIG12_MODELS: [&str; 5] = [
+    "vgg16",
+    "se-resnet18",
+    "squeezenet",
+    "resnet152",
+    "shufflenet-v2",
+];
+
+/// Look up a builder by name across classic + unseen sets.
+pub fn builder(name: &str) -> Option<Builder> {
+    CLASSIC_29
+        .iter()
+        .chain(UNSEEN_5.iter())
+        .find(|(n, _)| *n == name)
+        .map(|(_, b)| *b)
+}
+
+/// Build a named model.
+pub fn build(name: &str, in_ch: usize, classes: usize) -> anyhow::Result<Graph> {
+    builder(name)
+        .map(|b| b(in_ch, classes))
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))
+}
+
+/// All model names (classic then unseen).
+pub fn all_names() -> Vec<&'static str> {
+    CLASSIC_29
+        .iter()
+        .map(|(n, _)| *n)
+        .chain(UNSEEN_5.iter().map(|(n, _)| *n))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::infer_shapes;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn exactly_29_classic_and_5_unseen_all_distinct() {
+        let names: BTreeSet<&str> = all_names().into_iter().collect();
+        assert_eq!(names.len(), 34, "duplicate model names");
+    }
+
+    #[test]
+    fn unseen_set_is_disjoint_from_classic() {
+        let classic: BTreeSet<&str> = CLASSIC_29.iter().map(|(n, _)| *n).collect();
+        for (n, _) in UNSEEN_5 {
+            assert!(!classic.contains(n), "{n} leaked into training set");
+        }
+    }
+
+    #[test]
+    fn every_model_builds_validates_and_infers_cifar_and_mnist() {
+        for name in all_names() {
+            for (in_ch, classes) in [(3usize, 100usize), (1, 10)] {
+                let g = build(name, in_ch, classes).unwrap();
+                g.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+                let shapes = infer_shapes(&g, 2, in_ch, 32)
+                    .unwrap_or_else(|e| panic!("{name}: {e}"));
+                assert_eq!(shapes.last().unwrap().channels(), classes, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_model_reports_flops_and_params() {
+        for name in all_names() {
+            let g = build(name, 3, 100).unwrap();
+            assert!(g.param_count() > 0, "{name}");
+            assert!(g.flops_per_sample(3, 32).unwrap() > 0, "{name}");
+            assert!(g.weighted_layers() >= 2, "{name}");
+        }
+    }
+
+    #[test]
+    fn framework_splits_match_paper_counts() {
+        // 18 torch + 17 tf with 6 shared = 29 total.
+        let torch: BTreeSet<&str> = torch_models().into_iter().collect();
+        let tf: BTreeSet<&str> = tf_models().into_iter().collect();
+        assert_eq!(torch.len(), 18);
+        assert_eq!(tf.len(), 17);
+        assert_eq!(torch.intersection(&tf).count(), 6);
+        assert_eq!(torch.union(&tf).count(), 29);
+    }
+
+    #[test]
+    fn fig12_models_exist() {
+        for name in FIG12_MODELS {
+            assert!(builder(name).is_some(), "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        assert!(build("transformer-9000", 3, 100).is_err());
+    }
+}

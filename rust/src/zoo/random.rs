@@ -1,0 +1,184 @@
+//! Random model generator.
+//!
+//! The paper augments its dataset with 5,500 data points from *randomly
+//! generated* deep neural networks (§3.1) so the predictor sees structure
+//! beyond the 29 hand-built families. This generator emits valid DAGs in
+//! the same operator vocabulary: random stage counts/widths, random block
+//! templates (plain conv, residual, inception-ish branch, depthwise
+//! separable, SE-gated), random kernel sizes/strides — always
+//! shape-correct by construction.
+
+use super::common::{conv_bn, conv_bn_relu, gap_classifier, se_block};
+use crate::graph::{Graph, NodeId, OpKind};
+use crate::util::prng::Rng;
+
+/// Knobs for the generator (defaults match the dataset sweep).
+#[derive(Debug, Clone)]
+pub struct RandomNetCfg {
+    pub min_stages: usize,
+    pub max_stages: usize,
+    pub min_blocks_per_stage: usize,
+    pub max_blocks_per_stage: usize,
+    pub min_width: usize,
+    pub max_width: usize,
+    pub classes: usize,
+    pub in_ch: usize,
+}
+
+impl Default for RandomNetCfg {
+    fn default() -> Self {
+        Self {
+            min_stages: 2,
+            max_stages: 4,
+            min_blocks_per_stage: 1,
+            max_blocks_per_stage: 4,
+            min_width: 16,
+            max_width: 256,
+            classes: 100,
+            in_ch: 3,
+        }
+    }
+}
+
+/// Generate one random network. Deterministic in (`cfg`, `seed`).
+pub fn random_net(cfg: &RandomNetCfg, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut g = Graph::new(&format!("random-{seed:08x}"));
+    let x0 = g.add(OpKind::input(cfg.in_ch, 32), &[]);
+    let stages = rng.range(cfg.min_stages, cfg.max_stages);
+    let mut width = *rng.choose(&[16usize, 24, 32, 48, 64]);
+    width = width.clamp(cfg.min_width, cfg.max_width);
+    let mut x = conv_bn_relu(&mut g, x0, cfg.in_ch, width, 3, 1, 1);
+    let mut ch = width;
+    let mut hw = 32usize;
+    for stage in 0..stages {
+        let blocks = rng.range(cfg.min_blocks_per_stage, cfg.max_blocks_per_stage);
+        let target = (width * (1 << stage)).min(cfg.max_width);
+        for b in 0..blocks {
+            // Downsample at most 3 times so 32×32 never collapses.
+            let can_stride = stage > 0 && b == 0 && hw >= 8;
+            let stride = if can_stride { 2 } else { 1 };
+            if stride == 2 {
+                hw /= 2;
+            }
+            let (nx, nch) = random_block(&mut g, &mut rng, x, ch, target, stride);
+            x = nx;
+            ch = nch;
+        }
+    }
+    gap_classifier(&mut g, x, ch, cfg.classes);
+    g
+}
+
+/// One randomly-shaped block. Always returns a valid (node, channels).
+fn random_block(
+    g: &mut Graph,
+    rng: &mut Rng,
+    x: NodeId,
+    in_ch: usize,
+    out_ch: usize,
+    stride: usize,
+) -> (NodeId, usize) {
+    match rng.below(5) {
+        // Plain conv stack (1-3 convs, random kernel).
+        0 => {
+            let depth = rng.range(1, 3);
+            let mut cur = x;
+            let mut ch = in_ch;
+            for d in 0..depth {
+                let k = *rng.choose(&[1usize, 3, 5]);
+                let s = if d == 0 { stride } else { 1 };
+                cur = conv_bn_relu(g, cur, ch, out_ch, k, s, k / 2);
+                ch = out_ch;
+            }
+            (cur, out_ch)
+        }
+        // Residual basic block.
+        1 => {
+            let shortcut = if stride != 1 || in_ch != out_ch {
+                conv_bn(g, x, in_ch, out_ch, 1, stride, 0)
+            } else {
+                x
+            };
+            let h = conv_bn_relu(g, x, in_ch, out_ch, 3, stride, 1);
+            let y = conv_bn(g, h, out_ch, out_ch, 3, 1, 1);
+            let sum = g.add(OpKind::Add, &[y, shortcut]);
+            (g.add(OpKind::ReLU, &[sum]), out_ch)
+        }
+        // Two-branch inception-ish concat.
+        2 => {
+            let half = (out_ch / 2).max(1);
+            let a = conv_bn_relu(g, x, in_ch, half, 1, stride, 0);
+            let r = conv_bn_relu(g, x, in_ch, half, 1, 1, 0);
+            let b = conv_bn_relu(g, r, half, out_ch - half, 3, stride, 1);
+            let cat = g.add(OpKind::Concat, &[a, b]);
+            (cat, out_ch)
+        }
+        // Depthwise separable.
+        3 => {
+            let dw = g.add(OpKind::dwconv(in_ch, 3, stride, 1), &[x]);
+            let bn = g.add(OpKind::BatchNorm { channels: in_ch }, &[dw]);
+            let r = g.add(OpKind::ReLU, &[bn]);
+            let pw = conv_bn_relu(g, r, in_ch, out_ch, 1, 1, 0);
+            (pw, out_ch)
+        }
+        // SE-gated conv.
+        _ => {
+            let k = *rng.choose(&[3usize, 5]);
+            let c = conv_bn_relu(g, x, in_ch, out_ch, k, stride, k / 2);
+            let s = se_block(g, c, out_ch, 8);
+            (s, out_ch)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::infer_shapes;
+    use crate::util::prop;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let cfg = RandomNetCfg::default();
+        let a = random_net(&cfg, 123);
+        let b = random_net(&cfg, 123);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let c = random_net(&cfg, 124);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn prop_random_nets_always_valid() {
+        let cfg = RandomNetCfg::default();
+        prop::check("random-net-valid", 64, move |rng| {
+            let g = random_net(&cfg, rng.next_u64());
+            g.validate().unwrap();
+            let shapes = infer_shapes(&g, 2, cfg.in_ch, 32).unwrap();
+            assert_eq!(shapes.last().unwrap().channels(), cfg.classes);
+            assert!(g.param_count() > 0);
+        });
+    }
+
+    #[test]
+    fn prop_mnist_config_valid() {
+        let cfg = RandomNetCfg {
+            in_ch: 1,
+            classes: 10,
+            ..Default::default()
+        };
+        prop::check("random-net-mnist", 32, move |rng| {
+            let g = random_net(&cfg, rng.next_u64());
+            infer_shapes(&g, 4, 1, 32).unwrap();
+        });
+    }
+
+    #[test]
+    fn nets_vary_in_size() {
+        let cfg = RandomNetCfg::default();
+        let sizes: Vec<u64> = (0..20).map(|s| random_net(&cfg, s).param_count()).collect();
+        let min = sizes.iter().min().unwrap();
+        let max = sizes.iter().max().unwrap();
+        assert!(max > &(min * 2), "expected diverse sizes, got {sizes:?}");
+    }
+}

@@ -1,0 +1,166 @@
+//! ShuffleNet-V1 (Zhang 2018) and ShuffleNet-V2 (Ma 2018): grouped 1×1
+//! convolutions + channel shuffle. Lightweight family (smooth cost
+//! curves, paper Figure 1); ShuffleNet-V2 appears in Figure 12.
+
+use super::common::{conv_bn_relu, gap_classifier};
+use crate::graph::{Graph, NodeId, OpKind, PoolAttrs};
+
+/// ShuffleNet-V1 unit with grouped 1×1s and channel shuffle.
+fn v1_unit(
+    g: &mut Graph,
+    x: NodeId,
+    in_ch: usize,
+    out_ch: usize,
+    stride: usize,
+    groups: usize,
+) -> (NodeId, usize) {
+    // On stride-2 units the residual is an avg-pool concat, so the branch
+    // produces out_ch - in_ch channels.
+    let branch_out = if stride == 2 { out_ch - in_ch } else { out_ch };
+    let mid = out_ch / 4;
+    let c1 = g.add(OpKind::conv_grouped(in_ch, mid, 1, 1, 0, groups), &[x]);
+    let b1 = g.add(OpKind::BatchNorm { channels: mid }, &[c1]);
+    let r1 = g.add(OpKind::ReLU, &[b1]);
+    let sh = g.add(OpKind::ChannelShuffle { groups }, &[r1]);
+    let dw = g.add(OpKind::dwconv(mid, 3, stride, 1), &[sh]);
+    let bdw = g.add(OpKind::BatchNorm { channels: mid }, &[dw]);
+    let c2 = g.add(
+        OpKind::conv_grouped(mid, branch_out, 1, 1, 0, groups),
+        &[bdw],
+    );
+    let b2 = g.add(OpKind::BatchNorm { channels: branch_out }, &[c2]);
+    if stride == 2 {
+        let p = g.add(
+            OpKind::AvgPool(PoolAttrs {
+                kernel: 3,
+                stride: 2,
+                padding: 1,
+            }),
+            &[x],
+        );
+        let cat = g.add(OpKind::Concat, &[b2, p]);
+        let out = g.add(OpKind::ReLU, &[cat]);
+        (out, out_ch)
+    } else {
+        let sum = g.add(OpKind::Add, &[b2, x]);
+        let out = g.add(OpKind::ReLU, &[sum]);
+        (out, out_ch)
+    }
+}
+
+/// ShuffleNet-V1 (groups = 2), CIFAR adaptation.
+pub fn shufflenet_v1(in_ch: usize, classes: usize) -> Graph {
+    let groups = 2;
+    let mut g = Graph::new("shufflenet-v1");
+    let x0 = g.add(OpKind::input(in_ch, 32), &[]);
+    let mut x = conv_bn_relu(&mut g, x0, in_ch, 24, 3, 1, 1);
+    let mut ch = 24;
+    let stage_out = [200usize, 400, 800];
+    for (stage, &out) in stage_out.iter().enumerate() {
+        let repeats = if stage == 1 { 8 } else { 4 };
+        for b in 0..repeats {
+            let stride = if b == 0 { 2 } else { 1 };
+            let (nx, nch) = v1_unit(&mut g, x, ch, out, stride, groups);
+            x = nx;
+            ch = nch;
+        }
+    }
+    gap_classifier(&mut g, x, ch, classes);
+    g
+}
+
+/// ShuffleNet-V2 basic unit. The real block splits channels in half; our
+/// IR has no Split op, so the identity half is modeled by a pointwise
+/// projection-free pass-through: branch over x then concat with x's
+/// projected half — we emulate with a 1×1 conv producing half channels
+/// (cost structure equivalent: the V2 paper's point is equal-width 1×1s
+/// and no groups).
+fn v2_unit(g: &mut Graph, x: NodeId, in_ch: usize, out_ch: usize, stride: usize) -> (NodeId, usize) {
+    let half = out_ch / 2;
+    if stride == 1 {
+        // Branch on half the channels.
+        let keep = g.add(OpKind::conv_nobias(in_ch, half, 1, 1, 0), &[x]);
+        let c1 = conv_bn_relu(g, x, in_ch, half, 1, 1, 0);
+        let dw = g.add(OpKind::dwconv(half, 3, 1, 1), &[c1]);
+        let bdw = g.add(OpKind::BatchNorm { channels: half }, &[dw]);
+        let c2 = conv_bn_relu(g, bdw, half, half, 1, 1, 0);
+        let cat = g.add(OpKind::Concat, &[keep, c2]);
+        let sh = g.add(OpKind::ChannelShuffle { groups: 2 }, &[cat]);
+        (sh, out_ch)
+    } else {
+        // Downsampling unit: both branches strided.
+        let dwl = g.add(OpKind::dwconv(in_ch, 3, 2, 1), &[x]);
+        let bl = g.add(OpKind::BatchNorm { channels: in_ch }, &[dwl]);
+        let left = conv_bn_relu(g, bl, in_ch, half, 1, 1, 0);
+        let c1 = conv_bn_relu(g, x, in_ch, half, 1, 1, 0);
+        let dwr = g.add(OpKind::dwconv(half, 3, 2, 1), &[c1]);
+        let br = g.add(OpKind::BatchNorm { channels: half }, &[dwr]);
+        let right = conv_bn_relu(g, br, half, half, 1, 1, 0);
+        let cat = g.add(OpKind::Concat, &[left, right]);
+        let sh = g.add(OpKind::ChannelShuffle { groups: 2 }, &[cat]);
+        (sh, out_ch)
+    }
+}
+
+/// ShuffleNet-V2 1× (Figure 12 model), CIFAR adaptation.
+pub fn shufflenet_v2(in_ch: usize, classes: usize) -> Graph {
+    let mut g = Graph::new("shufflenet-v2");
+    let x0 = g.add(OpKind::input(in_ch, 32), &[]);
+    let mut x = conv_bn_relu(&mut g, x0, in_ch, 24, 3, 1, 1);
+    let mut ch = 24;
+    for (out, repeats) in [(116usize, 4usize), (232, 8), (464, 4)] {
+        for b in 0..repeats {
+            let stride = if b == 0 { 2 } else { 1 };
+            let (nx, nch) = v2_unit(&mut g, x, ch, out, stride);
+            x = nx;
+            ch = nch;
+        }
+    }
+    x = conv_bn_relu(&mut g, x, ch, 1024, 1, 1, 0);
+    gap_classifier(&mut g, x, 1024, classes);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::infer_shapes;
+
+    #[test]
+    fn both_versions_validate() {
+        for g in [shufflenet_v1(3, 100), shufflenet_v2(3, 100)] {
+            g.validate().unwrap();
+            let shapes = infer_shapes(&g, 2, 3, 32).unwrap();
+            assert_eq!(shapes.last().unwrap().channels(), 100, "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn channel_shuffle_present() {
+        let g = shufflenet_v1(3, 100);
+        assert!(g
+            .nodes
+            .iter()
+            .any(|n| matches!(n.kind, OpKind::ChannelShuffle { .. })));
+    }
+
+    #[test]
+    fn v2_lighter_than_v1_at_same_classes() {
+        // V2 1× is a compact net; both should be well under 10M params.
+        assert!(shufflenet_v2(3, 100).param_count() < 10_000_000);
+        assert!(shufflenet_v1(3, 100).param_count() < 10_000_000);
+    }
+
+    #[test]
+    fn v2_unit_keeps_spatial_on_stride1() {
+        let g = shufflenet_v2(3, 10);
+        let shapes = infer_shapes(&g, 1, 3, 32).unwrap();
+        // Final feature map before GAP is 4×4 (three stride-2 stages).
+        let last_map = shapes
+            .iter()
+            .rev()
+            .find(|s| s.spatial() > 1)
+            .unwrap();
+        assert_eq!(last_map.spatial(), 4);
+    }
+}

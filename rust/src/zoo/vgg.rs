@@ -1,0 +1,89 @@
+//! VGG family (Simonyan & Zisserman 2014), CIFAR adaptation: stacked 3×3
+//! conv-BN-ReLU stages separated by 2×2 max-pools, FC classifier.
+//! These are the paper's canonical "fluctuating" networks — every conv is
+//! 3×3, so the simulator's Winograd/FFT selection applies throughout.
+
+use super::common::{conv_bn_relu, fc_classifier};
+use crate::graph::{Graph, OpKind};
+
+/// Stage widths; `0` marks a max-pool.
+const VGG11: &[usize] = &[64, 0, 128, 0, 256, 256, 0, 512, 512, 0, 512, 512, 0];
+const VGG13: &[usize] = &[64, 64, 0, 128, 128, 0, 256, 256, 0, 512, 512, 0, 512, 512, 0];
+const VGG16: &[usize] = &[
+    64, 64, 0, 128, 128, 0, 256, 256, 256, 0, 512, 512, 512, 0, 512, 512, 512, 0,
+];
+const VGG19: &[usize] = &[
+    64, 64, 0, 128, 128, 0, 256, 256, 256, 256, 0, 512, 512, 512, 512, 0, 512, 512, 512, 512, 0,
+];
+
+fn vgg(name: &str, cfg: &[usize], in_ch: usize, classes: usize) -> Graph {
+    let mut g = Graph::new(name);
+    let mut x = g.add(OpKind::input(in_ch, 32), &[]);
+    let mut ch = in_ch;
+    for &c in cfg {
+        if c == 0 {
+            x = g.add(OpKind::maxpool(2, 2), &[x]);
+        } else {
+            x = conv_bn_relu(&mut g, x, ch, c, 3, 1, 1);
+            ch = c;
+        }
+    }
+    // After 5 pools on 32x32 the map is 512×1×1.
+    fc_classifier(&mut g, x, ch, &[4096, 4096], classes);
+    g
+}
+
+pub fn vgg11(in_ch: usize, classes: usize) -> Graph {
+    vgg("vgg11", VGG11, in_ch, classes)
+}
+pub fn vgg13(in_ch: usize, classes: usize) -> Graph {
+    vgg("vgg13", VGG13, in_ch, classes)
+}
+pub fn vgg16(in_ch: usize, classes: usize) -> Graph {
+    vgg("vgg16", VGG16, in_ch, classes)
+}
+pub fn vgg19(in_ch: usize, classes: usize) -> Graph {
+    vgg("vgg19", VGG19, in_ch, classes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::infer_shapes;
+
+    #[test]
+    fn vgg16_has_16_weighted_layers() {
+        let g = vgg16(3, 100);
+        assert_eq!(g.weighted_layers(), 13 + 3); // 13 conv + 3 fc
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn vgg_family_shapes_ok() {
+        for g in [vgg11(3, 100), vgg13(3, 100), vgg16(1, 10), vgg19(3, 100)] {
+            let shapes = infer_shapes(&g, 2, chan(&g), 32).unwrap();
+            assert_eq!(shapes.last().unwrap().channels(), out_classes(&g));
+        }
+    }
+
+    fn chan(g: &Graph) -> usize {
+        match g.nodes[0].kind {
+            OpKind::Input { channels, .. } => channels,
+            _ => unreachable!(),
+        }
+    }
+
+    fn out_classes(g: &Graph) -> usize {
+        match g.nodes.last().unwrap().kind {
+            OpKind::Linear { out_features, .. } => out_features,
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn vgg16_params_order_of_magnitude() {
+        // CIFAR VGG-16 w/ 4096 FCs: tens of millions of parameters.
+        let p = vgg16(3, 100).param_count();
+        assert!(p > 30_000_000 && p < 60_000_000, "params={p}");
+    }
+}

@@ -1,0 +1,201 @@
+//! Integration tests: cross-module pipelines (simulate → featurize →
+//! train → predict), the PJRT artifact path, the prediction service
+//! over a real trained backend, and the scheduling application.
+
+use dnnabacus::coordinator::{
+    service::AutoMlBackend, PredictRequest, PredictionService, ServiceConfig,
+};
+use dnnabacus::experiments::Ctx;
+use dnnabacus::features::{feature_vector, StructureRep};
+use dnnabacus::predictor::{AutoMl, Target};
+use dnnabacus::profiler;
+use dnnabacus::scheduler::{ga, optimal, Machines};
+use dnnabacus::sim::{simulate_training, DatasetKind, TrainConfig};
+use dnnabacus::util::stats;
+use dnnabacus::zoo;
+use std::sync::Arc;
+
+fn tiny_ctx(seed: u64) -> Ctx {
+    Ctx {
+        scale: 0.08,
+        seed,
+        cache_dir: None,
+    }
+}
+
+#[test]
+fn pipeline_collect_train_predict_beats_shape_inference() {
+    let ctx = tiny_ctx(1);
+    let corpus = ctx.training_corpus();
+    assert!(corpus.len() > 150, "corpus {}", corpus.len());
+    let (train, test) = corpus.split(0.7, 1);
+    for (target, budget) in [(Target::Time, 0.15), (Target::Memory, 0.15)] {
+        let m = AutoMl::train_opt(&train, target, 1, true);
+        let mre = m.mre_on(&test);
+        assert!(mre < budget, "{} MRE {mre}", target.name());
+    }
+}
+
+#[test]
+fn predictions_track_simulator_on_fresh_configs() {
+    // Train on the sweep, then query configs NOT in the sweep grid and
+    // verify against fresh simulations (generalization smoke test).
+    let ctx = tiny_ctx(2);
+    let corpus = ctx.training_corpus();
+    let time_model = AutoMl::train_opt(&corpus, Target::Time, 2, true);
+    let mem_model = AutoMl::train_opt(&corpus, Target::Memory, 2, true);
+    let mut pred_t = Vec::new();
+    let mut true_t = Vec::new();
+    let mut pred_m = Vec::new();
+    let mut true_m = Vec::new();
+    for (name, batch) in [("vgg13", 72usize), ("resnet34", 136), ("squeezenet", 264)] {
+        let g = zoo::build(name, 3, 100).unwrap();
+        let mut cfg = TrainConfig::paper_default(DatasetKind::Cifar100, batch);
+        cfg.seed = 0x5EED ^ batch as u64;
+        let m = simulate_training(&g, &cfg).unwrap();
+        let f = feature_vector(&g, &cfg, StructureRep::Nsm);
+        pred_t.push(time_model.predict(&f));
+        true_t.push(m.total_time);
+        pred_m.push(mem_model.predict(&f));
+        true_m.push(m.peak_mem as f64);
+    }
+    // Thresholds are loose: this test runs at 8% sweep scale (a few
+    // hundred points); the paper-scale run (EXPERIMENTS.md) is ~1-5%.
+    assert!(stats::mre(&pred_t, &true_t) < 0.35, "time {}", stats::mre(&pred_t, &true_t));
+    assert!(stats::mre(&pred_m, &true_m) < 0.35, "mem {}", stats::mre(&pred_m, &true_m));
+    // Ordering must be preserved (what the scheduler needs).
+    assert!(stats::spearman(&pred_t, &true_t) > 0.9);
+}
+
+#[test]
+fn service_with_trained_backend_screens_oom() {
+    let ctx = tiny_ctx(3);
+    let corpus = ctx.training_corpus();
+    let backend = Arc::new(AutoMlBackend {
+        time_model: AutoMl::train_opt(&corpus, Target::Time, 3, true),
+        memory_model: AutoMl::train_opt(&corpus, Target::Memory, 3, true),
+    });
+    let svc = PredictionService::start(ServiceConfig::default(), backend);
+    // A small job must fit; a monstrous one must be flagged.
+    let small = svc
+        .predict(PredictRequest {
+            id: 1,
+            model: "lenet5".into(),
+            config: TrainConfig::paper_default(DatasetKind::Mnist, 32),
+        })
+        .unwrap();
+    assert!(small.fits_device);
+    assert!(small.time_s > 0.0 && small.memory_bytes > 0.0);
+    let huge = svc
+        .predict(PredictRequest {
+            id: 2,
+            model: "wideresnet28-10".into(),
+            config: TrainConfig::paper_default(DatasetKind::Cifar100, 2048),
+        })
+        .unwrap();
+    assert!(
+        huge.memory_bytes > small.memory_bytes * 3.0,
+        "huge {} vs small {}",
+        huge.memory_bytes,
+        small.memory_bytes
+    );
+    let metrics = svc.shutdown();
+    assert_eq!(metrics.served, 2);
+}
+
+#[test]
+fn scheduling_pipeline_ga_close_to_optimal_under_truth() {
+    // Predicted costs drive the GA; the resulting plan must be close to
+    // the true optimal when evaluated under ground truth.
+    let ctx = tiny_ctx(4);
+    let corpus = ctx.training_corpus();
+    let time_model = AutoMl::train_opt(&corpus, Target::Time, 4, true);
+    let mem_model = AutoMl::train_opt(&corpus, Target::Memory, 4, true);
+    let jobs: Vec<(String, TrainConfig)> = dnnabacus::experiments::scheduling::workload(4)
+        .into_iter()
+        .take(12) // keep the exhaustive oracle fast
+        .collect();
+    let devices = [
+        dnnabacus::sim::DeviceProfile::rtx2080(),
+        dnnabacus::sim::DeviceProfile::rtx3090(),
+    ];
+    let mut predicted = Vec::new();
+    let mut truth = Vec::new();
+    for (name, cfg) in &jobs {
+        let g = zoo::build(name, cfg.dataset.in_channels(), cfg.dataset.classes()).unwrap();
+        let mut p = dnnabacus::scheduler::JobCost {
+            name: name.clone(),
+            time: [0.0; 2],
+            mem: [0; 2],
+        };
+        let mut t = p.clone();
+        for (i, dev) in devices.iter().enumerate() {
+            let mut c = cfg.clone();
+            c.device = dev.clone();
+            let f = feature_vector(&g, &c, StructureRep::Nsm);
+            p.time[i] = time_model.predict(&f);
+            p.mem[i] = (mem_model.predict(&f) * 1.05) as u64;
+            let m = simulate_training(&g, &c);
+            match m {
+                Ok(m) => {
+                    t.time[i] = m.total_time;
+                    t.mem[i] = m.peak_mem;
+                }
+                Err(_) => {
+                    t.time[i] = f64::INFINITY;
+                    t.mem[i] = u64::MAX;
+                }
+            }
+        }
+        predicted.push(p);
+        truth.push(t);
+    }
+    let machines = Machines::paper();
+    let trace = ga::optimize(&predicted, &machines, &ga::GaParams::default());
+    let (_, true_best) = optimal(&truth, &machines).unwrap();
+    let ga_truth =
+        dnnabacus::scheduler::makespan(&truth, &machines, &trace.best_plan).unwrap();
+    assert!(
+        ga_truth <= true_best * 1.35,
+        "GA-under-truth {ga_truth} vs oracle {true_best}"
+    );
+}
+
+#[test]
+fn mlp_pjrt_backend_serves_when_artifacts_present() {
+    if !dnnabacus::runtime::artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    use dnnabacus::coordinator::service::MlpBackend;
+    let backend = Arc::new(MlpBackend::spawn(5).unwrap());
+    let svc = PredictionService::start(ServiceConfig::default(), backend);
+    let rxs: Vec<_> = (0..8)
+        .map(|i| {
+            svc.submit(PredictRequest {
+                id: i,
+                model: "resnet18".into(),
+                config: TrainConfig::paper_default(DatasetKind::Cifar100, 64),
+            })
+        })
+        .collect();
+    for rx in rxs {
+        let p = rx.recv().unwrap().unwrap();
+        assert!(p.time_s.is_finite() && p.memory_bytes.is_finite());
+    }
+    let m = svc.shutdown();
+    assert_eq!(m.served, 8);
+}
+
+#[test]
+fn profiler_random_and_unseen_disjoint_from_classic_models() {
+    let cfg = profiler::SweepCfg {
+        scale: 0.05,
+        ..Default::default()
+    };
+    let unseen = profiler::collect_unseen(&cfg);
+    let classic_names: Vec<&str> = zoo::CLASSIC_29.iter().map(|(n, _)| *n).collect();
+    for p in &unseen.points {
+        assert!(!classic_names.contains(&p.model.as_str()));
+    }
+}

@@ -14,7 +14,7 @@ use dnnabacus::predictor::{AutoMl, Target};
 use dnnabacus::sim::{simulate_training, DatasetKind, TrainConfig};
 use dnnabacus::zoo;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dnnabacus::Result<()> {
     // 1. A profiled dataset (cached under target/ after the first run).
     let ctx = Ctx::default();
     let corpus = ctx.training_corpus();

@@ -8,7 +8,7 @@
 
 use dnnabacus::experiments::{self, Ctx};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dnnabacus::Result<()> {
     let ctx = Ctx::fast();
     for table in experiments::run("fig14", &ctx)? {
         println!("{}", table.render());

@@ -18,7 +18,7 @@ use dnnabacus::sim::{DatasetKind, TrainConfig};
 use dnnabacus::zoo;
 use std::sync::Arc;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dnnabacus::Result<()> {
     let ctx = Ctx::fast();
     let backend: Arc<dyn CostModel> = if std::env::var("BACKEND").as_deref() == Ok("mlp") {
         Arc::new(MlpBackend::spawn(1)?)
@@ -41,7 +41,11 @@ fn main() -> anyhow::Result<()> {
                 id: i as u64,
                 model: names[i % names.len()].to_string(),
                 config: TrainConfig::paper_default(
-                    if i % 2 == 0 { DatasetKind::Cifar100 } else { DatasetKind::Mnist },
+                    if i % 2 == 0 {
+                        DatasetKind::Cifar100
+                    } else {
+                        DatasetKind::Mnist
+                    },
                     16 + (i % 16) * 16,
                 ),
             })
@@ -50,14 +54,11 @@ fn main() -> anyhow::Result<()> {
     let mut ok = 0usize;
     let mut oom = 0usize;
     for rx in rxs {
-        match rx.recv()? {
-            Ok(p) => {
-                ok += 1;
-                if !p.fits_device {
-                    oom += 1;
-                }
+        if let Ok(p) = rx.recv()? {
+            ok += 1;
+            if !p.fits_device {
+                oom += 1;
             }
-            Err(_) => {}
         }
     }
     let elapsed = t0.elapsed().as_secs_f64();

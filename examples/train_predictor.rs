@@ -37,9 +37,13 @@ fn feature_stats(d: &Dataset) -> (Vec<f64>, Vec<f64>) {
     (mean, std)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dnnabacus::Result<()> {
     if !dnnabacus::runtime::artifacts_available() {
-        anyhow::bail!("artifacts missing — run `make artifacts` first");
+        dnnabacus::bail!(
+            "artifacts missing — produce them with python/compile/aot.py; note this \
+             zero-dependency build ships a stub PJRT backend (see rust/src/runtime/pjrt.rs), \
+             so loading artifacts also needs a real XLA/PJRT binding swapped in"
+        );
     }
     // 1. Collect the profiled dataset (L3 simulator substrate).
     let ctx = Ctx {
@@ -68,7 +72,10 @@ fn main() -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     for step in 0..steps {
         let idx = rng.sample_indices(train.len(), b);
-        let x: Vec<Vec<f64>> = idx.iter().map(|&i| norm(&train.points[i].features)).collect();
+        let x: Vec<Vec<f64>> = idx
+            .iter()
+            .map(|&i| norm(&train.points[i].features))
+            .collect();
         let y: Vec<[f64; 2]> = idx
             .iter()
             .map(|&i| {
@@ -90,7 +97,11 @@ fn main() -> anyhow::Result<()> {
     let pred_mem: Vec<f64> = rows.iter().map(|r| r[1].exp()).collect();
     let mre_time = stats::mre(&pred_time, &test.raw_targets(Target::Time));
     let mre_mem = stats::mre(&pred_mem, &test.raw_targets(Target::Memory));
-    println!("\nMLP (PJRT) test MRE: time {:.2}%, memory {:.2}%", mre_time * 100.0, mre_mem * 100.0);
+    println!(
+        "\nMLP (PJRT) test MRE: time {:.2}%, memory {:.2}%",
+        mre_time * 100.0,
+        mre_mem * 100.0
+    );
 
     // 4. Compare with the AutoML shallow models (the paper's winner).
     for target in [Target::Time, Target::Memory] {

@@ -11,7 +11,7 @@ use dnnabacus::predictor::{AutoMl, Target};
 use dnnabacus::util::table::fmt_pct;
 use dnnabacus::zoo;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dnnabacus::Result<()> {
     let ctx = Ctx::fast();
     let train = ctx.classic_dataset();
     let unseen = ctx.unseen_dataset();

@@ -1,6 +1,11 @@
 //! `cargo bench --bench perf_hotpaths` — the §Perf L3 profile: timings
 //! for every stage of the online path (simulate, featurize, train,
 //! predict, serve) recorded before/after optimization in EXPERIMENTS.md.
+//!
+//! Flags (after `--`):
+//!   --scale 0.12     sweep density for the training-corpus stages
+//!   --json PATH      write the results as JSON (the CI bench-smoke job
+//!                    uploads this as the `BENCH_*.json` perf artifact)
 
 use dnnabacus::bench_harness::{self, BenchResult};
 use dnnabacus::coordinator::{
@@ -10,10 +15,14 @@ use dnnabacus::experiments::Ctx;
 use dnnabacus::features::{feature_vector, StructureRep};
 use dnnabacus::predictor::{AutoMl, Target};
 use dnnabacus::sim::{simulate_training, DatasetKind, TrainConfig};
+use dnnabacus::util::cli::Args;
 use dnnabacus::zoo;
 use std::sync::Arc;
 
 fn main() {
+    let args = Args::from_env();
+    let scale = args.f64_or("scale", 0.12);
+    let budget = if scale < 0.1 { 0.3 } else { 1.0 };
     let mut results: Vec<BenchResult> = Vec::new();
 
     // 1. Simulator throughput (the dataset-collection bottleneck).
@@ -22,7 +31,7 @@ fn main() {
         let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, 128);
         results.push(bench_harness::run(
             &format!("simulate_training({name}, b=128)"),
-            1.5,
+            1.5 * budget,
             || {
                 std::hint::black_box(simulate_training(&g, &cfg).ok());
             },
@@ -32,19 +41,23 @@ fn main() {
     // 2. Featurization.
     let g = zoo::build("densenet169", 3, 100).unwrap();
     let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, 64);
-    results.push(bench_harness::run("feature_vector(densenet169)", 1.0, || {
+    results.push(bench_harness::run("feature_vector(densenet169)", budget, || {
         std::hint::black_box(feature_vector(&g, &cfg, StructureRep::Nsm));
     }));
 
     // 3. Predictor train + single-prediction latency.
-    let ctx = Ctx::fast();
+    let ctx = Ctx {
+        scale,
+        cache_dir: None,
+        ..Ctx::default()
+    };
     let corpus = ctx.training_corpus();
-    results.push(bench_harness::run("automl train (time, fast)", 6.0, || {
+    results.push(bench_harness::run("automl train (time, fast)", 6.0 * budget, || {
         std::hint::black_box(AutoMl::train_opt(&corpus, Target::Time, 1, true));
     }));
     let model = AutoMl::train_opt(&corpus, Target::Time, 1, true);
     let f = feature_vector(&g, &cfg, StructureRep::Nsm);
-    results.push(bench_harness::run("predict one (gbdt path)", 1.0, || {
+    results.push(bench_harness::run("predict one (gbdt path)", budget, || {
         std::hint::black_box(model.predict(&f));
     }));
 
@@ -54,7 +67,7 @@ fn main() {
         memory_model: AutoMl::train_opt(&corpus, Target::Memory, 2, true),
     });
     let names: Vec<&str> = zoo::CLASSIC_29.iter().map(|(n, _)| *n).collect();
-    let r = bench_harness::bench("service e2e (64 requests)", 5.0, || {
+    let r = bench_harness::bench("service e2e (64 requests)", 5.0 * budget, || {
         let svc = PredictionService::start(ServiceConfig::default(), backend.clone());
         let rxs: Vec<_> = (0..64)
             .map(|i| {
@@ -70,12 +83,14 @@ fn main() {
         }
         svc.shutdown();
     });
-    println!(
-        "{}  [{:.0} req/s]",
-        r.report(),
-        r.throughput(64.0)
-    );
+    println!("{}  [{:.0} req/s]", r.report(), r.throughput(64.0));
     results.push(r);
 
     println!("\n{} hot paths measured.", results.len());
+
+    if let Some(path) = args.get("json") {
+        let doc = bench_harness::results_to_json("perf_hotpaths", scale, &results);
+        std::fs::write(path, doc.to_string()).expect("write bench json");
+        println!("wrote {path}");
+    }
 }

@@ -1,7 +1,10 @@
 //! Criterion-less benchmarking harness (the offline crate set has no
 //! `criterion`): warmup + timed iterations with mean/σ/percentiles,
-//! plus throughput reporting. Used by every target in `benches/`.
+//! plus throughput reporting and JSON export (the CI bench-smoke job
+//! uploads `BENCH_*.json` artifacts built from [`results_to_json`]).
+//! Used by every target in `benches/`.
 
+use crate::util::json::Json;
 use crate::util::stats;
 use std::time::Instant;
 
@@ -34,6 +37,29 @@ impl BenchResult {
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / self.mean_s
     }
+
+    /// JSON object for the perf-trajectory artifacts.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str())
+            .set("iters", self.iters)
+            .set("mean_s", self.mean_s)
+            .set("stddev_s", self.stddev_s)
+            .set("p50_s", self.p50_s)
+            .set("p99_s", self.p99_s)
+            .set("min_s", self.min_s);
+        o
+    }
+}
+
+/// Bundle a bench run's results as one JSON document.
+pub fn results_to_json(bench: &str, scale: f64, results: &[BenchResult]) -> Json {
+    let mut o = Json::obj();
+    o.set("bench", bench).set("scale", scale).set(
+        "results",
+        Json::Arr(results.iter().map(BenchResult::to_json).collect()),
+    );
+    o
 }
 
 /// Time `f` with automatic iteration-count targeting ~`budget_s` of
@@ -80,6 +106,19 @@ mod tests {
         assert!(r.iters >= 5);
         assert!(r.mean_s >= 0.0 && r.min_s <= r.mean_s);
         assert!(r.p50_s <= r.p99_s + 1e-12);
+    }
+
+    #[test]
+    fn json_export_roundtrips() {
+        let r = bench("tiny", 0.01, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        let j = results_to_json("perf_hotpaths", 0.05, &[r]);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.str("bench").unwrap(), "perf_hotpaths");
+        let rows = back.arr("results").unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].num("mean_s").unwrap() >= 0.0);
     }
 
     #[test]

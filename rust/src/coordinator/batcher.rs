@@ -88,7 +88,7 @@ impl<T> Batcher<T> {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.inner.lock().unwrap().queue.is_empty()
     }
 }
 

@@ -13,8 +13,8 @@
 //!   model or the PJRT MLP artifact), metrics (throughput, latency
 //!   percentiles).
 
-pub mod request;
 pub mod batcher;
+pub mod request;
 pub mod service;
 
 pub use request::{PredictRequest, Prediction};

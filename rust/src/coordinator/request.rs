@@ -17,7 +17,7 @@ impl PredictRequest {
     /// Featurize: build the graph for the config's dataset and extract
     /// the NSM feature vector. This is the request-path CPU work the
     /// batcher amortizes.
-    pub fn featurize(&self) -> anyhow::Result<Vec<f64>> {
+    pub fn featurize(&self) -> crate::Result<Vec<f64>> {
         let g = zoo::build(
             &self.model,
             self.config.dataset.in_channels(),

@@ -15,7 +15,7 @@ use std::time::Duration;
 
 /// A cost model: features → (time seconds, memory bytes).
 pub trait CostModel: Send + Sync {
-    fn predict_costs(&self, features: &[Vec<f64>]) -> anyhow::Result<Vec<(f64, f64)>>;
+    fn predict_costs(&self, features: &[Vec<f64>]) -> crate::Result<Vec<(f64, f64)>>;
     fn name(&self) -> &'static str;
 }
 
@@ -26,7 +26,7 @@ pub struct AutoMlBackend {
 }
 
 impl CostModel for AutoMlBackend {
-    fn predict_costs(&self, features: &[Vec<f64>]) -> anyhow::Result<Vec<(f64, f64)>> {
+    fn predict_costs(&self, features: &[Vec<f64>]) -> crate::Result<Vec<(f64, f64)>> {
         assert_eq!(self.time_model.target, Target::Time);
         assert_eq!(self.memory_model.target, Target::Memory);
         Ok(features
@@ -49,13 +49,13 @@ pub struct MlpBackend {
     _worker: std::thread::JoinHandle<()>,
 }
 
-type MlpJob = (Vec<Vec<f64>>, Sender<anyhow::Result<Vec<(f64, f64)>>>);
+type MlpJob = (Vec<Vec<f64>>, Sender<crate::Result<Vec<(f64, f64)>>>);
 
 impl MlpBackend {
     /// Spawn the inference thread (loads artifacts there).
-    pub fn spawn(seed: u64) -> anyhow::Result<MlpBackend> {
+    pub fn spawn(seed: u64) -> crate::Result<MlpBackend> {
         let (tx, rx) = channel::<MlpJob>();
-        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        let (ready_tx, ready_rx) = channel::<crate::Result<()>>();
         let worker = std::thread::Builder::new()
             .name("mlp-pjrt".into())
             .spawn(move || {
@@ -80,7 +80,7 @@ impl MlpBackend {
             })?;
         ready_rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("mlp worker died"))??;
+            .map_err(|_| crate::err!("mlp worker died"))??;
         Ok(MlpBackend {
             tx: Mutex::new(tx),
             _worker: worker,
@@ -89,16 +89,16 @@ impl MlpBackend {
 }
 
 impl CostModel for MlpBackend {
-    fn predict_costs(&self, features: &[Vec<f64>]) -> anyhow::Result<Vec<(f64, f64)>> {
+    fn predict_costs(&self, features: &[Vec<f64>]) -> crate::Result<Vec<(f64, f64)>> {
         let (out_tx, out_rx) = channel();
         self.tx
             .lock()
             .unwrap()
             .send((features.to_vec(), out_tx))
-            .map_err(|_| anyhow::anyhow!("mlp worker gone"))?;
+            .map_err(|_| crate::err!("mlp worker gone"))?;
         out_rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("mlp worker gone"))?
+            .map_err(|_| crate::err!("mlp worker gone"))?
     }
 
     fn name(&self) -> &'static str {
@@ -139,7 +139,7 @@ struct MetricsInner {
     batch_sizes: Vec<usize>,
 }
 
-type Job = (PredictRequest, Sender<anyhow::Result<Prediction>>);
+type Job = (PredictRequest, Sender<crate::Result<Prediction>>);
 
 /// Handle to a running service.
 pub struct PredictionService {
@@ -217,7 +217,7 @@ impl PredictionService {
                                     for (_, tx, _) in ok_jobs {
                                         errors.fetch_add(1, Ordering::SeqCst);
                                         let _ =
-                                            tx.send(Err(anyhow::anyhow!("backend: {err}")));
+                                            tx.send(Err(crate::err!("backend: {err}")));
                                     }
                                 }
                             }
@@ -237,17 +237,17 @@ impl PredictionService {
     }
 
     /// Submit a request; the receiver yields the prediction.
-    pub fn submit(&self, req: PredictRequest) -> Receiver<anyhow::Result<Prediction>> {
+    pub fn submit(&self, req: PredictRequest) -> Receiver<crate::Result<Prediction>> {
         let (tx, rx) = channel();
         self.queue.push((req, tx));
         rx
     }
 
     /// Convenience: submit and wait.
-    pub fn predict(&self, req: PredictRequest) -> anyhow::Result<Prediction> {
+    pub fn predict(&self, req: PredictRequest) -> crate::Result<Prediction> {
         self.submit(req)
             .recv()
-            .map_err(|_| anyhow::anyhow!("service shut down"))?
+            .map_err(|_| crate::err!("service shut down"))?
     }
 
     pub fn metrics(&self) -> ServiceMetrics {
@@ -282,7 +282,7 @@ mod tests {
     struct FakeModel;
 
     impl CostModel for FakeModel {
-        fn predict_costs(&self, features: &[Vec<f64>]) -> anyhow::Result<Vec<(f64, f64)>> {
+        fn predict_costs(&self, features: &[Vec<f64>]) -> crate::Result<Vec<(f64, f64)>> {
             Ok(features
                 .iter()
                 .map(|f| (f[0], 1e9 + f[0] * 1e6)) // time = batch feature
@@ -353,7 +353,7 @@ mod tests {
     fn oom_flag_set_for_huge_predictions() {
         struct HugeModel;
         impl CostModel for HugeModel {
-            fn predict_costs(&self, f: &[Vec<f64>]) -> anyhow::Result<Vec<(f64, f64)>> {
+            fn predict_costs(&self, f: &[Vec<f64>]) -> crate::Result<Vec<(f64, f64)>> {
                 Ok(f.iter().map(|_| (1.0, 1e18)).collect())
             }
             fn name(&self) -> &'static str {

@@ -11,8 +11,8 @@
 
 pub mod phenomena;
 pub mod prediction;
-pub mod unseen;
 pub mod scheduling;
+pub mod unseen;
 
 use crate::predictor::Dataset;
 use crate::profiler::{self, SweepCfg};
@@ -105,7 +105,7 @@ pub const ALL_EXPERIMENTS: [&str; 11] = [
 ];
 
 /// Run an experiment by name (fig13 takes long; run explicitly).
-pub fn run(name: &str, ctx: &Ctx) -> anyhow::Result<Vec<Table>> {
+pub fn run(name: &str, ctx: &Ctx) -> crate::Result<Vec<Table>> {
     Ok(match name {
         "table1" => vec![phenomena::table1()],
         "fig1" => phenomena::fig1(ctx),
@@ -121,7 +121,7 @@ pub fn run(name: &str, ctx: &Ctx) -> anyhow::Result<Vec<Table>> {
         "fig14" => scheduling::fig14(ctx),
         "headline" => vec![prediction::headline(ctx)],
         "ablation" => vec![prediction::ablation(ctx)],
-        other => anyhow::bail!("unknown experiment '{other}'"),
+        other => crate::bail!("unknown experiment '{other}'"),
     })
 }
 

@@ -149,12 +149,28 @@ pub fn fig3() -> Vec<Table> {
         let g = zoo::build(name, 3, 100).unwrap();
         let mut t = Table::new(
             &format!("Figure 3 — normalized conv-algorithm mix vs batch [{name}]"),
-            &["batch", "IMPLICIT_GEMM", "IMPLICIT_PRECOMP", "GEMM", "WINOGRAD", "FFT", "FFT_TILING"],
+            &[
+                "batch",
+                "IMPLICIT_GEMM",
+                "IMPLICIT_PRECOMP",
+                "GEMM",
+                "WINOGRAD",
+                "FFT",
+                "FFT_TILING",
+            ],
         );
         for &b in &batches {
             let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, b);
             let Ok(m) = simulate_training(&g, &cfg) else {
-                t.row(vec![b.to_string(), "OOM".into(), "".into(), "".into(), "".into(), "".into(), "".into()]);
+                t.row(vec![
+                    b.to_string(),
+                    "OOM".into(),
+                    "".into(),
+                    "".into(),
+                    "".into(),
+                    "".into(),
+                    "".into(),
+                ]);
                 continue;
             };
             let mix = m.log.normalized_mix();

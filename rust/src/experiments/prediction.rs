@@ -115,7 +115,10 @@ pub fn fig8_11(ctx: &Ctx, target: Target, framework: &str) -> Table {
 }
 
 /// The MLP comparison baseline [27][29]: trained through the AOT PJRT
-/// train-step artifact when available, else a ridge stand-in.
+/// train-step artifact when available, else a ridge stand-in. Under the
+/// zero-dependency stub backend ([`crate::runtime::pjrt`]) the PJRT path
+/// always errors, so this falls through to ridge even when artifacts
+/// exist on disk.
 fn mlp_baseline_mre(
     ctx: &Ctx,
     train: &Dataset,
@@ -155,7 +158,7 @@ fn mlp_via_pjrt(
     train: &Dataset,
     test: &Dataset,
     target: Target,
-) -> anyhow::Result<Vec<(String, f64)>> {
+) -> crate::Result<Vec<(String, f64)>> {
     use crate::runtime::MlpPredictor;
     let mut mlp = MlpPredictor::new(ctx.seed)?;
     let b = mlp.manifest.train_batch;
@@ -171,7 +174,10 @@ fn mlp_via_pjrt(
     let mut rng = crate::util::prng::Rng::new(ctx.seed ^ 0x117);
     for _ in 0..steps {
         let idx = rng.sample_indices(train.len(), b);
-        let x: Vec<Vec<f64>> = idx.iter().map(|&i| norm(&train.points[i].features)).collect();
+        let x: Vec<Vec<f64>> = idx
+            .iter()
+            .map(|&i| norm(&train.points[i].features))
+            .collect();
         let y: Vec<[f64; 2]> = idx
             .iter()
             .map(|&i| {

@@ -49,7 +49,7 @@ pub fn wl_tokens(g: &Graph) -> Vec<usize> {
         for i in 0..n {
             let mut neigh: Vec<u64> = adj[i].iter().map(|&j| labels[j]).collect();
             neigh.sort_unstable();
-            let mut h = mix(0x57AB_1E_5EED, labels[i]);
+            let mut h = mix(0x57_AB1E_5EED, labels[i]);
             for l in neigh {
                 h = mix(h, l);
             }

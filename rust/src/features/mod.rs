@@ -10,9 +10,9 @@
 //! [`feature_vector`] assembles them into the fixed-width input consumed
 //! by every predictor (shallow models in Rust, the MLP artifact via XLA).
 
+pub mod embed;
 pub mod indep;
 pub mod nsm;
-pub mod embed;
 
 pub use indep::{indep_features, INDEP_DIM, INDEP_NAMES};
 pub use nsm::{nsm_features, Nsm, NSM_DIM};

@@ -161,8 +161,11 @@ mod tests {
         // Residual nets have Add rows; VGG has none.
         let vgg_nsm = Nsm::build(&zoo::build("vgg16", 3, 100).unwrap());
         let res_nsm = Nsm::build(&zoo::build("resnet18", 3, 100).unwrap());
-        let add_row =
-            |n: &Nsm| -> u32 { (0..OP_TYPE_COUNT).map(|j| n.m[OpType::Add as usize][j]).sum() };
+        let add_row = |n: &Nsm| -> u32 {
+            (0..OP_TYPE_COUNT)
+                .map(|j| n.m[OpType::Add as usize][j])
+                .sum()
+        };
         assert_eq!(add_row(&vgg_nsm), 0);
         assert!(add_row(&res_nsm) > 0);
     }

@@ -40,7 +40,7 @@ pub fn node_flops(g: &Graph, shapes: &[TensorShape], id: NodeId, kind: &OpKind) 
 }
 
 /// Total forward FLOPs for a whole graph at a batch size.
-pub fn graph_flops(g: &Graph, batch: usize, channels: usize, hw: usize) -> anyhow::Result<u64> {
+pub fn graph_flops(g: &Graph, batch: usize, channels: usize, hw: usize) -> crate::Result<u64> {
     let shapes = super::shape::infer_shapes(g, batch, channels, hw)?;
     Ok(g.nodes
         .iter()

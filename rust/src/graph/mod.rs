@@ -10,9 +10,9 @@
 //! * [`crate::features`] — extracts the NSM and graph embeddings,
 //! * [`crate::predictor::shape_inference`] — the paper's baseline.
 
+pub mod flops;
 pub mod op;
 pub mod shape;
-pub mod flops;
 
 pub use op::{ConvAttrs, OpKind, PoolAttrs, OP_TYPE_COUNT};
 pub use shape::infer_shapes;
@@ -100,28 +100,28 @@ impl Graph {
 
     /// Verify the DAG invariants: inputs precede consumers, `Input` nodes
     /// have no inputs, non-`Input` nodes have at least one.
-    pub fn validate(&self) -> anyhow::Result<()> {
+    pub fn validate(&self) -> crate::Result<()> {
         for (id, node) in self.nodes.iter().enumerate() {
             for &src in &node.inputs {
                 if src >= id {
-                    anyhow::bail!("node {id} references later node {src}");
+                    crate::bail!("node {id} references later node {src}");
                 }
             }
             match node.kind {
                 OpKind::Input { .. } => {
                     if !node.inputs.is_empty() {
-                        anyhow::bail!("input node {id} has predecessors");
+                        crate::bail!("input node {id} has predecessors");
                     }
                 }
                 _ => {
                     if node.inputs.is_empty() {
-                        anyhow::bail!("non-input node {id} ({:?}) has no inputs", node.kind.ty());
+                        crate::bail!("non-input node {id} ({:?}) has no inputs", node.kind.ty());
                     }
                 }
             }
         }
         if !matches!(self.nodes.first().map(|n| &n.kind), Some(OpKind::Input { .. })) {
-            anyhow::bail!("graph must start with an Input node");
+            crate::bail!("graph must start with an Input node");
         }
         Ok(())
     }
@@ -142,7 +142,7 @@ impl Graph {
 
     /// Total forward FLOPs for one sample at the given input resolution
     /// (batch handled by callers).
-    pub fn flops_per_sample(&self, channels: usize, hw: usize) -> anyhow::Result<u64> {
+    pub fn flops_per_sample(&self, channels: usize, hw: usize) -> crate::Result<u64> {
         let shapes = infer_shapes(self, 1, channels, hw)?;
         Ok(self
             .nodes

@@ -137,7 +137,10 @@ pub enum OpKind {
     MaxPool(PoolAttrs),
     AvgPool(PoolAttrs),
     GlobalAvgPool,
-    Linear { in_features: usize, out_features: usize },
+    Linear {
+        in_features: usize,
+        out_features: usize,
+    },
     /// Elementwise sum of all inputs (residual connections).
     Add,
     /// Channel-axis concatenation of all inputs (Inception / DenseNet).
@@ -170,7 +173,13 @@ impl OpKind {
         })
     }
 
-    pub fn conv_nobias(in_ch: usize, out_ch: usize, k: usize, stride: usize, padding: usize) -> OpKind {
+    pub fn conv_nobias(
+        in_ch: usize,
+        out_ch: usize,
+        k: usize,
+        stride: usize,
+        padding: usize,
+    ) -> OpKind {
         OpKind::Conv2d(ConvAttrs {
             in_ch,
             out_ch,
@@ -286,7 +295,10 @@ impl OpKind {
             }
             OpKind::BatchNorm { channels } => mix(h, *channels as u64),
             OpKind::MaxPool(p) | OpKind::AvgPool(p) => {
-                mix(mix(mix(h, p.kernel as u64), p.stride as u64), p.padding as u64)
+                mix(
+                    mix(mix(h, p.kernel as u64), p.stride as u64),
+                    p.padding as u64,
+                )
             }
             OpKind::Linear {
                 in_features,

@@ -12,8 +12,16 @@ use super::{Graph, NodeId};
 /// `[n, f]` for flattened/linear tensors.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum TensorShape {
-    Map { n: usize, c: usize, h: usize, w: usize },
-    Vec { n: usize, f: usize },
+    Map {
+        n: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+    },
+    Vec {
+        n: usize,
+        f: usize,
+    },
 }
 
 impl TensorShape {
@@ -58,7 +66,7 @@ pub fn infer_shapes(
     batch: usize,
     channels: usize,
     hw: usize,
-) -> anyhow::Result<Vec<TensorShape>> {
+) -> crate::Result<Vec<TensorShape>> {
     let mut shapes: Vec<TensorShape> = Vec::with_capacity(g.nodes.len());
     for (id, node) in g.nodes.iter().enumerate() {
         let shape = infer_one(g, &shapes, id, &node.kind, batch, channels, hw)?;
@@ -75,13 +83,13 @@ fn infer_one(
     batch: usize,
     in_channels: usize,
     in_hw: usize,
-) -> anyhow::Result<TensorShape> {
+) -> crate::Result<TensorShape> {
     let node = &g.nodes[id];
-    let input = |i: usize| -> anyhow::Result<&TensorShape> {
+    let input = |i: usize| -> crate::Result<&TensorShape> {
         node.inputs
             .get(i)
             .map(|&src| &shapes[src])
-            .ok_or_else(|| anyhow::anyhow!("node {id} missing input {i}"))
+            .ok_or_else(|| crate::err!("node {id} missing input {i}"))
     };
     Ok(match kind {
         OpKind::Input { .. } => TensorShape::Map {
@@ -92,10 +100,10 @@ fn infer_one(
         },
         OpKind::Conv2d(c) => {
             let TensorShape::Map { n, c: ci, h, .. } = *input(0)? else {
-                anyhow::bail!("node {id}: Conv2d over non-map input");
+                crate::bail!("node {id}: Conv2d over non-map input");
             };
             if ci != c.in_ch {
-                anyhow::bail!(
+                crate::bail!(
                     "graph '{}' node {id}: Conv2d expects {} channels, got {ci}",
                     g.name,
                     c.in_ch
@@ -103,7 +111,7 @@ fn infer_one(
             }
             let oh = c.out_hw(h);
             if oh == 0 {
-                anyhow::bail!("node {id}: Conv2d collapses spatial dim (h={h}, k={})", c.kh);
+                crate::bail!("node {id}: Conv2d collapses spatial dim (h={h}, k={})", c.kh);
             }
             TensorShape::Map {
                 n,
@@ -115,7 +123,7 @@ fn infer_one(
         OpKind::BatchNorm { channels } => {
             let s = input(0)?.clone();
             if s.channels() != *channels {
-                anyhow::bail!(
+                crate::bail!(
                     "graph '{}' node {id}: BatchNorm expects {channels} channels, got {}",
                     g.name,
                     s.channels()
@@ -128,17 +136,17 @@ fn infer_one(
         }
         OpKind::MaxPool(p) | OpKind::AvgPool(p) => {
             let TensorShape::Map { n, c, h, .. } = *input(0)? else {
-                anyhow::bail!("node {id}: pool over non-map input");
+                crate::bail!("node {id}: pool over non-map input");
             };
             let oh = p.out_hw(h);
             if oh == 0 {
-                anyhow::bail!("node {id}: pool collapses spatial dim (h={h}, k={})", p.kernel);
+                crate::bail!("node {id}: pool collapses spatial dim (h={h}, k={})", p.kernel);
             }
             TensorShape::Map { n, c, h: oh, w: oh }
         }
         OpKind::GlobalAvgPool => {
             let TensorShape::Map { n, c, .. } = *input(0)? else {
-                anyhow::bail!("node {id}: GlobalAvgPool over non-map input");
+                crate::bail!("node {id}: GlobalAvgPool over non-map input");
             };
             TensorShape::Map { n, c, h: 1, w: 1 }
         }
@@ -154,10 +162,10 @@ fn infer_one(
             out_features,
         } => {
             let TensorShape::Vec { n, f } = *input(0)? else {
-                anyhow::bail!("node {id}: Linear over non-vector input (flatten first)");
+                crate::bail!("node {id}: Linear over non-vector input (flatten first)");
             };
             if f != *in_features {
-                anyhow::bail!(
+                crate::bail!(
                     "graph '{}' node {id}: Linear expects {in_features} features, got {f}",
                     g.name
                 );
@@ -171,7 +179,7 @@ fn infer_one(
             let first = input(0)?.clone();
             for i in 1..node.inputs.len() {
                 if *input(i)? != first {
-                    anyhow::bail!(
+                    crate::bail!(
                         "graph '{}' node {id}: Add shape mismatch: {:?} vs {:?}",
                         g.name,
                         first,
@@ -187,13 +195,13 @@ fn infer_one(
             let a = input(0)?.clone();
             let b = input(1)?;
             if a.channels() != b.channels() {
-                anyhow::bail!("node {id}: Mul channel mismatch");
+                crate::bail!("node {id}: Mul channel mismatch");
             }
             a
         }
         OpKind::Concat => {
             let TensorShape::Map { n, h, w, mut c } = input(0)?.clone() else {
-                anyhow::bail!("node {id}: Concat over non-map input");
+                crate::bail!("node {id}: Concat over non-map input");
             };
             for i in 1..node.inputs.len() {
                 let TensorShape::Map {
@@ -203,10 +211,10 @@ fn infer_one(
                     w: w2,
                 } = *input(i)?
                 else {
-                    anyhow::bail!("node {id}: Concat over non-map input");
+                    crate::bail!("node {id}: Concat over non-map input");
                 };
                 if n2 != n || h2 != h || w2 != w {
-                    anyhow::bail!(
+                    crate::bail!(
                         "graph '{}' node {id}: Concat spatial mismatch ({h}x{w} vs {h2}x{w2})",
                         g.name
                     );
@@ -218,7 +226,7 @@ fn infer_one(
         OpKind::ChannelShuffle { groups } => {
             let s = input(0)?.clone();
             if s.channels() % groups != 0 {
-                anyhow::bail!("node {id}: ChannelShuffle channels not divisible by groups");
+                crate::bail!("node {id}: ChannelShuffle channels not divisible by groups");
             }
             s
         }

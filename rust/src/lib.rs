@@ -35,20 +35,24 @@
 //! * [`coordinator`] — the online prediction service (queue + batcher).
 //! * [`scheduler`] — the §4.3 genetic-algorithm job scheduler.
 //! * [`experiments`] — one regeneration harness per paper figure/table.
-//! * [`util`] — support substrates (PRNG, JSON, stats, CLI, threads).
+//! * [`bench_harness`] — criterion-less timing harness for `benches/`.
+//! * [`util`] — support substrates (PRNG, JSON, stats, CLI, threads,
+//!   errors).
 
-pub mod util;
-pub mod graph;
-pub mod zoo;
-pub mod sim;
+pub mod bench_harness;
+pub mod coordinator;
+pub mod experiments;
 pub mod features;
+pub mod graph;
 pub mod predictor;
 pub mod profiler;
 pub mod runtime;
-pub mod coordinator;
 pub mod scheduler;
-pub mod experiments;
-pub mod bench_harness;
+pub mod sim;
+pub mod util;
+pub mod zoo;
+
+pub use util::error::{Context, DnnError};
 
 /// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = util::error::Result<T>;

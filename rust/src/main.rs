@@ -6,7 +6,8 @@
 //! Experiments (regenerate the paper's tables/figures):
 //!   table1 fig1 fig2 fig3 fig4 fig8 fig9 fig10 fig11 fig12 fig13 fig14
 //!   headline        overall test MRE (paper: 0.9% time / 2.8% memory)
-//!   all             every experiment above except fig13 (slow)
+//!   ablation        structure-independent features vs + NSM
+//!   all             every experiment above except fig13/ablation (slow)
 //!
 //! Pipeline:
 //!   collect         run the profiling sweeps, write dataset JSON
@@ -18,6 +19,10 @@
 //! Common flags: --scale 0.35 --seed 42 --out dir --model vgg16
 //!               --batch 128 --dataset cifar100|mnist --device rtx2080
 //!               --framework pytorch|tensorflow --backend automl|mlp
+//!
+//! `--backend mlp` needs the AOT artifacts (python/compile/aot.py) and a
+//! PJRT binding; this zero-dependency build ships a stub backend, so the
+//! default `automl` backend is the serving path.
 //! ```
 
 use dnnabacus::coordinator::{
@@ -64,7 +69,7 @@ fn ctx_from(args: &Args) -> Ctx {
     }
 }
 
-fn run_experiment(name: &str, args: &Args) -> anyhow::Result<()> {
+fn run_experiment(name: &str, args: &Args) -> dnnabacus::Result<()> {
     let ctx = ctx_from(args);
     for table in experiments::run(name, &ctx)? {
         println!("{}", table.render());
@@ -75,7 +80,7 @@ fn run_experiment(name: &str, args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn run_all(args: &Args) -> anyhow::Result<()> {
+fn run_all(args: &Args) -> dnnabacus::Result<()> {
     let ctx = ctx_from(args);
     for name in experiments::ALL_EXPERIMENTS {
         println!("==== {name} ====");
@@ -90,7 +95,7 @@ fn run_all(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn collect(args: &Args) -> anyhow::Result<()> {
+fn collect(args: &Args) -> dnnabacus::Result<()> {
     let ctx = ctx_from(args);
     let out = PathBuf::from(args.str_or("out", "target/dnnabacus-data"));
     std::fs::create_dir_all(&out)?;
@@ -110,7 +115,7 @@ fn collect(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn train(args: &Args) -> anyhow::Result<()> {
+fn train(args: &Args) -> dnnabacus::Result<()> {
     let ctx = ctx_from(args);
     let out = PathBuf::from(args.str_or("out", "target/dnnabacus-models"));
     std::fs::create_dir_all(&out)?;
@@ -131,7 +136,7 @@ fn train(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn parse_config(args: &Args) -> anyhow::Result<TrainConfig> {
+fn parse_config(args: &Args) -> dnnabacus::Result<TrainConfig> {
     let dataset = match args.str_or("dataset", "cifar100").as_str() {
         "mnist" => DatasetKind::Mnist,
         _ => DatasetKind::Cifar100,
@@ -152,14 +157,18 @@ fn parse_config(args: &Args) -> anyhow::Result<TrainConfig> {
     })
 }
 
-fn predict(args: &Args) -> anyhow::Result<()> {
+fn predict(args: &Args) -> dnnabacus::Result<()> {
     let ctx = ctx_from(args);
     let model_name = args.str_or("model", "vgg16");
     let cfg = parse_config(args)?;
     let corpus = ctx.training_corpus();
     let time_model = AutoMl::train_opt(&corpus, Target::Time, ctx.seed, true);
     let mem_model = AutoMl::train_opt(&corpus, Target::Memory, ctx.seed, true);
-    let g = zoo::build(&model_name, cfg.dataset.in_channels(), cfg.dataset.classes())?;
+    let g = zoo::build(
+        &model_name,
+        cfg.dataset.in_channels(),
+        cfg.dataset.classes(),
+    )?;
     let f = dnnabacus::features::feature_vector(&g, &cfg, dnnabacus::features::StructureRep::Nsm);
     let (pt, pm) = (time_model.predict(&f), mem_model.predict(&f));
     println!(
@@ -180,7 +189,7 @@ fn predict(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn serve(args: &Args) -> anyhow::Result<()> {
+fn serve(args: &Args) -> dnnabacus::Result<()> {
     let ctx = ctx_from(args);
     let n_requests = args.usize_or("requests", 256);
     let backend: Arc<dyn dnnabacus::coordinator::CostModel> =
@@ -233,7 +242,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn nsm_demo(args: &Args) -> anyhow::Result<()> {
+fn nsm_demo(args: &Args) -> dnnabacus::Result<()> {
     let model = args.str_or("model", "resnet18");
     let g = zoo::build(&model, 3, 100)?;
     let nsm = Nsm::build(&g);

@@ -43,7 +43,11 @@ impl ModelKind {
     fn train(self, xs: &[Vec<f64>], ys: &[f64], seed: u64, fast: bool) -> Box<dyn Regressor> {
         match self {
             ModelKind::Gbdt => {
-                let params = if fast { GbdtParams::small() } else { GbdtParams::default() };
+                let params = if fast {
+                    GbdtParams::small()
+                } else {
+                    GbdtParams::default()
+                };
                 Box::new(Gbdt::train(xs, ys, &params, seed))
             }
             ModelKind::RandomForest => {
@@ -129,7 +133,11 @@ impl AutoMl {
 
     /// MRE of this predictor over a dataset.
     pub fn mre_on(&self, data: &Dataset) -> f64 {
-        let pred: Vec<f64> = data.points.iter().map(|p| self.predict(&p.features)).collect();
+        let pred: Vec<f64> = data
+            .points
+            .iter()
+            .map(|p| self.predict(&p.features))
+            .collect();
         stats::mre(&pred, &data.raw_targets(self.target))
     }
 
@@ -152,13 +160,13 @@ impl AutoMl {
         o
     }
 
-    pub fn from_json(j: &Json) -> anyhow::Result<AutoMl> {
+    pub fn from_json(j: &Json) -> crate::Result<AutoMl> {
         let target = match j.str("target")? {
             "time" => Target::Time,
             _ => Target::Memory,
         };
         let model = super::regressor_from_json(
-            j.get("model").ok_or_else(|| anyhow::anyhow!("missing model"))?,
+            j.get("model").ok_or_else(|| crate::err!("missing model"))?,
         )?;
         let winner = ModelKind::ALL
             .into_iter()
@@ -175,12 +183,12 @@ impl AutoMl {
         })
     }
 
-    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
         std::fs::write(path, self.to_json().to_string())?;
         Ok(())
     }
 
-    pub fn load(path: &std::path::Path) -> anyhow::Result<AutoMl> {
+    pub fn load(path: &std::path::Path) -> crate::Result<AutoMl> {
         AutoMl::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
     }
 }

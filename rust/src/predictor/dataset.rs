@@ -57,7 +57,7 @@ impl DataPoint {
         o
     }
 
-    pub fn from_json(j: &Json) -> anyhow::Result<DataPoint> {
+    pub fn from_json(j: &Json) -> crate::Result<DataPoint> {
         let features = j
             .arr("features")?
             .iter()
@@ -171,21 +171,24 @@ impl Dataset {
         Json::Arr(self.points.iter().map(|p| p.to_json()).collect())
     }
 
-    pub fn from_json(j: &Json) -> anyhow::Result<Dataset> {
+    pub fn from_json(j: &Json) -> crate::Result<Dataset> {
         let arr = j
             .as_arr()
-            .ok_or_else(|| anyhow::anyhow!("dataset json must be an array"))?;
+            .ok_or_else(|| crate::err!("dataset json must be an array"))?;
         Ok(Dataset {
-            points: arr.iter().map(DataPoint::from_json).collect::<anyhow::Result<_>>()?,
+            points: arr
+                .iter()
+                .map(DataPoint::from_json)
+                .collect::<crate::Result<_>>()?,
         })
     }
 
-    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
         std::fs::write(path, self.to_json().to_string())?;
         Ok(())
     }
 
-    pub fn load(path: &std::path::Path) -> anyhow::Result<Dataset> {
+    pub fn load(path: &std::path::Path) -> crate::Result<Dataset> {
         let text = std::fs::read_to_string(path)?;
         Dataset::from_json(&Json::parse(&text)?)
     }
@@ -233,8 +236,12 @@ mod tests {
         let (tr, te) = d.split(0.7, 9);
         assert_eq!(tr.len(), 70);
         assert_eq!(te.len(), 30);
-        let batches: std::collections::BTreeSet<usize> =
-            tr.points.iter().chain(&te.points).map(|p| p.batch).collect();
+        let batches: std::collections::BTreeSet<usize> = tr
+            .points
+            .iter()
+            .chain(&te.points)
+            .map(|p| p.batch)
+            .collect();
         assert_eq!(batches.len(), 100); // nothing lost or duplicated
     }
 

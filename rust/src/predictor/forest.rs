@@ -91,14 +91,14 @@ impl Forest {
         }
     }
 
-    pub fn from_json(j: &Json) -> anyhow::Result<Forest> {
+    pub fn from_json(j: &Json) -> crate::Result<Forest> {
         Ok(Forest {
             extra: j.get("extra").and_then(Json::as_bool).unwrap_or(false),
             trees: j
                 .arr("trees")?
                 .iter()
                 .map(Tree::from_json)
-                .collect::<anyhow::Result<_>>()?,
+                .collect::<crate::Result<_>>()?,
         })
     }
 }

@@ -90,7 +90,7 @@ impl Gbdt {
         }
     }
 
-    pub fn from_json(j: &Json) -> anyhow::Result<Gbdt> {
+    pub fn from_json(j: &Json) -> crate::Result<Gbdt> {
         Ok(Gbdt {
             base: j.num("base")?,
             learning_rate: j.num("lr")?,
@@ -98,7 +98,7 @@ impl Gbdt {
                 .arr("trees")?
                 .iter()
                 .map(Tree::from_json)
-                .collect::<anyhow::Result<_>>()?,
+                .collect::<crate::Result<_>>()?,
         })
     }
 }

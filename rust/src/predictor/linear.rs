@@ -69,9 +69,10 @@ impl Ridge {
         }
     }
 
-    pub fn from_json(j: &Json) -> anyhow::Result<Ridge> {
-        let vecf = |k: &str| -> anyhow::Result<Vec<f64>> {
-            Ok(j.arr(k)?.iter().map(|x| x.as_f64().unwrap_or(0.0)).collect())
+    pub fn from_json(j: &Json) -> crate::Result<Ridge> {
+        let vecf = |k: &str| -> crate::Result<Vec<f64>> {
+            let xs = j.arr(k)?;
+            Ok(xs.iter().map(|x| x.as_f64().unwrap_or(0.0)).collect())
         };
         Ok(Ridge {
             w: vecf("w")?,

@@ -8,13 +8,13 @@
 //! on `ln(target)` (time in seconds / memory in bytes span 4 orders of
 //! magnitude across the zoo).
 
-pub mod dataset;
-pub mod tree;
-pub mod gbdt;
-pub mod forest;
-pub mod linear;
 pub mod automl;
+pub mod dataset;
+pub mod forest;
+pub mod gbdt;
+pub mod linear;
 pub mod shape_inference;
+pub mod tree;
 
 pub use automl::{AutoMl, AutoMlReport, ModelKind};
 pub use dataset::{DataPoint, Dataset, Target};
@@ -39,12 +39,12 @@ pub trait Regressor: Send + Sync {
 }
 
 /// Deserialize any regressor written by [`Regressor::to_json`].
-pub fn regressor_from_json(j: &Json) -> anyhow::Result<Box<dyn Regressor>> {
+pub fn regressor_from_json(j: &Json) -> crate::Result<Box<dyn Regressor>> {
     match j.str("kind")? {
         "gbdt" => Ok(Box::new(gbdt::Gbdt::from_json(j)?)),
         "forest" => Ok(Box::new(forest::Forest::from_json(j)?)),
         "ridge" => Ok(Box::new(linear::Ridge::from_json(j)?)),
-        other => anyhow::bail!("unknown regressor kind '{other}'"),
+        other => crate::bail!("unknown regressor kind '{other}'"),
     }
 }
 

@@ -150,11 +150,12 @@ impl Tree {
             self.nodes
                 .iter()
                 .map(|n| {
+                    let enc = |x: usize| if x == LEAF { -1i64 } else { x as i64 };
                     let mut o = Json::obj();
                     o.set("f", n.feature)
                         .set("t", n.threshold)
-                        .set("l", if n.left == LEAF { -1i64 } else { n.left as i64 })
-                        .set("r", if n.right == LEAF { -1i64 } else { n.right as i64 })
+                        .set("l", enc(n.left))
+                        .set("r", enc(n.right))
                         .set("v", n.value);
                     o
                 })
@@ -162,14 +163,14 @@ impl Tree {
         )
     }
 
-    pub fn from_json(j: &Json) -> anyhow::Result<Tree> {
+    pub fn from_json(j: &Json) -> crate::Result<Tree> {
         let arr = j
             .as_arr()
-            .ok_or_else(|| anyhow::anyhow!("tree json must be an array"))?;
+            .ok_or_else(|| crate::err!("tree json must be an array"))?;
         let nodes = arr
             .iter()
             .map(|o| {
-                let idx = |k: &str| -> anyhow::Result<usize> {
+                let idx = |k: &str| -> crate::Result<usize> {
                     let v = o.num(k)?;
                     Ok(if v < 0.0 { LEAF } else { v as usize })
                 };
@@ -181,7 +182,7 @@ impl Tree {
                     value: o.num("v")?,
                 })
             })
-            .collect::<anyhow::Result<Vec<_>>>()?;
+            .collect::<crate::Result<Vec<_>>>()?;
         Ok(Tree { nodes })
     }
 }
@@ -189,7 +190,10 @@ impl Tree {
 /// Quantile bin edges per feature (≤ BINS-1 thresholds each).
 fn bin_edges(xs: &[Vec<f64>], rows: &[usize], dim: usize) -> Vec<Vec<f64>> {
     let sample: Vec<usize> = if rows.len() > 2048 {
-        rows.iter().step_by(rows.len() / 2048 + 1).cloned().collect()
+        rows.iter()
+            .step_by(rows.len() / 2048 + 1)
+            .cloned()
+            .collect()
     } else {
         rows.to_vec()
     };
@@ -393,7 +397,11 @@ mod tests {
                     *counts.entry(i).or_insert(0usize) += 1;
                     break;
                 }
-                i = if x[n.feature] <= n.threshold { n.left } else { n.right };
+                i = if x[n.feature] <= n.threshold {
+                    n.left
+                } else {
+                    n.right
+                };
             }
         }
         assert!(counts.values().all(|&c| c >= 20), "{counts:?}");

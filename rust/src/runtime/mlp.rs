@@ -24,7 +24,7 @@ pub struct MlpPredictor {
 
 impl MlpPredictor {
     /// Load artifacts and He-initialize parameters.
-    pub fn new(seed: u64) -> anyhow::Result<MlpPredictor> {
+    pub fn new(seed: u64) -> crate::Result<MlpPredictor> {
         let manifest = Manifest::load(&artifacts_dir())?;
         let rt = XlaRuntime::cpu()?;
         let mut infer = BTreeMap::new();
@@ -70,7 +70,7 @@ impl MlpPredictor {
     /// Predict (ln time, ln memory) rows for up to `pick_batch` inputs;
     /// inputs are padded to the compiled batch and the padding rows are
     /// dropped from the result.
-    pub fn predict_batch(&self, features: &[Vec<f64>]) -> anyhow::Result<Vec<[f64; 2]>> {
+    pub fn predict_batch(&self, features: &[Vec<f64>]) -> crate::Result<Vec<[f64; 2]>> {
         let mut out = Vec::with_capacity(features.len());
         let max_b = *self.manifest.infer_batches.last().unwrap();
         for chunk in features.chunks(max_b) {
@@ -79,13 +79,13 @@ impl MlpPredictor {
         Ok(out)
     }
 
-    fn predict_chunk(&self, chunk: &[Vec<f64>]) -> anyhow::Result<Vec<[f64; 2]>> {
+    fn predict_chunk(&self, chunk: &[Vec<f64>]) -> crate::Result<Vec<[f64; 2]>> {
         let b = self.pick_batch(chunk.len());
         let exe = &self.infer[&b];
         let dim = self.manifest.input_dim;
         let mut x = vec![0.0f32; b * dim];
         for (i, f) in chunk.iter().enumerate() {
-            anyhow::ensure!(f.len() == dim, "feature dim {} != {dim}", f.len());
+            crate::ensure!(f.len() == dim, "feature dim {} != {dim}", f.len());
             for (j, &v) in f.iter().enumerate() {
                 x[i * dim + j] = v as f32;
             }
@@ -101,13 +101,13 @@ impl MlpPredictor {
 
     /// One SGD step on a (train_batch × dim) minibatch of features and
     /// (train_batch × 2) log-targets. Returns the loss.
-    pub fn train_step(&mut self, x: &[Vec<f64>], y: &[[f64; 2]], lr: f32) -> anyhow::Result<f32> {
+    pub fn train_step(&mut self, x: &[Vec<f64>], y: &[[f64; 2]], lr: f32) -> crate::Result<f32> {
         let exe = self
             .train
             .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("train-step artifact not loaded"))?;
+            .ok_or_else(|| crate::err!("train-step artifact not loaded"))?;
         let b = self.manifest.train_batch;
-        anyhow::ensure!(x.len() == b && y.len() == b, "minibatch must be exactly {b}");
+        crate::ensure!(x.len() == b && y.len() == b, "minibatch must be exactly {b}");
         let dim = self.manifest.input_dim;
         let xt = Tensor::matrix(
             b,
@@ -126,7 +126,7 @@ impl MlpPredictor {
         let mut out = exe.run(&args)?;
         let loss = out
             .pop()
-            .ok_or_else(|| anyhow::anyhow!("empty train-step result"))?;
+            .ok_or_else(|| crate::err!("empty train-step result"))?;
         self.params = out;
         Ok(loss.data[0])
     }

@@ -1,15 +1,16 @@
-//! The XLA/PJRT runtime: loads the AOT artifacts produced by
-//! `python/compile/aot.py` (`make artifacts`) and executes them on the
-//! request path — no Python anywhere at run time.
+//! The XLA/PJRT runtime seam: would load the AOT artifacts produced by
+//! `python/compile/aot.py` and execute them on the request path — no
+//! Python anywhere at run time.
 //!
-//! * [`pjrt`] — thin wrapper over the `xla` crate: HLO text →
-//!   `HloModuleProto` → compile → execute.
+//! * [`pjrt`] — the PJRT API surface (HLO text → compile → execute).
+//!   This zero-dependency build ships the stub backend; see the module
+//!   docs for the swap-in contract.
 //! * [`mlp`] — the predictor-MLP bridge: parameter state, batched
 //!   inference at the compiled batch sizes (with padding), and the
-//!   AOT-compiled SGD train step.
+//!   AOT-compiled SGD train step. Gated on [`artifacts_available`].
 
-pub mod pjrt;
 pub mod mlp;
+pub mod pjrt;
 
 pub use mlp::MlpPredictor;
 pub use pjrt::{Executable, XlaRuntime};
@@ -58,7 +59,7 @@ pub struct Manifest {
 }
 
 impl Manifest {
-    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+    pub fn load(dir: &Path) -> crate::Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))?;
         let j = crate::util::json::Json::parse(&text)?;
         let layer_dims = j

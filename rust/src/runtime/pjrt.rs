@@ -1,42 +1,48 @@
-//! PJRT wrapper: compile HLO-text artifacts on the CPU client and
-//! execute them with `f32` tensors. Follows /opt/xla-example/load_hlo.
+//! PJRT wrapper: the seam where AOT-compiled HLO-text artifacts would be
+//! compiled and executed with `f32` tensors.
+//!
+//! The offline crate set has no XLA/PJRT binding, so this build ships the
+//! **stub backend**: the [`Tensor`] data model and the full [`XlaRuntime`]
+//! / [`Executable`] API surface compile and are exercised by the rest of
+//! the crate, but [`XlaRuntime::load_hlo_text`] reports the backend as
+//! unavailable. Callers already gate on
+//! [`crate::runtime::artifacts_available`] (and the [`super::mlp`] /
+//! coordinator paths fall back to the pure-Rust predictors), so the stub
+//! degrades the MLP baseline, never the core pipeline. Swapping in a real
+//! PJRT binding only touches this file.
 
 use std::path::Path;
 use std::sync::Arc;
 
-/// Shared PJRT client (one per process; compilation and execution are
+/// Shared runtime handle (one per process; compilation and execution are
 /// routed through it).
 pub struct XlaRuntime {
-    client: xla::PjRtClient,
+    platform: &'static str,
 }
 
 impl XlaRuntime {
-    pub fn cpu() -> anyhow::Result<Arc<XlaRuntime>> {
+    /// Create the CPU runtime handle. The stub always constructs; the
+    /// unavailability is reported at compile/load time, mirroring how a
+    /// real PJRT client defers plugin errors.
+    pub fn cpu() -> crate::Result<Arc<XlaRuntime>> {
         Ok(Arc::new(XlaRuntime {
-            client: xla::PjRtClient::cpu()?,
+            platform: "stub-cpu",
         }))
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.platform.to_string()
     }
 
     /// Load + compile an HLO text file (the AOT interchange format; see
     /// python/compile/aot.py for why text rather than serialized proto).
-    pub fn load_hlo_text(self: &Arc<Self>, path: &Path) -> anyhow::Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(Executable {
-            exe,
-            name: path
-                .file_name()
-                .map(|s| s.to_string_lossy().into_owned())
-                .unwrap_or_default(),
-        })
+    /// The stub backend cannot compile, so this always errors.
+    pub fn load_hlo_text(self: &Arc<Self>, path: &Path) -> crate::Result<Executable> {
+        Err(crate::err!(
+            "XLA/PJRT backend unavailable in this zero-dependency build \
+             (cannot compile '{}'); the AutoML backend serves instead",
+            path.display()
+        ))
     }
 }
 
@@ -75,49 +81,30 @@ impl Tensor {
             data,
         }
     }
-
-    fn to_literal(&self) -> anyhow::Result<xla::Literal> {
-        let lit = xla::Literal::vec1(&self.data);
-        if self.dims.is_empty() {
-            // Rank-0: reshape to scalar.
-            Ok(lit.reshape(&[])?)
-        } else {
-            Ok(lit.reshape(&self.dims)?)
-        }
-    }
-
-    fn from_literal(lit: &xla::Literal) -> anyhow::Result<Tensor> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<i64> = shape.dims().to_vec();
-        let data = lit.to_vec::<f32>()?;
-        Ok(Tensor { dims, data })
-    }
 }
 
-/// A compiled artifact ready to run.
+/// A compiled artifact ready to run. Unconstructible under the stub
+/// backend (only [`XlaRuntime::load_hlo_text`] produces one).
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
     pub name: String,
+    _backend: (),
 }
 
 impl Executable {
     /// Execute with f32 tensors; returns the flattened output tuple (the
     /// AOT entrypoints lower with `return_tuple=True`).
-    pub fn run(&self, args: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
-        let literals: Vec<xla::Literal> = args
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<anyhow::Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        parts.iter().map(Tensor::from_literal).collect()
+    pub fn run(&self, _args: &[Tensor]) -> crate::Result<Vec<Tensor>> {
+        Err(crate::err!(
+            "XLA/PJRT backend unavailable in this zero-dependency build \
+             (executable '{}')",
+            self.name
+        ))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::{artifact_path, artifacts_available, artifacts_dir, Manifest};
 
     #[test]
     fn tensor_shape_checks() {
@@ -132,26 +119,18 @@ mod tests {
     }
 
     #[test]
-    fn infer_artifact_runs_end_to_end() {
-        if !artifacts_available() {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        }
-        let m = Manifest::load(&artifacts_dir()).unwrap();
+    fn scalar_and_vector_shapes() {
+        assert!(Tensor::scalar(1.5).dims.is_empty());
+        assert_eq!(Tensor::vector(vec![0.0; 4]).dims, vec![4]);
+    }
+
+    #[test]
+    fn stub_backend_reports_unavailable() {
         let rt = XlaRuntime::cpu().unwrap();
-        let exe = rt
-            .load_hlo_text(&artifact_path("mlp_infer_b1.hlo.txt"))
-            .unwrap();
-        // Zero params, zero input -> zero output (linear head, zero bias).
-        let mut args: Vec<Tensor> = Vec::new();
-        for (din, dout) in &m.layer_dims {
-            args.push(Tensor::matrix(*din, *dout, vec![0.0; din * dout]));
-            args.push(Tensor::vector(vec![0.0; *dout]));
-        }
-        args.push(Tensor::matrix(1, m.input_dim, vec![0.5; m.input_dim]));
-        let out = exe.run(&args).unwrap();
-        assert_eq!(out.len(), 1);
-        assert_eq!(out[0].dims, vec![1, m.output_dim as i64]);
-        assert!(out[0].data.iter().all(|&x| x == 0.0));
+        assert_eq!(rt.platform(), "stub-cpu");
+        let err = rt
+            .load_hlo_text(Path::new("artifacts/mlp_infer_b1.hlo.txt"))
+            .unwrap_err();
+        assert!(format!("{err}").contains("unavailable"), "{err}");
     }
 }

@@ -36,7 +36,7 @@ pub struct GaTrace {
 
 /// Fitness: makespan with OOM plans heavily penalized (the GA must learn
 /// to keep the big jobs on the 24 GB machine).
-fn fitness(jobs: &[JobCost], machines: &Machines, plan: &Plan) -> f64 {
+fn fitness(jobs: &[JobCost], machines: &Machines, plan: &[u8]) -> f64 {
     makespan(jobs, machines, plan).unwrap_or(f64::INFINITY)
 }
 

@@ -42,7 +42,7 @@ pub type Plan = Vec<u8>;
 
 /// Jobs run sequentially per machine; the plan's cost is the makespan.
 /// Returns `None` if any job OOMs on its assigned machine.
-pub fn makespan(jobs: &[JobCost], machines: &Machines, plan: &Plan) -> Option<f64> {
+pub fn makespan(jobs: &[JobCost], machines: &Machines, plan: &[u8]) -> Option<f64> {
     assert_eq!(jobs.len(), plan.len());
     let mut total = [0.0f64; 2];
     for (job, &m) in jobs.iter().zip(plan) {
@@ -131,9 +131,9 @@ mod tests {
             },
         ];
         let m = Machines::paper();
-        assert_eq!(makespan(&jobs, &m, &vec![0, 0]), Some(30.0));
-        assert_eq!(makespan(&jobs, &m, &vec![0, 1]), Some(10.0));
-        assert_eq!(makespan(&jobs, &m, &vec![1, 1]), Some(15.0));
+        assert_eq!(makespan(&jobs, &m, &[0, 0]), Some(30.0));
+        assert_eq!(makespan(&jobs, &m, &[0, 1]), Some(10.0));
+        assert_eq!(makespan(&jobs, &m, &[1, 1]), Some(15.0));
     }
 
     #[test]
@@ -144,8 +144,8 @@ mod tests {
             mem: [12 << 30, 12 << 30], // > 11 GB, < 24 GB
         }];
         let m = Machines::paper();
-        assert_eq!(makespan(&jobs, &m, &vec![0]), None);
-        assert!(makespan(&jobs, &m, &vec![1]).is_some());
+        assert_eq!(makespan(&jobs, &m, &[0]), None);
+        assert!(makespan(&jobs, &m, &[1]).is_some());
     }
 
     #[test]

@@ -217,7 +217,11 @@ pub fn kernel_time(algo: ConvAlgo, call: &ConvCall, phase: ConvPhase, dev: &Devi
         ConvAlgo::ImplicitGemm => flops / (dev.peak_flops * 0.33 * occ),
         ConvAlgo::ImplicitPrecompGemm => flops / (dev.peak_flops * 0.42 * occ),
         ConvAlgo::Gemm => {
-            let eff = if call.attrs.is_pointwise() { 0.62 } else { 0.50 };
+            let eff = if call.attrs.is_pointwise() {
+                0.62
+            } else {
+                0.50
+            };
             let ws_traffic = workspace_bytes(ConvAlgo::Gemm, call) as f64 * 2.0 / dev.mem_bw;
             flops / (dev.peak_flops * eff * occ) + ws_traffic
         }
@@ -248,7 +252,13 @@ pub fn kernel_time(algo: ConvAlgo, call: &ConvCall, phase: ConvPhase, dev: &Devi
 /// once the batch amortizes it — calibrated so the takeover lands in the
 /// batch ≈100–200 band on VGG-scale layers, where the paper's Figure 2
 /// sees its fluctuations.
-fn fft_time(call: &ConvCall, dev: &DeviceProfile, pad: usize, tiles_per_sample: usize, occ: f64) -> f64 {
+fn fft_time(
+    call: &ConvCall,
+    dev: &DeviceProfile,
+    pad: usize,
+    tiles_per_sample: usize,
+    occ: f64,
+) -> f64 {
     const FILTER_EFF: f64 = 0.012; // tiny batched FFTs: ~1% of peak
     const DATA_EFF: f64 = 0.50;
     const POINTWISE_EFF: f64 = 0.75; // cgemm batched over spectrum points
@@ -382,9 +392,18 @@ mod tests {
     #[test]
     fn time_decreases_per_sample_with_batch() {
         let dev = DeviceProfile::rtx3090();
-        let t8 = kernel_time(ConvAlgo::ImplicitGemm, &conv3x3(64, 64, 32, 8), ConvPhase::Forward, &dev);
-        let t256 =
-            kernel_time(ConvAlgo::ImplicitGemm, &conv3x3(64, 64, 32, 256), ConvPhase::Forward, &dev);
+        let t8 = kernel_time(
+            ConvAlgo::ImplicitGemm,
+            &conv3x3(64, 64, 32, 8),
+            ConvPhase::Forward,
+            &dev,
+        );
+        let t256 = kernel_time(
+            ConvAlgo::ImplicitGemm,
+            &conv3x3(64, 64, 32, 256),
+            ConvPhase::Forward,
+            &dev,
+        );
         assert!(t256 / 256.0 < t8 / 8.0);
     }
 
@@ -400,8 +419,18 @@ mod tests {
     #[test]
     fn ampere_faster_than_turing_same_call() {
         let c = conv3x3(256, 256, 16, 64);
-        let t = kernel_time(ConvAlgo::Gemm, &c, ConvPhase::Forward, &DeviceProfile::rtx2080());
-        let a = kernel_time(ConvAlgo::Gemm, &c, ConvPhase::Forward, &DeviceProfile::rtx3090());
+        let t = kernel_time(
+            ConvAlgo::Gemm,
+            &c,
+            ConvPhase::Forward,
+            &DeviceProfile::rtx2080(),
+        );
+        let a = kernel_time(
+            ConvAlgo::Gemm,
+            &c,
+            ConvPhase::Forward,
+            &DeviceProfile::rtx3090(),
+        );
         assert!(a < t);
     }
 }

@@ -54,11 +54,11 @@ impl DeviceProfile {
         }
     }
 
-    pub fn by_name(name: &str) -> anyhow::Result<Self> {
+    pub fn by_name(name: &str) -> crate::Result<Self> {
         match name {
             "rtx2080" => Ok(Self::rtx2080()),
             "rtx3090" => Ok(Self::rtx3090()),
-            _ => anyhow::bail!("unknown device '{name}' (rtx2080|rtx3090)"),
+            _ => crate::bail!("unknown device '{name}' (rtx2080|rtx3090)"),
         }
     }
 

@@ -22,14 +22,25 @@ use crate::util::prng::Rng;
 /// Training would exceed device memory — the failure mode the paper's
 /// predictor exists to prevent (§1: "training tasks may fail due to
 /// insufficient memory").
-#[derive(Debug, thiserror::Error)]
-#[error("OOM: {needed} bytes reserved exceeds budget {budget} on {device} ({model})")]
+#[derive(Debug, Clone)]
 pub struct OomError {
     pub model: String,
     pub device: &'static str,
     pub needed: u64,
     pub budget: u64,
 }
+
+impl std::fmt::Display for OomError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "OOM: {} bytes reserved exceeds budget {} on {} ({})",
+            self.needed, self.budget, self.device, self.model
+        )
+    }
+}
+
+impl std::error::Error for OomError {}
 
 /// What the profiler observes for one training run.
 #[derive(Debug, Clone)]
@@ -53,7 +64,7 @@ pub fn simulate_training(graph: &Graph, cfg: &TrainConfig) -> Result<Measurement
     let shapes = infer_shapes(graph, cfg.batch, cfg.dataset.in_channels(), cfg.dataset.hw())
         .expect("zoo graphs always infer; random graphs validated at build");
     let budget = cfg.device.vram - cfg.device.context_bytes;
-    let mut rng = Rng::new(cfg.seed ^ 0xABAC_05);
+    let mut rng = Rng::new(cfg.seed ^ 0xAB_AC05);
 
     // Framework-specific allocator.
     let mut torch_alloc;
@@ -458,7 +469,12 @@ mod tests {
     fn log_contains_fwd_and_bwd_phases() {
         let g = zoo::build("vgg11", 3, 100).unwrap();
         let m = simulate_training(&g, &cfg(128)).unwrap();
-        let fwd = m.log.calls.iter().filter(|c| c.phase == ConvPhase::Forward).count();
+        let fwd = m
+            .log
+            .calls
+            .iter()
+            .filter(|c| c.phase == ConvPhase::Forward)
+            .count();
         let bwd_f = m
             .log
             .calls

@@ -9,12 +9,12 @@
 //! memory consumption** (allocator high-water mark + CUDA context, i.e.
 //! what `pynvml` reports).
 
-pub mod device;
-pub mod convalgo;
 pub mod allocator;
-pub mod selector;
+pub mod convalgo;
 pub mod cudnn_log;
+pub mod device;
 pub mod executor;
+pub mod selector;
 
 pub use convalgo::{ConvAlgo, ConvPhase};
 pub use cudnn_log::CudnnLog;
@@ -90,12 +90,12 @@ impl Optimizer {
         }
     }
 
-    pub fn by_name(name: &str) -> anyhow::Result<Self> {
+    pub fn by_name(name: &str) -> crate::Result<Self> {
         match name {
             "sgd" => Ok(Optimizer::Sgd),
             "sgd-momentum" => Ok(Optimizer::SgdMomentum),
             "adam" => Ok(Optimizer::Adam),
-            _ => anyhow::bail!("unknown optimizer '{name}'"),
+            _ => crate::bail!("unknown optimizer '{name}'"),
         }
     }
 }

@@ -69,7 +69,9 @@ impl Framework {
 fn bench_noise(seed: u64, node: usize, algo: ConvAlgo, batch: usize, amp: f64) -> f64 {
     let mut h = seed ^ 0x9E37_79B9_7F4A_7C15;
     for x in [node as u64, algo as u64, batch as u64] {
-        h ^= x.wrapping_add(0x9E37_79B9_7F4A_7C15).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h ^= x
+            .wrapping_add(0x9E37_79B9_7F4A_7C15)
+            .wrapping_mul(0xBF58_476D_1CE4_E5B9);
         h = h.rotate_left(27).wrapping_mul(0x94D0_49BB_1331_11EB);
     }
     let unit = (h >> 11) as f64 / (1u64 << 53) as f64; // [0,1)

@@ -1,0 +1,262 @@
+//! Zero-dependency crate error type.
+//!
+//! The offline crate set has no `anyhow`/`thiserror`; this module is the
+//! in-tree replacement. [`DnnError`] carries a chain of human-readable
+//! messages from the outermost context down to the root cause:
+//!
+//! * `{err}` prints the outermost message;
+//! * `{err:#}` prints the whole chain joined with `": "` (what the CLI
+//!   prints on failure);
+//! * any `std::error::Error` converts via `From`, so `?` works on
+//!   `std::io`, parse, channel-recv and simulator errors alike;
+//! * [`Context`] adds `.context(...)` / `.with_context(...)` on both
+//!   `Result` and `Option`, mirroring the `anyhow` idiom the call sites
+//!   were written against.
+//!
+//! The companion macros live at the crate root (`crate::err!`,
+//! `crate::bail!`, `crate::ensure!`) because `#[macro_export]` hoists
+//! them there.
+
+use std::fmt;
+
+/// Crate-wide error: an outermost-first chain of messages.
+///
+/// Deliberately *not* an implementation of `std::error::Error`: that
+/// keeps the blanket `From<E: std::error::Error>` conversion coherent
+/// (the same trick `anyhow::Error` uses).
+#[derive(Clone)]
+pub struct DnnError {
+    /// Messages from outermost context (index 0) to root cause (last).
+    chain: Vec<String>,
+}
+
+impl DnnError {
+    /// A fresh error with a single message.
+    pub fn msg(message: impl Into<String>) -> DnnError {
+        DnnError {
+            chain: vec![message.into()],
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(mut self, message: impl Into<String>) -> DnnError {
+        self.chain.insert(0, message.into());
+        self
+    }
+
+    /// The messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for DnnError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, as the CLI error path prints it.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for DnnError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "DnnError({})", self.chain.join(": "))
+    }
+}
+
+/// Any standard error converts into a single-message [`DnnError`], which
+/// is what makes `?` work across `std::io::Error`, `std::fmt::Error`,
+/// parse errors, `mpsc::RecvError`, [`crate::sim::OomError`], ….
+impl<E: std::error::Error> From<E> for DnnError {
+    fn from(e: E) -> DnnError {
+        // Preserve the source chain as message segments.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        DnnError { chain }
+    }
+}
+
+/// `.context(...)` / `.with_context(...)` on `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a context message to the error (eagerly evaluated).
+    fn context(self, message: impl Into<String>) -> Result<T>;
+
+    /// Attach a lazily-built context message.
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<DnnError>> Context<T> for std::result::Result<T, E> {
+    fn context(self, message: impl Into<String>) -> Result<T> {
+        self.map_err(|e| e.into().context(message))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, message: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| DnnError::msg(message))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| DnnError::msg(f()))
+    }
+}
+
+/// Crate-wide result alias (re-exported at the crate root).
+pub type Result<T> = std::result::Result<T, DnnError>;
+
+/// Build a [`DnnError`] from a format string: `err!("bad batch {b}")`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::DnnError::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`DnnError`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`DnnError`] unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_outermost_alternate_full_chain() {
+        let e = DnnError::msg("root").context("middle").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: root");
+        assert_eq!(e.root_cause(), "root");
+        assert_eq!(e.chain().count(), 3);
+    }
+
+    #[test]
+    fn debug_shows_chain() {
+        let e = DnnError::msg("inner").context("ctx");
+        assert_eq!(format!("{e:?}"), "DnnError(ctx: inner)");
+    }
+
+    #[test]
+    fn from_io_error() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "missing.json");
+        let e: DnnError = io.into();
+        assert!(format!("{e}").contains("missing.json"));
+    }
+
+    #[test]
+    fn from_fmt_error() {
+        let e: DnnError = std::fmt::Error.into();
+        assert!(!format!("{e}").is_empty());
+    }
+
+    #[test]
+    fn question_mark_converts_io() {
+        fn read() -> Result<String> {
+            let text = std::fs::read_to_string("/definitely/not/a/path/xyz")?;
+            Ok(text)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_parse() {
+        fn parse() -> Result<f64> {
+            Ok("not-a-number".parse::<f64>()?)
+        }
+        assert!(parse().is_err());
+    }
+
+    #[test]
+    fn result_context_chains() {
+        fn inner() -> Result<()> {
+            Err(err!("root cause"))
+        }
+        let out: Result<()> = inner().context("loading dataset");
+        let e = out.unwrap_err();
+        assert_eq!(format!("{e}"), "loading dataset");
+        assert_eq!(format!("{e:#}"), "loading dataset: root cause");
+    }
+
+    #[test]
+    fn result_with_context_lazy() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.with_context(|| format!("step {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "step 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field 'batch'").unwrap_err();
+        assert_eq!(format!("{e}"), "missing field 'batch'");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(7).unwrap_err()), "unlucky 7");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "x too big: 11");
+    }
+
+    #[test]
+    fn from_preserves_source_chain() {
+        #[derive(Debug)]
+        struct Outer(std::io::Error);
+        impl fmt::Display for Outer {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "outer layer")
+            }
+        }
+        impl std::error::Error for Outer {
+            fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+                Some(&self.0)
+            }
+        }
+        let io = std::io::Error::other("disk on fire");
+        let e: DnnError = Outer(io).into();
+        assert_eq!(format!("{e:#}"), "outer layer: disk on fire");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<DnnError>();
+    }
+}

@@ -73,26 +73,26 @@ impl Json {
     }
 
     /// Convenience: `get(key)` then `as_f64`, with a descriptive error.
-    pub fn num(&self, key: &str) -> anyhow::Result<f64> {
+    pub fn num(&self, key: &str) -> crate::Result<f64> {
         self.get(key)
             .and_then(Json::as_f64)
-            .ok_or_else(|| anyhow::anyhow!("missing numeric field '{key}'"))
+            .ok_or_else(|| crate::err!("missing numeric field '{key}'"))
     }
 
-    pub fn str(&self, key: &str) -> anyhow::Result<&str> {
+    pub fn str(&self, key: &str) -> crate::Result<&str> {
         self.get(key)
             .and_then(Json::as_str)
-            .ok_or_else(|| anyhow::anyhow!("missing string field '{key}'"))
+            .ok_or_else(|| crate::err!("missing string field '{key}'"))
     }
 
-    pub fn arr(&self, key: &str) -> anyhow::Result<&[Json]> {
+    pub fn arr(&self, key: &str) -> crate::Result<&[Json]> {
         self.get(key)
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow::anyhow!("missing array field '{key}'"))
+            .ok_or_else(|| crate::err!("missing array field '{key}'"))
     }
 
     /// Parse a JSON document.
-    pub fn parse(text: &str) -> anyhow::Result<Json> {
+    pub fn parse(text: &str) -> crate::Result<Json> {
         let mut p = Parser {
             bytes: text.as_bytes(),
             pos: 0,
@@ -101,7 +101,7 @@ impl Json {
         let v = p.value()?;
         p.skip_ws();
         if p.pos != p.bytes.len() {
-            anyhow::bail!("trailing characters at byte {}", p.pos);
+            crate::bail!("trailing characters at byte {}", p.pos);
         }
         Ok(v)
     }
@@ -230,7 +230,7 @@ struct Parser<'a> {
     pos: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn skip_ws(&mut self) {
         while self.pos < self.bytes.len()
             && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
@@ -243,12 +243,12 @@ impl<'a> Parser<'a> {
         self.bytes.get(self.pos).copied()
     }
 
-    fn expect(&mut self, b: u8) -> anyhow::Result<()> {
+    fn expect(&mut self, b: u8) -> crate::Result<()> {
         if self.peek() == Some(b) {
             self.pos += 1;
             Ok(())
         } else {
-            anyhow::bail!(
+            crate::bail!(
                 "expected '{}' at byte {}, found {:?}",
                 b as char,
                 self.pos,
@@ -257,7 +257,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> anyhow::Result<Json> {
+    fn value(&mut self) -> crate::Result<Json> {
         self.skip_ws();
         match self.peek() {
             Some(b'n') => self.lit("null", Json::Null),
@@ -267,33 +267,33 @@ impl<'a> Parser<'a> {
             Some(b'[') => self.array(),
             Some(b'{') => self.object(),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            other => anyhow::bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos),
+            other => crate::bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos),
         }
     }
 
-    fn lit(&mut self, word: &str, val: Json) -> anyhow::Result<Json> {
+    fn lit(&mut self, word: &str, val: Json) -> crate::Result<Json> {
         if self.bytes[self.pos..].starts_with(word.as_bytes()) {
             self.pos += word.len();
             Ok(val)
         } else {
-            anyhow::bail!("invalid literal at byte {}", self.pos)
+            crate::bail!("invalid literal at byte {}", self.pos)
         }
     }
 
-    fn string(&mut self) -> anyhow::Result<String> {
+    fn string(&mut self) -> crate::Result<String> {
         self.expect(b'"')?;
         let mut out = String::new();
         loop {
             let c = self
                 .peek()
-                .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+                .ok_or_else(|| crate::err!("unterminated string"))?;
             self.pos += 1;
             match c {
                 b'"' => return Ok(out),
                 b'\\' => {
                     let e = self
                         .peek()
-                        .ok_or_else(|| anyhow::anyhow!("unterminated escape"))?;
+                        .ok_or_else(|| crate::err!("unterminated escape"))?;
                     self.pos += 1;
                     match e {
                         b'"' => out.push('"'),
@@ -308,13 +308,13 @@ impl<'a> Parser<'a> {
                             let hex = std::str::from_utf8(
                                 self.bytes
                                     .get(self.pos..self.pos + 4)
-                                    .ok_or_else(|| anyhow::anyhow!("bad \\u escape"))?,
+                                    .ok_or_else(|| crate::err!("bad \\u escape"))?,
                             )?;
                             let code = u32::from_str_radix(hex, 16)?;
                             self.pos += 4;
                             out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
                         }
-                        _ => anyhow::bail!("bad escape \\{}", e as char),
+                        _ => crate::bail!("bad escape \\{}", e as char),
                     }
                 }
                 _ => {
@@ -331,7 +331,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn number(&mut self) -> anyhow::Result<Json> {
+    fn number(&mut self) -> crate::Result<Json> {
         let start = self.pos;
         while let Some(c) = self.peek() {
             if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
@@ -344,7 +344,7 @@ impl<'a> Parser<'a> {
         Ok(Json::Num(s.parse::<f64>()?))
     }
 
-    fn array(&mut self) -> anyhow::Result<Json> {
+    fn array(&mut self) -> crate::Result<Json> {
         self.expect(b'[')?;
         let mut out = Vec::new();
         self.skip_ws();
@@ -363,12 +363,12 @@ impl<'a> Parser<'a> {
                     self.pos += 1;
                     return Ok(Json::Arr(out));
                 }
-                _ => anyhow::bail!("expected ',' or ']' at byte {}", self.pos),
+                _ => crate::bail!("expected ',' or ']' at byte {}", self.pos),
             }
         }
     }
 
-    fn object(&mut self) -> anyhow::Result<Json> {
+    fn object(&mut self) -> crate::Result<Json> {
         self.expect(b'{')?;
         let mut out = BTreeMap::new();
         self.skip_ws();
@@ -392,7 +392,7 @@ impl<'a> Parser<'a> {
                     self.pos += 1;
                     return Ok(Json::Obj(out));
                 }
-                _ => anyhow::bail!("expected ',' or '}}' at byte {}", self.pos),
+                _ => crate::bail!("expected ',' or '}}' at byte {}", self.pos),
             }
         }
     }

@@ -1,12 +1,14 @@
 //! Support substrates built in-tree because the sandbox is offline:
 //! PRNG (no `rand`), minimal JSON (no `serde`), stats, CLI parsing
-//! (no `clap`), a thread pool (no `tokio`/`rayon`), and a small
-//! property-testing driver (no `proptest`).
+//! (no `clap`), a thread pool (no `tokio`/`rayon`), a small
+//! property-testing driver (no `proptest`), and the crate error type
+//! (no `anyhow`/`thiserror`).
 
-pub mod prng;
-pub mod json;
-pub mod stats;
 pub mod cli;
-pub mod threadpool;
+pub mod error;
+pub mod json;
+pub mod prng;
 pub mod prop;
+pub mod stats;
 pub mod table;
+pub mod threadpool;

@@ -37,6 +37,7 @@ pub fn conv_bn(
 }
 
 /// Grouped `Conv → BN → ReLU` (ResNeXt / ShuffleNet).
+#[allow(clippy::too_many_arguments)]
 pub fn gconv_bn_relu(
     g: &mut Graph,
     x: NodeId,

@@ -11,7 +11,12 @@ fn dense_layer(g: &mut Graph, x: NodeId, in_ch: usize, growth: usize) -> (NodeId
     let b1 = g.add(OpKind::BatchNorm { channels: in_ch }, &[x]);
     let r1 = g.add(OpKind::ReLU, &[b1]);
     let c1 = g.add(OpKind::conv_nobias(in_ch, 4 * growth, 1, 1, 0), &[r1]);
-    let b2 = g.add(OpKind::BatchNorm { channels: 4 * growth }, &[c1]);
+    let b2 = g.add(
+        OpKind::BatchNorm {
+            channels: 4 * growth,
+        },
+        &[c1],
+    );
     let r2 = g.add(OpKind::ReLU, &[b2]);
     let c2 = g.add(OpKind::conv_nobias(4 * growth, growth, 3, 1, 1), &[r2]);
     let cat = g.add(OpKind::Concat, &[x, c2]);

@@ -6,14 +6,14 @@
 //! (5,500 extra points, §3.1).
 
 pub mod common;
-pub mod vgg;
-pub mod resnet;
-pub mod googlenet;
-pub mod mobilenet;
-pub mod shufflenet;
 pub mod densenet;
+pub mod googlenet;
 pub mod misc;
+pub mod mobilenet;
 pub mod random;
+pub mod resnet;
+pub mod shufflenet;
+pub mod vgg;
 
 pub use random::{random_net, RandomNetCfg};
 
@@ -95,10 +95,10 @@ pub fn builder(name: &str) -> Option<Builder> {
 }
 
 /// Build a named model.
-pub fn build(name: &str, in_ch: usize, classes: usize) -> anyhow::Result<Graph> {
+pub fn build(name: &str, in_ch: usize, classes: usize) -> crate::Result<Graph> {
     builder(name)
         .map(|b| b(in_ch, classes))
-        .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))
+        .ok_or_else(|| crate::err!("unknown model '{name}'"))
 }
 
 /// All model names (classic then unseen).

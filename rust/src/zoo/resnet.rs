@@ -153,62 +153,181 @@ fn bottleneck(
 // ---- Named configurations --------------------------------------------
 
 pub fn resnet18(in_ch: usize, classes: usize) -> Graph {
-    resnet("resnet18", BlockKind::Basic, &[2, 2, 2, 2], ResNetStyle::default(), in_ch, classes)
+    resnet(
+        "resnet18",
+        BlockKind::Basic,
+        &[2, 2, 2, 2],
+        ResNetStyle::default(),
+        in_ch,
+        classes,
+    )
 }
 pub fn resnet34(in_ch: usize, classes: usize) -> Graph {
-    resnet("resnet34", BlockKind::Basic, &[3, 4, 6, 3], ResNetStyle::default(), in_ch, classes)
+    resnet(
+        "resnet34",
+        BlockKind::Basic,
+        &[3, 4, 6, 3],
+        ResNetStyle::default(),
+        in_ch,
+        classes,
+    )
 }
 pub fn resnet50(in_ch: usize, classes: usize) -> Graph {
-    resnet("resnet50", BlockKind::Bottleneck, &[3, 4, 6, 3], ResNetStyle::default(), in_ch, classes)
+    resnet(
+        "resnet50",
+        BlockKind::Bottleneck,
+        &[3, 4, 6, 3],
+        ResNetStyle::default(),
+        in_ch,
+        classes,
+    )
 }
 pub fn resnet101(in_ch: usize, classes: usize) -> Graph {
-    resnet("resnet101", BlockKind::Bottleneck, &[3, 4, 23, 3], ResNetStyle::default(), in_ch, classes)
+    resnet(
+        "resnet101",
+        BlockKind::Bottleneck,
+        &[3, 4, 23, 3],
+        ResNetStyle::default(),
+        in_ch,
+        classes,
+    )
 }
 pub fn resnet152(in_ch: usize, classes: usize) -> Graph {
-    resnet("resnet152", BlockKind::Bottleneck, &[3, 8, 36, 3], ResNetStyle::default(), in_ch, classes)
+    resnet(
+        "resnet152",
+        BlockKind::Bottleneck,
+        &[3, 8, 36, 3],
+        ResNetStyle::default(),
+        in_ch,
+        classes,
+    )
 }
 
 pub fn preact_resnet18(in_ch: usize, classes: usize) -> Graph {
-    let style = ResNetStyle { preact: true, ..Default::default() };
-    resnet("preact-resnet18", BlockKind::Basic, &[2, 2, 2, 2], style, in_ch, classes)
+    let style = ResNetStyle {
+        preact: true,
+        ..Default::default()
+    };
+    resnet(
+        "preact-resnet18",
+        BlockKind::Basic,
+        &[2, 2, 2, 2],
+        style,
+        in_ch,
+        classes,
+    )
 }
 pub fn preact_resnet34(in_ch: usize, classes: usize) -> Graph {
-    let style = ResNetStyle { preact: true, ..Default::default() };
-    resnet("preact-resnet34", BlockKind::Basic, &[3, 4, 6, 3], style, in_ch, classes)
+    let style = ResNetStyle {
+        preact: true,
+        ..Default::default()
+    };
+    resnet(
+        "preact-resnet34",
+        BlockKind::Basic,
+        &[3, 4, 6, 3],
+        style,
+        in_ch,
+        classes,
+    )
 }
 /// Unseen model (Figure 13): PreActResNet-152.
 pub fn preact_resnet152(in_ch: usize, classes: usize) -> Graph {
-    let style = ResNetStyle { preact: true, ..Default::default() };
-    resnet("preact-resnet152", BlockKind::Bottleneck, &[3, 8, 36, 3], style, in_ch, classes)
+    let style = ResNetStyle {
+        preact: true,
+        ..Default::default()
+    };
+    resnet(
+        "preact-resnet152",
+        BlockKind::Bottleneck,
+        &[3, 8, 36, 3],
+        style,
+        in_ch,
+        classes,
+    )
 }
 
 pub fn se_resnet18(in_ch: usize, classes: usize) -> Graph {
-    let style = ResNetStyle { se: true, ..Default::default() };
-    resnet("se-resnet18", BlockKind::Basic, &[2, 2, 2, 2], style, in_ch, classes)
+    let style = ResNetStyle {
+        se: true,
+        ..Default::default()
+    };
+    resnet(
+        "se-resnet18",
+        BlockKind::Basic,
+        &[2, 2, 2, 2],
+        style,
+        in_ch,
+        classes,
+    )
 }
 /// Unseen model (Figure 13): SE-ResNet-34.
 pub fn se_resnet34(in_ch: usize, classes: usize) -> Graph {
-    let style = ResNetStyle { se: true, ..Default::default() };
-    resnet("se-resnet34", BlockKind::Basic, &[3, 4, 6, 3], style, in_ch, classes)
+    let style = ResNetStyle {
+        se: true,
+        ..Default::default()
+    };
+    resnet(
+        "se-resnet34",
+        BlockKind::Basic,
+        &[3, 4, 6, 3],
+        style,
+        in_ch,
+        classes,
+    )
 }
 pub fn se_resnet50(in_ch: usize, classes: usize) -> Graph {
-    let style = ResNetStyle { se: true, ..Default::default() };
-    resnet("se-resnet50", BlockKind::Bottleneck, &[3, 4, 6, 3], style, in_ch, classes)
+    let style = ResNetStyle {
+        se: true,
+        ..Default::default()
+    };
+    resnet(
+        "se-resnet50",
+        BlockKind::Bottleneck,
+        &[3, 4, 6, 3],
+        style,
+        in_ch,
+        classes,
+    )
 }
 
 pub fn stochastic_depth_resnet18(in_ch: usize, classes: usize) -> Graph {
-    let style = ResNetStyle { stochastic_depth: true, ..Default::default() };
-    resnet("stochasticdepth18", BlockKind::Basic, &[2, 2, 2, 2], style, in_ch, classes)
+    let style = ResNetStyle {
+        stochastic_depth: true,
+        ..Default::default()
+    };
+    resnet(
+        "stochasticdepth18",
+        BlockKind::Basic,
+        &[2, 2, 2, 2],
+        style,
+        in_ch,
+        classes,
+    )
 }
 /// Unseen model (Figure 13): StochasticDepth-34.
 pub fn stochastic_depth_resnet34(in_ch: usize, classes: usize) -> Graph {
-    let style = ResNetStyle { stochastic_depth: true, ..Default::default() };
-    resnet("stochasticdepth34", BlockKind::Basic, &[3, 4, 6, 3], style, in_ch, classes)
+    let style = ResNetStyle {
+        stochastic_depth: true,
+        ..Default::default()
+    };
+    resnet(
+        "stochasticdepth34",
+        BlockKind::Basic,
+        &[3, 4, 6, 3],
+        style,
+        in_ch,
+        classes,
+    )
 }
 
 /// WideResNet-28-10 (Zagoruyko 2016), 3 stages of 4 basic blocks, 10× width.
 pub fn wide_resnet28_10(in_ch: usize, classes: usize) -> Graph {
-    let style = ResNetStyle { preact: true, width_x10: 100, ..Default::default() };
+    let style = ResNetStyle {
+        preact: true,
+        width_x10: 100,
+        ..Default::default()
+    };
     // CIFAR WRN uses base widths 16/32/64 ×k; approximating with the
     // shared 4-stage builder truncated to 3 stages at width 1.0×10.
     let mut g = Graph::new("wideresnet28-10");
@@ -230,8 +349,18 @@ pub fn wide_resnet28_10(in_ch: usize, classes: usize) -> Graph {
 
 /// ResNeXt-29 (8×64d), CIFAR variant.
 pub fn resnext29(in_ch: usize, classes: usize) -> Graph {
-    let style = ResNetStyle { cardinality: 8, ..Default::default() };
-    resnet("resnext29", BlockKind::Bottleneck, &[3, 3, 3], style, in_ch, classes)
+    let style = ResNetStyle {
+        cardinality: 8,
+        ..Default::default()
+    };
+    resnet(
+        "resnext29",
+        BlockKind::Bottleneck,
+        &[3, 3, 3],
+        style,
+        in_ch,
+        classes,
+    )
 }
 
 #[cfg(test)]

@@ -28,7 +28,12 @@ fn v1_unit(
         OpKind::conv_grouped(mid, branch_out, 1, 1, 0, groups),
         &[bdw],
     );
-    let b2 = g.add(OpKind::BatchNorm { channels: branch_out }, &[c2]);
+    let b2 = g.add(
+        OpKind::BatchNorm {
+            channels: branch_out,
+        },
+        &[c2],
+    );
     if stride == 2 {
         let p = g.add(
             OpKind::AvgPool(PoolAttrs {
@@ -75,7 +80,13 @@ pub fn shufflenet_v1(in_ch: usize, classes: usize) -> Graph {
 /// projected half — we emulate with a 1×1 conv producing half channels
 /// (cost structure equivalent: the V2 paper's point is equal-width 1×1s
 /// and no groups).
-fn v2_unit(g: &mut Graph, x: NodeId, in_ch: usize, out_ch: usize, stride: usize) -> (NodeId, usize) {
+fn v2_unit(
+    g: &mut Graph,
+    x: NodeId,
+    in_ch: usize,
+    out_ch: usize,
+    stride: usize,
+) -> (NodeId, usize) {
     let half = out_ch / 2;
     if stride == 1 {
         // Branch on half the channels.

@@ -8,7 +8,9 @@ use crate::graph::{Graph, OpKind};
 
 /// Stage widths; `0` marks a max-pool.
 const VGG11: &[usize] = &[64, 0, 128, 0, 256, 256, 0, 512, 512, 0, 512, 512, 0];
-const VGG13: &[usize] = &[64, 64, 0, 128, 128, 0, 256, 256, 0, 512, 512, 0, 512, 512, 0];
+const VGG13: &[usize] = &[
+    64, 64, 0, 128, 128, 0, 256, 256, 0, 512, 512, 0, 512, 512, 0,
+];
 const VGG16: &[usize] = &[
     64, 64, 0, 128, 128, 0, 256, 256, 256, 0, 512, 512, 512, 0, 512, 512, 512, 0,
 ];

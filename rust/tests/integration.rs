@@ -188,6 +188,33 @@ fn mlp_pjrt_backend_serves_when_artifacts_present() {
 }
 
 #[test]
+fn zoo_smoke_all_29_paper_networks_build_and_simulate_small() {
+    // Build every classic network and run one tiny simulated training
+    // config through each — the whole zoo must survive without panicking.
+    for (name, builder) in zoo::CLASSIC_29 {
+        let g = builder(3, 100);
+        assert_eq!(g.name, name);
+        g.validate().unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let mut cfg = TrainConfig::paper_default(DatasetKind::Cifar100, 16);
+        cfg.data_fraction = 0.01; // a handful of iterations per net
+        let m = simulate_training(&g, &cfg)
+            .unwrap_or_else(|e| panic!("{name} failed to simulate: {e}"));
+        assert!(m.total_time > 0.0 && m.peak_mem > 0, "{name}");
+    }
+}
+
+#[test]
+fn error_chain_formats_through_public_api() {
+    // The crate error type is part of the public surface the bin and
+    // examples rely on: `{e:#}` must print the context chain.
+    let err = dnnabacus::DnnError::msg("root").context("while predicting");
+    assert_eq!(format!("{err}"), "while predicting");
+    assert_eq!(format!("{err:#}"), "while predicting: root");
+    let from_zoo = zoo::build("no-such-net", 3, 100).unwrap_err();
+    assert!(format!("{from_zoo}").contains("no-such-net"));
+}
+
+#[test]
 fn profiler_random_and_unseen_disjoint_from_classic_models() {
     let cfg = profiler::SweepCfg {
         scale: 0.05,

@@ -1,7 +1,9 @@
 //! Online prediction service under load: start the coordinator with the
-//! AutoML backend (add `--features`-free `mlp` via `BACKEND=mlp` env to
-//! use the AOT PJRT MLP), fire concurrent requests, report throughput
-//! and latency percentiles.
+//! AutoML backend (set `BACKEND=mlp` in the env to use the AOT PJRT
+//! MLP), fire a skewed (Zipf-ish) request mix at it — the recurring job
+//! shapes a real scheduler resubmits — and report throughput, latency
+//! percentiles, and how much of the stream the content-keyed cache and
+//! the sharded batcher absorbed.
 //!
 //! ```bash
 //! cargo run --release --example serve_load
@@ -15,6 +17,7 @@ use dnnabacus::coordinator::{
 use dnnabacus::experiments::Ctx;
 use dnnabacus::predictor::{AutoMl, Target};
 use dnnabacus::sim::{DatasetKind, TrainConfig};
+use dnnabacus::util::prng::Rng;
 use dnnabacus::zoo;
 use std::sync::Arc;
 
@@ -33,31 +36,38 @@ fn main() -> dnnabacus::Result<()> {
     let svc = PredictionService::start(ServiceConfig::default(), backend);
 
     let names: Vec<&str> = zoo::all_names();
+    let batches = [16usize, 32, 64, 128, 256];
+    let mut rng = Rng::new(7);
     let n = 512;
-    let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..n)
+    let requests: Vec<PredictRequest> = (0..n)
         .map(|i| {
-            svc.submit(PredictRequest {
+            let dataset = if rng.chance(0.5) {
+                DatasetKind::Cifar100
+            } else {
+                DatasetKind::Mnist
+            };
+            let batch = batches[rng.zipf(batches.len())];
+            PredictRequest {
                 id: i as u64,
-                model: names[i % names.len()].to_string(),
-                config: TrainConfig::paper_default(
-                    if i % 2 == 0 {
-                        DatasetKind::Cifar100
-                    } else {
-                        DatasetKind::Mnist
-                    },
-                    16 + (i % 16) * 16,
-                ),
-            })
+                model: names[rng.zipf(names.len())].to_string(),
+                config: TrainConfig::paper_default(dataset, batch),
+            }
         })
         .collect();
+    // Waved submission: later waves hit the cache entries earlier waves
+    // filled, like a scheduler resubmitting recurring job shapes over
+    // time (an open-loop blast would never observe a hit).
     let mut ok = 0usize;
     let mut oom = 0usize;
-    for rx in rxs {
-        if let Ok(p) = rx.recv()? {
-            ok += 1;
-            if !p.fits_device {
-                oom += 1;
+    let t0 = std::time::Instant::now();
+    for wave in requests.chunks(64) {
+        let rxs: Vec<_> = wave.iter().map(|r| svc.submit(r.clone())).collect();
+        for rx in rxs {
+            if let Ok(p) = rx.recv()? {
+                ok += 1;
+                if !p.fits_device {
+                    oom += 1;
+                }
             }
         }
     }
@@ -71,6 +81,13 @@ fn main() -> dnnabacus::Result<()> {
         m.p99_latency_s * 1e3,
         m.mean_batch_size,
         m.batches
+    );
+    println!(
+        "cache: {} hits / {} misses ({:.0}% hit rate) | steals: {}",
+        m.cache_hits,
+        m.cache_misses,
+        100.0 * m.cache_hits as f64 / (m.cache_hits + m.cache_misses).max(1) as f64,
+        m.steals
     );
     Ok(())
 }

@@ -64,7 +64,10 @@ fn main() -> dnnabacus::Result<()> {
     let b = mlp.manifest.train_batch;
     let (mean, std) = feature_stats(&train);
     let norm = |f: &[f64]| -> Vec<f64> {
-        f.iter().enumerate().map(|(i, &v)| (v - mean[i]) / std[i]).collect()
+        f.iter()
+            .enumerate()
+            .map(|(i, &v)| (v - mean[i]) / std[i])
+            .collect()
     };
     let steps = 400;
     let mut rng = Rng::new(7);

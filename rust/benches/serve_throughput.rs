@@ -1,0 +1,151 @@
+//! `cargo bench --bench serve_throughput` — requests/sec and latency
+//! percentiles for the sharded, cache-fronted prediction service under
+//! a skewed (Zipf-ish) request mix, with the content-keyed cache off
+//! and on. The JSON artifact is the serving line of the perf
+//! trajectory: CI uploads it on every run.
+//!
+//! Flags (after `--`):
+//!   --scale 0.12     training-corpus sweep density
+//!   --requests 512   request count per pass
+//!   --seed 7         request-mix seed
+//!   --json PATH      write the results as JSON (the CI bench-smoke job
+//!                    uploads this as a `BENCH_*.json` perf artifact)
+
+use dnnabacus::coordinator::{
+    service::AutoMlBackend, CostModel, PredictRequest, PredictionService, ServiceConfig,
+    ServiceMetrics,
+};
+use dnnabacus::experiments::Ctx;
+use dnnabacus::predictor::{AutoMl, Target};
+use dnnabacus::sim::{DatasetKind, TrainConfig};
+use dnnabacus::util::cli::Args;
+use dnnabacus::util::json::Json;
+use dnnabacus::util::prng::Rng;
+use dnnabacus::zoo;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// In-flight window per submission wave. Large enough to keep every
+/// worker's batch window filling, small enough that later waves see the
+/// cache entries earlier waves filled — an open-loop submit-everything
+/// pass would finish submitting before the first worker ever populated
+/// the cache, and no request would hit.
+const WINDOW: usize = 64;
+
+/// One timed pass over the schedule; returns (elapsed seconds, metrics).
+fn run_pass(
+    schedule: &[PredictRequest],
+    backend: Arc<dyn CostModel>,
+    cache_capacity: usize,
+) -> (f64, ServiceMetrics) {
+    let cfg = ServiceConfig {
+        cache_capacity,
+        ..ServiceConfig::default()
+    };
+    let svc = PredictionService::start(cfg, backend);
+    let t0 = Instant::now();
+    for wave in schedule.chunks(WINDOW) {
+        let rxs: Vec<_> = wave.iter().map(|r| svc.submit(r.clone())).collect();
+        for rx in rxs {
+            rx.recv().expect("service dropped a request").unwrap();
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    (elapsed, svc.shutdown())
+}
+
+fn pass_json(name: &str, requests: usize, elapsed: f64, m: &ServiceMetrics) -> Json {
+    let mut o = Json::obj();
+    o.set("name", name)
+        .set("requests", requests)
+        .set("req_per_s", requests as f64 / elapsed)
+        .set("elapsed_s", elapsed)
+        .set("p50_s", m.p50_latency_s)
+        .set("p99_s", m.p99_latency_s)
+        .set("mean_batch_size", m.mean_batch_size)
+        .set("cache_hits", m.cache_hits)
+        .set("cache_misses", m.cache_misses)
+        .set("steals", m.steals)
+        .set("errors", m.errors);
+    o
+}
+
+fn report(name: &str, requests: usize, elapsed: f64, m: &ServiceMetrics) {
+    println!(
+        "{name:<10} {:>7.0} req/s  p50 {:>8.3} ms  p99 {:>8.3} ms  \
+         mean batch {:>5.1}  hits {:>4}  steals {:>3}",
+        requests as f64 / elapsed,
+        m.p50_latency_s * 1e3,
+        m.p99_latency_s * 1e3,
+        m.mean_batch_size,
+        m.cache_hits,
+        m.steals
+    );
+}
+
+fn main() {
+    let args = Args::from_env();
+    let scale = args.f64_or("scale", 0.12);
+    let requests = args.usize_or("requests", 512);
+    let seed = args.u64_or("seed", 7);
+
+    let ctx = Ctx {
+        scale,
+        cache_dir: None,
+        ..Ctx::default()
+    };
+    let corpus = ctx.training_corpus();
+    let backend: Arc<dyn CostModel> = Arc::new(AutoMlBackend {
+        time_model: AutoMl::train_opt(&corpus, Target::Time, seed, true),
+        memory_model: AutoMl::train_opt(&corpus, Target::Memory, seed, true),
+    });
+
+    // One fixed, seeded, Zipf-skewed schedule shared by both passes: the
+    // recurring (model, config) shapes a datacenter scheduler resubmits.
+    let names: Vec<&str> = zoo::all_names();
+    let batches = [32usize, 64, 128, 256];
+    let mut rng = Rng::new(seed);
+    let schedule: Vec<PredictRequest> = (0..requests)
+        .map(|i| {
+            let dataset = if rng.chance(0.5) {
+                DatasetKind::Cifar100
+            } else {
+                DatasetKind::Mnist
+            };
+            let batch = batches[rng.zipf(batches.len())];
+            PredictRequest {
+                id: i as u64,
+                model: names[rng.zipf(names.len())].to_string(),
+                config: TrainConfig::paper_default(dataset, batch),
+            }
+        })
+        .collect();
+
+    let (off_s, off_m) = run_pass(&schedule, Arc::clone(&backend), 0);
+    report("cache-off", requests, off_s, &off_m);
+    assert_eq!(off_m.cache_hits, 0, "disabled cache must never hit");
+
+    let (on_s, on_m) = run_pass(&schedule, Arc::clone(&backend), 4096);
+    report("cache-on", requests, on_s, &on_m);
+    assert!(on_m.cache_hits > 0, "skewed mix must repeat keys");
+
+    let speedup = (requests as f64 / on_s) / (requests as f64 / off_s);
+    println!("cache speedup: {speedup:.2}x on requests/sec");
+
+    if let Some(path) = args.get("json") {
+        let mut doc = Json::obj();
+        doc.set("bench", "serve_throughput")
+            .set("scale", scale)
+            .set("seed", seed)
+            .set(
+                "results",
+                Json::Arr(vec![
+                    pass_json("cache_off", requests, off_s, &off_m),
+                    pass_json("cache_on", requests, on_s, &on_m),
+                ]),
+            )
+            .set("cache_speedup_req_per_s", speedup);
+        std::fs::write(path, doc.to_string()).expect("write bench json");
+        println!("wrote {path}");
+    }
+}

@@ -3,8 +3,15 @@
 //! whichever comes first — then hand the batch to a worker. The classic
 //! serving trade-off (throughput vs tail latency), sized to the AOT
 //! MLP's compiled batch variants.
+//!
+//! Two layers live here: [`Batcher`], a single size/deadline-bound
+//! queue, and [`ShardedBatcher`], which gives every worker its own
+//! [`Batcher`] shard — requests are spread push-side round-robin, and a
+//! worker whose shard goes idle steals *due* batches from its siblings,
+//! so one slow shard cannot strand requests while others sit idle.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -61,7 +68,9 @@ impl<T> Batcher<T> {
             }
             if let Some(front) = inner.queue.front() {
                 let waited = front.enqueued_at.elapsed();
-                if waited >= self.max_wait {
+                if waited >= self.max_wait || inner.closed {
+                    // Due — or closed, in which case flush immediately
+                    // rather than letting shutdown wait out the window.
                     let n = inner.queue.len().min(self.max_batch);
                     return Some(drain(&mut inner.queue, n));
                 }
@@ -77,10 +86,72 @@ impl<T> Batcher<T> {
         }
     }
 
+    /// Bounded wait: like [`next_batch`](Self::next_batch), but gives up
+    /// after `poll` so the caller can look for work elsewhere (the
+    /// sharded batcher's steal loop).
+    pub fn poll_batch(&self, poll: Duration) -> Polled<T> {
+        let deadline = Instant::now() + poll;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.queue.len() >= self.max_batch {
+                return Polled::Batch(drain(&mut inner.queue, self.max_batch));
+            }
+            if let Some(front) = inner.queue.front() {
+                let waited = front.enqueued_at.elapsed();
+                if waited >= self.max_wait || inner.closed {
+                    let n = inner.queue.len().min(self.max_batch);
+                    return Polled::Batch(drain(&mut inner.queue, n));
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    return Polled::Idle;
+                }
+                let timeout = (self.max_wait - waited).min(deadline - now);
+                let (guard, _) = self.cv.wait_timeout(inner, timeout).unwrap();
+                inner = guard;
+            } else if inner.closed {
+                return Polled::Drained;
+            } else {
+                let now = Instant::now();
+                if now >= deadline {
+                    return Polled::Idle;
+                }
+                let (guard, _) = self.cv.wait_timeout(inner, deadline - now).unwrap();
+                inner = guard;
+            }
+        }
+    }
+
+    /// Non-blocking take of a *due* batch, for work stealing. Items are
+    /// handed over only when the batch is full, the oldest item has
+    /// exceeded `max_wait` (this shard's worker is stalled), or the
+    /// queue is closed (shutdown drain) — so stealing never collapses a
+    /// healthy shard's still-filling batch window.
+    pub fn steal(&self) -> Option<Vec<Enqueued<T>>> {
+        let mut inner = self.inner.lock().unwrap();
+        let due = inner.queue.len() >= self.max_batch
+            || inner.closed
+            || inner
+                .queue
+                .front()
+                .is_some_and(|f| f.enqueued_at.elapsed() >= self.max_wait);
+        if due && !inner.queue.is_empty() {
+            let n = inner.queue.len().min(self.max_batch);
+            return Some(drain(&mut inner.queue, n));
+        }
+        None
+    }
+
     /// Close the queue; `next_batch` drains the remainder then yields None.
     pub fn close(&self) {
         self.inner.lock().unwrap().closed = true;
         self.cv.notify_all();
+    }
+
+    /// Closed and empty — will never produce another batch.
+    pub fn is_drained(&self) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner.closed && inner.queue.is_empty()
     }
 
     pub fn len(&self) -> usize {
@@ -89,6 +160,99 @@ impl<T> Batcher<T> {
 
     pub fn is_empty(&self) -> bool {
         self.inner.lock().unwrap().queue.is_empty()
+    }
+}
+
+/// Outcome of a bounded wait on one [`Batcher`] shard.
+pub enum Polled<T> {
+    /// A ready batch.
+    Batch(Vec<Enqueued<T>>),
+    /// Nothing became due within the poll window.
+    Idle,
+    /// Closed and empty — this shard will never produce again.
+    Drained,
+}
+
+/// One [`Batcher`] shard per worker, with push-side round-robin and
+/// idle-side work stealing.
+///
+/// Sharding removes the single-queue lock every worker used to contend
+/// on: pushes touch one shard's mutex, and each worker sleeps on its own
+/// condvar. The steal path keeps tail latency bounded — a worker whose
+/// shard is idle takes *due* batches (see [`Batcher::steal`]) from its
+/// siblings instead of sleeping while they fall behind.
+pub struct ShardedBatcher<T> {
+    shards: Vec<Batcher<T>>,
+    next: AtomicUsize,
+    steals: AtomicU64,
+    /// How long a worker camps on its own shard before checking siblings.
+    poll: Duration,
+}
+
+impl<T> ShardedBatcher<T> {
+    /// `n_shards.max(1)` shards, each a `Batcher::new(max_batch, max_wait)`.
+    pub fn new(n_shards: usize, max_batch: usize, max_wait: Duration) -> Self {
+        let n = n_shards.max(1);
+        ShardedBatcher {
+            shards: (0..n).map(|_| Batcher::new(max_batch, max_wait)).collect(),
+            next: AtomicUsize::new(0),
+            steals: AtomicU64::new(0),
+            poll: max_wait.clamp(Duration::from_millis(1), Duration::from_millis(10)),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Enqueue one item on the next shard, round-robin (never blocks).
+    pub fn push(&self, item: T) {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        self.shards[i].push(item);
+    }
+
+    /// Next batch for `worker`: camp on the worker's own shard, and when
+    /// it is idle, steal due work from sibling shards. Returns `None`
+    /// only once every shard is closed and drained, so no queued job is
+    /// ever dropped by shutdown.
+    pub fn next_batch(&self, worker: usize) -> Option<Vec<Enqueued<T>>> {
+        let own = worker % self.shards.len();
+        loop {
+            match self.shards[own].poll_batch(self.poll) {
+                Polled::Batch(batch) => return Some(batch),
+                Polled::Idle | Polled::Drained => {}
+            }
+            for k in 1..self.shards.len() {
+                let victim = (own + k) % self.shards.len();
+                if let Some(batch) = self.shards[victim].steal() {
+                    self.steals.fetch_add(1, Ordering::Relaxed);
+                    return Some(batch);
+                }
+            }
+            if self.shards.iter().all(Batcher::is_drained) {
+                return None;
+            }
+        }
+    }
+
+    /// Close every shard; workers drain the remainder then stop.
+    pub fn close(&self) {
+        for s in &self.shards {
+            s.close();
+        }
+    }
+
+    /// How many batches were taken from a non-owning shard.
+    pub fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(Batcher::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(Batcher::is_empty)
     }
 }
 
@@ -130,6 +294,102 @@ mod tests {
         b.close();
         assert_eq!(b.next_batch().unwrap().len(), 2);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn poll_batch_reports_idle_then_drained() {
+        let b: Batcher<u32> = Batcher::new(4, Duration::from_millis(5));
+        assert!(matches!(b.poll_batch(Duration::from_millis(1)), Polled::Idle));
+        b.close();
+        assert!(matches!(b.poll_batch(Duration::from_millis(1)), Polled::Drained));
+    }
+
+    #[test]
+    fn steal_takes_due_work_only() {
+        let b = Batcher::new(10, Duration::from_millis(120));
+        b.push(1);
+        assert!(b.steal().is_none(), "fresh items are not stealable");
+        std::thread::sleep(Duration::from_millis(150));
+        let stolen = b.steal().expect("overdue items are stealable");
+        assert_eq!(stolen.len(), 1);
+        b.push(2);
+        b.close();
+        assert!(b.steal().is_some(), "closed queues hand over immediately");
+        assert!(b.is_drained());
+    }
+
+    #[test]
+    fn sharded_push_round_robins() {
+        let sb: ShardedBatcher<usize> = ShardedBatcher::new(4, 8, Duration::from_secs(60));
+        for i in 0..8 {
+            sb.push(i);
+        }
+        assert_eq!(sb.len(), 8);
+        assert_eq!(sb.n_shards(), 4);
+        for shard in &sb.shards {
+            assert_eq!(shard.len(), 2, "round robin spreads evenly");
+        }
+    }
+
+    #[test]
+    fn sharded_idle_worker_steals_overdue_batches() {
+        let sb = ShardedBatcher::new(2, 4, Duration::from_millis(10));
+        for i in 0..4 {
+            sb.push(i); // two items per shard
+        }
+        // Only worker 0 consumes; it must pick up shard 1's overdue work.
+        let mut seen = Vec::new();
+        while seen.len() < 4 {
+            let batch = sb.next_batch(0).expect("work remains");
+            seen.extend(batch.into_iter().map(|e| e.item));
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        assert!(sb.steals() >= 1, "shard 1 was never polled by its owner");
+        sb.close();
+        assert!(sb.next_batch(0).is_none());
+    }
+
+    #[test]
+    fn sharded_close_drains_every_shard_no_sender_hangs() {
+        let sb = Arc::new(ShardedBatcher::new(4, 8, Duration::from_millis(10)));
+        let n_producers = 4;
+        let per_producer = 100usize;
+        let mut producers = Vec::new();
+        for p in 0..n_producers {
+            let sb = Arc::clone(&sb);
+            producers.push(std::thread::spawn(move || {
+                for i in 0..per_producer {
+                    sb.push(p * per_producer + i);
+                }
+            }));
+        }
+        let consumers: Vec<_> = (0..4)
+            .map(|w| {
+                let sb = Arc::clone(&sb);
+                std::thread::spawn(move || {
+                    let mut seen = Vec::new();
+                    while let Some(batch) = sb.next_batch(w) {
+                        seen.extend(batch.into_iter().map(|e| e.item));
+                    }
+                    seen
+                })
+            })
+            .collect();
+        for h in producers {
+            h.join().unwrap();
+        }
+        // Close while consumers are mid-flight: every queued job must
+        // still be delivered exactly once, across all shards.
+        sb.close();
+        let mut seen: Vec<usize> = consumers
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        seen.sort_unstable();
+        let expect: Vec<usize> = (0..n_producers * per_producer).collect();
+        assert_eq!(seen, expect);
+        assert!(sb.is_empty());
     }
 
     #[test]

@@ -4,14 +4,19 @@
 //! prediction stage* sitting in front of a datacenter scheduler: jobs
 //! arrive, the service featurizes their (model, config), runs the
 //! trained predictor, and hands (time, memory) estimates to placement.
-//! This module is that stage as a real service:
+//! This module is that stage as a real service, with a content-keyed
+//! answer cache in front of everything — recurring job shapes dominate
+//! real schedulers' request streams, and a hit skips featurization and
+//! prediction entirely:
 //!
-//! * [`request`] — request/response types and the featurization step;
-//! * [`batcher`] — dynamic batching queue (size- and deadline-bound),
-//!   sized to the AOT-compiled MLP batch variants;
-//! * [`service`] — worker threads, backend dispatch (shallow AutoML
-//!   model or the PJRT MLP artifact), metrics (throughput, latency
-//!   percentiles).
+//! * [`request`] — request/response types, the featurization step, and
+//!   the canonical `(model, config)` digest the cache is keyed on;
+//! * [`batcher`] — dynamic batching (size- and deadline-bound), sharded
+//!   one queue per worker with round-robin push and idle-side work
+//!   stealing;
+//! * [`service`] — the TTL-LRU cache front, worker threads, backend
+//!   dispatch (shallow AutoML model or the PJRT MLP artifact), metrics
+//!   (throughput, latency percentiles, cache hits/misses, steals).
 
 pub mod batcher;
 pub mod request;

@@ -1,7 +1,9 @@
-//! Prediction requests and responses.
+//! Prediction requests and responses, plus the canonical content digest
+//! the service's answer cache is keyed on.
 
 use crate::features::{feature_vector, StructureRep};
-use crate::sim::TrainConfig;
+use crate::sim::{Framework, TrainConfig};
+use crate::util::cache::{hash64, DIGEST_SEED};
 use crate::zoo;
 
 /// A request: predict the training cost of (model, config).
@@ -24,6 +26,39 @@ impl PredictRequest {
             self.config.dataset.classes(),
         )?;
         Ok(feature_vector(&g, &self.config, StructureRep::Nsm))
+    }
+
+    /// Canonical 64-bit content digest of `(model, config)` — the
+    /// service's cache key. Every field that feeds the NSM feature
+    /// vector (and hence the prediction) is folded in, with string
+    /// fields NUL-terminated so adjacent fields cannot alias.
+    ///
+    /// Deliberately excluded: the request `id` (identity, not content)
+    /// and `config.seed` — the NSM featurization the service runs is
+    /// seed-independent, so requests differing only by seed can share
+    /// one cache entry.
+    pub fn cache_key(&self) -> u64 {
+        let c = &self.config;
+        let mut bytes = Vec::with_capacity(self.model.len() + 64);
+        bytes.extend_from_slice(self.model.as_bytes());
+        bytes.push(0);
+        bytes.extend_from_slice(c.dataset.name().as_bytes());
+        bytes.push(0);
+        bytes.extend_from_slice(&(c.batch as u64).to_le_bytes());
+        bytes.extend_from_slice(&c.data_fraction.to_bits().to_le_bytes());
+        bytes.extend_from_slice(&(c.epochs as u64).to_le_bytes());
+        bytes.extend_from_slice(&c.lr.to_bits().to_le_bytes());
+        bytes.push(c.optimizer.state_multiple() as u8);
+        bytes.push(match c.framework {
+            Framework::TorchSim => 0,
+            Framework::TfSim => 1,
+        });
+        bytes.extend_from_slice(c.device.name.as_bytes());
+        bytes.push(0);
+        bytes.extend_from_slice(&c.device.peak_flops.to_bits().to_le_bytes());
+        bytes.extend_from_slice(&c.device.mem_bw.to_bits().to_le_bytes());
+        bytes.extend_from_slice(&c.device.vram.to_le_bytes());
+        hash64(DIGEST_SEED, &bytes)
     }
 }
 
@@ -65,5 +100,40 @@ mod tests {
             config: TrainConfig::paper_default(DatasetKind::Mnist, 32),
         };
         assert!(req.featurize().is_err());
+    }
+
+    fn keyed(id: u64, model: &str, batch: usize) -> PredictRequest {
+        PredictRequest {
+            id,
+            model: model.into(),
+            config: TrainConfig::paper_default(DatasetKind::Cifar100, batch),
+        }
+    }
+
+    #[test]
+    fn cache_key_ignores_id_and_seed_but_not_content() {
+        let a = keyed(1, "resnet18", 64);
+        let b = keyed(999, "resnet18", 64);
+        assert_eq!(a.cache_key(), b.cache_key(), "id is not content");
+        let mut c = keyed(1, "resnet18", 64);
+        c.config.seed = 0xDEAD;
+        assert_eq!(a.cache_key(), c.cache_key(), "features are seed-free");
+        assert_ne!(a.cache_key(), keyed(1, "resnet34", 64).cache_key());
+        assert_ne!(a.cache_key(), keyed(1, "resnet18", 128).cache_key());
+        let mut d = keyed(1, "resnet18", 64);
+        d.config.device = crate::sim::DeviceProfile::rtx3090();
+        assert_ne!(a.cache_key(), d.cache_key(), "device changes the cost");
+        let mut e = keyed(1, "resnet18", 64);
+        e.config.framework = crate::sim::Framework::TfSim;
+        assert_ne!(a.cache_key(), e.cache_key());
+    }
+
+    #[test]
+    fn cache_key_field_boundaries_do_not_alias() {
+        // "vgg1" + dataset "6…" style prefix shifts must not collide;
+        // the NUL terminators after strings guarantee it.
+        let a = keyed(1, "vgg16", 32);
+        let b = keyed(1, "vgg1", 32);
+        assert_ne!(a.cache_key(), b.cache_key());
     }
 }

@@ -1,17 +1,23 @@
-//! The prediction service: worker threads pull dynamic batches from the
-//! [`Batcher`], featurize, run the cost model, and answer over per-request
-//! channels. Backends: the AutoML shallow model (pure Rust) or the
-//! AOT-compiled MLP through PJRT — either way, no Python on this path.
+//! The prediction service: a content-keyed answer cache in front of a
+//! sharded dynamic batcher. [`PredictionService::submit`] answers cache
+//! hits inline without ever touching a queue; misses are spread
+//! round-robin over per-worker [`ShardedBatcher`] shards, featurized and
+//! predicted in batches, and the results fill the cache for the next
+//! identical (model, config) pair. Backends: the AutoML shallow model
+//! (pure Rust) or the AOT-compiled MLP through PJRT — either way, no
+//! Python on this path.
 
-use super::batcher::Batcher;
+use super::batcher::{Enqueued, ShardedBatcher};
 use super::request::{PredictRequest, Prediction};
 use crate::predictor::{AutoMl, Target};
 use crate::runtime::MlpPredictor;
+use crate::sim::DeviceProfile;
+use crate::util::cache::TtlLru;
 use crate::util::stats;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// A cost model: features → (time seconds, memory bytes).
 pub trait CostModel: Send + Sync {
@@ -96,9 +102,7 @@ impl CostModel for MlpBackend {
             .unwrap()
             .send((features.to_vec(), out_tx))
             .map_err(|_| crate::err!("mlp worker gone"))?;
-        out_rx
-            .recv()
-            .map_err(|_| crate::err!("mlp worker gone"))?
+        out_rx.recv().map_err(|_| crate::err!("mlp worker gone"))?
     }
 
     fn name(&self) -> &'static str {
@@ -111,6 +115,10 @@ pub struct ServiceConfig {
     pub workers: usize,
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Entries in the content-keyed prediction cache; 0 disables caching.
+    pub cache_capacity: usize,
+    /// How long a cached prediction stays servable after its last fill.
+    pub cache_ttl: Duration,
 }
 
 impl Default for ServiceConfig {
@@ -119,6 +127,8 @@ impl Default for ServiceConfig {
             workers: 2,
             max_batch: 32, // matches an AOT-compiled MLP batch variant
             max_wait: Duration::from_millis(2),
+            cache_capacity: 4096,
+            cache_ttl: Duration::from_secs(120),
         }
     }
 }
@@ -129,6 +139,12 @@ pub struct ServiceMetrics {
     pub served: u64,
     pub errors: u64,
     pub batches: u64,
+    /// Requests answered from the content-keyed cache, batcher untouched.
+    pub cache_hits: u64,
+    /// Requests that went through featurize + predict.
+    pub cache_misses: u64,
+    /// Batches a worker took from a sibling's shard.
+    pub steals: u64,
     pub p50_latency_s: f64,
     pub p99_latency_s: f64,
     pub mean_batch_size: f64,
@@ -139,91 +155,140 @@ struct MetricsInner {
     batch_sizes: Vec<usize>,
 }
 
-type Job = (PredictRequest, Sender<crate::Result<Prediction>>);
+type Job = (PredictRequest, u64, Sender<crate::Result<Prediction>>);
+
+type PredictionCache = Mutex<TtlLru<u64, (f64, f64)>>;
+
+/// The paper's OOM screen, with the CUDA-context reservation honored:
+/// a job fits only if its predicted peak memory stays within VRAM
+/// *minus* the resident context bytes `pynvml` always sees occupied.
+fn fits_device(device: &DeviceProfile, predicted_mem: f64) -> bool {
+    predicted_mem <= device.vram.saturating_sub(device.context_bytes) as f64
+}
+
+/// Everything one worker thread needs; shared pieces are `Arc`-cloned
+/// out of the service handle.
+struct Worker {
+    queue: Arc<ShardedBatcher<Job>>,
+    model: Arc<dyn CostModel>,
+    served: Arc<AtomicU64>,
+    errors: Arc<AtomicU64>,
+    cache: Option<Arc<PredictionCache>>,
+    metrics: Arc<Mutex<MetricsInner>>,
+}
+
+impl Worker {
+    fn run(self, wid: usize) {
+        while let Some(batch) = self.queue.next_batch(wid) {
+            self.handle_batch(batch);
+        }
+    }
+
+    fn handle_batch(&self, batch: Vec<Enqueued<Job>>) {
+        let size = batch.len();
+        // Per-batch local accumulation; counters and latencies are
+        // flushed once per drained batch, not once per request.
+        let mut local_served = 0u64;
+        let mut local_errors = 0u64;
+        let mut local_latencies = Vec::with_capacity(size);
+        // Featurize the whole batch (answer failures immediately).
+        let mut feats = Vec::with_capacity(size);
+        let mut ok_jobs = Vec::with_capacity(size);
+        for e in batch {
+            let (req, key, tx): Job = e.item;
+            match req.featurize() {
+                Ok(f) => {
+                    feats.push(f);
+                    ok_jobs.push((req, key, tx, e.enqueued_at));
+                }
+                Err(err) => {
+                    local_errors += 1;
+                    let _ = tx.send(Err(err));
+                }
+            }
+        }
+        if !feats.is_empty() {
+            match self.model.predict_costs(&feats) {
+                Ok(costs) => {
+                    let ready: Vec<_> = ok_jobs.into_iter().zip(costs).collect();
+                    // Fill the cache *before* answering, so a client that
+                    // saw its reply can rely on the next identical
+                    // request hitting.
+                    if let Some(cache) = &self.cache {
+                        let mut c = cache.lock().unwrap();
+                        for ((_, key, _, _), (t, m)) in &ready {
+                            c.insert(*key, (*t, *m));
+                        }
+                    }
+                    for ((req, _, tx, t0), (time_s, mem)) in ready {
+                        let latency = t0.elapsed().as_secs_f64();
+                        let pred = Prediction {
+                            id: req.id,
+                            time_s,
+                            memory_bytes: mem,
+                            fits_device: fits_device(&req.config.device, mem),
+                            latency_s: latency,
+                        };
+                        local_served += 1;
+                        local_latencies.push(latency);
+                        let _ = tx.send(Ok(pred));
+                    }
+                }
+                Err(err) => {
+                    for (_, _, tx, _) in ok_jobs {
+                        local_errors += 1;
+                        let _ = tx.send(Err(crate::err!("backend: {err}")));
+                    }
+                }
+            }
+        }
+        self.served.fetch_add(local_served, Ordering::SeqCst);
+        self.errors.fetch_add(local_errors, Ordering::SeqCst);
+        // One flush per drained batch, and the batch size is recorded
+        // exactly once — including for all-error batches — so
+        // mean_batch_size stays truthful.
+        let mut m = self.metrics.lock().unwrap();
+        m.latencies.extend(local_latencies);
+        m.batch_sizes.push(size);
+    }
+}
 
 /// Handle to a running service.
 pub struct PredictionService {
-    queue: Arc<Batcher<Job>>,
+    queue: Arc<ShardedBatcher<Job>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     served: Arc<AtomicU64>,
     errors: Arc<AtomicU64>,
+    cache: Option<Arc<PredictionCache>>,
     metrics: Arc<Mutex<MetricsInner>>,
 }
 
 impl PredictionService {
-    /// Spawn workers over a shared dynamic-batching queue.
+    /// Spawn one worker per batcher shard, all sharing the answer cache.
     pub fn start(cfg: ServiceConfig, model: Arc<dyn CostModel>) -> PredictionService {
-        let queue = Arc::new(Batcher::new(cfg.max_batch, cfg.max_wait));
+        let n_workers = cfg.workers.max(1);
+        let queue = Arc::new(ShardedBatcher::new(n_workers, cfg.max_batch, cfg.max_wait));
         let served = Arc::new(AtomicU64::new(0));
         let errors = Arc::new(AtomicU64::new(0));
+        let cache = (cfg.cache_capacity > 0)
+            .then(|| Arc::new(Mutex::new(TtlLru::new(cfg.cache_capacity, cfg.cache_ttl))));
         let metrics = Arc::new(Mutex::new(MetricsInner {
             latencies: Vec::new(),
             batch_sizes: Vec::new(),
         }));
-        let workers = (0..cfg.workers.max(1))
+        let workers = (0..n_workers)
             .map(|wid| {
-                let queue = Arc::clone(&queue);
-                let model = Arc::clone(&model);
-                let served = Arc::clone(&served);
-                let errors = Arc::clone(&errors);
-                let metrics = Arc::clone(&metrics);
+                let worker = Worker {
+                    queue: Arc::clone(&queue),
+                    model: Arc::clone(&model),
+                    served: Arc::clone(&served),
+                    errors: Arc::clone(&errors),
+                    cache: cache.clone(),
+                    metrics: Arc::clone(&metrics),
+                };
                 std::thread::Builder::new()
                     .name(format!("predict-worker-{wid}"))
-                    .spawn(move || {
-                        while let Some(batch) = queue.next_batch() {
-                            let size = batch.len();
-                            // Featurize the whole batch (drop failures).
-                            let mut feats = Vec::with_capacity(size);
-                            let mut ok_jobs = Vec::with_capacity(size);
-                            for e in batch {
-                                let (req, tx): Job = e.item;
-                                match req.featurize() {
-                                    Ok(f) => {
-                                        feats.push(f);
-                                        ok_jobs.push((req, tx, e.enqueued_at));
-                                    }
-                                    Err(err) => {
-                                        errors.fetch_add(1, Ordering::SeqCst);
-                                        let _ = tx.send(Err(err));
-                                    }
-                                }
-                            }
-                            if feats.is_empty() {
-                                continue;
-                            }
-                            match model.predict_costs(&feats) {
-                                Ok(costs) => {
-                                    for ((req, tx, t0), (time_s, mem)) in
-                                        ok_jobs.into_iter().zip(costs)
-                                    {
-                                        let latency = t0.elapsed().as_secs_f64();
-                                        let vram = (req.config.device.vram
-                                            - req.config.device.context_bytes)
-                                            as f64;
-                                        let pred = Prediction {
-                                            id: req.id,
-                                            time_s,
-                                            memory_bytes: mem,
-                                            fits_device: mem
-                                                <= vram + req.config.device.context_bytes as f64,
-                                            latency_s: latency,
-                                        };
-                                        served.fetch_add(1, Ordering::SeqCst);
-                                        metrics.lock().unwrap().latencies.push(latency);
-                                        let _ = tx.send(Ok(pred));
-                                    }
-                                }
-                                Err(err) => {
-                                    for (_, tx, _) in ok_jobs {
-                                        errors.fetch_add(1, Ordering::SeqCst);
-                                        let _ =
-                                            tx.send(Err(crate::err!("backend: {err}")));
-                                    }
-                                }
-                            }
-                            metrics.lock().unwrap().batch_sizes.push(size);
-                        }
-                    })
+                    .spawn(move || worker.run(wid))
                     .expect("spawn worker")
             })
             .collect();
@@ -232,14 +297,44 @@ impl PredictionService {
             workers,
             served,
             errors,
+            cache,
             metrics,
         }
     }
 
-    /// Submit a request; the receiver yields the prediction.
+    /// Submit a request; the receiver yields the prediction. A cache hit
+    /// is answered inline — the batcher and the cost model never run.
     pub fn submit(&self, req: PredictRequest) -> Receiver<crate::Result<Prediction>> {
         let (tx, rx) = channel();
-        self.queue.push((req, tx));
+        let t0 = Instant::now();
+        // The digest is cache-only work; skip it when caching is off
+        // (workers consult the key only to fill an enabled cache).
+        let key = if self.cache.is_some() {
+            req.cache_key()
+        } else {
+            0
+        };
+        if let Some(cache) = &self.cache {
+            // The guard is dropped at the end of this statement, so the
+            // hit path below never holds the cache and metrics locks at
+            // the same time.
+            let cached = cache.lock().unwrap().get(&key);
+            if let Some((time_s, mem)) = cached {
+                let latency = t0.elapsed().as_secs_f64();
+                let pred = Prediction {
+                    id: req.id,
+                    time_s,
+                    memory_bytes: mem,
+                    fits_device: fits_device(&req.config.device, mem),
+                    latency_s: latency,
+                };
+                self.served.fetch_add(1, Ordering::SeqCst);
+                self.metrics.lock().unwrap().latencies.push(latency);
+                let _ = tx.send(Ok(pred));
+                return rx;
+            }
+        }
+        self.queue.push((req, key, tx));
         rx
     }
 
@@ -251,12 +346,25 @@ impl PredictionService {
     }
 
     pub fn metrics(&self) -> ServiceMetrics {
+        // Take the cache lock strictly before the metrics lock — the
+        // submit hit path holds cache → metrics, so sampling them in the
+        // opposite order while overlapped could deadlock.
+        let (cache_hits, cache_misses) = match &self.cache {
+            Some(c) => {
+                let s = c.lock().unwrap().stats();
+                (s.hits, s.misses)
+            }
+            None => (0, 0),
+        };
         let inner = self.metrics.lock().unwrap();
         let sizes: Vec<f64> = inner.batch_sizes.iter().map(|&s| s as f64).collect();
         ServiceMetrics {
             served: self.served.load(Ordering::SeqCst),
             errors: self.errors.load(Ordering::SeqCst),
             batches: inner.batch_sizes.len() as u64,
+            cache_hits,
+            cache_misses,
+            steals: self.queue.steals(),
             p50_latency_s: stats::quantile(&inner.latencies, 0.5),
             p99_latency_s: stats::quantile(&inner.latencies, 0.99),
             mean_batch_size: stats::mean(&sizes),
@@ -294,6 +402,19 @@ mod tests {
         }
     }
 
+    /// Always predicts the same fixed memory figure.
+    struct FixedMemModel(f64);
+
+    impl CostModel for FixedMemModel {
+        fn predict_costs(&self, f: &[Vec<f64>]) -> crate::Result<Vec<(f64, f64)>> {
+            Ok(f.iter().map(|_| (1.0, self.0)).collect())
+        }
+
+        fn name(&self) -> &'static str {
+            "fixed-mem"
+        }
+    }
+
     fn req(id: u64, model: &str, batch: usize) -> PredictRequest {
         PredictRequest {
             id,
@@ -302,9 +423,20 @@ mod tests {
         }
     }
 
+    fn uncached() -> ServiceConfig {
+        ServiceConfig {
+            cache_capacity: 0,
+            ..ServiceConfig::default()
+        }
+    }
+
+    fn fixed_mem_svc(mem: f64) -> PredictionService {
+        PredictionService::start(ServiceConfig::default(), Arc::new(FixedMemModel(mem)))
+    }
+
     #[test]
     fn serves_requests_and_counts() {
-        let svc = PredictionService::start(ServiceConfig::default(), Arc::new(FakeModel));
+        let svc = PredictionService::start(uncached(), Arc::new(FakeModel));
         let rx: Vec<_> = (0..20)
             .map(|i| svc.submit(req(i, "resnet18", 32 + i as usize)))
             .collect();
@@ -317,6 +449,8 @@ mod tests {
         assert_eq!(m.served, 20);
         assert_eq!(m.errors, 0);
         assert!(m.batches >= 1);
+        assert_eq!(m.cache_hits, 0, "caching disabled");
+        assert_eq!(m.cache_misses, 0, "caching disabled");
     }
 
     #[test]
@@ -334,6 +468,8 @@ mod tests {
             workers: 1,
             max_batch: 16,
             max_wait: Duration::from_millis(20),
+            cache_capacity: 0,
+            ..ServiceConfig::default()
         };
         let svc = PredictionService::start(cfg, Arc::new(FakeModel));
         let rx: Vec<_> = (0..64).map(|i| svc.submit(req(i, "lenet5", 16))).collect();
@@ -351,18 +487,106 @@ mod tests {
 
     #[test]
     fn oom_flag_set_for_huge_predictions() {
-        struct HugeModel;
-        impl CostModel for HugeModel {
-            fn predict_costs(&self, f: &[Vec<f64>]) -> crate::Result<Vec<(f64, f64)>> {
-                Ok(f.iter().map(|_| (1.0, 1e18)).collect())
-            }
-            fn name(&self) -> &'static str {
-                "huge"
-            }
-        }
-        let svc = PredictionService::start(ServiceConfig::default(), Arc::new(HugeModel));
+        let svc = fixed_mem_svc(1e18);
         let p = svc.predict(req(1, "lenet5", 8)).unwrap();
         assert!(!p.fits_device);
         svc.shutdown();
+    }
+
+    #[test]
+    fn fits_device_reserves_context_headroom() {
+        // Regression: the context reservation used to be added back into
+        // the headroom, making the reservation a no-op. A prediction in
+        // the band (vram - context_bytes, vram] must NOT fit.
+        let device = crate::sim::DeviceProfile::rtx2080();
+        let vram = device.vram as f64;
+        let context = device.context_bytes as f64;
+        let in_band = vram - context / 2.0;
+        assert!(in_band > vram - context && in_band <= vram);
+        let svc = fixed_mem_svc(in_band);
+        let p = svc.predict(req(1, "lenet5", 8)).unwrap();
+        assert!(
+            !p.fits_device,
+            "{} bytes must not fit: context reservation ignored",
+            p.memory_bytes
+        );
+        // Just under the reservation line still fits.
+        assert!(fits_device(&device, vram - context - 1.0));
+        assert!(!fits_device(&device, vram - context + 1.0));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn second_identical_request_is_a_cache_hit() {
+        let svc = PredictionService::start(ServiceConfig::default(), Arc::new(FakeModel));
+        let a = svc.predict(req(1, "resnet18", 64)).unwrap();
+        let b = svc.predict(req(2, "resnet18", 64)).unwrap();
+        assert_eq!(a.time_s, b.time_s);
+        assert_eq!(a.memory_bytes, b.memory_bytes);
+        // A different (model, config) content must miss.
+        let c = svc.predict(req(3, "resnet18", 128)).unwrap();
+        assert_ne!(c.time_s, a.time_s);
+        let m = svc.shutdown();
+        assert_eq!(m.served, 3);
+        assert_eq!(m.cache_hits, 1, "second identical request hits");
+        assert_eq!(m.cache_misses, 2);
+    }
+
+    #[test]
+    fn ttl_expired_entry_is_a_miss() {
+        let cfg = ServiceConfig {
+            cache_ttl: Duration::from_millis(25),
+            ..ServiceConfig::default()
+        };
+        let svc = PredictionService::start(cfg, Arc::new(FakeModel));
+        svc.predict(req(1, "lenet5", 32)).unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        svc.predict(req(2, "lenet5", 32)).unwrap();
+        let m = svc.shutdown();
+        assert_eq!(m.cache_hits, 0, "entry expired before reuse");
+        assert_eq!(m.cache_misses, 2);
+        assert_eq!(m.served, 2);
+    }
+
+    #[test]
+    fn all_error_batches_still_counted_in_batch_sizes() {
+        let cfg = ServiceConfig {
+            workers: 1,
+            ..uncached()
+        };
+        let svc = PredictionService::start(cfg, Arc::new(FakeModel));
+        let rx: Vec<_> = (0..6).map(|i| svc.submit(req(i, "no-such-net", 8))).collect();
+        for r in rx {
+            assert!(r.recv().unwrap().is_err());
+        }
+        let m = svc.shutdown();
+        assert_eq!(m.errors, 6);
+        assert_eq!(m.served, 0);
+        assert!(m.batches >= 1, "all-error batches must still be recorded");
+        assert!(
+            m.mean_batch_size > 0.0,
+            "mean batch size must reflect drained batches, got {}",
+            m.mean_batch_size
+        );
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_requests_across_shards() {
+        // Submit a burst over 4 worker shards and shut down immediately:
+        // every receiver must still get an answer (no hung recv()).
+        let cfg = ServiceConfig {
+            workers: 4,
+            max_wait: Duration::from_millis(50),
+            ..uncached()
+        };
+        let svc = PredictionService::start(cfg, Arc::new(FakeModel));
+        let rx: Vec<_> = (0..200)
+            .map(|i| svc.submit(req(i, "resnet18", 16 + (i as usize % 7))))
+            .collect();
+        let m = svc.shutdown();
+        assert_eq!(m.served + m.errors, 200);
+        for r in rx {
+            r.recv().expect("sender dropped without answering").unwrap();
+        }
     }
 }

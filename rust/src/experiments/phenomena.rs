@@ -2,9 +2,7 @@
 //! motivate a black-box predictor.
 
 use super::Ctx;
-use crate::sim::{
-    simulate_training, ConvAlgo, DatasetKind, DeviceProfile, TrainConfig,
-};
+use crate::sim::{simulate_training, ConvAlgo, DatasetKind, DeviceProfile, TrainConfig};
 use crate::util::table::{fmt_bytes, Table};
 use crate::zoo;
 

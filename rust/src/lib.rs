@@ -32,12 +32,13 @@
 //! * [`predictor`] — learned predictors + AutoML + baselines.
 //! * [`profiler`] — dataset collection sweeps.
 //! * [`runtime`] — PJRT loader/executor for `artifacts/*.hlo.txt`.
-//! * [`coordinator`] — the online prediction service (queue + batcher).
+//! * [`coordinator`] — the online prediction service (content-keyed
+//!   answer cache + sharded batcher + workers).
 //! * [`scheduler`] — the §4.3 genetic-algorithm job scheduler.
 //! * [`experiments`] — one regeneration harness per paper figure/table.
 //! * [`bench_harness`] — criterion-less timing harness for `benches/`.
 //! * [`util`] — support substrates (PRNG, JSON, stats, CLI, threads,
-//!   errors).
+//!   TTL-LRU cache, errors).
 
 pub mod bench_harness;
 pub mod coordinator;

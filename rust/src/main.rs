@@ -20,6 +20,9 @@
 //!               --batch 128 --dataset cifar100|mnist --device rtx2080
 //!               --framework pytorch|tensorflow --backend automl|mlp
 //!
+//! `serve` flags: --requests 256 --workers 2 --cache-capacity 4096
+//!                --cache-ttl-ms 120000   (capacity 0 disables caching)
+//!
 //! `--backend mlp` needs the AOT artifacts (python/compile/aot.py) and a
 //! PJRT binding; this zero-dependency build ships a stub backend, so the
 //! default `automl` backend is the serving path.
@@ -34,9 +37,11 @@ use dnnabacus::features::Nsm;
 use dnnabacus::predictor::{AutoMl, Target};
 use dnnabacus::sim::{DatasetKind, DeviceProfile, Framework, Optimizer, TrainConfig};
 use dnnabacus::util::cli::Args;
+use dnnabacus::util::prng::Rng;
 use dnnabacus::zoo;
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let args = Args::from_env();
@@ -192,6 +197,15 @@ fn predict(args: &Args) -> dnnabacus::Result<()> {
 fn serve(args: &Args) -> dnnabacus::Result<()> {
     let ctx = ctx_from(args);
     let n_requests = args.usize_or("requests", 256);
+    let defaults = ServiceConfig::default();
+    let svc_cfg = ServiceConfig {
+        workers: args.usize_or("workers", defaults.workers),
+        cache_capacity: args.usize_or("cache-capacity", defaults.cache_capacity),
+        cache_ttl: Duration::from_millis(
+            args.u64_or("cache-ttl-ms", defaults.cache_ttl.as_millis() as u64),
+        ),
+        ..defaults
+    };
     let backend: Arc<dyn dnnabacus::coordinator::CostModel> =
         match args.str_or("backend", "automl").as_str() {
             "mlp" => Arc::new(MlpBackend::spawn(ctx.seed)?),
@@ -204,30 +218,37 @@ fn serve(args: &Args) -> dnnabacus::Result<()> {
             }
         };
     println!("backend: {}", backend.name());
-    let svc = PredictionService::start(ServiceConfig::default(), backend);
+    let svc = PredictionService::start(svc_cfg, backend);
     let names: Vec<&str> = zoo::CLASSIC_29.iter().map(|(n, _)| *n).collect();
-    let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..n_requests)
+    let batches = [32usize, 64, 128, 256];
+    // A skewed (Zipf-ish) mix: schedulers resubmit recurring job shapes,
+    // which is exactly what the content-keyed cache absorbs.
+    let mut rng = Rng::new(ctx.seed);
+    let requests: Vec<PredictRequest> = (0..n_requests)
         .map(|i| {
-            let cfg = TrainConfig::paper_default(
-                if i % 2 == 0 {
-                    DatasetKind::Cifar100
-                } else {
-                    DatasetKind::Mnist
-                },
-                32 + (i % 8) * 32,
-            );
-            svc.submit(PredictRequest {
+            let dataset = if rng.chance(0.5) {
+                DatasetKind::Cifar100
+            } else {
+                DatasetKind::Mnist
+            };
+            PredictRequest {
                 id: i as u64,
-                model: names[i % names.len()].to_string(),
-                config: cfg,
-            })
+                model: names[rng.zipf(names.len())].to_string(),
+                config: TrainConfig::paper_default(dataset, batches[rng.zipf(batches.len())]),
+            }
         })
         .collect();
+    // Submit in waves so later waves can hit cache entries earlier waves
+    // filled (an open-loop blast would finish submitting before the
+    // first fill and never hit).
+    let t0 = std::time::Instant::now();
     let mut ok = 0;
-    for rx in rxs {
-        if rx.recv()?.is_ok() {
-            ok += 1;
+    for wave in requests.chunks(64) {
+        let rxs: Vec<_> = wave.iter().map(|r| svc.submit(r.clone())).collect();
+        for rx in rxs {
+            if rx.recv()?.is_ok() {
+                ok += 1;
+            }
         }
     }
     let elapsed = t0.elapsed().as_secs_f64();
@@ -238,6 +259,10 @@ fn serve(args: &Args) -> dnnabacus::Result<()> {
         m.p50_latency_s * 1e3,
         m.p99_latency_s * 1e3,
         m.mean_batch_size
+    );
+    println!(
+        "cache: {} hits / {} misses | batcher: {} batches, {} steals",
+        m.cache_hits, m.cache_misses, m.batches, m.steals
     );
     Ok(())
 }

@@ -240,11 +240,7 @@ mod tests {
         let data = fake_dataset(200, 42);
         let m = AutoMl::train_opt(&data, Target::Time, 2, true);
         assert_eq!(m.report.scores.len(), ModelKind::ALL.len());
-        assert!(m
-            .report
-            .scores
-            .iter()
-            .any(|(k, _)| *k == m.report.winner));
+        assert!(m.report.scores.iter().any(|(k, _)| *k == m.report.winner));
     }
 
     #[test]

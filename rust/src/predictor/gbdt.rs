@@ -106,12 +106,7 @@ impl Gbdt {
 impl Regressor for Gbdt {
     fn predict_one(&self, x: &[f64]) -> f64 {
         self.base
-            + self.learning_rate
-                * self
-                    .trees
-                    .iter()
-                    .map(|t| t.predict_one(x))
-                    .sum::<f64>()
+            + self.learning_rate * self.trees.iter().map(|t| t.predict_one(x)).sum::<f64>()
     }
 
     fn to_json(&self) -> Json {

@@ -233,9 +233,9 @@ impl DeviceAllocator for BfcAllocator {
         if !self.take_binned(rounded) {
             // Grow the region: double the current region or the request,
             // whichever is larger (allow_growth curve), capped by VRAM.
-            let grow = rounded.max(self.region.max(8 * MB)).min(
-                self.vram.saturating_sub(self.region),
-            );
+            let grow = rounded
+                .max(self.region.max(8 * MB))
+                .min(self.vram.saturating_sub(self.region));
             let grow = grow.max(rounded); // always at least the request
             self.region += grow;
             self.peak = self.peak.max(self.region);

@@ -272,11 +272,9 @@ fn fft_time(
     // Filter spectra: Cin·Cout transforms, re-done every kernel call.
     let filter_tf = cin * cout * p2 * logp * 5.0 / (dev.peak_flops * FILTER_EFF);
     // Input + inverse-output transforms (batched: much better shaped).
-    let data_tf =
-        b * tps * (cin + cout) * p2 * logp * 5.0 / (dev.peak_flops * DATA_EFF * occ);
+    let data_tf = b * tps * (cin + cout) * p2 * logp * 5.0 / (dev.peak_flops * DATA_EFF * occ);
     // Spectral pointwise complex multiply-accumulate (6 real flops).
-    let pointwise =
-        b * tps * cin * cout * spec * 6.0 / (dev.peak_flops * POINTWISE_EFF * occ);
+    let pointwise = b * tps * cin * cout * spec * 6.0 / (dev.peak_flops * POINTWISE_EFF * occ);
     filter_tf + data_tf + pointwise
 }
 

@@ -1,0 +1,308 @@
+//! Content-keyed TTL-LRU cache — the serving layer's answer store.
+//!
+//! The offline crate set has no `lru`/`moka`; this module is the in-tree
+//! replacement the coordinator fronts its batcher with. Keys are 64-bit
+//! content digests produced by [`hash64`], a seeded SplitMix64-style
+//! byte fold (same mixer constants as [`crate::util::prng`]), so a
+//! recurring (model, config) pair always lands on the same entry no
+//! matter which client submitted it. Entries expire after a TTL, the
+//! least-recently-used live entry is evicted at capacity, and
+//! hit/miss/eviction/expiration counters feed the service metrics.
+
+use std::collections::{HashMap, VecDeque};
+use std::hash::Hash;
+use std::time::{Duration, Instant};
+
+/// Crate-default seed for [`hash64`] content digests.
+pub const DIGEST_SEED: u64 = 0x00AB_AC05_D16E_5700;
+
+/// Fold `bytes` into a 64-bit digest under an explicit `seed`, using the
+/// SplitMix64 multiplier/finalizer constants from Blackman & Vigna (the
+/// same ones [`crate::util::prng::SplitMix64`] steps with). Deterministic
+/// across runs and platforms; distinct seeds give de-correlated digests.
+pub fn hash64(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = seed ^ 0x9E37_79B9_7F4A_7C15;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h = h.rotate_left(31);
+    }
+    // SplitMix64 finalizer so short inputs still diffuse into all bits.
+    h = h.wrapping_add(bytes.len() as u64);
+    h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h = (h ^ (h >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    h ^ (h >> 31)
+}
+
+/// Point-in-time counters for a [`TtlLru`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub expirations: u64,
+    pub len: usize,
+}
+
+struct Entry<V> {
+    value: V,
+    expires_at: Instant,
+    /// Stamp of this entry's newest recency record in `order`.
+    stamp: u64,
+}
+
+/// An LRU map with a per-entry time-to-live.
+///
+/// Recency is tracked with the classic lazy queue: every touch appends a
+/// `(key, stamp)` record, and records whose stamp was superseded are
+/// skipped on eviction and trimmed opportunistically, giving O(1)
+/// amortized operations without a linked list. Not internally
+/// synchronized — the service wraps it in a `Mutex`.
+pub struct TtlLru<K, V> {
+    cap: usize,
+    ttl: Duration,
+    map: HashMap<K, Entry<V>>,
+    /// Recency records, oldest first; stale pairs dropped lazily.
+    order: VecDeque<(K, u64)>,
+    next_stamp: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    expirations: u64,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> TtlLru<K, V> {
+    /// A cache holding at most `capacity.max(1)` entries, each live for
+    /// `ttl` after its last insert (lookups refresh recency, not TTL).
+    pub fn new(capacity: usize, ttl: Duration) -> Self {
+        TtlLru {
+            cap: capacity.max(1),
+            // Clamp so `Instant + ttl` can never overflow.
+            ttl: ttl.min(Duration::from_secs(100 * 365 * 24 * 3600)),
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            next_stamp: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            expirations: 0,
+        }
+    }
+
+    /// Look up `key`, counting a hit or a miss. An expired entry is
+    /// removed and counts as a miss plus an expiration.
+    pub fn get(&mut self, key: &K) -> Option<V> {
+        self.get_at(key, Instant::now())
+    }
+
+    /// [`get`](Self::get) with an explicit clock, for deterministic tests.
+    pub fn get_at(&mut self, key: &K, now: Instant) -> Option<V> {
+        match self.map.get_mut(key) {
+            Some(e) if now < e.expires_at => {
+                self.next_stamp += 1;
+                e.stamp = self.next_stamp;
+                let value = e.value.clone();
+                self.order.push_back((key.clone(), self.next_stamp));
+                self.hits += 1;
+                self.trim_order();
+                Some(value)
+            }
+            Some(_) => {
+                self.map.remove(key);
+                self.expirations += 1;
+                self.misses += 1;
+                self.trim_order();
+                None
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert or overwrite `key`, evicting least-recently-used entries
+    /// while over capacity.
+    pub fn insert(&mut self, key: K, value: V) {
+        self.insert_at(key, value, Instant::now());
+    }
+
+    /// [`insert`](Self::insert) with an explicit clock.
+    pub fn insert_at(&mut self, key: K, value: V, now: Instant) {
+        self.next_stamp += 1;
+        let stamp = self.next_stamp;
+        let entry = Entry {
+            value,
+            expires_at: now + self.ttl,
+            stamp,
+        };
+        self.map.insert(key.clone(), entry);
+        self.order.push_back((key, stamp));
+        while self.map.len() > self.cap {
+            // Oldest record; records superseded by a later touch are
+            // stale and skipped, so a live hit here is the true LRU.
+            let (k, s) = self.order.pop_front().expect("order tracks map");
+            if self.map.get(&k).is_some_and(|e| e.stamp == s) {
+                self.map.remove(&k);
+                self.evictions += 1;
+            }
+        }
+        self.trim_order();
+    }
+
+    /// Drop leading stale recency records, and compact the queue when
+    /// stale records dominate, so `order` stays O(live entries).
+    fn trim_order(&mut self) {
+        loop {
+            let stale = match self.order.front() {
+                Some((k, s)) => !self.map.get(k).is_some_and(|e| e.stamp == *s),
+                None => break,
+            };
+            if !stale {
+                break;
+            }
+            self.order.pop_front();
+        }
+        if self.order.len() > 2 * self.map.len() + 8 {
+            let map = &self.map;
+            self.order.retain(|(k, s)| map.get(k).is_some_and(|e| e.stamp == *s));
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn ttl(&self) -> Duration {
+        self.ttl
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            expirations: self.expirations,
+            len: self.map.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn secs(s: u64) -> Duration {
+        Duration::from_secs(s)
+    }
+
+    #[test]
+    fn hash64_deterministic_and_seed_sensitive() {
+        assert_eq!(hash64(1, b"vgg16"), hash64(1, b"vgg16"));
+        assert_ne!(hash64(1, b"vgg16"), hash64(2, b"vgg16"));
+        assert_ne!(hash64(1, b"vgg16"), hash64(1, b"vgg19"));
+        assert_ne!(hash64(1, b""), hash64(1, b"\0"));
+    }
+
+    #[test]
+    fn hash64_spreads_prefix_pairs() {
+        // ("ab","c") and ("a","bc") must not collide once callers add
+        // separators; here just check raw avalanche on small inputs.
+        let mut seen = std::collections::BTreeSet::new();
+        for a in 0..=255u8 {
+            seen.insert(hash64(7, &[a]));
+        }
+        assert_eq!(seen.len(), 256);
+    }
+
+    #[test]
+    fn hit_miss_counters() {
+        let mut c: TtlLru<u64, u32> = TtlLru::new(4, secs(60));
+        assert_eq!(c.get(&1), None);
+        c.insert(1, 10);
+        assert_eq!(c.get(&1), Some(10));
+        assert_eq!(c.get(&2), None);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.len), (1, 2, 1));
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c: TtlLru<&str, u32> = TtlLru::new(2, secs(60));
+        c.insert("a", 1);
+        c.insert("b", 2);
+        assert_eq!(c.get(&"a"), Some(1)); // "b" is now LRU
+        c.insert("c", 3);
+        assert_eq!(c.get(&"b"), None, "LRU entry evicted");
+        assert_eq!(c.get(&"a"), Some(1));
+        assert_eq!(c.get(&"c"), Some(3));
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn overwrite_does_not_evict() {
+        let mut c: TtlLru<u64, u32> = TtlLru::new(2, secs(60));
+        c.insert(1, 10);
+        c.insert(2, 20);
+        c.insert(1, 11);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&1), Some(11));
+        assert_eq!(c.get(&2), Some(20));
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn ttl_expiry_is_a_miss() {
+        let mut c: TtlLru<u64, u32> = TtlLru::new(4, secs(10));
+        let t0 = Instant::now();
+        c.insert_at(1, 10, t0);
+        assert_eq!(c.get_at(&1, t0 + secs(5)), Some(10));
+        assert_eq!(c.get_at(&1, t0 + secs(11)), None, "expired");
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.expirations, s.len), (1, 1, 1, 0));
+    }
+
+    #[test]
+    fn reinsert_after_expiry_serves_again() {
+        let mut c: TtlLru<u64, u32> = TtlLru::new(4, secs(10));
+        let t0 = Instant::now();
+        c.insert_at(1, 10, t0);
+        assert_eq!(c.get_at(&1, t0 + secs(20)), None);
+        c.insert_at(1, 12, t0 + secs(20));
+        assert_eq!(c.get_at(&1, t0 + secs(25)), Some(12));
+    }
+
+    #[test]
+    fn recency_queue_stays_bounded_under_hot_key() {
+        let mut c: TtlLru<u64, u32> = TtlLru::new(8, secs(60));
+        for k in 0..8u64 {
+            c.insert(k, k as u32);
+        }
+        for _ in 0..10_000 {
+            assert_eq!(c.get(&3), Some(3));
+        }
+        assert!(
+            c.order.len() <= 2 * c.map.len() + 8,
+            "lazy queue leaked: {} records for {} entries",
+            c.order.len(),
+            c.map.len()
+        );
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut c: TtlLru<u64, u32> = TtlLru::new(0, secs(60));
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.capacity(), 1);
+    }
+}

@@ -1,9 +1,11 @@
 //! Support substrates built in-tree because the sandbox is offline:
 //! PRNG (no `rand`), minimal JSON (no `serde`), stats, CLI parsing
 //! (no `clap`), a thread pool (no `tokio`/`rayon`), a small
-//! property-testing driver (no `proptest`), and the crate error type
-//! (no `anyhow`/`thiserror`).
+//! property-testing driver (no `proptest`), a content-keyed TTL-LRU
+//! cache (no `lru`/`moka`), and the crate error type (no
+//! `anyhow`/`thiserror`).
 
+pub mod cache;
 pub mod cli;
 pub mod error;
 pub mod json;

@@ -98,6 +98,17 @@ impl Rng {
         self.f64() < p
     }
 
+    /// Zipf-ish rank sample in `[0, n)`: the probability of rank `r`
+    /// decays like `1/(r+1)` (inverse CDF of a log density — exact
+    /// weight `ln(1 + 1/(r+1))`, O(1) per draw). Skewed request mixes
+    /// for the serving benchmarks come from here. Panics if `n == 0`.
+    #[inline]
+    pub fn zipf(&mut self, n: usize) -> usize {
+        assert!(n > 0, "Rng::zipf(0)");
+        let r = ((n as f64 + 1.0).powf(self.f64()) - 1.0).floor() as usize;
+        r.min(n - 1)
+    }
+
     /// Standard normal via Box–Muller.
     pub fn normal(&mut self) -> f64 {
         let u1 = self.f64().max(1e-300);
@@ -200,6 +211,21 @@ mod tests {
         let mut b = root.fork(1);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
         assert!(same < 4);
+    }
+
+    #[test]
+    fn zipf_bounds_and_skew() {
+        let mut r = Rng::new(12);
+        let n = 20;
+        let mut counts = vec![0usize; n];
+        for _ in 0..20_000 {
+            let k = r.zipf(n);
+            assert!(k < n);
+            counts[k] += 1;
+        }
+        assert!(counts[0] > counts[n - 1] * 4, "head {} tail {}", counts[0], counts[n - 1]);
+        assert!(counts[0] > counts[4], "rank 0 beats rank 4");
+        assert!(counts.iter().all(|&c| c > 0), "full support");
     }
 
     #[test]

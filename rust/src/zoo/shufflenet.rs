@@ -167,11 +167,7 @@ mod tests {
         let g = shufflenet_v2(3, 10);
         let shapes = infer_shapes(&g, 1, 3, 32).unwrap();
         // Final feature map before GAP is 4×4 (three stride-2 stages).
-        let last_map = shapes
-            .iter()
-            .rev()
-            .find(|s| s.spatial() > 1)
-            .unwrap();
+        let last_map = shapes.iter().rev().find(|s| s.spatial() > 1).unwrap();
         assert_eq!(last_map.spatial(), 4);
     }
 }

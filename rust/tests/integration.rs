@@ -153,8 +153,7 @@ fn scheduling_pipeline_ga_close_to_optimal_under_truth() {
     let machines = Machines::paper();
     let trace = ga::optimize(&predicted, &machines, &ga::GaParams::default());
     let (_, true_best) = optimal(&truth, &machines).unwrap();
-    let ga_truth =
-        dnnabacus::scheduler::makespan(&truth, &machines, &trace.best_plan).unwrap();
+    let ga_truth = dnnabacus::scheduler::makespan(&truth, &machines, &trace.best_plan).unwrap();
     assert!(
         ga_truth <= true_best * 1.35,
         "GA-under-truth {ga_truth} vs oracle {true_best}"

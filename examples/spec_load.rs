@@ -1,0 +1,125 @@
+//! Spec-driven serving load: the ingest pipeline under traffic.
+//!
+//! Builds a mixed request stream — zoo networks referenced by name,
+//! zoo *twins* arriving as exported specs (same graph, different front
+//! door), and the novel architectures from `examples/specs/` — and
+//! fires it at the prediction service. Because the answer cache is
+//! keyed on graph content, a spec twin hits the entry its zoo
+//! counterpart filled; the hit-rate printed at the end shows the cache
+//! absorbing traffic *across* the two ingestion paths.
+//!
+//! ```bash
+//! cargo run --release --example spec_load
+//! ```
+
+use dnnabacus::coordinator::{
+    service::AutoMlBackend, CostModel, PredictRequest, PredictionService, ServiceConfig,
+};
+use dnnabacus::experiments::Ctx;
+use dnnabacus::ingest::{self, ParsedSpec};
+use dnnabacus::predictor::{AutoMl, Target};
+use dnnabacus::sim::{DatasetKind, TrainConfig};
+use dnnabacus::util::prng::Rng;
+use std::sync::Arc;
+
+/// The checked-in corpus of novel (non-zoo) architectures. `include_str!`
+/// resolves next to this file, so the example always loads the corpus CI
+/// validates.
+const NOVEL_SPECS: [&str; 5] = [
+    include_str!("specs/tiny-cnn.json"),
+    include_str!("specs/branchy-inception.json"),
+    include_str!("specs/residual-slim.json"),
+    include_str!("specs/mnist-mlp.json"),
+    include_str!("specs/se-shuffle.json"),
+];
+
+/// Zoo networks that also arrive as exported specs (the "bring your own
+/// JSON" twin of a recurring job shape).
+const TWIN_NAMES: [&str; 4] = ["resnet18", "vgg16", "squeezenet", "shufflenet-v2"];
+
+fn main() -> dnnabacus::Result<()> {
+    let ctx = Ctx::fast();
+    let corpus = ctx.training_corpus();
+    let backend: Arc<dyn CostModel> = Arc::new(AutoMlBackend {
+        time_model: AutoMl::train_opt(&corpus, Target::Time, 1, true),
+        memory_model: AutoMl::train_opt(&corpus, Target::Memory, 1, true),
+    });
+
+    // Compile the corpus once, up front — parse + validate + lower is
+    // request-path work the service never repeats per submission — and
+    // Arc-wrap so fanning one spec into many requests clones a pointer,
+    // not a graph.
+    let novel: Vec<Arc<ParsedSpec>> = NOVEL_SPECS
+        .iter()
+        .map(|text| Ok(Arc::new(ingest::compile_str(text)?)))
+        .collect::<dnnabacus::Result<_>>()?;
+    let twins: Vec<Arc<ParsedSpec>> = TWIN_NAMES
+        .iter()
+        .map(|name| Ok(Arc::new(ingest::spec_for_zoo(name, 3, 100)?.compile()?)))
+        .collect::<dnnabacus::Result<_>>()?;
+    for p in &novel {
+        println!(
+            "novel spec '{}': {} nodes, {} params",
+            p.name,
+            p.graph.len(),
+            p.graph.param_count()
+        );
+    }
+
+    let svc = PredictionService::start(ServiceConfig::default(), backend);
+    let mut rng = Rng::new(17);
+    let batches = [16usize, 32, 64, 128];
+    let n = 512;
+    let requests: Vec<PredictRequest> = (0..n)
+        .map(|i| {
+            let batch = batches[rng.zipf(batches.len())];
+            match rng.below(3) {
+                // Zoo by name — the classic front door.
+                0 => {
+                    let name = TWIN_NAMES[rng.zipf(TWIN_NAMES.len())];
+                    let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, batch);
+                    PredictRequest::zoo(i as u64, name, cfg)
+                }
+                // The same networks as specs — must share cache entries.
+                1 => {
+                    let p = twins[rng.zipf(twins.len())].clone();
+                    let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, batch);
+                    PredictRequest::spec(i as u64, p, cfg)
+                }
+                // Novel architectures — the zero-shot path.
+                _ => {
+                    let p = novel[rng.zipf(novel.len())].clone();
+                    let dataset = p.matching_dataset().unwrap_or(DatasetKind::Cifar100);
+                    PredictRequest::spec(i as u64, p, TrainConfig::paper_default(dataset, batch))
+                }
+            }
+        })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let mut ok = 0usize;
+    for wave in requests.chunks(64) {
+        let rxs: Vec<_> = wave.iter().map(|r| svc.submit(r.clone())).collect();
+        for rx in rxs {
+            if rx.recv()?.is_ok() {
+                ok += 1;
+            }
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let m = svc.shutdown();
+    println!(
+        "served {ok}/{n} in {elapsed:.2}s = {:.0} req/s | p50 {:.2} ms p99 {:.2} ms",
+        ok as f64 / elapsed,
+        m.p50_latency_s * 1e3,
+        m.p99_latency_s * 1e3
+    );
+    println!(
+        "cache: {} hits / {} misses ({:.0}% hit rate across zoo+spec traffic)",
+        m.cache_hits,
+        m.cache_misses,
+        100.0 * m.cache_hits as f64 / (m.cache_hits + m.cache_misses).max(1) as f64
+    );
+    assert_eq!(m.errors, 0, "every spec in the mix must be servable");
+    Ok(())
+}

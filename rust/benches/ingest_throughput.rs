@@ -1,0 +1,90 @@
+//! `cargo bench --bench ingest_throughput` — per-request cost of the
+//! ingest front door at serving scale: parse (JSON text → spec),
+//! compile (validate + lower + shape check), featurize (graph → NSM
+//! vector), and the full text-to-features chain, over a mix of small,
+//! branchy, and deep specs (exported zoo networks plus a novel
+//! hand-written net).
+//!
+//! Flags (after `--`):
+//!   --scale 0.12     shrinks the timing budget below 0.1 (CI smoke)
+//!   --json PATH      write the results as JSON (the CI bench-smoke job
+//!                    uploads this as a `BENCH_*.json` perf artifact)
+
+use dnnabacus::bench_harness::{self, BenchResult};
+use dnnabacus::features::{feature_vector, StructureRep};
+use dnnabacus::ingest::{self, ModelSpec};
+use dnnabacus::sim::{DatasetKind, TrainConfig};
+use dnnabacus::util::cli::Args;
+
+const NOVEL: &str = r#"{
+  "format": "dnnabacus-spec-v1",
+  "name": "novel-bench-net",
+  "input": {"channels": 3, "hw": 32},
+  "layers": [
+    {"id": "c1", "op": "conv2d",
+     "attrs": {"in_ch": 3, "out_ch": 32, "kernel": 3, "padding": 1}},
+    {"id": "r1", "op": "relu"},
+    {"id": "a", "op": "conv2d", "inputs": ["r1"],
+     "attrs": {"in_ch": 32, "out_ch": 32, "kernel": 1}},
+    {"id": "b", "op": "conv2d", "inputs": ["r1"],
+     "attrs": {"in_ch": 32, "out_ch": 32, "kernel": 3, "padding": 1}},
+    {"id": "cat", "op": "concat", "inputs": ["a", "b"]},
+    {"op": "globalavgpool"},
+    {"op": "flatten"},
+    {"op": "linear", "attrs": {"in_features": 64, "out_features": 100}}
+  ]
+}"#;
+
+fn main() {
+    let args = Args::from_env();
+    let scale = args.f64_or("scale", 0.12);
+    let budget = if scale < 0.1 { 0.2 } else { 0.8 };
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // The request mix: one small novel net, one mid-size classic, one
+    // branchy net, one deep net — all as spec *text*, which is what a
+    // spec-bearing request actually carries.
+    let mut corpus: Vec<(String, String)> = vec![("novel-bench-net".into(), NOVEL.to_string())];
+    for name in ["resnet18", "googlenet", "densenet121"] {
+        let spec = ingest::spec_for_zoo(name, 3, 100).unwrap();
+        corpus.push((name.to_string(), spec.to_json().to_string()));
+    }
+
+    for (name, text) in &corpus {
+        results.push(bench_harness::run(&format!("parse({name})"), budget, || {
+            std::hint::black_box(ModelSpec::parse_str(text).unwrap());
+        }));
+    }
+    for (name, text) in &corpus {
+        let spec = ModelSpec::parse_str(text).unwrap();
+        results.push(bench_harness::run(&format!("compile({name})"), budget, || {
+            std::hint::black_box(spec.compile().unwrap());
+        }));
+    }
+    let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, 64);
+    for (name, text) in &corpus {
+        let parsed = ModelSpec::parse_str(text).unwrap().compile().unwrap();
+        results.push(bench_harness::run(
+            &format!("featurize({name})"),
+            budget,
+            || {
+                std::hint::black_box(feature_vector(&parsed.graph, &cfg, StructureRep::Nsm));
+            },
+        ));
+    }
+    // The whole front door, text in → features out, as one request sees it.
+    let (_, deep) = corpus.last().unwrap().clone();
+    let r = bench_harness::bench("text->features (densenet121)", 2.0 * budget, || {
+        let parsed = ModelSpec::parse_str(&deep).unwrap().compile().unwrap();
+        std::hint::black_box(feature_vector(&parsed.graph, &cfg, StructureRep::Nsm));
+    });
+    println!("{}  [{:.0} specs/s]", r.report(), r.throughput(1.0));
+    results.push(r);
+
+    println!("\n{} ingest stages measured.", results.len());
+    if let Some(path) = args.get("json") {
+        let doc = bench_harness::results_to_json("ingest_throughput", scale, &results);
+        std::fs::write(path, doc.to_string()).expect("write bench json");
+        println!("wrote {path}");
+    }
+}

@@ -71,11 +71,11 @@ fn main() {
         let svc = PredictionService::start(ServiceConfig::default(), backend.clone());
         let rxs: Vec<_> = (0..64)
             .map(|i| {
-                svc.submit(PredictRequest {
-                    id: i,
-                    model: names[i as usize % names.len()].into(),
-                    config: TrainConfig::paper_default(DatasetKind::Cifar100, 64),
-                })
+                svc.submit(PredictRequest::zoo(
+                    i,
+                    names[i as usize % names.len()],
+                    TrainConfig::paper_default(DatasetKind::Cifar100, 64),
+                ))
             })
             .collect();
         for rx in rxs {

@@ -113,11 +113,11 @@ fn main() {
                 DatasetKind::Mnist
             };
             let batch = batches[rng.zipf(batches.len())];
-            PredictRequest {
-                id: i as u64,
-                model: names[rng.zipf(names.len())].to_string(),
-                config: TrainConfig::paper_default(dataset, batch),
-            }
+            PredictRequest::zoo(
+                i as u64,
+                names[rng.zipf(names.len())],
+                TrainConfig::paper_default(dataset, batch),
+            )
         })
         .collect();
 

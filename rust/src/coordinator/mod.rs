@@ -9,8 +9,10 @@
 //! real schedulers' request streams, and a hit skips featurization and
 //! prediction entirely:
 //!
-//! * [`request`] — request/response types, the featurization step, and
-//!   the canonical `(model, config)` digest the cache is keyed on;
+//! * [`request`] — request/response types ([`ModelRef`] carries either
+//!   a zoo name or an ingested user spec), the featurization step, and
+//!   the canonical graph-content digest the cache is keyed on — a spec
+//!   equivalent to a zoo network shares that network's cache entries;
 //! * [`batcher`] — dynamic batching (size- and deadline-bound), sharded
 //!   one queue per worker with round-robin push and idle-side work
 //!   stealing;
@@ -22,5 +24,5 @@ pub mod batcher;
 pub mod request;
 pub mod service;
 
-pub use request::{PredictRequest, Prediction};
-pub use service::{CostModel, PredictionService, ServiceConfig, ServiceMetrics};
+pub use request::{ModelRef, PredictRequest, Prediction};
+pub use service::{fits_device, CostModel, PredictionService, ServiceConfig, ServiceMetrics};

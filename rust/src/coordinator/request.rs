@@ -2,35 +2,130 @@
 //! the service's answer cache is keyed on.
 
 use crate::features::{feature_vector, StructureRep};
+use crate::ingest::ParsedSpec;
 use crate::sim::{Framework, TrainConfig};
 use crate::util::cache::{hash64, DIGEST_SEED};
 use crate::zoo;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// The model a request is about: a zoo name, or a user-supplied spec
+/// already compiled by the ingest pipeline. The serving path treats
+/// both identically — same featurization, same cache, same backends —
+/// which is the paper's zero-shot story made operational. Specs are
+/// shared behind an `Arc`, so cloning a request (the load generators
+/// clone one compiled spec into many requests) never copies the graph.
+#[derive(Debug, Clone)]
+pub enum ModelRef {
+    /// Zoo model name (classic or unseen).
+    Zoo(String),
+    /// A compiled `dnnabacus-spec-v1` model.
+    Spec(Arc<ParsedSpec>),
+}
+
+/// Fingerprint of a zoo graph, memoized per `(name, in_ch, classes)`.
+/// `cache_key` runs on every submit — including hits — and the zoo is a
+/// small closed set, so remembering the 34×2 fingerprints keeps the hit
+/// path from rebuilding a full graph per request. Unknown names are not
+/// cached (the set of bogus names is unbounded); they fail over to a
+/// cheap name digest and report their error in featurize.
+fn zoo_fingerprint(name: &str, in_ch: usize, classes: usize) -> Option<u64> {
+    // Nested by name so the hit path is an allocation-free `get(name)`.
+    type Memo = Mutex<HashMap<String, HashMap<(usize, usize), u64>>>;
+    static MEMO: OnceLock<Memo> = OnceLock::new();
+    let memo = MEMO.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(&fp) = memo.lock().unwrap().get(name).and_then(|m| m.get(&(in_ch, classes))) {
+        return Some(fp);
+    }
+    // Build outside the lock; a racing duplicate insert is harmless
+    // (fingerprints are deterministic).
+    let fp = zoo::build(name, in_ch, classes).ok().map(|g| g.fingerprint())?;
+    memo.lock()
+        .unwrap()
+        .entry(name.to_string())
+        .or_default()
+        .insert((in_ch, classes), fp);
+    Some(fp)
+}
+
+impl ModelRef {
+    /// Display name (zoo name or spec name).
+    pub fn name(&self) -> &str {
+        match self {
+            ModelRef::Zoo(name) => name,
+            ModelRef::Spec(p) => &p.name,
+        }
+    }
+
+    /// 64-bit digest of the *graph content* (op kinds + attr hashes +
+    /// edges in topological order). A spec that lowers to the same graph
+    /// a zoo builder emits digests identically, so zoo and spec twins
+    /// share one cache entry. An unknown zoo name digests its own bytes
+    /// — the request still misses and reports its error in featurize.
+    fn content_digest(&self, cfg: &TrainConfig) -> u64 {
+        match self {
+            ModelRef::Zoo(name) => {
+                zoo_fingerprint(name, cfg.dataset.in_channels(), cfg.dataset.classes())
+                    .unwrap_or_else(|| hash64(DIGEST_SEED ^ 1, name.as_bytes()))
+            }
+            ModelRef::Spec(p) => p.graph.fingerprint(),
+        }
+    }
+}
 
 /// A request: predict the training cost of (model, config).
 #[derive(Debug, Clone)]
 pub struct PredictRequest {
     pub id: u64,
-    /// Zoo model name (classic or unseen).
-    pub model: String,
+    pub model: ModelRef,
     pub config: TrainConfig,
 }
 
 impl PredictRequest {
-    /// Featurize: build the graph for the config's dataset and extract
-    /// the NSM feature vector. This is the request-path CPU work the
-    /// batcher amortizes.
+    /// A request against a zoo model.
+    pub fn zoo(id: u64, name: &str, config: TrainConfig) -> PredictRequest {
+        PredictRequest {
+            id,
+            model: ModelRef::Zoo(name.to_string()),
+            config,
+        }
+    }
+
+    /// A request against a compiled user spec. Pass an `Arc` when the
+    /// same spec fans out into many requests; a bare [`ParsedSpec`]
+    /// converts too.
+    pub fn spec(id: u64, spec: impl Into<Arc<ParsedSpec>>, config: TrainConfig) -> PredictRequest {
+        PredictRequest {
+            id,
+            model: ModelRef::Spec(spec.into()),
+            config,
+        }
+    }
+
+    /// Featurize: materialize the model's graph and extract the NSM
+    /// feature vector. This is the request-path CPU work the batcher
+    /// amortizes. Spec graphs are fixed at compile time, so the
+    /// config's dataset must match the spec's declared input geometry
+    /// (see [`ParsedSpec::check_dataset`]).
     pub fn featurize(&self) -> crate::Result<Vec<f64>> {
-        let g = zoo::build(
-            &self.model,
-            self.config.dataset.in_channels(),
-            self.config.dataset.classes(),
-        )?;
-        Ok(feature_vector(&g, &self.config, StructureRep::Nsm))
+        let dataset = self.config.dataset;
+        match &self.model {
+            ModelRef::Zoo(name) => {
+                let g = zoo::build(name, dataset.in_channels(), dataset.classes())?;
+                Ok(feature_vector(&g, &self.config, StructureRep::Nsm))
+            }
+            ModelRef::Spec(p) => {
+                p.check_dataset(self.config.dataset)?;
+                Ok(feature_vector(&p.graph, &self.config, StructureRep::Nsm))
+            }
+        }
     }
 
     /// Canonical 64-bit content digest of `(model, config)` — the
-    /// service's cache key. Every field that feeds the NSM feature
-    /// vector (and hence the prediction) is folded in, with string
+    /// service's cache key. The model contributes its graph-content
+    /// digest (not its name), so a spec equivalent to a zoo network
+    /// shares that network's cache entries; every config field that
+    /// feeds the NSM feature vector is folded in after it, with string
     /// fields NUL-terminated so adjacent fields cannot alias.
     ///
     /// Deliberately excluded: the request `id` (identity, not content)
@@ -39,9 +134,8 @@ impl PredictRequest {
     /// one cache entry.
     pub fn cache_key(&self) -> u64 {
         let c = &self.config;
-        let mut bytes = Vec::with_capacity(self.model.len() + 64);
-        bytes.extend_from_slice(self.model.as_bytes());
-        bytes.push(0);
+        let mut bytes = Vec::with_capacity(80);
+        bytes.extend_from_slice(&self.model.content_digest(c).to_le_bytes());
         bytes.extend_from_slice(c.dataset.name().as_bytes());
         bytes.push(0);
         bytes.extend_from_slice(&(c.batch as u64).to_le_bytes());
@@ -79,35 +173,36 @@ pub struct Prediction {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ingest;
     use crate::sim::DatasetKind;
+
+    fn cifar(batch: usize) -> TrainConfig {
+        TrainConfig::paper_default(DatasetKind::Cifar100, batch)
+    }
 
     #[test]
     fn featurize_known_model() {
-        let req = PredictRequest {
-            id: 1,
-            model: "resnet18".into(),
-            config: TrainConfig::paper_default(DatasetKind::Cifar100, 64),
-        };
+        let req = PredictRequest::zoo(1, "resnet18", cifar(64));
         let f = req.featurize().unwrap();
         assert_eq!(f.len(), crate::features::feature_dim(StructureRep::Nsm));
     }
 
     #[test]
     fn featurize_unknown_model_errors() {
-        let req = PredictRequest {
-            id: 2,
-            model: "gpt-17".into(),
-            config: TrainConfig::paper_default(DatasetKind::Mnist, 32),
-        };
-        assert!(req.featurize().is_err());
+        let mnist = TrainConfig::paper_default(DatasetKind::Mnist, 32);
+        assert!(PredictRequest::zoo(2, "gpt-17", mnist).featurize().is_err());
     }
 
     fn keyed(id: u64, model: &str, batch: usize) -> PredictRequest {
-        PredictRequest {
-            id,
-            model: model.into(),
-            config: TrainConfig::paper_default(DatasetKind::Cifar100, batch),
-        }
+        PredictRequest::zoo(id, model, cifar(batch))
+    }
+
+    fn spec_twin(id: u64, model: &str, batch: usize) -> PredictRequest {
+        let parsed = ingest::spec_for_zoo(model, 3, 100)
+            .unwrap()
+            .compile()
+            .unwrap();
+        PredictRequest::spec(id, parsed, cifar(batch))
     }
 
     #[test]
@@ -129,9 +224,62 @@ mod tests {
     }
 
     #[test]
+    fn cache_key_is_content_keyed_across_zoo_and_spec() {
+        // The acceptance property: a spec that round-trips a zoo network
+        // digests to the SAME cache key as the zoo request, byte for
+        // byte — and its feature vector matches bit for bit.
+        let z = keyed(1, "resnet18", 64);
+        let s = spec_twin(2, "resnet18", 64);
+        assert_eq!(z.cache_key(), s.cache_key(), "zoo/spec twins must share entries");
+        let fz = z.featurize().unwrap();
+        let fs = s.featurize().unwrap();
+        assert!(
+            fz.iter().zip(&fs).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "twin feature vectors must be byte-identical"
+        );
+        // A different spec must not collide.
+        assert_ne!(spec_twin(3, "resnet34", 64).cache_key(), s.cache_key());
+    }
+
+    #[test]
+    fn spec_with_wrong_channel_count_errors_in_featurize() {
+        let parsed = ingest::spec_for_zoo("lenet5", 3, 100)
+            .unwrap()
+            .compile()
+            .unwrap();
+        let req =
+            PredictRequest::spec(1, parsed, TrainConfig::paper_default(DatasetKind::Mnist, 32));
+        let e = req.featurize().unwrap_err().to_string();
+        assert!(e.contains("channel"), "{e}");
+    }
+
+    #[test]
+    fn spec_with_wrong_input_hw_errors_in_featurize() {
+        // A spec shape-checked at 64x64 must not be silently featurized
+        // at the dataset's 32x32 (that would describe a different net).
+        let text = r#"{
+            "format": "dnnabacus-spec-v1", "name": "hw64",
+            "input": {"channels": 3, "hw": 64},
+            "layers": [
+                {"op": "conv2d", "attrs": {"in_ch": 3, "out_ch": 8, "kernel": 3}},
+                {"op": "globalavgpool"},
+                {"op": "flatten"},
+                {"op": "linear", "attrs": {"in_features": 8, "out_features": 10}}
+            ]
+        }"#;
+        let parsed = crate::ingest::ModelSpec::parse_str(text)
+            .unwrap()
+            .compile()
+            .unwrap();
+        let req = PredictRequest::spec(2, parsed, cifar(32));
+        let e = req.featurize().unwrap_err().to_string();
+        assert!(e.contains("64x64"), "{e}");
+    }
+
+    #[test]
     fn cache_key_field_boundaries_do_not_alias() {
-        // "vgg1" + dataset "6…" style prefix shifts must not collide;
-        // the NUL terminators after strings guarantee it.
+        // Unknown names fall back to a name digest; "vgg1" (unknown) and
+        // "vgg16" (a real graph fingerprint) must not collide.
         let a = keyed(1, "vgg16", 32);
         let b = keyed(1, "vgg1", 32);
         assert_ne!(a.cache_key(), b.cache_key());

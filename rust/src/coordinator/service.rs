@@ -162,7 +162,9 @@ type PredictionCache = Mutex<TtlLru<u64, (f64, f64)>>;
 /// The paper's OOM screen, with the CUDA-context reservation honored:
 /// a job fits only if its predicted peak memory stays within VRAM
 /// *minus* the resident context bytes `pynvml` always sees occupied.
-fn fits_device(device: &DeviceProfile, predicted_mem: f64) -> bool {
+/// Public because the `predict`/`predict-spec` CLI paths apply the same
+/// screen outside the service.
+pub fn fits_device(device: &DeviceProfile, predicted_mem: f64) -> bool {
     predicted_mem <= device.vram.saturating_sub(device.context_bytes) as f64
 }
 
@@ -416,11 +418,7 @@ mod tests {
     }
 
     fn req(id: u64, model: &str, batch: usize) -> PredictRequest {
-        PredictRequest {
-            id,
-            model: model.into(),
-            config: TrainConfig::paper_default(DatasetKind::Cifar100, batch),
-        }
+        PredictRequest::zoo(id, model, TrainConfig::paper_default(DatasetKind::Cifar100, batch))
     }
 
     fn uncached() -> ServiceConfig {
@@ -530,6 +528,26 @@ mod tests {
         assert_eq!(m.served, 3);
         assert_eq!(m.cache_hits, 1, "second identical request hits");
         assert_eq!(m.cache_misses, 2);
+    }
+
+    #[test]
+    fn spec_request_hits_cache_entry_filled_by_zoo_twin() {
+        // A user spec that lowers to the same graph as a zoo network
+        // must be answered from the entry the zoo request filled — the
+        // cache is keyed on graph content, not on names.
+        let svc = PredictionService::start(ServiceConfig::default(), Arc::new(FakeModel));
+        let a = svc.predict(req(1, "resnet18", 64)).unwrap();
+        let parsed = crate::ingest::spec_for_zoo("resnet18", 3, 100)
+            .unwrap()
+            .compile()
+            .unwrap();
+        let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, 64);
+        let b = svc.predict(PredictRequest::spec(2, parsed, cfg)).unwrap();
+        assert_eq!(a.time_s, b.time_s);
+        assert_eq!(a.memory_bytes, b.memory_bytes);
+        let m = svc.shutdown();
+        assert_eq!(m.cache_hits, 1, "spec twin must hit the zoo entry");
+        assert_eq!(m.cache_misses, 1);
     }
 
     #[test]

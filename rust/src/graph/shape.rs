@@ -68,11 +68,27 @@ pub fn infer_shapes(
     hw: usize,
 ) -> crate::Result<Vec<TensorShape>> {
     let mut shapes: Vec<TensorShape> = Vec::with_capacity(g.nodes.len());
-    for (id, node) in g.nodes.iter().enumerate() {
-        let shape = infer_one(g, &shapes, id, &node.kind, batch, channels, hw)?;
+    for id in 0..g.nodes.len() {
+        let shape = infer_next(g, &shapes, id, batch, channels, hw)?;
         shapes.push(shape);
     }
     Ok(shapes)
+}
+
+/// Infer the output shape of node `id` given the shapes of all earlier
+/// nodes — the stepwise form of [`infer_shapes`]. Callers that need to
+/// attribute a failure to their own notion of a node (the ingest
+/// validator maps node ids back to spec layer ids) drive the loop
+/// themselves and wrap the error per step.
+pub fn infer_next(
+    g: &Graph,
+    shapes: &[TensorShape],
+    id: NodeId,
+    batch: usize,
+    channels: usize,
+    hw: usize,
+) -> crate::Result<TensorShape> {
+    infer_one(g, shapes, id, &g.nodes[id].kind, batch, channels, hw)
 }
 
 fn infer_one(

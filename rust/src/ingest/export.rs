@@ -1,0 +1,198 @@
+//! Exporting graphs back to specs — the inverse of lowering.
+//!
+//! Every zoo network round-trips `Graph → spec → Graph` exactly, which
+//! gives the ingest pipeline a 34-network golden corpus: the spec of a
+//! zoo model must lower to a graph `==` the builder's, with identical
+//! params, FLOPs, feature vectors and cache keys.
+
+use super::spec::{InputSpec, LayerSpec, ModelSpec, INPUT_ID};
+use crate::graph::{Graph, OpKind};
+use crate::util::json::Json;
+use crate::zoo;
+use std::collections::BTreeMap;
+
+/// Export a graph as a spec. The graph must be a single-input DAG (all
+/// zoo and random-generator graphs are); layer `n<i>` is node `i`.
+pub fn spec_from_graph(g: &Graph) -> crate::Result<ModelSpec> {
+    let Some(first) = g.nodes.first() else {
+        crate::bail!("cannot export an empty graph");
+    };
+    let OpKind::Input { channels, hw } = first.kind else {
+        crate::bail!("graph must start with an Input node");
+    };
+    let mut layers = Vec::with_capacity(g.len().saturating_sub(1));
+    for (id, node) in g.nodes.iter().enumerate().skip(1) {
+        if matches!(node.kind, OpKind::Input { .. }) {
+            crate::bail!("node {id}: only single-input graphs are expressible as specs");
+        }
+        let inputs = node
+            .inputs
+            .iter()
+            .map(|&src| {
+                if src == 0 {
+                    INPUT_ID.to_string()
+                } else {
+                    format!("n{src}")
+                }
+            })
+            .collect();
+        layers.push(LayerSpec {
+            id: format!("n{id}"),
+            op: op_name(&node.kind).to_string(),
+            inputs: Some(inputs),
+            attrs: attrs_json(&node.kind),
+        });
+    }
+    Ok(ModelSpec {
+        name: g.name.clone(),
+        input: InputSpec { channels, hw },
+        layers,
+    })
+}
+
+/// Export a zoo network (classic or unseen) as a spec.
+pub fn spec_for_zoo(name: &str, in_ch: usize, classes: usize) -> crate::Result<ModelSpec> {
+    spec_from_graph(&zoo::build(name, in_ch, classes)?)
+}
+
+/// The spec-format op name of a non-`Input` kind.
+fn op_name(kind: &OpKind) -> &'static str {
+    match kind {
+        OpKind::Input { .. } => unreachable!("Input is the spec's input section, not a layer"),
+        OpKind::Conv2d(_) => "conv2d",
+        OpKind::BatchNorm { .. } => "batchnorm",
+        OpKind::ReLU => "relu",
+        OpKind::Sigmoid => "sigmoid",
+        OpKind::MaxPool(_) => "maxpool",
+        OpKind::AvgPool(_) => "avgpool",
+        OpKind::GlobalAvgPool => "globalavgpool",
+        OpKind::Linear { .. } => "linear",
+        OpKind::Add => "add",
+        OpKind::Concat => "concat",
+        OpKind::Flatten => "flatten",
+        OpKind::Dropout { .. } => "dropout",
+        OpKind::Softmax => "softmax",
+        OpKind::ChannelShuffle { .. } => "channelshuffle",
+        OpKind::Mul => "mul",
+    }
+}
+
+/// Explicit attrs for a kind (defaults spelled out, so exported specs
+/// double as format documentation).
+fn attrs_json(kind: &OpKind) -> BTreeMap<String, Json> {
+    fn num(m: &mut BTreeMap<String, Json>, k: &str, v: usize) {
+        m.insert(k.to_string(), Json::Num(v as f64));
+    }
+    let mut m = BTreeMap::new();
+    match kind {
+        OpKind::Conv2d(c) => {
+            num(&mut m, "in_ch", c.in_ch);
+            num(&mut m, "out_ch", c.out_ch);
+            if c.kh == c.kw {
+                num(&mut m, "kernel", c.kh);
+            } else {
+                num(&mut m, "kh", c.kh);
+                num(&mut m, "kw", c.kw);
+            }
+            num(&mut m, "stride", c.stride);
+            num(&mut m, "padding", c.padding);
+            num(&mut m, "groups", c.groups);
+            m.insert("bias".to_string(), Json::Bool(c.bias));
+        }
+        OpKind::BatchNorm { channels } => num(&mut m, "channels", *channels),
+        OpKind::MaxPool(p) | OpKind::AvgPool(p) => {
+            num(&mut m, "kernel", p.kernel);
+            num(&mut m, "stride", p.stride);
+            num(&mut m, "padding", p.padding);
+        }
+        OpKind::Linear {
+            in_features,
+            out_features,
+        } => {
+            num(&mut m, "in_features", *in_features);
+            num(&mut m, "out_features", *out_features);
+        }
+        OpKind::Dropout { p_keep_x100 } => {
+            m.insert(
+                "p_keep".to_string(),
+                Json::Num(*p_keep_x100 as f64 / 100.0),
+            );
+        }
+        OpKind::ChannelShuffle { groups } => num(&mut m, "groups", *groups),
+        _ => {}
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::{feature_vector, StructureRep};
+    use crate::ingest::ModelSpec;
+    use crate::sim::{DatasetKind, TrainConfig};
+
+    /// The tentpole's golden-corpus guarantee: every zoo network
+    /// round-trips export → JSON text → parse → lower into a graph that
+    /// is `==` the builder's, with identical op counts, params, FLOPs,
+    /// and byte-identical feature vectors.
+    #[test]
+    fn all_34_zoo_networks_roundtrip_exactly() {
+        let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, 64);
+        for name in zoo::all_names() {
+            let built = zoo::build(name, 3, 100).unwrap();
+            let text = spec_from_graph(&built).unwrap().to_json().to_string();
+            let parsed = ModelSpec::parse_str(&text)
+                .unwrap_or_else(|e| panic!("{name}: parse: {e:#}"))
+                .compile()
+                .unwrap_or_else(|e| panic!("{name}: compile: {e:#}"));
+            assert_eq!(parsed.graph, built, "{name}: lowered graph differs");
+            assert_eq!(parsed.graph.len(), built.len(), "{name}: op count");
+            assert_eq!(parsed.graph.param_count(), built.param_count(), "{name}");
+            assert_eq!(
+                parsed.graph.flops_per_sample(3, 32).unwrap(),
+                built.flops_per_sample(3, 32).unwrap(),
+                "{name}: FLOPs"
+            );
+            assert_eq!(parsed.graph.fingerprint(), built.fingerprint(), "{name}");
+            let fa = feature_vector(&built, &cfg, StructureRep::Nsm);
+            let fb = feature_vector(&parsed.graph, &cfg, StructureRep::Nsm);
+            assert!(
+                fa.iter().zip(&fb).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{name}: feature vectors must be byte-identical"
+            );
+        }
+    }
+
+    #[test]
+    fn mnist_variants_roundtrip_too() {
+        for name in ["lenet5", "shufflenet-v2", "densenet121"] {
+            let built = zoo::build(name, 1, 10).unwrap();
+            let parsed = spec_from_graph(&built).unwrap().compile().unwrap();
+            assert_eq!(parsed.graph, built, "{name}");
+        }
+    }
+
+    #[test]
+    fn random_generator_graphs_roundtrip() {
+        for seed in 0..8u64 {
+            let g = zoo::random_net(&zoo::RandomNetCfg::default(), seed);
+            let parsed = spec_from_graph(&g).unwrap().compile().unwrap();
+            assert_eq!(parsed.graph, g, "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn export_rejects_empty_graph() {
+        assert!(spec_from_graph(&Graph::new("empty")).is_err());
+    }
+
+    #[test]
+    fn exported_spec_names_branches() {
+        let spec = spec_for_zoo("googlenet", 3, 100).unwrap();
+        let branchy = spec
+            .layers
+            .iter()
+            .any(|l| l.inputs.as_ref().is_some_and(|i| i.len() >= 2));
+        assert!(branchy, "googlenet export must contain multi-input layers");
+    }
+}

@@ -1,0 +1,174 @@
+//! Lowering: a validated spec becomes the same [`Graph`] IR the zoo
+//! builders emit.
+//!
+//! Layer order in the spec *is* node order in the graph (after the
+//! implicit `Input` node), so a spec exported from a zoo network lowers
+//! back to a graph that is `==` the builder's — which is what makes the
+//! feature vectors, fingerprints, and cache keys of spec and zoo twins
+//! identical.
+
+use super::spec::{InputSpec, ModelSpec};
+use super::validate;
+use crate::graph::{Graph, OpKind};
+use crate::sim::DatasetKind;
+
+/// A compiled spec: validated, lowered, shape-checked — ready to
+/// featurize and serve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedSpec {
+    pub name: String,
+    pub input: InputSpec,
+    pub graph: Graph,
+}
+
+impl ParsedSpec {
+    /// Channels the network's input expects (requests must bring a
+    /// dataset with this channel count).
+    pub fn input_channels(&self) -> usize {
+        self.input.channels
+    }
+
+    /// The spec's declared input resolution.
+    pub fn input_hw(&self) -> usize {
+        self.input.hw
+    }
+
+    /// The dataset this spec's input geometry matches, if any.
+    pub fn matching_dataset(&self) -> Option<DatasetKind> {
+        DatasetKind::for_channels(self.input.channels)
+            .filter(|d| d.hw() == self.input.hw)
+    }
+
+    /// Error unless this spec's declared input matches `dataset`'s
+    /// sample geometry — the single compatibility gate every consumer
+    /// (featurize, predict-spec, serve) goes through. The spec was
+    /// shape-checked at its *declared* geometry, so featurizing at a
+    /// different one would silently describe a network that does not
+    /// exist.
+    pub fn check_dataset(&self, dataset: DatasetKind) -> crate::Result<()> {
+        if self.input.channels != dataset.in_channels() || self.input.hw != dataset.hw() {
+            crate::bail!(
+                "spec '{}' declares a {}-channel {}x{} input but dataset {} provides \
+                 {}-channel {}x{} samples",
+                self.name,
+                self.input.channels,
+                self.input.hw,
+                self.input.hw,
+                dataset.name(),
+                dataset.in_channels(),
+                dataset.hw(),
+                dataset.hw()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// The one-call front door: parse JSON text, validate, lower,
+/// shape-check. What `predict-spec`, `serve --specs`, and the load
+/// generators all go through.
+pub fn compile_str(text: &str) -> crate::Result<ParsedSpec> {
+    compile(&ModelSpec::parse_str(text)?)
+}
+
+/// Validate + lower + shape-check a spec into a [`ParsedSpec`].
+pub fn compile(spec: &ModelSpec) -> crate::Result<ParsedSpec> {
+    let graph = lower(spec)?;
+    validate::shape_check(spec, &graph)?;
+    Ok(ParsedSpec {
+        name: spec.name.clone(),
+        input: spec.input.clone(),
+        graph,
+    })
+}
+
+/// Structurally validate and lower a spec to a [`Graph`] (no shape
+/// check — [`compile`] is the full front door).
+pub fn lower(spec: &ModelSpec) -> crate::Result<Graph> {
+    let resolved = validate::resolve(spec)?;
+    let mut g = Graph::new(&spec.name);
+    g.add(OpKind::input(spec.input.channels, spec.input.hw), &[]);
+    for (kind, inputs) in resolved.kinds.into_iter().zip(&resolved.inputs) {
+        g.add(kind, inputs);
+    }
+    debug_assert!(g.validate().is_ok());
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::{feature_vector, StructureRep};
+    use crate::sim::{DatasetKind, TrainConfig};
+
+    const BRANCHY: &str = r#"{
+        "format": "dnnabacus-spec-v1",
+        "name": "branchy",
+        "input": {"channels": 3, "hw": 32},
+        "layers": [
+            {"id": "a", "op": "conv2d", "inputs": ["input"],
+             "attrs": {"in_ch": 3, "out_ch": 8, "kernel": 1}},
+            {"id": "b", "op": "conv2d", "inputs": ["input"],
+             "attrs": {"in_ch": 3, "out_ch": 24, "kernel": 1}},
+            {"id": "cat", "op": "concat", "inputs": ["a", "b"]},
+            {"op": "globalavgpool"},
+            {"op": "flatten"},
+            {"op": "linear", "attrs": {"in_features": 32, "out_features": 10}}
+        ]
+    }"#;
+
+    #[test]
+    fn lowers_branchy_spec_to_valid_graph() {
+        let spec = crate::ingest::ModelSpec::parse_str(BRANCHY).unwrap();
+        let parsed = spec.compile().unwrap();
+        let g = &parsed.graph;
+        g.validate().unwrap();
+        assert_eq!(g.len(), 7, "input + 6 layers");
+        assert_eq!(g.nodes[3].inputs, vec![1, 2], "concat of both branches");
+        assert!(g.flops_per_sample(3, 32).unwrap() > 0);
+    }
+
+    #[test]
+    fn compiled_spec_is_featurizable() {
+        let parsed = crate::ingest::ModelSpec::parse_str(BRANCHY)
+            .unwrap()
+            .compile()
+            .unwrap();
+        let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, 32);
+        let f = feature_vector(&parsed.graph, &cfg, StructureRep::Nsm);
+        assert_eq!(f.len(), crate::features::feature_dim(StructureRep::Nsm));
+        assert!(f.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn dataset_gate_matches_declared_geometry() {
+        let parsed = crate::ingest::ModelSpec::parse_str(BRANCHY)
+            .unwrap()
+            .compile()
+            .unwrap();
+        assert_eq!(parsed.matching_dataset(), Some(DatasetKind::Cifar100));
+        parsed.check_dataset(DatasetKind::Cifar100).unwrap();
+        let e = parsed.check_dataset(DatasetKind::Mnist).unwrap_err();
+        assert!(e.to_string().contains("channel"), "{e}");
+        // A 64x64 input matches no dataset even with 3 channels.
+        let mut hw64 = parsed.clone();
+        hw64.input.hw = 64;
+        assert_eq!(hw64.matching_dataset(), None);
+        assert!(hw64.check_dataset(DatasetKind::Cifar100).is_err());
+    }
+
+    #[test]
+    fn lower_alone_skips_shape_check() {
+        // in_ch 4 against a 3-channel input: lower() builds the graph,
+        // compile() rejects it.
+        let text = r#"{
+            "format": "dnnabacus-spec-v1", "name": "x",
+            "input": {"channels": 3, "hw": 32},
+            "layers": [{"op": "conv2d",
+                        "attrs": {"in_ch": 4, "out_ch": 8, "kernel": 3}}]
+        }"#;
+        let spec = crate::ingest::ModelSpec::parse_str(text).unwrap();
+        assert!(lower(&spec).is_ok());
+        assert!(spec.compile().is_err());
+    }
+}

@@ -1,0 +1,33 @@
+//! Model-spec ingestion — the system's front door for *arbitrary*
+//! user-defined networks.
+//!
+//! The paper's headline claim is zero-shot cost prediction for unseen
+//! networks (§3, Figure 13), so the serving path cannot stop at the 34
+//! zoo names: users bring their own architectures. This subsystem
+//! accepts a declarative JSON model spec, validates it with per-layer
+//! diagnostics, and lowers it to the exact [`crate::graph::Graph`] IR
+//! the zoo builders emit — after which featurization, prediction,
+//! caching and scheduling treat it like any other model:
+//!
+//! * [`spec`] — the `dnnabacus-spec-v1` format: data model, JSON I/O,
+//!   per-layer op/attr interpretation;
+//! * `validate` (internal) — whole-spec checks: duplicate ids, unknown
+//!   ops, bad attrs, dangling/forward references, arity, and a stepwise
+//!   shape pass that attributes mismatches to the offending layer;
+//! * [`lower`] — spec → graph, plus [`ParsedSpec`] ([`compile`]d specs
+//!   ready to serve);
+//! * [`export`] — graph → spec, so every zoo network round-trips and
+//!   serves as the format's golden corpus.
+//!
+//! The checked-in corpus under `examples/specs/` holds novel (non-zoo)
+//! architectures exercising the zero-shot path end to end; see
+//! `dnnabacus predict-spec` and the `spec_load` example.
+
+pub mod export;
+pub mod lower;
+pub mod spec;
+mod validate;
+
+pub use export::{spec_for_zoo, spec_from_graph};
+pub use lower::{compile, compile_str, ParsedSpec};
+pub use spec::{InputSpec, LayerSpec, ModelSpec, INPUT_ID, OP_NAMES, SPEC_FORMAT};

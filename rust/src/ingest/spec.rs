@@ -1,0 +1,617 @@
+//! The declarative model-spec format: data model and JSON I/O.
+//!
+//! A spec is a JSON document describing one network as an input
+//! declaration plus an ordered list of layers. Order is definition
+//! order; a layer may reference any *earlier* layer by id (named
+//! branches), or omit `inputs` entirely to chain sequentially. The
+//! reserved id `input` names the graph input.
+//!
+//! ```json
+//! {
+//!   "format": "dnnabacus-spec-v1",
+//!   "name": "tiny-cnn",
+//!   "input": {"channels": 3, "hw": 32},
+//!   "layers": [
+//!     {"id": "c1", "op": "conv2d",
+//!      "attrs": {"in_ch": 3, "out_ch": 8, "kernel": 3, "padding": 1}},
+//!     {"op": "relu"},
+//!     {"op": "globalavgpool"},
+//!     {"op": "flatten"},
+//!     {"op": "linear", "attrs": {"in_features": 8, "out_features": 10}}
+//!   ]
+//! }
+//! ```
+//!
+//! This module is deliberately *syntactic*: it checks JSON-level shape
+//! (fields present, right types) and translates per-layer `op`/`attrs`
+//! into [`OpKind`] with precise messages, but whole-spec properties
+//! (id uniqueness, reference resolution, shape consistency) live in the
+//! internal `validate` module behind [`ModelSpec::compile`].
+
+use crate::graph::op::{ConvAttrs, OpKind, PoolAttrs};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// The format tag every spec document must carry (field `format`).
+pub const SPEC_FORMAT: &str = "dnnabacus-spec-v1";
+
+/// The reserved layer id naming the graph input.
+pub const INPUT_ID: &str = "input";
+
+/// Layer op names accepted in `op` fields, in NSM vocabulary order
+/// (minus `Input`, which is declared by the `input` section, not a
+/// layer).
+pub const OP_NAMES: [&str; 15] = [
+    "conv2d",
+    "batchnorm",
+    "relu",
+    "sigmoid",
+    "maxpool",
+    "avgpool",
+    "globalavgpool",
+    "linear",
+    "add",
+    "concat",
+    "flatten",
+    "dropout",
+    "softmax",
+    "channelshuffle",
+    "mul",
+];
+
+/// The `input` section: a `channels × hw × hw` image batch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InputSpec {
+    pub channels: usize,
+    pub hw: usize,
+}
+
+/// One layer: an op name, optional explicit inputs, optional attrs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerSpec {
+    /// Unique layer id; auto-assigned (`layer<N>`) when omitted.
+    pub id: String,
+    /// Op name — one of [`OP_NAMES`].
+    pub op: String,
+    /// Ids of producing layers (or [`INPUT_ID`]). `None` chains to the
+    /// previous layer (the graph input for the first layer).
+    pub inputs: Option<Vec<String>>,
+    /// Op attributes, kept raw; [`LayerSpec::op_kind`] interprets them.
+    pub attrs: BTreeMap<String, Json>,
+}
+
+/// A parsed (but not yet validated) model spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub input: InputSpec,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl ModelSpec {
+    /// Parse a spec from JSON text. Syntax errors carry line/column;
+    /// structural errors name the offending field or layer.
+    pub fn parse_str(text: &str) -> crate::Result<ModelSpec> {
+        Self::from_json(&Json::parse(text)?)
+    }
+
+    /// Build a spec from an already-parsed JSON document.
+    pub fn from_json(doc: &Json) -> crate::Result<ModelSpec> {
+        let Json::Obj(fields) = doc else {
+            crate::bail!("spec document must be a JSON object");
+        };
+        for key in fields.keys() {
+            if !matches!(key.as_str(), "format" | "name" | "input" | "layers") {
+                crate::bail!("unknown field '{key}' (expected format/name/input/layers)");
+            }
+        }
+        let format = match doc.get("format") {
+            Some(j) => j
+                .as_str()
+                .ok_or_else(|| crate::err!("'format' must be a string"))?,
+            None => crate::bail!("missing 'format' field (expected \"{SPEC_FORMAT}\")"),
+        };
+        if format != SPEC_FORMAT {
+            crate::bail!("unsupported format '{format}' (this build reads \"{SPEC_FORMAT}\")");
+        }
+        let name = match doc.get("name") {
+            Some(j) => j
+                .as_str()
+                .ok_or_else(|| crate::err!("'name' must be a string"))?
+                .to_string(),
+            None => crate::bail!("missing 'name' field"),
+        };
+        if name.is_empty() {
+            crate::bail!("'name' must be non-empty");
+        }
+        let input = match doc.get("input") {
+            Some(j @ Json::Obj(m)) => {
+                for key in m.keys() {
+                    if !matches!(key.as_str(), "channels" | "hw") {
+                        crate::bail!("input section: unknown field '{key}' (expected channels/hw)");
+                    }
+                }
+                InputSpec {
+                    channels: positive_usize(j, "channels")
+                        .map_err(|e| e.context("input section"))?,
+                    hw: positive_usize(j, "hw").map_err(|e| e.context("input section"))?,
+                }
+            }
+            Some(_) => crate::bail!("'input' must be an object"),
+            None => crate::bail!("missing 'input' section"),
+        };
+        let layers_json = match doc.get("layers") {
+            Some(j) => j
+                .as_arr()
+                .ok_or_else(|| crate::err!("'layers' must be an array"))?,
+            None => crate::bail!("missing 'layers' field"),
+        };
+        if layers_json.is_empty() {
+            crate::bail!("'layers' must contain at least one layer");
+        }
+        let mut layers = Vec::with_capacity(layers_json.len());
+        for (idx, l) in layers_json.iter().enumerate() {
+            layers.push(
+                LayerSpec::from_json(l, idx).map_err(|e| e.context(format!("layer {idx}")))?,
+            );
+        }
+        Ok(ModelSpec {
+            name,
+            input,
+            layers,
+        })
+    }
+
+    /// Serialize back to a JSON document (the inverse of
+    /// [`ModelSpec::from_json`] — round-trip exact).
+    pub fn to_json(&self) -> Json {
+        let mut input = Json::obj();
+        input
+            .set("channels", self.input.channels)
+            .set("hw", self.input.hw);
+        let mut doc = Json::obj();
+        doc.set("format", SPEC_FORMAT)
+            .set("name", self.name.as_str())
+            .set("input", input)
+            .set(
+                "layers",
+                Json::Arr(self.layers.iter().map(LayerSpec::to_json).collect()),
+            );
+        doc
+    }
+
+    /// Validate, lower, and shape-check into a servable [`ParsedSpec`].
+    ///
+    /// Convenience forward to [`super::lower::compile`].
+    pub fn compile(&self) -> crate::Result<super::ParsedSpec> {
+        super::lower::compile(self)
+    }
+}
+
+impl LayerSpec {
+    fn from_json(l: &Json, idx: usize) -> crate::Result<LayerSpec> {
+        let Json::Obj(fields) = l else {
+            crate::bail!("must be a JSON object");
+        };
+        for key in fields.keys() {
+            if !matches!(key.as_str(), "id" | "op" | "inputs" | "attrs") {
+                crate::bail!("unknown field '{key}' (expected id/op/inputs/attrs)");
+            }
+        }
+        let op = match l.get("op") {
+            Some(j) => j
+                .as_str()
+                .ok_or_else(|| crate::err!("'op' must be a string"))?,
+            None => crate::bail!("missing 'op' field"),
+        };
+        let id = match l.get("id") {
+            Some(j) => {
+                let id = j
+                    .as_str()
+                    .ok_or_else(|| crate::err!("'id' must be a string"))?;
+                // `layer<N>` is the auto-naming namespace. An explicit
+                // id in it is only allowed at its own position (which
+                // is what re-serializing an auto-named spec produces);
+                // anywhere else it could collide with the auto id of a
+                // later anonymous layer.
+                if is_auto_id(id) && id != format!("layer{idx}") {
+                    crate::bail!(
+                        "id '{id}' is reserved for auto-named layers \
+                         (this layer would auto-name as 'layer{idx}')"
+                    );
+                }
+                id.to_string()
+            }
+            None => format!("layer{idx}"),
+        };
+        let inputs = match l.get("inputs") {
+            None => None,
+            Some(Json::Arr(refs)) => {
+                let mut out = Vec::with_capacity(refs.len());
+                for r in refs {
+                    let Some(id) = r.as_str() else {
+                        crate::bail!("'inputs' entries must be layer-id strings");
+                    };
+                    out.push(id.to_string());
+                }
+                Some(out)
+            }
+            Some(_) => crate::bail!("'inputs' must be an array of layer ids"),
+        };
+        let attrs = match l.get("attrs") {
+            None => BTreeMap::new(),
+            Some(Json::Obj(m)) => m.clone(),
+            Some(_) => crate::bail!("'attrs' must be an object"),
+        };
+        Ok(LayerSpec {
+            id,
+            op: op.to_string(),
+            inputs,
+            attrs,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("id", self.id.as_str()).set("op", self.op.as_str());
+        if let Some(inputs) = &self.inputs {
+            o.set(
+                "inputs",
+                Json::Arr(inputs.iter().map(|s| Json::Str(s.clone())).collect()),
+            );
+        }
+        if !self.attrs.is_empty() {
+            o.set("attrs", Json::Obj(self.attrs.clone()));
+        }
+        o
+    }
+
+    /// Interpret `op` + `attrs` as an [`OpKind`]. Rejects unknown ops,
+    /// unknown attr keys, missing attrs, and out-of-range values.
+    pub fn op_kind(&self) -> crate::Result<OpKind> {
+        match self.op.as_str() {
+            "conv2d" => {
+                self.check_attr_keys(&[
+                    "in_ch", "out_ch", "kernel", "kh", "kw", "stride", "padding", "groups", "bias",
+                ])?;
+                let (kh, kw) = match self.attr("kernel")? {
+                    Some(k) => {
+                        if self.attrs.contains_key("kh") || self.attrs.contains_key("kw") {
+                            crate::bail!("give either 'kernel' or 'kh'/'kw', not both");
+                        }
+                        (nonzero(k, "kernel")?, nonzero(k, "kernel")?)
+                    }
+                    None => (
+                        nonzero(self.require("kh")?, "kh")?,
+                        nonzero(self.require("kw")?, "kw")?,
+                    ),
+                };
+                let in_ch = nonzero(self.require("in_ch")?, "in_ch")?;
+                let out_ch = nonzero(self.require("out_ch")?, "out_ch")?;
+                let groups = nonzero(self.attr("groups")?.unwrap_or(1), "groups")?;
+                if in_ch % groups != 0 || out_ch % groups != 0 {
+                    crate::bail!("groups {groups} must divide in_ch {in_ch} and out_ch {out_ch}");
+                }
+                Ok(OpKind::Conv2d(ConvAttrs {
+                    in_ch,
+                    out_ch,
+                    kh,
+                    kw,
+                    stride: nonzero(self.attr("stride")?.unwrap_or(1), "stride")?,
+                    padding: self.attr("padding")?.unwrap_or(0),
+                    groups,
+                    bias: self.bool_attr("bias")?.unwrap_or(true),
+                }))
+            }
+            "batchnorm" => {
+                self.check_attr_keys(&["channels"])?;
+                Ok(OpKind::BatchNorm {
+                    channels: nonzero(self.require("channels")?, "channels")?,
+                })
+            }
+            "relu" => self.no_attrs(OpKind::ReLU),
+            "sigmoid" => self.no_attrs(OpKind::Sigmoid),
+            "maxpool" | "avgpool" => {
+                self.check_attr_keys(&["kernel", "stride", "padding"])?;
+                let kernel = nonzero(self.require("kernel")?, "kernel")?;
+                let attrs = PoolAttrs {
+                    kernel,
+                    stride: nonzero(self.attr("stride")?.unwrap_or(kernel), "stride")?,
+                    padding: self.attr("padding")?.unwrap_or(0),
+                };
+                Ok(if self.op == "maxpool" {
+                    OpKind::MaxPool(attrs)
+                } else {
+                    OpKind::AvgPool(attrs)
+                })
+            }
+            "globalavgpool" => self.no_attrs(OpKind::GlobalAvgPool),
+            "linear" => {
+                self.check_attr_keys(&["in_features", "out_features"])?;
+                Ok(OpKind::Linear {
+                    in_features: nonzero(self.require("in_features")?, "in_features")?,
+                    out_features: nonzero(self.require("out_features")?, "out_features")?,
+                })
+            }
+            "add" => self.no_attrs(OpKind::Add),
+            "concat" => self.no_attrs(OpKind::Concat),
+            "flatten" => self.no_attrs(OpKind::Flatten),
+            "dropout" => {
+                self.check_attr_keys(&["p_keep"])?;
+                let p = match self.attrs.get("p_keep") {
+                    None => 0.5,
+                    Some(j) => j
+                        .as_f64()
+                        .ok_or_else(|| crate::err!("'p_keep' must be a number"))?,
+                };
+                if !(p > 0.0 && p <= 1.0) {
+                    crate::bail!("'p_keep' must be in (0, 1], got {p}");
+                }
+                Ok(OpKind::Dropout {
+                    p_keep_x100: (p * 100.0).round() as usize,
+                })
+            }
+            "softmax" => self.no_attrs(OpKind::Softmax),
+            "channelshuffle" => {
+                self.check_attr_keys(&["groups"])?;
+                Ok(OpKind::ChannelShuffle {
+                    groups: nonzero(self.require("groups")?, "groups")?,
+                })
+            }
+            "mul" => self.no_attrs(OpKind::Mul),
+            other => crate::bail!("unknown op '{other}' (known ops: {})", OP_NAMES.join(", ")),
+        }
+    }
+
+    /// How many inputs this op consumes: `(min, max)`, `max == usize::MAX`
+    /// for variadic ops.
+    pub fn arity(&self) -> (usize, usize) {
+        match self.op.as_str() {
+            "add" | "concat" => (2, usize::MAX),
+            "mul" => (2, 2),
+            _ => (1, 1),
+        }
+    }
+
+    fn check_attr_keys(&self, allowed: &[&str]) -> crate::Result<()> {
+        for key in self.attrs.keys() {
+            if !allowed.contains(&key.as_str()) {
+                crate::bail!(
+                    "op '{}' has no attr '{key}' (allowed: {})",
+                    self.op,
+                    allowed.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn no_attrs(&self, kind: OpKind) -> crate::Result<OpKind> {
+        if let Some(key) = self.attrs.keys().next() {
+            crate::bail!("op '{}' takes no attrs, got '{key}'", self.op);
+        }
+        Ok(kind)
+    }
+
+    /// An optional non-negative-integer attr.
+    fn attr(&self, key: &str) -> crate::Result<Option<usize>> {
+        match self.attrs.get(key) {
+            None => Ok(None),
+            Some(j) => Ok(Some(as_count(j).map_err(|e| e.context(format!("attr '{key}'")))?)),
+        }
+    }
+
+    /// A required non-negative-integer attr.
+    fn require(&self, key: &str) -> crate::Result<usize> {
+        self.attr(key)?
+            .ok_or_else(|| crate::err!("op '{}' requires attr '{key}'", self.op))
+    }
+
+    fn bool_attr(&self, key: &str) -> crate::Result<Option<bool>> {
+        match self.attrs.get(key) {
+            None => Ok(None),
+            Some(Json::Bool(b)) => Ok(Some(*b)),
+            Some(_) => crate::bail!("attr '{key}' must be a boolean"),
+        }
+    }
+}
+
+/// Does `id` fall in the `layer<N>` auto-naming namespace?
+fn is_auto_id(id: &str) -> bool {
+    id.strip_prefix("layer")
+        .is_some_and(|rest| !rest.is_empty() && rest.bytes().all(|b| b.is_ascii_digit()))
+}
+
+/// A JSON number used as a count: finite, non-negative, integral.
+fn as_count(j: &Json) -> crate::Result<usize> {
+    let x = j.as_f64().ok_or_else(|| crate::err!("must be a number"))?;
+    if !(x.is_finite() && x >= 0.0 && x.fract() == 0.0 && x < 1e15) {
+        crate::bail!("must be a non-negative integer, got {x}");
+    }
+    Ok(x as usize)
+}
+
+fn nonzero(x: usize, what: &str) -> crate::Result<usize> {
+    if x == 0 {
+        crate::bail!("'{what}' must be >= 1");
+    }
+    Ok(x)
+}
+
+/// `get(key)` as a count that must be `>= 1`.
+fn positive_usize(obj: &Json, key: &str) -> crate::Result<usize> {
+    let j = obj
+        .get(key)
+        .ok_or_else(|| crate::err!("missing '{key}'"))?;
+    nonzero(as_count(j).map_err(|e| e.context(format!("'{key}'")))?, key)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = r#"{
+        "format": "dnnabacus-spec-v1",
+        "name": "tiny",
+        "input": {"channels": 3, "hw": 32},
+        "layers": [
+            {"id": "c1", "op": "conv2d",
+             "attrs": {"in_ch": 3, "out_ch": 8, "kernel": 3, "padding": 1}},
+            {"op": "relu"},
+            {"op": "globalavgpool"},
+            {"op": "flatten"},
+            {"op": "linear", "attrs": {"in_features": 8, "out_features": 10}}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_tiny_spec() {
+        let s = ModelSpec::parse_str(TINY).unwrap();
+        assert_eq!(s.name, "tiny");
+        assert_eq!(s.input, InputSpec { channels: 3, hw: 32 });
+        assert_eq!(s.layers.len(), 5);
+        assert_eq!(s.layers[0].id, "c1");
+        assert_eq!(s.layers[1].id, "layer1", "auto id");
+        assert!(s.layers[0].inputs.is_none(), "sequential default");
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let s = ModelSpec::parse_str(TINY).unwrap();
+        let back = ModelSpec::from_json(&s.to_json()).unwrap();
+        // Auto ids become explicit on re-serialize, so compare one more hop.
+        assert_eq!(back, ModelSpec::from_json(&back.to_json()).unwrap());
+        assert_eq!(back.layers.len(), s.layers.len());
+    }
+
+    #[test]
+    fn rejects_missing_or_wrong_format() {
+        assert!(ModelSpec::parse_str("{}").is_err());
+        let e = ModelSpec::parse_str(r#"{"format": "v0", "name": "x"}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unsupported format"), "{e}");
+    }
+
+    #[test]
+    fn rejects_unknown_op_with_vocabulary() {
+        let l = LayerSpec {
+            id: "x".into(),
+            op: "transformer".into(),
+            inputs: None,
+            attrs: BTreeMap::new(),
+        };
+        let e = l.op_kind().unwrap_err().to_string();
+        assert!(e.contains("unknown op 'transformer'"), "{e}");
+        assert!(e.contains("conv2d"), "{e}");
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_attrs() {
+        let mut attrs = BTreeMap::new();
+        attrs.insert("in_ch".to_string(), Json::Num(3.0));
+        let l = LayerSpec {
+            id: "c".into(),
+            op: "conv2d".into(),
+            inputs: None,
+            attrs: attrs.clone(),
+        };
+        assert!(l.op_kind().unwrap_err().to_string().contains("requires attr"));
+        attrs.insert("paddding".to_string(), Json::Num(1.0));
+        let l = LayerSpec { attrs, ..l };
+        let e = l.op_kind().unwrap_err().to_string();
+        assert!(e.contains("no attr 'paddding'"), "{e}");
+    }
+
+    #[test]
+    fn explicit_ids_cannot_squat_the_auto_namespace() {
+        // "layer1" at index 0 would collide with the auto id of the
+        // anonymous layer at index 1; the parser rejects it up front.
+        let e = ModelSpec::parse_str(
+            r#"{"format": "dnnabacus-spec-v1", "name": "x",
+                "input": {"channels": 3, "hw": 32},
+                "layers": [{"id": "layer1", "op": "relu"}, {"op": "relu"}]}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("reserved for auto-named"), "{e:#}");
+        // At its own position the auto-form id is fine — that is what
+        // re-serializing an auto-named spec produces.
+        let s = ModelSpec::parse_str(
+            r#"{"format": "dnnabacus-spec-v1", "name": "x",
+                "input": {"channels": 3, "hw": 32},
+                "layers": [{"op": "relu"}, {"id": "layer1", "op": "relu"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.layers[1].id, "layer1");
+        // Non-numeric suffixes are ordinary ids.
+        assert!(!is_auto_id("layers"));
+        assert!(!is_auto_id("layer"));
+        assert!(!is_auto_id("layer1a"));
+        assert!(is_auto_id("layer0"));
+        assert!(is_auto_id("layer42"));
+    }
+
+    #[test]
+    fn wrong_type_fields_are_not_reported_as_missing() {
+        let e = ModelSpec::parse_str(r#"{"format": 7}"#).unwrap_err().to_string();
+        assert!(e.contains("'format' must be a string"), "{e}");
+        let e = ModelSpec::parse_str(r#"{"format": "dnnabacus-spec-v1", "name": 7}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("'name' must be a string"), "{e}");
+        let doc = r#"{"format": "dnnabacus-spec-v1", "name": "x",
+                      "input": {"channels": 3, "hw": 32},
+                      "layers": [{"op": 3}]}"#;
+        let e = format!("{:#}", ModelSpec::parse_str(doc).unwrap_err());
+        assert!(e.contains("'op' must be a string"), "{e}");
+    }
+
+    #[test]
+    fn unknown_top_level_and_input_fields_rejected() {
+        let e = ModelSpec::parse_str(
+            r#"{"format": "dnnabacus-spec-v1", "name": "x", "notes": "hi",
+                "input": {"channels": 3, "hw": 32}, "layers": [{"op": "relu"}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("unknown field 'notes'"), "{e}");
+        // A typo'd knob in the input section must not be silently dropped.
+        let e = ModelSpec::parse_str(
+            r#"{"format": "dnnabacus-spec-v1", "name": "x",
+                "input": {"channels": 3, "hw": 32, "batch": 64},
+                "layers": [{"op": "relu"}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("unknown field 'batch'"), "{e}");
+    }
+
+    #[test]
+    fn rejects_fractional_counts() {
+        let e = ModelSpec::parse_str(
+            r#"{"format": "dnnabacus-spec-v1", "name": "x",
+                "input": {"channels": 2.5, "hw": 32},
+                "layers": [{"op": "relu"}]}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("non-negative integer"), "{e:#}");
+    }
+
+    #[test]
+    fn op_names_cover_every_non_input_op_type() {
+        use crate::graph::op::OpType;
+        assert_eq!(OP_NAMES.len(), OpType::ALL.len() - 1);
+        for l in OP_NAMES {
+            let layer = LayerSpec {
+                id: "x".into(),
+                op: l.into(),
+                inputs: None,
+                attrs: BTreeMap::new(),
+            };
+            // Every name resolves (possibly demanding attrs, never "unknown op").
+            if let Err(e) = layer.op_kind() {
+                assert!(!e.to_string().contains("unknown op"), "{l}: {e}");
+            }
+        }
+    }
+}

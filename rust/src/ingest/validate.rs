@@ -1,0 +1,254 @@
+//! Whole-spec validation: id resolution, topology, arity, and the
+//! shape-check pass.
+//!
+//! [`resolve`] turns a [`ModelSpec`]'s symbolic layer references into
+//! graph node indices, rejecting duplicate/reserved ids, unknown ops,
+//! bad attrs, dangling references, and forward/self references (the
+//! definition-order rule makes any cycle show up as one of the latter).
+//! [`shape_check`] then runs NCHW shape inference over the lowered
+//! graph one node at a time, so a mismatch is reported against the
+//! *layer* that caused it, not a bare node index.
+
+use super::spec::{ModelSpec, INPUT_ID};
+use crate::graph::op::OpKind;
+use crate::graph::{shape, Graph, NodeId};
+use crate::util::error::Context;
+use std::collections::HashMap;
+
+/// A structurally-valid spec, ready to lower: one `OpKind` per layer
+/// plus resolved graph-node inputs (the graph input is node 0, layer
+/// `i` becomes node `i + 1`).
+pub(super) struct Resolved {
+    pub kinds: Vec<OpKind>,
+    pub inputs: Vec<Vec<NodeId>>,
+}
+
+/// Structural validation. Every error names the offending layer by
+/// index and id.
+pub(super) fn resolve(spec: &ModelSpec) -> crate::Result<Resolved> {
+    let mut by_id: HashMap<&str, usize> = HashMap::with_capacity(spec.layers.len());
+    for (idx, l) in spec.layers.iter().enumerate() {
+        if l.id == INPUT_ID {
+            crate::bail!("layer {idx}: id '{INPUT_ID}' is reserved for the graph input");
+        }
+        if l.id.is_empty() {
+            crate::bail!("layer {idx}: id must be non-empty");
+        }
+        if let Some(prev) = by_id.insert(l.id.as_str(), idx) {
+            crate::bail!(
+                "layer {idx}: duplicate id '{}' (already used by layer {prev})",
+                l.id
+            );
+        }
+    }
+    let mut kinds = Vec::with_capacity(spec.layers.len());
+    let mut inputs = Vec::with_capacity(spec.layers.len());
+    for (idx, l) in spec.layers.iter().enumerate() {
+        let label = || format!("layer {idx} ('{}')", l.id);
+        let kind = l.op_kind().with_context(label)?;
+        let refs = match &l.inputs {
+            // Sequential default: the previous layer's node, which is
+            // `idx` itself (node 0 is the graph input).
+            None => vec![idx],
+            Some(rs) => {
+                if rs.is_empty() {
+                    crate::bail!(
+                        "{}: 'inputs' must not be empty (omit it to chain sequentially)",
+                        label()
+                    );
+                }
+                let mut out = Vec::with_capacity(rs.len());
+                for r in rs {
+                    out.push(resolve_ref(r, idx, &by_id).with_context(label)?);
+                }
+                out
+            }
+        };
+        let (min, max) = l.arity();
+        if refs.len() < min || refs.len() > max {
+            let want = if max == usize::MAX {
+                format!("at least {min}")
+            } else if min == max {
+                format!("exactly {min}")
+            } else {
+                format!("{min}..={max}")
+            };
+            crate::bail!(
+                "{}: op '{}' takes {want} inputs, got {}",
+                label(),
+                l.op,
+                refs.len()
+            );
+        }
+        kinds.push(kind);
+        inputs.push(refs);
+    }
+    Ok(Resolved { kinds, inputs })
+}
+
+fn resolve_ref(r: &str, idx: usize, by_id: &HashMap<&str, usize>) -> crate::Result<NodeId> {
+    if r == INPUT_ID {
+        return Ok(0);
+    }
+    match by_id.get(r) {
+        Some(&j) if j < idx => Ok(j + 1),
+        Some(&j) if j == idx => crate::bail!("references itself (cycle)"),
+        Some(_) => crate::bail!(
+            "references later layer '{r}' — layers form a DAG in definition order (cycle)"
+        ),
+        None => crate::bail!("references undefined layer '{r}' (dangling branch)"),
+    }
+}
+
+/// Run shape inference over the lowered graph at batch 1 and the spec's
+/// declared input resolution, attributing any failure to its layer.
+pub(super) fn shape_check(spec: &ModelSpec, g: &Graph) -> crate::Result<()> {
+    let mut shapes = Vec::with_capacity(g.len());
+    for id in 0..g.len() {
+        let s = shape::infer_next(g, &shapes, id, 1, spec.input.channels, spec.input.hw).map_err(
+            |e| match id.checked_sub(1) {
+                Some(i) => e.context(format!(
+                    "shape check failed at layer {i} ('{}', op {})",
+                    spec.layers[i].id, spec.layers[i].op
+                )),
+                None => e.context("shape check failed at the input node"),
+            },
+        )?;
+        shapes.push(s);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::spec::{InputSpec, LayerSpec};
+    use super::*;
+    use crate::util::json::Json;
+    use crate::util::prop;
+    use std::collections::BTreeMap;
+
+    fn layer(id: &str, op: &str, inputs: Option<&[&str]>) -> LayerSpec {
+        LayerSpec {
+            id: id.to_string(),
+            op: op.to_string(),
+            inputs: inputs.map(|rs| rs.iter().map(|s| s.to_string()).collect()),
+            attrs: BTreeMap::new(),
+        }
+    }
+
+    fn conv(id: &str, in_ch: usize, out_ch: usize, inputs: Option<&[&str]>) -> LayerSpec {
+        let mut l = layer(id, "conv2d", inputs);
+        for (k, v) in [
+            ("in_ch", in_ch),
+            ("out_ch", out_ch),
+            ("kernel", 3),
+            ("padding", 1),
+        ] {
+            l.attrs.insert(k.to_string(), Json::Num(v as f64));
+        }
+        l
+    }
+
+    fn spec_of(layers: Vec<LayerSpec>) -> ModelSpec {
+        ModelSpec {
+            name: "t".into(),
+            input: InputSpec { channels: 3, hw: 32 },
+            layers,
+        }
+    }
+
+    #[test]
+    fn sequential_default_chains_to_previous() {
+        let r = resolve(&spec_of(vec![conv("a", 3, 8, None), layer("r", "relu", None)])).unwrap();
+        assert_eq!(r.inputs, vec![vec![0], vec![1]]);
+    }
+
+    #[test]
+    fn named_branches_resolve() {
+        let s = spec_of(vec![
+            conv("a", 3, 8, Some(&["input"])),
+            conv("b", 3, 8, Some(&["input"])),
+            layer("sum", "add", Some(&["a", "b"])),
+        ]);
+        let r = resolve(&s).unwrap();
+        assert_eq!(r.inputs[2], vec![1, 2]);
+    }
+
+    #[test]
+    fn dangling_forward_self_and_duplicate_rejected() {
+        let e = resolve(&spec_of(vec![layer("r", "relu", Some(&["ghost"]))])).unwrap_err();
+        assert!(format!("{e:#}").contains("dangling"), "{e:#}");
+
+        let s = spec_of(vec![
+            layer("r", "relu", Some(&["late"])),
+            layer("late", "relu", None),
+        ]);
+        let e = resolve(&s).unwrap_err();
+        assert!(format!("{e:#}").contains("cycle"), "{e:#}");
+
+        let e = resolve(&spec_of(vec![layer("r", "relu", Some(&["r"]))])).unwrap_err();
+        assert!(format!("{e:#}").contains("itself"), "{e:#}");
+
+        let s = spec_of(vec![layer("r", "relu", None), layer("r", "relu", None)]);
+        let e = resolve(&s).unwrap_err();
+        assert!(format!("{e:#}").contains("duplicate id"), "{e:#}");
+    }
+
+    #[test]
+    fn arity_enforced() {
+        let e = resolve(&spec_of(vec![layer("s", "add", None)])).unwrap_err();
+        assert!(format!("{e:#}").contains("at least 2"), "{e:#}");
+        let s = spec_of(vec![
+            conv("a", 3, 8, None),
+            layer("m", "mul", Some(&["a", "a", "a"])),
+        ]);
+        let e = resolve(&s).unwrap_err();
+        assert!(format!("{e:#}").contains("exactly 2"), "{e:#}");
+    }
+
+    #[test]
+    fn reserved_input_id_rejected() {
+        let e = resolve(&spec_of(vec![layer("input", "relu", None)])).unwrap_err();
+        assert!(format!("{e:#}").contains("reserved"), "{e:#}");
+    }
+
+    #[test]
+    fn shape_errors_name_the_layer() {
+        // conv expects 4 channels but the input has 3.
+        let s = spec_of(vec![conv("bad-conv", 4, 8, None)]);
+        let e = s.compile().unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("bad-conv"), "{msg}");
+        assert!(msg.contains("channels"), "{msg}");
+    }
+
+    /// Random corruption of a valid chain must always be rejected, and
+    /// the error must cite a layer.
+    #[test]
+    fn prop_corrupted_specs_rejected() {
+        prop::check("ingest-corruption-rejected", 48, |rng| {
+            let depth = rng.range(2, 6);
+            let mut layers = vec![conv("c0", 3, 8, None)];
+            for i in 1..depth {
+                layers.push(conv(&format!("c{i}"), 8, 8, None));
+            }
+            let victim = rng.below(layers.len());
+            match rng.below(4) {
+                0 => layers[victim].op = "warp-drive".into(),
+                1 => {
+                    layers[victim]
+                        .attrs
+                        .insert("in_ch".into(), Json::Num(17.0));
+                }
+                2 => layers[victim].inputs = Some(vec!["nowhere".into()]),
+                _ => {
+                    let fwd = format!("c{}", layers.len() - 1);
+                    layers[0].inputs = Some(vec![fwd]);
+                }
+            }
+            let err = spec_of(layers).compile().unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("layer"), "error must cite a layer: {msg}");
+        });
+    }
+}

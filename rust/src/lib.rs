@@ -27,6 +27,9 @@
 //! * [`graph`] — computation-graph IR, shape inference, FLOPs/params.
 //! * [`zoo`] — builders for the paper's 29 networks, the 5 unseen
 //!   networks, and the random model generator.
+//! * [`ingest`] — the `dnnabacus-spec-v1` model-spec pipeline: parse,
+//!   validate, lower arbitrary user-defined networks to the graph IR
+//!   (and export graphs back to specs).
 //! * [`sim`] — the GPU training simulator (ground-truth oracle).
 //! * [`features`] — structure-independent features, NSM, graph2vec-lite.
 //! * [`predictor`] — learned predictors + AutoML + baselines.
@@ -45,6 +48,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod features;
 pub mod graph;
+pub mod ingest;
 pub mod predictor;
 pub mod profiler;
 pub mod runtime;

@@ -13,15 +13,20 @@
 //!   collect         run the profiling sweeps, write dataset JSON
 //!   train           train AutoML predictors, write model JSON
 //!   predict         predict one (model, config) cost
+//!   predict-spec    predict a user-defined network from a spec file
+//!                   (dnnabacus-spec-v1 JSON; see README "Model specs")
+//!   export-spec     write a zoo network as a spec file (--model, --out)
 //!   serve           run the prediction service demo (load generator)
 //!   nsm-demo        print the NSM of a model (paper Figures 6-7)
 //!
 //! Common flags: --scale 0.35 --seed 42 --out dir --model vgg16
 //!               --batch 128 --dataset cifar100|mnist --device rtx2080
 //!               --framework pytorch|tensorflow --backend automl|mlp
+//!               --json (predict/predict-spec: machine-readable output)
 //!
 //! `serve` flags: --requests 256 --workers 2 --cache-capacity 4096
 //!                --cache-ttl-ms 120000   (capacity 0 disables caching)
+//!                --specs DIR (mix spec files from DIR into the load)
 //!
 //! `--backend mlp` needs the AOT artifacts (python/compile/aot.py) and a
 //! PJRT binding; this zero-dependency build ships a stub backend, so the
@@ -29,14 +34,19 @@
 //! ```
 
 use dnnabacus::coordinator::{
+    fits_device,
     service::{AutoMlBackend, MlpBackend},
     PredictRequest, PredictionService, ServiceConfig,
 };
 use dnnabacus::experiments::{self, Ctx};
 use dnnabacus::features::Nsm;
+use dnnabacus::graph::Graph;
+use dnnabacus::ingest::{self, ParsedSpec};
 use dnnabacus::predictor::{AutoMl, Target};
 use dnnabacus::sim::{DatasetKind, DeviceProfile, Framework, Optimizer, TrainConfig};
 use dnnabacus::util::cli::Args;
+use dnnabacus::util::error::Context as _;
+use dnnabacus::util::json::Json;
 use dnnabacus::util::prng::Rng;
 use dnnabacus::zoo;
 use std::path::PathBuf;
@@ -50,6 +60,8 @@ fn main() {
         Some("collect") => collect(&args),
         Some("train") => train(&args),
         Some("predict") => predict(&args),
+        Some("predict-spec") => predict_spec(&args),
+        Some("export-spec") => export_spec(&args),
         Some("serve") => serve(&args),
         Some("nsm-demo") => nsm_demo(&args),
         Some(cmd) => run_experiment(cmd, &args),
@@ -163,25 +175,110 @@ fn parse_config(args: &Args) -> dnnabacus::Result<TrainConfig> {
 }
 
 fn predict(args: &Args) -> dnnabacus::Result<()> {
-    let ctx = ctx_from(args);
     let model_name = args.str_or("model", "vgg16");
     let cfg = parse_config(args)?;
-    let corpus = ctx.training_corpus();
-    let time_model = AutoMl::train_opt(&corpus, Target::Time, ctx.seed, true);
-    let mem_model = AutoMl::train_opt(&corpus, Target::Memory, ctx.seed, true);
     let g = zoo::build(
         &model_name,
         cfg.dataset.in_channels(),
         cfg.dataset.classes(),
     )?;
-    let f = dnnabacus::features::feature_vector(&g, &cfg, dnnabacus::features::StructureRep::Nsm);
+    predict_graph(args, &model_name, &g, &cfg)
+}
+
+fn predict_spec(args: &Args) -> dnnabacus::Result<()> {
+    let path = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("spec"))
+        .ok_or_else(|| dnnabacus::err!("usage: dnnabacus predict-spec <file.json> [--flags]"))?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let parsed = ingest::compile_str(&text).with_context(|| format!("spec {path}"))?;
+    let mut cfg = parse_config(args)?;
+    // Default the dataset to the one matching the spec's declared input
+    // geometry, so `predict-spec file.json` just works for MNIST-shaped
+    // nets; an explicit --dataset always wins (and is checked).
+    if args.get("dataset").is_none() {
+        if let Some(dataset) = parsed.matching_dataset() {
+            cfg.dataset = dataset;
+        }
+    }
+    parsed.check_dataset(cfg.dataset)?;
+    predict_graph(args, &parsed.name, &parsed.graph, &cfg)
+}
+
+fn export_spec(args: &Args) -> dnnabacus::Result<()> {
+    let model = args.str_or("model", "vgg16");
+    let cfg = parse_config(args)?;
+    let spec = ingest::spec_for_zoo(&model, cfg.dataset.in_channels(), cfg.dataset.classes())?;
+    let text = spec.to_json().to_string();
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text).with_context(|| format!("writing {path}"))?;
+            println!("wrote {model} spec -> {path}");
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+/// Shared tail of `predict` / `predict-spec`: train the AutoML models,
+/// predict over the given graph, cross-check against the simulator, and
+/// report as prose or (with --json) as one machine-readable object.
+fn predict_graph(args: &Args, name: &str, g: &Graph, cfg: &TrainConfig) -> dnnabacus::Result<()> {
+    let ctx = ctx_from(args);
+    let corpus = ctx.training_corpus();
+    let time_model = AutoMl::train_opt(&corpus, Target::Time, ctx.seed, true);
+    let mem_model = AutoMl::train_opt(&corpus, Target::Memory, ctx.seed, true);
+    let f = dnnabacus::features::feature_vector(g, cfg, dnnabacus::features::StructureRep::Nsm);
     let (pt, pm) = (time_model.predict(&f), mem_model.predict(&f));
+    let fits = fits_device(&cfg.device, pm);
+    let sim = dnnabacus::sim::simulate_training(g, cfg);
+    if args.bool("json") {
+        let mut predicted = Json::obj();
+        predicted
+            .set("time_s", pt)
+            .set("memory_bytes", pm)
+            .set("fits_device", fits);
+        let mut o = Json::obj();
+        o.set("model", name)
+            .set("dataset", cfg.dataset.name())
+            .set("batch", cfg.batch)
+            .set("device", cfg.device.name.as_str())
+            .set("params", g.param_count())
+            .set("weighted_layers", g.weighted_layers())
+            .set(
+                "flops_per_sample",
+                g.flops_per_sample(cfg.dataset.in_channels(), cfg.dataset.hw())
+                    .unwrap_or(0),
+            )
+            .set("predicted", predicted);
+        match sim {
+            Ok(m) => {
+                let mut s = Json::obj();
+                s.set("time_s", m.total_time)
+                    .set("memory_bytes", m.peak_mem);
+                o.set("simulated", s);
+            }
+            Err(_) => {
+                o.set("simulated", Json::Null);
+            }
+        }
+        println!("{o}");
+        return Ok(());
+    }
     println!(
-        "predicted: time {:.2}s, memory {:.0} MiB",
-        pt,
-        pm / (1u64 << 20) as f64
+        "{name}: {} params, {} weighted layers",
+        g.param_count(),
+        g.weighted_layers()
     );
-    match dnnabacus::sim::simulate_training(&g, &cfg) {
+    println!(
+        "predicted: time {:.2}s, memory {:.0} MiB{}",
+        pt,
+        pm / (1u64 << 20) as f64,
+        if fits { "" } else { "  [would NOT fit device]" }
+    );
+    match sim {
         Ok(m) => println!(
             "simulated: time {:.2}s, memory {:.0} MiB  (rel err {:.2}% / {:.2}%)",
             m.total_time,
@@ -218,23 +315,31 @@ fn serve(args: &Args) -> dnnabacus::Result<()> {
             }
         };
     println!("backend: {}", backend.name());
+    // Arc-wrapped so the zipf mix below clones a pointer per request,
+    // not a graph.
+    let specs: Vec<Arc<ParsedSpec>> = load_spec_dir(args)?.into_iter().map(Arc::new).collect();
     let svc = PredictionService::start(svc_cfg, backend);
     let names: Vec<&str> = zoo::CLASSIC_29.iter().map(|(n, _)| *n).collect();
     let batches = [32usize, 64, 128, 256];
     // A skewed (Zipf-ish) mix: schedulers resubmit recurring job shapes,
-    // which is exactly what the content-keyed cache absorbs.
+    // which is exactly what the content-keyed cache absorbs. With
+    // --specs, a third of the stream arrives as user-defined networks.
     let mut rng = Rng::new(ctx.seed);
     let requests: Vec<PredictRequest> = (0..n_requests)
         .map(|i| {
-            let dataset = if rng.chance(0.5) {
-                DatasetKind::Cifar100
+            let batch = batches[rng.zipf(batches.len())];
+            if !specs.is_empty() && rng.chance(1.0 / 3.0) {
+                let p = specs[rng.zipf(specs.len())].clone();
+                let dataset = p.matching_dataset().unwrap_or(DatasetKind::Cifar100);
+                PredictRequest::spec(i as u64, p, TrainConfig::paper_default(dataset, batch))
             } else {
-                DatasetKind::Mnist
-            };
-            PredictRequest {
-                id: i as u64,
-                model: names[rng.zipf(names.len())].to_string(),
-                config: TrainConfig::paper_default(dataset, batches[rng.zipf(batches.len())]),
+                let dataset = if rng.chance(0.5) {
+                    DatasetKind::Cifar100
+                } else {
+                    DatasetKind::Mnist
+                };
+                let name = names[rng.zipf(names.len())];
+                PredictRequest::zoo(i as u64, name, TrainConfig::paper_default(dataset, batch))
             }
         })
         .collect();
@@ -265,6 +370,40 @@ fn serve(args: &Args) -> dnnabacus::Result<()> {
         m.cache_hits, m.cache_misses, m.batches, m.steals
     );
     Ok(())
+}
+
+/// Load and compile every `*.json` spec under `--specs DIR` (empty when
+/// the flag is absent). Specs whose input channels match no dataset are
+/// skipped with a note rather than failing the whole load.
+fn load_spec_dir(args: &Args) -> dnnabacus::Result<Vec<ParsedSpec>> {
+    let Some(dir) = args.get("specs") else {
+        return Ok(Vec::new());
+    };
+    let mut specs = Vec::new();
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading spec dir {dir}"))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("json"))
+        .collect();
+    entries.sort();
+    for path in entries {
+        let text = std::fs::read_to_string(&path)?;
+        let parsed =
+            ingest::compile_str(&text).with_context(|| format!("spec {}", path.display()))?;
+        if parsed.matching_dataset().is_none() {
+            println!(
+                "skipping {}: no dataset with {}-channel {}x{} samples",
+                path.display(),
+                parsed.input_channels(),
+                parsed.input_hw(),
+                parsed.input_hw()
+            );
+            continue;
+        }
+        specs.push(parsed);
+    }
+    println!("loaded {} specs from {dir}", specs.len());
+    Ok(specs)
 }
 
 fn nsm_demo(args: &Args) -> dnnabacus::Result<()> {

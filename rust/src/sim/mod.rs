@@ -62,6 +62,16 @@ impl DatasetKind {
     pub fn hw(self) -> usize {
         32
     }
+
+    /// The dataset whose samples have `channels` input channels, if any
+    /// (the ingest pipeline matches user specs to datasets with this).
+    pub fn for_channels(channels: usize) -> Option<DatasetKind> {
+        match channels {
+            1 => Some(DatasetKind::Mnist),
+            3 => Some(DatasetKind::Cifar100),
+            _ => None,
+        }
+    }
 }
 
 /// Optimizers the paper varies (Table 2 "Optimizer"). The state multiple

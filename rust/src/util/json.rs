@@ -4,6 +4,8 @@
 //! models and experiment reports are persisted through this module. It
 //! supports the full JSON grammar minus exotic number forms, with
 //! round-trip-exact `f64` printing (via shortest-repr fallback to `{:e}`).
+//! Parse errors report `line L column C (byte B)` — the ingest pipeline
+//! makes them user-facing diagnostics for hand-authored model specs.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -101,7 +103,7 @@ impl Json {
         let v = p.value()?;
         p.skip_ws();
         if p.pos != p.bytes.len() {
-            crate::bail!("trailing characters at byte {}", p.pos);
+            crate::bail!("trailing characters at {}", p.at());
         }
         Ok(v)
     }
@@ -231,6 +233,23 @@ struct Parser<'a> {
 }
 
 impl Parser<'_> {
+    /// `line L column C (byte B)` for an arbitrary byte offset. Parser
+    /// errors are user-facing (the ingest pipeline reads user-authored
+    /// model specs), so they point into the source text instead of
+    /// reporting a bare byte offset. Columns count bytes from the last
+    /// newline, which matches editors for ASCII documents.
+    fn at_byte(&self, pos: usize) -> String {
+        let upto = &self.bytes[..pos.min(self.bytes.len())];
+        let line = 1 + upto.iter().filter(|&&b| b == b'\n').count();
+        let col = 1 + upto.iter().rev().take_while(|&&b| b != b'\n').count();
+        format!("line {line} column {col} (byte {pos})")
+    }
+
+    /// [`at_byte`](Self::at_byte) for the current position.
+    fn at(&self) -> String {
+        self.at_byte(self.pos)
+    }
+
     fn skip_ws(&mut self) {
         while self.pos < self.bytes.len()
             && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
@@ -249,9 +268,9 @@ impl Parser<'_> {
             Ok(())
         } else {
             crate::bail!(
-                "expected '{}' at byte {}, found {:?}",
+                "expected '{}' at {}, found {:?}",
                 b as char,
-                self.pos,
+                self.at(),
                 self.peek().map(|c| c as char)
             )
         }
@@ -267,7 +286,7 @@ impl Parser<'_> {
             Some(b'[') => self.array(),
             Some(b'{') => self.object(),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            other => crate::bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos),
+            other => crate::bail!("unexpected {:?} at {}", other.map(|c| c as char), self.at()),
         }
     }
 
@@ -276,7 +295,7 @@ impl Parser<'_> {
             self.pos += word.len();
             Ok(val)
         } else {
-            crate::bail!("invalid literal at byte {}", self.pos)
+            crate::bail!("invalid literal at {}", self.at())
         }
     }
 
@@ -286,7 +305,7 @@ impl Parser<'_> {
         loop {
             let c = self
                 .peek()
-                .ok_or_else(|| crate::err!("unterminated string"))?;
+                .ok_or_else(|| crate::err!("unterminated string at {}", self.at()))?;
             self.pos += 1;
             match c {
                 b'"' => return Ok(out),
@@ -314,7 +333,7 @@ impl Parser<'_> {
                             self.pos += 4;
                             out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
                         }
-                        _ => crate::bail!("bad escape \\{}", e as char),
+                        _ => crate::bail!("bad escape \\{} at {}", e as char, self.at()),
                     }
                 }
                 _ => {
@@ -341,7 +360,10 @@ impl Parser<'_> {
             }
         }
         let s = std::str::from_utf8(&self.bytes[start..self.pos])?;
-        Ok(Json::Num(s.parse::<f64>()?))
+        let x: f64 = s
+            .parse()
+            .map_err(|_| crate::err!("invalid number '{s}' at {}", self.at_byte(start)))?;
+        Ok(Json::Num(x))
     }
 
     fn array(&mut self) -> crate::Result<Json> {
@@ -363,7 +385,7 @@ impl Parser<'_> {
                     self.pos += 1;
                     return Ok(Json::Arr(out));
                 }
-                _ => crate::bail!("expected ',' or ']' at byte {}", self.pos),
+                _ => crate::bail!("expected ',' or ']' at {}", self.at()),
             }
         }
     }
@@ -392,7 +414,7 @@ impl Parser<'_> {
                     self.pos += 1;
                     return Ok(Json::Obj(out));
                 }
-                _ => crate::bail!("expected ',' or '}}' at byte {}", self.pos),
+                _ => crate::bail!("expected ',' or '}}' at {}", self.at()),
             }
         }
     }
@@ -439,6 +461,21 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("tru").is_err());
+    }
+
+    #[test]
+    fn errors_carry_line_and_column() {
+        // The bad token `x` sits on line 3, column 8.
+        let text = "{\n  \"a\": 1,\n  \"b\": x\n}";
+        let e = Json::parse(text).unwrap_err().to_string();
+        assert!(e.contains("line 3 column 8"), "{e}");
+
+        let e = Json::parse("[1, 2,\n 3!]").unwrap_err().to_string();
+        assert!(e.contains("line 2"), "{e}");
+
+        // Errors on line 1 (no newline yet) still report positions.
+        let e = Json::parse("[1 2]").unwrap_err().to_string();
+        assert!(e.contains("line 1 column 4"), "{e}");
     }
 
     #[test]

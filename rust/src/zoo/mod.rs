@@ -4,6 +4,10 @@
 //! dataset and Figures 1–12), 5 "unseen" networks held out for the
 //! zero-shot evaluation (Figure 13), and the random model generator
 //! (5,500 extra points, §3.1).
+//!
+//! Every zoo graph also round-trips through the [`crate::ingest`] spec
+//! format (`export → parse → lower` is the identity), which makes this
+//! module the golden corpus for the user-facing model-spec pipeline.
 
 pub mod common;
 pub mod densenet;

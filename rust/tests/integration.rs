@@ -78,20 +78,20 @@ fn service_with_trained_backend_screens_oom() {
     let svc = PredictionService::start(ServiceConfig::default(), backend);
     // A small job must fit; a monstrous one must be flagged.
     let small = svc
-        .predict(PredictRequest {
-            id: 1,
-            model: "lenet5".into(),
-            config: TrainConfig::paper_default(DatasetKind::Mnist, 32),
-        })
+        .predict(PredictRequest::zoo(
+            1,
+            "lenet5",
+            TrainConfig::paper_default(DatasetKind::Mnist, 32),
+        ))
         .unwrap();
     assert!(small.fits_device);
     assert!(small.time_s > 0.0 && small.memory_bytes > 0.0);
     let huge = svc
-        .predict(PredictRequest {
-            id: 2,
-            model: "wideresnet28-10".into(),
-            config: TrainConfig::paper_default(DatasetKind::Cifar100, 2048),
-        })
+        .predict(PredictRequest::zoo(
+            2,
+            "wideresnet28-10",
+            TrainConfig::paper_default(DatasetKind::Cifar100, 2048),
+        ))
         .unwrap();
     assert!(
         huge.memory_bytes > small.memory_bytes * 3.0,
@@ -171,11 +171,11 @@ fn mlp_pjrt_backend_serves_when_artifacts_present() {
     let svc = PredictionService::start(ServiceConfig::default(), backend);
     let rxs: Vec<_> = (0..8)
         .map(|i| {
-            svc.submit(PredictRequest {
-                id: i,
-                model: "resnet18".into(),
-                config: TrainConfig::paper_default(DatasetKind::Cifar100, 64),
-            })
+            svc.submit(PredictRequest::zoo(
+                i,
+                "resnet18",
+                TrainConfig::paper_default(DatasetKind::Cifar100, 64),
+            ))
         })
         .collect();
     for rx in rxs {
@@ -200,6 +200,78 @@ fn zoo_smoke_all_29_paper_networks_build_and_simulate_small() {
             .unwrap_or_else(|e| panic!("{name} failed to simulate: {e}"));
         assert!(m.total_time > 0.0 && m.peak_mem > 0, "{name}");
     }
+}
+
+#[test]
+fn spec_corpus_every_file_parses_compiles_and_is_novel_ready() {
+    // The checked-in examples/specs corpus must stay green: every file
+    // parses, validates, lowers, and featurizes; at least one network
+    // is NOT in the zoo (the zero-shot acceptance path).
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("examples/specs");
+    let mut novel = 0usize;
+    let mut seen = 0usize;
+    for entry in std::fs::read_dir(&dir).expect("examples/specs must exist") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        seen += 1;
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = dnnabacus::ingest::compile_str(&text)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        parsed.graph.validate().unwrap();
+        assert!(parsed.graph.param_count() > 0, "{}", path.display());
+        let dataset = parsed
+            .matching_dataset()
+            .unwrap_or_else(|| panic!("{}: no dataset matches", path.display()));
+        let cfg = TrainConfig::paper_default(dataset, 32);
+        let f = feature_vector(&parsed.graph, &cfg, StructureRep::Nsm);
+        assert!(f.iter().all(|x| x.is_finite()), "{}", path.display());
+        if zoo::builder(&parsed.name).is_none() {
+            novel += 1;
+        }
+    }
+    assert!(seen >= 4, "corpus shrank to {seen} files");
+    assert_eq!(novel, seen, "corpus files must be novel (non-zoo) networks");
+}
+
+#[test]
+fn spec_request_serves_end_to_end_and_shares_cache_with_zoo_twin() {
+    // The full acceptance path over a real trained backend: a novel
+    // spec gets a prediction, and a zoo-equivalent spec is answered
+    // from the cache entry the zoo request filled.
+    let ctx = tiny_ctx(6);
+    let corpus = ctx.training_corpus();
+    let backend = Arc::new(AutoMlBackend {
+        time_model: AutoMl::train_opt(&corpus, Target::Time, 6, true),
+        memory_model: AutoMl::train_opt(&corpus, Target::Memory, 6, true),
+    });
+    let svc = PredictionService::start(ServiceConfig::default(), backend);
+    let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, 64);
+
+    // 1. A novel architecture straight from the corpus.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("examples/specs/branchy-inception.json");
+    let novel = dnnabacus::ingest::compile_str(&std::fs::read_to_string(path).unwrap()).unwrap();
+    let p = svc
+        .predict(PredictRequest::spec(1, novel, cfg.clone()))
+        .unwrap();
+    assert!(p.time_s > 0.0 && p.memory_bytes > 0.0);
+
+    // 2. Zoo request, then its spec twin: one miss, one hit, same answer.
+    let a = svc
+        .predict(PredictRequest::zoo(2, "resnet18", cfg.clone()))
+        .unwrap();
+    let twin = dnnabacus::ingest::spec_for_zoo("resnet18", 3, 100)
+        .unwrap()
+        .compile()
+        .unwrap();
+    let b = svc.predict(PredictRequest::spec(3, twin, cfg)).unwrap();
+    assert_eq!(a.time_s, b.time_s);
+    assert_eq!(a.memory_bytes, b.memory_bytes);
+    let m = svc.shutdown();
+    assert_eq!(m.cache_hits, 1, "spec twin must hit the zoo entry");
+    assert_eq!(m.served, 3);
 }
 
 #[test]

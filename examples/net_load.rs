@@ -1,0 +1,170 @@
+//! The prediction service under load *over real sockets*: start the
+//! `dnnabacus-wire-v1` TCP front door in-process, fire the same skewed
+//! (Zipf-ish) zoo + spec mix as `serve_load`/`spec_load` at it from
+//! several pipelining clients, and report wire throughput, latency
+//! percentiles, and what the cache and admission control absorbed.
+//!
+//! ```bash
+//! cargo run --release --example net_load
+//! CLIENTS=8 REQUESTS=1024 cargo run --release --example net_load
+//! ```
+
+use dnnabacus::coordinator::{service::AutoMlBackend, CostModel, PredictionService, ServiceConfig};
+use dnnabacus::experiments::Ctx;
+use dnnabacus::net::{Client, ErrorKind, Server, ServerConfig, WireRequest, WireResponse};
+use dnnabacus::predictor::{AutoMl, Target};
+use dnnabacus::util::json::Json;
+use dnnabacus::util::prng::Rng;
+use dnnabacus::util::stats;
+use dnnabacus::zoo;
+use std::sync::Arc;
+
+/// Pipelined requests per wave, per client. Small enough that later
+/// waves observe cache entries earlier waves filled.
+const WAVE: usize = 32;
+
+/// The novel spec corpus, sent *inline* over the wire (the server
+/// compiles it per request — the content-keyed cache then absorbs the
+/// repeats).
+const NOVEL_SPECS: [&str; 3] = [
+    include_str!("specs/tiny-cnn.json"),
+    include_str!("specs/branchy-inception.json"),
+    include_str!("specs/mnist-mlp.json"),
+];
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> dnnabacus::Result<()> {
+    let n_clients = env_usize("CLIENTS", 4).max(1);
+    let n_requests = env_usize("REQUESTS", 512);
+
+    let ctx = Ctx::fast();
+    let corpus = ctx.training_corpus();
+    let backend: Arc<dyn CostModel> = Arc::new(AutoMlBackend {
+        time_model: AutoMl::train_opt(&corpus, Target::Time, 1, true),
+        memory_model: AutoMl::train_opt(&corpus, Target::Memory, 1, true),
+    });
+    let svc_cfg = ServiceConfig {
+        max_inflight: 512,
+        ..ServiceConfig::default()
+    };
+    let svc = PredictionService::start(svc_cfg, backend);
+    let server = Server::start("127.0.0.1:0", ServerConfig::default(), svc)?;
+    let addr = server.local_addr().to_string();
+    println!("listening on {addr} with {n_clients} clients x {n_requests} total requests");
+
+    let specs: Arc<Vec<Json>> = Arc::new(
+        NOVEL_SPECS
+            .iter()
+            .map(|text| Json::parse(text))
+            .collect::<dnnabacus::Result<_>>()?,
+    );
+    let names: Arc<Vec<&'static str>> = Arc::new(zoo::all_names());
+    let batches = [16usize, 32, 64, 128];
+
+    let t0 = std::time::Instant::now();
+    let workers: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let addr = addr.clone();
+            let specs = Arc::clone(&specs);
+            let names = Arc::clone(&names);
+            let quota = n_requests / n_clients + usize::from(c < n_requests % n_clients);
+            std::thread::spawn(move || -> dnnabacus::Result<(usize, usize, usize, Vec<f64>)> {
+                let mut rng = Rng::new(0xBEEF + c as u64);
+                let mut client = Client::connect(&addr)?;
+                let mut ok = 0usize;
+                let mut failed = 0usize;
+                let mut rejected = 0usize;
+                let mut latencies = Vec::with_capacity(quota);
+                let mut sent = 0usize;
+                while sent < quota {
+                    let wave_n = WAVE.min(quota - sent);
+                    let reqs: Vec<WireRequest> = (0..wave_n)
+                        .map(|i| {
+                            let id = (c * n_requests + sent + i) as u64;
+                            let batch = batches[rng.zipf(batches.len())];
+                            // A third of the stream arrives as inline
+                            // user specs, the rest as zoo names — the
+                            // same shape as `serve --specs`.
+                            if rng.chance(1.0 / 3.0) {
+                                let spec = specs[rng.zipf(specs.len())].clone();
+                                WireRequest::spec(id, spec).with("batch", batch)
+                            } else {
+                                let name = names[rng.zipf(names.len())];
+                                let ds = if rng.chance(0.5) { "cifar100" } else { "mnist" };
+                                WireRequest::zoo(id, name)
+                                    .with("batch", batch)
+                                    .with("dataset", ds)
+                            }
+                        })
+                        .collect();
+                    for resp in client.call_many(&reqs)? {
+                        match resp {
+                            WireResponse::Ok { prediction, .. } => {
+                                ok += 1;
+                                latencies.push(prediction.latency_s);
+                            }
+                            // Overload refusals are admission control
+                            // doing its job under a hot mix, not a
+                            // serving bug — count them separately.
+                            WireResponse::Err {
+                                kind: ErrorKind::Overloaded,
+                                ..
+                            } => rejected += 1,
+                            WireResponse::Err { .. } => failed += 1,
+                        }
+                    }
+                    sent += wave_n;
+                }
+                Ok((ok, failed, rejected, latencies))
+            })
+        })
+        .collect();
+
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    let mut rejected = 0usize;
+    let mut latencies = Vec::with_capacity(n_requests);
+    for handle in workers {
+        let (o, f, r, l) = handle.join().expect("client thread panicked")?;
+        ok += o;
+        failed += f;
+        rejected += r;
+        latencies.extend(l);
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let (wire, m) = server.shutdown();
+
+    println!(
+        "served {ok}/{n_requests} over the wire in {elapsed:.2}s = {:.0} req/s \
+         ({failed} failed, {rejected} overload-rejected)",
+        ok as f64 / elapsed
+    );
+    println!(
+        "service latency p50 {:.2} ms p99 {:.2} ms | mean batch {:.1}",
+        stats::quantile(&latencies, 0.5) * 1e3,
+        stats::quantile(&latencies, 0.99) * 1e3,
+        m.mean_batch_size
+    );
+    println!(
+        "cache: {} hits / {} misses ({:.0}% hit rate) | steals {} | overloaded {}",
+        m.cache_hits,
+        m.cache_misses,
+        100.0 * m.cache_hits as f64 / (m.cache_hits + m.cache_misses).max(1) as f64,
+        m.steals,
+        wire.overloaded
+    );
+    println!(
+        "wire: {} connections, {} requests, {} answered, {} bad",
+        wire.connections, wire.requests, wire.answered, wire.bad_requests
+    );
+    // Overload rejections (admission control under a hot enough mix)
+    // are fine; anything else failing means the mix is not servable.
+    assert_eq!(failed, 0, "every request in the mix must be servable");
+    Ok(())
+}

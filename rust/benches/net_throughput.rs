@@ -1,0 +1,173 @@
+//! `cargo bench --bench net_throughput` — requests/sec and latency
+//! percentiles for the prediction service behind the real TCP front
+//! door (`dnnabacus-wire-v1`), with the content-keyed cache off and on.
+//! The socket twin of `serve_throughput`: the delta between the two is
+//! the wire cost (framing, JSON, syscalls, connection handling).
+//!
+//! Flags (after `--`):
+//!   --scale 0.12     training-corpus sweep density
+//!   --requests 512   request count per pass
+//!   --clients 4      concurrent pipelining client connections
+//!   --seed 7         request-mix seed
+//!   --json PATH      write the results as JSON (the CI bench-smoke job
+//!                    uploads this as a `BENCH_*.json` perf artifact)
+
+use dnnabacus::coordinator::{
+    service::AutoMlBackend, CostModel, PredictionService, ServiceConfig, ServiceMetrics,
+};
+use dnnabacus::experiments::Ctx;
+use dnnabacus::net::{Client, NetMetrics, Server, ServerConfig, WireRequest};
+use dnnabacus::predictor::{AutoMl, Target};
+use dnnabacus::util::cli::Args;
+use dnnabacus::util::json::Json;
+use dnnabacus::util::prng::Rng;
+use dnnabacus::zoo;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Pipelined requests per wave per client — small enough that later
+/// waves can hit cache entries earlier waves filled.
+const WAVE: usize = 32;
+
+/// One timed pass: a fresh service + server, `clients` connections
+/// splitting the schedule, everything pipelined in waves.
+fn run_pass(
+    schedule: &[WireRequest],
+    backend: Arc<dyn CostModel>,
+    cache_capacity: usize,
+    clients: usize,
+) -> (f64, NetMetrics, ServiceMetrics) {
+    let cfg = ServiceConfig {
+        cache_capacity,
+        max_inflight: 1024,
+        ..ServiceConfig::default()
+    };
+    let svc = PredictionService::start(cfg, backend);
+    let server = Server::start("127.0.0.1:0", ServerConfig::default(), svc).expect("bind");
+    let addr = server.local_addr().to_string();
+    let chunk = schedule.len().div_ceil(clients);
+    let t0 = Instant::now();
+    let handles: Vec<_> = schedule
+        .chunks(chunk)
+        .map(|slice| {
+            let addr = addr.clone();
+            let slice = slice.to_vec();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("connect");
+                for wave in slice.chunks(WAVE) {
+                    for resp in client.call_many(wave).expect("pipelined wave") {
+                        assert!(resp.is_ok(), "schedule must be fully servable: {resp:?}");
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let (net, svc_m) = server.shutdown();
+    (elapsed, net, svc_m)
+}
+
+fn pass_json(
+    name: &str,
+    requests: usize,
+    elapsed: f64,
+    net: &NetMetrics,
+    m: &ServiceMetrics,
+) -> Json {
+    let mut o = Json::obj();
+    o.set("name", name)
+        .set("requests", requests)
+        .set("req_per_s", requests as f64 / elapsed)
+        .set("elapsed_s", elapsed)
+        .set("p50_s", m.p50_latency_s)
+        .set("p99_s", m.p99_latency_s)
+        .set("mean_batch_size", m.mean_batch_size)
+        .set("cache_hits", m.cache_hits)
+        .set("cache_misses", m.cache_misses)
+        .set("overloaded", net.overloaded)
+        .set("answered", net.answered)
+        .set("connections", net.connections)
+        .set("errors", m.errors);
+    o
+}
+
+fn report(name: &str, requests: usize, elapsed: f64, net: &NetMetrics, m: &ServiceMetrics) {
+    println!(
+        "{name:<10} {:>7.0} req/s  p50 {:>8.3} ms  p99 {:>8.3} ms  \
+         mean batch {:>5.1}  hits {:>4}  overloaded {:>3}",
+        requests as f64 / elapsed,
+        m.p50_latency_s * 1e3,
+        m.p99_latency_s * 1e3,
+        m.mean_batch_size,
+        m.cache_hits,
+        net.overloaded
+    );
+}
+
+fn main() {
+    let args = Args::from_env();
+    let scale = args.f64_or("scale", 0.12);
+    let requests = args.usize_or("requests", 512);
+    let clients = args.usize_or("clients", 4).max(1);
+    let seed = args.u64_or("seed", 7);
+
+    let ctx = Ctx {
+        scale,
+        cache_dir: None,
+        ..Ctx::default()
+    };
+    let corpus = ctx.training_corpus();
+    let backend: Arc<dyn CostModel> = Arc::new(AutoMlBackend {
+        time_model: AutoMl::train_opt(&corpus, Target::Time, seed, true),
+        memory_model: AutoMl::train_opt(&corpus, Target::Memory, seed, true),
+    });
+
+    // One fixed, seeded, Zipf-skewed schedule shared by both passes —
+    // the same mix `serve_throughput` drives in-process.
+    let names: Vec<&str> = zoo::all_names();
+    let batches = [32usize, 64, 128, 256];
+    let mut rng = Rng::new(seed);
+    let schedule: Vec<WireRequest> = (0..requests)
+        .map(|i| {
+            let dataset = if rng.chance(0.5) { "cifar100" } else { "mnist" };
+            let batch = batches[rng.zipf(batches.len())];
+            WireRequest::zoo(i as u64, names[rng.zipf(names.len())])
+                .with("batch", batch)
+                .with("dataset", dataset)
+        })
+        .collect();
+
+    let (off_s, off_net, off_m) = run_pass(&schedule, Arc::clone(&backend), 0, clients);
+    report("cache-off", requests, off_s, &off_net, &off_m);
+    assert_eq!(off_m.cache_hits, 0, "disabled cache must never hit");
+    assert_eq!(off_net.answered as usize, requests);
+
+    let (on_s, on_net, on_m) = run_pass(&schedule, Arc::clone(&backend), 4096, clients);
+    report("cache-on", requests, on_s, &on_net, &on_m);
+    assert!(on_m.cache_hits > 0, "skewed mix must repeat keys");
+    assert_eq!(on_net.answered as usize, requests);
+
+    let speedup = (requests as f64 / on_s) / (requests as f64 / off_s);
+    println!("cache speedup over the wire: {speedup:.2}x on requests/sec");
+
+    if let Some(path) = args.get("json") {
+        let mut doc = Json::obj();
+        doc.set("bench", "net_throughput")
+            .set("scale", scale)
+            .set("seed", seed)
+            .set("clients", clients)
+            .set(
+                "results",
+                Json::Arr(vec![
+                    pass_json("cache_off", requests, off_s, &off_net, &off_m),
+                    pass_json("cache_on", requests, on_s, &on_net, &on_m),
+                ]),
+            )
+            .set("cache_speedup_req_per_s", speedup);
+        std::fs::write(path, doc.to_string()).expect("write bench json");
+        println!("wrote {path}");
+    }
+}

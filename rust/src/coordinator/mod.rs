@@ -17,12 +17,18 @@
 //!   one queue per worker with round-robin push and idle-side work
 //!   stealing;
 //! * [`service`] — the TTL-LRU cache front, worker threads, backend
-//!   dispatch (shallow AutoML model or the PJRT MLP artifact), metrics
-//!   (throughput, latency percentiles, cache hits/misses, steals).
+//!   dispatch (shallow AutoML model or the PJRT MLP artifact), bounded
+//!   admission ([`PredictionService::try_submit`] refuses once
+//!   `max_inflight` requests are queued or being predicted — the
+//!   network front door in [`crate::net`] turns refusals into
+//!   structured `overloaded` replies), and metrics (throughput, latency
+//!   percentiles, cache hits/misses, steals, overload rejections).
 
 pub mod batcher;
 pub mod request;
 pub mod service;
+#[cfg(test)]
+pub mod testutil;
 
 pub use request::{ModelRef, PredictRequest, Prediction};
 pub use service::{fits_device, CostModel, PredictionService, ServiceConfig, ServiceMetrics};

@@ -14,7 +14,7 @@ use crate::runtime::MlpPredictor;
 use crate::sim::DeviceProfile;
 use crate::util::cache::TtlLru;
 use crate::util::stats;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -119,6 +119,13 @@ pub struct ServiceConfig {
     pub cache_capacity: usize,
     /// How long a cached prediction stays servable after its last fill.
     pub cache_ttl: Duration,
+    /// Admission bound for [`PredictionService::try_submit`]: once this
+    /// many requests are queued or being predicted, further bounded
+    /// submissions are refused instead of growing the queue without
+    /// limit. 0 means unbounded. Cache hits are answered inline and
+    /// never consume a slot; the plain [`PredictionService::submit`]
+    /// ignores the bound entirely.
+    pub max_inflight: usize,
 }
 
 impl Default for ServiceConfig {
@@ -129,6 +136,7 @@ impl Default for ServiceConfig {
             max_wait: Duration::from_millis(2),
             cache_capacity: 4096,
             cache_ttl: Duration::from_secs(120),
+            max_inflight: 0,
         }
     }
 }
@@ -145,6 +153,12 @@ pub struct ServiceMetrics {
     pub cache_misses: u64,
     /// Batches a worker took from a sibling's shard.
     pub steals: u64,
+    /// Bounded submissions refused because `max_inflight` requests were
+    /// already in flight (the serving layer's `overloaded` replies).
+    pub overload_rejected: u64,
+    /// Requests queued or being predicted at sampling time (gauge; 0
+    /// after a drained shutdown).
+    pub in_flight: u64,
     pub p50_latency_s: f64,
     pub p99_latency_s: f64,
     pub mean_batch_size: f64,
@@ -158,6 +172,12 @@ struct MetricsInner {
 type Job = (PredictRequest, u64, Sender<crate::Result<Prediction>>);
 
 type PredictionCache = Mutex<TtlLru<u64, (f64, f64)>>;
+
+/// Root-cause prefix the workers stamp on cost-model failures. The
+/// serving layer keys on it to classify an error as the server's fault
+/// (`internal`) rather than the request's (`bad_request`) — keep the
+/// worker error construction and any matcher pointed at this constant.
+pub const BACKEND_ERROR_PREFIX: &str = "backend: ";
 
 /// The paper's OOM screen, with the CUDA-context reservation honored:
 /// a job fits only if its predicted peak memory stays within VRAM
@@ -175,6 +195,7 @@ struct Worker {
     model: Arc<dyn CostModel>,
     served: Arc<AtomicU64>,
     errors: Arc<AtomicU64>,
+    in_flight: Arc<AtomicUsize>,
     cache: Option<Arc<PredictionCache>>,
     metrics: Arc<Mutex<MetricsInner>>,
 }
@@ -239,13 +260,17 @@ impl Worker {
                 Err(err) => {
                     for (_, _, tx, _) in ok_jobs {
                         local_errors += 1;
-                        let _ = tx.send(Err(crate::err!("backend: {err}")));
+                        let _ = tx.send(Err(crate::err!("{BACKEND_ERROR_PREFIX}{err}")));
                     }
                 }
             }
         }
         self.served.fetch_add(local_served, Ordering::SeqCst);
         self.errors.fetch_add(local_errors, Ordering::SeqCst);
+        // Every job in the batch has been replied to (prediction,
+        // featurize error, or backend error), so release all of the
+        // batch's admission slots at once.
+        self.in_flight.fetch_sub(size, Ordering::SeqCst);
         // One flush per drained batch, and the batch size is recorded
         // exactly once — including for all-error batches — so
         // mean_batch_size stays truthful.
@@ -261,6 +286,9 @@ pub struct PredictionService {
     workers: Vec<std::thread::JoinHandle<()>>,
     served: Arc<AtomicU64>,
     errors: Arc<AtomicU64>,
+    in_flight: Arc<AtomicUsize>,
+    overload_rejected: Arc<AtomicU64>,
+    max_inflight: usize,
     cache: Option<Arc<PredictionCache>>,
     metrics: Arc<Mutex<MetricsInner>>,
 }
@@ -272,6 +300,7 @@ impl PredictionService {
         let queue = Arc::new(ShardedBatcher::new(n_workers, cfg.max_batch, cfg.max_wait));
         let served = Arc::new(AtomicU64::new(0));
         let errors = Arc::new(AtomicU64::new(0));
+        let in_flight = Arc::new(AtomicUsize::new(0));
         let cache = (cfg.cache_capacity > 0)
             .then(|| Arc::new(Mutex::new(TtlLru::new(cfg.cache_capacity, cfg.cache_ttl))));
         let metrics = Arc::new(Mutex::new(MetricsInner {
@@ -285,6 +314,7 @@ impl PredictionService {
                     model: Arc::clone(&model),
                     served: Arc::clone(&served),
                     errors: Arc::clone(&errors),
+                    in_flight: Arc::clone(&in_flight),
                     cache: cache.clone(),
                     metrics: Arc::clone(&metrics),
                 };
@@ -299,6 +329,9 @@ impl PredictionService {
             workers,
             served,
             errors,
+            in_flight,
+            overload_rejected: Arc::new(AtomicU64::new(0)),
+            max_inflight: cfg.max_inflight,
             cache,
             metrics,
         }
@@ -306,7 +339,30 @@ impl PredictionService {
 
     /// Submit a request; the receiver yields the prediction. A cache hit
     /// is answered inline — the batcher and the cost model never run.
+    /// Never refuses: in-process callers (experiments, load generators)
+    /// provide their own backpressure by waiting on the receivers.
     pub fn submit(&self, req: PredictRequest) -> Receiver<crate::Result<Prediction>> {
+        self.submit_inner(req, false)
+            .expect("unbounded submit never refuses")
+    }
+
+    /// Bounded-admission submit for the serving layer: when
+    /// [`ServiceConfig::max_inflight`] requests are already queued or
+    /// being predicted, the request is refused (`None`) instead of
+    /// growing the queue without bound, and the refusal is counted in
+    /// [`ServiceMetrics::overload_rejected`] so the network front door
+    /// can answer with a structured `overloaded` reply. Cache hits
+    /// bypass admission entirely — they are answered inline without
+    /// touching a queue.
+    pub fn try_submit(&self, req: PredictRequest) -> Option<Receiver<crate::Result<Prediction>>> {
+        self.submit_inner(req, true)
+    }
+
+    fn submit_inner(
+        &self,
+        req: PredictRequest,
+        bounded: bool,
+    ) -> Option<Receiver<crate::Result<Prediction>>> {
         let (tx, rx) = channel();
         let t0 = Instant::now();
         // The digest is cache-only work; skip it when caching is off
@@ -333,11 +389,33 @@ impl PredictionService {
                 self.served.fetch_add(1, Ordering::SeqCst);
                 self.metrics.lock().unwrap().latencies.push(latency);
                 let _ = tx.send(Ok(pred));
-                return rx;
+                return Some(rx);
             }
         }
+        if bounded && self.max_inflight > 0 {
+            // Reserve a slot atomically; the worker that answers this
+            // request releases it in `handle_batch`.
+            let admitted = self
+                .in_flight
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                    (n < self.max_inflight).then_some(n + 1)
+                });
+            if admitted.is_err() {
+                self.overload_rejected.fetch_add(1, Ordering::SeqCst);
+                return None;
+            }
+        } else {
+            self.in_flight.fetch_add(1, Ordering::SeqCst);
+        }
         self.queue.push((req, key, tx));
-        rx
+        Some(rx)
+    }
+
+    /// Requests currently queued or being predicted (cache hits are
+    /// answered inline and never counted). The serving layer's drain
+    /// gauge.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
     }
 
     /// Convenience: submit and wait.
@@ -367,6 +445,8 @@ impl PredictionService {
             cache_hits,
             cache_misses,
             steals: self.queue.steals(),
+            overload_rejected: self.overload_rejected.load(Ordering::SeqCst),
+            in_flight: self.in_flight.load(Ordering::SeqCst) as u64,
             p50_latency_s: stats::quantile(&inner.latencies, 0.5),
             p99_latency_s: stats::quantile(&inner.latencies, 0.99),
             mean_batch_size: stats::mean(&sizes),
@@ -386,6 +466,7 @@ impl PredictionService {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::testutil::GatedModel;
     use crate::sim::{DatasetKind, TrainConfig};
 
     /// A trivial backend for service-logic tests.
@@ -586,6 +667,79 @@ mod tests {
             "mean batch size must reflect drained batches, got {}",
             m.mean_batch_size
         );
+    }
+
+    #[test]
+    fn try_submit_refuses_at_max_inflight_and_counts_rejections() {
+        let (gate_tx, gate_rx) = channel();
+        let cfg = ServiceConfig {
+            workers: 1,
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            cache_capacity: 0,
+            max_inflight: 2,
+            ..ServiceConfig::default()
+        };
+        let svc = PredictionService::start(cfg, Arc::new(GatedModel::new(gate_rx)));
+        // Two admitted requests pin the in-flight gauge at the bound
+        // (the worker blocks in the gated backend, so neither resolves).
+        let rx1 = svc.try_submit(req(1, "lenet5", 8)).expect("slot 1 free");
+        let rx2 = svc.try_submit(req(2, "lenet5", 16)).expect("slot 2 free");
+        // Wait until both are truly in flight before probing the bound.
+        for _ in 0..200 {
+            if svc.in_flight() == 2 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(svc.in_flight(), 2);
+        assert!(
+            svc.try_submit(req(3, "lenet5", 32)).is_none(),
+            "third bounded submit must be refused"
+        );
+        // The unbounded path ignores the bound entirely.
+        let rx4 = svc.submit(req(4, "lenet5", 64));
+        // Open the gate; every admitted request completes.
+        drop(gate_tx);
+        rx1.recv().unwrap().unwrap();
+        rx2.recv().unwrap().unwrap();
+        rx4.recv().unwrap().unwrap();
+        let m = svc.shutdown();
+        assert_eq!(m.overload_rejected, 1);
+        assert_eq!(m.served, 3);
+        assert_eq!(m.in_flight, 0, "drained shutdown releases every slot");
+    }
+
+    #[test]
+    fn cache_hit_bypasses_admission_even_when_saturated() {
+        let (gate_tx, gate_rx) = channel();
+        let cfg = ServiceConfig {
+            workers: 1,
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            max_inflight: 1,
+            ..ServiceConfig::default()
+        };
+        let svc = PredictionService::start(cfg, Arc::new(GatedModel::new(gate_rx)));
+        // Fill the cache with one completed request.
+        let warm = svc.try_submit(req(1, "lenet5", 8)).expect("admitted");
+        gate_tx.send(()).unwrap();
+        warm.recv().unwrap().unwrap();
+        // Saturate the single in-flight slot with a *different* key.
+        let _held = svc.try_submit(req(2, "lenet5", 128)).expect("admitted");
+        for _ in 0..200 {
+            if svc.in_flight() == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // An identical request is a hit: answered inline, no slot needed.
+        let hit = svc.try_submit(req(3, "lenet5", 8)).expect("hits are never refused");
+        hit.recv().unwrap().unwrap();
+        drop(gate_tx);
+        let m = svc.shutdown();
+        assert_eq!(m.cache_hits, 1);
+        assert_eq!(m.overload_rejected, 0);
     }
 
     #[test]

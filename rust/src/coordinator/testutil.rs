@@ -1,0 +1,43 @@
+//! Shared [`CostModel`] test doubles, used by the coordinator's own
+//! tests and by the `net` layer's server/client tests — one definition
+//! instead of a copy per test module.
+
+use super::service::CostModel;
+use std::sync::mpsc::Receiver;
+use std::sync::Mutex;
+
+/// Fast deterministic backend: time = first feature (the batch
+/// feature), memory a flat GiB.
+pub struct EchoModel;
+
+impl CostModel for EchoModel {
+    fn predict_costs(&self, features: &[Vec<f64>]) -> crate::Result<Vec<(f64, f64)>> {
+        Ok(features.iter().map(|f| (f[0], 1e9)).collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "echo"
+    }
+}
+
+/// Blocks every predict call until the test pulses (or drops) the gate
+/// sender — for pinning requests in flight deterministically.
+pub struct GatedModel(Mutex<Receiver<()>>);
+
+impl GatedModel {
+    pub fn new(gate: Receiver<()>) -> GatedModel {
+        GatedModel(Mutex::new(gate))
+    }
+}
+
+impl CostModel for GatedModel {
+    fn predict_costs(&self, features: &[Vec<f64>]) -> crate::Result<Vec<(f64, f64)>> {
+        // A dropped sender unblocks immediately (drain path).
+        let _ = self.0.lock().unwrap().recv();
+        Ok(features.iter().map(|f| (f[0], 1e9)).collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+}

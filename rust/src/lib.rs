@@ -36,7 +36,10 @@
 //! * [`profiler`] — dataset collection sweeps.
 //! * [`runtime`] — PJRT loader/executor for `artifacts/*.hlo.txt`.
 //! * [`coordinator`] — the online prediction service (content-keyed
-//!   answer cache + sharded batcher + workers).
+//!   answer cache + sharded batcher + workers + bounded admission).
+//! * [`net`] — the TCP front door: `dnnabacus-wire-v1` length-prefixed
+//!   JSON protocol, server with admission control and graceful drain,
+//!   pipelining client.
 //! * [`scheduler`] — the §4.3 genetic-algorithm job scheduler.
 //! * [`experiments`] — one regeneration harness per paper figure/table.
 //! * [`bench_harness`] — criterion-less timing harness for `benches/`.
@@ -49,6 +52,7 @@ pub mod experiments;
 pub mod features;
 pub mod graph;
 pub mod ingest;
+pub mod net;
 pub mod predictor;
 pub mod profiler;
 pub mod runtime;

@@ -16,17 +16,28 @@
 //!   predict-spec    predict a user-defined network from a spec file
 //!                   (dnnabacus-spec-v1 JSON; see README "Model specs")
 //!   export-spec     write a zoo network as a spec file (--model, --out)
-//!   serve           run the prediction service demo (load generator)
+//!   serve           run the prediction service: in-process load
+//!                   generator by default, or a real TCP server with
+//!                   --listen ADDR (dnnabacus-wire-v1)
+//!   client          predict against a remote `serve --listen` server
+//!                   (--addr HOST:PORT, --model NAME or --spec FILE)
 //!   nsm-demo        print the NSM of a model (paper Figures 6-7)
 //!
 //! Common flags: --scale 0.35 --seed 42 --out dir --model vgg16
 //!               --batch 128 --dataset cifar100|mnist --device rtx2080
 //!               --framework pytorch|tensorflow --backend automl|mlp
-//!               --json (predict/predict-spec: machine-readable output)
+//!               --json (predict/predict-spec/client/serve --listen:
+//!               machine-readable output)
 //!
 //! `serve` flags: --requests 256 --workers 2 --cache-capacity 4096
 //!                --cache-ttl-ms 120000   (capacity 0 disables caching)
 //!                --specs DIR (mix spec files from DIR into the load)
+//!                --listen ADDR (serve TCP; port 0 = OS-assigned)
+//!                --max-inflight 256 --max-conns 64
+//!                --serve-requests N (answer N requests, drain, exit)
+//!
+//! `client` flags: --addr HOST:PORT --count N (pipelined repeats)
+//!                 plus the common config flags, forwarded per request
 //!
 //! `--backend mlp` needs the AOT artifacts (python/compile/aot.py) and a
 //! PJRT binding; this zero-dependency build ships a stub backend, so the
@@ -42,13 +53,15 @@ use dnnabacus::experiments::{self, Ctx};
 use dnnabacus::features::Nsm;
 use dnnabacus::graph::Graph;
 use dnnabacus::ingest::{self, ParsedSpec};
+use dnnabacus::net::{self, WireModel, WireRequest, WireResponse};
 use dnnabacus::predictor::{AutoMl, Target};
-use dnnabacus::sim::{DatasetKind, DeviceProfile, Framework, Optimizer, TrainConfig};
+use dnnabacus::sim::{DatasetKind, TrainConfig};
 use dnnabacus::util::cli::Args;
 use dnnabacus::util::error::Context as _;
 use dnnabacus::util::json::Json;
 use dnnabacus::util::prng::Rng;
 use dnnabacus::zoo;
+use std::io::Write as _;
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
@@ -63,6 +76,7 @@ fn main() {
         Some("predict-spec") => predict_spec(&args),
         Some("export-spec") => export_spec(&args),
         Some("serve") => serve(&args),
+        Some("client") => client(&args),
         Some("nsm-demo") => nsm_demo(&args),
         Some(cmd) => run_experiment(cmd, &args),
         None => {
@@ -153,25 +167,16 @@ fn train(args: &Args) -> dnnabacus::Result<()> {
     Ok(())
 }
 
+/// Interpret the config flags through the same strict single
+/// interpreter the wire protocol uses (`net::proto::config_from`), so
+/// `--dataset`/`--framework`/… mean exactly the same thing locally and
+/// remotely — unknown values are errors, not silent fallbacks.
 fn parse_config(args: &Args) -> dnnabacus::Result<TrainConfig> {
-    let dataset = match args.str_or("dataset", "cifar100").as_str() {
-        "mnist" => DatasetKind::Mnist,
-        _ => DatasetKind::Cifar100,
+    let dataset = match args.get("dataset") {
+        None => DatasetKind::Cifar100,
+        Some(name) => dnnabacus::net::proto::dataset_by_name(name)?,
     };
-    Ok(TrainConfig {
-        dataset,
-        batch: args.usize_or("batch", 128),
-        data_fraction: args.f64_or("data-fraction", 0.1),
-        epochs: args.usize_or("epochs", 1),
-        lr: args.f64_or("lr", 0.1),
-        optimizer: Optimizer::by_name(&args.str_or("optimizer", "sgd-momentum"))?,
-        framework: match args.str_or("framework", "pytorch").as_str() {
-            "tensorflow" => Framework::TfSim,
-            _ => Framework::TorchSim,
-        },
-        device: DeviceProfile::by_name(&args.str_or("device", "rtx2080"))?,
-        seed: args.u64_or("seed", 0),
-    })
+    dnnabacus::net::proto::config_from(&overrides_from(args)?, dataset)
 }
 
 fn predict(args: &Args) -> dnnabacus::Result<()> {
@@ -291,18 +296,26 @@ fn predict_graph(args: &Args, name: &str, g: &Graph, cfg: &TrainConfig) -> dnnab
     Ok(())
 }
 
-fn serve(args: &Args) -> dnnabacus::Result<()> {
-    let ctx = ctx_from(args);
-    let n_requests = args.usize_or("requests", 256);
+/// Service configuration shared by the load-generator and `--listen`
+/// modes of `serve`.
+fn service_config(args: &Args) -> ServiceConfig {
     let defaults = ServiceConfig::default();
-    let svc_cfg = ServiceConfig {
+    ServiceConfig {
         workers: args.usize_or("workers", defaults.workers),
         cache_capacity: args.usize_or("cache-capacity", defaults.cache_capacity),
         cache_ttl: Duration::from_millis(
             args.u64_or("cache-ttl-ms", defaults.cache_ttl.as_millis() as u64),
         ),
+        max_inflight: args.usize_or("max-inflight", defaults.max_inflight),
         ..defaults
-    };
+    }
+}
+
+/// Build the prediction backend (`--backend automl|mlp`).
+fn backend_from(
+    args: &Args,
+    ctx: &Ctx,
+) -> dnnabacus::Result<Arc<dyn dnnabacus::coordinator::CostModel>> {
     let backend: Arc<dyn dnnabacus::coordinator::CostModel> =
         match args.str_or("backend", "automl").as_str() {
             "mlp" => Arc::new(MlpBackend::spawn(ctx.seed)?),
@@ -314,6 +327,17 @@ fn serve(args: &Args) -> dnnabacus::Result<()> {
                 })
             }
         };
+    Ok(backend)
+}
+
+fn serve(args: &Args) -> dnnabacus::Result<()> {
+    if args.get("listen").is_some() {
+        return serve_listen(args);
+    }
+    let ctx = ctx_from(args);
+    let n_requests = args.usize_or("requests", 256);
+    let svc_cfg = service_config(args);
+    let backend = backend_from(args, &ctx)?;
     println!("backend: {}", backend.name());
     // Arc-wrapped so the zipf mix below clones a pointer per request,
     // not a graph.
@@ -370,6 +394,203 @@ fn serve(args: &Args) -> dnnabacus::Result<()> {
         m.cache_hits, m.cache_misses, m.batches, m.steals
     );
     Ok(())
+}
+
+/// `serve --listen ADDR`: host the prediction service behind the
+/// `dnnabacus-wire-v1` TCP front door. With `--serve-requests N` the
+/// server answers N requests, drains gracefully, prints a summary
+/// (JSON with `--json`) and exits — the CI smoke rides on that; without
+/// it the server runs until killed.
+fn serve_listen(args: &Args) -> dnnabacus::Result<()> {
+    let ctx = ctx_from(args);
+    let addr = match args.get("listen") {
+        // A bare `--listen` parses as the boolean "true".
+        None | Some("true") => "127.0.0.1:9377".to_string(),
+        Some(a) => a.to_string(),
+    };
+    let mut svc_cfg = service_config(args);
+    if args.get("max-inflight").is_none() {
+        // A network front door needs a bound by default; 0 would accept
+        // unboundedly and defeat the overload protocol.
+        svc_cfg.max_inflight = 256;
+    }
+    let backend = backend_from(args, &ctx)?;
+    println!("backend: {}", backend.name());
+    let net_cfg = net::ServerConfig {
+        max_conns: args.usize_or("max-conns", 64),
+        ..net::ServerConfig::default()
+    };
+    let svc = PredictionService::start(svc_cfg, backend);
+    let server = net::Server::start(&addr, net_cfg, svc)?;
+    println!("listening on {} ({})", server.local_addr(), net::WIRE_FORMAT);
+    // Stdout is block-buffered when redirected; the CI smoke greps this
+    // line from a file while the server is still running.
+    std::io::stdout().flush()?;
+    let budget = args
+        .get("serve-requests")
+        .map(|s| {
+            s.parse::<u64>()
+                .map_err(|_| dnnabacus::err!("--serve-requests must be an integer, got '{s}'"))
+        })
+        .transpose()?;
+    let Some(budget) = budget else {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    };
+    while server.answered() < budget {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let (wire, m) = server.shutdown();
+    if args.bool("json") {
+        let mut w = Json::obj();
+        w.set("connections", wire.connections)
+            .set("conns_rejected", wire.conns_rejected)
+            .set("requests", wire.requests)
+            .set("answered", wire.answered)
+            .set("overloaded", wire.overloaded)
+            .set("bad_requests", wire.bad_requests)
+            .set("io_errors", wire.io_errors);
+        let mut s = Json::obj();
+        s.set("served", m.served)
+            .set("errors", m.errors)
+            .set("cache_hits", m.cache_hits)
+            .set("cache_misses", m.cache_misses)
+            .set("overload_rejected", m.overload_rejected)
+            .set("p50_latency_s", m.p50_latency_s)
+            .set("p99_latency_s", m.p99_latency_s);
+        let mut o = Json::obj();
+        o.set("wire", w).set("service", s);
+        println!("{o}");
+    } else {
+        println!(
+            "answered {} requests ({} overloaded, {} bad) over {} connections",
+            wire.answered, wire.overloaded, wire.bad_requests, wire.connections
+        );
+        println!(
+            "cache: {} hits / {} misses | p50 {:.2} ms p99 {:.2} ms",
+            m.cache_hits,
+            m.cache_misses,
+            m.p50_latency_s * 1e3,
+            m.p99_latency_s * 1e3
+        );
+    }
+    Ok(())
+}
+
+/// `client`: predict a zoo name or a spec file against a remote
+/// `serve --listen` server. `--count N` pipelines N copies of the
+/// request over one connection (ids 0..N).
+fn client(args: &Args) -> dnnabacus::Result<()> {
+    let addr = args.get("addr").ok_or_else(|| {
+        dnnabacus::err!(
+            "usage: dnnabacus client --addr HOST:PORT [--model NAME | --spec FILE] \
+             [--count N] [--json] [config flags]"
+        )
+    })?;
+    let model = match (args.get("spec"), args.get("model")) {
+        // Mirror the wire protocol's strictness: an ambiguous request
+        // is an error, not a silent preference for one of the two.
+        (Some(_), Some(_)) => {
+            dnnabacus::bail!("pass either --model or --spec, not both")
+        }
+        (Some(path), None) => {
+            let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            WireModel::Spec(Json::parse(&text).with_context(|| format!("spec {path}"))?)
+        }
+        (None, explicit) => WireModel::Zoo(explicit.unwrap_or("vgg16").to_string()),
+    };
+    let overrides = overrides_from(args)?;
+    let count = args.usize_or("count", 1).max(1);
+    let requests: Vec<WireRequest> = (0..count)
+        .map(|i| WireRequest {
+            id: i as u64,
+            model: model.clone(),
+            overrides: overrides.clone(),
+        })
+        .collect();
+    let mut client = net::Client::connect(addr)?;
+    let t0 = std::time::Instant::now();
+    let responses = client.call_many(&requests)?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    let failed = responses.iter().filter(|r| !r.is_ok()).count();
+    if args.bool("json") {
+        if count == 1 {
+            println!("{}", responses[0].to_json());
+        } else {
+            let mut o = Json::obj();
+            o.set("count", count)
+                .set("elapsed_s", elapsed)
+                .set("failed", failed)
+                .set(
+                    "responses",
+                    Json::Arr(responses.iter().map(WireResponse::to_json).collect()),
+                );
+            println!("{o}");
+        }
+    } else {
+        for resp in &responses {
+            match resp {
+                WireResponse::Ok { model, prediction } => println!(
+                    "{model}: time {:.2}s, memory {:.0} MiB{} (service latency {:.2} ms)",
+                    prediction.time_s,
+                    prediction.memory_bytes / (1u64 << 20) as f64,
+                    if prediction.fits_device {
+                        ""
+                    } else {
+                        "  [would NOT fit device]"
+                    },
+                    prediction.latency_s * 1e3,
+                ),
+                WireResponse::Err { id, kind, message } => {
+                    eprintln!("request {id}: {} — {message}", kind.as_str())
+                }
+            }
+        }
+        if count > 1 {
+            println!(
+                "{count} requests in {elapsed:.3}s ({:.0} req/s), {failed} failed",
+                count as f64 / elapsed
+            );
+        }
+    }
+    dnnabacus::ensure!(failed == 0, "{failed}/{count} requests failed");
+    Ok(())
+}
+
+/// Config overrides for wire requests, from explicitly-passed CLI flags
+/// only — absent flags defer to the server's defaults (which lets a
+/// spec request inherit the dataset matching its declared geometry).
+fn overrides_from(args: &Args) -> dnnabacus::Result<Json> {
+    let mut o = Json::obj();
+    for key in ["dataset", "optimizer", "framework", "device"] {
+        if let Some(v) = args.get(key) {
+            o.set(key, v);
+        }
+    }
+    for key in ["batch", "epochs", "seed"] {
+        if let Some(v) = args.get(key) {
+            let n: u64 = v
+                .parse()
+                .map_err(|_| dnnabacus::err!("--{key} must be an integer, got '{v}'"))?;
+            // These ride as JSON numbers (f64); a value that would
+            // round silently is rejected up front.
+            dnnabacus::ensure!(
+                n <= dnnabacus::net::proto::MAX_SAFE_INT,
+                "--{key} {n} exceeds 2^53 and cannot ride the JSON wire format exactly"
+            );
+            o.set(key, n);
+        }
+    }
+    for (flag, field) in [("data-fraction", "data_fraction"), ("lr", "lr")] {
+        if let Some(v) = args.get(flag) {
+            let x: f64 = v
+                .parse()
+                .map_err(|_| dnnabacus::err!("--{flag} must be a number, got '{v}'"))?;
+            o.set(field, x);
+        }
+    }
+    Ok(o)
 }
 
 /// Load and compile every `*.json` spec under `--specs DIR` (empty when

@@ -1,0 +1,227 @@
+//! Blocking `dnnabacus-wire-v1` client with request pipelining and
+//! reconnect.
+//!
+//! The server answers a connection's requests strictly in order, so a
+//! client can pipeline: write a whole wave of frames, then read the
+//! wave of responses ([`Client::call_many`]) — one round trip instead
+//! of one per request. Predictions are idempotent (same content, same
+//! answer), so a connection-level failure during a single
+//! [`Client::call`] is retried once on a fresh connection before
+//! surfacing the error.
+
+use super::frame;
+use super::proto::{WireRequest, WireResponse};
+use crate::util::error::Context as _;
+use crate::util::json::Json;
+use std::net::TcpStream;
+
+/// Largest number of requests [`Client::call_many`] leaves unanswered
+/// on the wire at once. Writing an unbounded wave can deadlock on full
+/// TCP buffers — the server blocks writing responses nobody is reading
+/// while the client blocks writing requests nobody is reading — so a
+/// bigger wave is transparently split into windows this size, reading
+/// each window's responses before writing the next.
+pub const PIPELINE_WINDOW: usize = 64;
+
+/// A blocking wire client bound to one server address.
+pub struct Client {
+    addr: String,
+    stream: Option<TcpStream>,
+    /// Largest accepted response payload, in bytes.
+    pub max_frame: usize,
+}
+
+impl Client {
+    /// Connect eagerly, so configuration errors surface here rather
+    /// than on the first request.
+    pub fn connect(addr: &str) -> crate::Result<Client> {
+        let mut client = Client {
+            addr: addr.to_string(),
+            stream: None,
+            max_frame: frame::MAX_FRAME,
+        };
+        client.ensure_connected()?;
+        Ok(client)
+    }
+
+    /// The server address this client dials.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Drop the connection; the next send reconnects transparently.
+    pub fn disconnect(&mut self) {
+        self.stream = None;
+    }
+
+    fn ensure_connected(&mut self) -> crate::Result<&mut TcpStream> {
+        if self.stream.is_none() {
+            let stream = TcpStream::connect(&self.addr)
+                .with_context(|| format!("connecting to {}", self.addr))?;
+            let _ = stream.set_nodelay(true);
+            self.stream = Some(stream);
+        }
+        Ok(self.stream.as_mut().expect("connected above"))
+    }
+
+    /// Queue one request on the wire without waiting for its answer —
+    /// the pipelining half; pair with [`recv`](Self::recv) in order.
+    pub fn send(&mut self, req: &WireRequest) -> crate::Result<()> {
+        let body = req.to_json().to_string();
+        let stream = self.ensure_connected()?;
+        if let Err(e) = frame::write_frame(stream, body.as_bytes()) {
+            self.stream = None; // poisoned; reconnect on next use
+            return Err(crate::DnnError::from(e).context(format!("sending to {}", self.addr)));
+        }
+        Ok(())
+    }
+
+    /// Read the next response in pipeline order. Errors when no
+    /// connection is open — a fresh dial here would park forever
+    /// waiting for a response to a request that was never sent on it.
+    pub fn recv(&mut self) -> crate::Result<WireResponse> {
+        let max = self.max_frame;
+        let read = match self.stream.as_mut() {
+            None => crate::bail!(
+                "not connected to {} — send a request before receiving",
+                self.addr
+            ),
+            Some(stream) => frame::read_frame(stream, max),
+        };
+        let payload = match read {
+            Ok(Some(payload)) => payload,
+            Ok(None) => {
+                self.stream = None;
+                crate::bail!("server {} closed the connection", self.addr);
+            }
+            Err(e) => {
+                self.stream = None;
+                return Err(
+                    crate::DnnError::from(e).context(format!("reading from {}", self.addr))
+                );
+            }
+        };
+        let text = std::str::from_utf8(&payload)?;
+        WireResponse::from_json(&Json::parse(text)?)
+    }
+
+    /// Send one request and wait for its answer. On a connection-level
+    /// failure the round is retried once on a fresh connection
+    /// (predictions are idempotent), then the error surfaces.
+    pub fn call(&mut self, req: &WireRequest) -> crate::Result<WireResponse> {
+        match self.round(req) {
+            Ok(resp) => Ok(resp),
+            Err(first) => {
+                self.stream = None;
+                self.round(req)
+                    .map_err(|e| e.context(format!("after reconnect (first attempt: {first:#})")))
+            }
+        }
+    }
+
+    fn round(&mut self, req: &WireRequest) -> crate::Result<WireResponse> {
+        self.send(req)?;
+        let resp = self.recv()?;
+        crate::ensure!(
+            resp.id() == req.id,
+            "response id {} does not match request id {}",
+            resp.id(),
+            req.id
+        );
+        Ok(resp)
+    }
+
+    /// Pipeline a wave: write every request, then read every response
+    /// (split internally into [`PIPELINE_WINDOW`]-sized windows so an
+    /// arbitrarily large wave cannot deadlock on full TCP buffers).
+    /// The server answers in order per connection; each response id is
+    /// checked against its request to catch desyncs early. Like
+    /// [`call`](Self::call), a connection-level failure retries the
+    /// whole wave once on a fresh connection — safe because predictions
+    /// are idempotent and partial results are discarded on failure.
+    pub fn call_many(&mut self, reqs: &[WireRequest]) -> crate::Result<Vec<WireResponse>> {
+        match self.wave(reqs) {
+            Ok(out) => Ok(out),
+            Err(first) => {
+                self.stream = None;
+                self.wave(reqs)
+                    .map_err(|e| e.context(format!("after reconnect (first attempt: {first:#})")))
+            }
+        }
+    }
+
+    fn wave(&mut self, reqs: &[WireRequest]) -> crate::Result<Vec<WireResponse>> {
+        let mut out = Vec::with_capacity(reqs.len());
+        for window in reqs.chunks(PIPELINE_WINDOW) {
+            for req in window {
+                self.send(req)?;
+            }
+            for req in window {
+                let resp = self.recv()?;
+                crate::ensure!(
+                    resp.id() == req.id,
+                    "pipeline desync: response id {} for request id {}",
+                    resp.id(),
+                    req.id
+                );
+                out.push(resp);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::EchoModel;
+    use crate::coordinator::{PredictionService, ServiceConfig};
+    use crate::net::server::{Server, ServerConfig};
+    use std::sync::Arc;
+
+    fn server() -> Server {
+        let svc = PredictionService::start(ServiceConfig::default(), Arc::new(EchoModel));
+        Server::start("127.0.0.1:0", ServerConfig::default(), svc).unwrap()
+    }
+
+    #[test]
+    fn pipelined_wave_answers_in_order() {
+        let server = server();
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+        let reqs: Vec<WireRequest> = (0..20u64)
+            .map(|i| WireRequest::zoo(i, "lenet5").with("batch", 8 + i))
+            .collect();
+        let responses = client.call_many(&reqs).unwrap();
+        assert_eq!(responses.len(), 20);
+        for (req, resp) in reqs.iter().zip(&responses) {
+            assert_eq!(resp.id(), req.id);
+            assert!(resp.is_ok(), "{resp:?}");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn reconnects_after_explicit_disconnect() {
+        let server = server();
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+        assert!(client.call(&WireRequest::zoo(1, "lenet5")).unwrap().is_ok());
+        client.disconnect();
+        // The next call dials a fresh connection transparently.
+        assert!(client.call(&WireRequest::zoo(2, "lenet5")).unwrap().is_ok());
+        let (net, _) = server.shutdown();
+        assert_eq!(net.connections, 2, "second call used a new connection");
+        assert_eq!(net.answered, 2);
+    }
+
+    #[test]
+    fn connect_to_dead_port_reports_address() {
+        // Bind-then-drop guarantees an unused port.
+        let port = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let addr = format!("127.0.0.1:{port}");
+        let e = Client::connect(&addr).unwrap_err();
+        assert!(format!("{e:#}").contains(&addr), "{e:#}");
+    }
+}

@@ -1,0 +1,360 @@
+//! Length-prefixed framing for `dnnabacus-wire-v1`.
+//!
+//! A frame is a 4-byte big-endian payload length followed by that many
+//! bytes of UTF-8 JSON. The reader enforces a maximum payload length (a
+//! hostile or corrupt prefix must not make the server allocate
+//! gigabytes), distinguishes a clean EOF at a frame boundary from a
+//! truncated frame, and — for the server's drain loop — supports a
+//! bounded wait for the *start* of a frame that never gives up midway
+//! through one, so a poll timeout can never desynchronize the stream.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Default cap on a frame's payload bytes (4 MiB — a large hand-written
+/// model spec is tens of KiB; anything near this limit is hostile or
+/// corrupt).
+pub const MAX_FRAME: usize = 4 << 20;
+
+/// Cumulative deadline for the *remainder* of a frame once its first
+/// byte has arrived. A peer that starts a frame and stalls — or drips
+/// bytes to keep resetting a naive per-read timer — hits this instead
+/// of pinning its handler (and the server's graceful drain) forever.
+/// Generous, because a healthy peer sends a whole frame in one burst.
+pub const MID_FRAME_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Why a frame could not be read.
+#[derive(Debug)]
+pub enum FrameError {
+    /// The length prefix exceeds the reader's limit. The stream is
+    /// still byte-synchronized (only the prefix was consumed), so a
+    /// server can send a structured refusal before closing.
+    TooLarge { len: usize, max: usize },
+    /// The peer closed mid-frame: `got` of `want` bytes arrived.
+    Truncated { got: usize, want: usize },
+    Io(io::Error),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::TooLarge { len, max } => {
+                write!(f, "frame of {len} bytes exceeds the {max}-byte limit")
+            }
+            FrameError::Truncated { got, want } => {
+                write!(f, "truncated frame: got {got} of {want} bytes")
+            }
+            FrameError::Io(e) => write!(f, "socket error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<io::Error> for FrameError {
+    fn from(e: io::Error) -> FrameError {
+        FrameError::Io(e)
+    }
+}
+
+/// Write one frame (single buffered syscall, flushed).
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    if payload.len() > u32::MAX as usize {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            "payload too large to length-prefix",
+        ));
+    }
+    let mut buf = Vec::with_capacity(4 + payload.len());
+    buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    buf.extend_from_slice(payload);
+    w.write_all(&buf)?;
+    w.flush()
+}
+
+/// Read one frame. `Ok(None)` is a clean EOF at a frame boundary (the
+/// peer finished and closed); an EOF anywhere inside a frame is
+/// [`FrameError::Truncated`].
+pub fn read_frame(r: &mut impl Read, max: usize) -> Result<Option<Vec<u8>>, FrameError> {
+    let mut prefix = [0u8; 4];
+    match fill(r, &mut prefix)? {
+        Filled::Eof => return Ok(None),
+        Filled::Complete => {}
+    }
+    read_body(r, u32::from_be_bytes(prefix) as usize, max).map(Some)
+}
+
+/// Outcome of a bounded wait for a frame on a socket.
+pub enum Waited {
+    Frame(Vec<u8>),
+    /// No frame *started* within the window. Never reported mid-frame:
+    /// once the first prefix byte arrives the rest is read blocking.
+    TimedOut,
+    /// Clean EOF at a frame boundary.
+    Eof,
+}
+
+/// Like [`read_frame`], but gives up after `wait` if no frame has
+/// *started* — the server's drain loop polls with this so an idle
+/// connection can observe the shutdown flag. A frame in progress is
+/// read to completion under one *cumulative* [`MID_FRAME_DEADLINE`]
+/// for the whole frame: a healthy peer (one burst) never hits it, and
+/// a stalled or drip-feeding peer becomes an I/O error — the deadline
+/// cannot be reset by trickling bytes, so a slow-loris cannot pin a
+/// handler (or the server's graceful drain) indefinitely.
+pub fn read_frame_timeout(
+    stream: &mut TcpStream,
+    max: usize,
+    wait: Duration,
+) -> Result<Waited, FrameError> {
+    // A zero timeout means "no timeout" to the socket API; clamp up.
+    stream.set_read_timeout(Some(wait.max(Duration::from_millis(1))))?;
+    let mut first = [0u8; 1];
+    let n = loop {
+        match stream.read(&mut first) {
+            Ok(n) => break n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                return Ok(Waited::TimedOut);
+            }
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    };
+    if n == 0 {
+        return Ok(Waited::Eof);
+    }
+    // The frame has started; everything that follows shares one
+    // deadline, re-armed before every read with the *remaining* budget.
+    let deadline = std::time::Instant::now() + MID_FRAME_DEADLINE;
+    let mut rest = [0u8; 3];
+    match fill_by(stream, &mut rest, deadline)? {
+        Filled::Complete => {}
+        Filled::Eof => return Err(FrameError::Truncated { got: 1, want: 4 }),
+    }
+    let len = u32::from_be_bytes([first[0], rest[0], rest[1], rest[2]]) as usize;
+    if len > max {
+        return Err(FrameError::TooLarge { len, max });
+    }
+    let mut payload = vec![0u8; len];
+    match fill_by(stream, &mut payload, deadline)? {
+        Filled::Complete => Ok(Waited::Frame(payload)),
+        Filled::Eof => Err(FrameError::Truncated { got: 0, want: len }),
+    }
+}
+
+/// [`fill`] against an absolute deadline: the socket read timeout is
+/// re-armed with the remaining budget before every read, so partial
+/// progress cannot extend the total wait.
+fn fill_by(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    deadline: std::time::Instant,
+) -> Result<Filled, FrameError> {
+    let mut got = 0;
+    while got < buf.len() {
+        let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+        if remaining.is_zero() {
+            return Err(FrameError::Io(io::Error::new(
+                io::ErrorKind::TimedOut,
+                "mid-frame deadline exceeded",
+            )));
+        }
+        stream.set_read_timeout(Some(remaining.max(Duration::from_millis(1))))?;
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(Filled::Eof)
+                } else {
+                    Err(FrameError::Truncated {
+                        got,
+                        want: buf.len(),
+                    })
+                };
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                return Err(FrameError::Io(io::Error::new(
+                    io::ErrorKind::TimedOut,
+                    "mid-frame deadline exceeded",
+                )));
+            }
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(Filled::Complete)
+}
+
+/// Read and discard up to `n` bytes under the per-frame deadline —
+/// how the server disposes of an oversized frame's payload after
+/// sending its refusal, so the close that follows carries a clean FIN
+/// instead of an RST that would destroy the queued reply.
+pub fn discard(stream: &mut TcpStream, mut n: usize) -> Result<(), FrameError> {
+    let deadline = std::time::Instant::now() + MID_FRAME_DEADLINE;
+    let mut sink = [0u8; 8192];
+    while n > 0 {
+        let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+        if remaining.is_zero() {
+            return Err(FrameError::Io(io::Error::new(
+                io::ErrorKind::TimedOut,
+                "discard deadline exceeded",
+            )));
+        }
+        stream.set_read_timeout(Some(remaining.max(Duration::from_millis(1))))?;
+        let want = n.min(sink.len());
+        match stream.read(&mut sink[..want]) {
+            Ok(0) => return Ok(()), // peer gave up early; that's fine
+            Ok(read) => n -= read,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Length-check then read a frame body of `len` bytes.
+fn read_body(r: &mut impl Read, len: usize, max: usize) -> Result<Vec<u8>, FrameError> {
+    if len > max {
+        return Err(FrameError::TooLarge { len, max });
+    }
+    let mut payload = vec![0u8; len];
+    match fill(r, &mut payload)? {
+        Filled::Complete => Ok(payload),
+        Filled::Eof => Err(FrameError::Truncated { got: 0, want: len }),
+    }
+}
+
+enum Filled {
+    Complete,
+    /// EOF before the first byte of `buf`.
+    Eof,
+}
+
+/// Fill `buf` fully. EOF before the first byte is a clean `Eof`; EOF
+/// after at least one byte is [`FrameError::Truncated`].
+fn fill(r: &mut impl Read, buf: &mut [u8]) -> Result<Filled, FrameError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(Filled::Eof)
+                } else {
+                    Err(FrameError::Truncated {
+                        got,
+                        want: buf.len(),
+                    })
+                };
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(Filled::Complete)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn framed(payloads: &[&[u8]]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        for p in payloads {
+            write_frame(&mut buf, p).unwrap();
+        }
+        buf
+    }
+
+    #[test]
+    fn roundtrip_multiple_frames_then_clean_eof() {
+        let wire = framed(&[b"hello", b"", b"{\"a\":1}"]);
+        let mut r = Cursor::new(wire);
+        assert_eq!(read_frame(&mut r, MAX_FRAME).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r, MAX_FRAME).unwrap().unwrap(), b"");
+        assert_eq!(
+            read_frame(&mut r, MAX_FRAME).unwrap().unwrap(),
+            b"{\"a\":1}"
+        );
+        assert!(read_frame(&mut r, MAX_FRAME).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_prefix_and_body_are_errors_not_eof() {
+        // Two of four prefix bytes.
+        let mut r = Cursor::new(vec![0u8, 0]);
+        assert!(matches!(
+            read_frame(&mut r, MAX_FRAME),
+            Err(FrameError::Truncated { got: 2, want: 4 })
+        ));
+        // Complete prefix claiming 10 bytes, only 3 present.
+        let mut wire = 10u32.to_be_bytes().to_vec();
+        wire.extend_from_slice(b"abc");
+        let mut r = Cursor::new(wire);
+        assert!(matches!(
+            read_frame(&mut r, MAX_FRAME),
+            Err(FrameError::Truncated { got: 3, want: 10 })
+        ));
+    }
+
+    #[test]
+    fn oversized_prefix_is_rejected_without_allocating() {
+        let wire = u32::MAX.to_be_bytes().to_vec();
+        let mut r = Cursor::new(wire);
+        match read_frame(&mut r, 1024) {
+            Err(FrameError::TooLarge { len, max }) => {
+                assert_eq!(len, u32::MAX as usize);
+                assert_eq!(max, 1024);
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn at_limit_frame_is_accepted() {
+        let payload = vec![7u8; 64];
+        let wire = framed(&[&payload]);
+        let mut r = Cursor::new(wire);
+        assert_eq!(read_frame(&mut r, 64).unwrap().unwrap(), payload);
+    }
+
+    #[test]
+    fn errors_display_what_happened() {
+        let e = FrameError::TooLarge { len: 9, max: 4 };
+        assert!(e.to_string().contains("9 bytes"));
+        let e = FrameError::Truncated { got: 1, want: 4 };
+        assert!(e.to_string().contains("1 of 4"));
+    }
+
+    #[test]
+    fn socket_timeout_reports_timed_out_then_still_reads_frames() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut peer = std::net::TcpStream::connect(addr).unwrap();
+            // Give the reader time to observe an idle window first.
+            std::thread::sleep(Duration::from_millis(80));
+            write_frame(&mut peer, b"late").unwrap();
+            // Hold the connection open until the reader is done.
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let (mut conn, _) = listener.accept().unwrap();
+        assert!(matches!(
+            read_frame_timeout(&mut conn, MAX_FRAME, Duration::from_millis(10)).unwrap(),
+            Waited::TimedOut
+        ));
+        // Poll until the late frame lands; it must arrive intact.
+        let payload = loop {
+            match read_frame_timeout(&mut conn, MAX_FRAME, Duration::from_millis(20)).unwrap() {
+                Waited::Frame(p) => break p,
+                Waited::TimedOut => continue,
+                Waited::Eof => panic!("peer closed early"),
+            }
+        };
+        assert_eq!(payload, b"late");
+        writer.join().unwrap();
+    }
+}

@@ -1,0 +1,39 @@
+//! Network serving — the system's wire front door (`dnnabacus-wire-v1`).
+//!
+//! The paper's deployment story puts the predictor in front of
+//! datacenter schedulers, which means remote callers: this module turns
+//! the in-process [`crate::coordinator::PredictionService`] into a TCP
+//! service with zero dependencies (`std::net` plus the in-tree
+//! [`crate::util::threadpool`]):
+//!
+//! * [`frame`] — length-prefixed framing (4-byte big-endian length +
+//!   UTF-8 JSON payload), with a hard payload cap, truncation
+//!   detection, and a drain-safe bounded wait that never gives up
+//!   mid-frame;
+//! * [`proto`] — request/response bodies: a request carries a
+//!   [`proto::WireModel`] (zoo name or inline `dnnabacus-spec-v1`
+//!   document) plus config overrides under the CLI flag names; a
+//!   response is a prediction or a structured [`proto::ErrorKind`]
+//!   error (`bad_request`, `overloaded`, `shutting_down`, `internal`);
+//! * [`server`] — accept loop + per-connection handlers on a bounded
+//!   thread pool, two-level admission control (connection slots, then
+//!   the service's `max_inflight` bound — overload is an explicit
+//!   reply, never an unbounded queue), and graceful drain (stop
+//!   accepting, answer everything already on the wire, flush metrics);
+//! * [`client`] — a blocking client with request pipelining
+//!   ([`Client::call_many`] writes a wave, then reads the wave) and
+//!   one-shot reconnect on connection failure.
+//!
+//! CLI: `dnnabacus serve --listen ADDR` hosts it; `dnnabacus client`
+//! queries it. `examples/net_load.rs` drives it with the skewed mix the
+//! in-process load generators use, and `benches/net_throughput.rs`
+//! tracks req/s and latency percentiles over the real socket path.
+
+pub mod client;
+pub mod frame;
+pub mod proto;
+pub mod server;
+
+pub use client::Client;
+pub use proto::{ErrorKind, WireModel, WireRequest, WireResponse, WIRE_FORMAT};
+pub use server::{NetMetrics, Server, ServerConfig};

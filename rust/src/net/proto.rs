@@ -1,0 +1,540 @@
+//! `dnnabacus-wire-v1` request and response bodies.
+//!
+//! A request is one JSON object carrying the model reference — `model`
+//! (a zoo name) or `spec` (an inline `dnnabacus-spec-v1` document,
+//! compiled server-side) — plus optional config overrides under the
+//! same names and values as the `predict`/`predict-spec` CLI flags.
+//! Absent fields take the CLI defaults; a spec request without an
+//! explicit `dataset` resolves to the dataset matching the spec's
+//! declared input geometry, exactly like `predict-spec`.
+//!
+//! A response mirrors the CLI's `--json` output: `{"ok":true, "id":…,
+//! "model":…, "prediction":{…}}` on success, or `{"ok":false, "id":…,
+//! "error":{"kind":…, "message":…}}` with a machine-readable
+//! [`ErrorKind`]. Every decode failure maps to a `bad_request` reply on
+//! the server side — a malformed body must never cost a client its
+//! connection.
+
+use crate::coordinator::{ModelRef, PredictRequest, Prediction};
+use crate::ingest::ModelSpec;
+use crate::sim::{DatasetKind, DeviceProfile, Framework, Optimizer, TrainConfig};
+use crate::util::json::Json;
+
+/// Protocol identifier, carried in every request and response so a
+/// peer can reject a version it does not speak.
+pub const WIRE_FORMAT: &str = "dnnabacus-wire-v1";
+
+/// Largest integer JSON's f64 numbers carry exactly (2^53). `id` and
+/// `seed` ride the wire as JSON numbers, so values beyond this would
+/// silently round — they are rejected instead, here and in the CLI's
+/// flag parsing, to protect reproducibility.
+pub const MAX_SAFE_INT: u64 = 1 << 53;
+
+/// A non-negative integer that survives the f64 funnel exactly.
+fn exact_u64(x: f64) -> Option<u64> {
+    (x >= 0.0 && x.fract() == 0.0 && x <= MAX_SAFE_INT as f64).then_some(x as u64)
+}
+
+/// The model a wire request points at.
+#[derive(Debug, Clone)]
+pub enum WireModel {
+    /// Zoo model name (classic or unseen).
+    Zoo(String),
+    /// An inline `dnnabacus-spec-v1` document, compiled server-side.
+    Spec(Json),
+}
+
+/// A client-side request: id, model reference, config overrides.
+#[derive(Debug, Clone)]
+pub struct WireRequest {
+    pub id: u64,
+    pub model: WireModel,
+    /// A JSON object of config fields to override — same names and
+    /// values as the CLI flags (`dataset`, `batch`, `data_fraction`,
+    /// `epochs`, `lr`, `optimizer`, `framework`, `device`, `seed`).
+    pub overrides: Json,
+}
+
+impl WireRequest {
+    /// A zoo-name request with default config.
+    pub fn zoo(id: u64, name: &str) -> WireRequest {
+        WireRequest {
+            id,
+            model: WireModel::Zoo(name.to_string()),
+            overrides: Json::obj(),
+        }
+    }
+
+    /// An inline-spec request with default config.
+    pub fn spec(id: u64, spec: Json) -> WireRequest {
+        WireRequest {
+            id,
+            model: WireModel::Spec(spec),
+            overrides: Json::obj(),
+        }
+    }
+
+    /// Set one config override (same field names as the CLI flags).
+    pub fn with(mut self, key: &str, val: impl Into<Json>) -> WireRequest {
+        self.overrides.set(key, val);
+        self
+    }
+
+    /// Encode as the wire body.
+    pub fn to_json(&self) -> Json {
+        let mut o = match &self.overrides {
+            Json::Obj(_) => self.overrides.clone(),
+            _ => Json::obj(),
+        };
+        o.set("format", WIRE_FORMAT).set("id", self.id);
+        match &self.model {
+            WireModel::Zoo(name) => o.set("model", name.as_str()),
+            WireModel::Spec(spec) => o.set("spec", spec.clone()),
+        };
+        o
+    }
+}
+
+/// Decode and resolve a request body into a service-ready
+/// [`PredictRequest`]. Every failure here is client-caused — the server
+/// maps them to `bad_request` replies.
+pub fn parse_request(doc: &Json) -> crate::Result<PredictRequest> {
+    let Json::Obj(fields) = doc else {
+        crate::bail!("request must be a JSON object");
+    };
+    for key in fields.keys() {
+        if !matches!(
+            key.as_str(),
+            "format"
+                | "id"
+                | "model"
+                | "spec"
+                | "dataset"
+                | "batch"
+                | "data_fraction"
+                | "epochs"
+                | "lr"
+                | "optimizer"
+                | "framework"
+                | "device"
+                | "seed"
+        ) {
+            crate::bail!("unknown request field '{key}'");
+        }
+    }
+    if let Some(f) = doc.get("format") {
+        let f = f
+            .as_str()
+            .ok_or_else(|| crate::err!("'format' must be a string"))?;
+        if f != WIRE_FORMAT {
+            crate::bail!("unsupported wire format '{f}' (this server speaks \"{WIRE_FORMAT}\")");
+        }
+    }
+    let id = match doc.get("id") {
+        None => 0,
+        Some(j) => match j.as_f64().and_then(exact_u64) {
+            Some(id) => id,
+            None => crate::bail!("'id' must be a non-negative integer within 2^53"),
+        },
+    };
+    let explicit_dataset = match doc.get("dataset") {
+        None => None,
+        Some(j) => {
+            let name = j
+                .as_str()
+                .ok_or_else(|| crate::err!("'dataset' must be a string"))?;
+            Some(dataset_by_name(name)?)
+        }
+    };
+    let (model, dataset) = match (doc.get("model"), doc.get("spec")) {
+        (Some(_), Some(_)) => {
+            crate::bail!("request carries both 'model' and 'spec'; send exactly one")
+        }
+        (None, None) => {
+            crate::bail!("request needs a 'model' (zoo name) or a 'spec' (inline document)")
+        }
+        (Some(m), None) => {
+            let name = m
+                .as_str()
+                .ok_or_else(|| crate::err!("'model' must be a string (zoo name)"))?;
+            let dataset = explicit_dataset.unwrap_or(DatasetKind::Cifar100);
+            (ModelRef::Zoo(name.to_string()), dataset)
+        }
+        (None, Some(s)) => {
+            let parsed = ModelSpec::from_json(s)?
+                .compile()
+                .map_err(|e| e.context("compiling inline spec"))?;
+            let dataset = match explicit_dataset {
+                Some(d) => d,
+                None => parsed.matching_dataset().ok_or_else(|| {
+                    crate::err!(
+                        "spec '{}' declares a {}-channel {}x{} input that matches no dataset; \
+                         pass an explicit 'dataset'",
+                        parsed.name,
+                        parsed.input_channels(),
+                        parsed.input_hw(),
+                        parsed.input_hw()
+                    )
+                })?,
+            };
+            parsed.check_dataset(dataset)?;
+            (ModelRef::Spec(std::sync::Arc::new(parsed)), dataset)
+        }
+    };
+    let config = config_from(doc, dataset)?;
+    Ok(PredictRequest { id, model, config })
+}
+
+/// Apply config overrides (a JSON object keyed by the CLI flag names)
+/// over the `predict` defaults. The single interpreter of the config
+/// surface: the CLI's `parse_config` routes through here too, so a
+/// flag means exactly the same thing locally and over the wire —
+/// including rejecting unknown datasets/frameworks instead of silently
+/// falling back.
+pub fn config_from(doc: &Json, dataset: DatasetKind) -> crate::Result<TrainConfig> {
+    let mut cfg = TrainConfig::paper_default(dataset, 128);
+    if let Some(j) = doc.get("batch") {
+        cfg.batch = positive_usize(j, "batch")?;
+    }
+    if let Some(j) = doc.get("epochs") {
+        cfg.epochs = positive_usize(j, "epochs")?;
+    }
+    if let Some(j) = doc.get("seed") {
+        cfg.seed = match j.as_f64().and_then(exact_u64) {
+            Some(seed) => seed,
+            // Seeds ride the wire as JSON numbers; a value that would
+            // round must fail loudly — a silently-different seed breaks
+            // reproducibility with no visible symptom.
+            None => crate::bail!("'seed' must be a non-negative integer within 2^53"),
+        };
+    }
+    if let Some(j) = doc.get("data_fraction") {
+        let x = j
+            .as_f64()
+            .ok_or_else(|| crate::err!("'data_fraction' must be a number"))?;
+        if !(x > 0.0 && x <= 1.0) {
+            crate::bail!("'data_fraction' must be in (0, 1], got {x}");
+        }
+        cfg.data_fraction = x;
+    }
+    if let Some(j) = doc.get("lr") {
+        cfg.lr = j
+            .as_f64()
+            .ok_or_else(|| crate::err!("'lr' must be a number"))?;
+    }
+    if let Some(j) = doc.get("optimizer") {
+        let name = j
+            .as_str()
+            .ok_or_else(|| crate::err!("'optimizer' must be a string"))?;
+        cfg.optimizer = Optimizer::by_name(name)?;
+    }
+    if let Some(j) = doc.get("framework") {
+        let name = j
+            .as_str()
+            .ok_or_else(|| crate::err!("'framework' must be a string"))?;
+        cfg.framework = match name {
+            "pytorch" => Framework::TorchSim,
+            "tensorflow" => Framework::TfSim,
+            _ => crate::bail!("unknown framework '{name}' (pytorch|tensorflow)"),
+        };
+    }
+    if let Some(j) = doc.get("device") {
+        let name = j
+            .as_str()
+            .ok_or_else(|| crate::err!("'device' must be a string"))?;
+        cfg.device = DeviceProfile::by_name(name)?;
+    }
+    Ok(cfg)
+}
+
+/// Strict dataset-name lookup shared by the wire protocol and the CLI.
+pub fn dataset_by_name(name: &str) -> crate::Result<DatasetKind> {
+    match name {
+        "mnist" => Ok(DatasetKind::Mnist),
+        "cifar100" => Ok(DatasetKind::Cifar100),
+        _ => crate::bail!("unknown dataset '{name}' (mnist|cifar100)"),
+    }
+}
+
+fn positive_usize(j: &Json, field: &str) -> crate::Result<usize> {
+    match j.as_f64() {
+        Some(x) if x >= 1.0 && x.fract() == 0.0 && x < 1e15 => Ok(x as usize),
+        _ => crate::bail!("'{field}' must be a positive integer"),
+    }
+}
+
+/// Machine-readable error categories a client can branch on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The request was malformed or unsatisfiable (bad JSON, unknown
+    /// model, dataset mismatch); retrying unchanged will not help.
+    BadRequest,
+    /// Admission control refused the request; retry later or elsewhere.
+    Overloaded,
+    /// The server is draining; retry against another instance.
+    ShuttingDown,
+    /// The prediction backend failed; the request itself was fine.
+    Internal,
+}
+
+impl ErrorKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorKind::BadRequest => "bad_request",
+            ErrorKind::Overloaded => "overloaded",
+            ErrorKind::ShuttingDown => "shutting_down",
+            ErrorKind::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ErrorKind> {
+        match s {
+            "bad_request" => Some(ErrorKind::BadRequest),
+            "overloaded" => Some(ErrorKind::Overloaded),
+            "shutting_down" => Some(ErrorKind::ShuttingDown),
+            "internal" => Some(ErrorKind::Internal),
+            _ => None,
+        }
+    }
+}
+
+/// One response frame: a prediction, or a structured error.
+#[derive(Debug, Clone)]
+pub enum WireResponse {
+    Ok {
+        /// Display name of the predicted model (zoo or spec name).
+        model: String,
+        prediction: Prediction,
+    },
+    Err {
+        /// Echo of the request id (0 when the request was unparseable).
+        id: u64,
+        kind: ErrorKind,
+        message: String,
+    },
+}
+
+impl WireResponse {
+    pub fn ok(model: &str, prediction: Prediction) -> WireResponse {
+        WireResponse::Ok {
+            model: model.to_string(),
+            prediction,
+        }
+    }
+
+    pub fn error(id: u64, kind: ErrorKind, message: impl Into<String>) -> WireResponse {
+        WireResponse::Err {
+            id,
+            kind,
+            message: message.into(),
+        }
+    }
+
+    /// The request id this response answers.
+    pub fn id(&self) -> u64 {
+        match self {
+            WireResponse::Ok { prediction, .. } => prediction.id,
+            WireResponse::Err { id, .. } => *id,
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, WireResponse::Ok { .. })
+    }
+
+    /// Encode as the wire body.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("format", WIRE_FORMAT);
+        match self {
+            WireResponse::Ok { model, prediction } => {
+                let mut p = Json::obj();
+                p.set("time_s", prediction.time_s)
+                    .set("memory_bytes", prediction.memory_bytes)
+                    .set("fits_device", prediction.fits_device)
+                    .set("latency_s", prediction.latency_s);
+                o.set("ok", true)
+                    .set("id", prediction.id)
+                    .set("model", model.as_str())
+                    .set("prediction", p);
+            }
+            WireResponse::Err { id, kind, message } => {
+                let mut e = Json::obj();
+                e.set("kind", kind.as_str()).set("message", message.as_str());
+                o.set("ok", false).set("id", *id).set("error", e);
+            }
+        }
+        o
+    }
+
+    /// Client-side decode.
+    pub fn from_json(doc: &Json) -> crate::Result<WireResponse> {
+        let ok = doc
+            .get("ok")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| crate::err!("response missing boolean 'ok'"))?;
+        let id = doc.num("id")? as u64;
+        if ok {
+            let model = doc.str("model")?.to_string();
+            let p = doc
+                .get("prediction")
+                .ok_or_else(|| crate::err!("ok response missing 'prediction'"))?;
+            let prediction = Prediction {
+                id,
+                time_s: p.num("time_s")?,
+                memory_bytes: p.num("memory_bytes")?,
+                fits_device: p
+                    .get("fits_device")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| crate::err!("prediction missing boolean 'fits_device'"))?,
+                latency_s: p.num("latency_s")?,
+            };
+            Ok(WireResponse::Ok { model, prediction })
+        } else {
+            let e = doc
+                .get("error")
+                .ok_or_else(|| crate::err!("error response missing 'error'"))?;
+            let kind_str = e.str("kind")?;
+            let kind = ErrorKind::parse(kind_str)
+                .ok_or_else(|| crate::err!("unknown error kind '{kind_str}'"))?;
+            Ok(WireResponse::Err {
+                id,
+                kind,
+                message: e.str("message")?.to_string(),
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ingest;
+
+    #[test]
+    fn zoo_request_roundtrips_with_overrides() {
+        let req = WireRequest::zoo(7, "resnet18")
+            .with("batch", 64u64)
+            .with("dataset", "mnist")
+            .with("device", "rtx3090")
+            .with("framework", "tensorflow")
+            .with("optimizer", "adam")
+            .with("lr", 0.01)
+            .with("epochs", 3u64)
+            .with("data_fraction", 0.5)
+            .with("seed", 9u64);
+        let doc = Json::parse(&req.to_json().to_string()).unwrap();
+        let parsed = parse_request(&doc).unwrap();
+        assert_eq!(parsed.id, 7);
+        assert_eq!(parsed.model.name(), "resnet18");
+        assert_eq!(parsed.config.dataset, DatasetKind::Mnist);
+        assert_eq!(parsed.config.batch, 64);
+        assert_eq!(parsed.config.device.name, "rtx3090");
+        assert_eq!(parsed.config.framework, Framework::TfSim);
+        assert_eq!(parsed.config.optimizer, Optimizer::Adam);
+        assert_eq!(parsed.config.lr, 0.01);
+        assert_eq!(parsed.config.epochs, 3);
+        assert_eq!(parsed.config.data_fraction, 0.5);
+        assert_eq!(parsed.config.seed, 9);
+    }
+
+    #[test]
+    fn defaults_match_the_cli() {
+        let doc = WireRequest::zoo(1, "vgg16").to_json();
+        let parsed = parse_request(&doc).unwrap();
+        let expect = TrainConfig::paper_default(DatasetKind::Cifar100, 128);
+        assert_eq!(parsed.config.batch, expect.batch);
+        assert_eq!(parsed.config.dataset, expect.dataset);
+        assert_eq!(parsed.config.device.name, expect.device.name);
+    }
+
+    #[test]
+    fn spec_request_compiles_and_picks_matching_dataset() {
+        let spec = ingest::spec_for_zoo("lenet5", 1, 10).unwrap().to_json();
+        let doc = WireRequest::spec(3, spec).with("batch", 32u64).to_json();
+        let parsed = parse_request(&doc).unwrap();
+        assert_eq!(parsed.id, 3);
+        // A 1-channel spec resolves to MNIST without an explicit flag.
+        assert_eq!(parsed.config.dataset, DatasetKind::Mnist);
+        assert!(parsed.featurize().is_ok());
+    }
+
+    #[test]
+    fn rejects_malformed_requests_with_reasons() {
+        for (text, needle) in [
+            (r#"[1,2]"#, "must be a JSON object"),
+            (r#"{"model":"a","spec":{}}"#, "both 'model' and 'spec'"),
+            (r#"{"id":1}"#, "needs a 'model'"),
+            (r#"{"model":"a","bogus":1}"#, "unknown request field"),
+            (r#"{"model":"a","batch":0}"#, "positive integer"),
+            (r#"{"model":"a","batch":1.5}"#, "positive integer"),
+            (r#"{"model":"a","dataset":"svhn"}"#, "unknown dataset"),
+            (r#"{"model":"a","device":"tpu"}"#, "unknown device"),
+            (r#"{"model":"a","framework":"jax"}"#, "unknown framework"),
+            (r#"{"model":"a","data_fraction":2}"#, "(0, 1]"),
+            (r#"{"model":"a","id":-1}"#, "non-negative"),
+            (r#"{"model":"a","id":1.5}"#, "integer"),
+            // 2^54: JSON numbers are f64, so integers past 2^53 would
+            // silently round — they must be rejected instead.
+            (r#"{"model":"a","seed":18014398509481984}"#, "2^53"),
+            (r#"{"model":"a","format":"v9"}"#, "unsupported wire format"),
+            (r#"{"spec":{"format":"nope"}}"#, "format"),
+        ] {
+            let doc = Json::parse(text).unwrap();
+            let e = parse_request(&doc).unwrap_err().to_string();
+            assert!(e.contains(needle), "for {text}: {e}");
+        }
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        let ok = WireResponse::ok(
+            "resnet18",
+            Prediction {
+                id: 11,
+                time_s: 1.5,
+                memory_bytes: 2e9,
+                fits_device: true,
+                latency_s: 0.003,
+            },
+        );
+        let back = WireResponse::from_json(&Json::parse(&ok.to_json().to_string()).unwrap());
+        match back.unwrap() {
+            WireResponse::Ok { model, prediction } => {
+                assert_eq!(model, "resnet18");
+                assert_eq!(prediction.id, 11);
+                assert_eq!(prediction.time_s, 1.5);
+                assert_eq!(prediction.memory_bytes, 2e9);
+                assert!(prediction.fits_device);
+            }
+            other => panic!("expected Ok, got {other:?}"),
+        }
+        let err = WireResponse::error(4, ErrorKind::Overloaded, "busy");
+        assert_eq!(err.id(), 4);
+        assert!(!err.is_ok());
+        let back = WireResponse::from_json(&Json::parse(&err.to_json().to_string()).unwrap());
+        match back.unwrap() {
+            WireResponse::Err { id, kind, message } => {
+                assert_eq!(id, 4);
+                assert_eq!(kind, ErrorKind::Overloaded);
+                assert_eq!(message, "busy");
+            }
+            other => panic!("expected Err, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_kinds_roundtrip_and_reject_unknown() {
+        for kind in [
+            ErrorKind::BadRequest,
+            ErrorKind::Overloaded,
+            ErrorKind::ShuttingDown,
+            ErrorKind::Internal,
+        ] {
+            assert_eq!(ErrorKind::parse(kind.as_str()), Some(kind));
+        }
+        assert_eq!(ErrorKind::parse("teapot"), None);
+        let text = r#"{"ok":false,"id":1,"error":{"kind":"teapot","message":"x"}}"#;
+        assert!(WireResponse::from_json(&Json::parse(text).unwrap()).is_err());
+    }
+}

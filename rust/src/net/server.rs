@@ -1,0 +1,734 @@
+//! The TCP front door: accept connections on a thread pool, decode
+//! framed requests, admit them into the [`PredictionService`], and
+//! answer with framed responses.
+//!
+//! Overload policy is explicit at both levels instead of an unbounded
+//! queue anywhere: connections beyond the pool's `max_conns` slots get
+//! one `overloaded` reply and are closed; requests beyond the service's
+//! `max_inflight` bound get an `overloaded` reply on a connection that
+//! stays open. Malformed bodies get `bad_request` replies and keep
+//! their connection — only a frame that desynchronizes the stream
+//! (oversized or truncated) costs the client its connection.
+//!
+//! Shutdown is a graceful drain: stop accepting, let every connection
+//! finish the requests it has already sent (an actively pipelining
+//! connection keeps being served until it goes idle for one poll
+//! window), then stop the service — which answers everything still
+//! queued — and flush both metric sets to the caller.
+
+use super::frame::{self, FrameError, Waited};
+use super::proto::{self, ErrorKind, WireResponse};
+use crate::coordinator::{PredictionService, Prediction, ServiceMetrics};
+use crate::util::error::Context as _;
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+use std::collections::VecDeque;
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Most predictions one connection keeps in flight inside the service
+/// at once. Pipelined frames are decoded and submitted as they arrive
+/// (up to this window) rather than strictly one at a time, so a single
+/// pipelining client still feeds the batcher — and total in-flight
+/// (`max_conns × window`) can genuinely exceed `max_inflight`, making
+/// service-level admission a real protection, not dead code. Responses
+/// are always written in request order.
+pub const CONN_PIPELINE: usize = 32;
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Simultaneous connections served, one pool thread each. Excess
+    /// connections are refused with one `overloaded` reply.
+    pub max_conns: usize,
+    /// Largest accepted request payload, in bytes.
+    pub max_frame: usize,
+    /// How often an idle connection handler re-checks the drain flag —
+    /// also the quiet window a draining server grants before closing an
+    /// idle connection.
+    pub poll: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            max_conns: 64,
+            max_frame: frame::MAX_FRAME,
+            poll: Duration::from_millis(25),
+        }
+    }
+}
+
+/// Wire-level counters (the service keeps its own in
+/// [`ServiceMetrics`]).
+#[derive(Debug, Clone, Default)]
+pub struct NetMetrics {
+    /// Connections accepted (including ones later refused a slot).
+    pub connections: u64,
+    /// Connections refused because all `max_conns` slots were taken.
+    pub conns_rejected: u64,
+    /// Frames read as request candidates (well-formed or not).
+    pub requests: u64,
+    /// Responses written, success or structured error.
+    pub answered: u64,
+    /// Requests refused by service admission control.
+    pub overloaded: u64,
+    /// Requests answered with `bad_request` (bad JSON/fields/frames).
+    pub bad_requests: u64,
+    /// Connections dropped on truncated frames or socket errors.
+    pub io_errors: u64,
+}
+
+struct Shared {
+    svc: PredictionService,
+    cfg: ServerConfig,
+    draining: AtomicBool,
+    active_conns: AtomicUsize,
+    connections: AtomicU64,
+    conns_rejected: AtomicU64,
+    requests: AtomicU64,
+    answered: AtomicU64,
+    overloaded: AtomicU64,
+    bad_requests: AtomicU64,
+    io_errors: AtomicU64,
+}
+
+impl Shared {
+    fn net_metrics(&self) -> NetMetrics {
+        NetMetrics {
+            connections: self.connections.load(Ordering::SeqCst),
+            conns_rejected: self.conns_rejected.load(Ordering::SeqCst),
+            requests: self.requests.load(Ordering::SeqCst),
+            answered: self.answered.load(Ordering::SeqCst),
+            overloaded: self.overloaded.load(Ordering::SeqCst),
+            bad_requests: self.bad_requests.load(Ordering::SeqCst),
+            io_errors: self.io_errors.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// A listening `dnnabacus-wire-v1` server in front of a
+/// [`PredictionService`].
+pub struct Server {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    pool: Arc<ThreadPool>,
+    accept: JoinHandle<()>,
+}
+
+impl Server {
+    /// Bind `addr` (use port 0 for an OS-assigned port, reported by
+    /// [`local_addr`](Self::local_addr)) and start serving `svc`.
+    pub fn start(addr: &str, cfg: ServerConfig, svc: PredictionService) -> crate::Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            svc,
+            cfg,
+            draining: AtomicBool::new(false),
+            active_conns: AtomicUsize::new(0),
+            connections: AtomicU64::new(0),
+            conns_rejected: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            answered: AtomicU64::new(0),
+            overloaded: AtomicU64::new(0),
+            bad_requests: AtomicU64::new(0),
+            io_errors: AtomicU64::new(0),
+        });
+        let pool = Arc::new(ThreadPool::new(shared.cfg.max_conns));
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let pool = Arc::clone(&pool);
+            std::thread::Builder::new()
+                .name("net-accept".into())
+                .spawn(move || accept_loop(listener, shared, pool))?
+        };
+        Ok(Server {
+            addr: local,
+            shared,
+            pool,
+            accept,
+        })
+    }
+
+    /// The bound address (with the OS-assigned port resolved).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Responses written so far — lets a caller serve a fixed request
+    /// budget and then drain.
+    pub fn answered(&self) -> u64 {
+        self.shared.answered.load(Ordering::SeqCst)
+    }
+
+    /// Snapshot of the wire-level counters.
+    pub fn net_metrics(&self) -> NetMetrics {
+        self.shared.net_metrics()
+    }
+
+    /// Graceful drain: stop accepting, finish every request already on
+    /// the wire, shut the service down (answering anything still
+    /// queued), and return both metric sets.
+    pub fn shutdown(self) -> (NetMetrics, ServiceMetrics) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        // Poke the blocking accept() so it observes the flag. A
+        // wildcard bind (0.0.0.0 / [::]) is not a connectable address
+        // on every platform — dial the matching loopback instead.
+        let mut poke = self.addr;
+        if poke.ip().is_unspecified() {
+            poke.set_ip(match poke.ip() {
+                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect_timeout(&poke, Duration::from_secs(1));
+        let _ = self.accept.join();
+        // The accept thread's pool handle is gone; dropping the last
+        // one joins every connection handler (each exits once its
+        // connection goes idle for a poll window or closes).
+        if let Ok(pool) = Arc::try_unwrap(self.pool) {
+            drop(pool);
+        }
+        match Arc::try_unwrap(self.shared) {
+            Ok(shared) => {
+                let net = shared.net_metrics();
+                (net, shared.svc.shutdown())
+            }
+            // Unreachable in practice (all clones died with the
+            // threads); degrade to a metrics sample rather than panic.
+            Err(shared) => (shared.net_metrics(), shared.svc.metrics()),
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>, pool: Arc<ThreadPool>) {
+    for conn in listener.incoming() {
+        if shared.draining.load(Ordering::SeqCst) {
+            break; // the shutdown poke (or any racing dial) lands here
+        }
+        let Ok(stream) = conn else { continue };
+        shared.connections.fetch_add(1, Ordering::SeqCst);
+        // Connection-slot admission: more simultaneous connections than
+        // pool threads would queue unboundedly inside the pool — refuse
+        // explicitly instead.
+        let slot = shared
+            .active_conns
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                (n < shared.cfg.max_conns).then_some(n + 1)
+            });
+        if slot.is_err() {
+            shared.conns_rejected.fetch_add(1, Ordering::SeqCst);
+            refuse(stream);
+            continue;
+        }
+        let shared = Arc::clone(&shared);
+        pool.execute(move || {
+            serve_conn(stream, &shared);
+            shared.active_conns.fetch_sub(1, Ordering::SeqCst);
+        });
+    }
+}
+
+/// One `overloaded` reply on the accept thread, then close. The write
+/// deadline keeps a non-reading peer from stalling the accept loop.
+fn refuse(mut stream: TcpStream) {
+    let _ = stream.set_write_timeout(Some(frame::MID_FRAME_DEADLINE));
+    let body = WireResponse::error(
+        0,
+        ErrorKind::Overloaded,
+        "connection limit reached; retry later",
+    )
+    .to_json()
+    .to_string();
+    let _ = frame::write_frame(&mut stream, body.as_bytes());
+}
+
+/// One enqueued reply, kept strictly in request order.
+enum PendingReply {
+    /// Resolved at decode/admission time (bad request, overloaded).
+    Ready(WireResponse),
+    /// Submitted into the service; resolved when the worker answers.
+    Wait {
+        id: u64,
+        model: String,
+        rx: Receiver<crate::Result<Prediction>>,
+    },
+}
+
+/// Serve one connection until it closes, errors, or the drain flag is
+/// up and the connection has gone idle for one poll window. Pipelined
+/// frames are decoded and submitted as they arrive, up to
+/// [`CONN_PIPELINE`] in flight; responses are written in request
+/// order, and requests already read are always answered before exit.
+fn serve_conn(mut stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_nodelay(true);
+    // Writes get the same deadline as mid-frame reads: a peer that
+    // pipelines requests but never reads its responses would otherwise
+    // pin this handler in a timeout-less write_all once the socket
+    // buffers fill — permanently eating a connection slot and hanging
+    // the graceful drain.
+    let _ = stream.set_write_timeout(Some(frame::MID_FRAME_DEADLINE));
+    let mut pending: VecDeque<PendingReply> = VecDeque::new();
+    loop {
+        // With replies outstanding, only peek briefly for the next
+        // frame before flushing; when fully caught up, camp on the
+        // configured poll window.
+        let wait = if pending.is_empty() {
+            shared.cfg.poll
+        } else {
+            Duration::from_millis(1)
+        };
+        match frame::read_frame_timeout(&mut stream, shared.cfg.max_frame, wait) {
+            Ok(Waited::Frame(payload)) => {
+                shared.requests.fetch_add(1, Ordering::SeqCst);
+                pending.push_back(enqueue(shared, &payload));
+                let full = pending.len() >= CONN_PIPELINE;
+                if full && !flush_one(&mut stream, shared, &mut pending) {
+                    return;
+                }
+            }
+            Ok(Waited::TimedOut) => {
+                if !pending.is_empty() {
+                    if !flush_one(&mut stream, shared, &mut pending) {
+                        return;
+                    }
+                } else if shared.draining.load(Ordering::SeqCst) {
+                    return; // idle while draining — close
+                }
+            }
+            Ok(Waited::Eof) => {
+                // Answer everything already accepted, then close.
+                flush_all(&mut stream, shared, &mut pending);
+                return;
+            }
+            Err(FrameError::TooLarge { len, max }) => {
+                // The stream is still synchronized (only the prefix was
+                // consumed) but the payload is unread, so the only safe
+                // continuation is refuse-and-close — after answering
+                // everything accepted before it, and after draining the
+                // unread payload: closing with received-but-unread
+                // bytes sends an RST that would destroy the queued
+                // refusal before the client could read it.
+                shared.bad_requests.fetch_add(1, Ordering::SeqCst);
+                pending.push_back(PendingReply::Ready(WireResponse::error(
+                    0,
+                    ErrorKind::BadRequest,
+                    format!("frame of {len} bytes exceeds the {max}-byte limit"),
+                )));
+                if flush_all(&mut stream, shared, &mut pending) {
+                    let _ = frame::discard(&mut stream, len);
+                }
+                return;
+            }
+            Err(_) => {
+                // Truncated frame or socket error. Nothing sane to
+                // reply to for the broken frame itself, but requests
+                // accepted before it still get best-effort answers.
+                shared.io_errors.fetch_add(1, Ordering::SeqCst);
+                flush_all(&mut stream, shared, &mut pending);
+                return;
+            }
+        }
+    }
+}
+
+/// Decode and admit one request, without waiting for its prediction.
+/// Every failure mode maps to a structured error reply — a malformed
+/// body must never cost the client its connection.
+fn enqueue(shared: &Shared, payload: &[u8]) -> PendingReply {
+    let doc = match std::str::from_utf8(payload)
+        .map_err(crate::DnnError::from)
+        .and_then(Json::parse)
+    {
+        Ok(doc) => doc,
+        Err(e) => {
+            shared.bad_requests.fetch_add(1, Ordering::SeqCst);
+            return PendingReply::Ready(WireResponse::error(
+                0,
+                ErrorKind::BadRequest,
+                format!("{e:#}"),
+            ));
+        }
+    };
+    // Best-effort id so even a rejected request echoes the id its
+    // client sent — otherwise one bad field would desync a pipeline.
+    let id = doc
+        .get("id")
+        .and_then(Json::as_f64)
+        .filter(|x| *x >= 0.0)
+        .map(|x| x as u64)
+        .unwrap_or(0);
+    let req = match proto::parse_request(&doc) {
+        Ok(req) => req,
+        Err(e) => {
+            shared.bad_requests.fetch_add(1, Ordering::SeqCst);
+            return PendingReply::Ready(WireResponse::error(
+                id,
+                ErrorKind::BadRequest,
+                format!("{e:#}"),
+            ));
+        }
+    };
+    let model = req.model.name().to_string();
+    match shared.svc.try_submit(req) {
+        Some(rx) => PendingReply::Wait { id, model, rx },
+        None => {
+            shared.overloaded.fetch_add(1, Ordering::SeqCst);
+            PendingReply::Ready(WireResponse::error(
+                id,
+                ErrorKind::Overloaded,
+                "service at max in-flight requests; retry later",
+            ))
+        }
+    }
+}
+
+/// Resolve and write the oldest pending reply; `false` when the peer
+/// is unreachable.
+fn flush_one(
+    stream: &mut TcpStream,
+    shared: &Shared,
+    pending: &mut VecDeque<PendingReply>,
+) -> bool {
+    let Some(head) = pending.pop_front() else {
+        return true;
+    };
+    let response = match head {
+        PendingReply::Ready(response) => response,
+        PendingReply::Wait { id, model, rx } => match rx.recv() {
+            Ok(Ok(prediction)) => WireResponse::ok(&model, prediction),
+            Ok(Err(e)) => {
+                // Worker-side failures are client-caused (unknown
+                // model, dataset mismatch) except backend faults, which
+                // the service tags with the shared prefix constant.
+                let kind = if e
+                    .root_cause()
+                    .starts_with(crate::coordinator::service::BACKEND_ERROR_PREFIX)
+                {
+                    ErrorKind::Internal
+                } else {
+                    shared.bad_requests.fetch_add(1, Ordering::SeqCst);
+                    ErrorKind::BadRequest
+                };
+                WireResponse::error(id, kind, format!("{e:#}"))
+            }
+            Err(_) => WireResponse::error(
+                id,
+                ErrorKind::ShuttingDown,
+                "service shut down before answering",
+            ),
+        },
+    };
+    respond(stream, shared, response)
+}
+
+/// Flush every pending reply in order; `false` on the first write
+/// failure (remaining replies have no reachable reader).
+fn flush_all(
+    stream: &mut TcpStream,
+    shared: &Shared,
+    pending: &mut VecDeque<PendingReply>,
+) -> bool {
+    while !pending.is_empty() {
+        if !flush_one(stream, shared, pending) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Write one response frame; `false` when the peer is unreachable.
+fn respond(stream: &mut TcpStream, shared: &Shared, response: WireResponse) -> bool {
+    let body = response.to_json().to_string();
+    match frame::write_frame(stream, body.as_bytes()) {
+        Ok(()) => {
+            shared.answered.fetch_add(1, Ordering::SeqCst);
+            true
+        }
+        Err(_) => {
+            shared.io_errors.fetch_add(1, Ordering::SeqCst);
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::{EchoModel, GatedModel};
+    use crate::coordinator::ServiceConfig;
+    use crate::net::client::Client;
+    use crate::net::proto::WireRequest;
+    use std::io::Write as _;
+    use std::sync::mpsc::channel;
+
+    fn start(svc_cfg: ServiceConfig, net_cfg: ServerConfig) -> Server {
+        let svc = PredictionService::start(svc_cfg, Arc::new(EchoModel));
+        Server::start("127.0.0.1:0", net_cfg, svc).unwrap()
+    }
+
+    fn default_server() -> Server {
+        start(ServiceConfig::default(), ServerConfig::default())
+    }
+
+    #[test]
+    fn zoo_and_spec_requests_roundtrip_over_tcp() {
+        let server = default_server();
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+        let zoo = client
+            .call(&WireRequest::zoo(1, "resnet18").with("batch", 64u64))
+            .unwrap();
+        match zoo {
+            WireResponse::Ok { model, prediction } => {
+                assert_eq!(model, "resnet18");
+                assert_eq!(prediction.id, 1);
+                assert!(prediction.time_s > 0.0);
+            }
+            other => panic!("expected Ok, got {other:?}"),
+        }
+        let spec = crate::ingest::spec_for_zoo("lenet5", 1, 10).unwrap().to_json();
+        let resp = client.call(&WireRequest::spec(2, spec)).unwrap();
+        assert!(resp.is_ok(), "{resp:?}");
+        let (net, svc) = server.shutdown();
+        assert_eq!(net.answered, 2);
+        assert_eq!(net.bad_requests, 0);
+        assert_eq!(svc.errors, 0);
+    }
+
+    #[test]
+    fn malformed_json_gets_structured_error_and_keeps_connection() {
+        let server = default_server();
+        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+        frame::write_frame(&mut stream, b"{not json").unwrap();
+        let reply = frame::read_frame(&mut stream, frame::MAX_FRAME)
+            .unwrap()
+            .expect("a structured reply, not a hangup");
+        let doc = Json::parse(std::str::from_utf8(&reply).unwrap()).unwrap();
+        assert_eq!(doc.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(doc.get("error").unwrap().str("kind").unwrap(), "bad_request");
+        // Same connection, now a valid request: must still be served.
+        let body = WireRequest::zoo(5, "lenet5").to_json().to_string();
+        frame::write_frame(&mut stream, body.as_bytes()).unwrap();
+        let reply = frame::read_frame(&mut stream, frame::MAX_FRAME)
+            .unwrap()
+            .expect("connection survived the bad request");
+        let doc = Json::parse(std::str::from_utf8(&reply).unwrap()).unwrap();
+        assert_eq!(doc.get("ok"), Some(&Json::Bool(true)));
+        let (net, _) = server.shutdown();
+        assert_eq!(net.bad_requests, 1);
+        assert_eq!(net.answered, 2);
+    }
+
+    #[test]
+    fn unknown_model_is_bad_request_reply_not_disconnect() {
+        let server = default_server();
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+        match client.call(&WireRequest::zoo(9, "gpt-17")).unwrap() {
+            WireResponse::Err { id, kind, message } => {
+                assert_eq!(id, 9);
+                assert_eq!(kind, ErrorKind::BadRequest);
+                assert!(message.contains("gpt-17"), "{message}");
+            }
+            other => panic!("expected Err, got {other:?}"),
+        }
+        // The connection survives a rejected request.
+        assert!(client.call(&WireRequest::zoo(10, "lenet5")).unwrap().is_ok());
+        server.shutdown();
+    }
+
+    #[test]
+    fn oversized_frame_gets_refusal_then_close() {
+        let cfg = ServerConfig {
+            max_frame: 1024,
+            ..ServerConfig::default()
+        };
+        let server = start(ServiceConfig::default(), cfg);
+        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+        // A full 5000-byte frame against the 1024-byte limit. The
+        // server must drain the payload it refuses — otherwise its
+        // close() RSTs the connection and destroys the queued refusal
+        // before the client can read it.
+        stream.write_all(&(5000u32).to_be_bytes()).unwrap();
+        stream.write_all(&vec![b'x'; 5000]).unwrap();
+        let reply = frame::read_frame(&mut stream, frame::MAX_FRAME)
+            .unwrap()
+            .expect("a structured refusal before close");
+        let doc = Json::parse(std::str::from_utf8(&reply).unwrap()).unwrap();
+        let err = doc.get("error").unwrap();
+        assert_eq!(err.str("kind").unwrap(), "bad_request");
+        assert!(err.str("message").unwrap().contains("1024-byte limit"));
+        assert!(err.str("message").unwrap().contains("5000"));
+        // Then the server closes the stream (clean EOF).
+        assert!(frame::read_frame(&mut stream, frame::MAX_FRAME).unwrap().is_none());
+        let (net, _) = server.shutdown();
+        assert_eq!(net.bad_requests, 1);
+    }
+
+    #[test]
+    fn truncated_frame_drops_connection_but_server_lives_on() {
+        let server = default_server();
+        {
+            let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+            // Claim 100 payload bytes, send 10, hang up.
+            stream.write_all(&100u32.to_be_bytes()).unwrap();
+            stream.write_all(b"0123456789").unwrap();
+        } // dropped: peer closes mid-frame
+        // The handler must notice without crashing the server.
+        for _ in 0..200 {
+            if server.net_metrics().io_errors == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(server.net_metrics().io_errors, 1);
+        // A fresh connection is served normally.
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+        assert!(client.call(&WireRequest::zoo(1, "lenet5")).unwrap().is_ok());
+        server.shutdown();
+    }
+
+    #[test]
+    fn overloaded_service_sends_structured_overloaded_reply() {
+        let (gate_tx, gate_rx) = channel::<()>();
+        let svc_cfg = ServiceConfig {
+            workers: 1,
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            cache_capacity: 0,
+            max_inflight: 1,
+            ..ServiceConfig::default()
+        };
+        let svc = PredictionService::start(svc_cfg, Arc::new(GatedModel::new(gate_rx)));
+        let server = Server::start("127.0.0.1:0", ServerConfig::default(), svc).unwrap();
+        let addr = server.local_addr().to_string();
+        // Client A occupies the single in-flight slot (worker blocked
+        // in the gated backend).
+        let mut a = Client::connect(&addr).unwrap();
+        a.send(&WireRequest::zoo(1, "lenet5")).unwrap();
+        std::thread::sleep(Duration::from_millis(100)); // A's job reaches the backend
+        // Client B must get an explicit overloaded reply, not a hang.
+        let mut b = Client::connect(&addr).unwrap();
+        match b.call(&WireRequest::zoo(2, "lenet5")).unwrap() {
+            WireResponse::Err { id, kind, .. } => {
+                assert_eq!(id, 2);
+                assert_eq!(kind, ErrorKind::Overloaded);
+            }
+            other => panic!("expected overloaded, got {other:?}"),
+        }
+        // Release the gate; A's admitted request completes.
+        drop(gate_tx);
+        assert!(a.recv().unwrap().is_ok());
+        let (net, svc_m) = server.shutdown();
+        assert_eq!(net.overloaded, 1);
+        assert_eq!(svc_m.overload_rejected, 1);
+        assert_eq!(svc_m.served, 1);
+    }
+
+    #[test]
+    fn concurrent_clients_on_one_cache_key_then_a_hit() {
+        let server = default_server();
+        let addr = server.local_addr().to_string();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    // Identical content (ids differ — they are not part
+                    // of the cache key).
+                    c.call(&WireRequest::zoo(i, "resnet18").with("batch", 32u64)).unwrap()
+                })
+            })
+            .collect();
+        let mut times = Vec::new();
+        for h in handles {
+            match h.join().unwrap() {
+                WireResponse::Ok { prediction, .. } => times.push(prediction.time_s),
+                other => panic!("expected Ok, got {other:?}"),
+            }
+        }
+        assert!(
+            times.iter().all(|t| *t == times[0]),
+            "one cache key must yield one answer: {times:?}"
+        );
+        // A follow-up identical request must be served from the cache.
+        let mut c = Client::connect(&addr).unwrap();
+        let follow = WireRequest::zoo(99, "resnet18").with("batch", 32u64);
+        assert!(c.call(&follow).unwrap().is_ok());
+        let (_, svc_m) = server.shutdown();
+        assert_eq!(svc_m.cache_hits + svc_m.cache_misses, 5);
+        assert!(svc_m.cache_hits >= 1, "follow-up must hit");
+    }
+
+    #[test]
+    fn drain_under_load_answers_every_accepted_request() {
+        // Generous poll so mid-pipeline gaps can't be mistaken for idle.
+        let net_cfg = ServerConfig {
+            poll: Duration::from_millis(200),
+            ..ServerConfig::default()
+        };
+        let server = start(ServiceConfig::default(), net_cfg);
+        let addr = server.local_addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        let n = 50u64;
+        let reqs: Vec<WireRequest> = (0..n)
+            .map(|i| WireRequest::zoo(i, "lenet5").with("batch", 8 + (i % 7)))
+            .collect();
+        for r in &reqs {
+            client.send(r).unwrap();
+        }
+        // Shut down while the pipeline is mid-flight.
+        let drainer = std::thread::spawn(move || server.shutdown());
+        for r in &reqs {
+            let resp = client.recv().expect("drain must not drop accepted requests");
+            assert_eq!(resp.id(), r.id);
+            assert!(resp.is_ok(), "{resp:?}");
+        }
+        let (net, svc_m) = drainer.join().unwrap();
+        assert_eq!(net.answered, n);
+        assert_eq!(svc_m.served, n);
+        assert_eq!(svc_m.in_flight, 0);
+    }
+
+    #[test]
+    fn connection_slots_overflow_is_refused_explicitly() {
+        let net_cfg = ServerConfig {
+            max_conns: 1,
+            ..ServerConfig::default()
+        };
+        let server = start(ServiceConfig::default(), net_cfg);
+        let addr = server.local_addr().to_string();
+        // Occupy the single slot with a live connection.
+        let first = TcpStream::connect(server.local_addr()).unwrap();
+        // Wait until its handler actually holds the slot.
+        for _ in 0..200 {
+            if server.shared.active_conns.load(Ordering::SeqCst) == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let mut second = TcpStream::connect(server.local_addr()).unwrap();
+        let reply = frame::read_frame(&mut second, frame::MAX_FRAME)
+            .unwrap()
+            .expect("explicit refusal frame");
+        let doc = Json::parse(std::str::from_utf8(&reply).unwrap()).unwrap();
+        assert_eq!(doc.get("error").unwrap().str("kind").unwrap(), "overloaded");
+        assert!(frame::read_frame(&mut second, frame::MAX_FRAME).unwrap().is_none());
+        // Once the occupying connection closes, its slot is released
+        // and a fresh client is served normally.
+        drop(first);
+        for _ in 0..200 {
+            if server.shared.active_conns.load(Ordering::SeqCst) == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let mut c = Client::connect(&addr).unwrap();
+        assert!(c.call(&WireRequest::zoo(1, "lenet5")).unwrap().is_ok());
+        let (net, _) = server.shutdown();
+        assert_eq!(net.conns_rejected, 1);
+    }
+}

@@ -3,9 +3,11 @@
 //! The offline crate set has no `serde`/`serde_json`; datasets, trained
 //! models and experiment reports are persisted through this module. It
 //! supports the full JSON grammar minus exotic number forms, with
-//! round-trip-exact `f64` printing (via shortest-repr fallback to `{:e}`).
-//! Parse errors report `line L column C (byte B)` — the ingest pipeline
-//! makes them user-facing diagnostics for hand-authored model specs.
+//! round-trip-exact `f64` printing (via shortest-repr fallback to `{:e}`;
+//! non-finite numbers serialize as `null` — see `fmt_f64` for the
+//! policy). Parse errors report `line L column C (byte B)` — the ingest
+//! pipeline makes them user-facing diagnostics for hand-authored model
+//! specs.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -188,17 +190,17 @@ impl fmt::Display for Json {
 }
 
 /// Format an f64 so it parses back to the identical bits (for finite x).
+///
+/// JSON has no NaN/Infinity tokens, and a serializer that emits them
+/// produces documents our own [`Json::parse`] (and every other parser)
+/// rejects — unacceptable for wire-protocol responses. Policy, pinned
+/// by tests: **non-finite numbers serialize as `null`** and parse back
+/// as [`Json::Null`]. Clamping to huge finite magnitudes (the previous
+/// behavior) silently fabricated values; an explicit `null` is honest
+/// about "no representable number here".
 fn fmt_f64(x: f64) -> String {
     if !x.is_finite() {
-        // JSON has no Inf/NaN; persist as null-like sentinel strings is
-        // worse than clamping. We encode them as very large magnitudes.
-        return if x.is_nan() {
-            "0".into()
-        } else if x > 0.0 {
-            "1e308".into()
-        } else {
-            "-1e308".into()
-        };
+        return "null".into();
     }
     if x == x.trunc() && x.abs() < 1e15 {
         return format!("{}", x as i64);
@@ -439,6 +441,28 @@ mod tests {
             let back = Json::parse(&v.to_string()).unwrap();
             assert_eq!(back.as_f64().unwrap(), x);
         }
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // Regression: NaN/±inf must never render an unparseable token —
+        // wire-protocol responses go through this writer. Pinned policy:
+        // they serialize as `null` and parse back as `Json::Null`.
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let s = Json::Num(x).to_string();
+            assert_eq!(s, "null");
+            assert_eq!(Json::parse(&s).unwrap(), Json::Null);
+        }
+        // A poisoned metric inside a document must not take the whole
+        // document down with it.
+        let mut o = Json::obj();
+        o.set("bad", f64::NAN).set("good", 1.5);
+        let back = Json::parse(&o.to_string()).unwrap();
+        assert_eq!(back.get("bad"), Some(&Json::Null));
+        assert_eq!(back.num("good").unwrap(), 1.5);
+        // Arrays too: every element stays parseable.
+        let arr = Json::from(vec![1.0, f64::INFINITY, 3.0]);
+        assert_eq!(arr.to_string(), "[1,null,3]");
     }
 
     #[test]

@@ -77,10 +77,13 @@ impl Rng {
         lo + (hi - lo) * self.f64()
     }
 
-    /// Uniform integer in `[0, n)`. Panics if `n == 0`.
+    /// Uniform integer in `[0, n)`. Panics if `n == 0` — the message
+    /// names this method so a load generator handing an empty mix to
+    /// [`choose`](Self::choose)/[`zipf`](Self::zipf) fails loudly at
+    /// the culprit instead of with a bare index-out-of-bounds.
     #[inline]
     pub fn below(&mut self, n: usize) -> usize {
-        assert!(n > 0, "Rng::below(0)");
+        assert!(n > 0, "Rng::below(0): n must be positive (empty mix?)");
         // Lemire's method without rejection is fine for our n << 2^64.
         ((self.next_u64() as u128 * n as u128) >> 64) as usize
     }
@@ -104,7 +107,7 @@ impl Rng {
     /// for the serving benchmarks come from here. Panics if `n == 0`.
     #[inline]
     pub fn zipf(&mut self, n: usize) -> usize {
-        assert!(n > 0, "Rng::zipf(0)");
+        assert!(n > 0, "Rng::zipf(0): n must be positive (empty mix?)");
         let r = ((n as f64 + 1.0).powf(self.f64()) - 1.0).floor() as usize;
         r.min(n - 1)
     }
@@ -121,12 +124,18 @@ impl Rng {
         mean + sd * self.normal()
     }
 
-    /// Pick a uniformly random element of a slice.
+    /// Pick a uniformly random element of a slice. Panics with a named
+    /// message on an empty slice — previously this surfaced as an
+    /// opaque `Rng::below(0)` assert deep in the sampler. (Audit note:
+    /// every in-tree load-generator mix is either a non-empty constant
+    /// array or guarded by an `is_empty` check before sampling.)
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty(), "Rng::choose on an empty slice");
         &xs[self.below(xs.len())]
     }
 
-    /// In-place Fisher–Yates shuffle.
+    /// In-place Fisher–Yates shuffle. Empty and single-element slices
+    /// are no-ops (the loop body never runs, so no `below(0)` panic).
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
             let j = self.below(i + 1);
@@ -226,6 +235,34 @@ mod tests {
         assert!(counts[0] > counts[n - 1] * 4, "head {} tail {}", counts[0], counts[n - 1]);
         assert!(counts[0] > counts[4], "rank 0 beats rank 4");
         assert!(counts.iter().all(|&c| c > 0), "full support");
+    }
+
+    #[test]
+    #[should_panic(expected = "Rng::choose on an empty slice")]
+    fn choose_on_empty_slice_names_the_caller() {
+        // Regression: this used to die inside `below` with an assert
+        // that never mentioned which sampler was handed an empty mix.
+        let mut r = Rng::new(1);
+        let empty: [u8; 0] = [];
+        let _ = r.choose(&empty);
+    }
+
+    #[test]
+    #[should_panic(expected = "Rng::zipf(0)")]
+    fn zipf_zero_names_the_caller() {
+        let mut r = Rng::new(1);
+        let _ = r.zipf(0);
+    }
+
+    #[test]
+    fn shuffle_empty_and_singleton_are_noops() {
+        let mut r = Rng::new(2);
+        let mut empty: Vec<u8> = vec![];
+        r.shuffle(&mut empty); // must not panic
+        assert!(empty.is_empty());
+        let mut one = vec![42];
+        r.shuffle(&mut one);
+        assert_eq!(one, vec![42]);
     }
 
     #[test]

@@ -56,12 +56,19 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// q-quantile (0 <= q <= 1) with linear interpolation on a copy.
+///
+/// Policy for pathological input: non-finite samples (NaN, ±inf) are
+/// dropped before ranking — a single poisoned latency must not panic
+/// the comparator or smear into every percentile of a service report —
+/// and an empty (or all-non-finite) input yields 0.0. The sort uses
+/// `f64::total_cmp`, so the comparator itself is total even if the
+/// filter policy changes.
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -72,12 +79,24 @@ pub fn quantile(xs: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Smallest element, ignoring NaNs. An empty (or all-NaN) slice yields
+/// 0.0 — a defined sentinel for reports, not `+inf` leaking into JSON.
 pub fn min(xs: &[f64]) -> f64 {
-    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+    let mut it = xs.iter().copied().filter(|x| !x.is_nan());
+    match it.next() {
+        None => 0.0,
+        Some(first) => it.fold(first, f64::min),
+    }
 }
 
+/// Largest element, ignoring NaNs. An empty (or all-NaN) slice yields
+/// 0.0 — a defined sentinel for reports, not `-inf` leaking into JSON.
 pub fn max(xs: &[f64]) -> f64 {
-    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    let mut it = xs.iter().copied().filter(|x| !x.is_nan());
+    match it.next() {
+        None => 0.0,
+        Some(first) => it.fold(first, f64::max),
+    }
 }
 
 /// Coefficient of determination R².
@@ -98,7 +117,9 @@ pub fn r2(pred: &[f64], truth: &[f64]) -> f64 {
 
 fn ranks(xs: &[f64]) -> Vec<f64> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    // total_cmp keeps the comparator total (NaNs rank after +inf)
+    // instead of panicking — same policy as `quantile`.
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
     let mut out = vec![0.0; xs.len()];
     let mut i = 0;
     while i < idx.len() {
@@ -176,6 +197,31 @@ mod tests {
     }
 
     #[test]
+    fn quantile_drops_non_finite_instead_of_panicking() {
+        // Regression: `partial_cmp(..).unwrap()` used to panic on NaN.
+        let xs = [3.0, f64::NAN, 1.0, f64::INFINITY, 2.0, f64::NEG_INFINITY, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+        // Degenerate inputs have a defined result.
+        assert_eq!(quantile(&[], 0.5), 0.0);
+        assert_eq!(quantile(&[f64::NAN, f64::NAN], 0.5), 0.0);
+    }
+
+    #[test]
+    fn min_max_defined_on_empty_and_nan() {
+        // Regression: empty slices used to return ±inf into reports.
+        assert_eq!(min(&[]), 0.0);
+        assert_eq!(max(&[]), 0.0);
+        assert_eq!(min(&[f64::NAN]), 0.0);
+        assert_eq!(max(&[f64::NAN]), 0.0);
+        assert_eq!(min(&[2.0, f64::NAN, 1.0]), 1.0);
+        assert_eq!(max(&[2.0, f64::NAN, 1.0]), 2.0);
+        assert_eq!(min(&[3.5]), 3.5);
+        assert_eq!(max(&[3.5]), 3.5);
+    }
+
+    #[test]
     fn spearman_monotone_is_one() {
         let a = [1.0, 2.0, 3.0, 4.0];
         let b = [10.0, 20.0, 40.0, 80.0];
@@ -187,6 +233,15 @@ mod tests {
         let a = [1.0, 2.0, 3.0];
         let b = [9.0, 5.0, 1.0];
         assert!((spearman(&a, &b) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_tolerates_nan_without_panicking() {
+        // Regression: the rank sort used the same panicking
+        // `partial_cmp(..).unwrap()` comparator `quantile` was cured
+        // of. NaN input may yield a NaN correlation, but never a panic.
+        let r = spearman(&[1.0, f64::NAN, 2.0], &[3.0, 1.0, 2.0]);
+        assert!(!r.is_infinite());
     }
 
     #[test]

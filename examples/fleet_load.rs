@@ -1,0 +1,163 @@
+//! Fleet placement over real sockets: start the `dnnabacus-wire-v1`
+//! server in-process, stream a Zipf-skewed job mix (zoo names + inline
+//! user specs) at it as `schedule` requests — one per placement policy
+//! over the identical workload — and compare the reports. The run is
+//! seeded end to end: a second identical request must produce a
+//! byte-identical report, the prediction-driven policies must beat
+//! first-fit on realized makespan, and no placement may OOM under
+//! ground truth.
+//!
+//! ```bash
+//! cargo run --release --example fleet_load
+//! JOBS=40 SCALE=0.12 cargo run --release --example fleet_load
+//! ```
+
+use dnnabacus::coordinator::{service::AutoMlBackend, CostModel, PredictionService, ServiceConfig};
+use dnnabacus::experiments::Ctx;
+use dnnabacus::fleet::PolicyKind;
+use dnnabacus::net::{Client, ScheduleRequest, Server, ServerConfig, WireResponse};
+use dnnabacus::predictor::{AutoMl, Target};
+use dnnabacus::util::json::Json;
+use dnnabacus::util::prng::Rng;
+use dnnabacus::zoo;
+use std::sync::Arc;
+
+/// Inline user specs mixed into the stream (compiled server-side).
+const NOVEL_SPECS: [&str; 2] = [
+    include_str!("specs/tiny-cnn.json"),
+    include_str!("specs/mnist-mlp.json"),
+];
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// The one job stream every policy is asked to place.
+fn job_stream(n: usize, seed: u64) -> dnnabacus::Result<Vec<Json>> {
+    let names: Vec<&str> = zoo::CLASSIC_29.iter().map(|(name, _)| *name).collect();
+    let batches = [32u64, 64, 128, 256];
+    let specs: Vec<Json> = NOVEL_SPECS
+        .iter()
+        .map(|text| Json::parse(text))
+        .collect::<dnnabacus::Result<_>>()?;
+    let mut rng = Rng::new(seed);
+    let mut jobs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let batch = batches[rng.zipf(batches.len())];
+        let mut o = Json::obj();
+        o.set("batch", batch);
+        if rng.chance(1.0 / 3.0) {
+            o.set("spec", specs[rng.zipf(specs.len())].clone());
+        } else {
+            let ds = if rng.chance(0.5) { "cifar100" } else { "mnist" };
+            o.set("model", names[rng.zipf(names.len())]).set("dataset", ds);
+        }
+        jobs.push(o);
+    }
+    Ok(jobs)
+}
+
+fn main() -> dnnabacus::Result<()> {
+    let n_jobs = env_f64("JOBS", 24.0) as usize;
+    let scale = env_f64("SCALE", 0.08);
+    let seed = 42u64;
+
+    let ctx = Ctx {
+        scale,
+        ..Ctx::default()
+    };
+    let corpus = ctx.training_corpus();
+    let backend: Arc<dyn CostModel> = Arc::new(AutoMlBackend {
+        time_model: AutoMl::train_opt(&corpus, Target::Time, seed, true),
+        memory_model: AutoMl::train_opt(&corpus, Target::Memory, seed, true),
+    });
+    let svc = PredictionService::start(ServiceConfig::default(), backend);
+    let server = Server::start("127.0.0.1:0", ServerConfig::default(), svc)?;
+    let addr = server.local_addr().to_string();
+    println!("listening on {addr}; placing {n_jobs} jobs per policy on rtx2080x2,rtx3090");
+
+    let jobs = job_stream(n_jobs, seed)?;
+    let mut client = Client::connect(&addr)?;
+    let mut reports: Vec<(PolicyKind, Json)> = Vec::new();
+    for (i, kind) in PolicyKind::ALL.into_iter().enumerate() {
+        let mut req = ScheduleRequest::new(i as u64, "rtx2080x2,rtx3090", kind);
+        req.seed = seed;
+        req.arrival_rate = 0.05;
+        req.jobs = jobs.clone();
+        let report = match client.schedule(&req)? {
+            WireResponse::Schedule { report, .. } => report,
+            other => dnnabacus::bail!("expected a schedule report, got {other:?}"),
+        };
+        println!(
+            "{:<16} makespan {:>8.1}s (pred {:>8.1}s) | regret {:>+6.1}% | \
+             wait p99 {:>7.1}s | placed {} / screened {} / true OOMs {}",
+            report.str("policy")?,
+            report.num("makespan_true_s")?,
+            report.num("makespan_pred_s")?,
+            report.num("regret")? * 100.0,
+            report.num("wait_p99_s")?,
+            report.num("placed")?,
+            report.num("oom_screened")?,
+            report.num("true_oom_placements")?,
+        );
+        reports.push((kind, report));
+    }
+
+    // The same request again must reproduce its report byte for byte —
+    // the whole pipeline (wire, cache, engine, GA) is seeded.
+    let lf = PolicyKind::LeastPredictedFinish;
+    let lf_report = &reports
+        .iter()
+        .find(|(k, _)| *k == lf)
+        .expect("least-finish ran")
+        .1;
+    let mut again = ScheduleRequest::new(99, "rtx2080x2,rtx3090", lf);
+    again.seed = seed;
+    again.arrival_rate = 0.05;
+    again.jobs = jobs.clone();
+    match client.schedule(&again)? {
+        WireResponse::Schedule { report, .. } => {
+            assert_eq!(&report, lf_report, "replayed schedule must be identical");
+        }
+        other => dnnabacus::bail!("expected a schedule report, got {other:?}"),
+    }
+    println!("replay check: identical report for an identical request");
+
+    let makespan = |kind: PolicyKind| -> f64 {
+        reports
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, r)| r.num("makespan_true_s").unwrap())
+            .expect("policy ran")
+    };
+    let ff = makespan(PolicyKind::FirstFit);
+    let lf_ms = makespan(PolicyKind::LeastPredictedFinish);
+    let ga_ms = makespan(PolicyKind::Ga);
+    for (_, r) in &reports {
+        assert_eq!(
+            r.num("true_oom_placements")?,
+            0.0,
+            "predicted screening must keep ground-truth OOMs at zero"
+        );
+        assert_eq!(r.num("placed")? + r.num("oom_screened")?, n_jobs as f64);
+    }
+    assert!(
+        lf_ms < ff,
+        "least-predicted-finish ({lf_ms:.1}s) must beat first-fit ({ff:.1}s)"
+    );
+    assert!(ga_ms < ff, "GA ({ga_ms:.1}s) must beat first-fit ({ff:.1}s)");
+    println!("acceptance: least-finish and GA beat first-fit; zero OOM placements");
+
+    let (net, m) = server.shutdown();
+    println!(
+        "wire: {} schedule calls answered | cost queries {} ({} cache hits / {} misses)",
+        net.schedules,
+        m.served,
+        m.cache_hits,
+        m.cache_misses
+    );
+    Ok(())
+}

@@ -117,6 +117,8 @@ fn main() -> dnnabacus::Result<()> {
                                 ..
                             } => rejected += 1,
                             WireResponse::Err { .. } => failed += 1,
+                            // This mix never sends schedule requests.
+                            WireResponse::Schedule { .. } => failed += 1,
                         }
                     }
                     sent += wave_n;

@@ -1,0 +1,114 @@
+//! `cargo bench --bench fleet_throughput` — placement throughput and
+//! regret per policy. Costs are synthetic (deterministic, hash-derived)
+//! so the numbers isolate the placement engine itself: queue handling,
+//! screening, the greedy policies, and the per-wave GA solves.
+//!
+//! Flags (after `--`):
+//!   --scale 0.25     job-stream length multiplier (0.05 in CI smoke)
+//!   --seed 7         workload + policy seed
+//!   --json PATH      write the results as JSON (the CI bench-smoke job
+//!                    uploads this as a `BENCH_*.json` perf artifact)
+
+use dnnabacus::fleet::{self, Cluster, FleetJob, PolicyKind, SimParams, SyntheticCosts};
+use dnnabacus::util::cli::Args;
+use dnnabacus::util::json::Json;
+use std::time::Instant;
+
+struct PolicyResult {
+    policy: &'static str,
+    elapsed_s: f64,
+    placed: usize,
+    makespan_true_s: f64,
+    regret: f64,
+    oom_screened: usize,
+    true_ooms: usize,
+}
+
+fn main() {
+    let args = Args::from_env();
+    let scale = args.f64_or("scale", 0.25);
+    let seed = args.u64_or("seed", 7);
+    let n_jobs = ((800.0 * scale) as usize).max(40);
+
+    let cluster = Cluster::parse("rtx2080x2,rtx3090").expect("known devices");
+    let jobs: Vec<FleetJob> = fleet::job_mix(n_jobs, seed, &[]);
+    let params = SimParams {
+        seed,
+        arrival_rate: 0.05,
+        mem_safety: fleet::MEM_SAFETY,
+    };
+
+    println!("fleet_throughput: {n_jobs} jobs on rtx2080x2,rtx3090 (synthetic costs)");
+    let mut results = Vec::new();
+    for kind in PolicyKind::ALL {
+        let mut costs = SyntheticCosts { seed, noise: 0.15 };
+        let mut policy = fleet::make_policy(kind, seed);
+        let t0 = Instant::now();
+        let report = fleet::run(&cluster, &jobs, policy.as_mut(), &mut costs, &params)
+            .expect("synthetic workload places");
+        let elapsed_s = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<16} {:>9.0} placements/s  makespan {:>8.1}s  regret {:>+6.1}%  \
+             screened {:>3}  true-ooms {}",
+            report.policy,
+            report.placed as f64 / elapsed_s,
+            report.makespan_true_s,
+            report.regret * 100.0,
+            report.oom_screened,
+            report.true_oom_placements,
+        );
+        assert_eq!(report.true_oom_placements, 0, "synthetic screen must hold");
+        results.push(PolicyResult {
+            policy: kind.as_str(),
+            elapsed_s,
+            placed: report.placed,
+            makespan_true_s: report.makespan_true_s,
+            regret: report.regret,
+            oom_screened: report.oom_screened,
+            true_ooms: report.true_oom_placements,
+        });
+    }
+
+    let ff = results
+        .iter()
+        .find(|r| r.policy == "first-fit")
+        .expect("first-fit ran")
+        .makespan_true_s;
+    for r in &results {
+        if r.policy == "least-finish" || r.policy == "ga" {
+            assert!(
+                r.makespan_true_s < ff,
+                "{} ({:.1}s) must beat first-fit ({ff:.1}s)",
+                r.policy,
+                r.makespan_true_s
+            );
+        }
+    }
+
+    if let Some(path) = args.get("json") {
+        let rows = results
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("policy", r.policy)
+                    .set("jobs", n_jobs)
+                    .set("placed", r.placed)
+                    .set("placements_per_s", r.placed as f64 / r.elapsed_s)
+                    .set("elapsed_s", r.elapsed_s)
+                    .set("makespan_true_s", r.makespan_true_s)
+                    .set("regret", r.regret)
+                    .set("oom_screened", r.oom_screened)
+                    .set("true_oom_placements", r.true_ooms);
+                o
+            })
+            .collect();
+        let mut doc = Json::obj();
+        doc.set("bench", "fleet_throughput")
+            .set("scale", scale)
+            .set("seed", seed)
+            .set("jobs", n_jobs)
+            .set("results", Json::Arr(rows));
+        std::fs::write(path, doc.to_string()).expect("write bench json");
+        println!("wrote {path}");
+    }
+}

@@ -180,12 +180,14 @@ type PredictionCache = Mutex<TtlLru<u64, (f64, f64)>>;
 pub const BACKEND_ERROR_PREFIX: &str = "backend: ";
 
 /// The paper's OOM screen, with the CUDA-context reservation honored:
-/// a job fits only if its predicted peak memory stays within VRAM
-/// *minus* the resident context bytes `pynvml` always sees occupied.
-/// Public because the `predict`/`predict-spec` CLI paths apply the same
-/// screen outside the service.
+/// a job fits only if its predicted peak memory stays within
+/// [`DeviceProfile::usable_vram`] — the one shared headroom definition
+/// (the scheduler's `makespan` and the fleet's placement screen use the
+/// same helper, so all screens agree on the same bytes). Public because
+/// the `predict`/`predict-spec` CLI paths apply the same screen outside
+/// the service.
 pub fn fits_device(device: &DeviceProfile, predicted_mem: f64) -> bool {
-    predicted_mem <= device.vram.saturating_sub(device.context_bytes) as f64
+    predicted_mem <= device.usable_vram() as f64
 }
 
 /// Everything one worker thread needs; shared pieces are `Arc`-cloned

@@ -37,15 +37,19 @@ pub fn workload(seed: u64) -> Vec<(String, TrainConfig)> {
                 seed: rng.next_u64(),
             };
             // A submitted job must be runnable *somewhere*: shrink the
-            // batch until it fits the larger machine (a user would not
-            // submit a job that cannot run on any server).
+            // batch until its true peak fits the larger machine's shared
+            // headroom (a user would not submit a job that cannot run on
+            // any server; the headroom — not raw VRAM — is what the
+            // scheduler's OOM screen checks).
             let g = zoo::build(name, dataset.in_channels(), dataset.classes()).unwrap();
-            loop {
+            let fits_largest = |cfg: &TrainConfig| {
                 let mut probe = cfg.clone();
                 probe.device = DeviceProfile::rtx3090();
-                if simulate_training(&g, &probe).is_ok() || cfg.batch <= 16 {
-                    break;
-                }
+                simulate_training(&g, &probe)
+                    .map(|m| m.peak_mem <= probe.device.usable_vram())
+                    .unwrap_or(false)
+            };
+            while !fits_largest(&cfg) && cfg.batch > 16 {
                 cfg.batch /= 2;
             }
             (name.to_string(), cfg)
@@ -62,8 +66,8 @@ fn job_costs(
     let devices = [DeviceProfile::rtx2080(), DeviceProfile::rtx3090()];
     jobs.iter()
         .map(|(name, cfg)| {
-            let mut time = [0.0; 2];
-            let mut mem = [0u64; 2];
+            let mut time = vec![0.0; devices.len()];
+            let mut mem = vec![0u64; devices.len()];
             for (m, dev) in devices.iter().enumerate() {
                 let mut c = cfg.clone();
                 c.device = dev.clone();
@@ -107,19 +111,22 @@ pub fn fig14(ctx: &Ctx) -> Vec<Table> {
     // pad by the predictor's observed tail error (~15% headroom keeps
     // the "no job failures" property the paper's scheduler relies on).
     for j in predicted.iter_mut() {
-        j.mem = [(j.mem[0] as f64 * 1.15) as u64, (j.mem[1] as f64 * 1.15) as u64];
+        for m in j.mem.iter_mut() {
+            *m = (*m as f64 * 1.15) as u64;
+        }
     }
 
     let machines = Machines::paper();
-    // Every job fits the 24 GB machine by construction; if an
+    // Every job fits the 24 GB machine's headroom by construction; if an
     // overestimated prediction says otherwise, cap it so planning stays
     // feasible (the margin keeps real OOMs screened).
     for j in predicted.iter_mut() {
-        j.mem[1] = j.mem[1].min(machines.vram[1]);
+        j.mem[1] = j.mem[1].min(machines.headroom[1]);
     }
     let (opt_plan, opt_pred) = optimal(&predicted, &machines).expect("feasible plan exists");
     let rand_pred = random_average(&predicted, &machines, 100, ctx.seed ^ 0xA1);
-    let trace = ga::optimize(&predicted, &machines, &ga::GaParams::default());
+    let trace = ga::optimize(&predicted, &machines, &ga::GaParams::default())
+        .expect("a feasible plan exists for the screened workload");
 
     // Evaluate every plan under ground truth.
     let opt_true = makespan(&truth, &machines, &opt_plan).unwrap_or(f64::INFINITY);

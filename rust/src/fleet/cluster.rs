@@ -1,0 +1,122 @@
+//! The cluster model: named device instances with per-device headroom
+//! accounting, parsed from the fleet's `"rtx2080x2,rtx3090"` notation.
+
+use crate::scheduler::Machines;
+use crate::sim::{parse_device_list, DeviceProfile};
+
+/// Largest cluster the engine accepts. Plans carry machine indices as
+/// `u8` genes (`scheduler::Plan`), and a fleet bigger than this has no
+/// in-tree workload to exercise it anyway.
+pub const MAX_DEVICES: usize = 64;
+
+/// One machine in the fleet: a device profile plus a unique instance
+/// name (`"<profile>-<i>"`), so two cards of the same model stay
+/// distinguishable in placement reports.
+#[derive(Debug, Clone)]
+pub struct ClusterDevice {
+    pub name: String,
+    pub profile: DeviceProfile,
+}
+
+impl ClusterDevice {
+    /// Memory a placed job may occupy — the shared
+    /// [`DeviceProfile::usable_vram`] headroom.
+    pub fn headroom(&self) -> u64 {
+        self.profile.usable_vram()
+    }
+}
+
+/// An N-device heterogeneous cluster. Device order is significant: it
+/// is the index order policies see (first-fit walks it front to back).
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub devices: Vec<ClusterDevice>,
+}
+
+impl Cluster {
+    /// Build from profiles, naming instances `"<profile>-<i>"` with a
+    /// per-profile counter (`rtx2080x2,rtx3090` → `rtx2080-0`,
+    /// `rtx2080-1`, `rtx3090-0`).
+    pub fn new(profiles: Vec<DeviceProfile>) -> crate::Result<Cluster> {
+        crate::ensure!(!profiles.is_empty(), "a cluster needs at least one device");
+        crate::ensure!(
+            profiles.len() <= MAX_DEVICES,
+            "cluster of {} devices exceeds the {MAX_DEVICES}-device cap",
+            profiles.len()
+        );
+        let mut devices = Vec::with_capacity(profiles.len());
+        for (i, profile) in profiles.iter().enumerate() {
+            let nth = profiles[..i].iter().filter(|p| p.name == profile.name).count();
+            devices.push(ClusterDevice {
+                name: format!("{}-{nth}", profile.name),
+                profile: profile.clone(),
+            });
+        }
+        Ok(Cluster { devices })
+    }
+
+    /// Parse the device-list notation (see
+    /// [`crate::sim::parse_device_list`]).
+    pub fn parse(spec: &str) -> crate::Result<Cluster> {
+        Cluster::new(parse_device_list(spec)?)
+    }
+
+    /// The paper's two-machine testbed (Table 1).
+    pub fn paper() -> Cluster {
+        Cluster::new(vec![DeviceProfile::rtx2080(), DeviceProfile::rtx3090()])
+            .expect("two devices always form a cluster")
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// The scheduler's view of this cluster (shared headrooms).
+    pub fn machines(&self) -> Machines {
+        Machines {
+            headroom: self.devices.iter().map(ClusterDevice::headroom).collect(),
+        }
+    }
+
+    /// The largest single-device headroom — the "does this job fit
+    /// anywhere at all" screening bound.
+    pub fn max_headroom(&self) -> u64 {
+        self.devices.iter().map(ClusterDevice::headroom).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names_instances_per_profile() {
+        let c = Cluster::parse("rtx2080x2,rtx3090,rtx2080").unwrap();
+        let names: Vec<&str> = c.devices.iter().map(|d| d.name.as_str()).collect();
+        assert_eq!(names, ["rtx2080-0", "rtx2080-1", "rtx3090-0", "rtx2080-2"]);
+        assert_eq!(c.len(), 4);
+    }
+
+    #[test]
+    fn machines_carry_the_shared_headroom() {
+        let c = Cluster::paper();
+        let m = c.machines();
+        assert_eq!(m.headroom.len(), 2);
+        assert_eq!(m.headroom[0], DeviceProfile::rtx2080().usable_vram());
+        assert_eq!(m.headroom[1], DeviceProfile::rtx3090().usable_vram());
+        assert_eq!(c.max_headroom(), DeviceProfile::rtx3090().usable_vram());
+    }
+
+    #[test]
+    fn rejects_empty_and_oversized_clusters() {
+        assert!(Cluster::new(Vec::new()).is_err());
+        let too_many = vec![DeviceProfile::rtx2080(); MAX_DEVICES + 1];
+        let e = Cluster::new(too_many).unwrap_err().to_string();
+        assert!(e.contains("cap"), "{e}");
+        assert!(Cluster::parse("a100").is_err());
+    }
+}

@@ -1,0 +1,257 @@
+//! Placement-run reporting: makespan (predicted and realized),
+//! per-device utilization, queue-wait percentiles, OOM accounting, and
+//! the predicted-vs-ground-truth regret against a clairvoyant GA plan.
+
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::util::table::Table;
+
+/// One placed job's realized timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub job: String,
+    pub device: String,
+    pub arrival_s: f64,
+    pub start_s: f64,
+    pub finish_s: f64,
+}
+
+/// Per-device rollup.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceReport {
+    pub name: String,
+    pub jobs: usize,
+    /// Seconds the device spent running jobs (ground truth).
+    pub busy_s: f64,
+    /// `busy_s / makespan_true_s` (0 when nothing ran).
+    pub utilization: f64,
+}
+
+/// The full report of one policy's placement run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetReport {
+    pub policy: String,
+    pub seed: u64,
+    pub arrival_rate: f64,
+    /// Jobs submitted to the engine.
+    pub jobs: usize,
+    /// Jobs placed on a device (ran to completion or failed there).
+    pub placed: usize,
+    /// Jobs refused before placement: predicted (padded) memory fits no
+    /// device's headroom.
+    pub oom_screened: usize,
+    /// Placed jobs whose *ground-truth* memory exceeded their device's
+    /// headroom — the failures the predictor-driven screen exists to
+    /// prevent (zero when the screen holds).
+    pub true_oom_placements: usize,
+    /// Makespan under the costs the planner saw.
+    pub makespan_pred_s: f64,
+    /// Realized makespan under ground-truth durations.
+    pub makespan_true_s: f64,
+    /// Makespan of a clairvoyant GA plan over the same placed jobs with
+    /// ground-truth costs and an idle cluster.
+    pub oracle_makespan_s: f64,
+    /// `makespan_true_s / oracle_makespan_s - 1` — what prediction
+    /// error plus online arrival cost over clairvoyant planning.
+    pub regret: f64,
+    pub wait_p50_s: f64,
+    pub wait_p90_s: f64,
+    pub wait_p99_s: f64,
+    pub wait_max_s: f64,
+    pub devices: Vec<DeviceReport>,
+    pub placements: Vec<Placement>,
+}
+
+impl FleetReport {
+    /// Fill the queue-wait percentiles from per-job waits (seconds).
+    pub fn set_waits(&mut self, waits: &[f64]) {
+        self.wait_p50_s = stats::quantile(waits, 0.5);
+        self.wait_p90_s = stats::quantile(waits, 0.9);
+        self.wait_p99_s = stats::quantile(waits, 0.99);
+        self.wait_max_s = stats::max(waits);
+    }
+
+    /// Machine-readable form — the wire `schedule` reply body and the
+    /// CLI's `--json` output.
+    pub fn to_json(&self) -> Json {
+        let devices = self
+            .devices
+            .iter()
+            .map(|d| {
+                let mut o = Json::obj();
+                o.set("name", d.name.as_str())
+                    .set("jobs", d.jobs)
+                    .set("busy_s", d.busy_s)
+                    .set("utilization", d.utilization);
+                o
+            })
+            .collect();
+        let placements = self
+            .placements
+            .iter()
+            .map(|p| {
+                let mut o = Json::obj();
+                o.set("job", p.job.as_str())
+                    .set("device", p.device.as_str())
+                    .set("arrival_s", p.arrival_s)
+                    .set("start_s", p.start_s)
+                    .set("finish_s", p.finish_s);
+                o
+            })
+            .collect();
+        let mut o = Json::obj();
+        o.set("policy", self.policy.as_str())
+            .set("seed", self.seed)
+            .set("arrival_rate", self.arrival_rate)
+            .set("jobs", self.jobs)
+            .set("placed", self.placed)
+            .set("oom_screened", self.oom_screened)
+            .set("true_oom_placements", self.true_oom_placements)
+            .set("makespan_pred_s", self.makespan_pred_s)
+            .set("makespan_true_s", self.makespan_true_s)
+            .set("oracle_makespan_s", self.oracle_makespan_s)
+            .set("regret", self.regret)
+            .set("wait_p50_s", self.wait_p50_s)
+            .set("wait_p90_s", self.wait_p90_s)
+            .set("wait_p99_s", self.wait_p99_s)
+            .set("wait_max_s", self.wait_max_s)
+            .set("devices", Json::Arr(devices))
+            .set("placements", Json::Arr(placements));
+        o
+    }
+
+    /// Human-readable rendering (summary plus per-device table).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "policy {}: {} placed / {} submitted ({} OOM-screened, {} true OOMs)\n\
+             makespan {:.1}s realized ({:.1}s predicted) | oracle {:.1}s | regret {:+.1}%\n\
+             queue wait p50 {:.1}s p90 {:.1}s p99 {:.1}s max {:.1}s\n",
+            self.policy,
+            self.placed,
+            self.jobs,
+            self.oom_screened,
+            self.true_oom_placements,
+            self.makespan_true_s,
+            self.makespan_pred_s,
+            self.oracle_makespan_s,
+            self.regret * 100.0,
+            self.wait_p50_s,
+            self.wait_p90_s,
+            self.wait_p99_s,
+            self.wait_max_s,
+        );
+        let mut t = Table::new("", &["device", "jobs", "busy (s)", "utilization"]);
+        for d in &self.devices {
+            t.row(vec![
+                d.name.clone(),
+                d.jobs.to_string(),
+                format!("{:.1}", d.busy_s),
+                format!("{:.0}%", d.utilization * 100.0),
+            ]);
+        }
+        out.push_str(&t.render());
+        out
+    }
+}
+
+/// The side-by-side policy comparison the `fleet` CLI prints.
+pub fn comparison_table(reports: &[FleetReport]) -> Table {
+    let mut t = Table::new(
+        "Fleet placement — policy comparison",
+        &[
+            "policy",
+            "makespan true (s)",
+            "makespan pred (s)",
+            "regret",
+            "wait p99 (s)",
+            "placed",
+            "oom screened",
+            "true ooms",
+        ],
+    );
+    for r in reports {
+        t.row(vec![
+            r.policy.clone(),
+            format!("{:.1}", r.makespan_true_s),
+            format!("{:.1}", r.makespan_pred_s),
+            format!("{:+.1}%", r.regret * 100.0),
+            format!("{:.1}", r.wait_p99_s),
+            r.placed.to_string(),
+            r.oom_screened.to_string(),
+            r.true_oom_placements.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> FleetReport {
+        FleetReport {
+            policy: "least-finish".into(),
+            seed: 7,
+            arrival_rate: 0.05,
+            jobs: 3,
+            placed: 2,
+            oom_screened: 1,
+            true_oom_placements: 0,
+            makespan_pred_s: 90.0,
+            makespan_true_s: 100.0,
+            oracle_makespan_s: 95.0,
+            regret: 100.0 / 95.0 - 1.0,
+            wait_p50_s: 1.0,
+            wait_p90_s: 2.0,
+            wait_p99_s: 2.0,
+            wait_max_s: 2.0,
+            devices: vec![DeviceReport {
+                name: "rtx3090-0".into(),
+                jobs: 2,
+                busy_s: 80.0,
+                utilization: 0.8,
+            }],
+            placements: vec![Placement {
+                job: "resnet18@64".into(),
+                device: "rtx3090-0".into(),
+                arrival_s: 0.0,
+                start_s: 0.0,
+                finish_s: 50.0,
+            }],
+        }
+    }
+
+    #[test]
+    fn json_shape_carries_the_headline_numbers() {
+        let j = report().to_json();
+        assert_eq!(j.str("policy").unwrap(), "least-finish");
+        assert_eq!(j.num("placed").unwrap(), 2.0);
+        assert_eq!(j.num("true_oom_placements").unwrap(), 0.0);
+        assert!(j.num("makespan_true_s").unwrap() > 0.0);
+        assert_eq!(j.arr("devices").unwrap().len(), 1);
+        assert_eq!(j.arr("placements").unwrap().len(), 1);
+        let d = &j.arr("devices").unwrap()[0];
+        assert_eq!(d.str("name").unwrap(), "rtx3090-0");
+        // The JSON round-trips through the in-tree parser.
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn render_and_comparison_mention_every_policy() {
+        let r = report();
+        let text = r.render();
+        assert!(text.contains("least-finish"));
+        assert!(text.contains("rtx3090-0"));
+        let table = comparison_table(&[r]).render();
+        assert!(table.contains("least-finish"));
+    }
+
+    #[test]
+    fn set_waits_fills_percentiles() {
+        let mut r = report();
+        r.set_waits(&[0.0, 10.0, 20.0, 30.0]);
+        assert!(r.wait_p50_s >= 10.0 && r.wait_p50_s <= 20.0);
+        assert_eq!(r.wait_max_s, 30.0);
+    }
+}

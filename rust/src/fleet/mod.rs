@@ -1,0 +1,40 @@
+//! Prediction-driven online cluster placement — the paper's deployment
+//! story (§3.1 Figure 5, §4.3 Figure 14) closed into a loop: a
+//! prediction stage in front of a scheduler that places streaming
+//! training jobs onto an N-device heterogeneous cluster, screening OOMs
+//! with predicted memory before anything runs.
+//!
+//! * [`cluster`] — named [`DeviceProfile`](crate::sim::DeviceProfile)
+//!   instances with the shared per-device memory headroom, parsed from
+//!   the `"rtx2080x2,rtx3090"` notation;
+//! * [`policy`] — pluggable [`PlacementPolicy`] implementations:
+//!   first-fit and best-fit-memory (load-blind baselines),
+//!   least-predicted-finish (the online greedy), and a wave-batched
+//!   genetic algorithm re-planned on top of live device backlog via the
+//!   N-machine [`crate::scheduler::ga`];
+//! * [`simloop`] — the seeded, deterministic simulation loop: arrivals
+//!   → screen → place → run to simulated completion, with costs from a
+//!   real [`crate::coordinator::PredictionService`] ([`ServiceCosts`])
+//!   or a synthetic formula ([`SyntheticCosts`]);
+//! * [`metrics`] — the [`FleetReport`]: makespan (predicted and
+//!   realized), per-device utilization, queue-wait percentiles, OOM
+//!   accounting, and regret against a clairvoyant ground-truth GA plan.
+//!
+//! Served online: the `schedule` request kind in [`crate::net`] returns
+//! placement reports over `dnnabacus-wire-v1`, the `fleet` CLI
+//! subcommand runs policy comparisons locally, `examples/fleet_load.rs`
+//! streams a Zipf job mix over a real socket, and
+//! `benches/fleet_throughput.rs` tracks placements/s and regret per
+//! policy.
+
+pub mod cluster;
+pub mod metrics;
+pub mod policy;
+pub mod simloop;
+
+pub use cluster::{Cluster, ClusterDevice, MAX_DEVICES};
+pub use metrics::{comparison_table, DeviceReport, FleetReport, Placement};
+pub use policy::{make_policy, DeviceView, PlacementPolicy, PolicyKind, QueuedJob};
+pub use simloop::{
+    job_mix, run, CostSource, FleetJob, ServiceCosts, SimParams, SyntheticCosts, MEM_SAFETY,
+};

@@ -1,0 +1,391 @@
+//! Pluggable placement policies: given the queued jobs' predicted
+//! per-device costs and each device's predicted backlog, commit jobs to
+//! devices. The greedy policies place everything immediately; the GA
+//! batches arrivals into waves and re-plans each wave jointly with the
+//! N-machine genetic algorithm from [`crate::scheduler::ga`], seeded on
+//! top of the devices' current predicted load.
+
+use crate::scheduler::{ga, JobCost, Machines};
+
+/// Which placement policy to run. [`PolicyKind::ALL`] is the comparison
+/// set the `fleet` CLI and the benches sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Lowest-index device the job fits — load-blind, the baseline the
+    /// prediction-driven policies must beat.
+    FirstFit,
+    /// Fitting device with the least leftover headroom — packs memory
+    /// tightly but is load-blind too.
+    BestFitMemory,
+    /// Fitting device where the job's predicted finish (backlog +
+    /// predicted time) is earliest — the online greedy.
+    LeastPredictedFinish,
+    /// Wave-batched genetic algorithm over the queued jobs, planned on
+    /// top of each device's current predicted backlog.
+    Ga,
+}
+
+impl PolicyKind {
+    pub const ALL: [PolicyKind; 4] = [
+        PolicyKind::FirstFit,
+        PolicyKind::BestFitMemory,
+        PolicyKind::LeastPredictedFinish,
+        PolicyKind::Ga,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PolicyKind::FirstFit => "first-fit",
+            PolicyKind::BestFitMemory => "best-fit-memory",
+            PolicyKind::LeastPredictedFinish => "least-finish",
+            PolicyKind::Ga => "ga",
+        }
+    }
+
+    pub fn parse(name: &str) -> crate::Result<PolicyKind> {
+        PolicyKind::ALL
+            .into_iter()
+            .find(|k| k.as_str() == name)
+            .ok_or_else(|| {
+                let known: Vec<&str> = PolicyKind::ALL.iter().map(|k| k.as_str()).collect();
+                crate::err!("unknown policy '{name}' (known policies: {})", known.join(", "))
+            })
+    }
+}
+
+/// A queued job as a policy sees it: display name plus predicted
+/// per-device costs (memory already padded by the engine's screening
+/// margin).
+#[derive(Debug, Clone)]
+pub struct QueuedJob {
+    pub name: String,
+    /// Predicted training time per device (seconds).
+    pub pred_time: Vec<f64>,
+    /// Screening memory per device (bytes, safety-padded).
+    pub pred_mem: Vec<u64>,
+}
+
+impl QueuedJob {
+    /// Does this job pass the predicted-memory screen on device `d`?
+    pub fn fits(&self, d: usize, devices: &[DeviceView]) -> bool {
+        self.pred_mem[d] <= devices[d].headroom
+    }
+}
+
+/// Per-device view at planning time.
+#[derive(Debug, Clone)]
+pub struct DeviceView {
+    /// Shared memory headroom (bytes).
+    pub headroom: u64,
+    /// Predicted seconds of backlog still to run (0 when idle).
+    pub backlog: f64,
+}
+
+/// A placement policy. `plan` is called at every arrival event (and
+/// repeatedly while draining after the last arrival) and returns the
+/// `(queue index, device index)` assignments it commits *now*. It may
+/// return an empty vector to wait for more arrivals — but once
+/// `stream_done` it must make progress on a non-empty queue, or the
+/// engine reports an error rather than spinning.
+pub trait PlacementPolicy: Send {
+    fn name(&self) -> &'static str;
+    fn plan(
+        &mut self,
+        queue: &[QueuedJob],
+        devices: &[DeviceView],
+        stream_done: bool,
+    ) -> Vec<(usize, usize)>;
+}
+
+/// Build the policy behind a [`PolicyKind`]. `seed` feeds the GA's
+/// per-wave searches; the greedy policies are deterministic regardless.
+pub fn make_policy(kind: PolicyKind, seed: u64) -> Box<dyn PlacementPolicy> {
+    match kind {
+        PolicyKind::FirstFit => Box::new(FirstFit),
+        PolicyKind::BestFitMemory => Box::new(BestFitMemory),
+        PolicyKind::LeastPredictedFinish => Box::new(LeastPredictedFinish),
+        PolicyKind::Ga => Box::new(GaPlanner::new(seed)),
+    }
+}
+
+/// Place every queued job on a device chosen by `pick`; `pick` sees the
+/// policy's own earlier picks through the running backlog copy.
+fn place_all(
+    queue: &[QueuedJob],
+    devices: &[DeviceView],
+    mut pick: impl FnMut(&QueuedJob, &[f64]) -> Option<usize>,
+) -> Vec<(usize, usize)> {
+    let mut backlog: Vec<f64> = devices.iter().map(|d| d.backlog).collect();
+    let mut out = Vec::with_capacity(queue.len());
+    for (qi, job) in queue.iter().enumerate() {
+        if let Some(d) = pick(job, &backlog) {
+            backlog[d] += job.pred_time[d];
+            out.push((qi, d));
+        }
+    }
+    out
+}
+
+pub struct FirstFit;
+
+impl PlacementPolicy for FirstFit {
+    fn name(&self) -> &'static str {
+        PolicyKind::FirstFit.as_str()
+    }
+
+    fn plan(
+        &mut self,
+        queue: &[QueuedJob],
+        devices: &[DeviceView],
+        _stream_done: bool,
+    ) -> Vec<(usize, usize)> {
+        place_all(queue, devices, |job, _| {
+            (0..devices.len()).find(|&d| job.fits(d, devices))
+        })
+    }
+}
+
+pub struct BestFitMemory;
+
+impl PlacementPolicy for BestFitMemory {
+    fn name(&self) -> &'static str {
+        PolicyKind::BestFitMemory.as_str()
+    }
+
+    fn plan(
+        &mut self,
+        queue: &[QueuedJob],
+        devices: &[DeviceView],
+        _stream_done: bool,
+    ) -> Vec<(usize, usize)> {
+        place_all(queue, devices, |job, _| {
+            (0..devices.len())
+                .filter(|&d| job.fits(d, devices))
+                .min_by_key(|&d| devices[d].headroom - job.pred_mem[d])
+        })
+    }
+}
+
+pub struct LeastPredictedFinish;
+
+impl PlacementPolicy for LeastPredictedFinish {
+    fn name(&self) -> &'static str {
+        PolicyKind::LeastPredictedFinish.as_str()
+    }
+
+    fn plan(
+        &mut self,
+        queue: &[QueuedJob],
+        devices: &[DeviceView],
+        _stream_done: bool,
+    ) -> Vec<(usize, usize)> {
+        place_all(queue, devices, |job, backlog| {
+            (0..devices.len())
+                .filter(|&d| job.fits(d, devices))
+                .min_by(|&a, &b| {
+                    let fa = backlog[a] + job.pred_time[a];
+                    let fb = backlog[b] + job.pred_time[b];
+                    fa.total_cmp(&fb)
+                })
+        })
+    }
+}
+
+/// The GA policy: wait until [`GaPlanner::WAVE`] jobs are queued (or the
+/// arrival stream ends), then solve the whole wave jointly with
+/// [`ga::optimize_from`] on top of the devices' predicted backlog. Each
+/// wave gets a distinct derived seed so re-plans explore independently
+/// while the whole run stays deterministic. Falls back to the greedy
+/// least-finish assignment if the GA finds no feasible joint plan.
+pub struct GaPlanner {
+    seed: u64,
+    waves_planned: u64,
+}
+
+impl GaPlanner {
+    /// Arrivals batched per GA wave. Small enough that jobs are not
+    /// held back long, large enough that joint planning has room to
+    /// beat the one-job-at-a-time greedy.
+    pub const WAVE: usize = 8;
+
+    pub fn new(seed: u64) -> GaPlanner {
+        GaPlanner {
+            seed,
+            waves_planned: 0,
+        }
+    }
+}
+
+impl PlacementPolicy for GaPlanner {
+    fn name(&self) -> &'static str {
+        PolicyKind::Ga.as_str()
+    }
+
+    fn plan(
+        &mut self,
+        queue: &[QueuedJob],
+        devices: &[DeviceView],
+        stream_done: bool,
+    ) -> Vec<(usize, usize)> {
+        if queue.is_empty() || (!stream_done && queue.len() < Self::WAVE) {
+            return Vec::new();
+        }
+        let jobs: Vec<JobCost> = queue
+            .iter()
+            .map(|q| JobCost {
+                name: q.name.clone(),
+                time: q.pred_time.clone(),
+                mem: q.pred_mem.clone(),
+            })
+            .collect();
+        let machines = Machines {
+            headroom: devices.iter().map(|d| d.headroom).collect(),
+        };
+        let initial: Vec<f64> = devices.iter().map(|d| d.backlog).collect();
+        let params = ga::GaParams {
+            seed: self.seed ^ self.waves_planned.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            ..ga::GaParams::default()
+        };
+        self.waves_planned += 1;
+        match ga::optimize_from(&jobs, &machines, &initial, &params) {
+            Some(trace) => trace
+                .best_plan
+                .iter()
+                .enumerate()
+                .map(|(qi, &m)| (qi, m as usize))
+                .collect(),
+            // No feasible joint plan (some queued job fits nowhere —
+            // the engine screens against this, but stay total): place
+            // greedily; unplaceable jobs stay queued.
+            None => LeastPredictedFinish.plan(queue, devices, stream_done),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GB: u64 = 1 << 30;
+
+    fn views(headroom_backlog: &[(u64, f64)]) -> Vec<DeviceView> {
+        headroom_backlog
+            .iter()
+            .map(|&(headroom, backlog)| DeviceView { headroom, backlog })
+            .collect()
+    }
+
+    fn jobs(costs: &[(&str, &[f64], &[u64])]) -> Vec<QueuedJob> {
+        costs
+            .iter()
+            .map(|(name, time, mem)| QueuedJob {
+                name: name.to_string(),
+                pred_time: time.to_vec(),
+                pred_mem: mem.to_vec(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn kind_names_roundtrip_and_unknown_lists_choices() {
+        for kind in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(kind.as_str()).unwrap(), kind);
+        }
+        let e = PolicyKind::parse("round-robin").unwrap_err().to_string();
+        assert!(e.contains("least-finish") && e.contains("first-fit"), "{e}");
+    }
+
+    #[test]
+    fn first_fit_stacks_on_the_first_fitting_device() {
+        let devices = views(&[(10 * GB, 0.0), (20 * GB, 0.0)]);
+        let queue = jobs(&[
+            ("a", &[10.0, 5.0], &[GB, GB]),
+            ("b", &[10.0, 5.0], &[GB, GB]),
+            ("big", &[10.0, 5.0], &[15 * GB, 15 * GB]), // only fits device 1
+        ]);
+        let plan = FirstFit.plan(&queue, &devices, true);
+        assert_eq!(plan, vec![(0, 0), (1, 0), (2, 1)]);
+    }
+
+    #[test]
+    fn best_fit_memory_picks_the_tightest_device() {
+        let devices = views(&[(20 * GB, 0.0), (10 * GB, 0.0)]);
+        let queue = jobs(&[("a", &[10.0, 10.0], &[8 * GB, 8 * GB])]);
+        // 10 GB leaves 2 GB spare vs 12 GB spare on the big device.
+        let plan = BestFitMemory.plan(&queue, &devices, true);
+        assert_eq!(plan, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn least_finish_balances_across_devices() {
+        let devices = views(&[(20 * GB, 0.0), (20 * GB, 0.0)]);
+        let queue = jobs(&[
+            ("a", &[10.0, 10.0], &[GB, GB]),
+            ("b", &[10.0, 10.0], &[GB, GB]),
+            ("c", &[10.0, 10.0], &[GB, GB]),
+            ("d", &[10.0, 10.0], &[GB, GB]),
+        ]);
+        let plan = LeastPredictedFinish.plan(&queue, &devices, true);
+        let on0 = plan.iter().filter(|&&(_, d)| d == 0).count();
+        assert_eq!(on0, 2, "4 equal jobs over 2 equal devices split 2/2: {plan:?}");
+    }
+
+    #[test]
+    fn least_finish_respects_existing_backlog() {
+        let devices = views(&[(20 * GB, 100.0), (20 * GB, 0.0)]);
+        let queue = jobs(&[("a", &[10.0, 30.0], &[GB, GB])]);
+        // Device 0 is faster for the job but 100s behind; device 1 wins.
+        let plan = LeastPredictedFinish.plan(&queue, &devices, true);
+        assert_eq!(plan, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn ga_waits_for_a_wave_then_places_everything() {
+        let devices = views(&[(20 * GB, 0.0), (20 * GB, 0.0)]);
+        let queue = jobs(&[("a", &[10.0, 10.0], &[GB, GB])]);
+        let mut ga = GaPlanner::new(7);
+        assert!(
+            ga.plan(&queue, &devices, false).is_empty(),
+            "one queued job mid-stream is below the wave size"
+        );
+        let committed = ga.plan(&queue, &devices, true);
+        assert_eq!(committed.len(), 1);
+        // A full wave is planned even mid-stream.
+        let wave: Vec<QueuedJob> = (0..GaPlanner::WAVE)
+            .map(|i| QueuedJob {
+                name: format!("j{i}"),
+                pred_time: vec![10.0, 10.0],
+                pred_mem: vec![GB, GB],
+            })
+            .collect();
+        let committed = ga.plan(&wave, &devices, false);
+        assert_eq!(committed.len(), GaPlanner::WAVE);
+    }
+
+    #[test]
+    fn ga_plan_is_at_least_as_good_as_greedy_on_a_wave() {
+        // Heterogeneous durations where greedy one-at-a-time ordering
+        // can be improved by joint planning; the GA's greedy-seeded
+        // population guarantees it never does worse.
+        let devices = views(&[(20 * GB, 0.0), (20 * GB, 0.0)]);
+        let queue = jobs(&[
+            ("a", &[50.0, 50.0], &[GB, GB]),
+            ("b", &[40.0, 40.0], &[GB, GB]),
+            ("c", &[30.0, 30.0], &[GB, GB]),
+            ("d", &[30.0, 30.0], &[GB, GB]),
+            ("e", &[20.0, 20.0], &[GB, GB]),
+            ("f", &[10.0, 10.0], &[GB, GB]),
+        ]);
+        let finish = |plan: &[(usize, usize)]| {
+            let mut load = [0.0f64; 2];
+            for &(qi, d) in plan {
+                load[d] += queue[qi].pred_time[d];
+            }
+            load[0].max(load[1])
+        };
+        let greedy = finish(&LeastPredictedFinish.plan(&queue, &devices, true));
+        let ga = finish(&GaPlanner::new(3).plan(&queue, &devices, true));
+        assert!(ga <= greedy + 1e-9, "GA {ga} must not lose to greedy {greedy}");
+        assert!((ga - 90.0).abs() < 1e-9, "180s of work over 2 devices packs to 90s");
+    }
+}

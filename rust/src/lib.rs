@@ -39,8 +39,13 @@
 //!   answer cache + sharded batcher + workers + bounded admission).
 //! * [`net`] — the TCP front door: `dnnabacus-wire-v1` length-prefixed
 //!   JSON protocol, server with admission control and graceful drain,
-//!   pipelining client.
-//! * [`scheduler`] — the §4.3 genetic-algorithm job scheduler.
+//!   pipelining client, and the `schedule` placement request kind.
+//! * [`scheduler`] — the §4.3 genetic-algorithm job scheduler,
+//!   generalized to N machines.
+//! * [`fleet`] — prediction-driven online cluster placement: policies
+//!   (first-fit / best-fit / least-predicted-finish / GA) over an
+//!   N-device cluster with OOM screening, utilization and regret
+//!   reporting.
 //! * [`experiments`] — one regeneration harness per paper figure/table.
 //! * [`bench_harness`] — criterion-less timing harness for `benches/`.
 //! * [`util`] — support substrates (PRNG, JSON, stats, CLI, threads,
@@ -50,6 +55,7 @@ pub mod bench_harness;
 pub mod coordinator;
 pub mod experiments;
 pub mod features;
+pub mod fleet;
 pub mod graph;
 pub mod ingest;
 pub mod net;

@@ -21,6 +21,9 @@
 //!                   --listen ADDR (dnnabacus-wire-v1)
 //!   client          predict against a remote `serve --listen` server
 //!                   (--addr HOST:PORT, --model NAME or --spec FILE)
+//!   fleet           place a streaming job mix onto an N-device cluster
+//!                   with predicted costs (--devices, --jobs, --policy,
+//!                   --arrival-rate, --specs DIR, --json)
 //!   nsm-demo        print the NSM of a model (paper Figures 6-7)
 //!
 //! Common flags: --scale 0.35 --seed 42 --out dir --model vgg16
@@ -39,6 +42,11 @@
 //! `client` flags: --addr HOST:PORT --count N (pipelined repeats)
 //!                 plus the common config flags, forwarded per request
 //!
+//! `fleet` flags:  --devices rtx2080x2,rtx3090 --jobs 20
+//!                 --policy first-fit|best-fit-memory|least-finish|ga|all
+//!                 --arrival-rate 0.05 (mean jobs per simulated second;
+//!                 0 = all at once) --specs DIR --json
+//!
 //! `--backend mlp` needs the AOT artifacts (python/compile/aot.py) and a
 //! PJRT binding; this zero-dependency build ships a stub backend, so the
 //! default `automl` backend is the serving path.
@@ -51,6 +59,7 @@ use dnnabacus::coordinator::{
 };
 use dnnabacus::experiments::{self, Ctx};
 use dnnabacus::features::Nsm;
+use dnnabacus::fleet;
 use dnnabacus::graph::Graph;
 use dnnabacus::ingest::{self, ParsedSpec};
 use dnnabacus::net::{self, WireModel, WireRequest, WireResponse};
@@ -77,6 +86,7 @@ fn main() {
         Some("export-spec") => export_spec(&args),
         Some("serve") => serve(&args),
         Some("client") => client(&args),
+        Some("fleet") => fleet(&args),
         Some("nsm-demo") => nsm_demo(&args),
         Some(cmd) => run_experiment(cmd, &args),
         None => {
@@ -341,7 +351,10 @@ fn serve(args: &Args) -> dnnabacus::Result<()> {
     println!("backend: {}", backend.name());
     // Arc-wrapped so the zipf mix below clones a pointer per request,
     // not a graph.
-    let specs: Vec<Arc<ParsedSpec>> = load_spec_dir(args)?.into_iter().map(Arc::new).collect();
+    let specs: Vec<Arc<ParsedSpec>> = load_spec_dir(args, false)?
+        .into_iter()
+        .map(Arc::new)
+        .collect();
     let svc = PredictionService::start(svc_cfg, backend);
     let names: Vec<&str> = zoo::CLASSIC_29.iter().map(|(n, _)| *n).collect();
     let batches = [32usize, 64, 128, 256];
@@ -450,7 +463,8 @@ fn serve_listen(args: &Args) -> dnnabacus::Result<()> {
             .set("answered", wire.answered)
             .set("overloaded", wire.overloaded)
             .set("bad_requests", wire.bad_requests)
-            .set("io_errors", wire.io_errors);
+            .set("io_errors", wire.io_errors)
+            .set("schedules", wire.schedules);
         let mut s = Json::obj();
         s.set("served", m.served)
             .set("errors", m.errors)
@@ -542,6 +556,11 @@ fn client(args: &Args) -> dnnabacus::Result<()> {
                     },
                     prediction.latency_s * 1e3,
                 ),
+                // `client` only sends predict requests; a schedule
+                // reply would be a server bug — surface it raw.
+                WireResponse::Schedule { id, report } => {
+                    println!("request {id}: unexpected schedule report {report}")
+                }
                 WireResponse::Err { id, kind, message } => {
                     eprintln!("request {id}: {} — {message}", kind.as_str())
                 }
@@ -555,6 +574,78 @@ fn client(args: &Args) -> dnnabacus::Result<()> {
         }
     }
     dnnabacus::ensure!(failed == 0, "{failed}/{count} requests failed");
+    Ok(())
+}
+
+/// `fleet`: place a deterministic streaming job mix onto an N-device
+/// cluster with predicted costs, one run per requested policy, and
+/// report makespan / utilization / waits / regret. `--policy all`
+/// (the default) compares every policy on the identical workload.
+fn fleet(args: &Args) -> dnnabacus::Result<()> {
+    let ctx = ctx_from(args);
+    let cluster = fleet::Cluster::parse(&args.str_or("devices", "rtx2080,rtx3090"))?;
+    let n_jobs = args.usize_or("jobs", 20);
+    let arrival_rate = args.f64_or("arrival-rate", 0.05);
+    let json = args.bool("json");
+    let kinds: Vec<fleet::PolicyKind> = match args.str_or("policy", "all").as_str() {
+        "all" => fleet::PolicyKind::ALL.to_vec(),
+        name => vec![fleet::PolicyKind::parse(name)?],
+    };
+    let specs: Vec<Arc<ParsedSpec>> = load_spec_dir(args, json)?
+        .into_iter()
+        .map(Arc::new)
+        .collect();
+    let jobs = fleet::job_mix(n_jobs, ctx.seed, &specs);
+    let backend = backend_from(args, &ctx)?;
+    if !json {
+        println!("backend: {}", backend.name());
+    }
+    let svc = PredictionService::start(service_config(args), backend);
+    let mut costs = fleet::ServiceCosts::new(&svc);
+    let params = fleet::SimParams {
+        seed: ctx.seed,
+        arrival_rate,
+        mem_safety: fleet::MEM_SAFETY,
+    };
+    let mut reports = Vec::with_capacity(kinds.len());
+    for kind in kinds {
+        let mut policy = fleet::make_policy(kind, ctx.seed);
+        reports.push(fleet::run(
+            &cluster,
+            &jobs,
+            policy.as_mut(),
+            &mut costs,
+            &params,
+        )?);
+    }
+    // `costs` borrows the service; release it before the move-out drain.
+    drop(costs);
+    let m = svc.shutdown();
+    if json {
+        let mut o = Json::obj();
+        o.set("devices", args.str_or("devices", "rtx2080,rtx3090").as_str())
+            .set("jobs", n_jobs)
+            .set("seed", ctx.seed)
+            .set("arrival_rate", arrival_rate)
+            .set("cache_hits", m.cache_hits)
+            .set("cache_misses", m.cache_misses)
+            .set(
+                "reports",
+                Json::Arr(reports.iter().map(fleet::FleetReport::to_json).collect()),
+            );
+        println!("{o}");
+    } else {
+        for r in &reports {
+            println!("{}", r.render());
+        }
+        if reports.len() > 1 {
+            println!("{}", fleet::comparison_table(&reports).render());
+        }
+        println!(
+            "prediction cache over {} cost queries: {} hits / {} misses",
+            m.served, m.cache_hits, m.cache_misses
+        );
+    }
     Ok(())
 }
 
@@ -595,10 +686,18 @@ fn overrides_from(args: &Args) -> dnnabacus::Result<Json> {
 
 /// Load and compile every `*.json` spec under `--specs DIR` (empty when
 /// the flag is absent). Specs whose input channels match no dataset are
-/// skipped with a note rather than failing the whole load.
-fn load_spec_dir(args: &Args) -> dnnabacus::Result<Vec<ParsedSpec>> {
+/// skipped with a note rather than failing the whole load. `quiet`
+/// routes the notes to stderr so `--json` stdout stays machine-parsable.
+fn load_spec_dir(args: &Args, quiet: bool) -> dnnabacus::Result<Vec<ParsedSpec>> {
     let Some(dir) = args.get("specs") else {
         return Ok(Vec::new());
+    };
+    let note = |line: String| {
+        if quiet {
+            eprintln!("{line}");
+        } else {
+            println!("{line}");
+        }
     };
     let mut specs = Vec::new();
     let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
@@ -612,18 +711,18 @@ fn load_spec_dir(args: &Args) -> dnnabacus::Result<Vec<ParsedSpec>> {
         let parsed =
             ingest::compile_str(&text).with_context(|| format!("spec {}", path.display()))?;
         if parsed.matching_dataset().is_none() {
-            println!(
+            note(format!(
                 "skipping {}: no dataset with {}-channel {}x{} samples",
                 path.display(),
                 parsed.input_channels(),
                 parsed.input_hw(),
                 parsed.input_hw()
-            );
+            ));
             continue;
         }
         specs.push(parsed);
     }
-    println!("loaded {} specs from {dir}", specs.len());
+    note(format!("loaded {} specs from {dir}", specs.len()));
     Ok(specs)
 }
 

@@ -10,7 +10,7 @@
 //! surfacing the error.
 
 use super::frame;
-use super::proto::{WireRequest, WireResponse};
+use super::proto::{ScheduleRequest, WireRequest, WireResponse};
 use crate::util::error::Context as _;
 use crate::util::json::Json;
 use std::net::TcpStream;
@@ -67,7 +67,12 @@ impl Client {
     /// Queue one request on the wire without waiting for its answer —
     /// the pipelining half; pair with [`recv`](Self::recv) in order.
     pub fn send(&mut self, req: &WireRequest) -> crate::Result<()> {
-        let body = req.to_json().to_string();
+        self.send_body(&req.to_json())
+    }
+
+    /// Write one already-encoded request body.
+    fn send_body(&mut self, body: &Json) -> crate::Result<()> {
+        let body = body.to_string();
         let stream = self.ensure_connected()?;
         if let Err(e) = frame::write_frame(stream, body.as_bytes()) {
             self.stream = None; // poisoned; reconnect on next use
@@ -125,6 +130,33 @@ impl Client {
         crate::ensure!(
             resp.id() == req.id,
             "response id {} does not match request id {}",
+            resp.id(),
+            req.id
+        );
+        Ok(resp)
+    }
+
+    /// Send one `schedule` request and wait for its placement report.
+    /// Like [`call`](Self::call), a connection-level failure retries
+    /// once on a fresh connection — safe because placement runs are
+    /// deterministic for a given seed.
+    pub fn schedule(&mut self, req: &ScheduleRequest) -> crate::Result<WireResponse> {
+        match self.schedule_round(req) {
+            Ok(resp) => Ok(resp),
+            Err(first) => {
+                self.stream = None;
+                self.schedule_round(req)
+                    .map_err(|e| e.context(format!("after reconnect (first attempt: {first:#})")))
+            }
+        }
+    }
+
+    fn schedule_round(&mut self, req: &ScheduleRequest) -> crate::Result<WireResponse> {
+        self.send_body(&req.to_json())?;
+        let resp = self.recv()?;
+        crate::ensure!(
+            resp.id() == req.id,
+            "response id {} does not match schedule request id {}",
             resp.id(),
             req.id
         );

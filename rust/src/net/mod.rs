@@ -10,11 +10,13 @@
 //!   UTF-8 JSON payload), with a hard payload cap, truncation
 //!   detection, and a drain-safe bounded wait that never gives up
 //!   mid-frame;
-//! * [`proto`] — request/response bodies: a request carries a
+//! * [`proto`] — request/response bodies: a predict request carries a
 //!   [`proto::WireModel`] (zoo name or inline `dnnabacus-spec-v1`
-//!   document) plus config overrides under the CLI flag names; a
-//!   response is a prediction or a structured [`proto::ErrorKind`]
-//!   error (`bad_request`, `overloaded`, `shutting_down`, `internal`);
+//!   document) plus config overrides under the CLI flag names, and a
+//!   `schedule` request carries a cluster spec, a policy and a job
+//!   stream for the fleet placement engine; a response is a prediction,
+//!   a placement report, or a structured [`proto::ErrorKind`] error
+//!   (`bad_request`, `overloaded`, `shutting_down`, `internal`);
 //! * [`server`] — accept loop + per-connection handlers on a bounded
 //!   thread pool, two-level admission control (connection slots, then
 //!   the service's `max_inflight` bound — overload is an explicit
@@ -35,5 +37,7 @@ pub mod proto;
 pub mod server;
 
 pub use client::Client;
-pub use proto::{ErrorKind, WireModel, WireRequest, WireResponse, WIRE_FORMAT};
+pub use proto::{
+    ErrorKind, ScheduleRequest, WireCall, WireModel, WireRequest, WireResponse, WIRE_FORMAT,
+};
 pub use server::{NetMetrics, Server, ServerConfig};

@@ -1,21 +1,32 @@
 //! `dnnabacus-wire-v1` request and response bodies.
 //!
-//! A request is one JSON object carrying the model reference — `model`
-//! (a zoo name) or `spec` (an inline `dnnabacus-spec-v1` document,
-//! compiled server-side) — plus optional config overrides under the
-//! same names and values as the `predict`/`predict-spec` CLI flags.
-//! Absent fields take the CLI defaults; a spec request without an
-//! explicit `dataset` resolves to the dataset matching the spec's
-//! declared input geometry, exactly like `predict-spec`.
+//! A **predict** request (the default `kind`) is one JSON object
+//! carrying the model reference — `model` (a zoo name) or `spec` (an
+//! inline `dnnabacus-spec-v1` document, compiled server-side) — plus
+//! optional config overrides under the same names and values as the
+//! `predict`/`predict-spec` CLI flags. Absent fields take the CLI
+//! defaults; a spec request without an explicit `dataset` resolves to
+//! the dataset matching the spec's declared input geometry, exactly
+//! like `predict-spec`.
+//!
+//! A **schedule** request (`"kind":"schedule"`) asks the server to
+//! place a stream of training jobs onto a cluster with the fleet
+//! engine: it carries a `devices` cluster spec, a `policy` name, a
+//! `seed`, an `arrival_rate`, and a `jobs` array whose entries are
+//! predict-shaped job objects (model or spec plus config overrides —
+//! but no `device`: the fleet assigns devices). The reply carries the
+//! full placement report.
 //!
 //! A response mirrors the CLI's `--json` output: `{"ok":true, "id":…,
-//! "model":…, "prediction":{…}}` on success, or `{"ok":false, "id":…,
-//! "error":{"kind":…, "message":…}}` with a machine-readable
-//! [`ErrorKind`]. Every decode failure maps to a `bad_request` reply on
-//! the server side — a malformed body must never cost a client its
-//! connection.
+//! "model":…, "prediction":{…}}` on success (or `{"ok":true, "id":…,
+//! "kind":"schedule", "report":{…}}` for placements), or
+//! `{"ok":false, "id":…, "error":{"kind":…, "message":…}}` with a
+//! machine-readable [`ErrorKind`]. Every decode failure maps to a
+//! `bad_request` reply on the server side — a malformed body must never
+//! cost a client its connection.
 
 use crate::coordinator::{ModelRef, PredictRequest, Prediction};
+use crate::fleet::{Cluster, FleetJob, PolicyKind};
 use crate::ingest::ModelSpec;
 use crate::sim::{DatasetKind, DeviceProfile, Framework, Optimizer, TrainConfig};
 use crate::util::json::Json;
@@ -95,9 +106,136 @@ impl WireRequest {
     }
 }
 
-/// Decode and resolve a request body into a service-ready
-/// [`PredictRequest`]. Every failure here is client-caused — the server
-/// maps them to `bad_request` replies.
+/// Client-side builder for a `schedule` request body.
+#[derive(Debug, Clone)]
+pub struct ScheduleRequest {
+    pub id: u64,
+    /// Cluster spec, e.g. `"rtx2080x2,rtx3090"`.
+    pub devices: String,
+    /// Policy name (see [`PolicyKind::as_str`]).
+    pub policy: String,
+    pub seed: u64,
+    /// Mean simulated arrivals per second; 0 = all jobs at t = 0.
+    pub arrival_rate: f64,
+    /// Job objects: predict-shaped bodies (model or spec + overrides).
+    pub jobs: Vec<Json>,
+}
+
+impl ScheduleRequest {
+    pub fn new(id: u64, devices: &str, policy: PolicyKind) -> ScheduleRequest {
+        ScheduleRequest {
+            id,
+            devices: devices.to_string(),
+            policy: policy.as_str().to_string(),
+            seed: 0,
+            arrival_rate: 0.0,
+            jobs: Vec::new(),
+        }
+    }
+
+    /// Add one zoo-name job with config overrides. Panics if
+    /// `overrides` is not a JSON object (same contract as
+    /// [`Json::set`]) — silently dropping a malformed overrides value
+    /// would enqueue a different workload than the caller specified.
+    pub fn push_zoo(&mut self, name: &str, overrides: Json) -> &mut Self {
+        let mut o = overrides;
+        o.set("model", name);
+        self.jobs.push(o);
+        self
+    }
+
+    /// Add one inline-spec job with config overrides; panics on a
+    /// non-object `overrides` like [`push_zoo`](Self::push_zoo).
+    pub fn push_spec(&mut self, spec: Json, overrides: Json) -> &mut Self {
+        let mut o = overrides;
+        o.set("spec", spec);
+        self.jobs.push(o);
+        self
+    }
+
+    /// Encode as the wire body.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("format", WIRE_FORMAT)
+            .set("kind", "schedule")
+            .set("id", self.id)
+            .set("devices", self.devices.as_str())
+            .set("policy", self.policy.as_str())
+            .set("seed", self.seed)
+            .set("arrival_rate", self.arrival_rate)
+            .set("jobs", Json::Arr(self.jobs.clone()));
+        o
+    }
+}
+
+/// Either kind of decoded request — what the server dispatches on.
+#[derive(Debug, Clone)]
+pub enum WireCall {
+    Predict(PredictRequest),
+    Schedule(ScheduleCall),
+}
+
+/// A decoded, server-ready `schedule` request.
+#[derive(Debug, Clone)]
+pub struct ScheduleCall {
+    pub id: u64,
+    pub cluster: Cluster,
+    pub policy: PolicyKind,
+    pub seed: u64,
+    pub arrival_rate: f64,
+    pub jobs: Vec<FleetJob>,
+}
+
+/// Most jobs one `schedule` request may carry — keeps a single frame's
+/// worth of placement work bounded.
+pub const MAX_SCHEDULE_JOBS: usize = 512;
+
+/// Decode a request body into a [`WireCall`], dispatching on the
+/// optional `kind` field (absent = `predict`). Every failure here is
+/// client-caused — the server maps them to `bad_request` replies.
+pub fn parse_call(doc: &Json) -> crate::Result<WireCall> {
+    if !matches!(doc, Json::Obj(_)) {
+        crate::bail!("request must be a JSON object");
+    }
+    check_format(doc)?;
+    match doc.get("kind") {
+        None => Ok(WireCall::Predict(parse_request(doc)?)),
+        Some(k) => match k.as_str() {
+            Some("predict") => Ok(WireCall::Predict(parse_request(doc)?)),
+            Some("schedule") => Ok(WireCall::Schedule(parse_schedule(doc)?)),
+            Some(other) => crate::bail!("unknown request kind '{other}' (predict|schedule)"),
+            None => crate::bail!("'kind' must be a string"),
+        },
+    }
+}
+
+fn check_format(doc: &Json) -> crate::Result<()> {
+    if let Some(f) = doc.get("format") {
+        let f = f
+            .as_str()
+            .ok_or_else(|| crate::err!("'format' must be a string"))?;
+        if f != WIRE_FORMAT {
+            crate::bail!("unsupported wire format '{f}' (this server speaks \"{WIRE_FORMAT}\")");
+        }
+    }
+    Ok(())
+}
+
+/// Read an optional non-negative integer field that must survive the
+/// JSON f64 funnel exactly (within 2^53) — the one interpreter for
+/// `id` and `seed` fields across request kinds.
+fn exact_u64_field(doc: &Json, key: &str, default: u64) -> crate::Result<u64> {
+    match doc.get(key) {
+        None => Ok(default),
+        Some(j) => match j.as_f64().and_then(exact_u64) {
+            Some(v) => Ok(v),
+            None => crate::bail!("'{key}' must be a non-negative integer within 2^53"),
+        },
+    }
+}
+
+/// Decode and resolve a predict-kind body into a service-ready
+/// [`PredictRequest`].
 pub fn parse_request(doc: &Json) -> crate::Result<PredictRequest> {
     let Json::Obj(fields) = doc else {
         crate::bail!("request must be a JSON object");
@@ -106,6 +244,7 @@ pub fn parse_request(doc: &Json) -> crate::Result<PredictRequest> {
         if !matches!(
             key.as_str(),
             "format"
+                | "kind"
                 | "id"
                 | "model"
                 | "spec"
@@ -122,21 +261,22 @@ pub fn parse_request(doc: &Json) -> crate::Result<PredictRequest> {
             crate::bail!("unknown request field '{key}'");
         }
     }
-    if let Some(f) = doc.get("format") {
-        let f = f
-            .as_str()
-            .ok_or_else(|| crate::err!("'format' must be a string"))?;
-        if f != WIRE_FORMAT {
-            crate::bail!("unsupported wire format '{f}' (this server speaks \"{WIRE_FORMAT}\")");
+    check_format(doc)?;
+    if let Some(k) = doc.get("kind") {
+        if k.as_str() != Some("predict") {
+            crate::bail!("parse_request handles only predict-kind bodies");
         }
     }
-    let id = match doc.get("id") {
-        None => 0,
-        Some(j) => match j.as_f64().and_then(exact_u64) {
-            Some(id) => id,
-            None => crate::bail!("'id' must be a non-negative integer within 2^53"),
-        },
-    };
+    let id = exact_u64_field(doc, "id", 0)?;
+    let (model, dataset) = resolve_model(doc)?;
+    let config = config_from(doc, dataset)?;
+    Ok(PredictRequest { id, model, config })
+}
+
+/// Resolve a body's `model`/`spec` + optional `dataset` fields into a
+/// [`ModelRef`] and the dataset to featurize against — shared by
+/// predict requests and each entry of a schedule request's `jobs`.
+fn resolve_model(doc: &Json) -> crate::Result<(ModelRef, DatasetKind)> {
     let explicit_dataset = match doc.get("dataset") {
         None => None,
         Some(j) => {
@@ -146,7 +286,7 @@ pub fn parse_request(doc: &Json) -> crate::Result<PredictRequest> {
             Some(dataset_by_name(name)?)
         }
     };
-    let (model, dataset) = match (doc.get("model"), doc.get("spec")) {
+    match (doc.get("model"), doc.get("spec")) {
         (Some(_), Some(_)) => {
             crate::bail!("request carries both 'model' and 'spec'; send exactly one")
         }
@@ -158,7 +298,7 @@ pub fn parse_request(doc: &Json) -> crate::Result<PredictRequest> {
                 .as_str()
                 .ok_or_else(|| crate::err!("'model' must be a string (zoo name)"))?;
             let dataset = explicit_dataset.unwrap_or(DatasetKind::Cifar100);
-            (ModelRef::Zoo(name.to_string()), dataset)
+            Ok((ModelRef::Zoo(name.to_string()), dataset))
         }
         (None, Some(s)) => {
             let parsed = ModelSpec::from_json(s)?
@@ -178,11 +318,119 @@ pub fn parse_request(doc: &Json) -> crate::Result<PredictRequest> {
                 })?,
             };
             parsed.check_dataset(dataset)?;
-            (ModelRef::Spec(std::sync::Arc::new(parsed)), dataset)
+            Ok((ModelRef::Spec(std::sync::Arc::new(parsed)), dataset))
+        }
+    }
+}
+
+/// Decode a schedule-kind body into a [`ScheduleCall`].
+fn parse_schedule(doc: &Json) -> crate::Result<ScheduleCall> {
+    let Json::Obj(fields) = doc else {
+        crate::bail!("request must be a JSON object");
+    };
+    for key in fields.keys() {
+        if !matches!(
+            key.as_str(),
+            "format" | "kind" | "id" | "devices" | "policy" | "seed" | "arrival_rate" | "jobs"
+        ) {
+            crate::bail!("unknown schedule field '{key}'");
+        }
+    }
+    let id = exact_u64_field(doc, "id", 0)?;
+    let cluster = match doc.get("devices") {
+        None => Cluster::paper(),
+        Some(j) => {
+            let spec = j.as_str().ok_or_else(|| {
+                crate::err!("'devices' must be a string like \"rtx2080x2,rtx3090\"")
+            })?;
+            Cluster::parse(spec)?
         }
     };
+    let policy = match doc.get("policy") {
+        None => PolicyKind::LeastPredictedFinish,
+        Some(j) => {
+            let name = j
+                .as_str()
+                .ok_or_else(|| crate::err!("'policy' must be a string"))?;
+            PolicyKind::parse(name)?
+        }
+    };
+    let seed = exact_u64_field(doc, "seed", 0)?;
+    let arrival_rate = match doc.get("arrival_rate") {
+        None => 0.0,
+        Some(j) => {
+            let x = j
+                .as_f64()
+                .ok_or_else(|| crate::err!("'arrival_rate' must be a number"))?;
+            if !(x.is_finite() && x >= 0.0) {
+                crate::bail!("'arrival_rate' must be finite and >= 0, got {x}");
+            }
+            x
+        }
+    };
+    let entries = doc
+        .get("jobs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| crate::err!("schedule request needs a 'jobs' array"))?;
+    if entries.is_empty() {
+        crate::bail!("'jobs' must not be empty");
+    }
+    if entries.len() > MAX_SCHEDULE_JOBS {
+        crate::bail!(
+            "'jobs' carries {} entries; the limit is {MAX_SCHEDULE_JOBS} per request",
+            entries.len()
+        );
+    }
+    let jobs = entries
+        .iter()
+        .enumerate()
+        .map(|(i, entry)| parse_job(entry).map_err(|e| e.context(format!("jobs[{i}]"))))
+        .collect::<crate::Result<Vec<FleetJob>>>()?;
+    Ok(ScheduleCall {
+        id,
+        cluster,
+        policy,
+        seed,
+        arrival_rate,
+        jobs,
+    })
+}
+
+/// One entry of a schedule request's `jobs` array: a predict-shaped
+/// body minus `format`/`kind`/`id` — and minus `device`, because the
+/// fleet assigns devices.
+fn parse_job(doc: &Json) -> crate::Result<FleetJob> {
+    let Json::Obj(fields) = doc else {
+        crate::bail!("job must be a JSON object");
+    };
+    for key in fields.keys() {
+        if key == "device" {
+            crate::bail!("jobs must not pin a 'device' — the fleet assigns devices");
+        }
+        if !matches!(
+            key.as_str(),
+            "model"
+                | "spec"
+                | "dataset"
+                | "batch"
+                | "data_fraction"
+                | "epochs"
+                | "lr"
+                | "optimizer"
+                | "framework"
+                | "seed"
+        ) {
+            crate::bail!("unknown job field '{key}'");
+        }
+    }
+    let (model, dataset) = resolve_model(doc)?;
     let config = config_from(doc, dataset)?;
-    Ok(PredictRequest { id, model, config })
+    let name = format!("{}@{}", model.name(), config.batch);
+    Ok(FleetJob {
+        name,
+        model,
+        config,
+    })
 }
 
 /// Apply config overrides (a JSON object keyed by the CLI flag names)
@@ -199,15 +447,10 @@ pub fn config_from(doc: &Json, dataset: DatasetKind) -> crate::Result<TrainConfi
     if let Some(j) = doc.get("epochs") {
         cfg.epochs = positive_usize(j, "epochs")?;
     }
-    if let Some(j) = doc.get("seed") {
-        cfg.seed = match j.as_f64().and_then(exact_u64) {
-            Some(seed) => seed,
-            // Seeds ride the wire as JSON numbers; a value that would
-            // round must fail loudly — a silently-different seed breaks
-            // reproducibility with no visible symptom.
-            None => crate::bail!("'seed' must be a non-negative integer within 2^53"),
-        };
-    }
+    // Seeds ride the wire as JSON numbers; a value that would round
+    // must fail loudly — a silently-different seed breaks
+    // reproducibility with no visible symptom.
+    cfg.seed = exact_u64_field(doc, "seed", cfg.seed)?;
     if let Some(j) = doc.get("data_fraction") {
         let x = j
             .as_f64()
@@ -298,7 +541,8 @@ impl ErrorKind {
     }
 }
 
-/// One response frame: a prediction, or a structured error.
+/// One response frame: a prediction, a placement report, or a
+/// structured error.
 #[derive(Debug, Clone)]
 pub enum WireResponse {
     Ok {
@@ -306,6 +550,9 @@ pub enum WireResponse {
         model: String,
         prediction: Prediction,
     },
+    /// A `schedule` request's placement report (the
+    /// [`crate::fleet::FleetReport`] JSON shape).
+    Schedule { id: u64, report: Json },
     Err {
         /// Echo of the request id (0 when the request was unparseable).
         id: u64,
@@ -334,12 +581,13 @@ impl WireResponse {
     pub fn id(&self) -> u64 {
         match self {
             WireResponse::Ok { prediction, .. } => prediction.id,
+            WireResponse::Schedule { id, .. } => *id,
             WireResponse::Err { id, .. } => *id,
         }
     }
 
     pub fn is_ok(&self) -> bool {
-        matches!(self, WireResponse::Ok { .. })
+        !matches!(self, WireResponse::Err { .. })
     }
 
     /// Encode as the wire body.
@@ -358,6 +606,12 @@ impl WireResponse {
                     .set("model", model.as_str())
                     .set("prediction", p);
             }
+            WireResponse::Schedule { id, report } => {
+                o.set("ok", true)
+                    .set("id", *id)
+                    .set("kind", "schedule")
+                    .set("report", report.clone());
+            }
             WireResponse::Err { id, kind, message } => {
                 let mut e = Json::obj();
                 e.set("kind", kind.as_str()).set("message", message.as_str());
@@ -375,6 +629,15 @@ impl WireResponse {
             .ok_or_else(|| crate::err!("response missing boolean 'ok'"))?;
         let id = doc.num("id")? as u64;
         if ok {
+            if doc.get("kind").and_then(Json::as_str) == Some("schedule") {
+                let report = doc
+                    .get("report")
+                    .ok_or_else(|| crate::err!("schedule response missing 'report'"))?;
+                return Ok(WireResponse::Schedule {
+                    id,
+                    report: report.clone(),
+                });
+            }
             let model = doc.str("model")?.to_string();
             let p = doc
                 .get("prediction")
@@ -520,6 +783,126 @@ mod tests {
                 assert_eq!(message, "busy");
             }
             other => panic!("expected Err, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn schedule_request_roundtrips_through_parse_call() {
+        let mut req = ScheduleRequest::new(9, "rtx2080x2,rtx3090", PolicyKind::Ga);
+        req.seed = 42;
+        req.arrival_rate = 0.05;
+        let mut overrides = Json::obj();
+        overrides.set("batch", 64u64).set("dataset", "mnist");
+        req.push_zoo("lenet5", overrides);
+        req.push_zoo("resnet18", Json::obj());
+        let spec = ingest::spec_for_zoo("lenet5", 1, 10).unwrap().to_json();
+        req.push_spec(spec, Json::obj());
+        let doc = Json::parse(&req.to_json().to_string()).unwrap();
+        let WireCall::Schedule(call) = parse_call(&doc).unwrap() else {
+            panic!("expected a schedule call");
+        };
+        assert_eq!(call.id, 9);
+        assert_eq!(call.cluster.len(), 3);
+        assert_eq!(call.cluster.devices[0].name, "rtx2080-0");
+        assert_eq!(call.policy, PolicyKind::Ga);
+        assert_eq!(call.seed, 42);
+        assert_eq!(call.arrival_rate, 0.05);
+        assert_eq!(call.jobs.len(), 3);
+        assert_eq!(call.jobs[0].name, "lenet5@64");
+        assert_eq!(call.jobs[0].config.dataset, DatasetKind::Mnist);
+        assert_eq!(call.jobs[1].config.batch, 128, "absent batch takes the CLI default");
+        // The inline-spec job resolved its dataset from the geometry.
+        assert_eq!(call.jobs[2].config.dataset, DatasetKind::Mnist);
+    }
+
+    #[test]
+    fn parse_call_defaults_to_predict_kind() {
+        let doc = WireRequest::zoo(4, "vgg16").to_json();
+        match parse_call(&doc).unwrap() {
+            WireCall::Predict(req) => assert_eq!(req.id, 4),
+            other => panic!("expected predict, got {other:?}"),
+        }
+        let explicit = Json::parse(r#"{"kind":"predict","model":"vgg16"}"#).unwrap();
+        assert!(matches!(parse_call(&explicit).unwrap(), WireCall::Predict(_)));
+    }
+
+    #[test]
+    fn schedule_rejects_malformed_bodies_with_reasons() {
+        for (text, needle) in [
+            (r#"{"kind":"teapot","model":"a"}"#, "unknown request kind"),
+            (r#"{"kind":"schedule"}"#, "'jobs' array"),
+            (r#"{"kind":"schedule","jobs":[]}"#, "must not be empty"),
+            (
+                r#"{"kind":"schedule","jobs":[{"model":"a"}],"policy":"rr"}"#,
+                "unknown policy",
+            ),
+            (
+                r#"{"kind":"schedule","jobs":[{"model":"a"}],"devices":"tpu"}"#,
+                "known devices",
+            ),
+            (
+                r#"{"kind":"schedule","jobs":[{"model":"a","device":"rtx2080"}]}"#,
+                "fleet assigns devices",
+            ),
+            (
+                r#"{"kind":"schedule","jobs":[{"model":"a","bogus":1}]}"#,
+                "unknown job field",
+            ),
+            (
+                r#"{"kind":"schedule","jobs":[{"model":"a","spec":{}}]}"#,
+                "both 'model' and 'spec'",
+            ),
+            (
+                r#"{"kind":"schedule","jobs":[{"model":"a"}],"arrival_rate":-1}"#,
+                ">= 0",
+            ),
+            (
+                r#"{"kind":"schedule","jobs":[{"model":"a"}],"seed":-3}"#,
+                "non-negative",
+            ),
+            (
+                r#"{"kind":"schedule","jobs":[{"model":"a"}],"budget":1}"#,
+                "unknown schedule field",
+            ),
+        ] {
+            let doc = Json::parse(text).unwrap();
+            let e = format!("{:#}", parse_call(&doc).unwrap_err());
+            assert!(e.contains(needle), "for {text}: {e}");
+        }
+        // Job-entry errors name the offending index.
+        let doc = Json::parse(r#"{"kind":"schedule","jobs":[{"model":"a"},{"nope":1}]}"#).unwrap();
+        let e = format!("{:#}", parse_call(&doc).unwrap_err());
+        assert!(e.contains("jobs[1]"), "{e}");
+    }
+
+    #[test]
+    fn schedule_job_cap_is_enforced() {
+        let job = Json::parse(r#"{"model":"lenet5"}"#).unwrap();
+        let mut req = ScheduleRequest::new(1, "rtx2080", PolicyKind::FirstFit);
+        req.jobs = vec![job; MAX_SCHEDULE_JOBS + 1];
+        let doc = Json::parse(&req.to_json().to_string()).unwrap();
+        let e = parse_call(&doc).unwrap_err().to_string();
+        assert!(e.contains("limit"), "{e}");
+    }
+
+    #[test]
+    fn schedule_responses_roundtrip() {
+        let mut report = Json::obj();
+        report.set("policy", "ga").set("makespan_true_s", 120.5);
+        let resp = WireResponse::Schedule {
+            id: 77,
+            report: report.clone(),
+        };
+        assert!(resp.is_ok());
+        assert_eq!(resp.id(), 77);
+        let back = WireResponse::from_json(&Json::parse(&resp.to_json().to_string()).unwrap());
+        match back.unwrap() {
+            WireResponse::Schedule { id, report: r } => {
+                assert_eq!(id, 77);
+                assert_eq!(r.str("policy").unwrap(), "ga");
+                assert_eq!(r.num("makespan_true_s").unwrap(), 120.5);
+            }
+            other => panic!("expected Schedule, got {other:?}"),
         }
     }
 

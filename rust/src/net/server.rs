@@ -19,6 +19,7 @@
 use super::frame::{self, FrameError, Waited};
 use super::proto::{self, ErrorKind, WireResponse};
 use crate::coordinator::{PredictionService, Prediction, ServiceMetrics};
+use crate::fleet;
 use crate::util::error::Context as _;
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
@@ -80,6 +81,8 @@ pub struct NetMetrics {
     pub bad_requests: u64,
     /// Connections dropped on truncated frames or socket errors.
     pub io_errors: u64,
+    /// `schedule` requests served (fleet placement reports).
+    pub schedules: u64,
 }
 
 struct Shared {
@@ -94,6 +97,7 @@ struct Shared {
     overloaded: AtomicU64,
     bad_requests: AtomicU64,
     io_errors: AtomicU64,
+    schedules: AtomicU64,
 }
 
 impl Shared {
@@ -106,6 +110,7 @@ impl Shared {
             overloaded: self.overloaded.load(Ordering::SeqCst),
             bad_requests: self.bad_requests.load(Ordering::SeqCst),
             io_errors: self.io_errors.load(Ordering::SeqCst),
+            schedules: self.schedules.load(Ordering::SeqCst),
         }
     }
 }
@@ -137,6 +142,7 @@ impl Server {
             overloaded: AtomicU64::new(0),
             bad_requests: AtomicU64::new(0),
             io_errors: AtomicU64::new(0),
+            schedules: AtomicU64::new(0),
         });
         let pool = Arc::new(ThreadPool::new(shared.cfg.max_conns));
         let accept = {
@@ -362,8 +368,9 @@ fn enqueue(shared: &Shared, payload: &[u8]) -> PendingReply {
         .filter(|x| *x >= 0.0)
         .map(|x| x as u64)
         .unwrap_or(0);
-    let req = match proto::parse_request(&doc) {
-        Ok(req) => req,
+    let req = match proto::parse_call(&doc) {
+        Ok(proto::WireCall::Predict(req)) => req,
+        Ok(proto::WireCall::Schedule(call)) => return run_schedule(shared, call),
         Err(e) => {
             shared.bad_requests.fetch_add(1, Ordering::SeqCst);
             return PendingReply::Ready(WireResponse::error(
@@ -383,6 +390,47 @@ fn enqueue(shared: &Shared, payload: &[u8]) -> PendingReply {
                 ErrorKind::Overloaded,
                 "service at max in-flight requests; retry later",
             ))
+        }
+    }
+}
+
+/// Serve one `schedule` request synchronously on the connection
+/// handler: run the fleet placement engine with costs from this
+/// server's own prediction service (content-cache-keyed, so recurring
+/// job shapes across schedule calls are free). Placement is CPU-bound
+/// work on this connection's thread — a schedule call occupies its
+/// connection until the report is ready, which is the explicit cost
+/// model of the request kind (the job cap in `proto` bounds it).
+fn run_schedule(shared: &Shared, call: proto::ScheduleCall) -> PendingReply {
+    let mut costs = fleet::ServiceCosts::new(&shared.svc);
+    let mut policy = fleet::make_policy(call.policy, call.seed);
+    let params = fleet::SimParams {
+        seed: call.seed,
+        arrival_rate: call.arrival_rate,
+        mem_safety: fleet::MEM_SAFETY,
+    };
+    match fleet::run(&call.cluster, &call.jobs, policy.as_mut(), &mut costs, &params) {
+        Ok(report) => {
+            shared.schedules.fetch_add(1, Ordering::SeqCst);
+            PendingReply::Ready(WireResponse::Schedule {
+                id: call.id,
+                report: report.to_json(),
+            })
+        }
+        Err(e) => {
+            // Job-level failures (unknown model, dataset mismatch) are
+            // the request's fault; backend faults keep the shared
+            // prefix and are the server's.
+            let kind = if e
+                .root_cause()
+                .starts_with(crate::coordinator::service::BACKEND_ERROR_PREFIX)
+            {
+                ErrorKind::Internal
+            } else {
+                shared.bad_requests.fetch_add(1, Ordering::SeqCst);
+                ErrorKind::BadRequest
+            };
+            PendingReply::Ready(WireResponse::error(call.id, kind, format!("{e:#}")))
         }
     }
 }
@@ -691,6 +739,59 @@ mod tests {
         assert_eq!(net.answered, n);
         assert_eq!(svc_m.served, n);
         assert_eq!(svc_m.in_flight, 0);
+    }
+
+    #[test]
+    fn schedule_request_returns_a_placement_report_over_tcp() {
+        use crate::fleet::PolicyKind;
+        use crate::net::proto::ScheduleRequest;
+        let server = default_server();
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+        let mut req = ScheduleRequest::new(31, "rtx2080,rtx3090", PolicyKind::LeastPredictedFinish);
+        req.seed = 7;
+        for (model, batch) in [("lenet5", 32u64), ("lenet5", 32), ("vgg11", 64), ("alexnet", 32)] {
+            let mut o = Json::obj();
+            o.set("batch", batch);
+            req.push_zoo(model, o);
+        }
+        let first = client.schedule(&req).unwrap();
+        let report = match &first {
+            WireResponse::Schedule { id, report } => {
+                assert_eq!(*id, 31);
+                report.clone()
+            }
+            other => panic!("expected a schedule report, got {other:?}"),
+        };
+        assert_eq!(report.str("policy").unwrap(), "least-finish");
+        assert_eq!(report.num("jobs").unwrap(), 4.0);
+        assert_eq!(
+            report.num("placed").unwrap() + report.num("oom_screened").unwrap(),
+            4.0
+        );
+        assert_eq!(report.num("true_oom_placements").unwrap(), 0.0);
+        assert!(report.num("makespan_true_s").unwrap() > 0.0);
+        assert_eq!(report.arr("devices").unwrap().len(), 2);
+        // Identical calls are deterministic, byte for byte.
+        let second = client.schedule(&req).unwrap();
+        match second {
+            WireResponse::Schedule { report: r2, .. } => assert_eq!(r2, report),
+            other => panic!("expected a schedule report, got {other:?}"),
+        }
+        // A bad job inside the stream is a structured bad_request.
+        let mut bad = ScheduleRequest::new(32, "rtx2080", PolicyKind::FirstFit);
+        bad.push_zoo("gpt-17", Json::obj());
+        match client.schedule(&bad).unwrap() {
+            WireResponse::Err { id, kind, message } => {
+                assert_eq!(id, 32);
+                assert_eq!(kind, ErrorKind::BadRequest);
+                assert!(message.contains("gpt-17"), "{message}");
+            }
+            other => panic!("expected bad_request, got {other:?}"),
+        }
+        let (net, _) = server.shutdown();
+        assert_eq!(net.schedules, 2);
+        assert_eq!(net.bad_requests, 1);
+        assert_eq!(net.answered, 3);
     }
 
     #[test]

@@ -1,9 +1,14 @@
-//! The genetic algorithm of paper §4.3: population 20 of 0/1 gene
-//! strings, fitness = predicted makespan, top-20 elitist selection,
-//! single-point crossover + per-gene mutation; converges to the optimal
-//! plan in ~20 generations on the 20-job workload.
+//! The genetic algorithm of paper §4.3, generalized to N machines:
+//! population of machine-index gene strings, fitness = predicted
+//! makespan, elitist truncation selection, single-point crossover +
+//! per-gene mutation, plus a memetic single-gene hill climb on the
+//! incumbent. The initial population is seeded with a greedy
+//! least-finish plan, so the GA never starts (or ends) worse than the
+//! greedy baseline and always holds a feasible plan when one exists
+//! job-by-job. Converges to the optimal plan in ~20 generations on the
+//! paper's 20-job two-machine workload.
 
-use super::{makespan, JobCost, Machines, Plan};
+use super::{makespan_from, JobCost, Machines, Plan};
 use crate::util::prng::Rng;
 
 #[derive(Debug, Clone)]
@@ -35,18 +40,85 @@ pub struct GaTrace {
 }
 
 /// Fitness: makespan with OOM plans heavily penalized (the GA must learn
-/// to keep the big jobs on the 24 GB machine).
-fn fitness(jobs: &[JobCost], machines: &Machines, plan: &[u8]) -> f64 {
-    makespan(jobs, machines, plan).unwrap_or(f64::INFINITY)
+/// to keep the big jobs on the machines with the most headroom).
+fn fitness(jobs: &[JobCost], machines: &Machines, initial_load: &[f64], plan: &[u8]) -> f64 {
+    makespan_from(jobs, machines, initial_load, plan).unwrap_or(f64::INFINITY)
 }
 
-/// Run the GA; returns the best plan found and the per-generation trace.
-pub fn optimize(jobs: &[JobCost], machines: &Machines, params: &GaParams) -> GaTrace {
+/// A greedy least-predicted-finish plan: each job (in order) goes to the
+/// machine where it fits and finishes earliest given the load committed
+/// so far. Feasible whenever every job fits *some* machine; used to
+/// seed the GA population so elitism keeps the GA at least this good.
+fn greedy_seed(jobs: &[JobCost], machines: &Machines, initial_load: &[f64]) -> Plan {
+    let k = machines.len();
+    let mut load: Vec<f64> = if initial_load.is_empty() {
+        vec![0.0; k]
+    } else {
+        initial_load.to_vec()
+    };
+    jobs.iter()
+        .map(|job| {
+            let mut best: Option<(usize, f64)> = None;
+            for m in 0..k {
+                if job.mem[m] > machines.headroom[m] {
+                    continue;
+                }
+                let finish = load[m] + job.time[m];
+                if best.map(|(_, bf)| finish < bf).unwrap_or(true) {
+                    best = Some((m, finish));
+                }
+            }
+            match best {
+                Some((m, finish)) => {
+                    load[m] = finish;
+                    m as u8
+                }
+                // Fits nowhere: any gene keeps the plan infeasible.
+                None => 0,
+            }
+        })
+        .collect()
+}
+
+/// Run the GA; returns the best plan found and the per-generation trace,
+/// or `None` when no feasible (OOM-free) plan was found at all.
+pub fn optimize(jobs: &[JobCost], machines: &Machines, params: &GaParams) -> Option<GaTrace> {
+    optimize_from(jobs, machines, &[], params)
+}
+
+/// [`optimize`] on machines that already carry `initial_load` seconds of
+/// committed work (the fleet's online re-planning). An empty slice
+/// means all machines start idle.
+pub fn optimize_from(
+    jobs: &[JobCost],
+    machines: &Machines,
+    initial_load: &[f64],
+    params: &GaParams,
+) -> Option<GaTrace> {
     let n = jobs.len();
+    let k = machines.len();
+    if n == 0 {
+        // Nothing to place: the makespan is whatever load already runs.
+        let base = fitness(jobs, machines, initial_load, &[]);
+        return Some(GaTrace {
+            best_per_generation: vec![base; params.generations],
+            best_plan: Vec::new(),
+            best_makespan: base,
+        });
+    }
+    if k == 0 {
+        return None;
+    }
     let mut rng = Rng::new(params.seed);
     let pop_size = params.population.max(4);
     let mut population: Vec<Plan> = (0..pop_size)
-        .map(|_| (0..n).map(|_| rng.below(2) as u8).collect())
+        .map(|i| {
+            if i == 0 {
+                greedy_seed(jobs, machines, initial_load)
+            } else {
+                (0..n).map(|_| rng.below(k) as u8).collect()
+            }
+        })
         .collect();
     let mut trace = Vec::with_capacity(params.generations);
     let mut best: (Plan, f64) = (population[0].clone(), f64::INFINITY);
@@ -54,27 +126,38 @@ pub fn optimize(jobs: &[JobCost], machines: &Machines, params: &GaParams) -> GaT
         // Score and sort ascending (lower makespan = fitter).
         let mut scored: Vec<(f64, &Plan)> = population
             .iter()
-            .map(|p| (fitness(jobs, machines, p), p))
+            .map(|p| (fitness(jobs, machines, initial_load, p), p))
             .collect();
-        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        scored.sort_by(|a, b| a.0.total_cmp(&b.0));
         if scored[0].0 < best.1 {
             best = (scored[0].1.clone(), scored[0].0);
         }
         // Memetic elite polish: single-gene hill climbing to a local
-        // optimum on the incumbent (moving one job to the other machine
+        // optimum on the incumbent (moving one job to another machine
         // is the natural neighborhood for makespan).
         let mut polished = best.0.clone();
         let mut polished_fit = best.1;
         loop {
             let mut improved = false;
             for j in 0..n {
-                polished[j] ^= 1;
-                let f = fitness(jobs, machines, &polished);
-                if f < polished_fit {
-                    polished_fit = f;
+                let original = polished[j];
+                let mut best_gene = original;
+                let mut best_fit = polished_fit;
+                for m in 0..k as u8 {
+                    if m == original {
+                        continue;
+                    }
+                    polished[j] = m;
+                    let f = fitness(jobs, machines, initial_load, &polished);
+                    if f < best_fit {
+                        best_fit = f;
+                        best_gene = m;
+                    }
+                }
+                polished[j] = best_gene;
+                if best_gene != original {
+                    polished_fit = best_fit;
                     improved = true;
-                } else {
-                    polished[j] ^= 1;
                 }
             }
             if !improved {
@@ -97,7 +180,7 @@ pub fn optimize(jobs: &[JobCost], machines: &Machines, params: &GaParams) -> GaT
         let mut next: Vec<Plan> = parents.clone();
         next.push(best.0.clone());
         for _ in 0..2 {
-            next.push((0..n).map(|_| rng.below(2) as u8).collect());
+            next.push((0..n).map(|_| rng.below(k) as u8).collect());
         }
         next.truncate(pop_size);
         while next.len() < pop_size {
@@ -107,19 +190,27 @@ pub fn optimize(jobs: &[JobCost], machines: &Machines, params: &GaParams) -> GaT
             let mut child: Plan = a[..cut].to_vec();
             child.extend_from_slice(&b[cut..]);
             for gene in child.iter_mut() {
-                if rng.chance(params.mutation_rate) {
-                    *gene ^= 1;
+                if k > 1 && rng.chance(params.mutation_rate) {
+                    // Mutate to a uniformly random *other* machine.
+                    let mut alt = rng.below(k - 1) as u8;
+                    if alt >= *gene {
+                        alt += 1;
+                    }
+                    *gene = alt;
                 }
             }
             next.push(child);
         }
         population = next;
     }
-    GaTrace {
+    if !best.1.is_finite() {
+        return None; // every examined plan OOMs somewhere
+    }
+    Some(GaTrace {
         best_per_generation: trace,
         best_plan: best.0,
         best_makespan: best.1,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -144,7 +235,8 @@ mod tests {
                 generations: 40,
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         assert!(
             trace.best_makespan <= best * 1.02,
             "GA {} vs optimal {best}",
@@ -156,7 +248,7 @@ mod tests {
     fn ga_beats_random_planning() {
         let jobs = fake_jobs(20, 15);
         let machines = Machines::paper();
-        let trace = optimize(&jobs, &machines, &GaParams::default());
+        let trace = optimize(&jobs, &machines, &GaParams::default()).unwrap();
         let rand_avg = random_average(&jobs, &machines, 100, 16);
         assert!(trace.best_makespan < rand_avg);
     }
@@ -164,7 +256,7 @@ mod tests {
     #[test]
     fn trace_is_monotone_nonincreasing() {
         let jobs = fake_jobs(16, 17);
-        let trace = optimize(&jobs, &Machines::paper(), &GaParams::default());
+        let trace = optimize(&jobs, &Machines::paper(), &GaParams::default()).unwrap();
         for w in trace.best_per_generation.windows(2) {
             assert!(w[1] <= w[0]);
         }
@@ -180,7 +272,7 @@ mod tests {
                 generations: 10,
                 ..Default::default()
             };
-            let trace = optimize(&jobs, &machines, &params);
+            let trace = optimize(&jobs, &machines, &params).unwrap();
             let first = trace.best_per_generation[0];
             assert!(trace.best_makespan <= first);
             assert!(trace.best_makespan.is_finite());
@@ -191,9 +283,104 @@ mod tests {
     fn ga_avoids_oom_assignments() {
         // One job only fits machine 1; GA must respect that.
         let mut jobs = fake_jobs(10, 18);
-        jobs[0].mem = [20 << 30, 20 << 30]; // fits only the 24 GB card
-        let trace = optimize(&jobs, &Machines::paper(), &GaParams::default());
+        jobs[0].mem = vec![20 << 30, 20 << 30]; // fits only the 24 GB card
+        let trace = optimize(&jobs, &Machines::paper(), &GaParams::default()).unwrap();
         assert!(trace.best_makespan.is_finite());
         assert_eq!(trace.best_plan[0], 1);
+    }
+
+    #[test]
+    fn ga_is_deterministic_for_a_fixed_seed() {
+        let jobs = fake_jobs(14, 21);
+        let machines = Machines {
+            headroom: vec![10 << 30, 10 << 30],
+        };
+        // Two-machine costs against a two-machine cluster of equal caps.
+        let params = GaParams {
+            seed: 0xF1EE7,
+            ..Default::default()
+        };
+        let a = optimize(&jobs, &machines, &params).unwrap();
+        let b = optimize(&jobs, &machines, &params).unwrap();
+        assert_eq!(a.best_plan, b.best_plan);
+        assert_eq!(a.best_makespan, b.best_makespan);
+        assert_eq!(a.best_per_generation, b.best_per_generation);
+        // A different seed may find a different (equally good or worse)
+        // plan, but must still be deterministic on its own.
+        let c = optimize(
+            &jobs,
+            &machines,
+            &GaParams {
+                seed: 0x0DD,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(c.best_makespan.is_finite());
+    }
+
+    #[test]
+    fn ga_handles_empty_jobs_single_machine_and_all_oom() {
+        let machines = Machines::paper();
+        // Empty job list: a trivially feasible empty plan.
+        let empty = optimize(&[], &machines, &GaParams::default()).unwrap();
+        assert!(empty.best_plan.is_empty());
+        assert_eq!(empty.best_makespan, 0.0);
+        // Single machine: everything lands on machine 0.
+        let one = Machines {
+            headroom: vec![24 << 30],
+        };
+        let jobs: Vec<_> = fake_jobs(6, 22)
+            .into_iter()
+            .map(|mut j| {
+                j.time.truncate(1);
+                j.mem.truncate(1);
+                j
+            })
+            .collect();
+        let trace = optimize(&jobs, &one, &GaParams::default()).unwrap();
+        assert!(trace.best_plan.iter().all(|&g| g == 0));
+        let sum: f64 = jobs.iter().map(|j| j.time[0]).sum();
+        assert!((trace.best_makespan - sum).abs() < 1e-9);
+        // All plans OOM: None, not a panic or an infinite "best".
+        let impossible = vec![super::super::JobCost {
+            name: "huge".into(),
+            time: vec![1.0, 1.0],
+            mem: vec![u64::MAX, u64::MAX],
+        }];
+        assert!(optimize(&impossible, &machines, &GaParams::default()).is_none());
+    }
+
+    #[test]
+    fn ga_on_three_machines_spreads_load() {
+        // Three identical machines, nine identical jobs: the best plan
+        // puts three on each; the GA must find a 3-way split.
+        let machines = Machines {
+            headroom: vec![8 << 30; 3],
+        };
+        let jobs: Vec<_> = (0..9)
+            .map(|i| super::super::JobCost {
+                name: format!("j{i}"),
+                time: vec![10.0; 3],
+                mem: vec![1 << 30; 3],
+            })
+            .collect();
+        let trace = optimize(&jobs, &machines, &GaParams::default()).unwrap();
+        assert!(
+            (trace.best_makespan - 30.0).abs() < 1e-9,
+            "9 x 10s jobs over 3 machines must reach 30s, got {}",
+            trace.best_makespan
+        );
+    }
+
+    #[test]
+    fn initial_load_steers_the_plan_away_from_busy_machines() {
+        // Machine 0 already has 1000s of committed work; a small wave
+        // must land on machine 1 entirely.
+        let machines = Machines::paper();
+        let jobs = fake_jobs(5, 23);
+        let trace = optimize_from(&jobs, &machines, &[1000.0, 0.0], &GaParams::default()).unwrap();
+        assert!(trace.best_plan.iter().all(|&g| g == 1), "{:?}", trace.best_plan);
+        assert!(trace.best_makespan >= 1000.0);
     }
 }

@@ -1,87 +1,170 @@
-//! Training-job scheduling on two machines (paper §4.3, Figure 14).
+//! Training-job scheduling on N machines (paper §4.3, Figure 14).
 //!
-//! The application the paper builds on top of DNNAbacus: place 20
-//! training jobs on the two servers of Table 1 so the makespan is
-//! minimal and nothing OOMs. Three planners are compared:
-//! exhaustive **optimal**, **random** assignment (averaged over trials),
-//! and a **genetic algorithm** over 0/1 gene strings that — as in the
-//! paper — reaches the optimal plan within ~20 generations.
+//! The application the paper builds on top of DNNAbacus: place training
+//! jobs on a set of heterogeneous servers so the makespan is minimal
+//! and nothing OOMs. Three planners are compared: exhaustive
+//! **optimal**, **random** assignment (averaged over trials), and a
+//! **genetic algorithm** over machine-index gene strings that — as in
+//! the paper's two-machine setting — reaches the optimal plan within
+//! ~20 generations.
+//!
+//! The paper evaluates two machines (Table 1); everything here is
+//! generalized to N so the `fleet` placement engine can reuse the same
+//! makespan model and GA over arbitrary clusters, with optional
+//! per-machine initial load (`*_from` variants) for online re-planning
+//! on top of already-running work.
 
 pub mod ga;
 
+use crate::sim::DeviceProfile;
 use crate::util::prng::Rng;
 
-/// Per-job costs on each of the two machines (predicted or measured).
+/// Per-job costs on each machine (predicted or measured). The `time`
+/// and `mem` vectors are indexed by machine and must match the
+/// [`Machines`] the job is planned against.
 #[derive(Debug, Clone)]
 pub struct JobCost {
     pub name: String,
-    /// Training time on machine 0 / machine 1 (seconds).
-    pub time: [f64; 2],
-    /// Peak memory on machine 0 / machine 1 (bytes).
-    pub mem: [u64; 2],
+    /// Training time per machine (seconds).
+    pub time: Vec<f64>,
+    /// Peak memory per machine (bytes).
+    pub mem: Vec<u64>,
 }
 
-/// The two machines' memory capacities (bytes).
-#[derive(Debug, Clone, Copy)]
+/// The machines' memory headrooms (bytes a job may actually occupy —
+/// VRAM minus the resident CUDA context, via
+/// [`DeviceProfile::usable_vram`], so the scheduler's OOM screen agrees
+/// with `coordinator::fits_device` and the simulator's allocator
+/// budget).
+#[derive(Debug, Clone)]
 pub struct Machines {
-    pub vram: [u64; 2],
+    pub headroom: Vec<u64>,
 }
 
 impl Machines {
     /// Table 1: RTX 2080 (11 GB) + RTX 3090 (24 GB).
     pub fn paper() -> Machines {
+        Machines::from_profiles(&[DeviceProfile::rtx2080(), DeviceProfile::rtx3090()])
+    }
+
+    /// Headrooms from device profiles, through the shared
+    /// [`DeviceProfile::usable_vram`] helper.
+    pub fn from_profiles(profiles: &[DeviceProfile]) -> Machines {
         Machines {
-            vram: [11 << 30, 24 << 30],
+            headroom: profiles.iter().map(DeviceProfile::usable_vram).collect(),
         }
+    }
+
+    pub fn len(&self) -> usize {
+        self.headroom.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.headroom.is_empty()
     }
 }
 
-/// An assignment: `plan[j] == 0/1` places job j on machine 0/1 (the
-/// paper's "0-1 string with a length of 20").
+/// An assignment: `plan[j] == m` places job j on machine m (the paper's
+/// "0-1 string with a length of 20", generalized to machine indices).
 pub type Plan = Vec<u8>;
 
 /// Jobs run sequentially per machine; the plan's cost is the makespan.
 /// Returns `None` if any job OOMs on its assigned machine.
 pub fn makespan(jobs: &[JobCost], machines: &Machines, plan: &[u8]) -> Option<f64> {
+    makespan_from(jobs, machines, &[], plan)
+}
+
+/// [`makespan`] on machines that already carry `initial_load` seconds of
+/// committed work each (the fleet's online re-planning: place a queued
+/// wave on top of running jobs). An empty slice means all-idle.
+pub fn makespan_from(
+    jobs: &[JobCost],
+    machines: &Machines,
+    initial_load: &[f64],
+    plan: &[u8],
+) -> Option<f64> {
     assert_eq!(jobs.len(), plan.len());
-    let mut total = [0.0f64; 2];
+    assert!(
+        initial_load.is_empty() || initial_load.len() == machines.len(),
+        "initial load must cover every machine"
+    );
+    let mut total: Vec<f64> = if initial_load.is_empty() {
+        vec![0.0; machines.len()]
+    } else {
+        initial_load.to_vec()
+    };
     for (job, &m) in jobs.iter().zip(plan) {
         let m = m as usize;
-        if job.mem[m] > machines.vram[m] {
+        assert!(m < machines.len(), "plan gene {m} out of range");
+        assert_eq!(
+            job.time.len(),
+            machines.len(),
+            "job '{}' costs/machines mismatch",
+            job.name
+        );
+        if job.mem[m] > machines.headroom[m] {
             return None; // the OOM failure the predictor exists to avoid
         }
         total[m] += job.time[m];
     }
-    Some(total[0].max(total[1]))
+    Some(total.iter().copied().fold(0.0, f64::max))
 }
 
-/// Exhaustive optimal plan (2^n enumeration; n = 20 ⇒ ~1M plans).
+/// Exhaustive optimal plan (N^n enumeration; the paper's 20 jobs on 2
+/// machines ⇒ ~1M plans). `None` when every plan OOMs somewhere.
 pub fn optimal(jobs: &[JobCost], machines: &Machines) -> Option<(Plan, f64)> {
     let n = jobs.len();
-    assert!(n <= 24, "exhaustive search capped at 24 jobs");
+    let k = machines.len();
+    if n == 0 {
+        return Some((Vec::new(), 0.0));
+    }
+    if k == 0 {
+        return None;
+    }
+    let plans = (k as f64).powi(n as i32);
+    assert!(
+        plans <= (1u64 << 24) as f64,
+        "exhaustive search capped at 2^24 plans ({n} jobs x {k} machines is too many)"
+    );
+    let mut plan: Plan = vec![0; n];
     let mut best: Option<(Plan, f64)> = None;
-    for mask in 0u32..(1 << n) {
-        let plan: Plan = (0..n).map(|j| ((mask >> j) & 1) as u8).collect();
+    loop {
         if let Some(t) = makespan(jobs, machines, &plan) {
             if best.as_ref().map(|(_, bt)| t < *bt).unwrap_or(true) {
-                best = Some((plan, t));
+                best = Some((plan.clone(), t));
             }
         }
+        // Odometer increment over base-k digit strings.
+        let mut i = 0;
+        loop {
+            if i == n {
+                return best;
+            }
+            plan[i] += 1;
+            if (plan[i] as usize) < k {
+                break;
+            }
+            plan[i] = 0;
+            i += 1;
+        }
     }
-    best
 }
 
 /// Random planning: mean makespan over `trials` uniformly random valid
 /// plans (invalid plans are re-drawn, as a random scheduler would retry
 /// after OOM — the paper reports the 100-trial average).
 pub fn random_average(jobs: &[JobCost], machines: &Machines, trials: usize, seed: u64) -> f64 {
+    let k = machines.len();
+    if k == 0 {
+        return f64::INFINITY;
+    }
     let mut rng = Rng::new(seed);
     let mut total = 0.0;
     let mut done = 0;
     let mut attempts = 0;
     while done < trials && attempts < trials * 100 {
         attempts += 1;
-        let plan: Plan = (0..jobs.len()).map(|_| rng.below(2) as u8).collect();
+        let plan: Plan = (0..jobs.len()).map(|_| rng.below(k) as u8).collect();
         if let Some(t) = makespan(jobs, machines, &plan) {
             total += t;
             done += 1;
@@ -106,8 +189,8 @@ mod tests {
                 JobCost {
                     name: format!("job{i}"),
                     // Machine 1 (3090) is ~2.2× faster.
-                    time: [t0, t0 / rng.range_f64(1.8, 2.6)],
-                    mem: [
+                    time: vec![t0, t0 / rng.range_f64(1.8, 2.6)],
+                    mem: vec![
                         rng.range(1, 9) as u64 * (1 << 30),
                         rng.range(1, 9) as u64 * (1 << 30),
                     ],
@@ -116,19 +199,19 @@ mod tests {
             .collect()
     }
 
+    fn job(name: &str, time: Vec<f64>, mem: Vec<u64>) -> JobCost {
+        JobCost {
+            name: name.into(),
+            time,
+            mem,
+        }
+    }
+
     #[test]
     fn makespan_is_max_of_machine_sums() {
         let jobs = vec![
-            JobCost {
-                name: "a".into(),
-                time: [10.0, 5.0],
-                mem: [1, 1],
-            },
-            JobCost {
-                name: "b".into(),
-                time: [20.0, 10.0],
-                mem: [1, 1],
-            },
+            job("a", vec![10.0, 5.0], vec![1, 1]),
+            job("b", vec![20.0, 10.0], vec![1, 1]),
         ];
         let m = Machines::paper();
         assert_eq!(makespan(&jobs, &m, &[0, 0]), Some(30.0));
@@ -137,14 +220,43 @@ mod tests {
     }
 
     #[test]
+    fn makespan_from_adds_initial_load() {
+        let jobs = vec![job("a", vec![10.0, 10.0], vec![1, 1])];
+        let m = Machines::paper();
+        assert_eq!(makespan_from(&jobs, &m, &[5.0, 0.0], &[0]), Some(15.0));
+        assert_eq!(makespan_from(&jobs, &m, &[5.0, 40.0], &[0]), Some(40.0));
+        assert_eq!(makespan_from(&jobs, &m, &[], &[0]), Some(10.0));
+    }
+
+    #[test]
     fn oom_plans_rejected() {
-        let jobs = vec![JobCost {
-            name: "big".into(),
-            time: [10.0, 10.0],
-            mem: [12 << 30, 12 << 30], // > 11 GB, < 24 GB
-        }];
+        let jobs = vec![job(
+            "big",
+            vec![10.0, 10.0],
+            vec![12 << 30, 12 << 30], // > 11 GB, < 24 GB headroom
+        )];
         let m = Machines::paper();
         assert_eq!(makespan(&jobs, &m, &[0]), None);
+        assert!(makespan(&jobs, &m, &[1]).is_some());
+    }
+
+    #[test]
+    fn oom_screen_honors_the_context_reservation() {
+        // Regression for the unified headroom semantics: the scheduler
+        // used to screen against raw VRAM while `fits_device` reserved
+        // the CUDA context. A job whose memory lands in the band
+        // (vram - context, vram] must now be rejected here too.
+        let dev = crate::sim::DeviceProfile::rtx2080();
+        let in_band = dev.vram - dev.context_bytes / 2;
+        assert!(in_band > dev.usable_vram() && in_band <= dev.vram);
+        let jobs = vec![job("band", vec![1.0, 1.0], vec![in_band, 1])];
+        let m = Machines::paper();
+        assert_eq!(m.headroom[0], dev.usable_vram());
+        assert_eq!(
+            makespan(&jobs, &m, &[0]),
+            None,
+            "memory inside the context band must not fit"
+        );
         assert!(makespan(&jobs, &m, &[1]).is_some());
     }
 
@@ -160,6 +272,54 @@ mod tests {
                 assert!(best <= t + 1e-9);
             }
         }
+    }
+
+    #[test]
+    fn optimal_on_three_machines_uses_them_all() {
+        // Three identical machines, three identical long jobs: the
+        // optimal plan must spread one per machine.
+        let m = Machines {
+            headroom: vec![8 << 30; 3],
+        };
+        let jobs: Vec<JobCost> = (0..3)
+            .map(|i| job(&format!("j{i}"), vec![10.0; 3], vec![1 << 30; 3]))
+            .collect();
+        let (plan, best) = optimal(&jobs, &m).unwrap();
+        assert_eq!(best, 10.0);
+        let mut seen = plan.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn empty_job_list_is_a_zero_makespan_plan() {
+        let m = Machines::paper();
+        let (plan, best) = optimal(&[], &m).unwrap();
+        assert!(plan.is_empty());
+        assert_eq!(best, 0.0);
+        assert_eq!(makespan(&[], &m, &[]), Some(0.0));
+    }
+
+    #[test]
+    fn single_machine_sums_all_jobs() {
+        let m = Machines {
+            headroom: vec![20 << 30],
+        };
+        let jobs = vec![
+            job("a", vec![10.0], vec![1 << 30]),
+            job("b", vec![15.0], vec![1 << 30]),
+        ];
+        let (plan, best) = optimal(&jobs, &m).unwrap();
+        assert_eq!(plan, vec![0, 0]);
+        assert_eq!(best, 25.0);
+    }
+
+    #[test]
+    fn all_plans_oom_yields_none_not_a_panic() {
+        let m = Machines::paper();
+        let jobs = vec![job("huge", vec![1.0, 1.0], vec![u64::MAX, u64::MAX])];
+        assert!(optimal(&jobs, &m).is_none());
+        assert_eq!(random_average(&jobs, &m, 10, 1), f64::INFINITY);
     }
 
     #[test]

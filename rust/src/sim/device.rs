@@ -25,6 +25,11 @@ pub struct DeviceProfile {
     pub context_bytes: u64,
 }
 
+/// Every device name [`DeviceProfile::by_name`] (and the fleet's
+/// [`parse_device_list`]) accepts — kept next to the profiles so a new
+/// profile cannot be added without showing up in lookup errors.
+pub const KNOWN_DEVICES: [&str; 2] = ["rtx2080", "rtx3090"];
+
 impl DeviceProfile {
     /// System 1: RTX 2080 (Turing), 11 GB — Table 1.
     pub fn rtx2080() -> Self {
@@ -58,8 +63,22 @@ impl DeviceProfile {
         match name {
             "rtx2080" => Ok(Self::rtx2080()),
             "rtx3090" => Ok(Self::rtx3090()),
-            _ => crate::bail!("unknown device '{name}' (rtx2080|rtx3090)"),
+            _ => crate::bail!(
+                "unknown device '{name}' (known devices: {})",
+                KNOWN_DEVICES.join(", ")
+            ),
         }
+    }
+
+    /// The memory a training job may occupy on this device: VRAM minus
+    /// the resident CUDA-context reservation. This is the **one** OOM
+    /// headroom definition in the tree — the simulator's allocator
+    /// budget, the coordinator's `fits_device` screen, the scheduler's
+    /// `makespan` feasibility check and the fleet's placement screen all
+    /// route through it, so a job cannot pass one screen and fail
+    /// another over the same bytes.
+    pub fn usable_vram(&self) -> u64 {
+        self.vram.saturating_sub(self.context_bytes)
     }
 
     /// Utilization factor for a kernel that exposes `parallel_tiles` units
@@ -70,6 +89,52 @@ impl DeviceProfile {
         let saturating = (self.sm_count * 4) as f64;
         (parallel_tiles / saturating).min(1.0).max(0.05)
     }
+}
+
+/// Most device instances one list may expand to. The parser enforces
+/// this *before* materializing anything, so a hostile repeat count
+/// (`"rtx2080x999999999"` over the wire) is an error, not a giant
+/// allocation; `fleet::Cluster` applies its own tighter cap on top.
+pub const MAX_DEVICE_LIST: usize = 1024;
+
+/// Parse a comma-separated device list into profiles, with an optional
+/// `xN` repeat suffix per entry — the fleet's cluster notation:
+/// `"rtx2080x2,rtx3090"` → `[rtx2080, rtx2080, rtx3090]`. Entry order is
+/// preserved (it becomes device index order, which first-fit placement
+/// is sensitive to). Whole names are tried first, so the `x` inside
+/// `rtx…` never splits a bare name.
+pub fn parse_device_list(spec: &str) -> crate::Result<Vec<DeviceProfile>> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            crate::bail!("empty device entry in '{spec}'");
+        }
+        let (profile, count) = match DeviceProfile::by_name(part) {
+            Ok(profile) => (profile, 1),
+            Err(unknown) => match part.rsplit_once('x') {
+                Some((name, digits))
+                    if !name.is_empty()
+                        && !digits.is_empty()
+                        && digits.bytes().all(|b| b.is_ascii_digit()) =>
+                {
+                    let count: usize = digits
+                        .parse()
+                        .map_err(|_| crate::err!("bad device count '{digits}' in '{part}'"))?;
+                    crate::ensure!(count >= 1, "device count must be >= 1 in '{part}'");
+                    (DeviceProfile::by_name(name)?, count)
+                }
+                _ => return Err(unknown),
+            },
+        };
+        // Bound `count` first so the sum cannot overflow.
+        crate::ensure!(
+            count <= MAX_DEVICE_LIST && out.len() + count <= MAX_DEVICE_LIST,
+            "device list expands past {MAX_DEVICE_LIST} instances at '{part}'"
+        );
+        out.extend(std::iter::repeat_with(|| profile.clone()).take(count));
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -102,5 +167,52 @@ mod tests {
     fn lookup_by_name() {
         assert!(DeviceProfile::by_name("rtx2080").is_ok());
         assert!(DeviceProfile::by_name("a100").is_err());
+    }
+
+    #[test]
+    fn lookup_error_lists_the_known_devices() {
+        let e = DeviceProfile::by_name("a100").unwrap_err().to_string();
+        for name in KNOWN_DEVICES {
+            assert!(e.contains(name), "error must name '{name}': {e}");
+        }
+    }
+
+    #[test]
+    fn usable_vram_reserves_the_context() {
+        let d = DeviceProfile::rtx2080();
+        assert_eq!(d.usable_vram(), d.vram - d.context_bytes);
+        assert!(d.usable_vram() < d.vram);
+    }
+
+    #[test]
+    fn device_list_parses_names_and_repeats() {
+        let one = parse_device_list("rtx2080").unwrap();
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].name, "rtx2080");
+        // The bare name wins over the `x` inside "rtx…".
+        let mixed = parse_device_list(" rtx2080x2 , rtx3090 ").unwrap();
+        let names: Vec<&str> = mixed.iter().map(|d| d.name).collect();
+        assert_eq!(names, ["rtx2080", "rtx2080", "rtx3090"]);
+        let many = parse_device_list("rtx3090x3").unwrap();
+        assert_eq!(many.len(), 3);
+        assert!(many.iter().all(|d| d.name == "rtx3090"));
+    }
+
+    #[test]
+    fn device_list_rejects_bad_specs() {
+        for (spec, needle) in [
+            ("", "empty device entry"),
+            ("rtx2080,,rtx3090", "empty device entry"),
+            ("a100", "known devices"),
+            ("a100x2", "known devices"),
+            ("rtx2080x0", ">= 1"),
+            ("rtx2080x", "known devices"), // no digits: treated as a name
+            // A hostile repeat count must fail before allocating.
+            ("rtx2080x999999999999", "expands past"),
+            ("rtx3090x2000", "expands past"),
+        ] {
+            let e = parse_device_list(spec).unwrap_err().to_string();
+            assert!(e.contains(needle), "for '{spec}': {e}");
+        }
     }
 }

@@ -18,7 +18,7 @@ pub mod selector;
 
 pub use convalgo::{ConvAlgo, ConvPhase};
 pub use cudnn_log::CudnnLog;
-pub use device::DeviceProfile;
+pub use device::{parse_device_list, DeviceProfile, KNOWN_DEVICES};
 pub use executor::{simulate_training, Measurement, OomError};
 pub use selector::Framework;
 

@@ -87,6 +87,9 @@ fn main() -> dnnabacus::Result<()> {
         req.seed = seed;
         req.arrival_rate = 0.05;
         req.jobs = jobs.clone();
+        // `schedule` returns typed errors (`WireError`), so a rejected
+        // request surfaces through `?` — a successful return is either
+        // a report or a server bug.
         let report = match client.schedule(&req)? {
             WireResponse::Schedule { report, .. } => report,
             other => dnnabacus::bail!("expected a schedule report, got {other:?}"),
@@ -153,8 +156,9 @@ fn main() -> dnnabacus::Result<()> {
 
     let (net, m) = server.shutdown();
     println!(
-        "wire: {} schedule calls answered | cost queries {} ({} cache hits / {} misses)",
+        "wire: {} schedule calls answered ({} peak conns) | cost queries {} ({} cache hits / {} misses)",
         net.schedules,
+        net.peak_conns,
         m.served,
         m.cache_hits,
         m.cache_misses

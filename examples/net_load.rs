@@ -162,8 +162,8 @@ fn main() -> dnnabacus::Result<()> {
         wire.overloaded
     );
     println!(
-        "wire: {} connections, {} requests, {} answered, {} bad",
-        wire.connections, wire.requests, wire.answered, wire.bad_requests
+        "wire: {} connections ({} peak concurrent), {} requests, {} answered, {} bad",
+        wire.connections, wire.peak_conns, wire.requests, wire.answered, wire.bad_requests
     );
     // Overload rejections (admission control under a hot enough mix)
     // are fine; anything else failing means the mix is not servable.

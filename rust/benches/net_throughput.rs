@@ -1,13 +1,25 @@
-//! `cargo bench --bench net_throughput` — requests/sec and latency
-//! percentiles for the prediction service behind the real TCP front
-//! door (`dnnabacus-wire-v1`), with the content-keyed cache off and on.
-//! The socket twin of `serve_throughput`: the delta between the two is
-//! the wire cost (framing, JSON, syscalls, connection handling).
+//! `cargo bench --bench net_throughput` — requests/sec, wire latency
+//! percentiles, and connection concurrency for the prediction service
+//! behind the real TCP front door (`dnnabacus-wire-v1`), with the
+//! content-keyed cache off and on. The socket twin of
+//! `serve_throughput`: the delta between the two is the wire cost
+//! (framing, JSON, syscalls, event-loop scheduling).
+//!
+//! `--clients` is the number of *concurrent connections held open* for
+//! the whole pass — every connection dials before the timed region
+//! starts and stays connected until it ends, so the pass genuinely
+//! exercises `clients`-way concurrency on one serve process (the CI
+//! smoke runs `--clients 1024` and fails if the server refuses any of
+//! them). A bounded thread pool (`--threads`) drives the connections;
+//! wire latency is measured per request, send to receive, across the
+//! pipelined waves.
 //!
 //! Flags (after `--`):
 //!   --scale 0.12     training-corpus sweep density
-//!   --requests 512   request count per pass
-//!   --clients 4      concurrent pipelining client connections
+//!   --requests 512   request count per pass (raised to >= clients so
+//!                    every connection serves at least one request)
+//!   --clients 8      concurrent connections held open per pass
+//!   --threads        driver threads (default min(16, clients))
 //!   --seed 7         request-mix seed
 //!   --json PATH      write the results as JSON (the CI bench-smoke job
 //!                    uploads this as a `BENCH_*.json` perf artifact)
@@ -16,102 +28,157 @@ use dnnabacus::coordinator::{
     service::AutoMlBackend, CostModel, PredictionService, ServiceConfig, ServiceMetrics,
 };
 use dnnabacus::experiments::Ctx;
-use dnnabacus::net::{Client, NetMetrics, Server, ServerConfig, WireRequest};
+use dnnabacus::net::{Client, NetMetrics, Server, WireRequest};
 use dnnabacus::predictor::{AutoMl, Target};
 use dnnabacus::util::cli::Args;
 use dnnabacus::util::json::Json;
 use dnnabacus::util::prng::Rng;
+use dnnabacus::util::stats;
 use dnnabacus::zoo;
-use std::sync::Arc;
+use std::sync::{Arc, Barrier};
 use std::time::Instant;
 
-/// Pipelined requests per wave per client — small enough that later
+/// Pipelined requests per wave per connection — small enough that later
 /// waves can hit cache entries earlier waves filled.
 const WAVE: usize = 32;
 
-/// One timed pass: a fresh service + server, `clients` connections
-/// splitting the schedule, everything pipelined in waves.
+/// Split `total` into `parts` near-equal quotas (first `total % parts`
+/// get one extra).
+fn quota(total: usize, parts: usize, idx: usize) -> usize {
+    total / parts + usize::from(idx < total % parts)
+}
+
+/// One timed pass: a fresh service + server, `clients` connections all
+/// held open across the pass, driven by `threads` worker threads,
+/// everything pipelined in waves. Returns elapsed seconds, per-request
+/// wire latencies (send to receive), and both metric sets.
 fn run_pass(
     schedule: &[WireRequest],
     backend: Arc<dyn CostModel>,
     cache_capacity: usize,
     clients: usize,
-) -> (f64, NetMetrics, ServiceMetrics) {
+    threads: usize,
+) -> (f64, Vec<f64>, NetMetrics, ServiceMetrics) {
     let cfg = ServiceConfig {
         cache_capacity,
         max_inflight: 1024,
         ..ServiceConfig::default()
     };
     let svc = PredictionService::start(cfg, backend);
-    let server = Server::start("127.0.0.1:0", ServerConfig::default(), svc).expect("bind");
+    let server = Server::builder()
+        .max_conns(clients.max(8) * 2) // headroom: refusals are a failure here
+        .start("127.0.0.1:0", svc)
+        .expect("bind");
     let addr = server.local_addr().to_string();
-    let chunk = schedule.len().div_ceil(clients);
-    let t0 = Instant::now();
-    let handles: Vec<_> = schedule
-        .chunks(chunk)
-        .map(|slice| {
+
+    // Contiguous per-connection slices of the shared schedule.
+    let mut slices: Vec<Vec<WireRequest>> = Vec::with_capacity(clients);
+    let mut cursor = 0;
+    for i in 0..clients {
+        let n = quota(schedule.len(), clients, i);
+        slices.push(schedule[cursor..cursor + n].to_vec());
+        cursor += n;
+    }
+
+    // Every thread dials its connections *before* the barrier, so the
+    // timed region starts with all `clients` connections concurrently
+    // open — that concurrency is what the pass measures.
+    let barrier = Arc::new(Barrier::new(threads + 1));
+    let mut conn_iter = slices.into_iter().enumerate();
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
             let addr = addr.clone();
-            let slice = slice.to_vec();
+            let barrier = Arc::clone(&barrier);
+            let own: Vec<(usize, Vec<WireRequest>)> =
+                conn_iter.by_ref().take(quota(clients, threads, t)).collect();
             std::thread::spawn(move || {
-                let mut client = Client::connect(&addr).expect("connect");
-                for wave in slice.chunks(WAVE) {
-                    for resp in client.call_many(wave).expect("pipelined wave") {
-                        assert!(resp.is_ok(), "schedule must be fully servable: {resp:?}");
+                let mut conns: Vec<(Client, Vec<WireRequest>)> = own
+                    .into_iter()
+                    .map(|(_, slice)| (Client::connect(&addr).expect("connect"), slice))
+                    .collect();
+                barrier.wait();
+                let mut latencies = Vec::new();
+                for (client, slice) in conns.iter_mut() {
+                    for wave in slice.chunks(WAVE) {
+                        let mut sent_at = Vec::with_capacity(wave.len());
+                        for req in wave {
+                            sent_at.push(Instant::now());
+                            client.send(req).expect("send");
+                        }
+                        for (req, t_send) in wave.iter().zip(&sent_at) {
+                            let resp = client.recv().expect("recv");
+                            latencies.push(t_send.elapsed().as_secs_f64());
+                            assert_eq!(resp.id(), req.id, "pipeline order");
+                            assert!(resp.is_ok(), "schedule must be fully servable: {resp:?}");
+                        }
                     }
                 }
+                latencies
+                // `conns` drop here — connections stay open for the
+                // whole timed region.
             })
         })
         .collect();
+    barrier.wait();
+    let t0 = Instant::now();
+    let mut latencies = Vec::with_capacity(schedule.len());
     for h in handles {
-        h.join().expect("client thread");
+        latencies.extend(h.join().expect("client thread"));
     }
     let elapsed = t0.elapsed().as_secs_f64();
     let (net, svc_m) = server.shutdown();
-    (elapsed, net, svc_m)
+    (elapsed, latencies, net, svc_m)
 }
 
-fn pass_json(
-    name: &str,
-    requests: usize,
+struct Pass {
     elapsed: f64,
-    net: &NetMetrics,
-    m: &ServiceMetrics,
-) -> Json {
+    wire_latencies: Vec<f64>,
+    net: NetMetrics,
+    svc: ServiceMetrics,
+}
+
+fn pass_json(name: &str, requests: usize, p: &Pass) -> Json {
     let mut o = Json::obj();
     o.set("name", name)
         .set("requests", requests)
-        .set("req_per_s", requests as f64 / elapsed)
-        .set("elapsed_s", elapsed)
-        .set("p50_s", m.p50_latency_s)
-        .set("p99_s", m.p99_latency_s)
-        .set("mean_batch_size", m.mean_batch_size)
-        .set("cache_hits", m.cache_hits)
-        .set("cache_misses", m.cache_misses)
-        .set("overloaded", net.overloaded)
-        .set("answered", net.answered)
-        .set("connections", net.connections)
-        .set("errors", m.errors);
+        .set("req_per_s", requests as f64 / p.elapsed)
+        .set("elapsed_s", p.elapsed)
+        .set("p50_wire_ms", stats::quantile(&p.wire_latencies, 0.5) * 1e3)
+        .set("p99_wire_ms", stats::quantile(&p.wire_latencies, 0.99) * 1e3)
+        .set("p50_s", p.svc.p50_latency_s)
+        .set("p99_s", p.svc.p99_latency_s)
+        .set("mean_batch_size", p.svc.mean_batch_size)
+        .set("cache_hits", p.svc.cache_hits)
+        .set("cache_misses", p.svc.cache_misses)
+        .set("overloaded", p.net.overloaded)
+        .set("answered", p.net.answered)
+        .set("connections", p.net.connections)
+        .set("peak_conns", p.net.peak_conns)
+        .set("conns_rejected", p.net.conns_rejected)
+        .set("errors", p.svc.errors);
     o
 }
 
-fn report(name: &str, requests: usize, elapsed: f64, net: &NetMetrics, m: &ServiceMetrics) {
+fn report(name: &str, requests: usize, p: &Pass) {
     println!(
-        "{name:<10} {:>7.0} req/s  p50 {:>8.3} ms  p99 {:>8.3} ms  \
-         mean batch {:>5.1}  hits {:>4}  overloaded {:>3}",
-        requests as f64 / elapsed,
-        m.p50_latency_s * 1e3,
-        m.p99_latency_s * 1e3,
-        m.mean_batch_size,
-        m.cache_hits,
-        net.overloaded
+        "{name:<10} {:>7.0} req/s  wire p50 {:>8.3} ms  p99 {:>8.3} ms  \
+         mean batch {:>5.1}  hits {:>4}  peak conns {:>5}",
+        requests as f64 / p.elapsed,
+        stats::quantile(&p.wire_latencies, 0.5) * 1e3,
+        stats::quantile(&p.wire_latencies, 0.99) * 1e3,
+        p.svc.mean_batch_size,
+        p.svc.cache_hits,
+        p.net.peak_conns
     );
 }
 
 fn main() {
     let args = Args::from_env();
     let scale = args.f64_or("scale", 0.12);
-    let requests = args.usize_or("requests", 512);
-    let clients = args.usize_or("clients", 4).max(1);
+    let clients = args.usize_or("clients", 8).max(1);
+    let threads = args.usize_or("threads", clients.min(16)).clamp(1, clients);
+    // Every held-open connection must serve at least one request.
+    let requests = args.usize_or("requests", 512).max(clients);
     let seed = args.u64_or("seed", 7);
 
     let ctx = Ctx {
@@ -139,18 +206,48 @@ fn main() {
                 .with("dataset", dataset)
         })
         .collect();
+    println!(
+        "{clients} concurrent connections, {threads} driver threads, {requests} requests/pass"
+    );
 
-    let (off_s, off_net, off_m) = run_pass(&schedule, Arc::clone(&backend), 0, clients);
-    report("cache-off", requests, off_s, &off_net, &off_m);
-    assert_eq!(off_m.cache_hits, 0, "disabled cache must never hit");
-    assert_eq!(off_net.answered as usize, requests);
+    let check = |p: &Pass| {
+        assert_eq!(
+            p.net.conns_rejected, 0,
+            "the server must admit all {clients} concurrent connections"
+        );
+        assert!(
+            p.net.peak_conns >= clients as u64,
+            "peak concurrency {} never reached the {clients} connections held open",
+            p.net.peak_conns
+        );
+        assert_eq!(p.net.answered as usize, requests);
+    };
 
-    let (on_s, on_net, on_m) = run_pass(&schedule, Arc::clone(&backend), 4096, clients);
-    report("cache-on", requests, on_s, &on_net, &on_m);
-    assert!(on_m.cache_hits > 0, "skewed mix must repeat keys");
-    assert_eq!(on_net.answered as usize, requests);
+    let (elapsed, wire_latencies, net, svc) =
+        run_pass(&schedule, Arc::clone(&backend), 0, clients, threads);
+    let off = Pass {
+        elapsed,
+        wire_latencies,
+        net,
+        svc,
+    };
+    report("cache-off", requests, &off);
+    assert_eq!(off.svc.cache_hits, 0, "disabled cache must never hit");
+    check(&off);
 
-    let speedup = (requests as f64 / on_s) / (requests as f64 / off_s);
+    let (elapsed, wire_latencies, net, svc) =
+        run_pass(&schedule, Arc::clone(&backend), 4096, clients, threads);
+    let on = Pass {
+        elapsed,
+        wire_latencies,
+        net,
+        svc,
+    };
+    report("cache-on", requests, &on);
+    assert!(on.svc.cache_hits > 0, "skewed mix must repeat keys");
+    check(&on);
+
+    let speedup = (requests as f64 / on.elapsed) / (requests as f64 / off.elapsed);
     println!("cache speedup over the wire: {speedup:.2}x on requests/sec");
 
     if let Some(path) = args.get("json") {
@@ -159,11 +256,12 @@ fn main() {
             .set("scale", scale)
             .set("seed", seed)
             .set("clients", clients)
+            .set("threads", threads)
             .set(
                 "results",
                 Json::Arr(vec![
-                    pass_json("cache_off", requests, off_s, &off_net, &off_m),
-                    pass_json("cache_on", requests, on_s, &on_net, &on_m),
+                    pass_json("cache_off", requests, &off),
+                    pass_json("cache_on", requests, &on),
                 ]),
             )
             .set("cache_speedup_req_per_s", speedup);

@@ -38,8 +38,12 @@
 //! * [`coordinator`] — the online prediction service (content-keyed
 //!   answer cache + sharded batcher + workers + bounded admission).
 //! * [`net`] — the TCP front door: `dnnabacus-wire-v1` length-prefixed
-//!   JSON protocol, server with admission control and graceful drain,
-//!   pipelining client, and the `schedule` placement request kind.
+//!   JSON protocol as a resumable sans-I/O codec
+//!   (`net::frame::FrameCodec`), a nonblocking readiness-driven event
+//!   loop server (raw `ppoll(2)` poller, admission control,
+//!   per-connection deadlines, graceful drain), a pipelining client
+//!   with typed `WireError` results, and the `schedule` placement
+//!   request kind.
 //! * [`scheduler`] — the §4.3 genetic-algorithm job scheduler,
 //!   generalized to N machines.
 //! * [`fleet`] — prediction-driven online cluster placement: policies

@@ -36,7 +36,9 @@
 //!                --cache-ttl-ms 120000   (capacity 0 disables caching)
 //!                --specs DIR (mix spec files from DIR into the load)
 //!                --listen ADDR (serve TCP; port 0 = OS-assigned)
-//!                --max-inflight 256 --max-conns 64
+//!                --max-inflight 256 --max-conns 4096
+//!                --max-frame BYTES (request payload cap, default 4 MiB)
+//!                --frame-deadline-ms 10000 (slow-loris/stalled-peer cap)
 //!                --serve-requests N (answer N requests, drain, exit)
 //!
 //! `client` flags: --addr HOST:PORT --count N (pipelined repeats)
@@ -429,12 +431,16 @@ fn serve_listen(args: &Args) -> dnnabacus::Result<()> {
     }
     let backend = backend_from(args, &ctx)?;
     println!("backend: {}", backend.name());
-    let net_cfg = net::ServerConfig {
-        max_conns: args.usize_or("max-conns", 64),
-        ..net::ServerConfig::default()
-    };
+    let defaults = net::ServerConfig::default();
     let svc = PredictionService::start(svc_cfg, backend);
-    let server = net::Server::start(&addr, net_cfg, svc)?;
+    let server = net::Server::builder()
+        .max_conns(args.usize_or("max-conns", defaults.max_conns))
+        .max_frame(args.usize_or("max-frame", defaults.max_frame))
+        .frame_deadline(Duration::from_millis(args.u64_or(
+            "frame-deadline-ms",
+            defaults.frame_deadline.as_millis() as u64,
+        )))
+        .start(&addr, svc)?;
     println!("listening on {} ({})", server.local_addr(), net::WIRE_FORMAT);
     // Stdout is block-buffered when redirected; the CI smoke greps this
     // line from a file while the server is still running.
@@ -459,6 +465,7 @@ fn serve_listen(args: &Args) -> dnnabacus::Result<()> {
         let mut w = Json::obj();
         w.set("connections", wire.connections)
             .set("conns_rejected", wire.conns_rejected)
+            .set("peak_conns", wire.peak_conns)
             .set("requests", wire.requests)
             .set("answered", wire.answered)
             .set("overloaded", wire.overloaded)

@@ -1,14 +1,24 @@
-//! Blocking `dnnabacus-wire-v1` client with request pipelining and
-//! reconnect.
+//! Blocking `dnnabacus-wire-v1` client with request pipelining,
+//! reconnect, and a typed error surface.
 //!
 //! The server answers a connection's requests strictly in order, so a
 //! client can pipeline: write a whole wave of frames, then read the
 //! wave of responses ([`Client::call_many`]) — one round trip instead
-//! of one per request. Predictions are idempotent (same content, same
-//! answer), so a connection-level failure during a single
-//! [`Client::call`] is retried once on a fresh connection before
-//! surfacing the error.
+//! of one per request.
+//!
+//! Failures split along [`WireError`]'s seam. Transport faults
+//! ([`WireError::is_transport`]: a broken dial/send/recv, or a
+//! pipeline id desync) mean no verdict arrived, and since predictions
+//! and placements are idempotent, [`Client::call`] /
+//! [`Client::schedule`] / [`Client::call_many`] retry those once on a
+//! fresh connection. Structured server verdicts (`overloaded`,
+//! `bad_request`, …) prove the server received and judged the request;
+//! they are never retried and surface as their typed variant. The
+//! pipelined surface ([`recv`](Client::recv)) keeps error replies as
+//! [`WireResponse`] values so one rejected request doesn't poison its
+//! wave — promote per response with [`WireResponse::check`].
 
+use super::error::{WireError, WireResult};
 use super::frame;
 use super::proto::{ScheduleRequest, WireRequest, WireResponse};
 use crate::util::error::Context as _;
@@ -17,10 +27,10 @@ use std::net::TcpStream;
 
 /// Largest number of requests [`Client::call_many`] leaves unanswered
 /// on the wire at once. Writing an unbounded wave can deadlock on full
-/// TCP buffers — the server blocks writing responses nobody is reading
-/// while the client blocks writing requests nobody is reading — so a
-/// bigger wave is transparently split into windows this size, reading
-/// each window's responses before writing the next.
+/// TCP buffers — the server's write queue backs up against a client
+/// that isn't reading responses while the client blocks writing
+/// requests — so a bigger wave is transparently split into windows
+/// this size, reading each window's responses before writing the next.
 pub const PIPELINE_WINDOW: usize = 64;
 
 /// A blocking wire client bound to one server address.
@@ -34,7 +44,7 @@ pub struct Client {
 impl Client {
     /// Connect eagerly, so configuration errors surface here rather
     /// than on the first request.
-    pub fn connect(addr: &str) -> crate::Result<Client> {
+    pub fn connect(addr: &str) -> WireResult<Client> {
         let mut client = Client {
             addr: addr.to_string(),
             stream: None,
@@ -54,10 +64,11 @@ impl Client {
         self.stream = None;
     }
 
-    fn ensure_connected(&mut self) -> crate::Result<&mut TcpStream> {
+    fn ensure_connected(&mut self) -> WireResult<&mut TcpStream> {
         if self.stream.is_none() {
             let stream = TcpStream::connect(&self.addr)
-                .with_context(|| format!("connecting to {}", self.addr))?;
+                .with_context(|| format!("connecting to {}", self.addr))
+                .map_err(WireError::Io)?;
             let _ = stream.set_nodelay(true);
             self.stream = Some(stream);
         }
@@ -66,123 +77,155 @@ impl Client {
 
     /// Queue one request on the wire without waiting for its answer —
     /// the pipelining half; pair with [`recv`](Self::recv) in order.
-    pub fn send(&mut self, req: &WireRequest) -> crate::Result<()> {
+    pub fn send(&mut self, req: &WireRequest) -> WireResult<()> {
         self.send_body(&req.to_json())
     }
 
     /// Write one already-encoded request body.
-    fn send_body(&mut self, body: &Json) -> crate::Result<()> {
+    fn send_body(&mut self, body: &Json) -> WireResult<()> {
         let body = body.to_string();
         let stream = self.ensure_connected()?;
         if let Err(e) = frame::write_frame(stream, body.as_bytes()) {
             self.stream = None; // poisoned; reconnect on next use
-            return Err(crate::DnnError::from(e).context(format!("sending to {}", self.addr)));
+            return Err(WireError::Io(
+                crate::DnnError::from(e).context(format!("sending to {}", self.addr)),
+            ));
         }
         Ok(())
     }
 
-    /// Read the next response in pipeline order. Errors when no
-    /// connection is open — a fresh dial here would park forever
-    /// waiting for a response to a request that was never sent on it.
-    pub fn recv(&mut self) -> crate::Result<WireResponse> {
+    /// Read the next response in pipeline order, error replies
+    /// included as values (promote with [`WireResponse::check`]).
+    /// Errors when no connection is open — a fresh dial here would
+    /// park forever waiting for a response to a request that was never
+    /// sent on it.
+    pub fn recv(&mut self) -> WireResult<WireResponse> {
         let max = self.max_frame;
         let read = match self.stream.as_mut() {
-            None => crate::bail!(
-                "not connected to {} — send a request before receiving",
-                self.addr
-            ),
+            None => {
+                return Err(WireError::Io(crate::err!(
+                    "not connected to {} — send a request before receiving",
+                    self.addr
+                )))
+            }
             Some(stream) => frame::read_frame(stream, max),
         };
         let payload = match read {
             Ok(Some(payload)) => payload,
             Ok(None) => {
                 self.stream = None;
-                crate::bail!("server {} closed the connection", self.addr);
+                return Err(WireError::Io(crate::err!(
+                    "server {} closed the connection",
+                    self.addr
+                )));
             }
             Err(e) => {
                 self.stream = None;
-                return Err(
-                    crate::DnnError::from(e).context(format!("reading from {}", self.addr))
-                );
+                return Err(WireError::Io(
+                    crate::DnnError::from(e).context(format!("reading from {}", self.addr)),
+                ));
             }
         };
-        let text = std::str::from_utf8(&payload)?;
-        WireResponse::from_json(&Json::parse(text)?)
+        let parse = || -> crate::Result<WireResponse> {
+            let text = std::str::from_utf8(&payload)?;
+            WireResponse::from_json(&Json::parse(text)?)
+        };
+        parse().map_err(WireError::Io)
     }
 
-    /// Send one request and wait for its answer. On a connection-level
-    /// failure the round is retried once on a fresh connection
-    /// (predictions are idempotent), then the error surfaces.
-    pub fn call(&mut self, req: &WireRequest) -> crate::Result<WireResponse> {
-        match self.round(req) {
-            Ok(resp) => Ok(resp),
-            Err(first) => {
-                self.stream = None;
-                self.round(req)
-                    .map_err(|e| e.context(format!("after reconnect (first attempt: {first:#})")))
+    /// One send + one receive with the pipeline id check. The error
+    /// path is transport-only (`Io`/`Desync`); structured error
+    /// replies come back as `Ok` values for the caller to `check`.
+    fn round(&mut self, req_id: u64, body: &Json) -> WireResult<WireResponse> {
+        self.send_body(body)?;
+        let resp = self.recv()?;
+        if resp.id() != req_id {
+            // id 0 on an error reply is a connection-scoped verdict
+            // (e.g. a connection-slot refusal, issued before any
+            // request was read) — a real answer, not a desync.
+            if matches!(&resp, WireResponse::Err { id: 0, .. }) {
+                return Ok(resp);
             }
+            // The stream's ordering guarantee is broken; nothing read
+            // from this connection can be trusted anymore.
+            self.stream = None;
+            return Err(WireError::Desync {
+                expected: req_id,
+                got: resp.id(),
+            });
+        }
+        Ok(resp)
+    }
+
+    /// Retry wrapper: one fresh-connection retry for transport faults
+    /// only. A structured verdict proves the server received the
+    /// request — retrying it would double-submit.
+    fn with_retry(
+        &mut self,
+        mut round: impl FnMut(&mut Client) -> WireResult<WireResponse>,
+    ) -> WireResult<WireResponse> {
+        match round(self) {
+            Ok(resp) => resp.check(),
+            Err(first) if first.is_transport() => {
+                self.stream = None;
+                match round(self) {
+                    Ok(resp) => resp.check(),
+                    Err(WireError::Io(e)) => Err(WireError::Io(
+                        e.context(format!("after reconnect (first attempt: {first})")),
+                    )),
+                    Err(second) => Err(second),
+                }
+            }
+            Err(verdict) => Err(verdict),
         }
     }
 
-    fn round(&mut self, req: &WireRequest) -> crate::Result<WireResponse> {
-        self.send(req)?;
-        let resp = self.recv()?;
-        crate::ensure!(
-            resp.id() == req.id,
-            "response id {} does not match request id {}",
-            resp.id(),
-            req.id
-        );
-        Ok(resp)
+    /// Send one request and wait for its answer, as a typed result:
+    /// success replies are `Ok`, structured rejections surface as
+    /// their [`WireError`] variant. Transport failures are retried
+    /// once on a fresh connection (predictions are idempotent).
+    pub fn call(&mut self, req: &WireRequest) -> WireResult<WireResponse> {
+        let body = req.to_json();
+        let id = req.id;
+        self.with_retry(move |c| c.round(id, &body))
     }
 
     /// Send one `schedule` request and wait for its placement report.
-    /// Like [`call`](Self::call), a connection-level failure retries
-    /// once on a fresh connection — safe because placement runs are
-    /// deterministic for a given seed.
-    pub fn schedule(&mut self, req: &ScheduleRequest) -> crate::Result<WireResponse> {
-        match self.schedule_round(req) {
-            Ok(resp) => Ok(resp),
-            Err(first) => {
-                self.stream = None;
-                self.schedule_round(req)
-                    .map_err(|e| e.context(format!("after reconnect (first attempt: {first:#})")))
-            }
-        }
-    }
-
-    fn schedule_round(&mut self, req: &ScheduleRequest) -> crate::Result<WireResponse> {
-        self.send_body(&req.to_json())?;
-        let resp = self.recv()?;
-        crate::ensure!(
-            resp.id() == req.id,
-            "response id {} does not match schedule request id {}",
-            resp.id(),
-            req.id
-        );
-        Ok(resp)
+    /// Same retry and typing contract as [`call`](Self::call) — safe
+    /// because placement runs are deterministic for a given seed.
+    pub fn schedule(&mut self, req: &ScheduleRequest) -> WireResult<WireResponse> {
+        let body = req.to_json();
+        let id = req.id;
+        self.with_retry(move |c| c.round(id, &body))
     }
 
     /// Pipeline a wave: write every request, then read every response
     /// (split internally into [`PIPELINE_WINDOW`]-sized windows so an
     /// arbitrarily large wave cannot deadlock on full TCP buffers).
     /// The server answers in order per connection; each response id is
-    /// checked against its request to catch desyncs early. Like
-    /// [`call`](Self::call), a connection-level failure retries the
-    /// whole wave once on a fresh connection — safe because predictions
-    /// are idempotent and partial results are discarded on failure.
-    pub fn call_many(&mut self, reqs: &[WireRequest]) -> crate::Result<Vec<WireResponse>> {
+    /// checked against its request, and a mismatch is a
+    /// [`WireError::Desync`]. Transport failures retry the whole wave
+    /// once on a fresh connection (partial results are discarded).
+    /// Structured error replies stay in the returned vector as values
+    /// — promote per response with [`WireResponse::check`].
+    pub fn call_many(&mut self, reqs: &[WireRequest]) -> WireResult<Vec<WireResponse>> {
         match self.wave(reqs) {
             Ok(out) => Ok(out),
-            Err(first) => {
+            Err(first) if first.is_transport() => {
                 self.stream = None;
-                self.wave(reqs)
-                    .map_err(|e| e.context(format!("after reconnect (first attempt: {first:#})")))
+                match self.wave(reqs) {
+                    Ok(out) => Ok(out),
+                    Err(WireError::Io(e)) => Err(WireError::Io(
+                        e.context(format!("after reconnect (first attempt: {first})")),
+                    )),
+                    Err(second) => Err(second),
+                }
             }
+            Err(verdict) => Err(verdict),
         }
     }
 
-    fn wave(&mut self, reqs: &[WireRequest]) -> crate::Result<Vec<WireResponse>> {
+    fn wave(&mut self, reqs: &[WireRequest]) -> WireResult<Vec<WireResponse>> {
         let mut out = Vec::with_capacity(reqs.len());
         for window in reqs.chunks(PIPELINE_WINDOW) {
             for req in window {
@@ -190,12 +233,13 @@ impl Client {
             }
             for req in window {
                 let resp = self.recv()?;
-                crate::ensure!(
-                    resp.id() == req.id,
-                    "pipeline desync: response id {} for request id {}",
-                    resp.id(),
-                    req.id
-                );
+                if resp.id() != req.id {
+                    self.stream = None;
+                    return Err(WireError::Desync {
+                        expected: req.id,
+                        got: resp.id(),
+                    });
+                }
                 out.push(resp);
             }
         }
@@ -254,6 +298,27 @@ mod tests {
         };
         let addr = format!("127.0.0.1:{port}");
         let e = Client::connect(&addr).unwrap_err();
+        assert!(e.is_transport(), "{e:?}");
         assert!(format!("{e:#}").contains(&addr), "{e:#}");
+    }
+
+    #[test]
+    fn mixed_wave_keeps_error_replies_as_values() {
+        let server = server();
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+        let reqs = vec![
+            WireRequest::zoo(1, "lenet5"),
+            WireRequest::zoo(2, "gpt-17"), // unknown model: bad_request
+            WireRequest::zoo(3, "lenet5"),
+        ];
+        let responses = client.call_many(&reqs).unwrap();
+        assert_eq!(responses.len(), 3);
+        assert!(responses[0].is_ok());
+        match responses[1].clone().check() {
+            Err(WireError::BadRequest { id: 2, .. }) => {}
+            other => panic!("expected BadRequest for the middle request, got {other:?}"),
+        }
+        assert!(responses[2].is_ok(), "a rejected request must not poison the wave");
+        server.shutdown();
     }
 }

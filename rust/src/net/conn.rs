@@ -1,0 +1,193 @@
+//! Per-connection state for the nonblocking event loop.
+//!
+//! A [`Conn`] is pure mechanism: it owns the socket, the resumable
+//! [`FrameCodec`], the in-order [`PendingReply`] pipeline queue, and
+//! the two per-connection deadlines. Policy — what a decoded frame
+//! means, which replies to queue, when to give up — lives in
+//! [`crate::net::server`]'s event loop, which drives every `Conn` once
+//! per readiness tick. All socket I/O here is nonblocking:
+//! `WouldBlock` is a normal return, never an error.
+//!
+//! Lifecycle: `Open` (serving) → `closing` (stop decoding new
+//! requests; flush what is owed, consume any refused payload) → closed
+//! (the loop drops the `Conn`, sending the FIN). The `closing` flag is
+//! set by peer EOF, an oversized-frame refusal, an accept-time slot
+//! refusal, or a fatal queue failure — in every case the connection
+//! still flushes the replies it owes first.
+
+use super::frame::FrameCodec;
+use super::proto::WireResponse;
+use crate::coordinator::Prediction;
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::Receiver;
+use std::time::Instant;
+
+/// Most predictions one connection keeps in flight inside the service
+/// at once. Pipelined frames are decoded and submitted as they arrive
+/// (up to this window) rather than strictly one at a time, so a single
+/// pipelining client still feeds the batcher — and total in-flight
+/// (`max_conns × window`) can genuinely exceed `max_inflight`, making
+/// service-level admission a real protection, not dead code. Responses
+/// are always written in request order.
+pub const CONN_PIPELINE: usize = 32;
+
+/// Most bytes one connection may pull off its socket in a single
+/// readiness tick, so a firehose peer cannot starve the other
+/// connections sharing the loop.
+const READ_BURST: usize = 256 * 1024;
+
+/// One enqueued reply, kept strictly in request order.
+pub enum PendingReply {
+    /// Resolved at decode/admission time (bad request, overloaded,
+    /// oversized-frame refusal).
+    Ready(WireResponse),
+    /// Submitted into the prediction service; resolved when a worker
+    /// answers on the channel.
+    Wait {
+        id: u64,
+        model: String,
+        rx: Receiver<crate::Result<Prediction>>,
+    },
+    /// A `schedule` call offloaded to the placement pool; the worker
+    /// sends the finished response.
+    Job {
+        id: u64,
+        rx: Receiver<WireResponse>,
+    },
+}
+
+impl PendingReply {
+    /// `true` when the head still waits on an off-loop worker — the
+    /// loop polls with a short timeout while any of these exist, since
+    /// their completion cannot wake the poller by itself.
+    pub fn is_off_loop(&self) -> bool {
+        matches!(self, PendingReply::Wait { .. } | PendingReply::Job { .. })
+    }
+}
+
+/// Outcome of one nonblocking read burst.
+pub struct Filled {
+    /// Bytes pulled off the socket (and fed to the codec) this burst.
+    pub bytes: usize,
+}
+
+/// One connection's complete event-loop state.
+pub struct Conn {
+    pub stream: TcpStream,
+    pub codec: FrameCodec,
+    /// Replies owed, in request order; an unresolved head blocks
+    /// everything behind it (responses never reorder).
+    pub pending: VecDeque<PendingReply>,
+    /// Armed while the decoder waits on the peer mid-frame (or
+    /// mid-discard); cumulative — progress does not extend it.
+    pub read_deadline: Option<Instant>,
+    /// Armed while queued outbound bytes remain unwritten; a peer that
+    /// never reads its replies hits this instead of pinning the
+    /// connection forever.
+    pub write_deadline: Option<Instant>,
+    /// Stop decoding new requests; flush what is owed (and consume any
+    /// refused payload), then close.
+    pub closing: bool,
+    /// The peer's write half is done (EOF observed). Replies can still
+    /// be written — a half-closing client gets its answers.
+    pub peer_eof: bool,
+    /// Refused at accept (connection-slot overflow): never counted as
+    /// a served connection; exists only to flush its refusal frame.
+    pub refused: bool,
+    /// Last instant this connection made any progress — the drain
+    /// logic closes a connection only after it has been idle for one
+    /// full poll window.
+    pub idle_since: Instant,
+}
+
+impl Conn {
+    /// Wrap an accepted (already nonblocking) socket.
+    pub fn new(stream: TcpStream, max_frame: usize) -> Conn {
+        Conn {
+            stream,
+            codec: FrameCodec::new(max_frame),
+            pending: VecDeque::new(),
+            read_deadline: None,
+            write_deadline: None,
+            closing: false,
+            peer_eof: false,
+            refused: false,
+            idle_since: Instant::now(),
+        }
+    }
+
+    /// Whether the event loop should poll this socket for readability:
+    /// not after EOF, not while the pipeline window is full
+    /// (backpressure — bytes stay in the kernel buffer), and when
+    /// closing only to consume a refused oversized payload so the
+    /// close carries a clean FIN.
+    pub fn wants_read(&self) -> bool {
+        if self.peer_eof {
+            return false;
+        }
+        if self.closing {
+            return self.codec.discarding();
+        }
+        self.pending.len() < CONN_PIPELINE
+    }
+
+    /// Whether the event loop should poll this socket for writability.
+    pub fn wants_write(&self) -> bool {
+        self.codec.has_out()
+    }
+
+    /// Read until `WouldBlock`, EOF, or the per-tick burst cap,
+    /// feeding every chunk to the codec. EOF sets
+    /// [`peer_eof`](Self::peer_eof) rather than erroring —
+    /// classification (clean close vs truncation) is the loop's job,
+    /// after it has decoded whatever arrived with the FIN.
+    pub fn fill(&mut self, scratch: &mut [u8]) -> io::Result<Filled> {
+        let mut bytes = 0;
+        loop {
+            match self.stream.read(scratch) {
+                Ok(0) => {
+                    self.peer_eof = true;
+                    return Ok(Filled { bytes });
+                }
+                Ok(n) => {
+                    self.codec.feed(&scratch[..n]);
+                    bytes += n;
+                    if bytes >= READ_BURST {
+                        return Ok(Filled { bytes });
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    return Ok(Filled { bytes });
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Write queued outbound bytes until `WouldBlock` or the queue
+    /// empties; returns bytes written this call.
+    pub fn flush(&mut self) -> io::Result<usize> {
+        let mut total = 0;
+        while self.codec.has_out() {
+            match self.stream.write(self.codec.out_bytes()) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        "peer stopped accepting bytes",
+                    ));
+                }
+                Ok(n) => {
+                    self.codec.consume_out(n);
+                    total += n;
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(total)
+    }
+}

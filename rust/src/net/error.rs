@@ -1,0 +1,229 @@
+//! Typed wire-level errors for client callers.
+//!
+//! [`crate::net::Client`] used to surface every failure as a
+//! string-chained [`DnnError`], forcing callers (`client` CLI,
+//! `net_load`, `fleet_load`) to match message prefixes to tell an
+//! overloaded server from a dead socket. [`WireError`] makes the
+//! distinction a type: structured server replies map to their
+//! [`ErrorKind`] variant (carrying the echoed request id), transport
+//! faults stay in [`WireError::Io`] / [`WireError::Desync`] — the only
+//! two classes a caller may safely retry, since a structured reply
+//! proves the server received and judged the request.
+//!
+//! `WireError` implements `std::error::Error`, so `?` still converts
+//! into the crate-wide [`DnnError`] wherever callers don't care about
+//! the kind.
+
+use super::proto::{ErrorKind, WireResponse};
+use crate::coordinator::service::BACKEND_ERROR_PREFIX;
+use crate::util::error::DnnError;
+use std::fmt;
+
+/// Result alias for the typed client surface.
+pub type WireResult<T> = std::result::Result<T, WireError>;
+
+/// Why a wire call failed, separated into structured server verdicts
+/// (the connection and request both worked; the server said no) and
+/// transport faults (no verdict ever arrived).
+#[derive(Debug, Clone)]
+pub enum WireError {
+    /// The server refused admission (connection slots or the service's
+    /// in-flight bound); retry later is the intended response.
+    Overloaded { id: u64, message: String },
+    /// The server is draining and will not take new work.
+    ShuttingDown { id: u64, message: String },
+    /// The request itself was judged malformed (bad JSON, unknown
+    /// model, bad field); retrying the same bytes cannot succeed.
+    BadRequest { id: u64, message: String },
+    /// The server's backend faulted while serving a well-formed
+    /// request (the wire `internal` kind).
+    Backend { id: u64, message: String },
+    /// Connection-level failure: dial, send, or receive broke before a
+    /// structured reply arrived. Safe to retry (predictions and
+    /// placements are deterministic/idempotent).
+    Io(DnnError),
+    /// The server answered with a different request id than the
+    /// pipeline expected — the stream ordering guarantee is broken and
+    /// the connection cannot be trusted. Safe to retry on a fresh
+    /// connection.
+    Desync { expected: u64, got: u64 },
+}
+
+impl WireError {
+    /// The structured reply kind, if the server issued a verdict
+    /// (`None` for transport faults).
+    pub fn kind(&self) -> Option<ErrorKind> {
+        match self {
+            WireError::Overloaded { .. } => Some(ErrorKind::Overloaded),
+            WireError::ShuttingDown { .. } => Some(ErrorKind::ShuttingDown),
+            WireError::BadRequest { .. } => Some(ErrorKind::BadRequest),
+            WireError::Backend { .. } => Some(ErrorKind::Internal),
+            WireError::Io(_) | WireError::Desync { .. } => None,
+        }
+    }
+
+    /// The request id the server echoed, if a verdict arrived.
+    pub fn id(&self) -> Option<u64> {
+        match self {
+            WireError::Overloaded { id, .. }
+            | WireError::ShuttingDown { id, .. }
+            | WireError::BadRequest { id, .. }
+            | WireError::Backend { id, .. } => Some(*id),
+            WireError::Io(_) | WireError::Desync { .. } => None,
+        }
+    }
+
+    /// `true` for failures where no structured verdict arrived — the
+    /// only class [`crate::net::Client`] retries on a fresh connection
+    /// (a verdict proves the server already received the request, so
+    /// retrying it would double-submit).
+    pub fn is_transport(&self) -> bool {
+        matches!(self, WireError::Io(_) | WireError::Desync { .. })
+    }
+
+    /// Build the variant matching a structured error reply.
+    pub fn from_reply(id: u64, kind: ErrorKind, message: String) -> WireError {
+        match kind {
+            ErrorKind::Overloaded => WireError::Overloaded { id, message },
+            ErrorKind::ShuttingDown => WireError::ShuttingDown { id, message },
+            ErrorKind::BadRequest => WireError::BadRequest { id, message },
+            ErrorKind::Internal => WireError::Backend { id, message },
+        }
+    }
+
+    /// Server-side classification of a [`crate::coordinator`] service
+    /// error into its wire kind: backend faults carry the service's
+    /// shared [`BACKEND_ERROR_PREFIX`] on their root cause and map to
+    /// `internal`; everything else (unknown model, dataset mismatch,
+    /// bad field) is the request's fault and maps to `bad_request`.
+    pub fn classify_service(e: &DnnError) -> ErrorKind {
+        if e.root_cause().starts_with(BACKEND_ERROR_PREFIX) {
+            ErrorKind::Internal
+        } else {
+            ErrorKind::BadRequest
+        }
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Overloaded { id, message } => {
+                write!(f, "overloaded (request {id}): {message}")
+            }
+            WireError::ShuttingDown { id, message } => {
+                write!(f, "shutting down (request {id}): {message}")
+            }
+            WireError::BadRequest { id, message } => {
+                write!(f, "bad request (request {id}): {message}")
+            }
+            WireError::Backend { id, message } => {
+                write!(f, "server internal error (request {id}): {message}")
+            }
+            // `{:#}` keeps the whole context chain: the blanket
+            // `From<std::error::Error>` into DnnError flattens this
+            // Display into one segment, so it must carry everything.
+            WireError::Io(e) => write!(f, "{e:#}"),
+            WireError::Desync { expected, got } => {
+                write!(
+                    f,
+                    "pipeline desync: response id {got} for request id {expected}"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<DnnError> for WireError {
+    fn from(e: DnnError) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+impl WireResponse {
+    /// Promote a structured error reply into the matching
+    /// [`WireError`] variant, passing success replies through — the
+    /// bridge from the pipelined surface (`recv`/`call_many`, which
+    /// keep error replies as values so one rejected request doesn't
+    /// poison its whole wave) to typed error handling per response.
+    pub fn check(self) -> WireResult<WireResponse> {
+        match self {
+            WireResponse::Err { id, kind, message } => {
+                Err(WireError::from_reply(id, kind, message))
+            }
+            ok => Ok(ok),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_ids_and_transport_classes() {
+        let e = WireError::from_reply(7, ErrorKind::Overloaded, "busy".into());
+        assert_eq!(e.kind(), Some(ErrorKind::Overloaded));
+        assert_eq!(e.id(), Some(7));
+        assert!(!e.is_transport());
+        let io = WireError::Io(crate::err!("dial failed"));
+        assert_eq!(io.kind(), None);
+        assert_eq!(io.id(), None);
+        assert!(io.is_transport());
+        assert!(WireError::Desync {
+            expected: 1,
+            got: 2,
+        }
+        .is_transport());
+    }
+
+    #[test]
+    fn classify_service_splits_backend_from_bad_request() {
+        let backend = crate::err!("{}simulator exploded", BACKEND_ERROR_PREFIX);
+        assert_eq!(WireError::classify_service(&backend), ErrorKind::Internal);
+        let user = crate::err!("unknown model 'gpt-17'");
+        assert_eq!(WireError::classify_service(&user), ErrorKind::BadRequest);
+        // The prefix must sit on the *root cause*, not an outer layer.
+        let wrapped = crate::err!("unknown model").context("backend: outer");
+        assert_eq!(WireError::classify_service(&wrapped), ErrorKind::BadRequest);
+    }
+
+    #[test]
+    fn check_promotes_error_replies() {
+        let reply = WireResponse::error(3, ErrorKind::BadRequest, "nope");
+        match reply.check() {
+            Err(WireError::BadRequest { id: 3, message }) => {
+                assert_eq!(message, "nope");
+            }
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn display_names_the_kind_and_converts_to_dnn_error() {
+        let e = WireError::from_reply(9, ErrorKind::ShuttingDown, "draining".into());
+        let text = e.to_string();
+        assert!(text.contains("shutting down"), "{text}");
+        assert!(text.contains("draining"), "{text}");
+        // `?` interop: WireError flows into the crate error type.
+        fn f() -> crate::Result<()> {
+            Err(WireError::Desync {
+                expected: 1,
+                got: 2,
+            })?;
+            Ok(())
+        }
+        let chained = f().unwrap_err();
+        assert!(format!("{chained:#}").contains("desync"));
+    }
+
+    #[test]
+    fn io_display_keeps_the_context_chain() {
+        let e = WireError::Io(crate::err!("root").context("dialing 127.0.0.1:9"));
+        let text = e.to_string();
+        assert!(text.contains("dialing 127.0.0.1:9"), "{text}");
+        assert!(text.contains("root"), "{text}");
+    }
+}

@@ -1,31 +1,47 @@
-//! Length-prefixed framing for `dnnabacus-wire-v1`.
+//! Length-prefixed framing for `dnnabacus-wire-v1`, built around a
+//! sans-I/O codec.
 //!
 //! A frame is a 4-byte big-endian payload length followed by that many
-//! bytes of UTF-8 JSON. The reader enforces a maximum payload length (a
+//! bytes of UTF-8 JSON. [`FrameCodec`] owns all parsing state and never
+//! touches a socket: bytes go in with [`FrameCodec::feed`], complete
+//! frames come out of [`FrameCodec::take`], and outbound frames queue
+//! into an internal byte buffer the caller flushes at its own pace.
+//! That one state machine serves both transports:
+//!
+//! * the nonblocking event loop ([`crate::net::server`]) resumes the
+//!   codec with whatever bytes each readiness tick produced;
+//! * the blocking client and tests use the [`read_frame`] /
+//!   [`read_frame_timeout`] adapters, which drive the same codec with
+//!   exact-sized blocking reads (never consuming bytes beyond the
+//!   current frame, so pipelined streams stay synchronized).
+//!
+//! The codec enforces a maximum payload length *before* allocating (a
 //! hostile or corrupt prefix must not make the server allocate
 //! gigabytes), distinguishes a clean EOF at a frame boundary from a
-//! truncated frame, and — for the server's drain loop — supports a
-//! bounded wait for the *start* of a frame that never gives up midway
-//! through one, so a poll timeout can never desynchronize the stream.
+//! truncated frame, and can consume-and-drop a refused oversized
+//! payload so the close that follows carries a clean FIN instead of an
+//! RST that would destroy the queued refusal.
 
 use std::fmt;
 use std::io::{self, Read, Write};
 use std::net::TcpStream;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Default cap on a frame's payload bytes (4 MiB — a large hand-written
 /// model spec is tens of KiB; anything near this limit is hostile or
 /// corrupt).
 pub const MAX_FRAME: usize = 4 << 20;
 
-/// Cumulative deadline for the *remainder* of a frame once its first
-/// byte has arrived. A peer that starts a frame and stalls — or drips
-/// bytes to keep resetting a naive per-read timer — hits this instead
-/// of pinning its handler (and the server's graceful drain) forever.
-/// Generous, because a healthy peer sends a whole frame in one burst.
+/// Default cumulative deadline for the *remainder* of a frame once its
+/// first byte has arrived. A peer that starts a frame and stalls — or
+/// drips bytes to keep resetting a naive per-read timer — hits this
+/// instead of pinning its connection (and the server's graceful drain)
+/// forever. Generous, because a healthy peer sends a whole frame in one
+/// burst. The event loop takes its deadline from `ServerConfig`
+/// (defaulting to this); the blocking adapters use it directly.
 pub const MID_FRAME_DEADLINE: Duration = Duration::from_secs(10);
 
-/// Why a frame could not be read.
+/// Why a frame could not be decoded.
 #[derive(Debug)]
 pub enum FrameError {
     /// The length prefix exceeds the reader's limit. The stream is
@@ -59,7 +75,230 @@ impl From<io::Error> for FrameError {
     }
 }
 
-/// Write one frame (single buffered syscall, flushed).
+/// Where the decoder is inside the byte stream.
+enum DecodeState {
+    /// Waiting for (the rest of) the 4-byte length prefix.
+    Prefix,
+    /// Prefix consumed; waiting for `want` payload bytes.
+    Body { want: usize },
+    /// An oversized frame was refused; `remaining` payload bytes are
+    /// consumed and dropped without buffering so the stream can end in
+    /// a clean FIN (or resynchronize on the next frame).
+    Discard { remaining: usize },
+}
+
+/// Resumable sans-I/O frame codec: decode half (`feed`/`take`) and
+/// outbound byte queue (`queue`/`out_bytes`/`consume_out`).
+///
+/// Feed it byte chunks in any fragmentation — byte-at-a-time drips,
+/// split length prefixes, several pipelined frames in one chunk — and
+/// take complete frames out. An oversized length prefix is reported by
+/// [`take`](Self::take) exactly once (without allocating the claimed
+/// length), after which the codec consumes and drops that frame's
+/// payload; callers either close after the drop completes (the server)
+/// or treat the error as fatal (the client adapters).
+pub struct FrameCodec {
+    max: usize,
+    /// Undecoded inbound bytes: a partial prefix or partial payload.
+    /// Never holds more than one frame-in-progress plus whatever tail
+    /// the last `feed` carried.
+    buf: Vec<u8>,
+    state: DecodeState,
+    /// Encoded outbound frames not yet handed to the transport.
+    out: Vec<u8>,
+    /// Leading bytes of `out` already written by the transport.
+    out_pos: usize,
+}
+
+impl FrameCodec {
+    /// A fresh codec enforcing `max` payload bytes per inbound frame.
+    pub fn new(max: usize) -> FrameCodec {
+        FrameCodec {
+            max,
+            buf: Vec::new(),
+            state: DecodeState::Prefix,
+            out: Vec::new(),
+            out_pos: 0,
+        }
+    }
+
+    /// Ingest one chunk of bytes from the transport. Cheap: bytes
+    /// destined for a refused (oversized) frame are counted and
+    /// dropped here; everything else is buffered for [`take`].
+    pub fn feed(&mut self, mut chunk: &[u8]) {
+        // Only short-circuit the discard when nothing is buffered —
+        // otherwise byte order between buffered and fresh bytes would
+        // invert (take/drain_discard handle the buffered case).
+        if self.buf.is_empty() {
+            if let DecodeState::Discard { remaining } = &mut self.state {
+                let n = chunk.len().min(*remaining);
+                *remaining -= n;
+                chunk = &chunk[n..];
+                if *remaining == 0 {
+                    self.state = DecodeState::Prefix;
+                }
+            }
+        }
+        self.buf.extend_from_slice(chunk);
+    }
+
+    /// Decode the next complete frame out of the buffered bytes.
+    ///
+    /// `Ok(None)` means "need more bytes" (call [`feed`](Self::feed)
+    /// again); [`FrameError::TooLarge`] is returned exactly once per
+    /// oversized frame, after which the codec drops that payload and
+    /// resynchronizes — a subsequent `take` can decode the frame after
+    /// it once the refused payload has fully arrived.
+    pub fn take(&mut self) -> Result<Option<Vec<u8>>, FrameError> {
+        loop {
+            match self.state {
+                DecodeState::Discard { remaining } => {
+                    let n = self.buf.len().min(remaining);
+                    self.buf.drain(..n);
+                    let left = remaining - n;
+                    if left == 0 {
+                        self.state = DecodeState::Prefix;
+                        continue;
+                    }
+                    self.state = DecodeState::Discard { remaining: left };
+                    return Ok(None);
+                }
+                DecodeState::Prefix => {
+                    if self.buf.len() < 4 {
+                        return Ok(None);
+                    }
+                    let len =
+                        u32::from_be_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]])
+                            as usize;
+                    self.buf.drain(..4);
+                    if len > self.max {
+                        self.state = DecodeState::Discard { remaining: len };
+                        return Err(FrameError::TooLarge { len, max: self.max });
+                    }
+                    self.state = DecodeState::Body { want: len };
+                }
+                DecodeState::Body { want } => {
+                    if self.buf.len() < want {
+                        return Ok(None);
+                    }
+                    let frame: Vec<u8> = self.buf.drain(..want).collect();
+                    self.state = DecodeState::Prefix;
+                    return Ok(Some(frame));
+                }
+            }
+        }
+    }
+
+    /// Drop buffered bytes toward the refused frame's discard target
+    /// *without* decoding anything after it — the close path for a
+    /// server that refuses an oversized frame and will not serve the
+    /// connection further. Returns `true` while refused payload is
+    /// still outstanding (keep reading), `false` once the drop is
+    /// complete (safe to close with a clean FIN).
+    pub fn drain_discard(&mut self) -> bool {
+        if let DecodeState::Discard { remaining } = self.state {
+            let n = self.buf.len().min(remaining);
+            self.buf.drain(..n);
+            let left = remaining - n;
+            self.state = if left == 0 {
+                DecodeState::Prefix
+            } else {
+                DecodeState::Discard { remaining: left }
+            };
+            return left > 0;
+        }
+        false
+    }
+
+    /// `true` while an oversized frame's refused payload is still being
+    /// consumed.
+    pub fn discarding(&self) -> bool {
+        matches!(self.state, DecodeState::Discard { .. })
+    }
+
+    /// `true` when the decoder is inside a frame (or a discard) — the
+    /// condition under which the event loop arms its per-connection
+    /// read deadline, so a slow-loris peer cannot stall forever, while
+    /// an idle peer at a frame boundary costs nothing.
+    pub fn mid_frame(&self) -> bool {
+        !matches!(self.state, DecodeState::Prefix) || !self.buf.is_empty()
+    }
+
+    /// How many more bytes the decoder needs before the current
+    /// prefix/payload can complete (at least 1). Blocking adapters read
+    /// *exactly* this many bytes so they never consume bytes belonging
+    /// to the next pipelined frame.
+    pub fn needed(&self) -> usize {
+        let pending = match self.state {
+            DecodeState::Prefix => 4usize.saturating_sub(self.buf.len()),
+            DecodeState::Body { want } => want.saturating_sub(self.buf.len()),
+            DecodeState::Discard { remaining } => remaining,
+        };
+        pending.max(1)
+    }
+
+    /// Classify an EOF from the transport: clean at a frame boundary
+    /// (or inside a refused payload the peer gave up on), otherwise
+    /// [`FrameError::Truncated`].
+    pub fn finish(&self) -> Result<(), FrameError> {
+        match self.state {
+            DecodeState::Prefix if self.buf.is_empty() => Ok(()),
+            DecodeState::Prefix => Err(FrameError::Truncated {
+                got: self.buf.len(),
+                want: 4,
+            }),
+            DecodeState::Body { want } => Err(FrameError::Truncated {
+                got: self.buf.len(),
+                want,
+            }),
+            DecodeState::Discard { .. } => Ok(()),
+        }
+    }
+
+    /// Encode one outbound frame into the write queue. The transport
+    /// flushes via [`out_bytes`](Self::out_bytes) /
+    /// [`consume_out`](Self::consume_out) whenever the socket is
+    /// writable.
+    pub fn queue(&mut self, payload: &[u8]) -> io::Result<()> {
+        if payload.len() > u32::MAX as usize {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "payload too large to length-prefix",
+            ));
+        }
+        self.out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+        self.out.extend_from_slice(payload);
+        Ok(())
+    }
+
+    /// `true` while queued outbound bytes remain unwritten.
+    pub fn has_out(&self) -> bool {
+        self.out_pos < self.out.len()
+    }
+
+    /// Queued outbound bytes not yet written.
+    pub fn out_bytes(&self) -> &[u8] {
+        &self.out[self.out_pos..]
+    }
+
+    /// Record that the transport wrote `n` leading bytes of
+    /// [`out_bytes`](Self::out_bytes).
+    pub fn consume_out(&mut self, n: usize) {
+        self.out_pos = (self.out_pos + n).min(self.out.len());
+        if self.out_pos == self.out.len() {
+            self.out.clear();
+            self.out_pos = 0;
+        } else if self.out_pos >= 64 * 1024 {
+            // Compact occasionally so a long-lived connection's write
+            // queue doesn't grow a permanent dead prefix.
+            self.out.drain(..self.out_pos);
+            self.out_pos = 0;
+        }
+    }
+}
+
+/// Write one frame (single buffered syscall, flushed) — the blocking
+/// transport's encode path.
 pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
     if payload.len() > u32::MAX as usize {
         return Err(io::Error::new(
@@ -74,16 +313,26 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
     w.flush()
 }
 
-/// Read one frame. `Ok(None)` is a clean EOF at a frame boundary (the
-/// peer finished and closed); an EOF anywhere inside a frame is
-/// [`FrameError::Truncated`].
+/// Read one frame with blocking reads. `Ok(None)` is a clean EOF at a
+/// frame boundary (the peer finished and closed); an EOF anywhere
+/// inside a frame is [`FrameError::Truncated`]. A thin adapter over
+/// [`FrameCodec`]: each read asks for exactly the bytes the codec still
+/// needs, so pipelined streams stay synchronized across calls.
 pub fn read_frame(r: &mut impl Read, max: usize) -> Result<Option<Vec<u8>>, FrameError> {
-    let mut prefix = [0u8; 4];
-    match fill(r, &mut prefix)? {
-        Filled::Eof => return Ok(None),
-        Filled::Complete => {}
+    let mut codec = FrameCodec::new(max);
+    let mut scratch = [0u8; 8192];
+    loop {
+        if let Some(frame) = codec.take()? {
+            return Ok(Some(frame));
+        }
+        let want = codec.needed().min(scratch.len());
+        match r.read(&mut scratch[..want]) {
+            Ok(0) => return codec.finish().map(|()| None),
+            Ok(n) => codec.feed(&scratch[..n]),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::Io(e)),
+        }
     }
-    read_body(r, u32::from_be_bytes(prefix) as usize, max).map(Some)
 }
 
 /// Outcome of a bounded wait for a frame on a socket.
@@ -97,13 +346,14 @@ pub enum Waited {
 }
 
 /// Like [`read_frame`], but gives up after `wait` if no frame has
-/// *started* — the server's drain loop polls with this so an idle
-/// connection can observe the shutdown flag. A frame in progress is
-/// read to completion under one *cumulative* [`MID_FRAME_DEADLINE`]
-/// for the whole frame: a healthy peer (one burst) never hits it, and
-/// a stalled or drip-feeding peer becomes an I/O error — the deadline
-/// cannot be reset by trickling bytes, so a slow-loris cannot pin a
-/// handler (or the server's graceful drain) indefinitely.
+/// *started* — a blocking caller polls with this so it can observe
+/// out-of-band state (e.g. a shutdown flag) between frames. A frame in
+/// progress is read to completion under one *cumulative*
+/// [`MID_FRAME_DEADLINE`] for the whole frame: a healthy peer (one
+/// burst) never hits it, and a stalled or drip-feeding peer becomes an
+/// I/O error — the deadline cannot be reset by trickling bytes, so a
+/// slow-loris cannot pin the caller indefinitely. Also a thin adapter
+/// over [`FrameCodec`], with exact-sized reads.
 pub fn read_frame_timeout(
     stream: &mut TcpStream,
     max: usize,
@@ -111,9 +361,10 @@ pub fn read_frame_timeout(
 ) -> Result<Waited, FrameError> {
     // A zero timeout means "no timeout" to the socket API; clamp up.
     stream.set_read_timeout(Some(wait.max(Duration::from_millis(1))))?;
-    let mut first = [0u8; 1];
+    let mut codec = FrameCodec::new(max);
+    let mut scratch = [0u8; 8192];
     let n = loop {
-        match stream.read(&mut first) {
+        match stream.read(&mut scratch[..1]) {
             Ok(n) => break n,
             Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
             Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
@@ -125,36 +376,15 @@ pub fn read_frame_timeout(
     if n == 0 {
         return Ok(Waited::Eof);
     }
+    codec.feed(&scratch[..1]);
     // The frame has started; everything that follows shares one
     // deadline, re-armed before every read with the *remaining* budget.
-    let deadline = std::time::Instant::now() + MID_FRAME_DEADLINE;
-    let mut rest = [0u8; 3];
-    match fill_by(stream, &mut rest, deadline)? {
-        Filled::Complete => {}
-        Filled::Eof => return Err(FrameError::Truncated { got: 1, want: 4 }),
-    }
-    let len = u32::from_be_bytes([first[0], rest[0], rest[1], rest[2]]) as usize;
-    if len > max {
-        return Err(FrameError::TooLarge { len, max });
-    }
-    let mut payload = vec![0u8; len];
-    match fill_by(stream, &mut payload, deadline)? {
-        Filled::Complete => Ok(Waited::Frame(payload)),
-        Filled::Eof => Err(FrameError::Truncated { got: 0, want: len }),
-    }
-}
-
-/// [`fill`] against an absolute deadline: the socket read timeout is
-/// re-armed with the remaining budget before every read, so partial
-/// progress cannot extend the total wait.
-fn fill_by(
-    stream: &mut TcpStream,
-    buf: &mut [u8],
-    deadline: std::time::Instant,
-) -> Result<Filled, FrameError> {
-    let mut got = 0;
-    while got < buf.len() {
-        let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+    let deadline = Instant::now() + MID_FRAME_DEADLINE;
+    loop {
+        if let Some(frame) = codec.take()? {
+            return Ok(Waited::Frame(frame));
+        }
+        let remaining = deadline.saturating_duration_since(Instant::now());
         if remaining.is_zero() {
             return Err(FrameError::Io(io::Error::new(
                 io::ErrorKind::TimedOut,
@@ -162,18 +392,17 @@ fn fill_by(
             )));
         }
         stream.set_read_timeout(Some(remaining.max(Duration::from_millis(1))))?;
-        match stream.read(&mut buf[got..]) {
+        let want = codec.needed().min(scratch.len());
+        match stream.read(&mut scratch[..want]) {
             Ok(0) => {
-                return if got == 0 {
-                    Ok(Filled::Eof)
-                } else {
-                    Err(FrameError::Truncated {
-                        got,
-                        want: buf.len(),
-                    })
+                return match codec.finish() {
+                    Err(e) => Err(e),
+                    // Unreachable in practice: a complete frame would
+                    // have been taken above. Degrade to a clean EOF.
+                    Ok(()) => Ok(Waited::Eof),
                 };
             }
-            Ok(n) => got += n,
+            Ok(n) => codec.feed(&scratch[..n]),
             Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
             Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
                 return Err(FrameError::Io(io::Error::new(
@@ -184,81 +413,12 @@ fn fill_by(
             Err(e) => return Err(FrameError::Io(e)),
         }
     }
-    Ok(Filled::Complete)
-}
-
-/// Read and discard up to `n` bytes under the per-frame deadline —
-/// how the server disposes of an oversized frame's payload after
-/// sending its refusal, so the close that follows carries a clean FIN
-/// instead of an RST that would destroy the queued reply.
-pub fn discard(stream: &mut TcpStream, mut n: usize) -> Result<(), FrameError> {
-    let deadline = std::time::Instant::now() + MID_FRAME_DEADLINE;
-    let mut sink = [0u8; 8192];
-    while n > 0 {
-        let remaining = deadline.saturating_duration_since(std::time::Instant::now());
-        if remaining.is_zero() {
-            return Err(FrameError::Io(io::Error::new(
-                io::ErrorKind::TimedOut,
-                "discard deadline exceeded",
-            )));
-        }
-        stream.set_read_timeout(Some(remaining.max(Duration::from_millis(1))))?;
-        let want = n.min(sink.len());
-        match stream.read(&mut sink[..want]) {
-            Ok(0) => return Ok(()), // peer gave up early; that's fine
-            Ok(read) => n -= read,
-            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
-            Err(e) => return Err(FrameError::Io(e)),
-        }
-    }
-    Ok(())
-}
-
-/// Length-check then read a frame body of `len` bytes.
-fn read_body(r: &mut impl Read, len: usize, max: usize) -> Result<Vec<u8>, FrameError> {
-    if len > max {
-        return Err(FrameError::TooLarge { len, max });
-    }
-    let mut payload = vec![0u8; len];
-    match fill(r, &mut payload)? {
-        Filled::Complete => Ok(payload),
-        Filled::Eof => Err(FrameError::Truncated { got: 0, want: len }),
-    }
-}
-
-enum Filled {
-    Complete,
-    /// EOF before the first byte of `buf`.
-    Eof,
-}
-
-/// Fill `buf` fully. EOF before the first byte is a clean `Eof`; EOF
-/// after at least one byte is [`FrameError::Truncated`].
-fn fill(r: &mut impl Read, buf: &mut [u8]) -> Result<Filled, FrameError> {
-    let mut got = 0;
-    while got < buf.len() {
-        match r.read(&mut buf[got..]) {
-            Ok(0) => {
-                return if got == 0 {
-                    Ok(Filled::Eof)
-                } else {
-                    Err(FrameError::Truncated {
-                        got,
-                        want: buf.len(),
-                    })
-                };
-            }
-            Ok(n) => got += n,
-            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
-            Err(e) => return Err(FrameError::Io(e)),
-        }
-    }
-    Ok(Filled::Complete)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prng::Rng;
     use std::io::Cursor;
 
     fn framed(payloads: &[&[u8]]) -> Vec<u8> {
@@ -356,5 +516,159 @@ mod tests {
         };
         assert_eq!(payload, b"late");
         writer.join().unwrap();
+    }
+
+    // ---- FrameCodec (sans-I/O) ----
+
+    #[test]
+    fn codec_drip_byte_at_a_time() {
+        let wire = framed(&[b"drip", b"feed"]);
+        let mut codec = FrameCodec::new(MAX_FRAME);
+        let mut got: Vec<Vec<u8>> = Vec::new();
+        for b in &wire {
+            codec.feed(std::slice::from_ref(b));
+            while let Some(frame) = codec.take().unwrap() {
+                got.push(frame);
+            }
+        }
+        assert_eq!(got, vec![b"drip".to_vec(), b"feed".to_vec()]);
+        assert!(codec.finish().is_ok());
+        assert!(!codec.mid_frame());
+    }
+
+    #[test]
+    fn codec_split_length_header() {
+        let wire = framed(&[b"split"]);
+        let mut codec = FrameCodec::new(MAX_FRAME);
+        codec.feed(&wire[..2]); // half the prefix
+        assert!(codec.take().unwrap().is_none());
+        assert!(codec.mid_frame());
+        assert_eq!(codec.needed(), 2);
+        codec.feed(&wire[2..4]); // prefix complete, no payload yet
+        assert!(codec.take().unwrap().is_none());
+        assert_eq!(codec.needed(), 5);
+        codec.feed(&wire[4..]);
+        assert_eq!(codec.take().unwrap().unwrap(), b"split");
+        assert!(!codec.mid_frame());
+    }
+
+    #[test]
+    fn codec_pipelined_frames_in_one_feed() {
+        let wire = framed(&[b"one", b"", b"three"]);
+        let mut codec = FrameCodec::new(MAX_FRAME);
+        codec.feed(&wire);
+        assert_eq!(codec.take().unwrap().unwrap(), b"one");
+        assert_eq!(codec.take().unwrap().unwrap(), b"");
+        assert_eq!(codec.take().unwrap().unwrap(), b"three");
+        assert!(codec.take().unwrap().is_none());
+        assert!(codec.finish().is_ok());
+    }
+
+    #[test]
+    fn codec_oversize_mid_stream_reports_once_then_resyncs() {
+        let mut wire = framed(&[b"ok1"]);
+        wire.extend_from_slice(&100u32.to_be_bytes());
+        wire.extend_from_slice(&[b'x'; 100]);
+        wire.extend_from_slice(&framed(&[b"ok2"]));
+        let mut codec = FrameCodec::new(8);
+        codec.feed(&wire);
+        assert_eq!(codec.take().unwrap().unwrap(), b"ok1");
+        match codec.take() {
+            Err(FrameError::TooLarge { len: 100, max: 8 }) => {}
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        // The refused payload is consumed, then the stream resyncs.
+        assert_eq!(codec.take().unwrap().unwrap(), b"ok2");
+        assert!(codec.take().unwrap().is_none());
+    }
+
+    #[test]
+    fn codec_oversize_discard_tracks_partial_arrival() {
+        let mut codec = FrameCodec::new(8);
+        codec.feed(&50u32.to_be_bytes());
+        assert!(matches!(
+            codec.take(),
+            Err(FrameError::TooLarge { len: 50, max: 8 })
+        ));
+        assert!(codec.discarding());
+        assert!(codec.drain_discard(), "payload still outstanding");
+        codec.feed(&[b'x'; 20]);
+        assert!(codec.discarding());
+        assert!(codec.mid_frame(), "discard counts as mid-frame for deadlines");
+        // EOF inside a refused payload is a clean finish (peer gave up).
+        assert!(codec.finish().is_ok());
+        codec.feed(&[b'x'; 30]);
+        assert!(!codec.discarding(), "discard complete");
+        assert!(!codec.drain_discard());
+        assert!(codec.finish().is_ok());
+    }
+
+    #[test]
+    fn codec_finish_classifies_truncation() {
+        let mut codec = FrameCodec::new(MAX_FRAME);
+        codec.feed(&[0, 0]);
+        assert!(matches!(
+            codec.finish(),
+            Err(FrameError::Truncated { got: 2, want: 4 })
+        ));
+        let mut codec = FrameCodec::new(MAX_FRAME);
+        codec.feed(&10u32.to_be_bytes());
+        codec.feed(b"abc");
+        assert!(codec.take().unwrap().is_none());
+        assert!(matches!(
+            codec.finish(),
+            Err(FrameError::Truncated { got: 3, want: 10 })
+        ));
+    }
+
+    #[test]
+    fn codec_random_chunking_reassembles_every_frame() {
+        let mut rng = Rng::new(0xF4A3);
+        for round in 0..50 {
+            let payloads: Vec<Vec<u8>> = (0..rng.range(1, 8))
+                .map(|i| {
+                    (0..rng.below(300))
+                        .map(|j| ((i * 31 + j + round) % 251) as u8)
+                        .collect()
+                })
+                .collect();
+            let mut wire = Vec::new();
+            for p in &payloads {
+                write_frame(&mut wire, p).unwrap();
+            }
+            let mut codec = FrameCodec::new(MAX_FRAME);
+            let mut got: Vec<Vec<u8>> = Vec::new();
+            let mut off = 0;
+            while off < wire.len() {
+                let n = rng.range(1, 40).min(wire.len() - off);
+                codec.feed(&wire[off..off + n]);
+                off += n;
+                while let Some(frame) = codec.take().unwrap() {
+                    got.push(frame);
+                }
+            }
+            assert_eq!(got, payloads, "round {round}");
+            assert!(codec.finish().is_ok(), "round {round}");
+        }
+    }
+
+    #[test]
+    fn codec_outbound_queue_roundtrips_through_decoder() {
+        let mut tx = FrameCodec::new(MAX_FRAME);
+        tx.queue(b"alpha").unwrap();
+        tx.queue(b"").unwrap();
+        tx.queue(b"gamma-gamma").unwrap();
+        let mut rx = FrameCodec::new(MAX_FRAME);
+        // Flush in awkward 3-byte steps, as a nonblocking socket might.
+        while tx.has_out() {
+            let chunk: Vec<u8> = tx.out_bytes().iter().take(3).copied().collect();
+            rx.feed(&chunk);
+            tx.consume_out(chunk.len());
+        }
+        assert_eq!(rx.take().unwrap().unwrap(), b"alpha");
+        assert_eq!(rx.take().unwrap().unwrap(), b"");
+        assert_eq!(rx.take().unwrap().unwrap(), b"gamma-gamma");
+        assert!(rx.take().unwrap().is_none());
+        assert!(!tx.has_out());
     }
 }

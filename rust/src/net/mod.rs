@@ -3,13 +3,25 @@
 //! The paper's deployment story puts the predictor in front of
 //! datacenter schedulers, which means remote callers: this module turns
 //! the in-process [`crate::coordinator::PredictionService`] into a TCP
-//! service with zero dependencies (`std::net` plus the in-tree
-//! [`crate::util::threadpool`]):
+//! service with zero dependencies (`std::net`, the in-tree
+//! [`crate::util::threadpool`], and a raw-syscall readiness poller):
 //!
 //! * [`frame`] — length-prefixed framing (4-byte big-endian length +
-//!   UTF-8 JSON payload), with a hard payload cap, truncation
-//!   detection, and a drain-safe bounded wait that never gives up
-//!   mid-frame;
+//!   UTF-8 JSON payload) as a sans-I/O state machine: a resumable
+//!   [`frame::FrameCodec`] that accepts bytes in arbitrary chunks
+//!   (`feed`), yields complete frames (`take`), queues outbound frames
+//!   as plain bytes for nonblocking writes (`queue`/`out_bytes`/
+//!   `consume_out`), survives an oversized frame by discarding exactly
+//!   its payload, and classifies EOF (`finish`) as clean or truncated.
+//!   The blocking convenience readers (`read_frame`,
+//!   `read_frame_timeout`) are thin adapters over the same codec;
+//! * [`poll`] — level-triggered readiness ([`poll::wait`]) over raw
+//!   `ppoll(2)` on Linux (inline-assembly syscall; the crate has no
+//!   `libc`), with a portable sleep-and-sweep fallback elsewhere;
+//! * [`conn`] — per-connection event-loop state: the socket, its
+//!   codec, the in-order [`conn::PendingReply`] pipeline queue (up to
+//!   [`CONN_PIPELINE`] in flight per connection), and the two
+//!   anti-stall deadlines (mid-frame read, write progress);
 //! * [`proto`] — request/response bodies: a predict request carries a
 //!   [`proto::WireModel`] (zoo name or inline `dnnabacus-spec-v1`
 //!   document) plus config overrides under the CLI flag names, and a
@@ -17,27 +29,41 @@
 //!   stream for the fleet placement engine; a response is a prediction,
 //!   a placement report, or a structured [`proto::ErrorKind`] error
 //!   (`bad_request`, `overloaded`, `shutting_down`, `internal`);
-//! * [`server`] — accept loop + per-connection handlers on a bounded
-//!   thread pool, two-level admission control (connection slots, then
-//!   the service's `max_inflight` bound — overload is an explicit
-//!   reply, never an unbounded queue), and graceful drain (stop
-//!   accepting, answer everything already on the wire, flush metrics);
+//! * [`error`] — the typed client-facing [`WireError`]: structured
+//!   server verdicts as variants carrying the echoed request id,
+//!   transport faults (`Io`, pipeline `Desync`) as the only retryable
+//!   class;
+//! * [`server`] — a single-threaded nonblocking event loop serving
+//!   every connection (thousands of concurrent sockets cost one
+//!   `pollfd` each, not a thread each), built with the validated
+//!   [`Server::builder`]; two-level admission control (connection
+//!   slots, then the service's `max_inflight` bound — overload is an
+//!   explicit reply, never an unbounded queue), per-connection
+//!   deadlines against slow-loris and never-reading peers, and
+//!   graceful drain (stop accepting, answer everything already on the
+//!   wire, flush metrics);
 //! * [`client`] — a blocking client with request pipelining
-//!   ([`Client::call_many`] writes a wave, then reads the wave) and
-//!   one-shot reconnect on connection failure.
+//!   ([`Client::call_many`] writes a wave, then reads the wave),
+//!   typed [`WireError`] results, and a one-shot fresh-connection
+//!   retry for transport faults only.
 //!
 //! CLI: `dnnabacus serve --listen ADDR` hosts it; `dnnabacus client`
 //! queries it. `examples/net_load.rs` drives it with the skewed mix the
 //! in-process load generators use, and `benches/net_throughput.rs`
-//! tracks req/s and latency percentiles over the real socket path.
+//! tracks req/s, wire latency percentiles, and peak concurrent
+//! connections over the real socket path.
 
 pub mod client;
+pub mod conn;
+pub mod error;
 pub mod frame;
+pub mod poll;
 pub mod proto;
 pub mod server;
 
 pub use client::Client;
+pub use error::{WireError, WireResult};
 pub use proto::{
     ErrorKind, ScheduleRequest, WireCall, WireModel, WireRequest, WireResponse, WIRE_FORMAT,
 };
-pub use server::{NetMetrics, Server, ServerConfig};
+pub use server::{NetMetrics, Server, ServerBuilder, ServerConfig, CONN_PIPELINE};

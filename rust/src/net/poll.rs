@@ -1,0 +1,325 @@
+//! Readiness polling for the nonblocking event loop — zero-dep.
+//!
+//! The crate has no `libc`/`mio`, so on Linux (x86_64 / aarch64) this
+//! module issues the `ppoll(2)` syscall directly with inline assembly:
+//! the `pollfd` ABI struct is three plain integers and the syscall
+//! calling convention is stable, so no bindings are needed. Everywhere
+//! else a portable fallback reports every registered interest as ready
+//! after a short sleep — spurious readiness is harmless because every
+//! socket in the loop is nonblocking and turns "not actually ready"
+//! into `WouldBlock`, which the loop treats as a no-op. The fallback
+//! trades syscall-precision wakeups for ~2 ms sweep latency; the
+//! semantics (level-triggered readiness, bounded wait) are identical.
+//!
+//! One [`wait`] call serves the whole loop: the caller rebuilds the
+//! [`PollFd`] set each tick (interest can change every tick as write
+//! queues fill and pipeline windows close), which also keeps this API
+//! stateless — no registration bookkeeping to leak.
+
+use std::io;
+use std::time::Duration;
+
+/// Interest/readiness bit: the fd can be read (or accepted) from.
+pub const READABLE: u8 = 0b01;
+/// Interest/readiness bit: the fd can be written to.
+pub const WRITABLE: u8 = 0b10;
+
+/// One fd's registration for a single [`wait`]: interest in, readiness
+/// out. Error/hangup conditions are folded into both readiness bits so
+/// the owning connection attempts I/O and observes the failure through
+/// the normal `read`/`write` return path.
+#[derive(Debug, Clone, Copy)]
+pub struct PollFd {
+    #[cfg(unix)]
+    pub fd: std::os::fd::RawFd,
+    #[cfg(not(unix))]
+    pub fd: i32,
+    /// What the caller wants to be woken for ([`READABLE`] /
+    /// [`WRITABLE`], or 0 to watch only for errors/hangups).
+    pub interest: u8,
+    /// Filled by [`wait`]: which interests (or error conditions) fired.
+    pub ready: u8,
+}
+
+impl PollFd {
+    /// Register `fd` with the given interest bits, readiness cleared.
+    #[cfg(unix)]
+    pub fn new(fd: std::os::fd::RawFd, interest: u8) -> PollFd {
+        PollFd {
+            fd,
+            interest,
+            ready: 0,
+        }
+    }
+
+    #[cfg(not(unix))]
+    pub fn new(fd: i32, interest: u8) -> PollFd {
+        PollFd {
+            fd,
+            interest,
+            ready: 0,
+        }
+    }
+}
+
+/// Block until at least one registered fd is ready or `timeout`
+/// elapses; fills each entry's `ready` bits and returns how many
+/// entries have any bit set. A zero return is a pure timeout.
+pub fn wait(fds: &mut [PollFd], timeout: Duration) -> io::Result<usize> {
+    sys::wait(fds, timeout)
+}
+
+/// The pollable handle of a socket. On non-Unix targets there is no
+/// `RawFd`; the fallback poller never inspects the value, so a dummy
+/// is returned there — keeping callers free of platform `cfg`s.
+#[cfg(unix)]
+pub fn fd_of<T: std::os::fd::AsRawFd>(sock: &T) -> std::os::fd::RawFd {
+    sock.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+pub fn fd_of<T>(_sock: &T) -> i32 {
+    0
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod sys {
+    use super::{PollFd, READABLE, WRITABLE};
+    use std::io;
+    use std::time::Duration;
+
+    /// `struct pollfd` from `poll(2)` — layout fixed by the kernel ABI.
+    #[repr(C)]
+    struct RawPollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    /// `struct timespec` as the 64-bit kernels expect it.
+    #[repr(C)]
+    struct Timespec {
+        sec: i64,
+        nsec: i64,
+    }
+
+    const POLLIN: i16 = 0x001;
+    const POLLOUT: i16 = 0x004;
+    const POLLERR: i16 = 0x008;
+    const POLLHUP: i16 = 0x010;
+    const POLLNVAL: i16 = 0x020;
+
+    /// `ppoll` rather than `poll`: aarch64 never had the plain `poll`
+    /// syscall, and `ppoll` with a null sigmask behaves identically.
+    #[cfg(target_arch = "x86_64")]
+    const SYS_PPOLL: usize = 271;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_PPOLL: usize = 73;
+
+    /// Raw `ppoll(fds, nfds, timeout, sigmask=NULL, sigsetsize=0)`;
+    /// returns the kernel's value (negative errno on failure).
+    ///
+    /// # Safety
+    /// `fds` must point to `nfds` valid `RawPollFd`s and `ts` to a
+    /// valid `Timespec`, both live across the call.
+    unsafe fn ppoll(fds: *mut RawPollFd, nfds: usize, ts: *const Timespec) -> isize {
+        let ret: isize;
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: arguments are valid per this function's contract;
+        // the syscall instruction clobbers rcx/r11, declared below.
+        unsafe {
+            core::arch::asm!(
+                "syscall",
+                inlateout("rax") SYS_PPOLL as isize => ret,
+                in("rdi") fds,
+                in("rsi") nfds,
+                in("rdx") ts,
+                in("r10") 0usize, // sigmask: NULL
+                in("r8") 0usize,  // sigsetsize (ignored with NULL mask)
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack)
+            );
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above; svc #0 clobbers only x0 among our operands.
+        unsafe {
+            core::arch::asm!(
+                "svc 0",
+                in("x8") SYS_PPOLL,
+                inlateout("x0") fds => ret,
+                in("x1") nfds,
+                in("x2") ts,
+                in("x3") 0usize, // sigmask: NULL
+                in("x4") 0usize, // sigsetsize (ignored with NULL mask)
+                options(nostack)
+            );
+        }
+        ret
+    }
+
+    pub fn wait(fds: &mut [PollFd], timeout: Duration) -> io::Result<usize> {
+        let mut raw: Vec<RawPollFd> = fds
+            .iter()
+            .map(|p| {
+                let mut events = 0i16;
+                if p.interest & READABLE != 0 {
+                    events |= POLLIN;
+                }
+                if p.interest & WRITABLE != 0 {
+                    events |= POLLOUT;
+                }
+                RawPollFd {
+                    fd: p.fd,
+                    events,
+                    revents: 0,
+                }
+            })
+            .collect();
+        // Clamp: the loop never waits longer than its poll window, but
+        // a caller-provided huge Duration must not overflow tv_sec.
+        let capped = timeout.min(Duration::from_secs(3600));
+        let ts = Timespec {
+            sec: capped.as_secs() as i64,
+            nsec: i64::from(capped.subsec_nanos()),
+        };
+        loop {
+            // SAFETY: `raw` and `ts` are live locals of correct layout.
+            let r = unsafe { ppoll(raw.as_mut_ptr(), raw.len(), &ts) };
+            if r >= 0 {
+                break;
+            }
+            let err = io::Error::from_raw_os_error(-r as i32);
+            if err.kind() == io::ErrorKind::Interrupted {
+                // Retry with the full window; the event loop's own
+                // deadlines are absolute, so a longer total wait here
+                // cannot extend any connection's budget.
+                continue;
+            }
+            return Err(err);
+        }
+        let mut ready = 0;
+        for (p, r) in fds.iter_mut().zip(&raw) {
+            let mut bits = 0u8;
+            if r.revents & POLLIN != 0 {
+                bits |= READABLE;
+            }
+            if r.revents & POLLOUT != 0 {
+                bits |= WRITABLE;
+            }
+            if r.revents & (POLLERR | POLLHUP | POLLNVAL) != 0 {
+                bits |= READABLE | WRITABLE;
+            }
+            p.ready = bits;
+            if bits != 0 {
+                ready += 1;
+            }
+        }
+        Ok(ready)
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod sys {
+    use super::PollFd;
+    use std::io;
+    use std::time::Duration;
+
+    /// Portable stand-in: no readiness syscall is reachable without
+    /// bindings, so sleep briefly and report every registered interest
+    /// as ready. The loop's nonblocking sockets turn spurious readiness
+    /// into `WouldBlock`, so correctness is preserved; only wakeup
+    /// precision is lost (a ~2 ms sweep cadence instead of real
+    /// readiness events).
+    pub fn wait(fds: &mut [PollFd], timeout: Duration) -> io::Result<usize> {
+        std::thread::sleep(timeout.min(Duration::from_millis(2)));
+        let mut ready = 0;
+        for p in fds.iter_mut() {
+            p.ready = p.interest;
+            if p.ready != 0 {
+                ready += 1;
+            }
+        }
+        Ok(ready)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+    #[cfg(unix)]
+    use std::os::fd::AsRawFd;
+    use std::time::Instant;
+
+    // The socket tests need real fds; they are Unix-only (the fallback
+    // path is exercised on Linux too via `wait`'s public contract —
+    // spurious readiness would still pass them, by design).
+    #[cfg(unix)]
+    #[test]
+    fn connected_stream_is_writable_then_readable_after_peer_writes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (mut served, _) = listener.accept().unwrap();
+
+        // A fresh connection with empty send buffers is writable.
+        let mut fds = [PollFd::new(client.as_raw_fd(), READABLE | WRITABLE)];
+        let n = wait(&mut fds, Duration::from_millis(500)).unwrap();
+        assert!(n >= 1);
+        assert!(fds[0].ready & WRITABLE != 0);
+
+        // Not readable until the peer writes.
+        served.write_all(b"x").unwrap();
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            let mut fds = [PollFd::new(client.as_raw_fd(), READABLE)];
+            wait(&mut fds, Duration::from_millis(50)).unwrap();
+            if fds[0].ready & READABLE != 0 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "never became readable");
+        }
+    }
+
+    #[cfg(all(unix, target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    #[test]
+    fn idle_socket_times_out_with_no_readiness() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (_served, _) = listener.accept().unwrap();
+        let mut fds = [PollFd::new(client.as_raw_fd(), READABLE)];
+        let t0 = Instant::now();
+        let n = wait(&mut fds, Duration::from_millis(30)).unwrap();
+        assert_eq!(n, 0, "nothing to read from an idle peer");
+        assert_eq!(fds[0].ready, 0);
+        assert!(t0.elapsed() >= Duration::from_millis(25), "must have waited");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn listener_becomes_readable_on_incoming_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _client = TcpStream::connect(addr).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            let mut fds = [PollFd::new(listener.as_raw_fd(), READABLE)];
+            wait(&mut fds, Duration::from_millis(50)).unwrap();
+            if fds[0].ready & READABLE != 0 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "accept never became ready");
+        }
+    }
+
+    #[test]
+    fn empty_set_is_a_pure_timeout() {
+        let t0 = Instant::now();
+        let n = wait(&mut [], Duration::from_millis(20)).unwrap();
+        assert_eq!(n, 0);
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+    }
+}

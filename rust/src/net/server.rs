@@ -1,65 +1,183 @@
-//! The TCP front door: accept connections on a thread pool, decode
-//! framed requests, admit them into the [`PredictionService`], and
-//! answer with framed responses.
+//! The TCP front door: a single-threaded nonblocking event loop that
+//! accepts connections, decodes framed requests, admits them into the
+//! [`PredictionService`], and answers with framed responses.
+//!
+//! One thread owns the listener and every connection. Each readiness
+//! tick ([`poll::wait`]) it accepts a burst of new sockets, reads
+//! whatever bytes arrived into each connection's resumable
+//! [`frame::FrameCodec`], decodes and admits complete requests (up to
+//! [`CONN_PIPELINE`] in flight per connection), resolves finished
+//! predictions from the service's reply channels, and flushes queued
+//! response bytes — all nonblocking, so thousands of concurrent
+//! connections cost one `pollfd` each instead of a thread each.
+//! CPU-bound `schedule` calls run on a small side pool
+//! ([`ServerConfig::sched_workers`]) so placement work never stalls
+//! unrelated connections' I/O.
 //!
 //! Overload policy is explicit at both levels instead of an unbounded
-//! queue anywhere: connections beyond the pool's `max_conns` slots get
-//! one `overloaded` reply and are closed; requests beyond the service's
-//! `max_inflight` bound get an `overloaded` reply on a connection that
-//! stays open. Malformed bodies get `bad_request` replies and keep
-//! their connection — only a frame that desynchronizes the stream
-//! (oversized or truncated) costs the client its connection.
+//! queue anywhere: connections beyond `max_conns` get one `overloaded`
+//! reply and are closed; requests beyond the service's `max_inflight`
+//! bound get an `overloaded` reply on a connection that stays open.
+//! Malformed bodies get `bad_request` replies and keep their
+//! connection — only a frame that desynchronizes the stream (oversized
+//! or truncated) costs the client its connection. Slow-loris and
+//! never-reading peers are bounded by two per-connection deadlines the
+//! loop tracks ([`ServerConfig::frame_deadline`]): a cumulative
+//! mid-frame read deadline and a write-progress deadline.
 //!
 //! Shutdown is a graceful drain: stop accepting, let every connection
 //! finish the requests it has already sent (an actively pipelining
 //! connection keeps being served until it goes idle for one poll
-//! window), then stop the service — which answers everything still
-//! queued — and flush both metric sets to the caller.
+//! window), then stop the service and flush both metric sets to the
+//! caller.
 
-use super::frame::{self, FrameError, Waited};
+use super::conn::{Conn, PendingReply};
+use super::error::WireError;
+use super::frame::{self, FrameError};
+use super::poll;
 use super::proto::{self, ErrorKind, WireResponse};
-use crate::coordinator::{PredictionService, Prediction, ServiceMetrics};
+use crate::coordinator::{PredictionService, ServiceMetrics};
 use crate::fleet;
 use crate::util::error::Context as _;
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
-use std::collections::VecDeque;
-use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::Receiver;
+use std::sync::mpsc::{channel, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-/// Most predictions one connection keeps in flight inside the service
-/// at once. Pipelined frames are decoded and submitted as they arrive
-/// (up to this window) rather than strictly one at a time, so a single
-/// pipelining client still feeds the batcher — and total in-flight
-/// (`max_conns × window`) can genuinely exceed `max_inflight`, making
-/// service-level admission a real protection, not dead code. Responses
-/// are always written in request order.
-pub const CONN_PIPELINE: usize = 32;
+pub use super::conn::CONN_PIPELINE;
 
+/// Cap on simultaneously-pending slot-refusal connections. Beyond it,
+/// a flood of excess connections is dropped without a reply rather
+/// than buffering unbounded refusal frames for peers that never read.
+const REFUSAL_BACKLOG: usize = 1024;
+
+/// Event-loop server configuration. Construct via
+/// [`Server::builder`] (validated), or as a struct literal with
+/// `..ServerConfig::default()` in tests — [`Server::start`] validates
+/// either way.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
-    /// Simultaneous connections served, one pool thread each. Excess
-    /// connections are refused with one `overloaded` reply.
+    /// Simultaneous connections served. Excess connections are refused
+    /// with one `overloaded` reply. Connections are cheap in the event
+    /// loop (one `pollfd` plus buffers, no thread), so the default is
+    /// C10k-grade.
     pub max_conns: usize,
     /// Largest accepted request payload, in bytes.
     pub max_frame: usize,
-    /// How often an idle connection handler re-checks the drain flag —
-    /// also the quiet window a draining server grants before closing an
-    /// idle connection.
+    /// The idle poll window: how long one readiness wait may sleep
+    /// when nothing is outstanding — also the quiet window a draining
+    /// server grants a connection before closing it as idle.
     pub poll: Duration,
+    /// Cumulative per-connection deadline for finishing a frame in
+    /// progress (anti-slow-loris) and for making write progress on
+    /// queued replies (anti-never-reading-peer). Partial progress does
+    /// not extend it.
+    pub frame_deadline: Duration,
+    /// Threads for CPU-bound `schedule` (fleet placement) calls, kept
+    /// off the event loop so placement never stalls socket I/O.
+    pub sched_workers: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         Self {
-            max_conns: 64,
+            max_conns: 4096,
             max_frame: frame::MAX_FRAME,
             poll: Duration::from_millis(25),
+            frame_deadline: frame::MID_FRAME_DEADLINE,
+            sched_workers: 2,
         }
+    }
+}
+
+impl ServerConfig {
+    /// Reject configurations that would misbehave at runtime — run by
+    /// [`Server::start`] and [`ServerBuilder::config`], so an invalid
+    /// value is an error at construction, never a wedged server.
+    pub fn validate(&self) -> crate::Result<()> {
+        crate::ensure!(
+            self.max_conns >= 1,
+            "max_conns must be at least 1 (got {})",
+            self.max_conns
+        );
+        crate::ensure!(
+            self.max_frame >= 2,
+            "max_frame of {} bytes cannot admit even an empty JSON body",
+            self.max_frame
+        );
+        crate::ensure!(
+            self.poll >= Duration::from_millis(1),
+            "poll window must be at least 1ms (got {:?})",
+            self.poll
+        );
+        crate::ensure!(
+            self.frame_deadline >= Duration::from_millis(1),
+            "frame_deadline must be at least 1ms (got {:?})",
+            self.frame_deadline
+        );
+        crate::ensure!(
+            self.sched_workers >= 1,
+            "sched_workers must be at least 1 (got {})",
+            self.sched_workers
+        );
+        Ok(())
+    }
+}
+
+/// Fluent, validated construction for [`Server`]:
+/// `Server::builder().max_conns(..).max_frame(..).start(addr, svc)`.
+/// Invalid combinations surface as errors from
+/// [`config`](ServerBuilder::config) / [`start`](ServerBuilder::start)
+/// instead of misbehaving at runtime.
+#[derive(Debug, Clone)]
+pub struct ServerBuilder {
+    cfg: ServerConfig,
+}
+
+impl ServerBuilder {
+    /// Simultaneous connections served (≥ 1).
+    pub fn max_conns(mut self, n: usize) -> ServerBuilder {
+        self.cfg.max_conns = n;
+        self
+    }
+
+    /// Largest accepted request payload in bytes (≥ 2).
+    pub fn max_frame(mut self, bytes: usize) -> ServerBuilder {
+        self.cfg.max_frame = bytes;
+        self
+    }
+
+    /// Idle poll window / drain quiet window (≥ 1ms).
+    pub fn poll(mut self, window: Duration) -> ServerBuilder {
+        self.cfg.poll = window;
+        self
+    }
+
+    /// Mid-frame read and write-progress deadline (≥ 1ms).
+    pub fn frame_deadline(mut self, deadline: Duration) -> ServerBuilder {
+        self.cfg.frame_deadline = deadline;
+        self
+    }
+
+    /// Threads for `schedule` placement calls (≥ 1).
+    pub fn sched_workers(mut self, n: usize) -> ServerBuilder {
+        self.cfg.sched_workers = n;
+        self
+    }
+
+    /// Validate and return the finished configuration.
+    pub fn config(self) -> crate::Result<ServerConfig> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+
+    /// Validate, bind `addr`, and start serving `svc`.
+    pub fn start(self, addr: &str, svc: PredictionService) -> crate::Result<Server> {
+        Server::start(addr, self.config()?, svc)
     }
 }
 
@@ -71,15 +189,21 @@ pub struct NetMetrics {
     pub connections: u64,
     /// Connections refused because all `max_conns` slots were taken.
     pub conns_rejected: u64,
+    /// Most connections simultaneously served (slot-holding) at any
+    /// point in this server's life.
+    pub peak_conns: u64,
     /// Frames read as request candidates (well-formed or not).
     pub requests: u64,
-    /// Responses written, success or structured error.
+    /// Responses queued for write, success or structured error. Every
+    /// orderly close flushes queued bytes first, so after a graceful
+    /// drain this equals responses actually written.
     pub answered: u64,
     /// Requests refused by service admission control.
     pub overloaded: u64,
     /// Requests answered with `bad_request` (bad JSON/fields/frames).
     pub bad_requests: u64,
-    /// Connections dropped on truncated frames or socket errors.
+    /// Connections dropped on truncated frames, expired deadlines, or
+    /// socket errors.
     pub io_errors: u64,
     /// `schedule` requests served (fleet placement reports).
     pub schedules: u64,
@@ -90,6 +214,7 @@ struct Shared {
     cfg: ServerConfig,
     draining: AtomicBool,
     active_conns: AtomicUsize,
+    peak_conns: AtomicU64,
     connections: AtomicU64,
     conns_rejected: AtomicU64,
     requests: AtomicU64,
@@ -105,6 +230,7 @@ impl Shared {
         NetMetrics {
             connections: self.connections.load(Ordering::SeqCst),
             conns_rejected: self.conns_rejected.load(Ordering::SeqCst),
+            peak_conns: self.peak_conns.load(Ordering::SeqCst),
             requests: self.requests.load(Ordering::SeqCst),
             answered: self.answered.load(Ordering::SeqCst),
             overloaded: self.overloaded.load(Ordering::SeqCst),
@@ -116,25 +242,37 @@ impl Shared {
 }
 
 /// A listening `dnnabacus-wire-v1` server in front of a
-/// [`PredictionService`].
+/// [`PredictionService`], served by one nonblocking event-loop thread.
 pub struct Server {
     addr: SocketAddr,
     shared: Arc<Shared>,
-    pool: Arc<ThreadPool>,
-    accept: JoinHandle<()>,
+    event_loop: JoinHandle<()>,
 }
 
 impl Server {
+    /// Start building a validated configuration.
+    pub fn builder() -> ServerBuilder {
+        ServerBuilder {
+            cfg: ServerConfig::default(),
+        }
+    }
+
     /// Bind `addr` (use port 0 for an OS-assigned port, reported by
     /// [`local_addr`](Self::local_addr)) and start serving `svc`.
+    /// Validates `cfg` first.
     pub fn start(addr: &str, cfg: ServerConfig, svc: PredictionService) -> crate::Result<Server> {
+        cfg.validate()?;
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("making the listener nonblocking")?;
         let local = listener.local_addr()?;
         let shared = Arc::new(Shared {
             svc,
             cfg,
             draining: AtomicBool::new(false),
             active_conns: AtomicUsize::new(0),
+            peak_conns: AtomicU64::new(0),
             connections: AtomicU64::new(0),
             conns_rejected: AtomicU64::new(0),
             requests: AtomicU64::new(0),
@@ -144,19 +282,16 @@ impl Server {
             io_errors: AtomicU64::new(0),
             schedules: AtomicU64::new(0),
         });
-        let pool = Arc::new(ThreadPool::new(shared.cfg.max_conns));
-        let accept = {
+        let event_loop = {
             let shared = Arc::clone(&shared);
-            let pool = Arc::clone(&pool);
             std::thread::Builder::new()
-                .name("net-accept".into())
-                .spawn(move || accept_loop(listener, shared, pool))?
+                .name("net-loop".into())
+                .spawn(move || run_loop(listener, shared))?
         };
         Ok(Server {
             addr: local,
             shared,
-            pool,
-            accept,
+            event_loop,
         })
     }
 
@@ -165,10 +300,15 @@ impl Server {
         self.addr
     }
 
-    /// Responses written so far — lets a caller serve a fixed request
+    /// Responses queued so far — lets a caller serve a fixed request
     /// budget and then drain.
     pub fn answered(&self) -> u64 {
         self.shared.answered.load(Ordering::SeqCst)
+    }
+
+    /// Connections currently holding a serving slot.
+    pub fn active_conns(&self) -> usize {
+        self.shared.active_conns.load(Ordering::SeqCst)
     }
 
     /// Snapshot of the wire-level counters.
@@ -177,175 +317,406 @@ impl Server {
     }
 
     /// Graceful drain: stop accepting, finish every request already on
-    /// the wire, shut the service down (answering anything still
-    /// queued), and return both metric sets.
+    /// the wire (each connection closes once it has been idle for one
+    /// poll window with nothing owed), shut the service down, and
+    /// return both metric sets. The event loop observes the drain flag
+    /// within one poll window — no wakeup poke is needed.
     pub fn shutdown(self) -> (NetMetrics, ServiceMetrics) {
         self.shared.draining.store(true, Ordering::SeqCst);
-        // Poke the blocking accept() so it observes the flag. A
-        // wildcard bind (0.0.0.0 / [::]) is not a connectable address
-        // on every platform — dial the matching loopback instead.
-        let mut poke = self.addr;
-        if poke.ip().is_unspecified() {
-            poke.set_ip(match poke.ip() {
-                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
-                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
-            });
-        }
-        let _ = TcpStream::connect_timeout(&poke, Duration::from_secs(1));
-        let _ = self.accept.join();
-        // The accept thread's pool handle is gone; dropping the last
-        // one joins every connection handler (each exits once its
-        // connection goes idle for a poll window or closes).
-        if let Ok(pool) = Arc::try_unwrap(self.pool) {
-            drop(pool);
-        }
+        let _ = self.event_loop.join();
         match Arc::try_unwrap(self.shared) {
             Ok(shared) => {
                 let net = shared.net_metrics();
                 (net, shared.svc.shutdown())
             }
-            // Unreachable in practice (all clones died with the
-            // threads); degrade to a metrics sample rather than panic.
+            // Unreachable in practice (the loop thread held the only
+            // other strong reference); degrade to a metrics sample
+            // rather than panic.
             Err(shared) => (shared.net_metrics(), shared.svc.metrics()),
         }
     }
 }
 
-fn accept_loop(listener: TcpListener, shared: Arc<Shared>, pool: Arc<ThreadPool>) {
-    for conn in listener.incoming() {
-        if shared.draining.load(Ordering::SeqCst) {
-            break; // the shutdown poke (or any racing dial) lands here
+/// The event loop: one thread, every socket. Runs until the drain flag
+/// is up *and* every connection has closed.
+fn run_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let sched_pool = ThreadPool::new(shared.cfg.sched_workers);
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut scratch = vec![0u8; 64 * 1024];
+    loop {
+        let draining = shared.draining.load(Ordering::SeqCst);
+        if draining && conns.is_empty() {
+            break;
         }
-        let Ok(stream) = conn else { continue };
-        shared.connections.fetch_add(1, Ordering::SeqCst);
-        // Connection-slot admission: more simultaneous connections than
-        // pool threads would queue unboundedly inside the pool — refuse
-        // explicitly instead.
-        let slot = shared
-            .active_conns
-            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
-                (n < shared.cfg.max_conns).then_some(n + 1)
-            });
-        if slot.is_err() {
-            shared.conns_rejected.fetch_add(1, Ordering::SeqCst);
-            refuse(stream);
-            continue;
+        let accepting = !draining;
+
+        // Register interests. The set is rebuilt every tick: interest
+        // changes tick to tick as write queues fill, pipeline windows
+        // close, and connections come and go.
+        let mut fds: Vec<poll::PollFd> = Vec::with_capacity(conns.len() + 1);
+        if accepting {
+            fds.push(poll::PollFd::new(poll::fd_of(&listener), poll::READABLE));
         }
-        let shared = Arc::clone(&shared);
-        pool.execute(move || {
-            serve_conn(stream, &shared);
-            shared.active_conns.fetch_sub(1, Ordering::SeqCst);
-        });
+        let base = usize::from(accepting);
+        for c in &conns {
+            let mut interest = 0;
+            if c.wants_read() {
+                interest |= poll::READABLE;
+            }
+            if c.wants_write() {
+                interest |= poll::WRITABLE;
+            }
+            fds.push(poll::PollFd::new(poll::fd_of(&c.stream), interest));
+        }
+
+        // Wait budget: short while any reply is pending on an off-loop
+        // worker (its completion cannot wake the poller), otherwise the
+        // idle poll window — clamped to the nearest deadline and, while
+        // draining, to each connection's idle-close point.
+        let now = Instant::now();
+        let off_loop = conns
+            .iter()
+            .any(|c| c.pending.iter().any(PendingReply::is_off_loop));
+        let mut timeout = if off_loop {
+            Duration::from_millis(1)
+        } else {
+            shared.cfg.poll
+        };
+        for c in &conns {
+            for d in [c.read_deadline, c.write_deadline].into_iter().flatten() {
+                timeout = timeout.min(d.saturating_duration_since(now));
+            }
+            if draining {
+                let idle_at = c.idle_since + shared.cfg.poll;
+                timeout = timeout.min(idle_at.saturating_duration_since(now));
+            }
+        }
+        timeout = timeout.max(Duration::from_millis(1));
+        if poll::wait(&mut fds, timeout).is_err() {
+            // A failing poller reports nothing ready; sleep so a
+            // persistent error cannot turn the loop into a hot spin.
+            std::thread::sleep(Duration::from_millis(1));
+        }
+
+        if accepting && fds[0].ready & poll::READABLE != 0 {
+            accept_burst(&listener, &shared, &mut conns);
+        }
+
+        // Drive every connection; collect the dead, remove after (the
+        // fds indices map to the pre-accept prefix of `conns`, so no
+        // removal may happen mid-iteration).
+        let mut dead: Vec<usize> = Vec::new();
+        for (i, c) in conns.iter_mut().enumerate() {
+            let ready = fds.get(base + i).map(|f| f.ready).unwrap_or(0);
+            if !drive_conn(&shared, &sched_pool, c, ready, &mut scratch, draining) {
+                dead.push(i);
+            }
+        }
+        for &i in dead.iter().rev() {
+            let c = conns.swap_remove(i);
+            if !c.refused {
+                shared.active_conns.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+    // `sched_pool` drops here, joining placement workers — before the
+    // loop thread exits, so shutdown() can unwrap the Shared Arc.
+}
+
+/// Accept until `WouldBlock`. Slot admission is explicit: beyond
+/// `max_conns`, the connection gets one `overloaded` refusal frame
+/// (flushed by the loop under a write deadline) and closes.
+fn accept_burst(listener: &TcpListener, shared: &Shared, conns: &mut Vec<Conn>) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                shared.connections.fetch_add(1, Ordering::SeqCst);
+                let _ = stream.set_nodelay(true);
+                if stream.set_nonblocking(true).is_err() {
+                    shared.io_errors.fetch_add(1, Ordering::SeqCst);
+                    continue;
+                }
+                // `active_conns` has a single writer (this thread), so
+                // load/store needs no compare-and-swap.
+                let active = shared.active_conns.load(Ordering::SeqCst);
+                if active >= shared.cfg.max_conns {
+                    shared.conns_rejected.fetch_add(1, Ordering::SeqCst);
+                    let refusals = conns.iter().filter(|c| c.refused).count();
+                    if refusals >= REFUSAL_BACKLOG {
+                        continue; // flood: drop without a reply
+                    }
+                    let mut c = Conn::new(stream, shared.cfg.max_frame);
+                    c.refused = true;
+                    c.closing = true;
+                    let body = WireResponse::error(
+                        0,
+                        ErrorKind::Overloaded,
+                        "connection limit reached; retry later",
+                    )
+                    .to_json()
+                    .to_string();
+                    let _ = c.codec.queue(body.as_bytes());
+                    // Usually one small write completes right here; if
+                    // not, the loop flushes under the write deadline.
+                    let _ = c.flush();
+                    if c.codec.has_out() {
+                        conns.push(c);
+                    }
+                    continue;
+                }
+                shared.active_conns.store(active + 1, Ordering::SeqCst);
+                let now_active = (active + 1) as u64;
+                if now_active > shared.peak_conns.load(Ordering::SeqCst) {
+                    shared.peak_conns.store(now_active, Ordering::SeqCst);
+                }
+                conns.push(Conn::new(stream, shared.cfg.max_frame));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                // EMFILE or similar. Back off briefly so a persistent
+                // error cannot turn the loop into a hot spin (the
+                // listener stays readable until the backlog drains).
+                std::thread::sleep(Duration::from_millis(1));
+                break;
+            }
+        }
     }
 }
 
-/// One `overloaded` reply on the accept thread, then close. The write
-/// deadline keeps a non-reading peer from stalling the accept loop.
-fn refuse(mut stream: TcpStream) {
-    let _ = stream.set_write_timeout(Some(frame::MID_FRAME_DEADLINE));
-    let body = WireResponse::error(
-        0,
-        ErrorKind::Overloaded,
-        "connection limit reached; retry later",
-    )
-    .to_json()
-    .to_string();
-    let _ = frame::write_frame(&mut stream, body.as_bytes());
-}
+/// Drive one connection through one tick: read, decode+resolve, flush,
+/// account deadlines, decide whether to close. Returns `false` when
+/// the connection is finished (the caller drops it, sending the FIN).
+fn drive_conn(
+    shared: &Arc<Shared>,
+    sched_pool: &ThreadPool,
+    c: &mut Conn,
+    ready: u8,
+    scratch: &mut [u8],
+    draining: bool,
+) -> bool {
+    let now = Instant::now();
 
-/// One enqueued reply, kept strictly in request order.
-enum PendingReply {
-    /// Resolved at decode/admission time (bad request, overloaded).
-    Ready(WireResponse),
-    /// Submitted into the service; resolved when the worker answers.
-    Wait {
-        id: u64,
-        model: String,
-        rx: Receiver<crate::Result<Prediction>>,
-    },
-}
+    // 1. Pull bytes off the socket (level-triggered: only when the
+    //    poller reported readability, so idle sockets cost nothing).
+    if ready & poll::READABLE != 0 && c.wants_read() {
+        match c.fill(scratch) {
+            Ok(filled) => {
+                if filled.bytes > 0 {
+                    c.idle_since = now;
+                }
+            }
+            Err(_) => {
+                // Connection reset: nothing can be delivered anymore.
+                shared.io_errors.fetch_add(1, Ordering::SeqCst);
+                return false;
+            }
+        }
+    }
 
-/// Serve one connection until it closes, errors, or the drain flag is
-/// up and the connection has gone idle for one poll window. Pipelined
-/// frames are decoded and submitted as they arrive, up to
-/// [`CONN_PIPELINE`] in flight; responses are written in request
-/// order, and requests already read are always answered before exit.
-fn serve_conn(mut stream: TcpStream, shared: &Shared) {
-    let _ = stream.set_nodelay(true);
-    // Writes get the same deadline as mid-frame reads: a peer that
-    // pipelines requests but never reads its responses would otherwise
-    // pin this handler in a timeout-less write_all once the socket
-    // buffers fill — permanently eating a connection slot and hanging
-    // the graceful drain.
-    let _ = stream.set_write_timeout(Some(frame::MID_FRAME_DEADLINE));
-    let mut pending: VecDeque<PendingReply> = VecDeque::new();
+    // 2. Decode new requests and resolve finished replies until
+    //    neither makes progress — resolution frees pipeline capacity,
+    //    which can unblock further decoding, and vice versa.
     loop {
-        // With replies outstanding, only peek briefly for the next
-        // frame before flushing; when fully caught up, camp on the
-        // configured poll window.
-        let wait = if pending.is_empty() {
-            shared.cfg.poll
+        let progressed = decode_frames(shared, sched_pool, c) | resolve_pending(shared, c);
+        if !progressed {
+            break;
+        }
+        c.idle_since = now;
+    }
+
+    // 3. Classify an EOF once everything decodable has been decoded: a
+    //    clean frame boundary is a normal close; mid-frame is a
+    //    truncation. Either way, answer what is owed, then close.
+    if c.peer_eof && !c.closing {
+        if c.codec.finish().is_err() {
+            shared.io_errors.fetch_add(1, Ordering::SeqCst);
+        }
+        c.closing = true;
+    }
+
+    // 4. Flush queued reply bytes (opportunistic even without a
+    //    writability report; a false start just returns WouldBlock).
+    if c.codec.has_out() {
+        match c.flush() {
+            Ok(n) => {
+                if n > 0 {
+                    c.idle_since = now;
+                }
+            }
+            Err(_) => {
+                shared.io_errors.fetch_add(1, Ordering::SeqCst);
+                return false;
+            }
+        }
+    }
+
+    // 5. Deadline accounting. The read deadline arms only while the
+    //    decoder genuinely waits on the peer (mid-frame or
+    //    mid-discard) — not while backpressure has paused reading.
+    //    Both are cumulative: armed once, never extended by partial
+    //    progress, so dripping bytes or draining one byte per poll
+    //    cannot evade them.
+    if c.codec.has_out() {
+        let deadline = *c.write_deadline.get_or_insert(now + shared.cfg.frame_deadline);
+        if now >= deadline {
+            shared.io_errors.fetch_add(1, Ordering::SeqCst);
+            return false;
+        }
+    } else {
+        c.write_deadline = None;
+    }
+    let awaiting_bytes = {
+        let waiting = if c.closing {
+            c.codec.discarding()
         } else {
-            Duration::from_millis(1)
+            c.codec.mid_frame() && c.pending.len() < CONN_PIPELINE
         };
-        match frame::read_frame_timeout(&mut stream, shared.cfg.max_frame, wait) {
-            Ok(Waited::Frame(payload)) => {
+        waiting && !c.peer_eof
+    };
+    if awaiting_bytes {
+        let deadline = *c.read_deadline.get_or_insert(now + shared.cfg.frame_deadline);
+        if now >= deadline {
+            shared.io_errors.fetch_add(1, Ordering::SeqCst);
+            return false;
+        }
+    } else {
+        c.read_deadline = None;
+    }
+
+    // 6. Close decisions.
+    let flushed = c.pending.is_empty() && !c.codec.has_out();
+    if c.closing {
+        // Keep the connection only while replies are owed or a refused
+        // payload is still being consumed (so the close carries a
+        // clean FIN, not an RST that would destroy the queued reply).
+        return !flushed || c.codec.discarding();
+    }
+    if draining && flushed && !c.codec.mid_frame() {
+        // Draining and fully caught up: close after one quiet poll
+        // window, so an actively pipelining peer keeps being served.
+        if now.duration_since(c.idle_since) >= shared.cfg.poll {
+            return false;
+        }
+    }
+    true
+}
+
+/// Decode complete frames into pending replies, up to the pipeline
+/// window. Returns `true` if anything was decoded.
+fn decode_frames(shared: &Arc<Shared>, sched_pool: &ThreadPool, c: &mut Conn) -> bool {
+    if c.closing {
+        // No new requests on a closing connection; just consume any
+        // refused payload so the eventual close is a clean FIN.
+        c.codec.drain_discard();
+        return false;
+    }
+    let mut progressed = false;
+    while c.pending.len() < CONN_PIPELINE {
+        match c.codec.take() {
+            Ok(Some(payload)) => {
                 shared.requests.fetch_add(1, Ordering::SeqCst);
-                pending.push_back(enqueue(shared, &payload));
-                let full = pending.len() >= CONN_PIPELINE;
-                if full && !flush_one(&mut stream, shared, &mut pending) {
-                    return;
-                }
+                let reply = enqueue(shared, sched_pool, &payload);
+                c.pending.push_back(reply);
+                progressed = true;
             }
-            Ok(Waited::TimedOut) => {
-                if !pending.is_empty() {
-                    if !flush_one(&mut stream, shared, &mut pending) {
-                        return;
-                    }
-                } else if shared.draining.load(Ordering::SeqCst) {
-                    return; // idle while draining — close
-                }
-            }
-            Ok(Waited::Eof) => {
-                // Answer everything already accepted, then close.
-                flush_all(&mut stream, shared, &mut pending);
-                return;
-            }
+            Ok(None) => break,
             Err(FrameError::TooLarge { len, max }) => {
-                // The stream is still synchronized (only the prefix was
-                // consumed) but the payload is unread, so the only safe
-                // continuation is refuse-and-close — after answering
-                // everything accepted before it, and after draining the
-                // unread payload: closing with received-but-unread
-                // bytes sends an RST that would destroy the queued
-                // refusal before the client could read it.
+                // The stream is still synchronized (only the prefix
+                // was consumed) but the payload is unread, so the only
+                // safe continuation is refuse-and-close — after
+                // answering everything accepted before it, and after
+                // consuming the unread payload.
                 shared.bad_requests.fetch_add(1, Ordering::SeqCst);
-                pending.push_back(PendingReply::Ready(WireResponse::error(
+                c.pending.push_back(PendingReply::Ready(WireResponse::error(
                     0,
                     ErrorKind::BadRequest,
                     format!("frame of {len} bytes exceeds the {max}-byte limit"),
                 )));
-                if flush_all(&mut stream, shared, &mut pending) {
-                    let _ = frame::discard(&mut stream, len);
-                }
-                return;
+                c.closing = true;
+                c.codec.drain_discard();
+                progressed = true;
+                break;
             }
+            // `take` only reports TooLarge, but stay defensive.
             Err(_) => {
-                // Truncated frame or socket error. Nothing sane to
-                // reply to for the broken frame itself, but requests
-                // accepted before it still get best-effort answers.
                 shared.io_errors.fetch_add(1, Ordering::SeqCst);
-                flush_all(&mut stream, shared, &mut pending);
-                return;
+                c.closing = true;
+                break;
             }
         }
     }
+    progressed
 }
 
-/// Decode and admit one request, without waiting for its prediction.
+/// Resolve pending replies from the head (order is the protocol
+/// contract; an unresolved head blocks everything behind it), encoding
+/// each resolved response into the connection's write queue. Returns
+/// `true` if anything resolved.
+fn resolve_pending(shared: &Shared, c: &mut Conn) -> bool {
+    let mut progressed = false;
+    loop {
+        // Peek-resolve the head without popping; `None` means "head is
+        // a Ready, pop it below" (split to appease the borrow checker).
+        let resolved: Option<WireResponse> = match c.pending.front_mut() {
+            None => break,
+            Some(PendingReply::Ready(_)) => None,
+            Some(PendingReply::Wait { id, model, rx }) => match rx.try_recv() {
+                Ok(Ok(prediction)) => Some(WireResponse::ok(model, prediction)),
+                Ok(Err(e)) => {
+                    let kind = WireError::classify_service(&e);
+                    if kind == ErrorKind::BadRequest {
+                        shared.bad_requests.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Some(WireResponse::error(*id, kind, format!("{e:#}")))
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => Some(WireResponse::error(
+                    *id,
+                    ErrorKind::ShuttingDown,
+                    "service shut down before answering",
+                )),
+            },
+            Some(PendingReply::Job { id, rx }) => match rx.try_recv() {
+                Ok(resp) => Some(resp),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => Some(WireResponse::error(
+                    *id,
+                    ErrorKind::ShuttingDown,
+                    "scheduler shut down before answering",
+                )),
+            },
+        };
+        let response = match resolved {
+            Some(r) => {
+                c.pending.pop_front();
+                r
+            }
+            None => match c.pending.pop_front() {
+                Some(PendingReply::Ready(r)) => r,
+                _ => unreachable!("head kind checked above"),
+            },
+        };
+        let body = response.to_json().to_string();
+        match c.codec.queue(body.as_bytes()) {
+            Ok(()) => {
+                shared.answered.fetch_add(1, Ordering::SeqCst);
+            }
+            Err(_) => {
+                // Only reachable for a >4 GiB body; count and close.
+                shared.io_errors.fetch_add(1, Ordering::SeqCst);
+                c.closing = true;
+            }
+        }
+        progressed = true;
+    }
+    progressed
+}
+
+/// Decode and admit one request, without waiting for its answer.
 /// Every failure mode maps to a structured error reply — a malformed
 /// body must never cost the client its connection.
-fn enqueue(shared: &Shared, payload: &[u8]) -> PendingReply {
+fn enqueue(shared: &Arc<Shared>, sched_pool: &ThreadPool, payload: &[u8]) -> PendingReply {
     let doc = match std::str::from_utf8(payload)
         .map_err(crate::DnnError::from)
         .and_then(Json::parse)
@@ -370,7 +741,17 @@ fn enqueue(shared: &Shared, payload: &[u8]) -> PendingReply {
         .unwrap_or(0);
     let req = match proto::parse_call(&doc) {
         Ok(proto::WireCall::Predict(req)) => req,
-        Ok(proto::WireCall::Schedule(call)) => return run_schedule(shared, call),
+        Ok(proto::WireCall::Schedule(call)) => {
+            // CPU-bound placement runs on the side pool; the reply
+            // channel keeps its slot in this connection's order.
+            let (tx, rx) = channel();
+            let shared = Arc::clone(shared);
+            let id = call.id;
+            sched_pool.execute(move || {
+                let _ = tx.send(run_schedule(&shared, call));
+            });
+            return PendingReply::Job { id, rx };
+        }
         Err(e) => {
             shared.bad_requests.fetch_add(1, Ordering::SeqCst);
             return PendingReply::Ready(WireResponse::error(
@@ -394,14 +775,12 @@ fn enqueue(shared: &Shared, payload: &[u8]) -> PendingReply {
     }
 }
 
-/// Serve one `schedule` request synchronously on the connection
-/// handler: run the fleet placement engine with costs from this
-/// server's own prediction service (content-cache-keyed, so recurring
-/// job shapes across schedule calls are free). Placement is CPU-bound
-/// work on this connection's thread — a schedule call occupies its
-/// connection until the report is ready, which is the explicit cost
-/// model of the request kind (the job cap in `proto` bounds it).
-fn run_schedule(shared: &Shared, call: proto::ScheduleCall) -> PendingReply {
+/// Serve one `schedule` request on a placement worker: run the fleet
+/// placement engine with costs from this server's own prediction
+/// service (content-cache-keyed, so recurring job shapes across
+/// schedule calls are free). The job cap in `proto` bounds one call's
+/// work; `sched_workers` bounds how many run at once.
+fn run_schedule(shared: &Shared, call: proto::ScheduleCall) -> WireResponse {
     let mut costs = fleet::ServiceCosts::new(&shared.svc);
     let mut policy = fleet::make_policy(call.policy, call.seed);
     let params = fleet::SimParams {
@@ -412,94 +791,19 @@ fn run_schedule(shared: &Shared, call: proto::ScheduleCall) -> PendingReply {
     match fleet::run(&call.cluster, &call.jobs, policy.as_mut(), &mut costs, &params) {
         Ok(report) => {
             shared.schedules.fetch_add(1, Ordering::SeqCst);
-            PendingReply::Ready(WireResponse::Schedule {
+            WireResponse::Schedule {
                 id: call.id,
                 report: report.to_json(),
-            })
+            }
         }
         Err(e) => {
             // Job-level failures (unknown model, dataset mismatch) are
-            // the request's fault; backend faults keep the shared
-            // prefix and are the server's.
-            let kind = if e
-                .root_cause()
-                .starts_with(crate::coordinator::service::BACKEND_ERROR_PREFIX)
-            {
-                ErrorKind::Internal
-            } else {
+            // the request's fault; backend faults are the server's.
+            let kind = WireError::classify_service(&e);
+            if kind == ErrorKind::BadRequest {
                 shared.bad_requests.fetch_add(1, Ordering::SeqCst);
-                ErrorKind::BadRequest
-            };
-            PendingReply::Ready(WireResponse::error(call.id, kind, format!("{e:#}")))
-        }
-    }
-}
-
-/// Resolve and write the oldest pending reply; `false` when the peer
-/// is unreachable.
-fn flush_one(
-    stream: &mut TcpStream,
-    shared: &Shared,
-    pending: &mut VecDeque<PendingReply>,
-) -> bool {
-    let Some(head) = pending.pop_front() else {
-        return true;
-    };
-    let response = match head {
-        PendingReply::Ready(response) => response,
-        PendingReply::Wait { id, model, rx } => match rx.recv() {
-            Ok(Ok(prediction)) => WireResponse::ok(&model, prediction),
-            Ok(Err(e)) => {
-                // Worker-side failures are client-caused (unknown
-                // model, dataset mismatch) except backend faults, which
-                // the service tags with the shared prefix constant.
-                let kind = if e
-                    .root_cause()
-                    .starts_with(crate::coordinator::service::BACKEND_ERROR_PREFIX)
-                {
-                    ErrorKind::Internal
-                } else {
-                    shared.bad_requests.fetch_add(1, Ordering::SeqCst);
-                    ErrorKind::BadRequest
-                };
-                WireResponse::error(id, kind, format!("{e:#}"))
             }
-            Err(_) => WireResponse::error(
-                id,
-                ErrorKind::ShuttingDown,
-                "service shut down before answering",
-            ),
-        },
-    };
-    respond(stream, shared, response)
-}
-
-/// Flush every pending reply in order; `false` on the first write
-/// failure (remaining replies have no reachable reader).
-fn flush_all(
-    stream: &mut TcpStream,
-    shared: &Shared,
-    pending: &mut VecDeque<PendingReply>,
-) -> bool {
-    while !pending.is_empty() {
-        if !flush_one(stream, shared, pending) {
-            return false;
-        }
-    }
-    true
-}
-
-/// Write one response frame; `false` when the peer is unreachable.
-fn respond(stream: &mut TcpStream, shared: &Shared, response: WireResponse) -> bool {
-    let body = response.to_json().to_string();
-    match frame::write_frame(stream, body.as_bytes()) {
-        Ok(()) => {
-            shared.answered.fetch_add(1, Ordering::SeqCst);
-            true
-        }
-        Err(_) => {
-            shared.io_errors.fetch_add(1, Ordering::SeqCst);
-            false
+            WireResponse::error(call.id, kind, format!("{e:#}"))
         }
     }
 }
@@ -511,7 +815,8 @@ mod tests {
     use crate::coordinator::ServiceConfig;
     use crate::net::client::Client;
     use crate::net::proto::WireRequest;
-    use std::io::Write as _;
+    use std::io::{Read as _, Write as _};
+    use std::net::TcpStream;
     use std::sync::mpsc::channel;
 
     fn start(svc_cfg: ServiceConfig, net_cfg: ServerConfig) -> Server {
@@ -575,13 +880,12 @@ mod tests {
     fn unknown_model_is_bad_request_reply_not_disconnect() {
         let server = default_server();
         let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
-        match client.call(&WireRequest::zoo(9, "gpt-17")).unwrap() {
-            WireResponse::Err { id, kind, message } => {
+        match client.call(&WireRequest::zoo(9, "gpt-17")) {
+            Err(WireError::BadRequest { id, message }) => {
                 assert_eq!(id, 9);
-                assert_eq!(kind, ErrorKind::BadRequest);
                 assert!(message.contains("gpt-17"), "{message}");
             }
-            other => panic!("expected Err, got {other:?}"),
+            other => panic!("expected a typed BadRequest, got {other:?}"),
         }
         // The connection survives a rejected request.
         assert!(client.call(&WireRequest::zoo(10, "lenet5")).unwrap().is_ok());
@@ -625,7 +929,7 @@ mod tests {
             stream.write_all(&100u32.to_be_bytes()).unwrap();
             stream.write_all(b"0123456789").unwrap();
         } // dropped: peer closes mid-frame
-        // The handler must notice without crashing the server.
+        // The loop must notice without crashing the server.
         for _ in 0..200 {
             if server.net_metrics().io_errors == 1 {
                 break;
@@ -658,14 +962,11 @@ mod tests {
         let mut a = Client::connect(&addr).unwrap();
         a.send(&WireRequest::zoo(1, "lenet5")).unwrap();
         std::thread::sleep(Duration::from_millis(100)); // A's job reaches the backend
-        // Client B must get an explicit overloaded reply, not a hang.
+        // Client B must get an explicit overloaded error, not a hang.
         let mut b = Client::connect(&addr).unwrap();
-        match b.call(&WireRequest::zoo(2, "lenet5")).unwrap() {
-            WireResponse::Err { id, kind, .. } => {
-                assert_eq!(id, 2);
-                assert_eq!(kind, ErrorKind::Overloaded);
-            }
-            other => panic!("expected overloaded, got {other:?}"),
+        match b.call(&WireRequest::zoo(2, "lenet5")) {
+            Err(WireError::Overloaded { id, .. }) => assert_eq!(id, 2),
+            other => panic!("expected a typed Overloaded, got {other:?}"),
         }
         // Release the gate; A's admitted request completes.
         drop(gate_tx);
@@ -687,7 +988,8 @@ mod tests {
                     let mut c = Client::connect(&addr).unwrap();
                     // Identical content (ids differ — they are not part
                     // of the cache key).
-                    c.call(&WireRequest::zoo(i, "resnet18").with("batch", 32u64)).unwrap()
+                    c.call(&WireRequest::zoo(i, "resnet18").with("batch", 32u64))
+                        .unwrap()
                 })
             })
             .collect();
@@ -777,16 +1079,15 @@ mod tests {
             WireResponse::Schedule { report: r2, .. } => assert_eq!(r2, report),
             other => panic!("expected a schedule report, got {other:?}"),
         }
-        // A bad job inside the stream is a structured bad_request.
+        // A bad job inside the stream is a typed bad_request.
         let mut bad = ScheduleRequest::new(32, "rtx2080", PolicyKind::FirstFit);
         bad.push_zoo("gpt-17", Json::obj());
-        match client.schedule(&bad).unwrap() {
-            WireResponse::Err { id, kind, message } => {
+        match client.schedule(&bad) {
+            Err(WireError::BadRequest { id, message }) => {
                 assert_eq!(id, 32);
-                assert_eq!(kind, ErrorKind::BadRequest);
                 assert!(message.contains("gpt-17"), "{message}");
             }
-            other => panic!("expected bad_request, got {other:?}"),
+            other => panic!("expected a typed BadRequest, got {other:?}"),
         }
         let (net, _) = server.shutdown();
         assert_eq!(net.schedules, 2);
@@ -804,9 +1105,9 @@ mod tests {
         let addr = server.local_addr().to_string();
         // Occupy the single slot with a live connection.
         let first = TcpStream::connect(server.local_addr()).unwrap();
-        // Wait until its handler actually holds the slot.
+        // Wait until the loop has actually admitted it.
         for _ in 0..200 {
-            if server.shared.active_conns.load(Ordering::SeqCst) == 1 {
+            if server.active_conns() == 1 {
                 break;
             }
             std::thread::sleep(Duration::from_millis(5));
@@ -822,7 +1123,7 @@ mod tests {
         // and a fresh client is served normally.
         drop(first);
         for _ in 0..200 {
-            if server.shared.active_conns.load(Ordering::SeqCst) == 0 {
+            if server.active_conns() == 0 {
                 break;
             }
             std::thread::sleep(Duration::from_millis(5));
@@ -831,5 +1132,91 @@ mod tests {
         assert!(c.call(&WireRequest::zoo(1, "lenet5")).unwrap().is_ok());
         let (net, _) = server.shutdown();
         assert_eq!(net.conns_rejected, 1);
+    }
+
+    #[test]
+    fn builder_validates_at_build_time() {
+        assert!(Server::builder().max_conns(0).config().is_err());
+        assert!(Server::builder().max_frame(1).config().is_err());
+        assert!(Server::builder().poll(Duration::ZERO).config().is_err());
+        assert!(Server::builder().sched_workers(0).config().is_err());
+        let cfg = Server::builder()
+            .max_conns(7)
+            .max_frame(1 << 16)
+            .frame_deadline(Duration::from_secs(2))
+            .config()
+            .unwrap();
+        assert_eq!(cfg.max_conns, 7);
+        assert_eq!(cfg.max_frame, 1 << 16);
+        assert_eq!(cfg.frame_deadline, Duration::from_secs(2));
+        // Struct-literal construction stays valid for tests.
+        ServerConfig::default().validate().unwrap();
+        // A bad config fed straight to start() is rejected there too.
+        let svc = PredictionService::start(ServiceConfig::default(), Arc::new(EchoModel));
+        let bad = ServerConfig {
+            max_conns: 0,
+            ..ServerConfig::default()
+        };
+        assert!(Server::start("127.0.0.1:0", bad, svc).is_err());
+    }
+
+    #[test]
+    fn slow_loris_partial_frame_hits_the_deadline() {
+        let svc = PredictionService::start(ServiceConfig::default(), Arc::new(EchoModel));
+        let server = Server::builder()
+            .frame_deadline(Duration::from_millis(100))
+            .poll(Duration::from_millis(10))
+            .start("127.0.0.1:0", svc)
+            .unwrap();
+        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+        // Two bytes of a length prefix, then silence.
+        stream.write_all(&[0u8, 0]).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut buf = [0u8; 16];
+        let n = stream.read(&mut buf).unwrap();
+        assert_eq!(n, 0, "the deadline must close the connection");
+        let (net, _) = server.shutdown();
+        assert_eq!(net.io_errors, 1);
+        assert_eq!(net.answered, 0);
+    }
+
+    #[test]
+    fn event_loop_serves_256_connections_through_drain() {
+        let server = default_server();
+        let addr = server.local_addr().to_string();
+        let n_conns = 256usize;
+        let mut clients: Vec<Client> = (0..n_conns)
+            .map(|_| Client::connect(&addr).unwrap())
+            .collect();
+        // All connections must be admitted simultaneously.
+        for _ in 0..400 {
+            if server.active_conns() == n_conns {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(server.active_conns(), n_conns);
+        // Two pipelined requests per connection, then drain under load.
+        for (i, c) in clients.iter_mut().enumerate() {
+            let base = (2 * i) as u64;
+            c.send(&WireRequest::zoo(base, "lenet5").with("batch", 8u64))
+                .unwrap();
+            c.send(&WireRequest::zoo(base + 1, "lenet5").with("batch", 16u64))
+                .unwrap();
+        }
+        let drainer = std::thread::spawn(move || server.shutdown());
+        for (i, c) in clients.iter_mut().enumerate() {
+            for k in 0..2u64 {
+                let resp = c.recv().expect("drain must answer every request");
+                assert_eq!(resp.id(), (2 * i) as u64 + k);
+                assert!(resp.is_ok(), "{resp:?}");
+            }
+        }
+        let (net, svc_m) = drainer.join().unwrap();
+        assert_eq!(net.answered, 2 * n_conns as u64);
+        assert_eq!(net.conns_rejected, 0);
+        assert!(net.peak_conns >= n_conns as u64, "peak {} < {n_conns}", net.peak_conns);
+        assert_eq!(svc_m.served, 2 * n_conns as u64);
+        assert_eq!(svc_m.in_flight, 0);
     }
 }

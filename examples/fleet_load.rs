@@ -12,6 +12,8 @@
 //! JOBS=40 SCALE=0.12 cargo run --release --example fleet_load
 //! ```
 
+#![allow(clippy::arithmetic_side_effects)]
+
 use dnnabacus::coordinator::{service::AutoMlBackend, CostModel, PredictionService, ServiceConfig};
 use dnnabacus::experiments::Ctx;
 use dnnabacus::fleet::PolicyKind;

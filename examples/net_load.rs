@@ -9,6 +9,8 @@
 //! CLIENTS=8 REQUESTS=1024 cargo run --release --example net_load
 //! ```
 
+#![allow(clippy::arithmetic_side_effects)]
+
 use dnnabacus::coordinator::{service::AutoMlBackend, CostModel, PredictionService, ServiceConfig};
 use dnnabacus::experiments::Ctx;
 use dnnabacus::net::{Client, ErrorKind, Server, ServerConfig, WireRequest, WireResponse};

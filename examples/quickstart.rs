@@ -8,6 +8,8 @@
 //! AutoML predictor, then predicts time/memory for a configuration it
 //! has never seen and compares with the simulated ground truth.
 
+#![allow(clippy::arithmetic_side_effects)]
+
 use dnnabacus::experiments::Ctx;
 use dnnabacus::features::{feature_vector, StructureRep};
 use dnnabacus::predictor::{AutoMl, Target};

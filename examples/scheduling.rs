@@ -6,6 +6,8 @@
 //! cargo run --release --example scheduling
 //! ```
 
+#![allow(clippy::arithmetic_side_effects)]
+
 use dnnabacus::experiments::{self, Ctx};
 
 fn main() -> dnnabacus::Result<()> {

@@ -10,6 +10,8 @@
 //! BACKEND=mlp cargo run --release --example serve_load   # PJRT backend
 //! ```
 
+#![allow(clippy::arithmetic_side_effects)]
+
 use dnnabacus::coordinator::{
     service::{AutoMlBackend, MlpBackend},
     CostModel, PredictRequest, PredictionService, ServiceConfig,

@@ -12,6 +12,8 @@
 //! cargo run --release --example spec_load
 //! ```
 
+#![allow(clippy::arithmetic_side_effects)]
+
 use dnnabacus::coordinator::{
     service::AutoMlBackend, CostModel, PredictRequest, PredictionService, ServiceConfig,
 };

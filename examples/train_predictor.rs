@@ -11,6 +11,8 @@
 //!
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
 
+#![allow(clippy::arithmetic_side_effects)]
+
 use dnnabacus::experiments::Ctx;
 use dnnabacus::predictor::{AutoMl, Dataset, Target};
 use dnnabacus::runtime::MlpPredictor;

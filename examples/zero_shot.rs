@@ -6,6 +6,8 @@
 //! cargo run --release --example zero_shot
 //! ```
 
+#![allow(clippy::arithmetic_side_effects)]
+
 use dnnabacus::experiments::Ctx;
 use dnnabacus::predictor::{AutoMl, Target};
 use dnnabacus::util::table::fmt_pct;

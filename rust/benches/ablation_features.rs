@@ -1,6 +1,8 @@
 //! `cargo bench --bench ablation_features` — the design-choice ablation
 //! DESIGN.md calls out: does the NSM (structure-dependent) block earn
 //! its 256 features over the 9(+5 platform) structure-independent ones?
+
+#![allow(clippy::arithmetic_side_effects)]
 use dnnabacus::experiments::{self, Ctx};
 
 fn main() {

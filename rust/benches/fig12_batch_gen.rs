@@ -1,4 +1,6 @@
 //! `cargo bench --bench fig12_batch_gen` — regenerates Figure 12 (batch generalization) and times the run.
+
+#![allow(clippy::arithmetic_side_effects)]
 use dnnabacus::bench_harness;
 use dnnabacus::experiments::{self, Ctx};
 

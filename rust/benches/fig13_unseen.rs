@@ -3,6 +3,8 @@
 //! featurization paths, whose gap is the NSM's selling point (§3.2.2:
 //! "NSM can be built in one-time scanning of the input graph").
 
+#![allow(clippy::arithmetic_side_effects)]
+
 use dnnabacus::bench_harness;
 use dnnabacus::experiments::{self, Ctx};
 use dnnabacus::features::{embed::GraphEmbedder, nsm_features};

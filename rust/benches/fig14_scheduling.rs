@@ -1,4 +1,6 @@
 //! `cargo bench --bench fig14_scheduling` — regenerates Figure 14 (GA scheduling) and times the run.
+
+#![allow(clippy::arithmetic_side_effects)]
 use dnnabacus::bench_harness;
 use dnnabacus::experiments::{self, Ctx};
 

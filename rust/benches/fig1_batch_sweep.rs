@@ -1,4 +1,6 @@
 //! `cargo bench --bench fig1_batch_sweep` — regenerates Figure 1 (batch sweep) and times the run.
+
+#![allow(clippy::arithmetic_side_effects)]
 use dnnabacus::bench_harness;
 use dnnabacus::experiments::{self, Ctx};
 

@@ -1,4 +1,6 @@
 //! `cargo bench --bench fig2_fluctuation` — regenerates Figure 2 (fine batch sweep) and times the run.
+
+#![allow(clippy::arithmetic_side_effects)]
 use dnnabacus::bench_harness;
 use dnnabacus::experiments::{self, Ctx};
 

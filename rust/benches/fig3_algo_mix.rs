@@ -1,4 +1,6 @@
 //! `cargo bench --bench fig3_algo_mix` — regenerates Figure 3 (conv algorithm mix) and times the run.
+
+#![allow(clippy::arithmetic_side_effects)]
 use dnnabacus::bench_harness;
 use dnnabacus::experiments::{self, Ctx};
 

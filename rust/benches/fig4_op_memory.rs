@@ -1,4 +1,6 @@
 //! `cargo bench --bench fig4_op_memory` — regenerates Figure 4 (per-op workspace) and times the run.
+
+#![allow(clippy::arithmetic_side_effects)]
 use dnnabacus::bench_harness;
 use dnnabacus::experiments::{self, Ctx};
 

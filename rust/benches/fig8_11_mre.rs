@@ -2,6 +2,8 @@
 //! memory/time prediction per framework vs the shape-inference and MLP
 //! baselines) and reports train/predict timings.
 
+#![allow(clippy::arithmetic_side_effects)]
+
 use dnnabacus::bench_harness;
 use dnnabacus::experiments::{self, Ctx};
 use dnnabacus::predictor::{AutoMl, Target};

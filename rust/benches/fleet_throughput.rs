@@ -9,6 +9,8 @@
 //!   --json PATH      write the results as JSON (the CI bench-smoke job
 //!                    uploads this as a `BENCH_*.json` perf artifact)
 
+#![allow(clippy::arithmetic_side_effects)]
+
 use dnnabacus::fleet::{self, Cluster, FleetJob, PolicyKind, SimParams, SyntheticCosts};
 use dnnabacus::util::cli::Args;
 use dnnabacus::util::json::Json;

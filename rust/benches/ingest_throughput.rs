@@ -10,6 +10,8 @@
 //!   --json PATH      write the results as JSON (the CI bench-smoke job
 //!                    uploads this as a `BENCH_*.json` perf artifact)
 
+#![allow(clippy::arithmetic_side_effects)]
+
 use dnnabacus::bench_harness::{self, BenchResult};
 use dnnabacus::features::{feature_vector, StructureRep};
 use dnnabacus::ingest::{self, ModelSpec};

@@ -7,6 +7,8 @@
 //!   --json PATH      write the results as JSON (the CI bench-smoke job
 //!                    uploads this as the `BENCH_*.json` perf artifact)
 
+#![allow(clippy::arithmetic_side_effects)]
+
 use dnnabacus::bench_harness::{self, BenchResult};
 use dnnabacus::coordinator::{
     service::AutoMlBackend, PredictRequest, PredictionService, ServiceConfig,

@@ -11,6 +11,8 @@
 //!   --json PATH      write the results as JSON (the CI bench-smoke job
 //!                    uploads this as a `BENCH_*.json` perf artifact)
 
+#![allow(clippy::arithmetic_side_effects)]
+
 use dnnabacus::coordinator::{
     service::AutoMlBackend, CostModel, PredictRequest, PredictionService, ServiceConfig,
     ServiceMetrics,

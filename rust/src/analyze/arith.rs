@@ -1,0 +1,265 @@
+//! Checked-arithmetic accounting pass — `DA001`/`DA002`/`DA003`.
+//!
+//! Re-derives the three quantities the cost model is built on —
+//! parameter count, forward FLOPs, f32 activation bytes — with
+//! `checked_*` ops, mirroring the formulas in `graph::op::param_count`
+//! and `graph::flops::node_flops` exactly. The `graph/` versions
+//! saturate (so a hostile spec can never panic the serving path); this
+//! pass is the precise signal that says *which node* overflowed and
+//! that every downstream number is therefore meaningless.
+
+use super::diag::{Code, Diagnostic, Report};
+use super::Ctx;
+use crate::graph::shape::TensorShape;
+use crate::graph::{ConvAttrs, Graph, NodeId, OpKind};
+
+/// f32 everywhere, matching the simulator's tensor accounting.
+const BYTES_PER_ELEM: u64 = 4;
+
+/// What the pass derived, for downstream passes (device feasibility).
+/// `None` means the quantity overflowed and was reported.
+pub(super) struct Accounting {
+    pub(super) params: Option<u64>,
+    pub(super) activation_bytes: Option<u64>,
+    /// Node with the largest activation, for naming the offending
+    /// layer in device-feasibility findings.
+    pub(super) heaviest: Option<(NodeId, u64)>,
+}
+
+pub(super) fn run(ctx: &Ctx<'_>, report: &mut Report) -> Accounting {
+    let params = match accumulate(ctx.g.len(), |id| checked_params(&ctx.g.nodes[id].kind)) {
+        Ok(total) => Some(total),
+        Err(id) => {
+            report.push(Diagnostic::at(
+                Code::OverflowParams,
+                id,
+                format!(
+                    "parameter count overflows u64 at this {} layer; the graph \
+                     accounting saturates, so every downstream number is wrong",
+                    ctx.g.nodes[id].kind.ty().name()
+                ),
+            ));
+            None
+        }
+    };
+    if let Err(id) = accumulate(ctx.shapes.len(), |id| {
+        checked_node_flops(ctx.g, ctx.shapes, id)
+    }) {
+        report.push(Diagnostic::at(
+            Code::OverflowFlops,
+            id,
+            format!(
+                "forward-FLOP count overflows u64 at this {} layer at batch {}",
+                ctx.g.nodes[id].kind.ty().name(),
+                ctx.opts.batch
+            ),
+        ));
+    }
+    let mut heaviest: Option<(NodeId, u64)> = None;
+    let activation_bytes = match accumulate(ctx.shapes.len(), |id| {
+        let bytes = checked_elements(&ctx.shapes[id])?.checked_mul(BYTES_PER_ELEM)?;
+        match heaviest {
+            Some((_, top)) if top >= bytes => {}
+            _ => heaviest = Some((id, bytes)),
+        }
+        Some(bytes)
+    }) {
+        Ok(total) => Some(total),
+        Err(id) => {
+            report.push(Diagnostic::at(
+                Code::OverflowActivations,
+                id,
+                format!(
+                    "f32 activation footprint overflows u64 at this {} layer \
+                     at batch {}",
+                    ctx.g.nodes[id].kind.ty().name(),
+                    ctx.opts.batch
+                ),
+            ));
+            None
+        }
+    };
+    Accounting {
+        params,
+        activation_bytes,
+        heaviest,
+    }
+}
+
+/// Checked left-fold of `per(0) + per(1) + …`; `Err` carries the index
+/// where a term or the running total stopped fitting in `u64`.
+fn accumulate<F>(count: usize, mut per: F) -> Result<u64, usize>
+where
+    F: FnMut(usize) -> Option<u64>,
+{
+    let mut total: u64 = 0;
+    for id in 0..count {
+        match per(id).and_then(|v| total.checked_add(v)) {
+            Some(t) => total = t,
+            None => return Err(id),
+        }
+    }
+    Ok(total)
+}
+
+fn checked_elements(s: &TensorShape) -> Option<u64> {
+    match *s {
+        TensorShape::Map { n, c, h, w } => (n as u64)
+            .checked_mul(c as u64)?
+            .checked_mul(h as u64)?
+            .checked_mul(w as u64),
+        TensorShape::Vec { n, f } => (n as u64).checked_mul(f as u64),
+    }
+}
+
+/// `graph::op::param_count`, checked.
+fn checked_params(kind: &OpKind) -> Option<u64> {
+    match kind {
+        OpKind::Conv2d(c) => checked_conv_params(c),
+        OpKind::BatchNorm { channels } => (*channels as u64).checked_mul(2),
+        OpKind::Linear {
+            in_features,
+            out_features,
+        } => (*in_features as u64)
+            .checked_mul(*out_features as u64)?
+            .checked_add(*out_features as u64),
+        _ => Some(0),
+    }
+}
+
+fn checked_conv_params(c: &ConvAttrs) -> Option<u64> {
+    let weights = (c.in_ch.checked_div(c.groups)? as u64)
+        .checked_mul(c.out_ch as u64)?
+        .checked_mul((c.kh as u64).checked_mul(c.kw as u64)?)?;
+    let bias = if c.bias { c.out_ch as u64 } else { 0 };
+    weights.checked_add(bias)
+}
+
+/// `graph::flops::node_flops`, checked.
+fn checked_node_flops(g: &Graph, shapes: &[TensorShape], id: NodeId) -> Option<u64> {
+    let node = &g.nodes[id];
+    let out = shapes.get(id)?;
+    match &node.kind {
+        OpKind::Input { .. }
+        | OpKind::Concat
+        | OpKind::Flatten
+        | OpKind::ChannelShuffle { .. } => Some(0),
+        OpKind::Conv2d(c) => {
+            let window = (c.kh as u64)
+                .checked_mul(c.kw as u64)?
+                .checked_mul(c.in_ch.checked_div(c.groups)? as u64)?;
+            let macs = checked_elements(out)?.checked_mul(window)?;
+            let flops = macs.checked_mul(2)?;
+            if c.bias {
+                flops.checked_add(checked_elements(out)?)
+            } else {
+                Some(flops)
+            }
+        }
+        OpKind::BatchNorm { .. } => checked_elements(out)?.checked_mul(2),
+        OpKind::ReLU | OpKind::Sigmoid | OpKind::Dropout { .. } => checked_elements(out),
+        OpKind::Softmax => checked_elements(out)?.checked_mul(3),
+        OpKind::MaxPool(p) | OpKind::AvgPool(p) => checked_elements(out)?
+            .checked_mul((p.kernel as u64).checked_mul(p.kernel as u64)?),
+        OpKind::GlobalAvgPool => {
+            let src = *node.inputs.first()?;
+            checked_elements(shapes.get(src)?)
+        }
+        OpKind::Linear {
+            in_features,
+            out_features,
+        } => {
+            let n = out.batch() as u64;
+            let mul = n
+                .checked_mul(*in_features as u64)?
+                .checked_mul(*out_features as u64)?
+                .checked_mul(2)?;
+            mul.checked_add(n.checked_mul(*out_features as u64)?)
+        }
+        OpKind::Add | OpKind::Mul => {
+            checked_elements(out)?.checked_mul(node.inputs.len().max(1) as u64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run_graph, Options, Report};
+    use super::*;
+    use crate::graph::flops::graph_flops;
+    use crate::graph::infer_shapes;
+
+    /// The checked re-derivation and the production accounting must
+    /// agree exactly wherever nothing overflows — otherwise the
+    /// analyzer would bless numbers the predictor never computes.
+    #[test]
+    fn checked_totals_agree_with_graph_accounting() {
+        let g = crate::zoo::build("lenet5", 3, 10).unwrap();
+        let shapes = infer_shapes(&g, 128, 3, 32).unwrap();
+        let opts = Options::for_graph(&g);
+        let ctx = Ctx {
+            g: &g,
+            shapes: &shapes,
+            opts: &opts,
+        };
+        let mut report = Report::new();
+        let acct = run(&ctx, &mut report);
+        assert!(report.is_empty(), "{}", report.render());
+        assert_eq!(acct.params, Some(g.param_count()));
+        let bytes: u64 = shapes.iter().map(TensorShape::bytes).sum();
+        assert_eq!(acct.activation_bytes, Some(bytes));
+        let flops: u64 = (0..g.len())
+            .map(|id| checked_node_flops(&g, &shapes, id).unwrap())
+            .sum();
+        assert_eq!(flops, graph_flops(&g, 128, 3, 32).unwrap());
+    }
+
+    #[test]
+    fn param_and_flop_overflow_fire_da001_and_da002() {
+        let mut g = Graph::new("of");
+        let x = g.add(OpKind::input(1 << 26, 1), &[]);
+        let fl = g.add(OpKind::Flatten, &[x]);
+        g.add(
+            OpKind::Linear {
+                in_features: 1 << 26,
+                out_features: 900_000_000_000_000,
+            },
+            &[fl],
+        );
+        let r = run_graph(&g, &Options::for_graph(&g));
+        assert!(r.has_errors());
+        assert_eq!(r.codes(), vec!["DA001", "DA002"]);
+        for d in &r.diagnostics {
+            assert_eq!(d.node, Some(2), "{}", d.render());
+        }
+    }
+
+    #[test]
+    fn activation_overflow_fires_da003() {
+        let mut g = Graph::new("act");
+        g.add(OpKind::input(1 << 60, 1), &[]);
+        let r = run_graph(&g, &Options::for_graph(&g));
+        assert_eq!(r.codes(), vec!["DA003"]);
+        assert_eq!(r.diagnostics[0].node, Some(0));
+    }
+
+    #[test]
+    fn heaviest_node_tracks_largest_activation() {
+        let mut g = Graph::new("h");
+        let x = g.add(OpKind::input(3, 8), &[]);
+        let c = g.add(OpKind::conv(3, 64, 3, 1, 1), &[x]); // 64×8×8 ≫ 3×8×8
+        let p = g.add(OpKind::maxpool(2, 2), &[c]);
+        g.add(OpKind::ReLU, &[p]);
+        let shapes = infer_shapes(&g, 4, 3, 8).unwrap();
+        let opts = Options::for_graph(&g);
+        let ctx = Ctx {
+            g: &g,
+            shapes: &shapes,
+            opts: &opts,
+        };
+        let acct = run(&ctx, &mut Report::new());
+        let (node, bytes) = acct.heaviest.unwrap();
+        assert_eq!(node, 1);
+        assert_eq!(bytes, shapes[1].bytes());
+    }
+}

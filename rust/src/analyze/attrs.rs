@@ -1,0 +1,300 @@
+//! Shape-sanity + attribute-plausibility pass — `DA02x`/`DA03x`.
+//!
+//! These are the "legal but almost certainly not what you meant"
+//! findings. The load-bearing one is `DA020`: `graph::shape` computes
+//! window outputs with a saturating subtraction, so a kernel that never
+//! fits its input does not fail shape inference — the output silently
+//! pins at 1×1 and every downstream FLOP/memory number describes a
+//! network that cannot exist. The paper's cost model is only as good as
+//! the structure matrix it is fed; these checks keep fiction out of it.
+
+use super::diag::{Code, Diagnostic, Report};
+use super::Ctx;
+use crate::graph::shape::TensorShape;
+use crate::graph::{NodeId, OpKind};
+
+/// Batch sizes inside the paper's profiling sweep (Fig. 12); outside
+/// this envelope the predictor extrapolates. `DA033` fires only for an
+/// explicitly requested batch ([`super::Options::with_batch`]).
+const BATCH_MIN: usize = 2;
+const BATCH_MAX: usize = 1024;
+
+pub(super) fn run(ctx: &Ctx<'_>, report: &mut Report) {
+    let terminal = ctx.g.len().checked_sub(1);
+    for (id, node) in ctx.g.nodes.iter().enumerate() {
+        // Spatial extent of the first input, when its shape is known
+        // (the shape walk may have stopped early).
+        let in_hw = node
+            .inputs
+            .first()
+            .and_then(|&src| ctx.shapes.get(src))
+            .map(TensorShape::spatial);
+        match &node.kind {
+            OpKind::Conv2d(c) => {
+                let kmax = c.kh.max(c.kw);
+                let kmin = c.kh.min(c.kw);
+                // Strided pointwise convs are exempt: a 1x1 kernel with
+                // stride 2 is the standard projection-shortcut downsample
+                // (every ResNet in the zoo), not a typo'd window.
+                if c.stride > kmax && !c.is_pointwise() {
+                    report.push(Diagnostic::at(
+                        Code::StrideExceedsKernel,
+                        id,
+                        format!(
+                            "stride {} exceeds the {}x{} kernel; input rows/columns \
+                             between windows are never read",
+                            c.stride, c.kh, c.kw
+                        ),
+                    ));
+                }
+                if c.is_pointwise() {
+                    if c.padding > 0 {
+                        report.push(Diagnostic::at(
+                            Code::PointwisePadding,
+                            id,
+                            format!(
+                                "padding {} on a 1x1 convolution pads the output \
+                                 with rings of pure-zero pixels",
+                                c.padding
+                            ),
+                        ));
+                    }
+                } else if c.padding >= kmin {
+                    report.push(Diagnostic::at(
+                        Code::PaddingExceedsKernel,
+                        id,
+                        format!(
+                            "padding {} >= kernel {}; border outputs are computed \
+                             entirely from padding zeros",
+                            c.padding, kmin
+                        ),
+                    ));
+                }
+                if let Some(h) = in_hw {
+                    degenerate_window(id, "conv2d", kmax, c.padding, h, report);
+                }
+                if terminal != Some(id) && c.out_ch == 1 {
+                    report.push(Diagnostic::at(
+                        Code::ChannelBottleneck,
+                        id,
+                        "collapses to a single output channel mid-network; \
+                         downstream FLOPs are scaled through this bottleneck"
+                            .to_string(),
+                    ));
+                }
+            }
+            OpKind::MaxPool(p) | OpKind::AvgPool(p) => {
+                let name = node.kind.ty().name();
+                if p.stride > p.kernel {
+                    report.push(Diagnostic::at(
+                        Code::StrideExceedsKernel,
+                        id,
+                        format!(
+                            "stride {} exceeds the {}x{} pooling window; input \
+                             rows/columns between windows are never read",
+                            p.stride, p.kernel, p.kernel
+                        ),
+                    ));
+                }
+                if p.padding >= p.kernel {
+                    report.push(Diagnostic::at(
+                        Code::PaddingExceedsKernel,
+                        id,
+                        format!(
+                            "padding {} >= pooling kernel {}; border outputs pool \
+                             only padding zeros",
+                            p.padding, p.kernel
+                        ),
+                    ));
+                }
+                if let Some(h) = in_hw {
+                    degenerate_window(id, name, p.kernel, p.padding, h, report);
+                }
+            }
+            OpKind::Linear { out_features, .. } => {
+                if terminal != Some(id) && *out_features == 1 {
+                    report.push(Diagnostic::at(
+                        Code::ChannelBottleneck,
+                        id,
+                        "mid-network linear layer narrows to a single feature; \
+                         downstream capacity is gone"
+                            .to_string(),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    if ctx.opts.batch_explicit && !(BATCH_MIN..=BATCH_MAX).contains(&ctx.opts.batch) {
+        report.push(Diagnostic::new(
+            Code::BatchExtreme,
+            format!(
+                "batch {} is outside the profiled {BATCH_MIN}..={BATCH_MAX} envelope \
+                 (paper Fig. 12 sweep); the predictor extrapolates here",
+                ctx.opts.batch
+            ),
+        ));
+    }
+}
+
+/// `DA020`, both flavors: the window can never fit the (padded) input,
+/// or the spatial dims already collapsed to 1×1 upstream and a windowed
+/// op is a no-op. Either way `graph::shape`'s saturating arithmetic
+/// pins the output at 1×1 instead of erroring, so the cost numbers
+/// downstream describe fiction.
+fn degenerate_window(id: NodeId, op: &str, kernel: usize, padding: usize, h: usize, report: &mut Report) {
+    let reach = h.saturating_add(padding.saturating_mul(2));
+    if kernel > reach {
+        report.push(Diagnostic::at(
+            Code::DegenerateSpatial,
+            id,
+            format!(
+                "{kernel}x{kernel} window never fits the {h}x{h} input \
+                 (padding {padding}); shape inference pins the output at 1x1"
+            ),
+        ));
+    } else if h == 1 && kernel > 1 {
+        report.push(Diagnostic::at(
+            Code::DegenerateSpatial,
+            id,
+            format!(
+                "input spatial dims already collapsed to 1x1 upstream; \
+                 a {kernel}x{kernel} {op} window is degenerate"
+            ),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run_graph, Options};
+    use crate::graph::{ConvAttrs, Graph, OpKind, PoolAttrs};
+
+    fn head(g: &mut Graph, from: usize, channels: usize) {
+        let gap = g.add(OpKind::GlobalAvgPool, &[from]);
+        let fl = g.add(OpKind::Flatten, &[gap]);
+        g.add(
+            OpKind::Linear {
+                in_features: channels,
+                out_features: 10,
+            },
+            &[fl],
+        );
+    }
+
+    fn codes_of(g: &Graph) -> Vec<&'static str> {
+        run_graph(g, &Options::for_graph(g)).codes()
+    }
+
+    #[test]
+    fn pool_stride_exceeding_kernel_fires_da030() {
+        let mut g = Graph::new("t");
+        let x = g.add(OpKind::input(3, 32), &[]);
+        let p = g.add(
+            OpKind::MaxPool(PoolAttrs {
+                kernel: 2,
+                stride: 3,
+                padding: 0,
+            }),
+            &[x],
+        );
+        head(&mut g, p, 3);
+        assert_eq!(codes_of(&g), vec!["DA030"]);
+    }
+
+    #[test]
+    fn conv_padding_at_kernel_fires_da031_but_pointwise_maps_to_da032() {
+        let mut g = Graph::new("t");
+        let x = g.add(OpKind::input(3, 32), &[]);
+        let c = g.add(OpKind::conv(3, 8, 3, 1, 3), &[x]);
+        head(&mut g, c, 8);
+        assert_eq!(codes_of(&g), vec!["DA031"]);
+
+        let mut g = Graph::new("t");
+        let x = g.add(OpKind::input(3, 32), &[]);
+        let c = g.add(OpKind::conv(3, 8, 1, 1, 2), &[x]);
+        head(&mut g, c, 8);
+        assert_eq!(codes_of(&g), vec!["DA032"]);
+    }
+
+    #[test]
+    fn window_on_collapsed_input_fires_da020() {
+        let mut g = Graph::new("t");
+        let x = g.add(OpKind::input(3, 4), &[]);
+        let p1 = g.add(OpKind::maxpool(4, 4), &[x]); // 4x4 -> 1x1
+        let p2 = g.add(OpKind::maxpool(2, 2), &[p1]); // window on 1x1
+        head(&mut g, p2, 3);
+        assert_eq!(codes_of(&g), vec!["DA020"]);
+    }
+
+    #[test]
+    fn oversized_kernel_fires_da020_never_fits() {
+        let mut g = Graph::new("t");
+        let x = g.add(OpKind::input(3, 8), &[]);
+        let c = g.add(OpKind::conv(3, 8, 11, 1, 1), &[x]);
+        head(&mut g, c, 8);
+        let r = run_graph(&g, &Options::for_graph(&g));
+        assert_eq!(r.codes(), vec!["DA020"]);
+        assert!(r.diagnostics[0].message.contains("never fits"));
+    }
+
+    #[test]
+    fn mid_network_bottleneck_fires_but_terminal_head_does_not() {
+        let mut g = Graph::new("t");
+        let x = g.add(OpKind::input(3, 8), &[]);
+        let c = g.add(OpKind::conv(3, 1, 3, 1, 1), &[x]);
+        head(&mut g, c, 1);
+        assert_eq!(codes_of(&g), vec!["DA021"]);
+
+        // A network *ending* on out_features == 1 (regression head) is fine.
+        let mut g = Graph::new("t");
+        let x = g.add(OpKind::input(3, 8), &[]);
+        let gap = g.add(OpKind::GlobalAvgPool, &[x]);
+        let fl = g.add(OpKind::Flatten, &[gap]);
+        g.add(
+            OpKind::Linear {
+                in_features: 3,
+                out_features: 1,
+            },
+            &[fl],
+        );
+        assert!(codes_of(&g).is_empty());
+    }
+
+    #[test]
+    fn batch_extremes_fire_only_when_explicit() {
+        let mut g = Graph::new("t");
+        let x = g.add(OpKind::input(3, 8), &[]);
+        let c = g.add(OpKind::conv(3, 8, 3, 1, 1), &[x]);
+        head(&mut g, c, 8);
+        let base = Options::for_graph(&g);
+        assert!(run_graph(&g, &base).is_empty());
+        let r = run_graph(&g, &Options::for_graph(&g).with_batch(1));
+        assert_eq!(r.codes(), vec!["DA033"]);
+        let r = run_graph(&g, &Options::for_graph(&g).with_batch(2048));
+        assert_eq!(r.codes(), vec!["DA033"]);
+        assert!(run_graph(&g, &Options::for_graph(&g).with_batch(1024)).is_empty());
+    }
+
+    #[test]
+    fn rect_kernel_uses_min_side_for_padding_check() {
+        let mut g = Graph::new("t");
+        let x = g.add(OpKind::input(3, 32), &[]);
+        let c = g.add(
+            OpKind::Conv2d(ConvAttrs {
+                in_ch: 3,
+                out_ch: 8,
+                kh: 1,
+                kw: 7,
+                stride: 1,
+                padding: 2,
+                groups: 1,
+                bias: true,
+            }),
+            &[x],
+        );
+        head(&mut g, c, 8);
+        // kh=1, kw=7 is not pointwise; padding 2 >= min side 1.
+        assert_eq!(codes_of(&g), vec!["DA031"]);
+    }
+}

@@ -1,0 +1,114 @@
+//! Device-feasibility pre-screen — `DA040`/`DA041`.
+//!
+//! A cheap static estimate of the training footprint (all f32
+//! activations kept for backward, plus weights/gradients/momentum)
+//! screened against every known device's usable VRAM. This is *not*
+//! the simulator's allocator model — it is the "don't even bother"
+//! check a scheduler wants before paying for a real prediction, so it
+//! is deliberately conservative and names the heaviest layer.
+
+use super::arith::Accounting;
+use super::diag::{Code, Diagnostic, Report};
+use super::Ctx;
+
+/// Bytes of persistent state per parameter: weights + gradients +
+/// momentum, three f32 copies (the simulator's SGD accounting).
+const STATE_BYTES_PER_PARAM: u64 = 12;
+
+pub(super) fn run(ctx: &Ctx<'_>, acct: &Accounting, report: &mut Report) {
+    // An overflowed quantity was already reported as a DA00x error;
+    // screening a meaningless estimate would only add noise.
+    let (Some(act), Some(params)) = (acct.activation_bytes, acct.params) else {
+        return;
+    };
+    let Some((heavy_node, heavy_bytes)) = acct.heaviest else {
+        return;
+    };
+    let estimate = act.saturating_add(params.saturating_mul(STATE_BYTES_PER_PARAM));
+    for dev in &ctx.opts.devices {
+        let usable = dev.usable_vram();
+        if estimate > usable {
+            report.push(Diagnostic::at(
+                Code::ExceedsDeviceMemory,
+                heavy_node,
+                format!(
+                    "estimated training footprint ~{} MiB exceeds {}'s usable \
+                     {} MiB at batch {}; heaviest activation lives here (~{} MiB)",
+                    mib(estimate),
+                    dev.name,
+                    mib(usable),
+                    ctx.opts.batch,
+                    mib(heavy_bytes)
+                ),
+            ));
+        } else if estimate.saturating_mul(5) > usable.saturating_mul(4) {
+            report.push(Diagnostic::new(
+                Code::TightDeviceFit,
+                format!(
+                    "estimated training footprint ~{} MiB is within 20% of {}'s \
+                     usable {} MiB at batch {}; allocator fragmentation may still OOM",
+                    mib(estimate),
+                    dev.name,
+                    mib(usable),
+                    ctx.opts.batch
+                ),
+            ));
+        }
+    }
+}
+
+fn mib(bytes: u64) -> u64 {
+    bytes >> 20
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run_graph, Options};
+    use crate::graph::{Graph, OpKind};
+
+    fn wide_net(out_ch: usize, hw: usize) -> Graph {
+        let mut g = Graph::new("wide");
+        let x = g.add(OpKind::input(3, hw), &[]);
+        let c = g.add(OpKind::conv(3, out_ch, 3, 1, 1), &[x]);
+        let gap = g.add(OpKind::GlobalAvgPool, &[c]);
+        let fl = g.add(OpKind::Flatten, &[gap]);
+        g.add(
+            OpKind::Linear {
+                in_features: out_ch,
+                out_features: 10,
+            },
+            &[fl],
+        );
+        g
+    }
+
+    #[test]
+    fn oversized_footprint_fires_da040_naming_the_heavy_conv() {
+        // conv activations alone: 1024·1024·64·64·4 B = 16 GiB — over
+        // the RTX 2080's usable VRAM, under the RTX 3090's.
+        let g = wide_net(1024, 64);
+        let r = run_graph(&g, &Options::for_graph(&g).with_batch(1024));
+        assert_eq!(r.codes(), vec!["DA040"]);
+        assert_eq!(r.diagnostics.len(), 1);
+        let d = &r.diagnostics[0];
+        assert_eq!(d.node, Some(1));
+        assert!(d.message.contains("rtx2080"), "{}", d.message);
+    }
+
+    #[test]
+    fn near_capacity_footprint_reports_da041_info() {
+        // ≈9.2 GB estimate: between 80% and 100% of the RTX 2080's
+        // usable VRAM, far under the RTX 3090's.
+        let g = wide_net(512, 66);
+        let r = run_graph(&g, &Options::for_graph(&g).with_batch(1024));
+        assert_eq!(r.codes(), vec!["DA041"]);
+        assert!(r.diagnostics[0].message.contains("rtx2080"));
+        assert!(!r.has_errors());
+    }
+
+    #[test]
+    fn small_net_fits_everywhere_quietly() {
+        let g = wide_net(16, 32);
+        assert!(run_graph(&g, &Options::for_graph(&g)).is_empty());
+    }
+}

@@ -1,0 +1,395 @@
+//! The diagnostic model: stable codes, severities, a one-page registry.
+//!
+//! Codes are a public contract. The bad-spec corpus under
+//! `examples/specs/bad/` pins one seeded defect per file and the
+//! integration suite asserts the exact codes the analyzer emits, so a
+//! code's meaning must never silently change: retire a code by leaving
+//! its number unused and allocate new codes at the end of their band.
+//!
+//! Bands group codes by pass:
+//!
+//! | band    | pass                          | severity      |
+//! |---------|-------------------------------|---------------|
+//! | `DA00x` | checked-arithmetic accounting | error         |
+//! | `DA01x` | reachability                  | warn          |
+//! | `DA02x` | shape sanity                  | warn          |
+//! | `DA03x` | attribute plausibility        | warn          |
+//! | `DA04x` | device feasibility            | warn / info   |
+
+use crate::graph::NodeId;
+use crate::ingest::ModelSpec;
+use crate::util::json::Json;
+use std::fmt;
+
+/// How bad a finding is. `Error` means the numbers the cost model would
+/// produce are wrong (overflow, uninferable shapes) — `ingest::compile`
+/// refuses such specs. `Warn` means the spec is well-formed but almost
+/// certainly not the network the author meant. `Info` is advisory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Error,
+    Warn,
+    Info,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warn",
+            Severity::Info => "info",
+        }
+    }
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Every diagnostic the analyzer can emit. The numeric code, severity,
+/// and title of a variant are fixed forever once released.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Code {
+    /// `DA001`: parameter count overflows `u64` under checked math.
+    OverflowParams,
+    /// `DA002`: forward-FLOP count overflows `u64` under checked math.
+    OverflowFlops,
+    /// `DA003`: f32 activation bytes overflow `u64` under checked math.
+    OverflowActivations,
+    /// `DA004`: shape inference failed at a node; later passes see only
+    /// the shape prefix inferred before the failure.
+    ShapeInference,
+    /// `DA010`: a layer's output never reaches the terminal node.
+    DeadLayer,
+    /// `DA020`: a conv/pool window is degenerate for its input extent
+    /// (kernel never fits, or spatial dims already collapsed to 1×1).
+    DegenerateSpatial,
+    /// `DA021`: a mid-network layer narrows to one channel/feature,
+    /// zeroing out the FLOPs of everything downstream.
+    ChannelBottleneck,
+    /// `DA030`: stride exceeds the kernel — input rows are never read.
+    StrideExceedsKernel,
+    /// `DA031`: padding ≥ kernel — border outputs see only zeros.
+    PaddingExceedsKernel,
+    /// `DA032`: padding on a 1×1 (pointwise) convolution.
+    PointwisePadding,
+    /// `DA033`: requested batch size outside the profiled envelope.
+    BatchExtreme,
+    /// `DA040`: estimated training footprint exceeds a known device's
+    /// usable VRAM.
+    ExceedsDeviceMemory,
+    /// `DA041`: footprint lands within 20% of a device's usable VRAM.
+    TightDeviceFit,
+}
+
+impl Code {
+    /// Every code, in registry order (doc table order).
+    pub const ALL: [Code; 13] = [
+        Code::OverflowParams,
+        Code::OverflowFlops,
+        Code::OverflowActivations,
+        Code::ShapeInference,
+        Code::DeadLayer,
+        Code::DegenerateSpatial,
+        Code::ChannelBottleneck,
+        Code::StrideExceedsKernel,
+        Code::PaddingExceedsKernel,
+        Code::PointwisePadding,
+        Code::BatchExtreme,
+        Code::ExceedsDeviceMemory,
+        Code::TightDeviceFit,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Code::OverflowParams => "DA001",
+            Code::OverflowFlops => "DA002",
+            Code::OverflowActivations => "DA003",
+            Code::ShapeInference => "DA004",
+            Code::DeadLayer => "DA010",
+            Code::DegenerateSpatial => "DA020",
+            Code::ChannelBottleneck => "DA021",
+            Code::StrideExceedsKernel => "DA030",
+            Code::PaddingExceedsKernel => "DA031",
+            Code::PointwisePadding => "DA032",
+            Code::BatchExtreme => "DA033",
+            Code::ExceedsDeviceMemory => "DA040",
+            Code::TightDeviceFit => "DA041",
+        }
+    }
+
+    pub fn severity(self) -> Severity {
+        match self {
+            Code::OverflowParams
+            | Code::OverflowFlops
+            | Code::OverflowActivations
+            | Code::ShapeInference => Severity::Error,
+            Code::DeadLayer
+            | Code::DegenerateSpatial
+            | Code::ChannelBottleneck
+            | Code::StrideExceedsKernel
+            | Code::PaddingExceedsKernel
+            | Code::PointwisePadding
+            | Code::BatchExtreme
+            | Code::ExceedsDeviceMemory => Severity::Warn,
+            Code::TightDeviceFit => Severity::Info,
+        }
+    }
+
+    /// Short human title (stable, used by docs and the `--json` output).
+    pub fn title(self) -> &'static str {
+        match self {
+            Code::OverflowParams => "parameter count overflow",
+            Code::OverflowFlops => "FLOP count overflow",
+            Code::OverflowActivations => "activation memory overflow",
+            Code::ShapeInference => "shape inference failure",
+            Code::DeadLayer => "dead layer",
+            Code::DegenerateSpatial => "degenerate spatial window",
+            Code::ChannelBottleneck => "channel bottleneck",
+            Code::StrideExceedsKernel => "stride exceeds kernel",
+            Code::PaddingExceedsKernel => "padding exceeds kernel",
+            Code::PointwisePadding => "padding on pointwise conv",
+            Code::BatchExtreme => "batch size outside profiled range",
+            Code::ExceedsDeviceMemory => "exceeds device memory",
+            Code::TightDeviceFit => "tight device fit",
+        }
+    }
+}
+
+impl fmt::Display for Code {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One finding: a code, where it is, and a message saying what the
+/// analyzer saw. `node` is a graph node id; `layer` is the spec layer
+/// id it maps back to (filled in by [`Report::attribute`] — graph-only
+/// callers never get one).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub code: Code,
+    pub node: Option<NodeId>,
+    pub layer: Option<String>,
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// A finding about the network as a whole (no node).
+    pub fn new(code: Code, message: impl Into<String>) -> Diagnostic {
+        Diagnostic {
+            code,
+            node: None,
+            layer: None,
+            message: message.into(),
+        }
+    }
+
+    /// A finding anchored to one graph node.
+    pub fn at(code: Code, node: NodeId, message: impl Into<String>) -> Diagnostic {
+        Diagnostic {
+            node: Some(node),
+            ..Diagnostic::new(code, message)
+        }
+    }
+
+    pub fn severity(&self) -> Severity {
+        self.code.severity()
+    }
+
+    /// One line, the format both the `lint` CLI and compile errors use:
+    /// `warn DA030 layer 'p1': stride 3 exceeds the 2x2 kernel …`.
+    pub fn render(&self) -> String {
+        let loc = match (&self.layer, self.node) {
+            (Some(layer), _) => format!(" layer '{layer}'"),
+            (None, Some(node)) => format!(" node {node}"),
+            (None, None) => String::new(),
+        };
+        format!("{} {}{}: {}", self.severity(), self.code, loc, self.message)
+    }
+
+    /// Wire/JSON form, what `predict` responses and `lint --json` carry:
+    /// `{"code","severity","title","message"}` plus `node`/`layer` when
+    /// known.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("code", self.code.as_str())
+            .set("severity", self.severity().as_str())
+            .set("title", self.code.title())
+            .set("message", self.message.as_str());
+        if let Some(node) = self.node {
+            o.set("node", node);
+        }
+        if let Some(layer) = &self.layer {
+            o.set("layer", layer.as_str());
+        }
+        o
+    }
+}
+
+/// Everything one analyzer run found, in pass order (deterministic: the
+/// passes walk nodes in topological order, so two runs over the same
+/// graph produce identical reports).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn new() -> Report {
+        Report::default()
+    }
+
+    pub fn push(&mut self, d: Diagnostic) {
+        self.diagnostics.push(d);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.first_error().is_some()
+    }
+
+    pub fn first_error(&self) -> Option<&Diagnostic> {
+        self.diagnostics
+            .iter()
+            .find(|d| d.severity() == Severity::Error)
+    }
+
+    pub fn count(&self, severity: Severity) -> usize {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity() == severity)
+            .count()
+    }
+
+    /// Distinct codes in emission order — what the corpus tests pin.
+    pub fn codes(&self) -> Vec<&'static str> {
+        let mut out: Vec<&'static str> = Vec::new();
+        for d in &self.diagnostics {
+            if !out.contains(&d.code.as_str()) {
+                out.push(d.code.as_str());
+            }
+        }
+        out
+    }
+
+    /// Map node ids back to spec layer ids: node 0 is the implicit
+    /// input, node `i ≥ 1` is `spec.layers[i-1]` (lowering preserves
+    /// layer order — see `ingest::lower`).
+    pub fn attribute(&mut self, spec: &ModelSpec) {
+        for d in &mut self.diagnostics {
+            let Some(node) = d.node else { continue };
+            d.layer = match node.checked_sub(1) {
+                None => Some(crate::ingest::INPUT_ID.to_string()),
+                Some(i) => spec.layers.get(i).map(|l| l.id.clone()),
+            };
+        }
+    }
+
+    /// All findings, one rendered line each.
+    pub fn render(&self) -> String {
+        self.diagnostics
+            .iter()
+            .map(Diagnostic::render)
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// JSON array of [`Diagnostic::to_json`] values.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.diagnostics.iter().map(Diagnostic::to_json).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_consistent() {
+        let mut seen: Vec<&str> = Vec::new();
+        for code in Code::ALL {
+            let s = code.as_str();
+            assert!(!seen.contains(&s), "duplicate code {s}");
+            seen.push(s);
+            assert!(
+                s.len() == 5 && s.starts_with("DA"),
+                "code {s} breaks the DAxxx format"
+            );
+            assert!(!code.title().is_empty());
+        }
+        assert_eq!(seen.len(), Code::ALL.len());
+    }
+
+    #[test]
+    fn severity_bands_match_registry_table() {
+        for code in Code::ALL {
+            let expected = match code {
+                c if c.as_str() < "DA010" => Severity::Error,
+                Code::TightDeviceFit => Severity::Info,
+                _ => Severity::Warn,
+            };
+            assert_eq!(code.severity(), expected, "{code}");
+        }
+    }
+
+    #[test]
+    fn render_and_json_carry_location() {
+        let d = Diagnostic::at(Code::StrideExceedsKernel, 3, "stride 4 exceeds kernel 2");
+        assert_eq!(d.render(), "warn DA030 node 3: stride 4 exceeds kernel 2");
+        let j = d.to_json();
+        assert_eq!(j.get("code").and_then(Json::as_str), Some("DA030"));
+        assert_eq!(j.get("severity").and_then(Json::as_str), Some("warn"));
+        assert_eq!(j.get("node").and_then(Json::as_usize), Some(3));
+        assert!(j.get("layer").is_none());
+    }
+
+    #[test]
+    fn attribute_maps_nodes_to_layer_ids() {
+        let spec = ModelSpec::parse_str(
+            r#"{
+                "format": "dnnabacus-spec-v1",
+                "name": "t",
+                "input": {"channels": 3, "hw": 8},
+                "layers": [
+                    {"id": "c1", "op": "conv2d",
+                     "attrs": {"in_ch": 3, "out_ch": 4, "kernel": 3, "padding": 1}},
+                    {"op": "relu"}
+                ]
+            }"#,
+        )
+        .unwrap();
+        let mut r = Report::new();
+        r.push(Diagnostic::at(Code::DeadLayer, 0, "x"));
+        r.push(Diagnostic::at(Code::DeadLayer, 1, "x"));
+        r.push(Diagnostic::at(Code::DeadLayer, 2, "x"));
+        r.push(Diagnostic::new(Code::BatchExtreme, "x"));
+        r.attribute(&spec);
+        let layers: Vec<Option<&str>> = r
+            .diagnostics
+            .iter()
+            .map(|d| d.layer.as_deref())
+            .collect();
+        assert_eq!(layers, vec![Some("input"), Some("c1"), Some("layer1"), None]);
+    }
+
+    #[test]
+    fn report_counts_and_codes_dedup() {
+        let mut r = Report::new();
+        assert!(r.is_empty() && !r.has_errors());
+        r.push(Diagnostic::at(Code::DeadLayer, 1, "a"));
+        r.push(Diagnostic::at(Code::DeadLayer, 2, "b"));
+        r.push(Diagnostic::new(Code::OverflowParams, "c"));
+        assert_eq!(r.codes(), vec!["DA010", "DA001"]);
+        assert_eq!(r.count(Severity::Warn), 2);
+        assert_eq!(r.count(Severity::Error), 1);
+        assert!(r.has_errors());
+        assert_eq!(r.first_error().unwrap().code, Code::OverflowParams);
+        assert_eq!(r.to_json().as_arr().map(<[Json]>::len), Some(3));
+    }
+}

@@ -1,0 +1,241 @@
+//! Multi-pass static analyzer over the graph IR.
+//!
+//! DNNAbacus predicts cost from a structural description of the
+//! network, which means a malformed-but-parseable spec produces a
+//! confidently wrong prediction instead of a diagnostic. The analyzer
+//! closes that gap: it walks a lowered [`Graph`] once per pass and
+//! reports findings as [`Diagnostic`]s with stable `DA0xx` codes (see
+//! [`diag`] for the registry) before the spec reaches the cost model.
+//!
+//! Passes, in run order:
+//!
+//! 1. **Shape walk** — drives `graph::shape::infer_next` node by node
+//!    so a failure is attributed to its node (`DA004`); later passes
+//!    see the shape prefix inferred before the failure.
+//! 2. **Reachability** ([`reachability`]) — layers whose output never
+//!    reaches the terminal node (`DA010`).
+//! 3. **Shape sanity + attribute plausibility** ([`attrs`]) —
+//!    degenerate windows, channel bottlenecks, stride/padding
+//!    pathologies, batch extremes (`DA02x`/`DA03x`).
+//! 4. **Checked-arithmetic accounting** ([`arith`]) — re-derives
+//!    params/FLOPs/activation bytes with `checked_*` ops and reports
+//!    overflow (`DA00x`) where `graph/` saturates.
+//! 5. **Device feasibility** ([`device`]) — static footprint estimate
+//!    vs every known device's usable VRAM (`DA04x`).
+//!
+//! Three surfaces consume reports: the `lint` CLI subcommand,
+//! `ingest::compile` (errors fail compile, warnings ride on
+//! `ParsedSpec`), and `predict` responses over the wire (an optional
+//! `diagnostics` array).
+//!
+//! This module is the only one compiled without
+//! `clippy::arithmetic_side_effects` allowed: every integer op in the
+//! analyzer is `checked_*`/`saturating_*` by construction.
+
+pub mod diag;
+
+mod arith;
+mod attrs;
+mod device;
+mod reachability;
+
+pub use diag::{Code, Diagnostic, Report, Severity};
+
+use crate::graph::shape::{self, TensorShape};
+use crate::graph::{Graph, OpKind};
+use crate::ingest::ModelSpec;
+use crate::sim::{DeviceProfile, KNOWN_DEVICES};
+
+/// Batch size the analyzer assumes when the caller did not request one
+/// — the paper's default profiling batch.
+pub const DEFAULT_BATCH: usize = 128;
+
+/// What to analyze against: the input geometry and batch the shape
+/// walk uses, and the device table the feasibility pass screens.
+#[derive(Debug, Clone)]
+pub struct Options {
+    pub batch: usize,
+    pub channels: usize,
+    pub hw: usize,
+    /// `DA033` (batch extremes) only fires when the batch was
+    /// explicitly requested ([`Options::with_batch`]) — the analyzer's
+    /// own default must never warn about itself.
+    pub batch_explicit: bool,
+    /// Devices the feasibility pass screens against. Defaults to the
+    /// full [`KNOWN_DEVICES`] table; empty disables the pass.
+    pub devices: Vec<DeviceProfile>,
+}
+
+impl Options {
+    /// Analyze at an explicit input geometry (what `ingest::compile`
+    /// uses: the spec's declared `channels`/`hw`).
+    pub fn for_input(channels: usize, hw: usize) -> Options {
+        Options {
+            batch: DEFAULT_BATCH,
+            channels,
+            hw,
+            batch_explicit: false,
+            devices: known_devices(),
+        }
+    }
+
+    /// Analyze at the geometry the graph's own `Input` node declares
+    /// (what `lint --model` uses for zoo networks).
+    pub fn for_graph(g: &Graph) -> Options {
+        match g.nodes.first().map(|n| &n.kind) {
+            Some(&OpKind::Input { channels, hw }) => Options::for_input(channels, hw),
+            _ => Options::for_input(3, 32),
+        }
+    }
+
+    /// Request an explicit batch size (arms the `DA033` check).
+    pub fn with_batch(mut self, batch: usize) -> Options {
+        self.batch = batch;
+        self.batch_explicit = true;
+        self
+    }
+}
+
+fn known_devices() -> Vec<DeviceProfile> {
+    KNOWN_DEVICES
+        .iter()
+        .filter_map(|name| DeviceProfile::by_name(name).ok())
+        .collect()
+}
+
+/// Shared read-only view the passes run against. `shapes` is a prefix
+/// of the graph's nodes: shorter than `g.len()` when inference failed
+/// partway (passes must `get()` rather than index).
+pub(crate) struct Ctx<'a> {
+    pub(crate) g: &'a Graph,
+    pub(crate) shapes: &'a [TensorShape],
+    pub(crate) opts: &'a Options,
+}
+
+/// Run every pass over a lowered graph. Infallible by design: anything
+/// wrong with the graph becomes a diagnostic, not an `Err`.
+pub fn run_graph(g: &Graph, opts: &Options) -> Report {
+    let mut report = Report::new();
+    let mut shapes: Vec<TensorShape> = Vec::with_capacity(g.len());
+    for id in 0..g.len() {
+        match shape::infer_next(g, &shapes, id, opts.batch, opts.channels, opts.hw) {
+            Ok(s) => shapes.push(s),
+            Err(e) => {
+                report.push(Diagnostic::at(
+                    Code::ShapeInference,
+                    id,
+                    format!("shape inference failed: {e:#}"),
+                ));
+                break;
+            }
+        }
+    }
+    let ctx = Ctx {
+        g,
+        shapes: &shapes,
+        opts,
+    };
+    reachability::run(&ctx, &mut report);
+    attrs::run(&ctx, &mut report);
+    let acct = arith::run(&ctx, &mut report);
+    device::run(&ctx, &acct, &mut report);
+    report
+}
+
+/// Analyze a parsed spec: structurally validate + lower (hard errors —
+/// a spec that cannot lower has no graph to analyze), run every pass,
+/// and attribute findings back to spec layer ids.
+pub fn run_spec(spec: &ModelSpec, opts: &Options) -> crate::Result<Report> {
+    let g = crate::ingest::lower::lower(spec)?;
+    let mut report = run_graph(&g, opts);
+    report.attribute(spec);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(text: &str) -> ModelSpec {
+        ModelSpec::parse_str(text).unwrap()
+    }
+
+    #[test]
+    fn clean_spec_produces_empty_report() {
+        let s = spec(
+            r#"{
+                "format": "dnnabacus-spec-v1",
+                "name": "clean",
+                "input": {"channels": 3, "hw": 32},
+                "layers": [
+                    {"op": "conv2d",
+                     "attrs": {"in_ch": 3, "out_ch": 16, "kernel": 3, "padding": 1}},
+                    {"op": "relu"},
+                    {"op": "maxpool", "attrs": {"kernel": 2}},
+                    {"op": "globalavgpool"},
+                    {"op": "flatten"},
+                    {"op": "linear", "attrs": {"in_features": 16, "out_features": 10}}
+                ]
+            }"#,
+        );
+        let r = run_spec(&s, &Options::for_input(3, 32)).unwrap();
+        assert!(r.is_empty(), "unexpected findings:\n{}", r.render());
+    }
+
+    #[test]
+    fn dead_layer_is_attributed_to_its_spec_id() {
+        let s = spec(
+            r#"{
+                "format": "dnnabacus-spec-v1",
+                "name": "dead",
+                "input": {"channels": 3, "hw": 16},
+                "layers": [
+                    {"id": "trunk", "op": "conv2d", "inputs": ["input"],
+                     "attrs": {"in_ch": 3, "out_ch": 8, "kernel": 3, "padding": 1}},
+                    {"id": "side", "op": "conv2d", "inputs": ["input"],
+                     "attrs": {"in_ch": 3, "out_ch": 8, "kernel": 3, "padding": 1}},
+                    {"op": "globalavgpool", "inputs": ["trunk"]},
+                    {"op": "flatten"},
+                    {"op": "linear", "attrs": {"in_features": 8, "out_features": 10}}
+                ]
+            }"#,
+        );
+        let r = run_spec(&s, &Options::for_input(3, 16)).unwrap();
+        assert_eq!(r.codes(), vec!["DA010"]);
+        assert_eq!(r.diagnostics[0].layer.as_deref(), Some("side"));
+    }
+
+    #[test]
+    fn shape_failure_becomes_da004_and_passes_still_run() {
+        // Hand-built graph with a channel mismatch: conv expects 4
+        // channels but the input provides 3 — plus a dead relu branch
+        // that reachability must still catch on the shape prefix.
+        let mut g = Graph::new("broken");
+        let x = g.add(OpKind::input(3, 8), &[]);
+        g.add(OpKind::ReLU, &[x]);
+        g.add(OpKind::conv(4, 8, 3, 1, 1), &[x]);
+        let r = run_graph(&g, &Options::for_graph(&g));
+        assert!(r.has_errors());
+        let codes = r.codes();
+        assert!(codes.contains(&"DA004"), "{codes:?}");
+        assert!(codes.contains(&"DA010"), "{codes:?}");
+        let da004 = r
+            .diagnostics
+            .iter()
+            .find(|d| d.code == Code::ShapeInference)
+            .unwrap();
+        assert_eq!(da004.node, Some(2));
+    }
+
+    #[test]
+    fn for_graph_reads_input_geometry() {
+        let mut g = Graph::new("geom");
+        g.add(OpKind::input(1, 28), &[]);
+        let o = Options::for_graph(&g);
+        assert_eq!((o.channels, o.hw, o.batch), (1, 28, DEFAULT_BATCH));
+        assert!(!o.batch_explicit);
+        let o = o.with_batch(64);
+        assert!(o.batch_explicit && o.batch == 64);
+        assert_eq!(o.devices.len(), KNOWN_DEVICES.len());
+    }
+}

@@ -1,0 +1,77 @@
+//! Reachability pass — `DA010`.
+//!
+//! The terminal node (last in topological order, by construction the
+//! network's output — `ingest::lower` and every zoo builder end on it)
+//! transitively consumes the layers that matter. A layer outside that
+//! cone is *dead*: legal in the spec format and happily lowered, but
+//! every accounting pass charges its cost while it contributes nothing
+//! to the output — the prediction would be confidently wrong for the
+//! network the author meant. Usually a forgotten `inputs` entry on a
+//! merge (`concat`/`add`) layer.
+
+use super::diag::{Code, Diagnostic, Report};
+use super::Ctx;
+
+pub(super) fn run(ctx: &Ctx<'_>, report: &mut Report) {
+    let g = ctx.g;
+    let Some(terminal) = g.len().checked_sub(1) else {
+        return;
+    };
+    // Backward DFS from the terminal over input edges.
+    let mut live = vec![false; g.len()];
+    let mut stack = vec![terminal];
+    while let Some(id) = stack.pop() {
+        if std::mem::replace(&mut live[id], true) {
+            continue;
+        }
+        stack.extend(g.nodes[id].inputs.iter().copied().filter(|&src| !live[src]));
+    }
+    for (id, alive) in live.iter().enumerate() {
+        if !alive {
+            report.push(Diagnostic::at(
+                Code::DeadLayer,
+                id,
+                format!(
+                    "{} output never reaches the terminal node {terminal}; \
+                     its cost is counted but it cannot affect the network",
+                    g.nodes[id].kind.ty().name()
+                ),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run_graph, Options};
+    use crate::graph::{Graph, OpKind};
+
+    #[test]
+    fn straight_line_and_diamond_graphs_are_fully_live() {
+        let mut g = Graph::new("diamond");
+        let x = g.add(OpKind::input(3, 8), &[]);
+        let a = g.add(OpKind::conv(3, 8, 3, 1, 1), &[x]);
+        let b = g.add(OpKind::conv(3, 8, 3, 1, 1), &[x]);
+        g.add(OpKind::Add, &[a, b]);
+        let r = run_graph(&g, &Options::for_graph(&g));
+        assert!(r.is_empty(), "{}", r.render());
+    }
+
+    #[test]
+    fn every_dead_node_is_flagged() {
+        let mut g = Graph::new("dead");
+        let x = g.add(OpKind::input(3, 8), &[]);
+        let live = g.add(OpKind::conv(3, 8, 3, 1, 1), &[x]);
+        let d1 = g.add(OpKind::conv(3, 8, 3, 1, 1), &[x]);
+        g.add(OpKind::ReLU, &[d1]);
+        g.add(OpKind::ReLU, &[live]);
+        let r = run_graph(&g, &Options::for_graph(&g));
+        let dead: Vec<_> = r
+            .diagnostics
+            .iter()
+            .filter(|d| d.code == super::Code::DeadLayer)
+            .map(|d| d.node)
+            .collect();
+        assert_eq!(dead, vec![Some(2), Some(3)]);
+    }
+}

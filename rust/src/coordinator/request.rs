@@ -57,6 +57,17 @@ impl ModelRef {
         }
     }
 
+    /// Static-analyzer findings for this model, in wire JSON form.
+    /// Specs carry the warnings computed once at compile time
+    /// (`ParsedSpec::warnings`); zoo models are curated and lint clean,
+    /// so they report none.
+    pub fn diagnostics(&self) -> Vec<crate::util::json::Json> {
+        match self {
+            ModelRef::Zoo(_) => Vec::new(),
+            ModelRef::Spec(p) => p.warnings.iter().map(|d| d.to_json()).collect(),
+        }
+    }
+
     /// 64-bit digest of the *graph content* (op kinds + attr hashes +
     /// edges in topological order). A spec that lowers to the same graph
     /// a zoo builder emits digests identically, so zoo and spec twins

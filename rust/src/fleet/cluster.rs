@@ -61,10 +61,19 @@ impl Cluster {
         Cluster::new(parse_device_list(spec)?)
     }
 
-    /// The paper's two-machine testbed (Table 1).
+    /// The paper's two-machine testbed (Table 1). Built literally —
+    /// one of each card cannot violate `new`'s bounds, and the fleet
+    /// request path stays free of panicking calls.
     pub fn paper() -> Cluster {
-        Cluster::new(vec![DeviceProfile::rtx2080(), DeviceProfile::rtx3090()])
-            .expect("two devices always form a cluster")
+        let profiles = [DeviceProfile::rtx2080(), DeviceProfile::rtx3090()];
+        let devices = profiles
+            .into_iter()
+            .map(|profile| ClusterDevice {
+                name: format!("{}-0", profile.name),
+                profile,
+            })
+            .collect();
+        Cluster { devices }
     }
 
     pub fn len(&self) -> usize {

@@ -9,6 +9,10 @@ use super::shape::TensorShape;
 use super::{Graph, NodeId};
 
 /// Forward FLOPs of one node given the inferred shapes for the whole graph.
+///
+/// Saturating throughout: specs are untrusted, and this runs on the
+/// serving path where `overflow-checks` must never panic. The precise
+/// overflow signal is `analyze`'s checked re-derivation (`DA002`).
 pub fn node_flops(g: &Graph, shapes: &[TensorShape], id: NodeId, kind: &OpKind) -> u64 {
     let node = &g.nodes[id];
     let out = &shapes[id];
@@ -17,24 +21,31 @@ pub fn node_flops(g: &Graph, shapes: &[TensorShape], id: NodeId, kind: &OpKind) 
         OpKind::Input { .. } => 0,
         OpKind::Conv2d(c) => {
             // out elements × (2 × k² × Cin/groups) MAC-FLOPs (+ bias add).
-            let macs = out.elements() * (c.kh * c.kw * c.in_ch / c.groups) as u64;
-            2 * macs + if c.bias { out.elements() } else { 0 }
+            let window = (c.kh as u64)
+                .saturating_mul(c.kw as u64)
+                .saturating_mul((c.in_ch / c.groups) as u64);
+            let macs = out.elements().saturating_mul(window);
+            macs.saturating_mul(2)
+                .saturating_add(if c.bias { out.elements() } else { 0 })
         }
-        OpKind::BatchNorm { .. } => 2 * out.elements(),
+        OpKind::BatchNorm { .. } => out.elements().saturating_mul(2),
         OpKind::ReLU | OpKind::Sigmoid | OpKind::Dropout { .. } => out.elements(),
-        OpKind::Softmax => 3 * out.elements(),
-        OpKind::MaxPool(p) | OpKind::AvgPool(p) => {
-            out.elements() * (p.kernel * p.kernel) as u64
-        }
+        OpKind::Softmax => out.elements().saturating_mul(3),
+        OpKind::MaxPool(p) | OpKind::AvgPool(p) => out
+            .elements()
+            .saturating_mul((p.kernel as u64).saturating_mul(p.kernel as u64)),
         OpKind::GlobalAvgPool => in0.map(|s| s.elements()).unwrap_or(0),
         OpKind::Linear {
             in_features,
             out_features,
         } => {
             let n = out.batch() as u64;
-            2 * n * (*in_features as u64) * (*out_features as u64) + n * *out_features as u64
+            n.saturating_mul(*in_features as u64)
+                .saturating_mul(*out_features as u64)
+                .saturating_mul(2)
+                .saturating_add(n.saturating_mul(*out_features as u64))
         }
-        OpKind::Add | OpKind::Mul => out.elements() * node.inputs.len().max(1) as u64,
+        OpKind::Add | OpKind::Mul => out.elements().saturating_mul(node.inputs.len().max(1) as u64),
         OpKind::Concat | OpKind::Flatten | OpKind::ChannelShuffle { .. } => 0,
     }
 }
@@ -42,11 +53,9 @@ pub fn node_flops(g: &Graph, shapes: &[TensorShape], id: NodeId, kind: &OpKind) 
 /// Total forward FLOPs for a whole graph at a batch size.
 pub fn graph_flops(g: &Graph, batch: usize, channels: usize, hw: usize) -> crate::Result<u64> {
     let shapes = super::shape::infer_shapes(g, batch, channels, hw)?;
-    Ok(g.nodes
-        .iter()
-        .enumerate()
-        .map(|(id, n)| node_flops(g, &shapes, id, &n.kind))
-        .sum())
+    Ok(g.nodes.iter().enumerate().fold(0u64, |acc, (id, n)| {
+        acc.saturating_add(node_flops(g, &shapes, id, &n.kind))
+    }))
 }
 
 #[cfg(test)]

@@ -128,7 +128,12 @@ impl Graph {
 
     /// Count of trainable parameters.
     pub fn param_count(&self) -> u64 {
-        self.nodes.iter().map(|n| n.kind.param_count()).sum()
+        // Saturating fold, not `.sum()`: under `overflow-checks` a sum
+        // of hostile per-node counts must clamp, not panic (`analyze`
+        // reports the overflow as `DA001`).
+        self.nodes
+            .iter()
+            .fold(0u64, |acc, n| acc.saturating_add(n.kind.param_count()))
     }
 
     /// Count of "layers" in the paper's sense (weighted layers: conv +
@@ -144,12 +149,9 @@ impl Graph {
     /// (batch handled by callers).
     pub fn flops_per_sample(&self, channels: usize, hw: usize) -> crate::Result<u64> {
         let shapes = infer_shapes(self, 1, channels, hw)?;
-        Ok(self
-            .nodes
-            .iter()
-            .enumerate()
-            .map(|(id, n)| flops::node_flops(self, &shapes, id, &n.kind))
-            .sum())
+        Ok(self.nodes.iter().enumerate().fold(0u64, |acc, (id, n)| {
+            acc.saturating_add(flops::node_flops(self, &shapes, id, &n.kind))
+        }))
     }
 
     /// A deterministic structural fingerprint (used to dedupe random

@@ -98,16 +98,24 @@ impl ConvAttrs {
     }
 
     /// Trainable parameters.
+    /// Saturating on purpose: specs are untrusted, and the serving path
+    /// must never panic under `overflow-checks`. `analyze`'s checked
+    /// accounting (`DA001`) is the precise overflow signal.
     pub fn params(&self) -> u64 {
-        let w = (self.in_ch / self.groups) as u64
-            * self.out_ch as u64
-            * (self.kh * self.kw) as u64;
-        w + if self.bias { self.out_ch as u64 } else { 0 }
+        let w = ((self.in_ch / self.groups) as u64)
+            .saturating_mul(self.out_ch as u64)
+            .saturating_mul((self.kh as u64).saturating_mul(self.kw as u64));
+        w.saturating_add(if self.bias { self.out_ch as u64 } else { 0 })
     }
 
-    /// Output spatial size for a given input spatial size.
+    /// Output spatial size for a given input spatial size. Saturating:
+    /// a window that never fits yields 1 (flagged as `DA020` by
+    /// `analyze`, not an error here).
     pub fn out_hw(&self, h: usize) -> usize {
-        (h + 2 * self.padding).saturating_sub(self.kh) / self.stride + 1
+        h.saturating_add(self.padding.saturating_mul(2))
+            .saturating_sub(self.kh)
+            / self.stride
+            + 1
     }
 }
 
@@ -121,7 +129,10 @@ pub struct PoolAttrs {
 
 impl PoolAttrs {
     pub fn out_hw(&self, h: usize) -> usize {
-        (h + 2 * self.padding).saturating_sub(self.kernel) / self.stride + 1
+        h.saturating_add(self.padding.saturating_mul(2))
+            .saturating_sub(self.kernel)
+            / self.stride
+            + 1
     }
 }
 
@@ -269,11 +280,13 @@ impl OpKind {
     pub fn param_count(&self) -> u64 {
         match self {
             OpKind::Conv2d(c) => c.params(),
-            OpKind::BatchNorm { channels } => 2 * *channels as u64,
+            OpKind::BatchNorm { channels } => (*channels as u64).saturating_mul(2),
             OpKind::Linear {
                 in_features,
                 out_features,
-            } => (*in_features as u64) * (*out_features as u64) + *out_features as u64,
+            } => (*in_features as u64)
+                .saturating_mul(*out_features as u64)
+                .saturating_add(*out_features as u64),
             _ => 0,
         }
     }

@@ -25,16 +25,22 @@ pub enum TensorShape {
 }
 
 impl TensorShape {
+    /// Saturating: shapes come from untrusted specs, and the serving
+    /// path must never panic under `overflow-checks`. `analyze`'s
+    /// checked accounting (`DA003`) reports the overflow precisely.
     pub fn elements(&self) -> u64 {
         match *self {
-            TensorShape::Map { n, c, h, w } => (n * c * h * w) as u64,
-            TensorShape::Vec { n, f } => (n * f) as u64,
+            TensorShape::Map { n, c, h, w } => (n as u64)
+                .saturating_mul(c as u64)
+                .saturating_mul(h as u64)
+                .saturating_mul(w as u64),
+            TensorShape::Vec { n, f } => (n as u64).saturating_mul(f as u64),
         }
     }
 
     /// Bytes at f32.
     pub fn bytes(&self) -> u64 {
-        self.elements() * 4
+        self.elements().saturating_mul(4)
     }
 
     pub fn channels(&self) -> usize {

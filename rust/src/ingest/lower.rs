@@ -12,13 +12,18 @@ use super::validate;
 use crate::graph::{Graph, OpKind};
 use crate::sim::DatasetKind;
 
-/// A compiled spec: validated, lowered, shape-checked — ready to
-/// featurize and serve.
+/// A compiled spec: validated, lowered, shape-checked, statically
+/// analyzed — ready to featurize and serve.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParsedSpec {
     pub name: String,
     pub input: InputSpec,
     pub graph: Graph,
+    /// Non-fatal findings from [`crate::analyze`] (warn/info severity,
+    /// attributed to spec layer ids), computed once at compile time.
+    /// Error-severity findings never land here — they fail [`compile`].
+    /// Serving forwards these on `predict` responses.
+    pub warnings: Vec<crate::analyze::Diagnostic>,
 }
 
 impl ParsedSpec {
@@ -71,14 +76,24 @@ pub fn compile_str(text: &str) -> crate::Result<ParsedSpec> {
     compile(&ModelSpec::parse_str(text)?)
 }
 
-/// Validate + lower + shape-check a spec into a [`ParsedSpec`].
+/// Validate + lower + shape-check + statically analyze a spec into a
+/// [`ParsedSpec`]. Analyzer errors (overflowing accounting, `DA00x`)
+/// fail the compile — the cost model would only produce garbage for
+/// such a network; warnings travel on [`ParsedSpec::warnings`].
 pub fn compile(spec: &ModelSpec) -> crate::Result<ParsedSpec> {
     let graph = lower(spec)?;
     validate::shape_check(spec, &graph)?;
+    let opts = crate::analyze::Options::for_input(spec.input.channels, spec.input.hw);
+    let mut report = crate::analyze::run_graph(&graph, &opts);
+    report.attribute(spec);
+    if let Some(d) = report.first_error() {
+        crate::bail!("spec '{}' rejected by static analysis: {}", spec.name, d.render());
+    }
     Ok(ParsedSpec {
         name: spec.name.clone(),
         input: spec.input.clone(),
         graph,
+        warnings: report.diagnostics,
     })
 }
 

@@ -15,7 +15,10 @@
 //!   ops, bad attrs, dangling/forward references, arity, and a stepwise
 //!   shape pass that attributes mismatches to the offending layer;
 //! * [`lower`] — spec → graph, plus [`ParsedSpec`] ([`compile`]d specs
-//!   ready to serve);
+//!   ready to serve). Compiling also runs the [`crate::analyze`] static
+//!   analyzer: error-severity findings (`DA00x`) fail the compile,
+//!   warnings ride on [`ParsedSpec::warnings`] and surface on `predict`
+//!   responses;
 //! * [`export`] — graph → spec, so every zoo network round-trips and
 //!   serves as the format's golden corpus.
 //!

@@ -24,6 +24,11 @@
 //!
 //! ## Layout
 //!
+//! * [`analyze`] — multi-pass static analyzer over the graph IR:
+//!   stable `DA0xx` diagnostics (dead layers, degenerate shapes,
+//!   checked-arithmetic overflow, device feasibility, implausible
+//!   attrs) surfaced through the `lint` CLI, `ingest::compile`, and
+//!   `predict` wire responses.
 //! * [`graph`] — computation-graph IR, shape inference, FLOPs/params.
 //! * [`zoo`] — builders for the paper's 29 networks, the 5 unseen
 //!   networks, and the random model generator.
@@ -55,20 +60,42 @@
 //! * [`util`] — support substrates (PRNG, JSON, stats, CLI, threads,
 //!   TTL-LRU cache, errors).
 
+// CI runs clippy with `-W clippy::arithmetic_side_effects`. Only
+// `analyze` is held to it crate-wide (its checked accounting is the
+// overflow oracle, so every op there is `checked_*`/`saturating_*` by
+// construction); the pre-analyzer modules use wrapping/widening integer
+// math that is reviewed case-by-case, so the lint is allowed per module
+// rather than globally silenced.
+pub mod analyze;
+#[allow(clippy::arithmetic_side_effects)]
 pub mod bench_harness;
+#[allow(clippy::arithmetic_side_effects)]
 pub mod coordinator;
+#[allow(clippy::arithmetic_side_effects)]
 pub mod experiments;
+#[allow(clippy::arithmetic_side_effects)]
 pub mod features;
+#[allow(clippy::arithmetic_side_effects)]
 pub mod fleet;
+#[allow(clippy::arithmetic_side_effects)]
 pub mod graph;
+#[allow(clippy::arithmetic_side_effects)]
 pub mod ingest;
+#[allow(clippy::arithmetic_side_effects)]
 pub mod net;
+#[allow(clippy::arithmetic_side_effects)]
 pub mod predictor;
+#[allow(clippy::arithmetic_side_effects)]
 pub mod profiler;
+#[allow(clippy::arithmetic_side_effects)]
 pub mod runtime;
+#[allow(clippy::arithmetic_side_effects)]
 pub mod scheduler;
+#[allow(clippy::arithmetic_side_effects)]
 pub mod sim;
+#[allow(clippy::arithmetic_side_effects)]
 pub mod util;
+#[allow(clippy::arithmetic_side_effects)]
 pub mod zoo;
 
 pub use util::error::{Context, DnnError};

@@ -16,6 +16,9 @@
 //!   predict-spec    predict a user-defined network from a spec file
 //!                   (dnnabacus-spec-v1 JSON; see README "Model specs")
 //!   export-spec     write a zoo network as a spec file (--model, --out)
+//!   lint            static-analyze a network without predicting:
+//!                   --spec FILE (or positional) | --model NAME|all;
+//!                   prints DA0xx findings, exit 1 on error severity
 //!   serve           run the prediction service: in-process load
 //!                   generator by default, or a real TCP server with
 //!                   --listen ADDR (dnnabacus-wire-v1)
@@ -49,11 +52,19 @@
 //!                 --arrival-rate 0.05 (mean jobs per simulated second;
 //!                 0 = all at once) --specs DIR --json
 //!
+//! `lint` flags:   --spec FILE | --model NAME (or `all` for the whole
+//!                 zoo) --batch N (analysis batch; default 128) --json
+//!
 //! `--backend mlp` needs the AOT artifacts (python/compile/aot.py) and a
 //! PJRT binding; this zero-dependency build ships a stub backend, so the
 //! default `automl` backend is the serving path.
 //! ```
 
+// The launcher glues subsystems together; its arithmetic is display
+// math (percentages, MiB conversions), not cost accounting.
+#![allow(clippy::arithmetic_side_effects)]
+
+use dnnabacus::analyze;
 use dnnabacus::coordinator::{
     fits_device,
     service::{AutoMlBackend, MlpBackend},
@@ -86,6 +97,7 @@ fn main() {
         Some("predict") => predict(&args),
         Some("predict-spec") => predict_spec(&args),
         Some("export-spec") => export_spec(&args),
+        Some("lint") => lint(&args),
         Some("serve") => serve(&args),
         Some("client") => client(&args),
         Some("fleet") => fleet(&args),
@@ -211,6 +223,11 @@ fn predict_spec(args: &Args) -> dnnabacus::Result<()> {
         .ok_or_else(|| dnnabacus::err!("usage: dnnabacus predict-spec <file.json> [--flags]"))?;
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
     let parsed = ingest::compile_str(&text).with_context(|| format!("spec {path}"))?;
+    // Non-fatal analyzer findings go to stderr so --json stdout stays
+    // machine-readable; `dnnabacus lint` gives the full report.
+    for d in &parsed.warnings {
+        eprintln!("spec {path}: {}", d.render());
+    }
     let mut cfg = parse_config(args)?;
     // Default the dataset to the one matching the spec's declared input
     // geometry, so `predict-spec file.json` just works for MNIST-shaped
@@ -236,6 +253,106 @@ fn export_spec(args: &Args) -> dnnabacus::Result<()> {
         }
         None => println!("{text}"),
     }
+    Ok(())
+}
+
+/// `lint`: run the multi-pass static analyzer over a spec file or zoo
+/// network(s) without training or predicting anything, and print every
+/// finding with its stable `DA0xx` code. Exit status is 1 when any
+/// error-severity finding is present, so the command gates CI directly.
+fn lint(args: &Args) -> dnnabacus::Result<()> {
+    let spec_path = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("spec"));
+    if spec_path.is_some() && args.get("model").is_some() {
+        dnnabacus::bail!("pass either --spec FILE or --model NAME, not both");
+    }
+    // The analyzer walks concrete shapes; `Flatten` folds the spatial
+    // dims per sample, so a zero batch has no meaning here.
+    let batch = match args.get("batch") {
+        None => None,
+        Some(raw) => {
+            let b: usize = raw
+                .parse()
+                .map_err(|_| dnnabacus::err!("--batch expects a positive integer, got '{raw}'"))?;
+            dnnabacus::ensure!(b >= 1, "--batch must be at least 1");
+            Some(b)
+        }
+    };
+    let with_batch = |opts: analyze::Options| match batch {
+        Some(b) => opts.with_batch(b),
+        None => opts,
+    };
+    let mut targets: Vec<(String, analyze::Report)> = Vec::new();
+    if let Some(path) = spec_path {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let spec = ingest::ModelSpec::parse_str(&text).with_context(|| format!("spec {path}"))?;
+        let opts = with_batch(analyze::Options::for_input(
+            spec.input.channels,
+            spec.input.hw,
+        ));
+        let report = analyze::run_spec(&spec, &opts).with_context(|| format!("spec {path}"))?;
+        targets.push((path.to_string(), report));
+    } else {
+        let model = args.str_or("model", "all");
+        let names: Vec<String> = match model.as_str() {
+            "all" => zoo::all_names().into_iter().map(String::from).collect(),
+            _ => vec![model],
+        };
+        for name in names {
+            let g = zoo::build(&name, 3, 100)?;
+            let opts = with_batch(analyze::Options::for_graph(&g));
+            let report = analyze::run_graph(&g, &opts);
+            targets.push((name, report));
+        }
+    }
+    let errors: usize = targets
+        .iter()
+        .map(|(_, r)| r.count(analyze::Severity::Error))
+        .sum();
+    let warnings: usize = targets
+        .iter()
+        .map(|(_, r)| r.count(analyze::Severity::Warn))
+        .sum();
+    if args.bool("json") {
+        let rows: Vec<Json> = targets
+            .iter()
+            .map(|(name, r)| {
+                let mut t = Json::obj();
+                t.set("target", name.as_str())
+                    .set(
+                        "diagnostics",
+                        Json::Arr(r.diagnostics.iter().map(|d| d.to_json()).collect()),
+                    )
+                    .set("errors", r.count(analyze::Severity::Error))
+                    .set("warnings", r.count(analyze::Severity::Warn));
+                t
+            })
+            .collect();
+        let mut o = Json::obj();
+        o.set("targets", Json::Arr(rows))
+            .set("errors", errors)
+            .set("warnings", warnings);
+        println!("{o}");
+    } else {
+        for (name, r) in &targets {
+            if r.is_empty() {
+                println!("{name}: clean");
+            } else {
+                println!("{name}:");
+                for d in &r.diagnostics {
+                    println!("  {}", d.render());
+                }
+            }
+        }
+        println!(
+            "{} target(s): {errors} error(s), {warnings} warning(s)",
+            targets.len()
+        );
+    }
+    dnnabacus::ensure!(errors == 0, "lint: {errors} error(s)");
     Ok(())
 }
 
@@ -552,17 +669,37 @@ fn client(args: &Args) -> dnnabacus::Result<()> {
     } else {
         for resp in &responses {
             match resp {
-                WireResponse::Ok { model, prediction } => println!(
-                    "{model}: time {:.2}s, memory {:.0} MiB{} (service latency {:.2} ms)",
-                    prediction.time_s,
-                    prediction.memory_bytes / (1u64 << 20) as f64,
-                    if prediction.fits_device {
-                        ""
-                    } else {
-                        "  [would NOT fit device]"
-                    },
-                    prediction.latency_s * 1e3,
-                ),
+                WireResponse::Ok {
+                    model,
+                    prediction,
+                    diagnostics,
+                } => {
+                    println!(
+                        "{model}: time {:.2}s, memory {:.0} MiB{} (service latency {:.2} ms)",
+                        prediction.time_s,
+                        prediction.memory_bytes / (1u64 << 20) as f64,
+                        if prediction.fits_device {
+                            ""
+                        } else {
+                            "  [would NOT fit device]"
+                        },
+                        prediction.latency_s * 1e3,
+                    );
+                    // Server-side analyzer findings ride the response;
+                    // show them the way `lint` would, indented.
+                    for d in diagnostics {
+                        let field = |key| d.get(key).and_then(Json::as_str);
+                        let sev = field("severity").unwrap_or("warn");
+                        let code = field("code").unwrap_or("DA???");
+                        let msg = field("message").unwrap_or_default();
+                        match field("layer") {
+                            Some(layer) => {
+                                eprintln!("  {sev} {code} layer '{layer}': {msg}")
+                            }
+                            None => eprintln!("  {sev} {code}: {msg}"),
+                        }
+                    }
+                }
                 // `client` only sends predict requests; a schedule
                 // reply would be a server bug — surface it raw.
                 WireResponse::Schedule { id, report } => {

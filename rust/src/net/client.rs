@@ -70,9 +70,14 @@ impl Client {
                 .with_context(|| format!("connecting to {}", self.addr))
                 .map_err(WireError::Io)?;
             let _ = stream.set_nodelay(true);
-            self.stream = Some(stream);
+            return Ok(self.stream.insert(stream));
         }
-        Ok(self.stream.as_mut().expect("connected above"))
+        match self.stream.as_mut() {
+            Some(stream) => Ok(stream),
+            // Unreachable (the branch above just connected), but an
+            // error return beats a panic on the request path.
+            None => Err(WireError::Io(crate::err!("no open connection"))),
+        }
     }
 
     /// Queue one request on the wire without waiting for its answer —

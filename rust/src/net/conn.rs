@@ -48,6 +48,9 @@ pub enum PendingReply {
     Wait {
         id: u64,
         model: String,
+        /// Static-analyzer findings captured at enqueue time (inline
+        /// specs only), attached to the `Ok` response when it resolves.
+        diagnostics: Vec<crate::util::json::Json>,
         rx: Receiver<crate::Result<Prediction>>,
     },
     /// A `schedule` call offloaded to the placement pool; the worker

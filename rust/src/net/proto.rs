@@ -549,6 +549,12 @@ pub enum WireResponse {
         /// Display name of the predicted model (zoo or spec name).
         model: String,
         prediction: Prediction,
+        /// Static-analyzer findings for the model (each the
+        /// `analyze::Diagnostic::to_json` shape). Only inline specs
+        /// carry them today; empty for zoo models, and omitted from the
+        /// wire body when empty so pre-analyzer clients see byte-for-byte
+        /// identical responses.
+        diagnostics: Vec<Json>,
     },
     /// A `schedule` request's placement report (the
     /// [`crate::fleet::FleetReport`] JSON shape).
@@ -566,7 +572,16 @@ impl WireResponse {
         WireResponse::Ok {
             model: model.to_string(),
             prediction,
+            diagnostics: Vec::new(),
         }
+    }
+
+    /// Attach analyzer findings to an `Ok` response (no-op otherwise).
+    pub fn with_diagnostics(mut self, diags: Vec<Json>) -> WireResponse {
+        if let WireResponse::Ok { diagnostics, .. } = &mut self {
+            *diagnostics = diags;
+        }
+        self
     }
 
     pub fn error(id: u64, kind: ErrorKind, message: impl Into<String>) -> WireResponse {
@@ -595,7 +610,11 @@ impl WireResponse {
         let mut o = Json::obj();
         o.set("format", WIRE_FORMAT);
         match self {
-            WireResponse::Ok { model, prediction } => {
+            WireResponse::Ok {
+                model,
+                prediction,
+                diagnostics,
+            } => {
                 let mut p = Json::obj();
                 p.set("time_s", prediction.time_s)
                     .set("memory_bytes", prediction.memory_bytes)
@@ -605,6 +624,9 @@ impl WireResponse {
                     .set("id", prediction.id)
                     .set("model", model.as_str())
                     .set("prediction", p);
+                if !diagnostics.is_empty() {
+                    o.set("diagnostics", Json::Arr(diagnostics.clone()));
+                }
             }
             WireResponse::Schedule { id, report } => {
                 o.set("ok", true)
@@ -652,7 +674,16 @@ impl WireResponse {
                     .ok_or_else(|| crate::err!("prediction missing boolean 'fits_device'"))?,
                 latency_s: p.num("latency_s")?,
             };
-            Ok(WireResponse::Ok { model, prediction })
+            let diagnostics = doc
+                .get("diagnostics")
+                .and_then(Json::as_arr)
+                .map(|a| a.to_vec())
+                .unwrap_or_default();
+            Ok(WireResponse::Ok {
+                model,
+                prediction,
+                diagnostics,
+            })
         } else {
             let e = doc
                 .get("error")
@@ -761,14 +792,21 @@ mod tests {
                 latency_s: 0.003,
             },
         );
+        // No diagnostics → the field stays off the wire entirely.
+        assert!(!ok.to_json().to_string().contains("diagnostics"));
         let back = WireResponse::from_json(&Json::parse(&ok.to_json().to_string()).unwrap());
         match back.unwrap() {
-            WireResponse::Ok { model, prediction } => {
+            WireResponse::Ok {
+                model,
+                prediction,
+                diagnostics,
+            } => {
                 assert_eq!(model, "resnet18");
                 assert_eq!(prediction.id, 11);
                 assert_eq!(prediction.time_s, 1.5);
                 assert_eq!(prediction.memory_bytes, 2e9);
                 assert!(prediction.fits_device);
+                assert!(diagnostics.is_empty());
             }
             other => panic!("expected Ok, got {other:?}"),
         }
@@ -783,6 +821,36 @@ mod tests {
                 assert_eq!(message, "busy");
             }
             other => panic!("expected Err, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn diagnostics_ride_ok_responses_and_roundtrip() {
+        let pred = Prediction {
+            id: 7,
+            time_s: 0.5,
+            memory_bytes: 1e9,
+            fits_device: true,
+            latency_s: 0.001,
+        };
+        let d = crate::analyze::Diagnostic::at(
+            crate::analyze::Code::StrideExceedsKernel,
+            2,
+            "stride 3 exceeds the 2x2 pooling window",
+        );
+        let resp = WireResponse::ok("custom", pred).with_diagnostics(vec![d.to_json()]);
+        let text = resp.to_json().to_string();
+        assert!(text.contains("\"diagnostics\""), "{text}");
+        let back = WireResponse::from_json(&Json::parse(&text).unwrap()).unwrap();
+        match back {
+            WireResponse::Ok { diagnostics, .. } => {
+                assert_eq!(diagnostics.len(), 1);
+                let j = &diagnostics[0];
+                assert_eq!(j.get("code").and_then(Json::as_str), Some("DA030"));
+                assert_eq!(j.get("severity").and_then(Json::as_str), Some("warn"));
+                assert_eq!(j.get("node").and_then(Json::as_usize), Some(2));
+            }
+            other => panic!("expected Ok, got {other:?}"),
         }
     }
 

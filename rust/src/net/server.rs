@@ -661,8 +661,16 @@ fn resolve_pending(shared: &Shared, c: &mut Conn) -> bool {
         let resolved: Option<WireResponse> = match c.pending.front_mut() {
             None => break,
             Some(PendingReply::Ready(_)) => None,
-            Some(PendingReply::Wait { id, model, rx }) => match rx.try_recv() {
-                Ok(Ok(prediction)) => Some(WireResponse::ok(model, prediction)),
+            Some(PendingReply::Wait {
+                id,
+                model,
+                diagnostics,
+                rx,
+            }) => match rx.try_recv() {
+                Ok(Ok(prediction)) => Some(
+                    WireResponse::ok(model, prediction)
+                        .with_diagnostics(std::mem::take(diagnostics)),
+                ),
                 Ok(Err(e)) => {
                     let kind = WireError::classify_service(&e);
                     if kind == ErrorKind::BadRequest {
@@ -762,8 +770,16 @@ fn enqueue(shared: &Arc<Shared>, sched_pool: &ThreadPool, payload: &[u8]) -> Pen
         }
     };
     let model = req.model.name().to_string();
+    // Captured before submit: the worker only answers with numbers, and
+    // the reply must still name the offending layers.
+    let diagnostics = req.model.diagnostics();
     match shared.svc.try_submit(req) {
-        Some(rx) => PendingReply::Wait { id, model, rx },
+        Some(rx) => PendingReply::Wait {
+            id,
+            model,
+            diagnostics,
+            rx,
+        },
         None => {
             shared.overloaded.fetch_add(1, Ordering::SeqCst);
             PendingReply::Ready(WireResponse::error(
@@ -836,10 +852,15 @@ mod tests {
             .call(&WireRequest::zoo(1, "resnet18").with("batch", 64u64))
             .unwrap();
         match zoo {
-            WireResponse::Ok { model, prediction } => {
+            WireResponse::Ok {
+                model,
+                prediction,
+                diagnostics,
+            } => {
                 assert_eq!(model, "resnet18");
                 assert_eq!(prediction.id, 1);
                 assert!(prediction.time_s > 0.0);
+                assert!(diagnostics.is_empty(), "zoo models lint clean");
             }
             other => panic!("expected Ok, got {other:?}"),
         }
@@ -850,6 +871,40 @@ mod tests {
         assert_eq!(net.answered, 2);
         assert_eq!(net.bad_requests, 0);
         assert_eq!(svc.errors, 0);
+    }
+
+    #[test]
+    fn spec_warnings_ride_predict_responses() {
+        // A compilable spec with one seeded defect: maxpool stride 3
+        // over a 2x2 window skips input rows (DA030, warn severity).
+        let text = r#"{
+            "format": "dnnabacus-spec-v1",
+            "name": "sparse-pool",
+            "input": {"channels": 3, "hw": 32},
+            "layers": [
+                {"id": "c1", "op": "conv2d",
+                 "attrs": {"in_ch": 3, "out_ch": 8, "kernel": 3, "padding": 1}},
+                {"id": "p1", "op": "maxpool", "attrs": {"kernel": 2, "stride": 3}},
+                {"op": "globalavgpool"},
+                {"op": "flatten"},
+                {"op": "linear", "attrs": {"in_features": 8, "out_features": 10}}
+            ]
+        }"#;
+        let spec = Json::parse(text).unwrap();
+        let server = default_server();
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+        let resp = client.call(&WireRequest::spec(7, spec)).unwrap();
+        match resp {
+            WireResponse::Ok { diagnostics, .. } => {
+                assert_eq!(diagnostics.len(), 1, "{diagnostics:?}");
+                let d = &diagnostics[0];
+                assert_eq!(d.str("code").unwrap(), "DA030");
+                assert_eq!(d.str("severity").unwrap(), "warn");
+                assert_eq!(d.str("layer").unwrap(), "p1");
+            }
+            other => panic!("expected Ok, got {other:?}"),
+        }
+        server.shutdown();
     }
 
     #[test]

@@ -11,6 +11,7 @@ pub mod error;
 pub mod json;
 pub mod prng;
 pub mod prop;
+mod selflint;
 pub mod stats;
 pub mod table;
 pub mod threadpool;

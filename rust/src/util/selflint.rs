@@ -1,0 +1,147 @@
+//! Repo-invariant self-lint: structural rules the compiler cannot
+//! enforce, checked as plain unit tests over the source tree so a
+//! violation fails `cargo test` with the offending file and line.
+//!
+//! The invariants:
+//!
+//! 1. memory-un-safe code is confined to `net/poll.rs` (the one place
+//!    that must call `libc`-level `poll(2)` by hand);
+//! 2. the server and fleet request paths never panic: no `.unwrap()` /
+//!    `.expect(` outside `#[cfg(test)]` modules in `net/` and `fleet/`;
+//! 3. the crate stays zero-dependency (`[dependencies]` in Cargo.toml
+//!    is empty);
+//! 4. every analyzer diagnostic code (`DA0xx`) is documented in
+//!    DESIGN.md, so the registry and the docs cannot drift apart.
+
+#[cfg(test)]
+mod tests {
+    use std::fs;
+    use std::path::{Path, PathBuf};
+
+    fn root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+    }
+
+    fn read(path: &Path) -> String {
+        match fs::read_to_string(path) {
+            Ok(text) => text,
+            Err(e) => panic!("selflint cannot read {}: {e}", path.display()),
+        }
+    }
+
+    /// Every `.rs` file under `dir`, recursively, in sorted order.
+    fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+        let entries = match fs::read_dir(dir) {
+            Ok(entries) => entries,
+            Err(e) => panic!("selflint cannot list {}: {e}", dir.display()),
+        };
+        let mut paths: Vec<PathBuf> = entries.filter_map(|e| e.ok()).map(|e| e.path()).collect();
+        paths.sort();
+        for path in paths {
+            if path.is_dir() {
+                rust_files(&path, out);
+            } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+                out.push(path);
+            }
+        }
+    }
+
+    /// `(1-based line, text)` pairs up to (excluding) the file's first
+    /// `#[cfg(test)]` — the non-test portion of a source file.
+    fn non_test_lines(text: &str) -> Vec<(usize, &str)> {
+        text.lines()
+            .enumerate()
+            .take_while(|(_, line)| !line.contains("#[cfg(test)]"))
+            .map(|(i, line)| (i.saturating_add(1), line))
+            .collect()
+    }
+
+    #[test]
+    fn memory_un_safe_code_is_confined_to_the_poller() {
+        // Needle built by concatenation (and the fn name underscored) so
+        // this file never matches itself.
+        let needle: String = ["un", "safe"].concat();
+        let src = root().join("rust/src");
+        let mut files = Vec::new();
+        rust_files(&src, &mut files);
+        assert!(files.len() > 30, "source walk looks broken: {files:?}");
+        let mut violations = Vec::new();
+        for path in files {
+            if path.ends_with("net/poll.rs") {
+                continue;
+            }
+            let text = read(&path);
+            for (line, content) in text.lines().enumerate() {
+                if content.contains(&needle) {
+                    violations.push(format!(
+                        "{}:{}: {}",
+                        path.display(),
+                        line.saturating_add(1),
+                        content.trim()
+                    ));
+                }
+            }
+        }
+        assert!(
+            violations.is_empty(),
+            "{needle} outside net/poll.rs:\n{}",
+            violations.join("\n")
+        );
+    }
+
+    #[test]
+    fn request_paths_never_panic() {
+        let root = root();
+        let mut files = Vec::new();
+        rust_files(&root.join("rust/src/net"), &mut files);
+        rust_files(&root.join("rust/src/fleet"), &mut files);
+        assert!(files.len() >= 12, "source walk looks broken: {files:?}");
+        let mut violations = Vec::new();
+        for path in files {
+            let text = read(&path);
+            for (line, content) in non_test_lines(&text) {
+                if content.contains(".unwrap()") || content.contains(".expect(") {
+                    violations.push(format!("{}:{line}: {}", path.display(), content.trim()));
+                }
+            }
+        }
+        assert!(
+            violations.is_empty(),
+            "panicking calls on server/fleet request paths:\n{}",
+            violations.join("\n")
+        );
+    }
+
+    #[test]
+    fn crate_stays_zero_dependency() {
+        let manifest = read(&root().join("Cargo.toml"));
+        let mut in_deps = false;
+        for (i, line) in manifest.lines().enumerate() {
+            let t = line.trim();
+            if t.starts_with('[') {
+                in_deps = t == "[dependencies]";
+                continue;
+            }
+            if in_deps && !t.is_empty() && !t.starts_with('#') {
+                panic!(
+                    "Cargo.toml:{}: dependency in a zero-dep crate: {t}",
+                    i.saturating_add(1)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_diagnostic_code_is_documented() {
+        let design = read(&root().join("DESIGN.md"));
+        let missing: Vec<&str> = crate::analyze::Code::ALL
+            .iter()
+            .map(|c| c.as_str())
+            .filter(|code| !design.contains(*code))
+            .collect();
+        assert!(
+            missing.is_empty(),
+            "DESIGN.md is missing analyzer codes {missing:?} — document them in §4e"
+        );
+    }
+}

@@ -2,6 +2,8 @@
 //! train → predict), the PJRT artifact path, the prediction service
 //! over a real trained backend, and the scheduling application.
 
+#![allow(clippy::arithmetic_side_effects)]
+
 use dnnabacus::coordinator::{
     service::AutoMlBackend, PredictRequest, PredictionService, ServiceConfig,
 };
@@ -229,6 +231,14 @@ fn spec_corpus_every_file_parses_compiles_and_is_novel_ready() {
         let parsed = dnnabacus::ingest::compile_str(&text)
             .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
         parsed.graph.validate().unwrap();
+        // The good corpus is also the analyzer's clean baseline: zero
+        // findings of any severity (seeded defects live in bad/).
+        assert!(
+            parsed.warnings.is_empty(),
+            "{}: {:?}",
+            path.display(),
+            parsed.warnings
+        );
         assert!(parsed.graph.param_count() > 0, "{}", path.display());
         let dataset = parsed
             .matching_dataset()
@@ -242,6 +252,58 @@ fn spec_corpus_every_file_parses_compiles_and_is_novel_ready() {
     }
     assert!(seen >= 4, "corpus shrank to {seen} files");
     assert_eq!(novel, seen, "corpus files must be novel (non-zoo) networks");
+}
+
+#[test]
+fn bad_spec_corpus_each_file_trips_its_seeded_diagnostic() {
+    use dnnabacus::analyze::{self, Options};
+    use dnnabacus::ingest::ModelSpec;
+    // Every file in examples/specs/bad carries exactly one seeded
+    // defect; the analyzer must report exactly the pinned code set —
+    // nothing missing (a dead check) and nothing extra (a noisy one).
+    let expected: &[(&str, &[&str])] = &[
+        ("channel-bottleneck.json", &["DA021"]),
+        ("dead-branch.json", &["DA010"]),
+        ("degenerate-spatial.json", &["DA020"]),
+        ("overflow-params.json", &["DA001", "DA002"]),
+        ("padding-gt-kernel.json", &["DA031"]),
+        ("pointwise-padding.json", &["DA032"]),
+        ("stride-gt-kernel.json", &["DA030"]),
+    ];
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("examples/specs/bad");
+    let mut files: Vec<String> = std::fs::read_dir(&dir)
+        .expect("examples/specs/bad must exist")
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    files.sort();
+    let names: Vec<&str> = expected.iter().map(|&(name, _)| name).collect();
+    assert_eq!(files, names, "bad corpus and expectation table drifted");
+    for &(name, codes) in expected {
+        let text = std::fs::read_to_string(dir.join(name)).unwrap();
+        let spec = ModelSpec::parse_str(&text).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let opts = Options::for_input(spec.input.channels, spec.input.hw);
+        let report =
+            analyze::run_spec(&spec, &opts).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(report.codes(), codes, "{name}:\n{}", report.render());
+    }
+}
+
+#[test]
+fn zoo_lints_clean_of_error_severity_findings() {
+    use dnnabacus::analyze::{self, Options, Severity};
+    // The curated zoo must never trip an error-severity diagnostic
+    // (those fail spec compiles); warnings are allowed — a handful of
+    // deep networks legitimately exceed the paper devices at batch 128.
+    for name in zoo::all_names() {
+        let g = zoo::build(name, 3, 100).unwrap();
+        let report = analyze::run_graph(&g, &Options::for_graph(&g));
+        assert_eq!(
+            report.count(Severity::Error),
+            0,
+            "{name}:\n{}",
+            report.render()
+        );
+    }
 }
 
 #[test]

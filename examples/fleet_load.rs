@@ -18,6 +18,7 @@ use dnnabacus::coordinator::{service::AutoMlBackend, CostModel, PredictionServic
 use dnnabacus::experiments::Ctx;
 use dnnabacus::fleet::PolicyKind;
 use dnnabacus::net::{Client, ScheduleRequest, Server, ServerConfig, WireResponse};
+use dnnabacus::obs;
 use dnnabacus::predictor::{AutoMl, Target};
 use dnnabacus::util::json::Json;
 use dnnabacus::util::prng::Rng;
@@ -156,6 +157,7 @@ fn main() -> dnnabacus::Result<()> {
     assert!(ga_ms < ff, "GA ({ga_ms:.1}s) must beat first-fit ({ff:.1}s)");
     println!("acceptance: least-finish and GA beat first-fit; zero OOM placements");
 
+    let snapshot = server.snapshot();
     let (net, m) = server.shutdown();
     println!(
         "wire: {} schedule calls answered ({} peak conns) | cost queries {} ({} cache hits / {} misses)",
@@ -165,5 +167,10 @@ fn main() -> dnnabacus::Result<()> {
         m.cache_hits,
         m.cache_misses
     );
+    // The same counters (plus the server-side fleet.* instruments)
+    // under their unified registry names — the exact key set
+    // `serve --json` and the `metrics` wire request emit.
+    println!("unified snapshot:");
+    print!("{}", obs::render_snapshot(&snapshot));
     Ok(())
 }

@@ -2,7 +2,9 @@
 //! `dnnabacus-wire-v1` TCP front door in-process, fire the same skewed
 //! (Zipf-ish) zoo + spec mix as `serve_load`/`spec_load` at it from
 //! several pipelining clients, and report wire throughput, latency
-//! percentiles, and what the cache and admission control absorbed.
+//! percentiles, and what the cache and admission control absorbed —
+//! plus the unified [`dnnabacus::obs`] snapshot, under the same
+//! registry names `serve --json` emits.
 //!
 //! ```bash
 //! cargo run --release --example net_load
@@ -14,6 +16,7 @@
 use dnnabacus::coordinator::{service::AutoMlBackend, CostModel, PredictionService, ServiceConfig};
 use dnnabacus::experiments::Ctx;
 use dnnabacus::net::{Client, ErrorKind, Server, ServerConfig, WireRequest, WireResponse};
+use dnnabacus::obs;
 use dnnabacus::predictor::{AutoMl, Target};
 use dnnabacus::util::json::Json;
 use dnnabacus::util::prng::Rng;
@@ -142,6 +145,7 @@ fn main() -> dnnabacus::Result<()> {
         latencies.extend(l);
     }
     let elapsed = t0.elapsed().as_secs_f64();
+    let snapshot = server.snapshot();
     let (wire, m) = server.shutdown();
 
     println!(
@@ -149,10 +153,11 @@ fn main() -> dnnabacus::Result<()> {
          ({failed} failed, {rejected} overload-rejected)",
         ok as f64 / elapsed
     );
+    let qs = stats::quantiles(&latencies, &[0.5, 0.99]);
     println!(
         "service latency p50 {:.2} ms p99 {:.2} ms | mean batch {:.1}",
-        stats::quantile(&latencies, 0.5) * 1e3,
-        stats::quantile(&latencies, 0.99) * 1e3,
+        qs[0] * 1e3,
+        qs[1] * 1e3,
         m.mean_batch_size
     );
     println!(
@@ -167,6 +172,10 @@ fn main() -> dnnabacus::Result<()> {
         "wire: {} connections ({} peak concurrent), {} requests, {} answered, {} bad",
         wire.connections, wire.peak_conns, wire.requests, wire.answered, wire.bad_requests
     );
+    // The same counters again, under their unified registry names — the
+    // exact key set `serve --json` and the `metrics` wire request emit.
+    println!("unified snapshot:");
+    print!("{}", obs::render_snapshot(&snapshot));
     // Overload rejections (admission control under a hot enough mix)
     // are fine; anything else failing means the mix is not servable.
     assert_eq!(failed, 0, "every request in the mix must be servable");

@@ -12,6 +12,7 @@
 #![allow(clippy::arithmetic_side_effects)]
 
 use dnnabacus::fleet::{self, Cluster, FleetJob, PolicyKind, SimParams, SyntheticCosts};
+use dnnabacus::obs::Registry;
 use dnnabacus::util::cli::Args;
 use dnnabacus::util::json::Json;
 use std::time::Instant;
@@ -24,6 +25,9 @@ struct PolicyResult {
     regret: f64,
     oom_screened: usize,
     true_ooms: usize,
+    /// Unified `fleet.*` snapshot from a per-policy registry, attached
+    /// to the JSON artifact under the same names `serve --json` uses.
+    metrics: Json,
 }
 
 fn main() {
@@ -45,9 +49,20 @@ fn main() {
     for kind in PolicyKind::ALL {
         let mut costs = SyntheticCosts { seed, noise: 0.15 };
         let mut policy = fleet::make_policy(kind, seed);
+        // Per-policy registry so the fleet.* counters in the artifact
+        // describe exactly one run each.
+        let registry = Registry::new();
+        fleet::register_metrics(&registry);
         let t0 = Instant::now();
-        let report = fleet::run(&cluster, &jobs, policy.as_mut(), &mut costs, &params)
-            .expect("synthetic workload places");
+        let report = fleet::run_with_registry(
+            &cluster,
+            &jobs,
+            policy.as_mut(),
+            &mut costs,
+            &params,
+            &registry,
+        )
+        .expect("synthetic workload places");
         let elapsed_s = t0.elapsed().as_secs_f64();
         println!(
             "{:<16} {:>9.0} placements/s  makespan {:>8.1}s  regret {:>+6.1}%  \
@@ -68,6 +83,7 @@ fn main() {
             regret: report.regret,
             oom_screened: report.oom_screened,
             true_ooms: report.true_oom_placements,
+            metrics: registry.snapshot(),
         });
     }
 
@@ -100,7 +116,8 @@ fn main() {
                     .set("makespan_true_s", r.makespan_true_s)
                     .set("regret", r.regret)
                     .set("oom_screened", r.oom_screened)
-                    .set("true_oom_placements", r.true_ooms);
+                    .set("true_oom_placements", r.true_ooms)
+                    .set("metrics", r.metrics.clone());
                 o
             })
             .collect();

@@ -5,6 +5,13 @@
 //! `serve_throughput`: the delta between the two is the wire cost
 //! (framing, JSON, syscalls, event-loop scheduling).
 //!
+//! Three passes share one seeded schedule: cache off, cache on (both
+//! fully traced, `--trace-sample 1`), and cache on at `--trace-sample
+//! 64` — the delta between the last two is the tracing overhead the
+//! JSON artifact reports as `trace_overhead_pct`. Every pass attaches
+//! its per-stage latency breakdown (`stage.*_us` histogram summaries
+//! from the unified [`dnnabacus::obs`] registry) to the artifact.
+//!
 //! `--clients` is the number of *concurrent connections held open* for
 //! the whole pass — every connection dials before the timed region
 //! starts and stays connected until it ends, so the pass genuinely
@@ -31,6 +38,7 @@ use dnnabacus::coordinator::{
 };
 use dnnabacus::experiments::Ctx;
 use dnnabacus::net::{Client, NetMetrics, Server, WireRequest};
+use dnnabacus::obs;
 use dnnabacus::predictor::{AutoMl, Target};
 use dnnabacus::util::cli::Args;
 use dnnabacus::util::json::Json;
@@ -60,7 +68,8 @@ fn run_pass(
     cache_capacity: usize,
     clients: usize,
     threads: usize,
-) -> (f64, Vec<f64>, NetMetrics, ServiceMetrics) {
+    trace_sample: u64,
+) -> Pass {
     let cfg = ServiceConfig {
         cache_capacity,
         max_inflight: 1024,
@@ -69,6 +78,7 @@ fn run_pass(
     let svc = PredictionService::start(cfg, backend);
     let server = Server::builder()
         .max_conns(clients.max(8) * 2) // headroom: refusals are a failure here
+        .trace_sample(trace_sample)
         .start("127.0.0.1:0", svc)
         .expect("bind");
     let addr = server.local_addr().to_string();
@@ -128,8 +138,17 @@ fn run_pass(
         latencies.extend(h.join().expect("client thread"));
     }
     let elapsed = t0.elapsed().as_secs_f64();
+    // Stage breakdown before shutdown tears the registry's sources down.
+    let stages = obs::stage_block(&server.snapshot());
     let (net, svc_m) = server.shutdown();
-    (elapsed, latencies, net, svc_m)
+    Pass {
+        elapsed,
+        wire_latencies: latencies,
+        net,
+        svc: svc_m,
+        trace_sample,
+        stages,
+    }
 }
 
 struct Pass {
@@ -137,16 +156,23 @@ struct Pass {
     wire_latencies: Vec<f64>,
     net: NetMetrics,
     svc: ServiceMetrics,
+    trace_sample: u64,
+    /// `stage.*_us` histogram summaries from the unified registry.
+    stages: Json,
 }
 
 fn pass_json(name: &str, requests: usize, p: &Pass) -> Json {
+    // One sort for both wire percentiles.
+    let qs = stats::quantiles(&p.wire_latencies, &[0.5, 0.99]);
     let mut o = Json::obj();
     o.set("name", name)
         .set("requests", requests)
         .set("req_per_s", requests as f64 / p.elapsed)
         .set("elapsed_s", p.elapsed)
-        .set("p50_wire_ms", stats::quantile(&p.wire_latencies, 0.5) * 1e3)
-        .set("p99_wire_ms", stats::quantile(&p.wire_latencies, 0.99) * 1e3)
+        .set("p50_wire_ms", qs[0] * 1e3)
+        .set("p99_wire_ms", qs[1] * 1e3)
+        .set("trace_sample", p.trace_sample)
+        .set("stages", p.stages.clone())
         .set("p50_s", p.svc.p50_latency_s)
         .set("p99_s", p.svc.p99_latency_s)
         .set("mean_batch_size", p.svc.mean_batch_size)
@@ -162,12 +188,13 @@ fn pass_json(name: &str, requests: usize, p: &Pass) -> Json {
 }
 
 fn report(name: &str, requests: usize, p: &Pass) {
+    let qs = stats::quantiles(&p.wire_latencies, &[0.5, 0.99]);
     println!(
-        "{name:<10} {:>7.0} req/s  wire p50 {:>8.3} ms  p99 {:>8.3} ms  \
+        "{name:<16} {:>7.0} req/s  wire p50 {:>8.3} ms  p99 {:>8.3} ms  \
          mean batch {:>5.1}  hits {:>4}  peak conns {:>5}",
         requests as f64 / p.elapsed,
-        stats::quantile(&p.wire_latencies, 0.5) * 1e3,
-        stats::quantile(&p.wire_latencies, 0.99) * 1e3,
+        qs[0] * 1e3,
+        qs[1] * 1e3,
         p.svc.mean_batch_size,
         p.svc.cache_hits,
         p.net.peak_conns
@@ -225,32 +252,28 @@ fn main() {
         assert_eq!(p.net.answered as usize, requests);
     };
 
-    let (elapsed, wire_latencies, net, svc) =
-        run_pass(&schedule, Arc::clone(&backend), 0, clients, threads);
-    let off = Pass {
-        elapsed,
-        wire_latencies,
-        net,
-        svc,
-    };
+    let off = run_pass(&schedule, Arc::clone(&backend), 0, clients, threads, 1);
     report("cache-off", requests, &off);
     assert_eq!(off.svc.cache_hits, 0, "disabled cache must never hit");
     check(&off);
 
-    let (elapsed, wire_latencies, net, svc) =
-        run_pass(&schedule, Arc::clone(&backend), 4096, clients, threads);
-    let on = Pass {
-        elapsed,
-        wire_latencies,
-        net,
-        svc,
-    };
+    let on = run_pass(&schedule, Arc::clone(&backend), 4096, clients, threads, 1);
     report("cache-on", requests, &on);
     assert!(on.svc.cache_hits > 0, "skewed mix must repeat keys");
     check(&on);
 
+    // Same cached workload with 1-in-64 trace sampling: the throughput
+    // delta against the fully-traced pass is the tracing overhead.
+    let sampled = run_pass(&schedule, Arc::clone(&backend), 4096, clients, threads, 64);
+    report("cache-on/s64", requests, &sampled);
+    check(&sampled);
+
     let speedup = (requests as f64 / on.elapsed) / (requests as f64 / off.elapsed);
     println!("cache speedup over the wire: {speedup:.2}x on requests/sec");
+    let rps_full = requests as f64 / on.elapsed;
+    let rps_sampled = requests as f64 / sampled.elapsed;
+    let trace_overhead_pct = (rps_sampled - rps_full) / rps_sampled * 100.0;
+    println!("full tracing vs 1-in-64 sampling: {trace_overhead_pct:+.2}% req/s");
 
     if let Some(path) = args.get("json") {
         let mut doc = Json::obj();
@@ -264,9 +287,11 @@ fn main() {
                 Json::Arr(vec![
                     pass_json("cache_off", requests, &off),
                     pass_json("cache_on", requests, &on),
+                    pass_json("cache_on_sampled", requests, &sampled),
                 ]),
             )
-            .set("cache_speedup_req_per_s", speedup);
+            .set("cache_speedup_req_per_s", speedup)
+            .set("trace_overhead_pct", trace_overhead_pct);
         std::fs::write(path, doc.to_string()).expect("write bench json");
         println!("wrote {path}");
     }

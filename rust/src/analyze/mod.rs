@@ -26,7 +26,9 @@
 //! Three surfaces consume reports: the `lint` CLI subcommand,
 //! `ingest::compile` (errors fail compile, warnings ride on
 //! `ParsedSpec`), and `predict` responses over the wire (an optional
-//! `diagnostics` array).
+//! `diagnostics` array). `lint --json` additionally reports per-pass
+//! wall time (a `timing` block) measured via [`run_graph_timed`]'s
+//! [`crate::obs`] spans.
 //!
 //! This module is the only one compiled without
 //! `clippy::arithmetic_side_effects` allowed: every integer op in the
@@ -115,7 +117,26 @@ pub(crate) struct Ctx<'a> {
 /// Run every pass over a lowered graph. Infallible by design: anything
 /// wrong with the graph becomes a diagnostic, not an `Err`.
 pub fn run_graph(g: &Graph, opts: &Options) -> Report {
+    run_graph_traced(g, opts, &crate::obs::Trace::off())
+}
+
+/// [`run_graph`], with each pass timed through an [`crate::obs`] span.
+/// Returns the report plus `(pass name, wall microseconds)` in run
+/// order — the `timing` block of `lint --json`.
+pub fn run_graph_timed(g: &Graph, opts: &Options) -> (Report, Vec<(&'static str, u64)>) {
+    let trace = crate::obs::Trace::forced(0);
+    let report = run_graph_traced(g, opts, &trace);
+    let timing = match trace.finish() {
+        Some(summary) => summary.spans.iter().map(|s| (s.name, s.dur_us)).collect(),
+        None => Vec::new(),
+    };
+    (report, timing)
+}
+
+fn run_graph_traced(g: &Graph, opts: &Options, trace: &crate::obs::Trace) -> Report {
+    use std::time::Instant;
     let mut report = Report::new();
+    let t = Instant::now();
     let mut shapes: Vec<TensorShape> = Vec::with_capacity(g.len());
     for id in 0..g.len() {
         match shape::infer_next(g, &shapes, id, opts.batch, opts.channels, opts.hw) {
@@ -130,15 +151,24 @@ pub fn run_graph(g: &Graph, opts: &Options) -> Report {
             }
         }
     }
+    trace.record("shape_walk", t, Instant::now());
     let ctx = Ctx {
         g,
         shapes: &shapes,
         opts,
     };
+    let t = Instant::now();
     reachability::run(&ctx, &mut report);
+    trace.record("reachability", t, Instant::now());
+    let t = Instant::now();
     attrs::run(&ctx, &mut report);
+    trace.record("attrs", t, Instant::now());
+    let t = Instant::now();
     let acct = arith::run(&ctx, &mut report);
+    trace.record("arith", t, Instant::now());
+    let t = Instant::now();
     device::run(&ctx, &acct, &mut report);
+    trace.record("device", t, Instant::now());
     report
 }
 
@@ -150,6 +180,17 @@ pub fn run_spec(spec: &ModelSpec, opts: &Options) -> crate::Result<Report> {
     let mut report = run_graph(&g, opts);
     report.attribute(spec);
     Ok(report)
+}
+
+/// [`run_spec`], with the per-pass timing of [`run_graph_timed`].
+pub fn run_spec_timed(
+    spec: &ModelSpec,
+    opts: &Options,
+) -> crate::Result<(Report, Vec<(&'static str, u64)>)> {
+    let g = crate::ingest::lower::lower(spec)?;
+    let (mut report, timing) = run_graph_timed(&g, opts);
+    report.attribute(spec);
+    Ok((report, timing))
 }
 
 #[cfg(test)]
@@ -225,6 +266,22 @@ mod tests {
             .find(|d| d.code == Code::ShapeInference)
             .unwrap();
         assert_eq!(da004.node, Some(2));
+    }
+
+    #[test]
+    fn timed_run_reports_every_pass_and_matches_untimed() {
+        let mut g = Graph::new("timed");
+        let x = g.add(OpKind::input(3, 16), &[]);
+        g.add(OpKind::ReLU, &[x]);
+        let opts = Options::for_graph(&g);
+        let (report, timing) = run_graph_timed(&g, &opts);
+        assert_eq!(report.codes(), run_graph(&g, &opts).codes());
+        let names: Vec<&str> = timing.iter().map(|(name, _)| *name).collect();
+        assert_eq!(
+            names,
+            ["shape_walk", "reachability", "attrs", "arith", "device"],
+            "one timing entry per pass, in run order"
+        );
     }
 
     #[test]

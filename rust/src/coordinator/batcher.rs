@@ -15,7 +15,10 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// A queue item carries its enqueue time for latency accounting.
+/// A queue item carries its enqueue time for latency accounting — it
+/// is also what closes a traced request's `queue_wait` span: the span
+/// runs from `enqueued_at` to the instant the batch is drained
+/// (`obs::trace`, recorded by the worker in `handle_batch`).
 pub struct Enqueued<T> {
     pub item: T,
     pub enqueued_at: Instant,

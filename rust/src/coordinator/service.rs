@@ -9,12 +9,13 @@
 
 use super::batcher::{Enqueued, ShardedBatcher};
 use super::request::{PredictRequest, Prediction};
+use crate::obs::{Counter, Gauge, Histogram, Registry, Trace};
 use crate::predictor::{AutoMl, Target};
 use crate::runtime::MlpPredictor;
 use crate::sim::DeviceProfile;
 use crate::util::cache::TtlLru;
 use crate::util::stats;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -169,7 +170,10 @@ struct MetricsInner {
     batch_sizes: Vec<usize>,
 }
 
-type Job = (PredictRequest, u64, Sender<crate::Result<Prediction>>);
+/// One queued prediction: the request, its cache key, the answer
+/// channel, and the (possibly off) request trace — workers record the
+/// `queue_wait` and `inference` spans into it before replying.
+type Job = (PredictRequest, u64, Sender<crate::Result<Prediction>>, Trace);
 
 type PredictionCache = Mutex<TtlLru<u64, (f64, f64)>>;
 
@@ -195,8 +199,11 @@ pub fn fits_device(device: &DeviceProfile, predicted_mem: f64) -> bool {
 struct Worker {
     queue: Arc<ShardedBatcher<Job>>,
     model: Arc<dyn CostModel>,
-    served: Arc<AtomicU64>,
-    errors: Arc<AtomicU64>,
+    served: Arc<Counter>,
+    errors: Arc<Counter>,
+    batches: Arc<Counter>,
+    latency_us: Arc<Histogram>,
+    batch_size_h: Arc<Histogram>,
     in_flight: Arc<AtomicUsize>,
     cache: Option<Arc<PredictionCache>>,
     metrics: Arc<Mutex<MetricsInner>>,
@@ -211,6 +218,9 @@ impl Worker {
 
     fn handle_batch(&self, batch: Vec<Enqueued<Job>>) {
         let size = batch.len();
+        // The drain instant closes every member's queue-wait span: a
+        // request waits from enqueue until its batch leaves the shard.
+        let t_drain = Instant::now();
         // Per-batch local accumulation; counters and latencies are
         // flushed once per drained batch, not once per request.
         let mut local_served = 0u64;
@@ -220,20 +230,25 @@ impl Worker {
         let mut feats = Vec::with_capacity(size);
         let mut ok_jobs = Vec::with_capacity(size);
         for e in batch {
-            let (req, key, tx): Job = e.item;
+            let (req, key, tx, trace): Job = e.item;
             match req.featurize() {
                 Ok(f) => {
                     feats.push(f);
-                    ok_jobs.push((req, key, tx, e.enqueued_at));
+                    ok_jobs.push((req, key, tx, e.enqueued_at, trace));
                 }
                 Err(err) => {
+                    // Error paths drop the trace unfinished — it never
+                    // reaches the ring.
                     local_errors += 1;
                     let _ = tx.send(Err(err));
                 }
             }
         }
         if !feats.is_empty() {
-            match self.model.predict_costs(&feats) {
+            let t_pred = Instant::now();
+            let result = self.model.predict_costs(&feats);
+            let t_done = Instant::now();
+            match result {
                 Ok(costs) => {
                     let ready: Vec<_> = ok_jobs.into_iter().zip(costs).collect();
                     // Fill the cache *before* answering, so a client that
@@ -241,11 +256,11 @@ impl Worker {
                     // request hitting.
                     if let Some(cache) = &self.cache {
                         let mut c = cache.lock().unwrap();
-                        for ((_, key, _, _), (t, m)) in &ready {
+                        for ((_, key, _, _, _), (t, m)) in &ready {
                             c.insert(*key, (*t, *m));
                         }
                     }
-                    for ((req, _, tx, t0), (time_s, mem)) in ready {
+                    for ((req, _, tx, t0, trace), (time_s, mem)) in ready {
                         let latency = t0.elapsed().as_secs_f64();
                         let pred = Prediction {
                             id: req.id,
@@ -256,19 +271,29 @@ impl Worker {
                         };
                         local_served += 1;
                         local_latencies.push(latency);
+                        self.latency_us.record((latency * 1e6) as u64);
+                        // Spans land before the send: the channel's
+                        // happens-before edge publishes them to the net
+                        // loop that finishes the trace. The inference
+                        // span is batch-level — every member shares the
+                        // one predict_costs interval it rode in.
+                        trace.record("queue_wait", t0, t_drain);
+                        trace.record("inference", t_pred, t_done);
                         let _ = tx.send(Ok(pred));
                     }
                 }
                 Err(err) => {
-                    for (_, _, tx, _) in ok_jobs {
+                    for (_, _, tx, _, _) in ok_jobs {
                         local_errors += 1;
                         let _ = tx.send(Err(crate::err!("{BACKEND_ERROR_PREFIX}{err}")));
                     }
                 }
             }
         }
-        self.served.fetch_add(local_served, Ordering::SeqCst);
-        self.errors.fetch_add(local_errors, Ordering::SeqCst);
+        self.served.add(local_served);
+        self.errors.add(local_errors);
+        self.batches.inc();
+        self.batch_size_h.record(size as u64);
         // Every job in the batch has been replied to (prediction,
         // featurize error, or backend error), so release all of the
         // batch's admission slots at once.
@@ -286,22 +311,42 @@ impl Worker {
 pub struct PredictionService {
     queue: Arc<ShardedBatcher<Job>>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    served: Arc<AtomicU64>,
-    errors: Arc<AtomicU64>,
+    served: Arc<Counter>,
+    errors: Arc<Counter>,
+    cache_hits: Arc<Counter>,
+    cache_misses: Arc<Counter>,
+    latency_us: Arc<Histogram>,
     in_flight: Arc<AtomicUsize>,
-    overload_rejected: Arc<AtomicU64>,
+    in_flight_gauge: Arc<Gauge>,
+    steals_gauge: Arc<Gauge>,
+    overload_rejected: Arc<Counter>,
     max_inflight: usize,
     cache: Option<Arc<PredictionCache>>,
     metrics: Arc<Mutex<MetricsInner>>,
+    registry: Arc<Registry>,
 }
 
 impl PredictionService {
     /// Spawn one worker per batcher shard, all sharing the answer cache.
+    /// Each service owns its own metrics [`Registry`] (so concurrent
+    /// services in one process never cross-contaminate); the serving
+    /// layer reaches it through [`PredictionService::registry`]. All
+    /// `svc.*` names are registered here, up front, so a snapshot's key
+    /// set does not depend on which paths traffic happened to hit.
     pub fn start(cfg: ServiceConfig, model: Arc<dyn CostModel>) -> PredictionService {
+        let registry = Arc::new(Registry::new());
         let n_workers = cfg.workers.max(1);
         let queue = Arc::new(ShardedBatcher::new(n_workers, cfg.max_batch, cfg.max_wait));
-        let served = Arc::new(AtomicU64::new(0));
-        let errors = Arc::new(AtomicU64::new(0));
+        let served = registry.counter("svc.served");
+        let errors = registry.counter("svc.errors");
+        let batches = registry.counter("svc.batches");
+        let cache_hits = registry.counter("svc.cache_hits");
+        let cache_misses = registry.counter("svc.cache_misses");
+        let overload_rejected = registry.counter("svc.overload_rejected");
+        let latency_us = registry.histogram("svc.latency_us");
+        let batch_size_h = registry.histogram("svc.batch_size");
+        let in_flight_gauge = registry.gauge("svc.in_flight");
+        let steals_gauge = registry.gauge("svc.steals");
         let in_flight = Arc::new(AtomicUsize::new(0));
         let cache = (cfg.cache_capacity > 0)
             .then(|| Arc::new(Mutex::new(TtlLru::new(cfg.cache_capacity, cfg.cache_ttl))));
@@ -316,6 +361,9 @@ impl PredictionService {
                     model: Arc::clone(&model),
                     served: Arc::clone(&served),
                     errors: Arc::clone(&errors),
+                    batches: Arc::clone(&batches),
+                    latency_us: Arc::clone(&latency_us),
+                    batch_size_h: Arc::clone(&batch_size_h),
                     in_flight: Arc::clone(&in_flight),
                     cache: cache.clone(),
                     metrics: Arc::clone(&metrics),
@@ -331,12 +379,33 @@ impl PredictionService {
             workers,
             served,
             errors,
+            cache_hits,
+            cache_misses,
+            latency_us,
             in_flight,
-            overload_rejected: Arc::new(AtomicU64::new(0)),
+            in_flight_gauge,
+            steals_gauge,
+            overload_rejected,
             max_inflight: cfg.max_inflight,
             cache,
             metrics,
+            registry,
         }
+    }
+
+    /// The service's metrics registry — the serving layer registers its
+    /// `net.*` and `stage.*` names in the same instance so one
+    /// `snapshot()` covers the whole request path.
+    pub fn registry(&self) -> Arc<Registry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// Copy point-in-time values (in-flight requests, shard steals)
+    /// into their registry gauges. Called before a snapshot is taken.
+    pub fn refresh_gauges(&self) {
+        self.in_flight_gauge
+            .set(self.in_flight.load(Ordering::SeqCst) as u64);
+        self.steals_gauge.set(self.queue.steals());
     }
 
     /// Submit a request; the receiver yields the prediction. A cache hit
@@ -344,7 +413,7 @@ impl PredictionService {
     /// Never refuses: in-process callers (experiments, load generators)
     /// provide their own backpressure by waiting on the receivers.
     pub fn submit(&self, req: PredictRequest) -> Receiver<crate::Result<Prediction>> {
-        self.submit_inner(req, false)
+        self.submit_inner(req, false, Trace::off())
             .expect("unbounded submit never refuses")
     }
 
@@ -357,13 +426,26 @@ impl PredictionService {
     /// bypass admission entirely — they are answered inline without
     /// touching a queue.
     pub fn try_submit(&self, req: PredictRequest) -> Option<Receiver<crate::Result<Prediction>>> {
-        self.submit_inner(req, true)
+        self.submit_inner(req, true, Trace::off())
+    }
+
+    /// [`try_submit`](Self::try_submit) with a live request trace: the
+    /// `cache` and `admission` spans are recorded here, and the trace
+    /// rides the job into the batcher where workers add `queue_wait`
+    /// and `inference`. The caller keeps its own clone to finish.
+    pub fn try_submit_traced(
+        &self,
+        req: PredictRequest,
+        trace: Trace,
+    ) -> Option<Receiver<crate::Result<Prediction>>> {
+        self.submit_inner(req, true, trace)
     }
 
     fn submit_inner(
         &self,
         req: PredictRequest,
         bounded: bool,
+        trace: Trace,
     ) -> Option<Receiver<crate::Result<Prediction>>> {
         let (tx, rx) = channel();
         let t0 = Instant::now();
@@ -375,10 +457,15 @@ impl PredictionService {
             0
         };
         if let Some(cache) = &self.cache {
-            // The guard is dropped at the end of this statement, so the
-            // hit path below never holds the cache and metrics locks at
+            // The cache span covers digest + probe. The guard is
+            // dropped at the end of the probe statement, so the hit
+            // path below never holds the cache and metrics locks at
             // the same time.
+            let t_probe = trace.is_on().then(Instant::now);
             let cached = cache.lock().unwrap().get(&key);
+            if let Some(t) = t_probe {
+                trace.record("cache", t, Instant::now());
+            }
             if let Some((time_s, mem)) = cached {
                 let latency = t0.elapsed().as_secs_f64();
                 let pred = Prediction {
@@ -388,12 +475,16 @@ impl PredictionService {
                     fits_device: fits_device(&req.config.device, mem),
                     latency_s: latency,
                 };
-                self.served.fetch_add(1, Ordering::SeqCst);
+                self.served.inc();
+                self.cache_hits.inc();
+                self.latency_us.record((latency * 1e6) as u64);
                 self.metrics.lock().unwrap().latencies.push(latency);
                 let _ = tx.send(Ok(pred));
                 return Some(rx);
             }
+            self.cache_misses.inc();
         }
+        let t_adm = trace.is_on().then(Instant::now);
         if bounded && self.max_inflight > 0 {
             // Reserve a slot atomically; the worker that answers this
             // request releases it in `handle_batch`.
@@ -403,13 +494,18 @@ impl PredictionService {
                     (n < self.max_inflight).then_some(n + 1)
                 });
             if admitted.is_err() {
-                self.overload_rejected.fetch_add(1, Ordering::SeqCst);
+                self.overload_rejected.inc();
+                // The refused request's trace is dropped unfinished —
+                // refusals never reach the ring.
                 return None;
             }
         } else {
             self.in_flight.fetch_add(1, Ordering::SeqCst);
         }
-        self.queue.push((req, key, tx));
+        if let Some(t) = t_adm {
+            trace.record("admission", t, Instant::now());
+        }
+        self.queue.push((req, key, tx, trace));
         Some(rx)
     }
 
@@ -440,17 +536,21 @@ impl PredictionService {
         };
         let inner = self.metrics.lock().unwrap();
         let sizes: Vec<f64> = inner.batch_sizes.iter().map(|&s| s as f64).collect();
+        let [p50, p99] = match stats::quantiles(&inner.latencies, &[0.5, 0.99])[..] {
+            [a, b] => [a, b],
+            _ => [0.0, 0.0],
+        };
         ServiceMetrics {
-            served: self.served.load(Ordering::SeqCst),
-            errors: self.errors.load(Ordering::SeqCst),
+            served: self.served.get(),
+            errors: self.errors.get(),
             batches: inner.batch_sizes.len() as u64,
             cache_hits,
             cache_misses,
             steals: self.queue.steals(),
-            overload_rejected: self.overload_rejected.load(Ordering::SeqCst),
+            overload_rejected: self.overload_rejected.get(),
             in_flight: self.in_flight.load(Ordering::SeqCst) as u64,
-            p50_latency_s: stats::quantile(&inner.latencies, 0.5),
-            p99_latency_s: stats::quantile(&inner.latencies, 0.99),
+            p50_latency_s: p50,
+            p99_latency_s: p99,
             mean_batch_size: stats::mean(&sizes),
         }
     }
@@ -742,6 +842,54 @@ mod tests {
         let m = svc.shutdown();
         assert_eq!(m.cache_hits, 1);
         assert_eq!(m.overload_rejected, 0);
+    }
+
+    #[test]
+    fn registry_counters_mirror_service_metrics() {
+        let svc = PredictionService::start(ServiceConfig::default(), Arc::new(FakeModel));
+        svc.predict(req(1, "resnet18", 64)).unwrap();
+        svc.predict(req(2, "resnet18", 64)).unwrap(); // identical → cache hit
+        svc.refresh_gauges();
+        let reg = svc.registry();
+        // Snapshot after shutdown: worker counter flushes land before
+        // the join, so the registry and ServiceMetrics must agree.
+        let m = svc.shutdown();
+        let snap = reg.snapshot();
+        let c = snap.get("counters").unwrap();
+        assert_eq!(c.num("svc.served").unwrap() as u64, m.served);
+        assert_eq!(c.num("svc.errors").unwrap() as u64, m.errors);
+        assert_eq!(c.num("svc.batches").unwrap() as u64, m.batches);
+        assert_eq!(c.num("svc.cache_hits").unwrap() as u64, m.cache_hits);
+        assert_eq!(c.num("svc.cache_misses").unwrap() as u64, m.cache_misses);
+        assert_eq!(c.num("svc.overload_rejected").unwrap() as u64, m.overload_rejected);
+        let g = snap.get("gauges").unwrap();
+        assert!(g.get("svc.in_flight").is_some());
+        assert!(g.get("svc.steals").is_some());
+        let h = snap.get("histograms").unwrap().get("svc.latency_us").unwrap();
+        assert_eq!(h.num("count").unwrap() as u64, m.served);
+        assert!(
+            snap.get("histograms").unwrap().num("svc.batch_size").is_err(),
+            "batch_size is a histogram object, not a number"
+        );
+    }
+
+    #[test]
+    fn traced_submit_records_pipeline_spans_in_order() {
+        let svc = PredictionService::start(ServiceConfig::default(), Arc::new(FakeModel));
+        let trace = crate::obs::Trace::start(7, Instant::now());
+        let rx = svc
+            .try_submit_traced(req(7, "lenet5", 8), trace.clone())
+            .expect("admitted");
+        rx.recv().unwrap().unwrap();
+        let s = trace.finish().unwrap();
+        let names: Vec<&str> = s.spans.iter().map(|sp| sp.name).collect();
+        assert_eq!(names, vec!["cache", "admission", "queue_wait", "inference"]);
+        for w in s.spans.windows(2) {
+            assert!(w[0].start_us <= w[1].start_us, "spans out of order: {names:?}");
+        }
+        let total: u64 = s.spans.iter().map(|sp| sp.dur_us).sum();
+        assert!(total <= s.wall_us, "stage sum {total} > wall {}", s.wall_us);
+        svc.shutdown();
     }
 
     #[test]

@@ -65,9 +65,11 @@ pub struct FleetReport {
 impl FleetReport {
     /// Fill the queue-wait percentiles from per-job waits (seconds).
     pub fn set_waits(&mut self, waits: &[f64]) {
-        self.wait_p50_s = stats::quantile(waits, 0.5);
-        self.wait_p90_s = stats::quantile(waits, 0.9);
-        self.wait_p99_s = stats::quantile(waits, 0.99);
+        if let [p50, p90, p99] = stats::quantiles(waits, &[0.5, 0.9, 0.99])[..] {
+            self.wait_p50_s = p50;
+            self.wait_p90_s = p90;
+            self.wait_p99_s = p99;
+        }
         self.wait_max_s = stats::max(waits);
     }
 

@@ -36,5 +36,6 @@ pub use cluster::{Cluster, ClusterDevice, MAX_DEVICES};
 pub use metrics::{comparison_table, DeviceReport, FleetReport, Placement};
 pub use policy::{make_policy, DeviceView, PlacementPolicy, PolicyKind, QueuedJob};
 pub use simloop::{
-    job_mix, run, CostSource, FleetJob, ServiceCosts, SimParams, SyntheticCosts, MEM_SAFETY,
+    job_mix, register_metrics, run, run_with_registry, CostSource, FleetJob, ServiceCosts,
+    SimParams, SyntheticCosts, MEM_SAFETY,
 };

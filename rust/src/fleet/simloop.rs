@@ -16,6 +16,7 @@ use super::metrics::{DeviceReport, FleetReport, Placement};
 use super::policy::{DeviceView, PlacementPolicy, QueuedJob};
 use crate::coordinator::{ModelRef, PredictRequest, PredictionService};
 use crate::graph::Graph;
+use crate::obs::Registry;
 use crate::scheduler::{ga, JobCost};
 use crate::sim::{simulate_training, DatasetKind, DeviceProfile, TrainConfig};
 use crate::util::cache::hash64;
@@ -376,12 +377,44 @@ impl Engine<'_> {
 
 /// Run one policy over one job stream against one cluster. Deterministic
 /// for fixed inputs; see the module docs for the simulation model.
+/// Records `fleet.*` metrics into the process-wide
+/// [`crate::obs::global`] registry — use [`run_with_registry`] to
+/// direct them elsewhere (the net server routes them into its own
+/// unified registry).
 pub fn run(
     cluster: &Cluster,
     jobs: &[FleetJob],
     policy: &mut dyn PlacementPolicy,
     costs: &mut dyn CostSource,
     params: &SimParams,
+) -> crate::Result<FleetReport> {
+    run_with_registry(cluster, jobs, policy, costs, params, crate::obs::global())
+}
+
+/// Pre-register every `fleet.*` metric name, so a registry's exported
+/// key set does not depend on whether placement traffic has happened
+/// yet. Idempotent.
+pub fn register_metrics(registry: &Registry) {
+    registry.counter("fleet.runs");
+    registry.counter("fleet.jobs");
+    registry.counter("fleet.placed");
+    registry.counter("fleet.oom_screened");
+    registry.counter("fleet.true_ooms");
+    registry.histogram("fleet.wait_us");
+}
+
+/// [`run`], with the placement counters and the queue-wait histogram
+/// recorded into `registry`: `fleet.runs` / `fleet.jobs` /
+/// `fleet.placed` / `fleet.oom_screened` / `fleet.true_ooms`, plus
+/// `fleet.wait_us` (per-job simulated queue wait, in microseconds of
+/// simulated time).
+pub fn run_with_registry(
+    cluster: &Cluster,
+    jobs: &[FleetJob],
+    policy: &mut dyn PlacementPolicy,
+    costs: &mut dyn CostSource,
+    params: &SimParams,
+    registry: &Registry,
 ) -> crate::Result<FleetReport> {
     crate::ensure!(!cluster.is_empty(), "cannot place jobs on an empty cluster");
     crate::ensure!(
@@ -542,6 +575,18 @@ pub fn run(
         placements: engine.placements,
     };
     report.set_waits(&engine.waits);
+
+    registry.counter("fleet.runs").inc();
+    registry.counter("fleet.jobs").add(report.jobs as u64);
+    registry.counter("fleet.placed").add(report.placed as u64);
+    registry.counter("fleet.oom_screened").add(report.oom_screened as u64);
+    registry
+        .counter("fleet.true_ooms")
+        .add(report.true_oom_placements as u64);
+    let wait_h = registry.histogram("fleet.wait_us");
+    for w in &engine.waits {
+        wait_h.record((w * 1e6) as u64);
+    }
     Ok(report)
 }
 
@@ -691,6 +736,42 @@ mod tests {
         let r = run(&cluster, &jobs, policy.as_mut(), &mut costs, &SimParams::default()).unwrap();
         assert_eq!(r.placed, 1);
         assert_eq!(r.true_oom_placements, 1);
+    }
+
+    #[test]
+    fn run_with_registry_records_fleet_metrics() {
+        let registry = Registry::new();
+        register_metrics(&registry);
+        let cluster = Cluster::parse("rtx2080x2,rtx3090").unwrap();
+        let jobs = synthetic_jobs(10);
+        let mut costs = SyntheticCosts { seed: 3, noise: 0.15 };
+        let mut policy = make_policy(PolicyKind::LeastPredictedFinish, 3);
+        let params = SimParams::default();
+        let r = run_with_registry(
+            &cluster,
+            &jobs,
+            policy.as_mut(),
+            &mut costs,
+            &params,
+            &registry,
+        )
+        .unwrap();
+        let snap = registry.snapshot();
+        let counters = snap.get("counters").unwrap();
+        assert_eq!(counters.num("fleet.runs").unwrap(), 1.0);
+        assert_eq!(counters.num("fleet.jobs").unwrap(), r.jobs as f64);
+        assert_eq!(counters.num("fleet.placed").unwrap(), r.placed as f64);
+        assert_eq!(
+            counters.num("fleet.oom_screened").unwrap(),
+            r.oom_screened as f64
+        );
+        assert_eq!(
+            counters.num("fleet.true_ooms").unwrap(),
+            r.true_oom_placements as f64
+        );
+        // One queue-wait sample per placed job.
+        let wait = snap.get("histograms").unwrap().get("fleet.wait_us").unwrap();
+        assert_eq!(wait.num("count").unwrap(), r.placed as f64);
     }
 
     #[test]

@@ -47,8 +47,13 @@
 //!   (`net::frame::FrameCodec`), a nonblocking readiness-driven event
 //!   loop server (raw `ppoll(2)` poller, admission control,
 //!   per-connection deadlines, graceful drain), a pipelining client
-//!   with typed `WireError` results, and the `schedule` placement
-//!   request kind.
+//!   with typed `WireError` results, and the `schedule` / `metrics`
+//!   request kinds.
+//! * [`obs`] — in-process observability: the unified metrics registry
+//!   (named counters / gauges / log-linear histograms with one
+//!   `snapshot()` export), sampled request-lifecycle tracing spans,
+//!   and the bounded ring of recent traces behind the `metrics` wire
+//!   request and the `stats` CLI.
 //! * [`scheduler`] — the §4.3 genetic-algorithm job scheduler,
 //!   generalized to N machines.
 //! * [`fleet`] — prediction-driven online cluster placement: policies
@@ -83,6 +88,8 @@ pub mod graph;
 pub mod ingest;
 #[allow(clippy::arithmetic_side_effects)]
 pub mod net;
+#[allow(clippy::arithmetic_side_effects)]
+pub mod obs;
 #[allow(clippy::arithmetic_side_effects)]
 pub mod predictor;
 #[allow(clippy::arithmetic_side_effects)]

@@ -27,6 +27,9 @@
 //!   fleet           place a streaming job mix onto an N-device cluster
 //!                   with predicted costs (--devices, --jobs, --policy,
 //!                   --arrival-rate, --specs DIR, --json)
+//!   stats           render the unified metrics snapshot: scrape a live
+//!                   server (--addr HOST:PORT, --watch SECS) or run a
+//!                   seeded local load and report it (--json, --last K)
 //!   nsm-demo        print the NSM of a model (paper Figures 6-7)
 //!
 //! Common flags: --scale 0.35 --seed 42 --out dir --model vgg16
@@ -43,9 +46,16 @@
 //!                --max-frame BYTES (request payload cap, default 4 MiB)
 //!                --frame-deadline-ms 10000 (slow-loris/stalled-peer cap)
 //!                --serve-requests N (answer N requests, drain, exit)
+//!                --trace-sample N (trace 1-in-N predicts; default 1,
+//!                0 disables request-lifecycle tracing)
 //!
 //! `client` flags: --addr HOST:PORT --count N (pipelined repeats)
 //!                 plus the common config flags, forwarded per request
+//!
+//! `stats` flags:  --addr HOST:PORT (scrape a live server; otherwise a
+//!                 seeded local run) --watch SECS (re-scrape forever)
+//!                 --last K (trace summaries to fetch, default 8)
+//!                 --requests N (local-run load size, default 96) --json
 //!
 //! `fleet` flags:  --devices rtx2080x2,rtx3090 --jobs 20
 //!                 --policy first-fit|best-fit-memory|least-finish|ga|all
@@ -76,6 +86,7 @@ use dnnabacus::fleet;
 use dnnabacus::graph::Graph;
 use dnnabacus::ingest::{self, ParsedSpec};
 use dnnabacus::net::{self, WireModel, WireRequest, WireResponse};
+use dnnabacus::obs;
 use dnnabacus::predictor::{AutoMl, Target};
 use dnnabacus::sim::{DatasetKind, TrainConfig};
 use dnnabacus::util::cli::Args;
@@ -101,6 +112,7 @@ fn main() {
         Some("serve") => serve(&args),
         Some("client") => client(&args),
         Some("fleet") => fleet(&args),
+        Some("stats") => stats(&args),
         Some("nsm-demo") => nsm_demo(&args),
         Some(cmd) => run_experiment(cmd, &args),
         None => {
@@ -285,7 +297,8 @@ fn lint(args: &Args) -> dnnabacus::Result<()> {
         Some(b) => opts.with_batch(b),
         None => opts,
     };
-    let mut targets: Vec<(String, analyze::Report)> = Vec::new();
+    type Timing = Vec<(&'static str, u64)>;
+    let mut targets: Vec<(String, analyze::Report, Timing)> = Vec::new();
     if let Some(path) = spec_path {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
         let spec = ingest::ModelSpec::parse_str(&text).with_context(|| format!("spec {path}"))?;
@@ -293,8 +306,9 @@ fn lint(args: &Args) -> dnnabacus::Result<()> {
             spec.input.channels,
             spec.input.hw,
         ));
-        let report = analyze::run_spec(&spec, &opts).with_context(|| format!("spec {path}"))?;
-        targets.push((path.to_string(), report));
+        let (report, timing) =
+            analyze::run_spec_timed(&spec, &opts).with_context(|| format!("spec {path}"))?;
+        targets.push((path.to_string(), report, timing));
     } else {
         let model = args.str_or("model", "all");
         let names: Vec<String> = match model.as_str() {
@@ -304,22 +318,28 @@ fn lint(args: &Args) -> dnnabacus::Result<()> {
         for name in names {
             let g = zoo::build(&name, 3, 100)?;
             let opts = with_batch(analyze::Options::for_graph(&g));
-            let report = analyze::run_graph(&g, &opts);
-            targets.push((name, report));
+            let (report, timing) = analyze::run_graph_timed(&g, &opts);
+            targets.push((name, report, timing));
         }
     }
     let errors: usize = targets
         .iter()
-        .map(|(_, r)| r.count(analyze::Severity::Error))
+        .map(|(_, r, _)| r.count(analyze::Severity::Error))
         .sum();
     let warnings: usize = targets
         .iter()
-        .map(|(_, r)| r.count(analyze::Severity::Warn))
+        .map(|(_, r, _)| r.count(analyze::Severity::Warn))
         .sum();
     if args.bool("json") {
         let rows: Vec<Json> = targets
             .iter()
-            .map(|(name, r)| {
+            .map(|(name, r, timing)| {
+                // Per-pass wall microseconds, measured through the same
+                // obs span machinery the server's request traces use.
+                let mut passes = Json::obj();
+                for (pass, us) in timing {
+                    passes.set(*pass, *us);
+                }
                 let mut t = Json::obj();
                 t.set("target", name.as_str())
                     .set(
@@ -327,7 +347,8 @@ fn lint(args: &Args) -> dnnabacus::Result<()> {
                         Json::Arr(r.diagnostics.iter().map(|d| d.to_json()).collect()),
                     )
                     .set("errors", r.count(analyze::Severity::Error))
-                    .set("warnings", r.count(analyze::Severity::Warn));
+                    .set("warnings", r.count(analyze::Severity::Warn))
+                    .set("timing", passes);
                 t
             })
             .collect();
@@ -337,7 +358,7 @@ fn lint(args: &Args) -> dnnabacus::Result<()> {
             .set("warnings", warnings);
         println!("{o}");
     } else {
-        for (name, r) in &targets {
+        for (name, r, _) in &targets {
             if r.is_empty() {
                 println!("{name}: clean");
             } else {
@@ -557,6 +578,7 @@ fn serve_listen(args: &Args) -> dnnabacus::Result<()> {
             "frame-deadline-ms",
             defaults.frame_deadline.as_millis() as u64,
         )))
+        .trace_sample(args.u64_or("trace-sample", defaults.trace_sample))
         .start(&addr, svc)?;
     println!("listening on {} ({})", server.local_addr(), net::WIRE_FORMAT);
     // Stdout is block-buffered when redirected; the CI smoke greps this
@@ -577,6 +599,9 @@ fn serve_listen(args: &Args) -> dnnabacus::Result<()> {
     while server.answered() < budget {
         std::thread::sleep(Duration::from_millis(10));
     }
+    // The unified snapshot must be read before shutdown tears the
+    // service (and its registry's gauge sources) down.
+    let snapshot = server.snapshot();
     let (wire, m) = server.shutdown();
     if args.bool("json") {
         let mut w = Json::obj();
@@ -598,7 +623,7 @@ fn serve_listen(args: &Args) -> dnnabacus::Result<()> {
             .set("p50_latency_s", m.p50_latency_s)
             .set("p99_latency_s", m.p99_latency_s);
         let mut o = Json::obj();
-        o.set("wire", w).set("service", s);
+        o.set("wire", w).set("service", s).set("metrics", snapshot);
         println!("{o}");
     } else {
         println!(
@@ -700,10 +725,13 @@ fn client(args: &Args) -> dnnabacus::Result<()> {
                         }
                     }
                 }
-                // `client` only sends predict requests; a schedule
-                // reply would be a server bug — surface it raw.
+                // `client` only sends predict requests; a schedule or
+                // metrics reply would be a server bug — surface it raw.
                 WireResponse::Schedule { id, report } => {
                     println!("request {id}: unexpected schedule report {report}")
+                }
+                WireResponse::Metrics { id, snapshot, .. } => {
+                    println!("request {id}: unexpected metrics snapshot {snapshot}")
                 }
                 WireResponse::Err { id, kind, message } => {
                     eprintln!("request {id}: {} — {message}", kind.as_str())
@@ -745,6 +773,10 @@ fn fleet(args: &Args) -> dnnabacus::Result<()> {
         println!("backend: {}", backend.name());
     }
     let svc = PredictionService::start(service_config(args), backend);
+    // Fleet counters ride the service's registry so the `--json`
+    // snapshot is the same unified key set `serve --json` emits.
+    let registry = svc.registry();
+    fleet::register_metrics(&registry);
     let mut costs = fleet::ServiceCosts::new(&svc);
     let params = fleet::SimParams {
         seed: ctx.seed,
@@ -754,16 +786,19 @@ fn fleet(args: &Args) -> dnnabacus::Result<()> {
     let mut reports = Vec::with_capacity(kinds.len());
     for kind in kinds {
         let mut policy = fleet::make_policy(kind, ctx.seed);
-        reports.push(fleet::run(
+        reports.push(fleet::run_with_registry(
             &cluster,
             &jobs,
             policy.as_mut(),
             &mut costs,
             &params,
+            &registry,
         )?);
     }
     // `costs` borrows the service; release it before the move-out drain.
     drop(costs);
+    svc.refresh_gauges();
+    let snapshot = registry.snapshot();
     let m = svc.shutdown();
     if json {
         let mut o = Json::obj();
@@ -776,7 +811,8 @@ fn fleet(args: &Args) -> dnnabacus::Result<()> {
             .set(
                 "reports",
                 Json::Arr(reports.iter().map(fleet::FleetReport::to_json).collect()),
-            );
+            )
+            .set("metrics", snapshot);
         println!("{o}");
     } else {
         for r in &reports {
@@ -791,6 +827,131 @@ fn fleet(args: &Args) -> dnnabacus::Result<()> {
         );
     }
     Ok(())
+}
+
+/// `stats`: render the unified observability snapshot. With `--addr` it
+/// scrapes a running `serve --listen` server through the wire `metrics`
+/// request (`--watch SECS` re-scrapes forever, clearing the screen
+/// between rounds); without it, a short seeded Zipf load runs through an
+/// in-process server — the same real-socket path — and its snapshot is
+/// reported.
+fn stats(args: &Args) -> dnnabacus::Result<()> {
+    let json = args.bool("json");
+    let last = args.usize_or("last", net::proto::DEFAULT_METRICS_LAST);
+    if let Some(addr) = args.get("addr") {
+        let watch: Option<u64> = args
+            .get("watch")
+            .map(|s| {
+                s.parse()
+                    .map_err(|_| dnnabacus::err!("--watch expects seconds, got '{s}'"))
+            })
+            .transpose()?;
+        let mut client = net::Client::connect(addr)?;
+        let mut scrape_id = 0u64;
+        loop {
+            let (snapshot, traces) = match client.metrics(scrape_id, last)? {
+                WireResponse::Metrics {
+                    snapshot, traces, ..
+                } => (snapshot, traces),
+                other => dnnabacus::bail!("expected a metrics reply, got {}", other.to_json()),
+            };
+            if json {
+                let mut o = Json::obj();
+                o.set("snapshot", snapshot).set("traces", Json::Arr(traces));
+                println!("{o}");
+            } else {
+                if watch.is_some() {
+                    // ANSI clear + home: a poor man's dashboard.
+                    print!("\x1b[2J\x1b[H");
+                }
+                print_stats_text(&snapshot, &traces);
+            }
+            std::io::stdout().flush()?;
+            match watch {
+                Some(secs) => std::thread::sleep(Duration::from_secs(secs.max(1))),
+                None => return Ok(()),
+            }
+            scrape_id += 1;
+        }
+    }
+    // Local mode: drive a seeded load through an in-process server over
+    // a real socket with every request traced, then scrape it exactly
+    // the way the remote path would.
+    let mut ctx = ctx_from(args);
+    if args.get("scale").is_none() {
+        // A quick demo corpus; prediction quality is not the point here.
+        ctx.scale = 0.05;
+    }
+    let backend = backend_from(args, &ctx)?;
+    eprintln!(
+        "backend: {} (local run; pass --addr to scrape a live server)",
+        backend.name()
+    );
+    let svc = PredictionService::start(service_config(args), backend);
+    let server = net::Server::builder()
+        .trace_sample(1)
+        .start("127.0.0.1:0", svc)?;
+    let n = args.usize_or("requests", 96);
+    let names: Vec<&str> = zoo::CLASSIC_29.iter().map(|(name, _)| *name).collect();
+    let batches = [32usize, 64, 128, 256];
+    let mut rng = Rng::new(ctx.seed);
+    let requests: Vec<WireRequest> = (0..n)
+        .map(|i| {
+            WireRequest::zoo(i as u64, names[rng.zipf(names.len())])
+                .with("batch", batches[rng.zipf(batches.len())] as u64)
+        })
+        .collect();
+    let mut client = net::Client::connect(&server.local_addr().to_string())?;
+    let responses = client.call_many(&requests)?;
+    let failed = responses.iter().filter(|r| !r.is_ok()).count();
+    let (snapshot, traces) = match client.metrics(n as u64, last)? {
+        WireResponse::Metrics {
+            snapshot, traces, ..
+        } => (snapshot, traces),
+        other => dnnabacus::bail!("expected a metrics reply, got {}", other.to_json()),
+    };
+    drop(client);
+    let _ = server.shutdown();
+    if json {
+        let mut o = Json::obj();
+        o.set("requests", n)
+            .set("failed", failed)
+            .set("snapshot", snapshot)
+            .set("traces", Json::Arr(traces));
+        println!("{o}");
+    } else {
+        print_stats_text(&snapshot, &traces);
+    }
+    dnnabacus::ensure!(failed == 0, "{failed}/{n} local requests failed");
+    Ok(())
+}
+
+/// Human rendering of one metrics scrape: the registry tables plus one
+/// line per recent trace (stage name and microseconds, in span order).
+fn print_stats_text(snapshot: &Json, traces: &[Json]) {
+    print!("{}", obs::render_snapshot(snapshot));
+    if traces.is_empty() {
+        return;
+    }
+    println!("recent traces ({}):", traces.len());
+    for t in traces {
+        let id = t.get("trace_id").and_then(Json::as_str).unwrap_or("?");
+        let wall = t.get("wall_us").and_then(Json::as_f64).unwrap_or(0.0);
+        let spans: Vec<String> = match t.get("spans") {
+            Some(Json::Arr(spans)) => spans
+                .iter()
+                .map(|s| {
+                    format!(
+                        "{} {:.0}us",
+                        s.get("name").and_then(Json::as_str).unwrap_or("?"),
+                        s.get("dur_us").and_then(Json::as_f64).unwrap_or(0.0)
+                    )
+                })
+                .collect(),
+            _ => Vec::new(),
+        };
+        println!("  {id}  wall {wall:.0}us  {}", spans.join(" | "));
+    }
 }
 
 /// Config overrides for wire requests, from explicitly-passed CLI flags

@@ -204,6 +204,19 @@ impl Client {
         self.with_retry(move |c| c.round(id, &body))
     }
 
+    /// Scrape the server's unified metrics snapshot plus its `last`
+    /// most recent trace summaries (a [`WireResponse::Metrics`]).
+    /// Read-only and side-effect free, so the usual transport retry
+    /// applies.
+    pub fn metrics(&mut self, id: u64, last: usize) -> WireResult<WireResponse> {
+        let mut body = Json::obj();
+        body.set("format", super::proto::WIRE_FORMAT);
+        body.set("kind", "metrics");
+        body.set("id", id);
+        body.set("last", last as u64);
+        self.with_retry(move |c| c.round(id, &body))
+    }
+
     /// Pipeline a wave: write every request, then read every response
     /// (split internally into [`PIPELINE_WINDOW`]-sized windows so an
     /// arbitrarily large wave cannot deadlock on full TCP buffers).

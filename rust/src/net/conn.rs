@@ -52,6 +52,10 @@ pub enum PendingReply {
         /// specs only), attached to the `Ok` response when it resolves.
         diagnostics: Vec<crate::util::json::Json>,
         rx: Receiver<crate::Result<Prediction>>,
+        /// The request's lifecycle trace (off unless sampled). The loop
+        /// records the `reply` span and finishes it into the trace ring
+        /// when the response is queued.
+        trace: crate::obs::Trace,
     },
     /// A `schedule` call offloaded to the placement pool; the worker
     /// sends the finished response.

@@ -17,13 +17,21 @@
 //! but no `device`: the fleet assigns devices). The reply carries the
 //! full placement report.
 //!
+//! A **metrics** request (`"kind":"metrics"`) asks the server for its
+//! observability state: the unified registry snapshot (counters,
+//! gauges, per-stage latency histograms) plus the last `last` (≤ ring
+//! capacity) completed trace summaries. It is answered synchronously
+//! on the event loop — introspection must work even while the
+//! prediction pipeline is saturated.
+//!
 //! A response mirrors the CLI's `--json` output: `{"ok":true, "id":…,
 //! "model":…, "prediction":{…}}` on success (or `{"ok":true, "id":…,
-//! "kind":"schedule", "report":{…}}` for placements), or
-//! `{"ok":false, "id":…, "error":{"kind":…, "message":…}}` with a
-//! machine-readable [`ErrorKind`]. Every decode failure maps to a
-//! `bad_request` reply on the server side — a malformed body must never
-//! cost a client its connection.
+//! "kind":"schedule", "report":{…}}` for placements, or `{"ok":true,
+//! "id":…, "kind":"metrics", "snapshot":{…}, "traces":[…]}` for
+//! scrapes), or `{"ok":false, "id":…, "error":{"kind":…, "message":…}}`
+//! with a machine-readable [`ErrorKind`]. Every decode failure maps to
+//! a `bad_request` reply on the server side — a malformed body must
+//! never cost a client its connection.
 
 use crate::coordinator::{ModelRef, PredictRequest, Prediction};
 use crate::fleet::{Cluster, FleetJob, PolicyKind};
@@ -168,12 +176,27 @@ impl ScheduleRequest {
     }
 }
 
-/// Either kind of decoded request — what the server dispatches on.
+/// Any kind of decoded request — what the server dispatches on.
 #[derive(Debug, Clone)]
 pub enum WireCall {
     Predict(PredictRequest),
     Schedule(ScheduleCall),
+    Metrics(MetricsCall),
 }
+
+/// A decoded `metrics` request: scrape the registry snapshot and the
+/// last `last` completed traces.
+#[derive(Debug, Clone)]
+pub struct MetricsCall {
+    pub id: u64,
+    /// How many recent trace summaries to return (clamped to the trace
+    /// ring's capacity at parse time).
+    pub last: usize,
+}
+
+/// Default trace-summary count for a `metrics` request without an
+/// explicit `last` field.
+pub const DEFAULT_METRICS_LAST: usize = 8;
 
 /// A decoded, server-ready `schedule` request.
 #[derive(Debug, Clone)]
@@ -203,7 +226,10 @@ pub fn parse_call(doc: &Json) -> crate::Result<WireCall> {
         Some(k) => match k.as_str() {
             Some("predict") => Ok(WireCall::Predict(parse_request(doc)?)),
             Some("schedule") => Ok(WireCall::Schedule(parse_schedule(doc)?)),
-            Some(other) => crate::bail!("unknown request kind '{other}' (predict|schedule)"),
+            Some("metrics") => Ok(WireCall::Metrics(parse_metrics(doc)?)),
+            Some(other) => {
+                crate::bail!("unknown request kind '{other}' (predict|schedule|metrics)")
+            }
             None => crate::bail!("'kind' must be a string"),
         },
     }
@@ -396,6 +422,24 @@ fn parse_schedule(doc: &Json) -> crate::Result<ScheduleCall> {
     })
 }
 
+/// Decode a metrics-kind body into a [`MetricsCall`].
+fn parse_metrics(doc: &Json) -> crate::Result<MetricsCall> {
+    let Json::Obj(fields) = doc else {
+        crate::bail!("request must be a JSON object");
+    };
+    for key in fields.keys() {
+        if !matches!(key.as_str(), "format" | "kind" | "id" | "last") {
+            crate::bail!("unknown metrics field '{key}'");
+        }
+    }
+    let id = exact_u64_field(doc, "id", 0)?;
+    let last = exact_u64_field(doc, "last", DEFAULT_METRICS_LAST as u64)?;
+    Ok(MetricsCall {
+        id,
+        last: (last as usize).min(crate::obs::TRACE_RING_CAP),
+    })
+}
+
 /// One entry of a schedule request's `jobs` array: a predict-shaped
 /// body minus `format`/`kind`/`id` — and minus `device`, because the
 /// fleet assigns devices.
@@ -559,6 +603,14 @@ pub enum WireResponse {
     /// A `schedule` request's placement report (the
     /// [`crate::fleet::FleetReport`] JSON shape).
     Schedule { id: u64, report: Json },
+    /// A `metrics` scrape: the registry snapshot plus the last-K
+    /// completed trace summaries ([`crate::obs::TraceSummary::to_json`]
+    /// shapes, oldest first).
+    Metrics {
+        id: u64,
+        snapshot: Json,
+        traces: Vec<Json>,
+    },
     Err {
         /// Echo of the request id (0 when the request was unparseable).
         id: u64,
@@ -597,6 +649,7 @@ impl WireResponse {
         match self {
             WireResponse::Ok { prediction, .. } => prediction.id,
             WireResponse::Schedule { id, .. } => *id,
+            WireResponse::Metrics { id, .. } => *id,
             WireResponse::Err { id, .. } => *id,
         }
     }
@@ -634,6 +687,17 @@ impl WireResponse {
                     .set("kind", "schedule")
                     .set("report", report.clone());
             }
+            WireResponse::Metrics {
+                id,
+                snapshot,
+                traces,
+            } => {
+                o.set("ok", true)
+                    .set("id", *id)
+                    .set("kind", "metrics")
+                    .set("snapshot", snapshot.clone())
+                    .set("traces", Json::Arr(traces.clone()));
+            }
             WireResponse::Err { id, kind, message } => {
                 let mut e = Json::obj();
                 e.set("kind", kind.as_str()).set("message", message.as_str());
@@ -658,6 +722,20 @@ impl WireResponse {
                 return Ok(WireResponse::Schedule {
                     id,
                     report: report.clone(),
+                });
+            }
+            if doc.get("kind").and_then(Json::as_str) == Some("metrics") {
+                let snapshot = doc
+                    .get("snapshot")
+                    .ok_or_else(|| crate::err!("metrics response missing 'snapshot'"))?;
+                let traces = doc
+                    .get("traces")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| crate::err!("metrics response missing 'traces' array"))?;
+                return Ok(WireResponse::Metrics {
+                    id,
+                    snapshot: snapshot.clone(),
+                    traces: traces.to_vec(),
                 });
             }
             let model = doc.str("model")?.to_string();
@@ -941,6 +1019,66 @@ mod tests {
         let doc = Json::parse(r#"{"kind":"schedule","jobs":[{"model":"a"},{"nope":1}]}"#).unwrap();
         let e = format!("{:#}", parse_call(&doc).unwrap_err());
         assert!(e.contains("jobs[1]"), "{e}");
+    }
+
+    #[test]
+    fn metrics_request_roundtrips_through_parse_call() {
+        let doc = Json::parse(r#"{"kind":"metrics","id":5,"last":3}"#).unwrap();
+        let WireCall::Metrics(call) = parse_call(&doc).unwrap() else {
+            panic!("expected a metrics call");
+        };
+        assert_eq!(call.id, 5);
+        assert_eq!(call.last, 3);
+        // Defaults: id 0, DEFAULT_METRICS_LAST summaries.
+        let bare = Json::parse(r#"{"kind":"metrics"}"#).unwrap();
+        let WireCall::Metrics(call) = parse_call(&bare).unwrap() else {
+            panic!("expected a metrics call");
+        };
+        assert_eq!(call.id, 0);
+        assert_eq!(call.last, DEFAULT_METRICS_LAST);
+        // `last` clamps to the ring capacity instead of over-asking.
+        let big = Json::parse(r#"{"kind":"metrics","last":100000}"#).unwrap();
+        let WireCall::Metrics(call) = parse_call(&big).unwrap() else {
+            panic!("expected a metrics call");
+        };
+        assert_eq!(call.last, crate::obs::TRACE_RING_CAP);
+        // Strict field set, same policy as the other kinds.
+        let bad = Json::parse(r#"{"kind":"metrics","model":"a"}"#).unwrap();
+        let e = parse_call(&bad).unwrap_err().to_string();
+        assert!(e.contains("unknown metrics field"), "{e}");
+    }
+
+    #[test]
+    fn metrics_responses_roundtrip() {
+        let reg = crate::obs::Registry::new();
+        reg.counter("net.answered").add(3);
+        reg.histogram("stage.decode_us").record(42);
+        let trace = crate::obs::Trace::forced(11);
+        let summary = trace.finish().unwrap();
+        let resp = WireResponse::Metrics {
+            id: 21,
+            snapshot: reg.snapshot(),
+            traces: vec![summary.to_json()],
+        };
+        assert!(resp.is_ok());
+        assert_eq!(resp.id(), 21);
+        let back = WireResponse::from_json(&Json::parse(&resp.to_json().to_string()).unwrap());
+        match back.unwrap() {
+            WireResponse::Metrics {
+                id,
+                snapshot,
+                traces,
+            } => {
+                assert_eq!(id, 21);
+                let c = snapshot.get("counters").unwrap();
+                assert_eq!(c.num("net.answered").unwrap(), 3.0);
+                let h = snapshot.get("histograms").unwrap().get("stage.decode_us");
+                assert_eq!(h.unwrap().num("count").unwrap(), 1.0);
+                assert_eq!(traces.len(), 1);
+                assert_eq!(traces[0].num("request_id").unwrap(), 11.0);
+            }
+            other => panic!("expected Metrics, got {other:?}"),
+        }
     }
 
     #[test]

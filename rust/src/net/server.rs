@@ -30,6 +30,16 @@
 //! connection keeps being served until it goes idle for one poll
 //! window), then stop the service and flush both metric sets to the
 //! caller.
+//!
+//! Observability: every wire counter lives in the service's
+//! [`crate::obs::Registry`] under a `net.*` name (one name, one export
+//! path — `serve --json`, the `metrics` wire request, and the `stats`
+//! CLI all render the same snapshot). Predict requests are sampled
+//! 1-in-[`ServerConfig::trace_sample`] into lifecycle traces: the loop
+//! records the `decode` and `reply` spans, the service records
+//! `cache`/`admission`, the workers `queue_wait`/`inference`; finished
+//! traces feed the per-stage `stage.*_us` histograms and the bounded
+//! trace ring the `metrics` request reads back.
 
 use super::conn::{Conn, PendingReply};
 use super::error::WireError;
@@ -38,11 +48,12 @@ use super::poll;
 use super::proto::{self, ErrorKind, WireResponse};
 use crate::coordinator::{PredictionService, ServiceMetrics};
 use crate::fleet;
+use crate::obs::{Counter, Gauge, Histogram, Registry, Sampler, Trace, TraceRing, TraceSummary};
 use crate::util::error::Context as _;
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 use std::net::{SocketAddr, TcpListener};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -80,6 +91,13 @@ pub struct ServerConfig {
     /// Threads for CPU-bound `schedule` (fleet placement) calls, kept
     /// off the event loop so placement never stalls socket I/O.
     pub sched_workers: usize,
+    /// Trace one in every `trace_sample` predict requests through the
+    /// full request lifecycle (decode → cache → admission → queue wait
+    /// → inference → reply). `1` traces everything, `0` disables
+    /// tracing entirely. Sampling is deterministic (a counter, not a
+    /// coin flip), so N requests at sample rate `s` yield exactly
+    /// `ceil(N / s)` traces.
+    pub trace_sample: u64,
 }
 
 impl Default for ServerConfig {
@@ -90,6 +108,7 @@ impl Default for ServerConfig {
             poll: Duration::from_millis(25),
             frame_deadline: frame::MID_FRAME_DEADLINE,
             sched_workers: 2,
+            trace_sample: 1,
         }
     }
 }
@@ -169,6 +188,12 @@ impl ServerBuilder {
         self
     }
 
+    /// Trace one in every `n` predict requests (0 disables tracing).
+    pub fn trace_sample(mut self, n: u64) -> ServerBuilder {
+        self.cfg.trace_sample = n;
+        self
+    }
+
     /// Validate and return the finished configuration.
     pub fn config(self) -> crate::Result<ServerConfig> {
         self.cfg.validate()?;
@@ -209,35 +234,94 @@ pub struct NetMetrics {
     pub schedules: u64,
 }
 
+/// The six per-stage duration histograms every finished trace feeds,
+/// resolved once at startup so the hot path records without a registry
+/// map lookup. Stage names match the span names the pipeline emits.
+struct StageHists {
+    decode: Arc<Histogram>,
+    cache: Arc<Histogram>,
+    admission: Arc<Histogram>,
+    queue_wait: Arc<Histogram>,
+    inference: Arc<Histogram>,
+    reply: Arc<Histogram>,
+}
+
+impl StageHists {
+    fn new(registry: &Registry) -> StageHists {
+        StageHists {
+            decode: registry.histogram("stage.decode_us"),
+            cache: registry.histogram("stage.cache_us"),
+            admission: registry.histogram("stage.admission_us"),
+            queue_wait: registry.histogram("stage.queue_wait_us"),
+            inference: registry.histogram("stage.inference_us"),
+            reply: registry.histogram("stage.reply_us"),
+        }
+    }
+
+    fn record(&self, stage: &str, dur_us: u64) {
+        match stage {
+            "decode" => self.decode.record(dur_us),
+            "cache" => self.cache.record(dur_us),
+            "admission" => self.admission.record(dur_us),
+            "queue_wait" => self.queue_wait.record(dur_us),
+            "inference" => self.inference.record(dur_us),
+            "reply" => self.reply.record(dur_us),
+            _ => {}
+        }
+    }
+}
+
 struct Shared {
     svc: PredictionService,
     cfg: ServerConfig,
     draining: AtomicBool,
     active_conns: AtomicUsize,
-    peak_conns: AtomicU64,
-    connections: AtomicU64,
-    conns_rejected: AtomicU64,
-    requests: AtomicU64,
-    answered: AtomicU64,
-    overloaded: AtomicU64,
-    bad_requests: AtomicU64,
-    io_errors: AtomicU64,
-    schedules: AtomicU64,
+    /// The service's registry — one namespace for `svc.*`, `net.*`,
+    /// `stage.*`, and `fleet.*` metrics, so every export surface
+    /// renders the same snapshot.
+    registry: Arc<Registry>,
+    sampler: Sampler,
+    ring: TraceRing,
+    stages: StageHists,
+    peak_conns: Arc<Gauge>,
+    connections: Arc<Counter>,
+    conns_rejected: Arc<Counter>,
+    requests: Arc<Counter>,
+    answered: Arc<Counter>,
+    overloaded: Arc<Counter>,
+    bad_requests: Arc<Counter>,
+    io_errors: Arc<Counter>,
+    schedules: Arc<Counter>,
 }
 
 impl Shared {
     fn net_metrics(&self) -> NetMetrics {
         NetMetrics {
-            connections: self.connections.load(Ordering::SeqCst),
-            conns_rejected: self.conns_rejected.load(Ordering::SeqCst),
-            peak_conns: self.peak_conns.load(Ordering::SeqCst),
-            requests: self.requests.load(Ordering::SeqCst),
-            answered: self.answered.load(Ordering::SeqCst),
-            overloaded: self.overloaded.load(Ordering::SeqCst),
-            bad_requests: self.bad_requests.load(Ordering::SeqCst),
-            io_errors: self.io_errors.load(Ordering::SeqCst),
-            schedules: self.schedules.load(Ordering::SeqCst),
+            connections: self.connections.get(),
+            conns_rejected: self.conns_rejected.get(),
+            peak_conns: self.peak_conns.get(),
+            requests: self.requests.get(),
+            answered: self.answered.get(),
+            overloaded: self.overloaded.get(),
+            bad_requests: self.bad_requests.get(),
+            io_errors: self.io_errors.get(),
+            schedules: self.schedules.get(),
         }
+    }
+
+    /// Fold a finished trace into the per-stage histograms and the
+    /// recent-trace ring (the `metrics` wire request reads both back).
+    fn observe_trace(&self, summary: TraceSummary) {
+        for span in &summary.spans {
+            self.stages.record(span.name, span.dur_us);
+        }
+        self.ring.push(summary);
+    }
+
+    /// Refresh point-in-time gauges and snapshot the registry.
+    fn snapshot(&self) -> Json {
+        self.svc.refresh_gauges();
+        self.registry.snapshot()
     }
 }
 
@@ -267,20 +351,30 @@ impl Server {
             .set_nonblocking(true)
             .context("making the listener nonblocking")?;
         let local = listener.local_addr()?;
+        // Join the service's registry so `svc.*` and `net.*` live in
+        // one namespace. Every counter is registered up front — the
+        // exported key set is fixed at startup, not a function of
+        // which code paths traffic happened to exercise.
+        let registry = svc.registry();
+        fleet::register_metrics(&registry);
         let shared = Arc::new(Shared {
+            sampler: Sampler::new(cfg.trace_sample),
+            ring: TraceRing::default(),
+            stages: StageHists::new(&registry),
+            peak_conns: registry.gauge("net.peak_conns"),
+            connections: registry.counter("net.connections"),
+            conns_rejected: registry.counter("net.conns_rejected"),
+            requests: registry.counter("net.requests"),
+            answered: registry.counter("net.answered"),
+            overloaded: registry.counter("net.overloaded"),
+            bad_requests: registry.counter("net.bad_requests"),
+            io_errors: registry.counter("net.io_errors"),
+            schedules: registry.counter("net.schedules"),
+            registry,
             svc,
             cfg,
             draining: AtomicBool::new(false),
             active_conns: AtomicUsize::new(0),
-            peak_conns: AtomicU64::new(0),
-            connections: AtomicU64::new(0),
-            conns_rejected: AtomicU64::new(0),
-            requests: AtomicU64::new(0),
-            answered: AtomicU64::new(0),
-            overloaded: AtomicU64::new(0),
-            bad_requests: AtomicU64::new(0),
-            io_errors: AtomicU64::new(0),
-            schedules: AtomicU64::new(0),
         });
         let event_loop = {
             let shared = Arc::clone(&shared);
@@ -303,7 +397,7 @@ impl Server {
     /// Responses queued so far — lets a caller serve a fixed request
     /// budget and then drain.
     pub fn answered(&self) -> u64 {
-        self.shared.answered.load(Ordering::SeqCst)
+        self.shared.answered.get()
     }
 
     /// Connections currently holding a serving slot.
@@ -314,6 +408,19 @@ impl Server {
     /// Snapshot of the wire-level counters.
     pub fn net_metrics(&self) -> NetMetrics {
         self.shared.net_metrics()
+    }
+
+    /// The unified metrics registry (shared with the service), for
+    /// callers that attach their own instruments or render snapshots
+    /// out of band (benches, `serve --json`).
+    pub fn registry(&self) -> Arc<Registry> {
+        Arc::clone(&self.shared.registry)
+    }
+
+    /// Refresh gauges and snapshot the unified registry — the same
+    /// document the `metrics` wire request returns.
+    pub fn snapshot(&self) -> Json {
+        self.shared.snapshot()
     }
 
     /// Graceful drain: stop accepting, finish every request already on
@@ -430,17 +537,17 @@ fn accept_burst(listener: &TcpListener, shared: &Shared, conns: &mut Vec<Conn>) 
     loop {
         match listener.accept() {
             Ok((stream, _)) => {
-                shared.connections.fetch_add(1, Ordering::SeqCst);
+                shared.connections.inc();
                 let _ = stream.set_nodelay(true);
                 if stream.set_nonblocking(true).is_err() {
-                    shared.io_errors.fetch_add(1, Ordering::SeqCst);
+                    shared.io_errors.inc();
                     continue;
                 }
                 // `active_conns` has a single writer (this thread), so
                 // load/store needs no compare-and-swap.
                 let active = shared.active_conns.load(Ordering::SeqCst);
                 if active >= shared.cfg.max_conns {
-                    shared.conns_rejected.fetch_add(1, Ordering::SeqCst);
+                    shared.conns_rejected.inc();
                     let refusals = conns.iter().filter(|c| c.refused).count();
                     if refusals >= REFUSAL_BACKLOG {
                         continue; // flood: drop without a reply
@@ -465,10 +572,7 @@ fn accept_burst(listener: &TcpListener, shared: &Shared, conns: &mut Vec<Conn>) 
                     continue;
                 }
                 shared.active_conns.store(active + 1, Ordering::SeqCst);
-                let now_active = (active + 1) as u64;
-                if now_active > shared.peak_conns.load(Ordering::SeqCst) {
-                    shared.peak_conns.store(now_active, Ordering::SeqCst);
-                }
+                shared.peak_conns.set_max((active + 1) as u64);
                 conns.push(Conn::new(stream, shared.cfg.max_frame));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
@@ -508,7 +612,7 @@ fn drive_conn(
             }
             Err(_) => {
                 // Connection reset: nothing can be delivered anymore.
-                shared.io_errors.fetch_add(1, Ordering::SeqCst);
+                shared.io_errors.inc();
                 return false;
             }
         }
@@ -530,7 +634,7 @@ fn drive_conn(
     //    truncation. Either way, answer what is owed, then close.
     if c.peer_eof && !c.closing {
         if c.codec.finish().is_err() {
-            shared.io_errors.fetch_add(1, Ordering::SeqCst);
+            shared.io_errors.inc();
         }
         c.closing = true;
     }
@@ -545,7 +649,7 @@ fn drive_conn(
                 }
             }
             Err(_) => {
-                shared.io_errors.fetch_add(1, Ordering::SeqCst);
+                shared.io_errors.inc();
                 return false;
             }
         }
@@ -560,7 +664,7 @@ fn drive_conn(
     if c.codec.has_out() {
         let deadline = *c.write_deadline.get_or_insert(now + shared.cfg.frame_deadline);
         if now >= deadline {
-            shared.io_errors.fetch_add(1, Ordering::SeqCst);
+            shared.io_errors.inc();
             return false;
         }
     } else {
@@ -577,7 +681,7 @@ fn drive_conn(
     if awaiting_bytes {
         let deadline = *c.read_deadline.get_or_insert(now + shared.cfg.frame_deadline);
         if now >= deadline {
-            shared.io_errors.fetch_add(1, Ordering::SeqCst);
+            shared.io_errors.inc();
             return false;
         }
     } else {
@@ -615,7 +719,7 @@ fn decode_frames(shared: &Arc<Shared>, sched_pool: &ThreadPool, c: &mut Conn) ->
     while c.pending.len() < CONN_PIPELINE {
         match c.codec.take() {
             Ok(Some(payload)) => {
-                shared.requests.fetch_add(1, Ordering::SeqCst);
+                shared.requests.inc();
                 let reply = enqueue(shared, sched_pool, &payload);
                 c.pending.push_back(reply);
                 progressed = true;
@@ -627,7 +731,7 @@ fn decode_frames(shared: &Arc<Shared>, sched_pool: &ThreadPool, c: &mut Conn) ->
                 // safe continuation is refuse-and-close — after
                 // answering everything accepted before it, and after
                 // consuming the unread payload.
-                shared.bad_requests.fetch_add(1, Ordering::SeqCst);
+                shared.bad_requests.inc();
                 c.pending.push_back(PendingReply::Ready(WireResponse::error(
                     0,
                     ErrorKind::BadRequest,
@@ -640,7 +744,7 @@ fn decode_frames(shared: &Arc<Shared>, sched_pool: &ThreadPool, c: &mut Conn) ->
             }
             // `take` only reports TooLarge, but stay defensive.
             Err(_) => {
-                shared.io_errors.fetch_add(1, Ordering::SeqCst);
+                shared.io_errors.inc();
                 c.closing = true;
                 break;
             }
@@ -656,6 +760,12 @@ fn decode_frames(shared: &Arc<Shared>, sched_pool: &ThreadPool, c: &mut Conn) ->
 fn resolve_pending(shared: &Shared, c: &mut Conn) -> bool {
     let mut progressed = false;
     loop {
+        // The head's trace, moved out (with the reply span's start
+        // instant) when its prediction resolves successfully. Error
+        // paths drop the trace unfinished — the ring holds completed
+        // lifecycles only. Captured *after* `try_recv` succeeds so the
+        // reply span always starts after the worker's inference span.
+        let mut finished: Option<(Trace, Instant)> = None;
         // Peek-resolve the head without popping; `None` means "head is
         // a Ready, pop it below" (split to appease the borrow checker).
         let resolved: Option<WireResponse> = match c.pending.front_mut() {
@@ -666,15 +776,19 @@ fn resolve_pending(shared: &Shared, c: &mut Conn) -> bool {
                 model,
                 diagnostics,
                 rx,
+                trace,
             }) => match rx.try_recv() {
-                Ok(Ok(prediction)) => Some(
-                    WireResponse::ok(model, prediction)
-                        .with_diagnostics(std::mem::take(diagnostics)),
-                ),
+                Ok(Ok(prediction)) => {
+                    finished = Some((std::mem::take(trace), Instant::now()));
+                    Some(
+                        WireResponse::ok(model, prediction)
+                            .with_diagnostics(std::mem::take(diagnostics)),
+                    )
+                }
                 Ok(Err(e)) => {
                     let kind = WireError::classify_service(&e);
                     if kind == ErrorKind::BadRequest {
-                        shared.bad_requests.fetch_add(1, Ordering::SeqCst);
+                        shared.bad_requests.inc();
                     }
                     Some(WireResponse::error(*id, kind, format!("{e:#}")))
                 }
@@ -708,11 +822,17 @@ fn resolve_pending(shared: &Shared, c: &mut Conn) -> bool {
         let body = response.to_json().to_string();
         match c.codec.queue(body.as_bytes()) {
             Ok(()) => {
-                shared.answered.fetch_add(1, Ordering::SeqCst);
+                shared.answered.inc();
+                if let Some((trace, t_reply)) = finished {
+                    trace.record("reply", t_reply, Instant::now());
+                    if let Some(summary) = trace.finish() {
+                        shared.observe_trace(summary);
+                    }
+                }
             }
             Err(_) => {
                 // Only reachable for a >4 GiB body; count and close.
-                shared.io_errors.fetch_add(1, Ordering::SeqCst);
+                shared.io_errors.inc();
                 c.closing = true;
             }
         }
@@ -725,13 +845,17 @@ fn resolve_pending(shared: &Shared, c: &mut Conn) -> bool {
 /// Every failure mode maps to a structured error reply — a malformed
 /// body must never cost the client its connection.
 fn enqueue(shared: &Arc<Shared>, sched_pool: &ThreadPool, payload: &[u8]) -> PendingReply {
+    // Trace epoch: a sampled request's `decode` span covers parse +
+    // validation from here, and its wall time runs to the reply span's
+    // close — so per-stage durations always sum to at most wall time.
+    let t0 = Instant::now();
     let doc = match std::str::from_utf8(payload)
         .map_err(crate::DnnError::from)
         .and_then(Json::parse)
     {
         Ok(doc) => doc,
         Err(e) => {
-            shared.bad_requests.fetch_add(1, Ordering::SeqCst);
+            shared.bad_requests.inc();
             return PendingReply::Ready(WireResponse::error(
                 0,
                 ErrorKind::BadRequest,
@@ -760,8 +884,25 @@ fn enqueue(shared: &Arc<Shared>, sched_pool: &ThreadPool, payload: &[u8]) -> Pen
             });
             return PendingReply::Job { id, rx };
         }
+        Ok(proto::WireCall::Metrics(call)) => {
+            // Introspection is answered synchronously on the loop: a
+            // snapshot is a read-mostly walk of the registry, and a
+            // monitoring probe must work even when the service's
+            // admission control is refusing predict traffic.
+            let traces = shared
+                .ring
+                .recent(call.last)
+                .iter()
+                .map(TraceSummary::to_json)
+                .collect();
+            return PendingReply::Ready(WireResponse::Metrics {
+                id: call.id,
+                snapshot: shared.snapshot(),
+                traces,
+            });
+        }
         Err(e) => {
-            shared.bad_requests.fetch_add(1, Ordering::SeqCst);
+            shared.bad_requests.inc();
             return PendingReply::Ready(WireResponse::error(
                 id,
                 ErrorKind::BadRequest,
@@ -773,15 +914,25 @@ fn enqueue(shared: &Arc<Shared>, sched_pool: &ThreadPool, payload: &[u8]) -> Pen
     // Captured before submit: the worker only answers with numbers, and
     // the reply must still name the offending layers.
     let diagnostics = req.model.diagnostics();
-    match shared.svc.try_submit(req) {
+    // Sampled predict requests carry a live trace through the whole
+    // pipeline; the trace id is derived from the wire request id so a
+    // client can correlate its own calls in the ring.
+    let trace = if shared.sampler.sample() {
+        Trace::start(id, t0)
+    } else {
+        Trace::off()
+    };
+    trace.record("decode", t0, Instant::now());
+    match shared.svc.try_submit_traced(req, trace.clone()) {
         Some(rx) => PendingReply::Wait {
             id,
             model,
             diagnostics,
             rx,
+            trace,
         },
         None => {
-            shared.overloaded.fetch_add(1, Ordering::SeqCst);
+            shared.overloaded.inc();
             PendingReply::Ready(WireResponse::error(
                 id,
                 ErrorKind::Overloaded,
@@ -804,9 +955,16 @@ fn run_schedule(shared: &Shared, call: proto::ScheduleCall) -> WireResponse {
         arrival_rate: call.arrival_rate,
         mem_safety: fleet::MEM_SAFETY,
     };
-    match fleet::run(&call.cluster, &call.jobs, policy.as_mut(), &mut costs, &params) {
+    match fleet::run_with_registry(
+        &call.cluster,
+        &call.jobs,
+        policy.as_mut(),
+        &mut costs,
+        &params,
+        &shared.registry,
+    ) {
         Ok(report) => {
-            shared.schedules.fetch_add(1, Ordering::SeqCst);
+            shared.schedules.inc();
             WireResponse::Schedule {
                 id: call.id,
                 report: report.to_json(),
@@ -817,7 +975,7 @@ fn run_schedule(shared: &Shared, call: proto::ScheduleCall) -> WireResponse {
             // the request's fault; backend faults are the server's.
             let kind = WireError::classify_service(&e);
             if kind == ErrorKind::BadRequest {
-                shared.bad_requests.fetch_add(1, Ordering::SeqCst);
+                shared.bad_requests.inc();
             }
             WireResponse::error(call.id, kind, format!("{e:#}"))
         }
@@ -1273,5 +1431,213 @@ mod tests {
         assert!(net.peak_conns >= n_conns as u64, "peak {} < {n_conns}", net.peak_conns);
         assert_eq!(svc_m.served, 2 * n_conns as u64);
         assert_eq!(svc_m.in_flight, 0);
+    }
+
+    /// Every registry key of a snapshot, qualified by its section.
+    fn snapshot_keys(snap: &Json) -> Vec<String> {
+        let mut keys = Vec::new();
+        for section in ["counters", "gauges", "histograms"] {
+            match snap.get(section) {
+                Some(Json::Obj(m)) => {
+                    keys.extend(m.keys().map(|k| format!("{section}/{k}")));
+                }
+                other => panic!("snapshot section '{section}' missing: {other:?}"),
+            }
+        }
+        keys
+    }
+
+    #[test]
+    fn metrics_request_returns_unified_snapshot_over_tcp() {
+        let server = default_server();
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+        // Distinct batches: every request misses the cache, so every
+        // trace crosses the full pipeline including queue + inference.
+        for i in 0..6u64 {
+            let resp = client
+                .call(&WireRequest::zoo(i, "lenet5").with("batch", 8 + i))
+                .unwrap();
+            assert!(resp.is_ok(), "{resp:?}");
+        }
+        let (id, snapshot, traces) = match client.metrics(99, 4).unwrap() {
+            WireResponse::Metrics { id, snapshot, traces } => (id, snapshot, traces),
+            other => panic!("expected a metrics response, got {other:?}"),
+        };
+        assert_eq!(id, 99);
+        // Loop-thread counters are exact: the metrics request was
+        // decoded after all six predict replies were queued.
+        let counters = snapshot.get("counters").unwrap();
+        assert_eq!(counters.num("net.requests").unwrap(), 7.0);
+        assert_eq!(counters.num("net.answered").unwrap(), 6.0);
+        assert!(counters.num("svc.served").is_ok());
+        // Stage histograms recorded before each reply was sent, so all
+        // four loop-visible stages hold exactly six samples.
+        let hists = snapshot.get("histograms").unwrap();
+        for stage in [
+            "stage.decode_us",
+            "stage.queue_wait_us",
+            "stage.inference_us",
+            "stage.reply_us",
+        ] {
+            let h = hists.get(stage).unwrap_or_else(|| panic!("missing {stage}"));
+            assert_eq!(h.num("count").unwrap(), 6.0, "{stage}");
+            assert!(h.num("p50").unwrap() <= h.num("p99").unwrap(), "{stage}");
+        }
+        // `last` bounds the trace summaries returned.
+        assert_eq!(traces.len(), 4);
+        for t in &traces {
+            assert!(t.str("trace_id").unwrap().starts_with("0x"), "{t}");
+            assert!(!t.arr("spans").unwrap().is_empty());
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn snapshot_key_set_does_not_depend_on_traffic() {
+        use crate::fleet::PolicyKind;
+        use crate::net::proto::ScheduleRequest;
+        // Every metric is registered at startup, so the exported key
+        // set must be identical on an idle server and a served one —
+        // one naming scheme, no lazily-appearing counters.
+        let idle = default_server();
+        let idle_keys = snapshot_keys(&idle.snapshot());
+        idle.shutdown();
+
+        let busy = default_server();
+        let mut client = Client::connect(&busy.local_addr().to_string()).unwrap();
+        assert!(client
+            .call(&WireRequest::zoo(1, "lenet5").with("batch", 4u64))
+            .unwrap()
+            .is_ok());
+        let mut sched = ScheduleRequest::new(2, "rtx2080", PolicyKind::FirstFit);
+        let mut o = Json::obj();
+        o.set("batch", 16u64);
+        sched.push_zoo("lenet5", o);
+        assert!(client.schedule(&sched).unwrap().is_ok());
+        let busy_keys = snapshot_keys(&busy.snapshot());
+        busy.shutdown();
+
+        assert_eq!(idle_keys, busy_keys);
+        for expected in [
+            "counters/net.answered",
+            "counters/svc.served",
+            "counters/fleet.runs",
+            "gauges/net.peak_conns",
+            "gauges/svc.in_flight",
+            "histograms/stage.decode_us",
+            "histograms/svc.latency_us",
+            "histograms/fleet.wait_us",
+        ] {
+            assert!(
+                busy_keys.iter().any(|k| k == expected),
+                "canonical key {expected} missing from {busy_keys:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn traces_order_stages_and_bound_durations_under_pipelined_load() {
+        let server = default_server();
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+        let n = 100u64;
+        // Distinct content per request — all cache misses, so every
+        // trace carries the full six-stage lifecycle.
+        for i in 0..n {
+            client
+                .send(&WireRequest::zoo(i, "lenet5").with("batch", 8 + i))
+                .unwrap();
+        }
+        for _ in 0..n {
+            let resp = client.recv().unwrap();
+            assert!(resp.is_ok(), "{resp:?}");
+        }
+        let traces = match client.metrics(7000, 256).unwrap() {
+            WireResponse::Metrics { traces, .. } => traces,
+            other => panic!("expected a metrics response, got {other:?}"),
+        };
+        assert_eq!(traces.len(), n as usize);
+        for t in &traces {
+            let wall = t.num("wall_us").unwrap();
+            let spans = t.arr("spans").unwrap();
+            let names: Vec<&str> = spans.iter().map(|s| s.str("name").unwrap()).collect();
+            assert_eq!(
+                names,
+                ["decode", "cache", "admission", "queue_wait", "inference", "reply"],
+                "stages must appear in pipeline order: {t}"
+            );
+            let mut prev_start = 0.0;
+            let mut dur_sum = 0.0;
+            for s in spans {
+                let start = s.num("start_us").unwrap();
+                let dur = s.num("dur_us").unwrap();
+                assert!(start >= prev_start, "span starts must be monotone: {t}");
+                assert!(dur >= 0.0, "{t}");
+                prev_start = start;
+                dur_sum += dur;
+            }
+            assert!(
+                dur_sum <= wall,
+                "stage durations ({dur_sum}us) exceed wall time ({wall}us): {t}"
+            );
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn trace_sampling_is_deterministic_one_in_n() {
+        let net_cfg = ServerConfig {
+            trace_sample: 8,
+            ..ServerConfig::default()
+        };
+        let server = start(ServiceConfig::default(), net_cfg);
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+        let n = 256u64;
+        for i in 0..n {
+            client
+                .send(&WireRequest::zoo(i, "lenet5").with("batch", 8 + (i % 5)))
+                .unwrap();
+        }
+        for _ in 0..n {
+            assert!(client.recv().unwrap().is_ok());
+        }
+        match client.metrics(1, 256).unwrap() {
+            WireResponse::Metrics { snapshot, traces, .. } => {
+                // The counter-based sampler admits request indices
+                // 0, 8, 16, … — exactly one in eight, not one on
+                // average.
+                assert_eq!(traces.len(), 32, "256 requests at 1-in-8");
+                let hists = snapshot.get("histograms").unwrap();
+                let decode = hists.get("stage.decode_us").unwrap();
+                assert_eq!(decode.num("count").unwrap(), 32.0);
+            }
+            other => panic!("expected a metrics response, got {other:?}"),
+        }
+        server.shutdown();
+
+        // trace_sample 0 disables tracing entirely.
+        let off = start(
+            ServiceConfig::default(),
+            ServerConfig {
+                trace_sample: 0,
+                ..ServerConfig::default()
+            },
+        );
+        let mut client = Client::connect(&off.local_addr().to_string()).unwrap();
+        for i in 0..10u64 {
+            assert!(client
+                .call(&WireRequest::zoo(i, "lenet5").with("batch", 8 + i))
+                .unwrap()
+                .is_ok());
+        }
+        match client.metrics(2, 16).unwrap() {
+            WireResponse::Metrics { snapshot, traces, .. } => {
+                assert!(traces.is_empty(), "sample 0 must trace nothing");
+                let hists = snapshot.get("histograms").unwrap();
+                let decode = hists.get("stage.decode_us").unwrap();
+                assert_eq!(decode.num("count").unwrap(), 0.0);
+            }
+            other => panic!("expected a metrics response, got {other:?}"),
+        }
+        off.shutdown();
     }
 }

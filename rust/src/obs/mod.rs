@@ -1,0 +1,27 @@
+//! `obs`: the in-process observability layer — one metrics registry,
+//! request-lifecycle tracing, and a ring of recent traces.
+//!
+//! Zero-dependency, like everything else in the crate. Three pieces:
+//!
+//! - [`registry`] — named counters / gauges / log-linear histograms
+//!   with a stable sorted `snapshot()` JSON export and a plain-text
+//!   render. Every number the system exports (service, net loop,
+//!   fleet sim, per-stage latencies) lives here under one dotted name.
+//! - [`trace`] — per-request spans on the monotonic clock, switched
+//!   by a deterministic 1-in-N [`Sampler`]; an off trace costs one
+//!   branch per call site.
+//! - [`ring`] — bounded buffer of recent completed [`TraceSummary`]s,
+//!   served back over the `metrics` wire request.
+//!
+//! Naming convention: `<component>.<metric>[_<unit>]` — e.g.
+//! `net.answered`, `svc.cache_hits`, `stage.queue_wait_us`,
+//! `fleet.wait_us`. Durations are recorded in microseconds and carry
+//! the `_us` suffix. The full table lives in DESIGN.md §4f.
+
+pub mod registry;
+pub mod ring;
+pub mod trace;
+
+pub use registry::{global, render_snapshot, stage_block, Counter, Gauge, Histogram, Registry};
+pub use ring::{TraceRing, TRACE_RING_CAP};
+pub use trace::{Sampler, SpanRec, Trace, TraceSummary};

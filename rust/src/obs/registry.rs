@@ -1,0 +1,453 @@
+//! The unified metrics registry: named counters, gauges, and
+//! log-linear-bucket histograms behind one `snapshot()` export path.
+//!
+//! Every number the system exports lives here under one dotted name
+//! (`net.answered`, `svc.cache_hits`, `stage.decode_us`, …), so the
+//! `serve --json` output, the `metrics` wire request, the `stats` CLI,
+//! and the bench artifacts all render the same set of keys from the
+//! same source. Components resolve their handles once at construction
+//! ([`Registry::counter`] et al. return `Arc`s) and then increment
+//! through plain relaxed atomics — the registry's `RwLock` is touched
+//! only at registration and snapshot time, never per event.
+//!
+//! Histograms are HDR-style log-linear: exact buckets for small values,
+//! then [`SUB_BUCKETS`] linear sub-buckets per power of two, each an
+//! independent `AtomicU64` shard so concurrent recorders never contend
+//! on a lock. Quantiles are reconstructed from bucket midpoints —
+//! bounded relative error (one sub-bucket width), constant memory.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, PoisonError, RwLock};
+
+/// Linear sub-buckets per power of two (2^3): histogram quantiles carry
+/// at most one sub-bucket (~12.5%) of relative error.
+const SUB_BITS: u32 = 3;
+const SUB_BUCKETS: u64 = 1 << SUB_BITS;
+
+/// Total bucket count covering the full `u64` range: the first
+/// `2 * SUB_BUCKETS` values exactly, then `SUB_BUCKETS` per octave.
+const BUCKETS: usize = (2 + (63 - SUB_BITS as usize)) * SUB_BUCKETS as usize;
+
+/// A monotonically increasing count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A point-in-time value (queue depths, in-flight requests) or a
+/// high-water mark (peak connections, via [`Gauge::set_max`]).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `v` if `v` is larger — a lock-free
+    /// high-water mark safe under concurrent writers.
+    pub fn set_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: u64) {
+        // Saturating: a racing sub past zero must not wrap to 2^64.
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                Some(cur.saturating_sub(n))
+            });
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Map a value to its log-linear bucket index.
+fn bucket_index(v: u64) -> usize {
+    if v < 2 * SUB_BUCKETS {
+        return v as usize; // exact region
+    }
+    let top = 63 - v.leading_zeros(); // >= SUB_BITS + 1
+    let octave = (top - SUB_BITS) as usize;
+    let sub = ((v >> (top - SUB_BITS)) & (SUB_BUCKETS - 1)) as usize;
+    (octave + 1) * SUB_BUCKETS as usize + sub
+}
+
+/// Midpoint of the value range a bucket covers (used to reconstruct
+/// quantiles; exact in the linear region).
+fn bucket_midpoint(idx: usize) -> u64 {
+    if idx < (2 * SUB_BUCKETS) as usize {
+        return idx as u64;
+    }
+    let octave = idx / SUB_BUCKETS as usize - 1;
+    let sub = (idx % SUB_BUCKETS as usize) as u64;
+    let low = (SUB_BUCKETS + sub) << octave;
+    let width = 1u64 << octave;
+    low + width / 2
+}
+
+/// A lock-free log-linear histogram of `u64` samples (durations in
+/// microseconds, sizes, …). Every bucket is its own atomic shard, so
+/// recording from many threads never serializes on a lock.
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    buckets: Vec<AtomicU64>,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count())
+            .field("max", &self.max.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// q-quantile (0..=1) reconstructed from bucket midpoints; 0.0 on
+    /// an empty histogram. Error is bounded by one sub-bucket width.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        // Rank of the requested quantile, 1-based, clamped into range.
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            cum = cum.saturating_add(b.load(Ordering::Relaxed));
+            if cum >= rank {
+                return bucket_midpoint(idx) as f64;
+            }
+        }
+        self.max.load(Ordering::Relaxed) as f64
+    }
+
+    /// The summary object `snapshot()` embeds per histogram.
+    pub fn summary_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("count", self.count())
+            .set("mean", self.mean())
+            .set("p50", self.quantile(0.5))
+            .set("p95", self.quantile(0.95))
+            .set("p99", self.quantile(0.99))
+            .set("max", self.max.load(Ordering::Relaxed));
+        o
+    }
+}
+
+/// A named family of counters, gauges, and histograms with one
+/// stable-sorted JSON export. One instance per service (so concurrent
+/// tests and multi-pass benches never cross-contaminate), or the
+/// process-wide [`global()`] for callers without a service handle.
+#[derive(Default)]
+pub struct Registry {
+    counters: RwLock<BTreeMap<String, Arc<Counter>>>,
+    gauges: RwLock<BTreeMap<String, Arc<Gauge>>>,
+    histograms: RwLock<BTreeMap<String, Arc<Histogram>>>,
+}
+
+fn read_lock<T>(lock: &RwLock<T>) -> std::sync::RwLockReadGuard<'_, T> {
+    lock.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn write_lock<T>(lock: &RwLock<T>) -> std::sync::RwLockWriteGuard<'_, T> {
+    lock.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn get_or_register<T: Default>(map: &RwLock<BTreeMap<String, Arc<T>>>, name: &str) -> Arc<T> {
+    if let Some(m) = read_lock(map).get(name) {
+        return Arc::clone(m);
+    }
+    Arc::clone(write_lock(map).entry(name.to_string()).or_default())
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-register the named counter. Hold the returned handle;
+    /// increments through it never touch the registry lock.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        get_or_register(&self.counters, name)
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        get_or_register(&self.gauges, name)
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        get_or_register(&self.histograms, name)
+    }
+
+    /// Stable sorted JSON export:
+    /// `{"counters":{..}, "gauges":{..}, "histograms":{name:{count,
+    /// mean, p50, p95, p99, max}}}`. Key order is deterministic
+    /// (BTreeMap), so identical states serialize byte-identically.
+    pub fn snapshot(&self) -> Json {
+        let mut counters = Json::obj();
+        for (name, c) in read_lock(&self.counters).iter() {
+            counters.set(name, c.get());
+        }
+        let mut gauges = Json::obj();
+        for (name, g) in read_lock(&self.gauges).iter() {
+            gauges.set(name, g.get());
+        }
+        let mut histograms = Json::obj();
+        for (name, h) in read_lock(&self.histograms).iter() {
+            histograms.set(name, h.summary_json());
+        }
+        let mut o = Json::obj();
+        o.set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", histograms);
+        o
+    }
+
+    /// Plain-text render of [`snapshot`](Self::snapshot) for humans.
+    pub fn render(&self) -> String {
+        render_snapshot(&self.snapshot())
+    }
+}
+
+/// Plain-text render of a snapshot document (works on scraped
+/// snapshots too, where no live `Registry` exists client-side).
+pub fn render_snapshot(doc: &Json) -> String {
+    let mut out = String::new();
+    for section in ["counters", "gauges"] {
+        if let Some(Json::Obj(map)) = doc.get(section) {
+            if map.is_empty() {
+                continue;
+            }
+            let _ = writeln!(out, "{section}:");
+            for (name, v) in map {
+                let n = v.as_f64().unwrap_or(0.0);
+                let _ = writeln!(out, "  {name:<28} {n:>12.0}");
+            }
+        }
+    }
+    if let Some(Json::Obj(map)) = doc.get("histograms") {
+        if !map.is_empty() {
+            let _ = writeln!(out, "histograms:");
+            for (name, h) in map {
+                let f = |k: &str| h.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                let _ = writeln!(
+                    out,
+                    "  {name:<28} count {:>8.0}  p50 {:>9.0}  p95 {:>9.0}  p99 {:>9.0}  max {:>9.0}",
+                    f("count"),
+                    f("p50"),
+                    f("p95"),
+                    f("p99"),
+                    f("max"),
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Extract the per-stage histogram block (`stage.*` keys) from a
+/// snapshot — the shape the bench artifacts attach per pass.
+pub fn stage_block(snapshot: &Json) -> Json {
+    let mut o = Json::obj();
+    if let Some(Json::Obj(map)) = snapshot.get("histograms") {
+        for (name, h) in map {
+            if name.starts_with("stage.") {
+                o.set(name, h.clone());
+            }
+        }
+    }
+    o
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+/// The process-wide registry, for callers without a per-service
+/// instance in hand (e.g. the plain [`crate::fleet::run`] entry
+/// point). Served code paths prefer the per-service registry.
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_register_once_and_accumulate() {
+        let r = Registry::new();
+        let a = r.counter("net.answered");
+        let b = r.counter("net.answered");
+        a.add(3);
+        b.inc();
+        assert_eq!(r.counter("net.answered").get(), 4);
+        let g = r.gauge("net.peak_conns");
+        g.set_max(7);
+        g.set_max(3); // lower: ignored
+        assert_eq!(g.get(), 7);
+        g.set(2);
+        g.add(5);
+        g.sub(4);
+        assert_eq!(g.get(), 3);
+        g.sub(100); // saturates, never wraps
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn bucket_index_and_midpoint_are_consistent() {
+        // Exact region: identity.
+        for v in 0..16u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_midpoint(v as usize), v);
+        }
+        // Indices are monotone and every value's midpoint stays within
+        // one sub-bucket width of the value.
+        let mut last_idx = 0usize;
+        for shift in 0..60 {
+            for off in [0u64, 1, 3] {
+                let v = (17u64 << shift).saturating_add(off << shift);
+                let idx = bucket_index(v);
+                assert!(idx >= last_idx, "bucket order broke at {v}");
+                assert!(idx < BUCKETS);
+                last_idx = idx;
+                let mid = bucket_midpoint(idx) as f64;
+                let rel = (mid - v as f64).abs() / v as f64;
+                assert!(rel <= 0.125, "v={v} mid={mid} rel={rel}");
+            }
+        }
+        assert!(bucket_index(u64::MAX) < BUCKETS);
+    }
+
+    #[test]
+    fn histogram_quantiles_track_known_distribution() {
+        let h = Histogram::default();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!((p50 - 500.0).abs() / 500.0 <= 0.13, "p50={p50}");
+        assert!((p99 - 990.0).abs() / 990.0 <= 0.13, "p99={p99}");
+        assert!(p50 <= p99);
+        assert_eq!(h.quantile(0.0), h.quantile(1.0 / 1000.0));
+        assert!((h.mean() - 500.5).abs() < 1e-9);
+        // Empty histogram: defined zeros.
+        let e = Histogram::default();
+        assert_eq!(e.quantile(0.5), 0.0);
+        assert_eq!(e.mean(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_is_stable_sorted_and_roundtrips() {
+        let r = Registry::new();
+        r.counter("b.second").add(2);
+        r.counter("a.first").inc();
+        r.gauge("z.gauge").set(9);
+        r.histogram("stage.decode_us").record(120);
+        let s1 = r.snapshot().to_string();
+        let s2 = r.snapshot().to_string();
+        assert_eq!(s1, s2, "identical state must serialize identically");
+        let doc = Json::parse(&s1).unwrap();
+        assert_eq!(doc.get("counters").unwrap().num("a.first").unwrap(), 1.0);
+        assert_eq!(doc.get("counters").unwrap().num("b.second").unwrap(), 2.0);
+        assert_eq!(doc.get("gauges").unwrap().num("z.gauge").unwrap(), 9.0);
+        let h = doc.get("histograms").unwrap().get("stage.decode_us").unwrap();
+        assert_eq!(h.num("count").unwrap(), 1.0);
+        assert!(h.num("p50").unwrap() > 0.0);
+        // a.first sorts before b.second in the rendered text too.
+        let text = render_snapshot(&doc);
+        let a = text.find("a.first").unwrap();
+        let b = text.find("b.second").unwrap();
+        assert!(a < b, "{text}");
+        assert!(text.contains("stage.decode_us"), "{text}");
+    }
+
+    #[test]
+    fn stage_block_filters_stage_histograms() {
+        let r = Registry::new();
+        r.histogram("stage.decode_us").record(5);
+        r.histogram("svc.latency_us").record(5);
+        let block = stage_block(&r.snapshot());
+        assert!(block.get("stage.decode_us").is_some());
+        assert!(block.get("svc.latency_us").is_none());
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let r = Arc::new(Registry::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    let c = r.counter("t.count");
+                    let h = r.histogram("t.hist");
+                    for v in 0..1000u64 {
+                        c.inc();
+                        h.record(v);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.counter("t.count").get(), 8000);
+        assert_eq!(r.histogram("t.hist").count(), 8000);
+    }
+}

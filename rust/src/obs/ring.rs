@@ -1,0 +1,114 @@
+//! Bounded ring buffer of recently completed traces.
+//!
+//! The server pushes every finished [`TraceSummary`] here; the
+//! `metrics` wire request reads the last K back out. The ring holds
+//! the newest [`TRACE_RING_CAP`] traces — pushing past capacity
+//! silently evicts the oldest, so memory stays bounded no matter how
+//! long the server runs. A single mutex guards the deque: pushes
+//! happen at most once per *sampled* request and reads only on
+//! explicit scrapes, so contention is negligible next to the wire
+//! work around it.
+
+use super::trace::TraceSummary;
+use std::collections::VecDeque;
+use std::sync::{Mutex, PoisonError};
+
+/// Default ring capacity: enough to hold every trace of a typical
+/// test/smoke run while bounding a long-lived server's memory.
+pub const TRACE_RING_CAP: usize = 256;
+
+#[derive(Debug)]
+pub struct TraceRing {
+    cap: usize,
+    inner: Mutex<VecDeque<TraceSummary>>,
+}
+
+impl Default for TraceRing {
+    fn default() -> TraceRing {
+        TraceRing::new(TRACE_RING_CAP)
+    }
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> TraceRing {
+        TraceRing {
+            cap: cap.max(1),
+            inner: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Append a finished trace, evicting the oldest when full.
+    pub fn push(&self, trace: TraceSummary) {
+        let mut q = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        if q.len() == self.cap {
+            q.pop_front();
+        }
+        q.push_back(trace);
+    }
+
+    /// The most recent `k` traces, oldest first.
+    pub fn recent(&self, k: usize) -> Vec<TraceSummary> {
+        let q = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        let skip = q.len().saturating_sub(k);
+        q.iter().skip(skip).cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::Trace;
+
+    fn finished(id: u64) -> TraceSummary {
+        Trace::forced(id).finish().unwrap()
+    }
+
+    #[test]
+    fn ring_evicts_oldest_past_capacity() {
+        let ring = TraceRing::new(3);
+        assert!(ring.is_empty());
+        for id in 0..5 {
+            ring.push(finished(id));
+        }
+        assert_eq!(ring.len(), 3);
+        let recent = ring.recent(10);
+        let ids: Vec<u64> = recent.iter().map(|t| t.request_id).collect();
+        assert_eq!(ids, vec![2, 3, 4], "oldest evicted, order preserved");
+    }
+
+    #[test]
+    fn recent_returns_last_k_oldest_first() {
+        let ring = TraceRing::default();
+        assert_eq!(ring.capacity(), TRACE_RING_CAP);
+        for id in 0..10 {
+            ring.push(finished(id));
+        }
+        let last3: Vec<u64> = ring.recent(3).iter().map(|t| t.request_id).collect();
+        assert_eq!(last3, vec![7, 8, 9]);
+        assert!(ring.recent(0).is_empty());
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let ring = TraceRing::new(0);
+        ring.push(finished(1));
+        ring.push(finished(2));
+        assert_eq!(ring.len(), 1);
+        assert_eq!(ring.recent(5)[0].request_id, 2);
+    }
+}

@@ -1,0 +1,279 @@
+//! Request-lifecycle tracing: cheap per-request spans on the
+//! monotonic clock, assembled into a [`TraceSummary`] at reply time.
+//!
+//! A [`Trace`] is a clonable handle that is either *off* (a `None` —
+//! every operation is a no-op costing one branch) or *on* (an `Arc`
+//! around a span list). The server decides on/off once per request via
+//! a [`Sampler`] (`--trace-sample N` keeps 1-in-N), then threads the
+//! handle through the pipeline: wire decode → cache lookup → admission
+//! → batcher queue wait → predictor inference → encode/reply. Each
+//! stage calls [`Trace::record`] with its start/end instants; offsets
+//! are stored in microseconds relative to the request's arrival
+//! instant `t0`, so span math never touches the wall clock and
+//! `sum(stage durations) ≤ wall time` holds by construction.
+//!
+//! Spans cross threads by value-in-handle: the worker records its
+//! spans *before* sending the reply over the answer channel, so the
+//! channel's happens-before edge makes them visible to the net loop
+//! that finishes the trace.
+
+use crate::util::cache::hash64;
+use crate::util::json::Json;
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Instant;
+
+/// Domain-separation seed for trace ids: a trace id is
+/// `hash64(request_id, TRACE_SALT)`, stable per request id but not
+/// confusable with it.
+const TRACE_SALT: &[u8] = b"dnnabacus-trace";
+
+/// Decides once per request whether to trace it: keeps 1-in-`every`.
+/// `every = 0` disables tracing entirely; `every = 1` traces all.
+/// Counter-based (not random) so test loads sample deterministically.
+#[derive(Debug, Default)]
+pub struct Sampler {
+    every: u64,
+    counter: std::sync::atomic::AtomicU64,
+}
+
+impl Sampler {
+    pub fn new(every: u64) -> Sampler {
+        Sampler {
+            every,
+            counter: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// True when this request should carry a live trace.
+    pub fn sample(&self) -> bool {
+        match self.every {
+            0 => false,
+            1 => true,
+            n => {
+                let seen = self
+                    .counter
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                seen % n == 0
+            }
+        }
+    }
+}
+
+/// One completed stage within a trace. `start_us`/`dur_us` are offsets
+/// from the owning trace's `t0`; `parent` is the `seq` of the
+/// enclosing span (0 = the implicit root request span).
+#[derive(Debug, Clone)]
+pub struct SpanRec {
+    pub seq: u32,
+    pub parent: u32,
+    pub name: &'static str,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+impl SpanRec {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("seq", u64::from(self.seq))
+            .set("parent", u64::from(self.parent))
+            .set("name", self.name)
+            .set("start_us", self.start_us)
+            .set("dur_us", self.dur_us);
+        o
+    }
+}
+
+struct TraceCell {
+    request_id: u64,
+    t0: Instant,
+    spans: Mutex<Vec<SpanRec>>,
+}
+
+/// A per-request trace handle. Cloning shares the underlying span
+/// list; the default value is off (all operations no-ops).
+#[derive(Clone, Default)]
+pub struct Trace(Option<Arc<TraceCell>>);
+
+impl std::fmt::Debug for Trace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Trace").field("on", &self.is_on()).finish()
+    }
+}
+
+impl Trace {
+    /// A disabled trace: every call is a branch and nothing more.
+    pub fn off() -> Trace {
+        Trace(None)
+    }
+
+    /// Start a live trace for `request_id`. Pass the instant the
+    /// request's bytes arrived as `t0` (it may predate this call) so
+    /// the decode span lies inside the trace's wall interval.
+    pub fn start(request_id: u64, t0: Instant) -> Trace {
+        Trace(Some(Arc::new(TraceCell {
+            request_id,
+            t0,
+            spans: Mutex::new(Vec::new()),
+        })))
+    }
+
+    /// An always-on trace starting now — for callers outside the
+    /// server's sampler, e.g. the analyzer's per-pass timing.
+    pub fn forced(request_id: u64) -> Trace {
+        Trace::start(request_id, Instant::now())
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Record a completed stage spanning `[start, end]`. No-op when
+    /// the trace is off; instants before `t0` clamp to offset 0.
+    pub fn record(&self, name: &'static str, start: Instant, end: Instant) {
+        let Some(cell) = &self.0 else { return };
+        let start_us = start.saturating_duration_since(cell.t0).as_micros() as u64;
+        let dur_us = end.saturating_duration_since(start).as_micros() as u64;
+        let mut spans = cell.spans.lock().unwrap_or_else(PoisonError::into_inner);
+        let seq = spans.len().saturating_add(1) as u32;
+        spans.push(SpanRec {
+            seq,
+            parent: 0,
+            name,
+            start_us,
+            dur_us,
+        });
+    }
+
+    /// Close the trace: total wall time is `now - t0`, spans are
+    /// sorted by start offset. Returns `None` when the trace is off.
+    pub fn finish(self) -> Option<TraceSummary> {
+        let cell = self.0?;
+        let wall_us = Instant::now()
+            .saturating_duration_since(cell.t0)
+            .as_micros() as u64;
+        let mut spans = std::mem::take(
+            &mut *cell.spans.lock().unwrap_or_else(PoisonError::into_inner),
+        );
+        spans.sort_by_key(|s| (s.start_us, s.seq));
+        Some(TraceSummary {
+            trace_id: hash64(cell.request_id, TRACE_SALT),
+            request_id: cell.request_id,
+            wall_us,
+            spans,
+        })
+    }
+}
+
+/// A finished trace: the shape stored in the ring buffer and shipped
+/// in `metrics` replies.
+#[derive(Debug, Clone)]
+pub struct TraceSummary {
+    pub trace_id: u64,
+    pub request_id: u64,
+    pub wall_us: u64,
+    pub spans: Vec<SpanRec>,
+}
+
+impl TraceSummary {
+    /// Duration of the named stage, if recorded.
+    pub fn stage_us(&self, name: &str) -> Option<u64> {
+        self.spans.iter().find(|s| s.name == name).map(|s| s.dur_us)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut spans = Vec::with_capacity(self.spans.len());
+        for s in &self.spans {
+            spans.push(s.to_json());
+        }
+        let mut o = Json::obj();
+        // trace_id is a full-range u64; emit as hex text because JSON
+        // numbers above 2^53 would silently round through f64.
+        o.set("trace_id", format!("{:#018x}", self.trace_id))
+            .set("request_id", self.request_id)
+            .set("wall_us", self.wall_us)
+            .set("spans", Json::Arr(spans));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn off_trace_is_inert() {
+        let t = Trace::off();
+        assert!(!t.is_on());
+        let now = Instant::now();
+        t.record("decode", now, now);
+        assert!(t.finish().is_none());
+        assert!(!Trace::default().is_on());
+    }
+
+    #[test]
+    fn spans_are_offset_from_t0_and_sorted() {
+        let t0 = Instant::now();
+        let t = Trace::start(42, t0);
+        assert!(t.is_on());
+        let a = t0 + Duration::from_micros(100);
+        let b = t0 + Duration::from_micros(250);
+        let c = t0 + Duration::from_micros(400);
+        // Recorded out of start order on purpose.
+        t.record("inference", b, c);
+        t.record("decode", t0, a);
+        let s = t.finish().unwrap();
+        assert_eq!(s.request_id, 42);
+        assert_eq!(s.trace_id, hash64(42, TRACE_SALT));
+        assert_eq!(s.spans.len(), 2);
+        assert_eq!(s.spans[0].name, "decode");
+        assert_eq!(s.spans[0].start_us, 0);
+        assert_eq!(s.spans[1].name, "inference");
+        assert!(s.spans[1].start_us >= s.spans[0].start_us);
+        assert_eq!(s.stage_us("decode"), Some(100));
+        assert_eq!(s.stage_us("inference"), Some(150));
+        assert_eq!(s.stage_us("reply"), None);
+        // Wall covers every span even though record order was shuffled.
+        let total: u64 = s.spans.iter().map(|sp| sp.dur_us).sum();
+        assert!(total <= s.wall_us, "total {total} > wall {}", s.wall_us);
+    }
+
+    #[test]
+    fn instants_before_t0_clamp_to_zero() {
+        let early = Instant::now();
+        std::thread::sleep(Duration::from_millis(1));
+        let t = Trace::start(7, Instant::now());
+        t.record("decode", early, early);
+        let s = t.finish().unwrap();
+        assert_eq!(s.spans[0].start_us, 0);
+        assert_eq!(s.spans[0].dur_us, 0);
+    }
+
+    #[test]
+    fn summary_json_is_parseable_with_hex_trace_id() {
+        let t = Trace::forced(9);
+        let now = Instant::now();
+        t.record("decode", now, now);
+        let s = t.finish().unwrap();
+        let doc = Json::parse(&s.to_json().to_string()).unwrap();
+        let id = doc.str("trace_id").unwrap();
+        assert!(id.starts_with("0x"), "{id}");
+        assert_eq!(doc.num("request_id").unwrap(), 9.0);
+        let spans = doc.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].str("name").unwrap(), "decode");
+        assert_eq!(spans[0].num("seq").unwrap(), 1.0);
+        assert_eq!(spans[0].num("parent").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn sampler_keeps_exactly_one_in_n() {
+        let s = Sampler::new(8);
+        let kept = (0..256).filter(|_| s.sample()).count();
+        assert_eq!(kept, 32);
+        let all = Sampler::new(1);
+        assert!((0..10).all(|_| all.sample()));
+        let none = Sampler::new(0);
+        assert!(!(0..10).any(|_| none.sample()));
+    }
+}

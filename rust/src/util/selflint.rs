@@ -11,7 +11,11 @@
 //! 3. the crate stays zero-dependency (`[dependencies]` in Cargo.toml
 //!    is empty);
 //! 4. every analyzer diagnostic code (`DA0xx`) is documented in
-//!    DESIGN.md, so the registry and the docs cannot drift apart.
+//!    DESIGN.md, so the registry and the docs cannot drift apart;
+//! 5. raw atomic counters live only in `obs/` — every other module
+//!    counts through the [`crate::obs`] registry, so no metric can
+//!    exist outside the unified snapshot (explicit allowlist for the
+//!    one non-metric atomic).
 
 #[cfg(test)]
 mod tests {
@@ -108,6 +112,39 @@ mod tests {
         assert!(
             violations.is_empty(),
             "panicking calls on server/fleet request paths:\n{}",
+            violations.join("\n")
+        );
+    }
+
+    #[test]
+    fn raw_counters_live_only_in_the_obs_registry() {
+        // Needle built by concatenation so this file never matches
+        // itself. Files under `obs/` are the registry implementation;
+        // the allowlist names the one non-metric atomic (the batcher's
+        // internal steal accounting, surfaced as a gauge by the
+        // service).
+        let needle: String = ["Atomic", "U64"].concat();
+        let allowed = ["coordinator/batcher.rs"];
+        let src = root().join("rust/src");
+        let mut files = Vec::new();
+        rust_files(&src, &mut files);
+        assert!(files.len() > 30, "source walk looks broken: {files:?}");
+        let mut violations = Vec::new();
+        for path in files {
+            let rel = path.to_string_lossy().replace('\\', "/");
+            if rel.contains("/obs/") || allowed.iter().any(|a| rel.ends_with(a)) {
+                continue;
+            }
+            let text = read(&path);
+            for (line, content) in non_test_lines(&text) {
+                if content.contains(&needle) {
+                    violations.push(format!("{}:{line}: {}", path.display(), content.trim()));
+                }
+            }
+        }
+        assert!(
+            violations.is_empty(),
+            "raw {needle} counters outside obs/ (register a Counter/Gauge instead):\n{}",
             violations.join("\n")
         );
     }

@@ -79,6 +79,34 @@ pub fn quantile(xs: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Several quantiles of the same sample in one pass: filters and sorts
+/// once, then interpolates each requested `q` — the repeated-sort-free
+/// form of calling [`quantile`] per percentile on a hot report path.
+///
+/// Same pathological-input policy as [`quantile`]: non-finite samples
+/// are dropped, the comparator is `f64::total_cmp`, and an empty (or
+/// all-non-finite) input yields 0.0 for every requested quantile, so
+/// `quantiles(xs, &[q]) == vec![quantile(xs, q)]` for all inputs.
+pub fn quantiles(xs: &[f64], qs: &[f64]) -> Vec<f64> {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
+        return vec![0.0; qs.len()];
+    }
+    v.sort_by(f64::total_cmp);
+    qs.iter()
+        .map(|q| {
+            let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = pos.ceil() as usize;
+            if lo == hi {
+                v[lo]
+            } else {
+                v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+            }
+        })
+        .collect()
+}
+
 /// Smallest element, ignoring NaNs. An empty (or all-NaN) slice yields
 /// 0.0 — a defined sentinel for reports, not `+inf` leaking into JSON.
 pub fn min(xs: &[f64]) -> f64 {
@@ -206,6 +234,31 @@ mod tests {
         // Degenerate inputs have a defined result.
         assert_eq!(quantile(&[], 0.5), 0.0);
         assert_eq!(quantile(&[f64::NAN, f64::NAN], 0.5), 0.0);
+    }
+
+    #[test]
+    fn quantiles_matches_quantile_per_element() {
+        let xs = [3.0, f64::NAN, 1.0, f64::INFINITY, 2.0, f64::NEG_INFINITY, 4.0];
+        let qs = [0.0, 0.25, 0.5, 0.95, 1.0];
+        let batch = quantiles(&xs, &qs);
+        assert_eq!(batch.len(), qs.len());
+        for (&q, &got) in qs.iter().zip(&batch) {
+            assert!(
+                (got - quantile(&xs, q)).abs() < 1e-12,
+                "q={q}: batch {got} != scalar {}",
+                quantile(&xs, q)
+            );
+        }
+    }
+
+    #[test]
+    fn quantiles_defined_on_degenerate_input() {
+        // Same empty/NaN policy as `quantile`: zeros, never a panic.
+        assert_eq!(quantiles(&[], &[0.5, 0.99]), vec![0.0, 0.0]);
+        assert_eq!(quantiles(&[f64::NAN, f64::NAN], &[0.5]), vec![0.0]);
+        assert_eq!(quantiles(&[1.0, 2.0], &[]), Vec::<f64>::new());
+        // Out-of-range q clamps like the scalar form.
+        assert_eq!(quantiles(&[1.0, 2.0], &[-1.0, 2.0]), vec![1.0, 2.0]);
     }
 
     #[test]

@@ -1,8 +1,8 @@
 """L2 — the predictor MLP in JAX (the paper's learned-MLP comparison
 model [27][29], and this repo's densest compute path).
 
-The network maps the 270-dim DNNAbacus feature vector (14 structure-
-independent + 256 NSM features) to two log-space targets
+The network maps the 417-dim DNNAbacus feature vector (14 structure-
+independent + 400 NSM + 3 sequence-dim features) to two log-space targets
 (ln time-seconds, ln memory-bytes). Every layer runs through the L1
 fused-dense Pallas kernel, so the whole forward/backward lowers into a
 single HLO module that the Rust runtime executes via PJRT — Python never
@@ -16,12 +16,13 @@ import jax.numpy as jnp
 
 from compile.kernels.fused_dense import fused_dense
 
-# Feature layout must match rust/src/features (INDEP_DIM + NSM_DIM).
-INPUT_DIM = 14 + 256
+# Feature layout must match rust/src/features (INDEP_DIM + NSM_DIM +
+# SEQ_DIM: the 20×20 NSM plus seq_len/head_count/embed_dim).
+INPUT_DIM = 14 + 400 + 3
 HIDDEN = (256, 128, 64)
 OUTPUT_DIM = 2  # (ln time, ln memory)
 
-#: Layer dims, e.g. [(270, 256), (256, 128), (128, 64), (64, 2)].
+#: Layer dims, e.g. [(417, 256), (256, 128), (128, 64), (64, 2)].
 LAYER_DIMS = list(zip((INPUT_DIM,) + HIDDEN, HIDDEN + (OUTPUT_DIM,)))
 
 

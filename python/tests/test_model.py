@@ -60,7 +60,7 @@ def test_flat_entrypoints_agree_with_structured():
 
 
 def test_layer_dims_match_feature_layout():
-    # Rust features: 14 indep + 16×16 NSM = 270.
-    assert model.INPUT_DIM == 270
-    assert model.LAYER_DIMS[0][0] == 270
+    # Rust features: 14 indep + 20×20 NSM + 3 sequence dims = 417.
+    assert model.INPUT_DIM == 417
+    assert model.LAYER_DIMS[0][0] == 417
     assert model.LAYER_DIMS[-1][1] == 2

@@ -44,10 +44,10 @@ fn main() {
     let mut results: Vec<BenchResult> = Vec::new();
 
     // The request mix: one small novel net, one mid-size classic, one
-    // branchy net, one deep net — all as spec *text*, which is what a
-    // spec-bearing request actually carries.
+    // branchy net, one deep net, one spec-v2 transformer — all as spec
+    // *text*, which is what a spec-bearing request actually carries.
     let mut corpus: Vec<(String, String)> = vec![("novel-bench-net".into(), NOVEL.to_string())];
-    for name in ["resnet18", "googlenet", "densenet121"] {
+    for name in ["resnet18", "googlenet", "densenet121", "bert-mini"] {
         let spec = ingest::spec_for_zoo(name, 3, 100).unwrap();
         corpus.push((name.to_string(), spec.to_json().to_string()));
     }
@@ -75,7 +75,11 @@ fn main() {
         ));
     }
     // The whole front door, text in → features out, as one request sees it.
-    let (_, deep) = corpus.last().unwrap().clone();
+    let deep = corpus
+        .iter()
+        .find(|(n, _)| n == "densenet121")
+        .map(|(_, t)| t.clone())
+        .unwrap();
     let r = bench_harness::bench("text->features (densenet121)", 2.0 * budget, || {
         let parsed = ModelSpec::parse_str(&deep).unwrap().compile().unwrap();
         std::hint::black_box(feature_vector(&parsed.graph, &cfg, StructureRep::Nsm));

@@ -109,6 +109,9 @@ fn checked_elements(s: &TensorShape) -> Option<u64> {
             .checked_mul(h as u64)?
             .checked_mul(w as u64),
         TensorShape::Vec { n, f } => (n as u64).checked_mul(f as u64),
+        TensorShape::Seq { n, t, d } => (n as u64)
+            .checked_mul(t as u64)?
+            .checked_mul(d as u64),
     }
 }
 
@@ -123,6 +126,14 @@ fn checked_params(kind: &OpKind) -> Option<u64> {
         } => (*in_features as u64)
             .checked_mul(*out_features as u64)?
             .checked_add(*out_features as u64),
+        OpKind::Embedding { vocab, dim } => (*vocab as u64).checked_mul(*dim as u64),
+        OpKind::LayerNorm { dim } => (*dim as u64).checked_mul(2),
+        OpKind::MultiHeadAttention { embed_dim, .. } => {
+            let d = *embed_dim as u64;
+            d.checked_mul(d)?
+                .checked_mul(4)?
+                .checked_add(d.checked_mul(4)?)
+        }
         _ => Some(0),
     }
 }
@@ -141,6 +152,7 @@ fn checked_node_flops(g: &Graph, shapes: &[TensorShape], id: NodeId) -> Option<u
     let out = shapes.get(id)?;
     match &node.kind {
         OpKind::Input { .. }
+        | OpKind::SeqInput { .. }
         | OpKind::Concat
         | OpKind::Flatten
         | OpKind::ChannelShuffle { .. } => Some(0),
@@ -157,7 +169,27 @@ fn checked_node_flops(g: &Graph, shapes: &[TensorShape], id: NodeId) -> Option<u
             }
         }
         OpKind::BatchNorm { .. } => checked_elements(out)?.checked_mul(2),
-        OpKind::ReLU | OpKind::Sigmoid | OpKind::Dropout { .. } => checked_elements(out),
+        OpKind::Embedding { .. } => checked_elements(out),
+        OpKind::LayerNorm { .. } => checked_elements(out)?.checked_mul(8),
+        OpKind::MultiHeadAttention { heads, .. } => {
+            let TensorShape::Seq { n, t, d } = *out else {
+                return Some(0); // mirrors graph::flops: non-sequence input is 0
+            };
+            let (n, t, d, nh) = (n as u64, t as u64, d as u64, *heads as u64);
+            let ntd = n.checked_mul(t)?.checked_mul(d)?;
+            let proj = ntd.checked_mul(d)?.checked_mul(8)?;
+            let bias = ntd.checked_mul(4)?;
+            let attn = ntd.checked_mul(t)?.checked_mul(4)?;
+            let soft = n
+                .checked_mul(nh)?
+                .checked_mul(t)?
+                .checked_mul(t)?
+                .checked_mul(3)?;
+            proj.checked_add(bias)?.checked_add(attn)?.checked_add(soft)
+        }
+        OpKind::ReLU | OpKind::Sigmoid | OpKind::GELU | OpKind::Dropout { .. } => {
+            checked_elements(out)
+        }
         OpKind::Softmax => checked_elements(out)?.checked_mul(3),
         OpKind::MaxPool(p) | OpKind::AvgPool(p) => checked_elements(out)?
             .checked_mul((p.kernel as u64).checked_mul(p.kernel as u64)?),
@@ -169,12 +201,17 @@ fn checked_node_flops(g: &Graph, shapes: &[TensorShape], id: NodeId) -> Option<u
             in_features,
             out_features,
         } => {
-            let n = out.batch() as u64;
-            let mul = n
+            // Rows = n·t position-wise over a sequence, batch otherwise
+            // (mirrors graph::flops exactly).
+            let rows = match *out {
+                TensorShape::Seq { n, t, .. } => (n as u64).checked_mul(t as u64)?,
+                _ => out.batch() as u64,
+            };
+            let mul = rows
                 .checked_mul(*in_features as u64)?
                 .checked_mul(*out_features as u64)?
                 .checked_mul(2)?;
-            mul.checked_add(n.checked_mul(*out_features as u64)?)
+            mul.checked_add(rows.checked_mul(*out_features as u64)?)
         }
         OpKind::Add | OpKind::Mul => {
             checked_elements(out)?.checked_mul(node.inputs.len().max(1) as u64)
@@ -194,24 +231,28 @@ mod tests {
     /// analyzer would bless numbers the predictor never computes.
     #[test]
     fn checked_totals_agree_with_graph_accounting() {
-        let g = crate::zoo::build("lenet5", 3, 10).unwrap();
-        let shapes = infer_shapes(&g, 128, 3, 32).unwrap();
-        let opts = Options::for_graph(&g);
-        let ctx = Ctx {
-            g: &g,
-            shapes: &shapes,
-            opts: &opts,
-        };
-        let mut report = Report::new();
-        let acct = run(&ctx, &mut report);
-        assert!(report.is_empty(), "{}", report.render());
-        assert_eq!(acct.params, Some(g.param_count()));
-        let bytes: u64 = shapes.iter().map(TensorShape::bytes).sum();
-        assert_eq!(acct.activation_bytes, Some(bytes));
-        let flops: u64 = (0..g.len())
-            .map(|id| checked_node_flops(&g, &shapes, id).unwrap())
-            .sum();
-        assert_eq!(flops, graph_flops(&g, 128, 3, 32).unwrap());
+        // One CNN, one transformer: the mirror must hold for the
+        // sequence formulas (attention, position-wise linear) too.
+        for name in ["lenet5", "bert-tiny"] {
+            let g = crate::zoo::build(name, 3, 10).unwrap();
+            let shapes = infer_shapes(&g, 128, 3, 32).unwrap();
+            let opts = Options::for_graph(&g);
+            let ctx = Ctx {
+                g: &g,
+                shapes: &shapes,
+                opts: &opts,
+            };
+            let mut report = Report::new();
+            let acct = run(&ctx, &mut report);
+            assert!(report.is_empty(), "{name}: {}", report.render());
+            assert_eq!(acct.params, Some(g.param_count()), "{name}");
+            let bytes: u64 = shapes.iter().map(TensorShape::bytes).sum();
+            assert_eq!(acct.activation_bytes, Some(bytes), "{name}");
+            let flops: u64 = (0..g.len())
+                .map(|id| checked_node_flops(&g, &shapes, id).unwrap())
+                .sum();
+            assert_eq!(flops, graph_flops(&g, 128, 3, 32).unwrap(), "{name}");
+        }
     }
 
     #[test]

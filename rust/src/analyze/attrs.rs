@@ -19,6 +19,13 @@ use crate::graph::{NodeId, OpKind};
 const BATCH_MIN: usize = 2;
 const BATCH_MAX: usize = 1024;
 
+/// Sequence lengths inside the transformer profiling envelope. Attention
+/// cost is quadratic in sequence length, so extrapolation error outside
+/// this range compounds much faster than for batch size; `DA035` fires
+/// on any declared `seq_len` (input or attention op) outside it.
+const SEQ_MIN: usize = 8;
+const SEQ_MAX: usize = 2048;
+
 pub(super) fn run(ctx: &Ctx<'_>, report: &mut Report) {
     let terminal = ctx.g.len().checked_sub(1);
     for (id, node) in ctx.g.nodes.iter().enumerate() {
@@ -122,6 +129,28 @@ pub(super) fn run(ctx: &Ctx<'_>, report: &mut Report) {
                     ));
                 }
             }
+            OpKind::SeqInput { seq_len, .. } => {
+                seq_envelope(id, "input sequence length", *seq_len, report);
+            }
+            OpKind::MultiHeadAttention {
+                embed_dim,
+                heads,
+                seq_len,
+            } => {
+                if !matches!(embed_dim.checked_rem(*heads), Some(0)) {
+                    report.push(Diagnostic::at(
+                        Code::HeadsDivideEmbed,
+                        id,
+                        format!(
+                            "{heads} attention heads do not evenly divide \
+                             embed_dim {embed_dim}; the per-head split is not \
+                             computable, so no cost estimate exists for this \
+                             network"
+                        ),
+                    ));
+                }
+                seq_envelope(id, "attention seq_len", *seq_len, report);
+            }
             _ => {}
         }
     }
@@ -132,6 +161,21 @@ pub(super) fn run(ctx: &Ctx<'_>, report: &mut Report) {
                 "batch {} is outside the profiled {BATCH_MIN}..={BATCH_MAX} envelope \
                  (paper Fig. 12 sweep); the predictor extrapolates here",
                 ctx.opts.batch
+            ),
+        ));
+    }
+}
+
+/// `DA035`: a declared sequence length outside the profiled envelope.
+fn seq_envelope(id: NodeId, what: &str, seq_len: usize, report: &mut Report) {
+    if !(SEQ_MIN..=SEQ_MAX).contains(&seq_len) {
+        report.push(Diagnostic::at(
+            Code::SeqLenOutsideEnvelope,
+            id,
+            format!(
+                "{what} {seq_len} is outside the profiled {SEQ_MIN}..={SEQ_MAX} \
+                 envelope; attention cost is quadratic in it, so the predictor \
+                 extrapolates badly here"
             ),
         ));
     }
@@ -274,6 +318,45 @@ mod tests {
         let r = run_graph(&g, &Options::for_graph(&g).with_batch(2048));
         assert_eq!(r.codes(), vec!["DA033"]);
         assert!(run_graph(&g, &Options::for_graph(&g).with_batch(1024)).is_empty());
+    }
+
+    /// Minimal encoder-ish chain: embed → layernorm → attention → head.
+    fn seq_net(embed_dim: usize, heads: usize, seq_len: usize) -> Graph {
+        let mut g = Graph::new("t");
+        let x = g.add(OpKind::seq_input(seq_len, 1000), &[]);
+        let e = g.add(
+            OpKind::Embedding {
+                vocab: 1000,
+                dim: embed_dim,
+            },
+            &[x],
+        );
+        let n = g.add(OpKind::LayerNorm { dim: embed_dim }, &[e]);
+        let a = g.add(OpKind::mha(embed_dim, heads, seq_len), &[n]);
+        head(&mut g, a, embed_dim);
+        g
+    }
+
+    #[test]
+    fn heads_not_dividing_embed_dim_fires_da034_as_error() {
+        let g = seq_net(32, 3, 64);
+        let r = run_graph(&g, &Options::for_graph(&g));
+        assert_eq!(r.codes(), vec!["DA034"]);
+        assert!(r.has_errors(), "DA034 is the attribute band's error");
+        assert!(codes_of(&seq_net(32, 4, 64)).is_empty());
+    }
+
+    #[test]
+    fn seq_len_outside_envelope_fires_da035_on_input_and_attention() {
+        let g = seq_net(32, 4, 4096);
+        let r = run_graph(&g, &Options::for_graph(&g));
+        assert_eq!(r.codes(), vec!["DA035"]);
+        assert!(!r.has_errors(), "DA035 is a warning");
+        // Both the sequence input and the attention op declare the
+        // out-of-envelope length.
+        assert_eq!(r.diagnostics.len(), 2);
+        assert!(codes_of(&seq_net(32, 4, 4)).contains(&"DA035"));
+        assert!(codes_of(&seq_net(32, 4, 2048)).is_empty());
     }
 
     #[test]

@@ -15,6 +15,12 @@
 //! | `DA02x` | shape sanity                  | warn          |
 //! | `DA03x` | attribute plausibility        | warn          |
 //! | `DA04x` | device feasibility            | warn / info   |
+//!
+//! One exception to the band severities: `DA034` (attention heads do
+//! not divide the embedding dimension) is an **error** even though it
+//! lives in the attribute band — the lowered network is not computable,
+//! so the cost model's numbers for it would be fiction, same as the
+//! `DA00x` overflows.
 
 use crate::graph::NodeId;
 use crate::ingest::ModelSpec;
@@ -77,6 +83,15 @@ pub enum Code {
     PointwisePadding,
     /// `DA033`: requested batch size outside the profiled envelope.
     BatchExtreme,
+    /// `DA034`: attention head count does not divide the embedding
+    /// dimension — the per-head split is not computable. Error, not
+    /// warn: no framework can run this network, so any cost estimate
+    /// for it would be fiction (the band-severity exception above).
+    HeadsDivideEmbed,
+    /// `DA035`: declared sequence length outside the profiled envelope
+    /// (attention cost is quadratic in it, so extrapolation error
+    /// compounds fast).
+    SeqLenOutsideEnvelope,
     /// `DA040`: estimated training footprint exceeds a known device's
     /// usable VRAM.
     ExceedsDeviceMemory,
@@ -86,7 +101,7 @@ pub enum Code {
 
 impl Code {
     /// Every code, in registry order (doc table order).
-    pub const ALL: [Code; 13] = [
+    pub const ALL: [Code; 15] = [
         Code::OverflowParams,
         Code::OverflowFlops,
         Code::OverflowActivations,
@@ -98,6 +113,8 @@ impl Code {
         Code::PaddingExceedsKernel,
         Code::PointwisePadding,
         Code::BatchExtreme,
+        Code::HeadsDivideEmbed,
+        Code::SeqLenOutsideEnvelope,
         Code::ExceedsDeviceMemory,
         Code::TightDeviceFit,
     ];
@@ -115,6 +132,8 @@ impl Code {
             Code::PaddingExceedsKernel => "DA031",
             Code::PointwisePadding => "DA032",
             Code::BatchExtreme => "DA033",
+            Code::HeadsDivideEmbed => "DA034",
+            Code::SeqLenOutsideEnvelope => "DA035",
             Code::ExceedsDeviceMemory => "DA040",
             Code::TightDeviceFit => "DA041",
         }
@@ -125,7 +144,8 @@ impl Code {
             Code::OverflowParams
             | Code::OverflowFlops
             | Code::OverflowActivations
-            | Code::ShapeInference => Severity::Error,
+            | Code::ShapeInference
+            | Code::HeadsDivideEmbed => Severity::Error,
             Code::DeadLayer
             | Code::DegenerateSpatial
             | Code::ChannelBottleneck
@@ -133,6 +153,7 @@ impl Code {
             | Code::PaddingExceedsKernel
             | Code::PointwisePadding
             | Code::BatchExtreme
+            | Code::SeqLenOutsideEnvelope
             | Code::ExceedsDeviceMemory => Severity::Warn,
             Code::TightDeviceFit => Severity::Info,
         }
@@ -152,6 +173,8 @@ impl Code {
             Code::PaddingExceedsKernel => "padding exceeds kernel",
             Code::PointwisePadding => "padding on pointwise conv",
             Code::BatchExtreme => "batch size outside profiled range",
+            Code::HeadsDivideEmbed => "heads do not divide embedding dim",
+            Code::SeqLenOutsideEnvelope => "sequence length outside profiled range",
             Code::ExceedsDeviceMemory => "exceeds device memory",
             Code::TightDeviceFit => "tight device fit",
         }
@@ -330,6 +353,10 @@ mod tests {
     fn severity_bands_match_registry_table() {
         for code in Code::ALL {
             let expected = match code {
+                // The documented band exception: a heads/embed_dim
+                // mismatch makes the network uncomputable, so it is an
+                // error despite living in the attribute band.
+                Code::HeadsDivideEmbed => Severity::Error,
                 c if c.as_str() < "DA010" => Severity::Error,
                 Code::TightDeviceFit => Severity::Info,
                 _ => Severity::Warn,

@@ -86,6 +86,9 @@ impl Options {
     pub fn for_graph(g: &Graph) -> Options {
         match g.nodes.first().map(|n| &n.kind) {
             Some(&OpKind::Input { channels, hw }) => Options::for_input(channels, hw),
+            // A token-sequence root carries its own geometry; the shape
+            // walk ignores the image channels/hw for `SeqInput`.
+            Some(&OpKind::SeqInput { .. }) => Options::for_input(0, 0),
             _ => Options::for_input(3, 32),
         }
     }

@@ -17,8 +17,45 @@ pub mod nsm;
 pub use indep::{indep_features, INDEP_DIM, INDEP_NAMES};
 pub use nsm::{nsm_features, Nsm, NSM_DIM};
 
-use crate::graph::Graph;
+use crate::graph::{Graph, OpKind};
 use crate::sim::TrainConfig;
+
+/// Sequence-dimension feature count: seq_len, head count, embed dim —
+/// the transformer analogues of Table 2's input-size/channel features,
+/// kept as raw counts the same way. All three are zero for conv-era
+/// graphs, and they are appended at the *end* of the assembled vector so
+/// existing CNN feature vectors keep their prefix byte-identical.
+pub const SEQ_DIM: usize = 3;
+
+/// Human-readable names, index-aligned with [`seq_features`].
+pub const SEQ_NAMES: [&str; SEQ_DIM] = ["seq_len", "head_count", "embed_dim"];
+
+/// Extract the sequence dimensions of a graph: max seq_len over
+/// sequence inputs and attention ops, max head count and embed dim over
+/// attention ops (falling back to embedding width for attention-free
+/// sequence models). Zeros for graphs with no sequence ops.
+pub fn seq_features(g: &Graph) -> [f64; SEQ_DIM] {
+    let mut seq_len = 0usize;
+    let mut heads = 0usize;
+    let mut embed_dim = 0usize;
+    for node in &g.nodes {
+        match node.kind {
+            OpKind::SeqInput { seq_len: t, .. } => seq_len = seq_len.max(t),
+            OpKind::Embedding { dim, .. } => embed_dim = embed_dim.max(dim),
+            OpKind::MultiHeadAttention {
+                embed_dim: d,
+                heads: h,
+                seq_len: t,
+            } => {
+                seq_len = seq_len.max(t);
+                heads = heads.max(h);
+                embed_dim = embed_dim.max(d);
+            }
+            _ => {}
+        }
+    }
+    [seq_len as f64, heads as f64, embed_dim as f64]
+}
 
 /// Which structure representation to use (Figure 13 compares them).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -32,8 +69,8 @@ pub enum StructureRep {
 /// Total feature dimension for a representation.
 pub fn feature_dim(rep: StructureRep) -> usize {
     match rep {
-        StructureRep::Nsm => INDEP_DIM + NSM_DIM,
-        StructureRep::GraphEmbedding => INDEP_DIM + embed::EMBED_DIM,
+        StructureRep::Nsm => INDEP_DIM + NSM_DIM + SEQ_DIM,
+        StructureRep::GraphEmbedding => INDEP_DIM + embed::EMBED_DIM + SEQ_DIM,
     }
 }
 
@@ -51,6 +88,7 @@ pub fn feature_vector(g: &Graph, cfg: &TrainConfig, rep: StructureRep) -> Vec<f6
             out.extend(embedder.embed(g));
         }
     }
+    out.extend(seq_features(g));
     out
 }
 
@@ -78,5 +116,24 @@ mod tests {
             let v = feature_vector(&g, &cfg, StructureRep::Nsm);
             assert!(v.iter().all(|x| x.is_finite()), "{name}");
         }
+    }
+
+    #[test]
+    fn seq_tail_zero_for_cnn_and_populated_for_transformers() {
+        let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, 64);
+        let cnn = zoo::build("resnet18", 3, 100).unwrap();
+        let v = feature_vector(&cnn, &cfg, StructureRep::Nsm);
+        // The appended tail must be all zeros for conv-era graphs —
+        // together with the NSM's append-only layout this keeps CNN
+        // vectors byte-identical to the pre-widening layout (modulo the
+        // appended zeros).
+        assert_eq!(&v[v.len() - SEQ_DIM..], &[0.0, 0.0, 0.0]);
+        assert_eq!(seq_features(&cnn), [0.0, 0.0, 0.0]);
+
+        let tf = zoo::build("bert-tiny", 3, 100).unwrap();
+        let s = seq_features(&tf);
+        assert!(s[0] > 0.0 && s[1] > 0.0 && s[2] > 0.0);
+        let vt = feature_vector(&tf, &cfg, StructureRep::Nsm);
+        assert_eq!(&vt[vt.len() - SEQ_DIM..], &s[..]);
     }
 }

@@ -5,13 +5,22 @@
 //! entry `(i, j)` counts the edges whose source operator has type `i`
 //! and sink operator type `j`. It is built in a *single scan* of the
 //! graph's topologically-ordered edge list (the paper's selling point
-//! over graph embeddings / GNNs), and flattened row-major into 256
+//! over graph embeddings / GNNs), and flattened into [`NSM_DIM`]
 //! features.
+//!
+//! **Append-only layout guarantee.** When the operator vocabulary grew
+//! past the paper's 16 conv-era types, the feature layout did *not*
+//! reshuffle: [`Nsm::features`] emits the legacy 16×16 block first
+//! (row-major, exactly as before), then appends every pair that touches
+//! a transformer-era type. A conv-era graph therefore produces a vector
+//! whose first 256 entries are byte-identical to the old layout and
+//! whose appended entries are all zero.
 
-use crate::graph::op::{OpType, OP_TYPE_COUNT};
+use crate::graph::op::{OpType, LEGACY_OP_TYPE_COUNT, OP_TYPE_COUNT};
 use crate::graph::Graph;
 
-/// NSM feature width: 16 × 16 operator-pair counts.
+/// NSM feature width: 20 × 20 operator-pair counts (256 legacy + 144
+/// appended transformer-era pairs).
 pub const NSM_DIM: usize = OP_TYPE_COUNT * OP_TYPE_COUNT;
 
 /// The Network Structural Matrix.
@@ -46,14 +55,26 @@ impl Nsm {
             .sum()
     }
 
-    /// Row-major flattening into the predictor's feature space,
-    /// log1p-scaled (counts span 1..10³ across the zoo).
+    /// Flattening into the predictor's feature space, log1p-scaled
+    /// (counts span 1..10³ across the zoo). Layout: the frozen legacy
+    /// 16×16 block row-major first, then all pairs touching a
+    /// transformer-era type in row-major order (append-only — see the
+    /// module docs).
     pub fn features(&self) -> Vec<f64> {
-        self.m
-            .iter()
-            .flat_map(|row| row.iter())
-            .map(|&x| (x as f64).ln_1p())
-            .collect()
+        let mut out = Vec::with_capacity(NSM_DIM);
+        for i in 0..LEGACY_OP_TYPE_COUNT {
+            for j in 0..LEGACY_OP_TYPE_COUNT {
+                out.push((self.m[i][j] as f64).ln_1p());
+            }
+        }
+        for i in 0..OP_TYPE_COUNT {
+            for j in 0..OP_TYPE_COUNT {
+                if i >= LEGACY_OP_TYPE_COUNT || j >= LEGACY_OP_TYPE_COUNT {
+                    out.push((self.m[i][j] as f64).ln_1p());
+                }
+            }
+        }
+        out
     }
 
     /// Pretty-print the non-zero block (debugging / the `nsm-demo` CLI).
@@ -182,5 +203,50 @@ mod tests {
         let r = Nsm::build(&paper_example()).render();
         assert!(r.contains("Conv2d") && r.contains("BatchNorm"));
         assert!(!r.contains("ChannelShuffle"));
+    }
+
+    #[test]
+    fn legacy_block_leads_and_cnn_tail_is_zero() {
+        // Append-only guarantee: for any conv-era graph, the first
+        // 16×16 entries equal the pre-widening row-major flatten and
+        // every appended entry is exactly zero.
+        for name in ["vgg16", "resnet18", "densenet121"] {
+            let nsm = Nsm::build(&zoo::build(name, 3, 100).unwrap());
+            let f = nsm.features();
+            assert_eq!(f.len(), NSM_DIM, "{name}");
+            let legacy: Vec<f64> = (0..LEGACY_OP_TYPE_COUNT)
+                .flat_map(|i| (0..LEGACY_OP_TYPE_COUNT).map(move |j| (i, j)))
+                .map(|(i, j)| (nsm.m[i][j] as f64).ln_1p())
+                .collect();
+            assert_eq!(&f[..LEGACY_OP_TYPE_COUNT * LEGACY_OP_TYPE_COUNT], &legacy[..], "{name}");
+            assert!(
+                f[LEGACY_OP_TYPE_COUNT * LEGACY_OP_TYPE_COUNT..]
+                    .iter()
+                    .all(|&x| x == 0.0),
+                "{name}: appended block must be zero for conv-era graphs"
+            );
+        }
+    }
+
+    #[test]
+    fn transformer_edges_land_in_appended_block() {
+        let mut g = Graph::new("t");
+        let x = g.add(OpKind::seq_input(16, 100), &[]);
+        let e = g.add(OpKind::Embedding { vocab: 100, dim: 8 }, &[x]);
+        let ln = g.add(OpKind::LayerNorm { dim: 8 }, &[e]);
+        g.add(OpKind::mha(8, 2, 16), &[ln]);
+        let nsm = Nsm::build(&g);
+        assert_eq!(nsm.get(OpType::Input, OpType::Embedding), 1);
+        assert_eq!(nsm.get(OpType::Embedding, OpType::LayerNorm), 1);
+        assert_eq!(nsm.get(OpType::LayerNorm, OpType::MultiHeadAttention), 1);
+        let f = nsm.features();
+        // Every edge touches a transformer-era type, so the legacy block
+        // stays empty and the appended block carries all the counts.
+        assert!(f[..LEGACY_OP_TYPE_COUNT * LEGACY_OP_TYPE_COUNT]
+            .iter()
+            .all(|&x| x == 0.0));
+        assert!(f[LEGACY_OP_TYPE_COUNT * LEGACY_OP_TYPE_COUNT..]
+            .iter()
+            .any(|&x| x > 0.0));
     }
 }

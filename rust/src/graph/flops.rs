@@ -18,7 +18,7 @@ pub fn node_flops(g: &Graph, shapes: &[TensorShape], id: NodeId, kind: &OpKind) 
     let out = &shapes[id];
     let in0 = node.inputs.first().map(|&s| &shapes[s]);
     match kind {
-        OpKind::Input { .. } => 0,
+        OpKind::Input { .. } | OpKind::SeqInput { .. } => 0,
         OpKind::Conv2d(c) => {
             // out elements × (2 × k² × Cin/groups) MAC-FLOPs (+ bias add).
             let window = (c.kh as u64)
@@ -29,7 +29,32 @@ pub fn node_flops(g: &Graph, shapes: &[TensorShape], id: NodeId, kind: &OpKind) 
                 .saturating_add(if c.bias { out.elements() } else { 0 })
         }
         OpKind::BatchNorm { .. } => out.elements().saturating_mul(2),
-        OpKind::ReLU | OpKind::Sigmoid | OpKind::Dropout { .. } => out.elements(),
+        // Table lookup: one gather per output element.
+        OpKind::Embedding { .. } => out.elements(),
+        // Mean + variance reductions, normalize, then affine scale/shift.
+        OpKind::LayerNorm { .. } => out.elements().saturating_mul(8),
+        OpKind::MultiHeadAttention { heads, .. } => {
+            // out is Seq[n, t, d]. Four d×d projections are linear in t;
+            // the QKᵀ scores and attention-weighted mix are quadratic in
+            // t — the term that dominates at long sequence lengths.
+            let TensorShape::Seq { n, t, d } = *out else {
+                return 0; // shape inference rejects non-sequence inputs
+            };
+            let (n, t, d, nh) = (n as u64, t as u64, d as u64, *heads as u64);
+            let ntd = n.saturating_mul(t).saturating_mul(d);
+            let proj = ntd.saturating_mul(d).saturating_mul(8);
+            let bias = ntd.saturating_mul(4);
+            let attn = ntd.saturating_mul(t).saturating_mul(4);
+            let soft = n
+                .saturating_mul(nh)
+                .saturating_mul(t)
+                .saturating_mul(t)
+                .saturating_mul(3);
+            proj.saturating_add(bias)
+                .saturating_add(attn)
+                .saturating_add(soft)
+        }
+        OpKind::ReLU | OpKind::Sigmoid | OpKind::GELU | OpKind::Dropout { .. } => out.elements(),
         OpKind::Softmax => out.elements().saturating_mul(3),
         OpKind::MaxPool(p) | OpKind::AvgPool(p) => out
             .elements()
@@ -39,11 +64,16 @@ pub fn node_flops(g: &Graph, shapes: &[TensorShape], id: NodeId, kind: &OpKind) 
             in_features,
             out_features,
         } => {
-            let n = out.batch() as u64;
-            n.saturating_mul(*in_features as u64)
+            // Rows = batch for a flat vector; batch × tokens when applied
+            // position-wise over a sequence (transformer FFN).
+            let rows = match *out {
+                TensorShape::Seq { n, t, .. } => (n as u64).saturating_mul(t as u64),
+                _ => out.batch() as u64,
+            };
+            rows.saturating_mul(*in_features as u64)
                 .saturating_mul(*out_features as u64)
                 .saturating_mul(2)
-                .saturating_add(n.saturating_mul(*out_features as u64))
+                .saturating_add(rows.saturating_mul(*out_features as u64))
         }
         OpKind::Add | OpKind::Mul => out.elements().saturating_mul(node.inputs.len().max(1) as u64),
         OpKind::Concat | OpKind::Flatten | OpKind::ChannelShuffle { .. } => 0,
@@ -113,5 +143,53 @@ mod tests {
         );
         // 2·n·in·out MACs-as-FLOPs + n·out bias adds, n = 2.
         assert_eq!(graph_flops(&g, 2, 1, 4).unwrap(), 2 * 2 * 16 * 10 + 2 * 10);
+    }
+
+    fn attn_only(seq: usize, dim: usize, heads: usize) -> u64 {
+        let mut g = Graph::new("a");
+        let x = g.add(OpKind::seq_input(seq, 100), &[]);
+        let e = g.add(OpKind::Embedding { vocab: 100, dim }, &[x]);
+        let a = g.add(OpKind::mha(dim, heads, seq), &[e]);
+        let shapes = crate::graph::infer_shapes(&g, 1, 3, 32).unwrap();
+        node_flops(&g, &shapes, a, &g.nodes[a].kind)
+    }
+
+    #[test]
+    fn mha_flops_formula() {
+        // n=1, t=16, d=8, heads=2:
+        // proj 8·t·d² + bias 4·t·d + attn 4·t²·d + softmax 3·h·t².
+        let t = 16u64;
+        let d = 8u64;
+        let expect = 8 * t * d * d + 4 * t * d + 4 * t * t * d + 3 * 2 * t * t;
+        assert_eq!(attn_only(16, 8, 2), expect);
+    }
+
+    #[test]
+    fn attention_is_quadratic_in_seq_len() {
+        // Fix dim, quadruple seq_len: the t² terms must grow 16×, so the
+        // total grows strictly faster than 4× (linear would be exactly 4×).
+        let f1 = attn_only(64, 8, 2);
+        let f4 = attn_only(256, 8, 2);
+        assert!(f4 > 4 * f1);
+    }
+
+    #[test]
+    fn linear_over_sequence_counts_every_token() {
+        let mut g = Graph::new("ffn");
+        let x = g.add(OpKind::seq_input(16, 100), &[]);
+        let e = g.add(OpKind::Embedding { vocab: 100, dim: 8 }, &[x]);
+        let l = g.add(
+            OpKind::Linear {
+                in_features: 8,
+                out_features: 32,
+            },
+            &[e],
+        );
+        let shapes = crate::graph::infer_shapes(&g, 2, 3, 32).unwrap();
+        // rows = n·t = 32: 2·rows·in·out + rows·out.
+        assert_eq!(
+            node_flops(&g, &shapes, l, &g.nodes[l].kind),
+            2 * 32 * 8 * 32 + 32 * 32
+        );
     }
 }

@@ -14,7 +14,7 @@ pub mod flops;
 pub mod op;
 pub mod shape;
 
-pub use op::{ConvAttrs, OpKind, PoolAttrs, OP_TYPE_COUNT};
+pub use op::{ConvAttrs, OpKind, PoolAttrs, LEGACY_OP_TYPE_COUNT, OP_TYPE_COUNT};
 pub use shape::infer_shapes;
 
 use crate::util::prng::Rng;
@@ -108,7 +108,7 @@ impl Graph {
                 }
             }
             match node.kind {
-                OpKind::Input { .. } => {
+                OpKind::Input { .. } | OpKind::SeqInput { .. } => {
                     if !node.inputs.is_empty() {
                         crate::bail!("input node {id} has predecessors");
                     }
@@ -120,7 +120,10 @@ impl Graph {
                 }
             }
         }
-        if !matches!(self.nodes.first().map(|n| &n.kind), Some(OpKind::Input { .. })) {
+        if !matches!(
+            self.nodes.first().map(|n| &n.kind),
+            Some(OpKind::Input { .. } | OpKind::SeqInput { .. })
+        ) {
             crate::bail!("graph must start with an Input node");
         }
         Ok(())
@@ -137,11 +140,20 @@ impl Graph {
     }
 
     /// Count of "layers" in the paper's sense (weighted layers: conv +
-    /// linear), e.g. VGG-16 has 16.
+    /// linear, plus the transformer-era weight-bearing ops), e.g. VGG-16
+    /// has 16.
     pub fn weighted_layers(&self) -> usize {
         self.nodes
             .iter()
-            .filter(|n| matches!(n.kind, OpKind::Conv2d(_) | OpKind::Linear { .. }))
+            .filter(|n| {
+                matches!(
+                    n.kind,
+                    OpKind::Conv2d(_)
+                        | OpKind::Linear { .. }
+                        | OpKind::MultiHeadAttention { .. }
+                        | OpKind::Embedding { .. }
+                )
+            })
             .count()
     }
 

@@ -1,12 +1,23 @@
 //! Operator vocabulary.
 //!
 //! The NSM (paper §3.2.2) is indexed by operator *type*, so the vocabulary
-//! is a closed enum: 16 types covering everything the 29 networks plus the
-//! random generator emit. [`OpType`] is the NSM row/column index; [`OpKind`]
-//! carries per-call attributes (channels, kernel, stride, …).
+//! is a closed enum: the 16 conv-era types covering everything the 29
+//! networks plus the random generator emit, extended by 4 transformer-era
+//! types (`Embedding`, `LayerNorm`, `MultiHeadAttention`, `GELU`).
+//! [`OpType`] is the NSM row/column index; [`OpKind`] carries per-call
+//! attributes (channels, kernel, stride, seq_len, heads, …).
+//!
+//! New types are append-only: the first [`LEGACY_OP_TYPE_COUNT`]
+//! discriminants are frozen so the legacy 16×16 NSM block keeps its
+//! meaning (and CNN feature vectors stay byte-identical — see
+//! `features::nsm`).
 
-/// Number of operator types == NSM dimension (16×16 = 256 NSM features).
-pub const OP_TYPE_COUNT: usize = 16;
+/// Number of operator types == NSM dimension (20×20 = 400 NSM features).
+pub const OP_TYPE_COUNT: usize = 20;
+
+/// The conv-era vocabulary size the paper's NSM was built on. Types with
+/// discriminants below this form the frozen 16×16 feature block.
+pub const LEGACY_OP_TYPE_COUNT: usize = 16;
 
 /// Operator *type* — the NSM vocabulary.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -28,6 +39,12 @@ pub enum OpType {
     Softmax = 13,
     ChannelShuffle = 14,
     Mul = 15,
+    // Transformer-era extension. Append-only: the discriminants above are
+    // frozen (legacy 16×16 NSM block).
+    Embedding = 16,
+    LayerNorm = 17,
+    MultiHeadAttention = 18,
+    GELU = 19,
 }
 
 impl OpType {
@@ -48,6 +65,10 @@ impl OpType {
         OpType::Softmax,
         OpType::ChannelShuffle,
         OpType::Mul,
+        OpType::Embedding,
+        OpType::LayerNorm,
+        OpType::MultiHeadAttention,
+        OpType::GELU,
     ];
 
     pub fn name(self) -> &'static str {
@@ -68,6 +89,10 @@ impl OpType {
             OpType::Softmax => "Softmax",
             OpType::ChannelShuffle => "ChannelShuffle",
             OpType::Mul => "Mul",
+            OpType::Embedding => "Embedding",
+            OpType::LayerNorm => "LayerNorm",
+            OpType::MultiHeadAttention => "MultiHeadAttention",
+            OpType::GELU => "GELU",
         }
     }
 }
@@ -163,6 +188,23 @@ pub enum OpKind {
     ChannelShuffle { groups: usize },
     /// Elementwise product (squeeze-and-excitation scaling).
     Mul,
+    /// Graph input: `seq_len` token ids drawn from a `vocab`-sized
+    /// vocabulary per sample. Shares the `Input` NSM index with the image
+    /// input — there is exactly one input per graph either way.
+    SeqInput { seq_len: usize, vocab: usize },
+    /// Token-embedding lookup table (`vocab × dim`).
+    Embedding { vocab: usize, dim: usize },
+    /// Layer normalization over the feature axis (scale + shift).
+    LayerNorm { dim: usize },
+    /// Multi-head self-attention: Q/K/V/output projections plus the
+    /// `seq_len²`-shaped score/softmax/mix stages.
+    MultiHeadAttention {
+        embed_dim: usize,
+        heads: usize,
+        seq_len: usize,
+    },
+    /// Gaussian-error linear unit (transformer FFN activation).
+    GELU,
 }
 
 impl OpKind {
@@ -238,6 +280,18 @@ impl OpKind {
         })
     }
 
+    pub fn seq_input(seq_len: usize, vocab: usize) -> OpKind {
+        OpKind::SeqInput { seq_len, vocab }
+    }
+
+    pub fn mha(embed_dim: usize, heads: usize, seq_len: usize) -> OpKind {
+        OpKind::MultiHeadAttention {
+            embed_dim,
+            heads,
+            seq_len,
+        }
+    }
+
     pub fn maxpool(kernel: usize, stride: usize) -> OpKind {
         OpKind::MaxPool(PoolAttrs {
             kernel,
@@ -273,6 +327,11 @@ impl OpKind {
             OpKind::Softmax => OpType::Softmax,
             OpKind::ChannelShuffle { .. } => OpType::ChannelShuffle,
             OpKind::Mul => OpType::Mul,
+            OpKind::SeqInput { .. } => OpType::Input,
+            OpKind::Embedding { .. } => OpType::Embedding,
+            OpKind::LayerNorm { .. } => OpType::LayerNorm,
+            OpKind::MultiHeadAttention { .. } => OpType::MultiHeadAttention,
+            OpKind::GELU => OpType::GELU,
         }
     }
 
@@ -287,6 +346,16 @@ impl OpKind {
             } => (*in_features as u64)
                 .saturating_mul(*out_features as u64)
                 .saturating_add(*out_features as u64),
+            OpKind::Embedding { vocab, dim } => (*vocab as u64).saturating_mul(*dim as u64),
+            OpKind::LayerNorm { dim } => (*dim as u64).saturating_mul(2),
+            // Q/K/V/output projections: 4 weight matrices of d×d plus
+            // 4 bias vectors of d.
+            OpKind::MultiHeadAttention { embed_dim, .. } => {
+                let d = *embed_dim as u64;
+                d.saturating_mul(d)
+                    .saturating_mul(4)
+                    .saturating_add(d.saturating_mul(4))
+            }
             _ => 0,
         }
     }
@@ -319,6 +388,21 @@ impl OpKind {
             } => mix(mix(h, *in_features as u64), *out_features as u64),
             OpKind::Dropout { p_keep_x100 } => mix(h, *p_keep_x100 as u64),
             OpKind::ChannelShuffle { groups } => mix(h, *groups as u64),
+            // The leading tag keeps a sequence input from colliding with an
+            // image `Input { channels, hw }` that mixes the same two values.
+            OpKind::SeqInput { seq_len, vocab } => {
+                mix(mix(mix(h, u64::from(b'S')), *seq_len as u64), *vocab as u64)
+            }
+            OpKind::Embedding { vocab, dim } => mix(mix(h, *vocab as u64), *dim as u64),
+            OpKind::LayerNorm { dim } => mix(mix(h, u64::from(b'L')), *dim as u64),
+            OpKind::MultiHeadAttention {
+                embed_dim,
+                heads,
+                seq_len,
+            } => mix(
+                mix(mix(h, *embed_dim as u64), *heads as u64),
+                *seq_len as u64,
+            ),
             _ => h,
         }
     }
@@ -391,5 +475,51 @@ mod tests {
         let a = OpKind::conv(3, 8, 3, 1, 1).attr_hash();
         let b = OpKind::conv(3, 8, 3, 2, 1).attr_hash();
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn legacy_prefix_is_frozen() {
+        // The first 16 discriminants must never move: the NSM feature
+        // layout keys off them.
+        assert_eq!(LEGACY_OP_TYPE_COUNT, 16);
+        assert_eq!(OpType::Mul as usize, 15);
+        assert_eq!(OpType::Embedding as usize, 16);
+        assert_eq!(OpType::GELU as usize, OP_TYPE_COUNT - 1);
+    }
+
+    #[test]
+    fn transformer_params() {
+        // Embedding: vocab × dim table.
+        assert_eq!(
+            OpKind::Embedding {
+                vocab: 1000,
+                dim: 64
+            }
+            .param_count(),
+            64_000
+        );
+        // LayerNorm: gamma + beta.
+        assert_eq!(OpKind::LayerNorm { dim: 128 }.param_count(), 256);
+        // MHA: 4·d² weights + 4·d biases.
+        assert_eq!(OpKind::mha(128, 4, 64).param_count(), 4 * 128 * 128 + 4 * 128);
+        assert_eq!(OpKind::GELU.param_count(), 0);
+    }
+
+    #[test]
+    fn seq_input_shares_input_type_but_not_hash() {
+        let seq = OpKind::seq_input(128, 30_000);
+        assert_eq!(seq.ty(), OpType::Input);
+        // Same two attribute values must still hash differently across the
+        // image/sequence variants (both map to the Input NSM index).
+        let img = OpKind::input(128, 30_000);
+        assert_ne!(seq.attr_hash(), img.attr_hash());
+    }
+
+    #[test]
+    fn attn_hash_sees_every_dim() {
+        let base = OpKind::mha(128, 4, 64).attr_hash();
+        assert_ne!(base, OpKind::mha(256, 4, 64).attr_hash());
+        assert_ne!(base, OpKind::mha(128, 8, 64).attr_hash());
+        assert_ne!(base, OpKind::mha(128, 4, 128).attr_hash());
     }
 }

@@ -9,7 +9,8 @@ use super::op::OpKind;
 use super::{Graph, NodeId};
 
 /// Output tensor shape of a node. `[n, c, h, w]` for feature maps,
-/// `[n, f]` for flattened/linear tensors.
+/// `[n, f]` for flattened/linear tensors, `[n, t, d]` for token
+/// sequences (`t` tokens of `d` features each).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum TensorShape {
     Map {
@@ -21,6 +22,11 @@ pub enum TensorShape {
     Vec {
         n: usize,
         f: usize,
+    },
+    Seq {
+        n: usize,
+        t: usize,
+        d: usize,
     },
 }
 
@@ -35,6 +41,9 @@ impl TensorShape {
                 .saturating_mul(h as u64)
                 .saturating_mul(w as u64),
             TensorShape::Vec { n, f } => (n as u64).saturating_mul(f as u64),
+            TensorShape::Seq { n, t, d } => (n as u64)
+                .saturating_mul(t as u64)
+                .saturating_mul(d as u64),
         }
     }
 
@@ -47,19 +56,33 @@ impl TensorShape {
         match *self {
             TensorShape::Map { c, .. } => c,
             TensorShape::Vec { f, .. } => f,
+            TensorShape::Seq { d, .. } => d,
         }
     }
 
     pub fn spatial(&self) -> usize {
         match *self {
             TensorShape::Map { h, .. } => h,
-            TensorShape::Vec { .. } => 1,
+            TensorShape::Vec { .. } | TensorShape::Seq { .. } => 1,
         }
     }
 
     pub fn batch(&self) -> usize {
         match *self {
-            TensorShape::Map { n, .. } | TensorShape::Vec { n, .. } => n,
+            TensorShape::Map { n, .. }
+            | TensorShape::Vec { n, .. }
+            | TensorShape::Seq { n, .. } => n,
+        }
+    }
+
+    /// View as a token sequence: `Seq` as-is, a feature map as `h·w`
+    /// tokens of `c` features (ViT-style patch grid). `Vec` has no
+    /// token axis.
+    pub fn as_seq(&self) -> Option<(usize, usize, usize)> {
+        match *self {
+            TensorShape::Seq { n, t, d } => Some((n, t, d)),
+            TensorShape::Map { n, c, h, w } => Some((n, h.saturating_mul(w), c)),
+            TensorShape::Vec { .. } => None,
         }
     }
 }
@@ -120,6 +143,14 @@ fn infer_one(
             h: in_hw,
             w: in_hw,
         },
+        // Token-id batch. The channels/hw overrides are image-dataset
+        // knobs and do not apply here: seq_len comes from the op itself,
+        // and each token is a single id (d=1) until embedded.
+        OpKind::SeqInput { seq_len, .. } => TensorShape::Seq {
+            n: batch,
+            t: *seq_len,
+            d: 1,
+        },
         OpKind::Conv2d(c) => {
             let TensorShape::Map { n, c: ci, h, .. } = *input(0)? else {
                 crate::bail!("node {id}: Conv2d over non-map input");
@@ -153,8 +184,56 @@ fn infer_one(
             }
             s
         }
-        OpKind::ReLU | OpKind::Sigmoid | OpKind::Dropout { .. } | OpKind::Softmax => {
-            input(0)?.clone()
+        OpKind::ReLU
+        | OpKind::Sigmoid
+        | OpKind::GELU
+        | OpKind::Dropout { .. }
+        | OpKind::Softmax => input(0)?.clone(),
+        OpKind::Embedding { dim, .. } => {
+            let Some((n, t, d)) = input(0)?.as_seq() else {
+                crate::bail!("node {id}: Embedding over non-sequence input");
+            };
+            if d != 1 {
+                crate::bail!(
+                    "graph '{}' node {id}: Embedding expects raw token ids (d=1), got d={d}",
+                    g.name
+                );
+            }
+            TensorShape::Seq { n, t, d: *dim }
+        }
+        OpKind::LayerNorm { dim } => {
+            // Accepts a sequence, or a feature map viewed as h·w tokens of
+            // c features (ViT patch grid) — no explicit reshape op needed.
+            let Some((n, t, d)) = input(0)?.as_seq() else {
+                crate::bail!("node {id}: LayerNorm over non-sequence input");
+            };
+            if d != *dim {
+                crate::bail!(
+                    "graph '{}' node {id}: LayerNorm expects {dim} features, got {d}",
+                    g.name
+                );
+            }
+            TensorShape::Seq { n, t, d }
+        }
+        OpKind::MultiHeadAttention {
+            embed_dim, seq_len, ..
+        } => {
+            let Some((n, t, d)) = input(0)?.as_seq() else {
+                crate::bail!("node {id}: MultiHeadAttention over non-sequence input");
+            };
+            if d != *embed_dim {
+                crate::bail!(
+                    "graph '{}' node {id}: MultiHeadAttention expects embed_dim {embed_dim}, got {d}",
+                    g.name
+                );
+            }
+            if t != *seq_len {
+                crate::bail!(
+                    "graph '{}' node {id}: MultiHeadAttention expects seq_len {seq_len}, got {t}",
+                    g.name
+                );
+            }
+            TensorShape::Seq { n, t, d }
         }
         OpKind::MaxPool(p) | OpKind::AvgPool(p) => {
             let TensorShape::Map { n, c, h, .. } = *input(0)? else {
@@ -166,12 +245,16 @@ fn infer_one(
             }
             TensorShape::Map { n, c, h: oh, w: oh }
         }
-        OpKind::GlobalAvgPool => {
-            let TensorShape::Map { n, c, .. } = *input(0)? else {
-                crate::bail!("node {id}: GlobalAvgPool over non-map input");
-            };
-            TensorShape::Map { n, c, h: 1, w: 1 }
-        }
+        OpKind::GlobalAvgPool => match *input(0)? {
+            TensorShape::Map { n, c, .. } => TensorShape::Map { n, c, h: 1, w: 1 },
+            // Mean-pool over the token axis — the standard sequence
+            // classification head. Lands back in map-land so the usual
+            // Flatten+Linear classifier applies unchanged.
+            TensorShape::Seq { n, d, .. } => TensorShape::Map { n, c: d, h: 1, w: 1 },
+            TensorShape::Vec { .. } => {
+                crate::bail!("node {id}: GlobalAvgPool over non-map input")
+            }
+        },
         OpKind::Flatten => {
             let s = input(0)?;
             TensorShape::Vec {
@@ -182,21 +265,38 @@ fn infer_one(
         OpKind::Linear {
             in_features,
             out_features,
-        } => {
-            let TensorShape::Vec { n, f } = *input(0)? else {
-                crate::bail!("node {id}: Linear over non-vector input (flatten first)");
-            };
-            if f != *in_features {
-                crate::bail!(
-                    "graph '{}' node {id}: Linear expects {in_features} features, got {f}",
-                    g.name
-                );
+        } => match *input(0)? {
+            TensorShape::Vec { n, f } => {
+                if f != *in_features {
+                    crate::bail!(
+                        "graph '{}' node {id}: Linear expects {in_features} features, got {f}",
+                        g.name
+                    );
+                }
+                TensorShape::Vec {
+                    n,
+                    f: *out_features,
+                }
             }
-            TensorShape::Vec {
-                n,
-                f: *out_features,
+            // Position-wise (feed-forward) application: the same weight
+            // matrix applied at every token.
+            TensorShape::Seq { n, t, d } => {
+                if d != *in_features {
+                    crate::bail!(
+                        "graph '{}' node {id}: Linear expects {in_features} features, got {d}",
+                        g.name
+                    );
+                }
+                TensorShape::Seq {
+                    n,
+                    t,
+                    d: *out_features,
+                }
             }
-        }
+            TensorShape::Map { .. } => {
+                crate::bail!("node {id}: Linear over non-vector input (flatten first)")
+            }
+        },
         OpKind::Add => {
             let first = input(0)?.clone();
             for i in 1..node.inputs.len() {
@@ -369,5 +469,93 @@ mod tests {
             w: 4,
         };
         assert_eq!(s.bytes(), 2 * 3 * 4 * 4 * 4);
+    }
+
+    #[test]
+    fn encoder_block_chain() {
+        // SeqInput → Embedding → LayerNorm → MHA → Linear(ffn) → GELU →
+        // Linear → GAP → Flatten → Linear classifier.
+        let mut g = Graph::new("enc");
+        let x = g.add(OpKind::seq_input(64, 1000), &[]);
+        let e = g.add(OpKind::Embedding { vocab: 1000, dim: 32 }, &[x]);
+        let ln = g.add(OpKind::LayerNorm { dim: 32 }, &[e]);
+        let a = g.add(OpKind::mha(32, 4, 64), &[ln]);
+        let r = g.add(OpKind::Add, &[a, e]);
+        let f1 = g.add(
+            OpKind::Linear {
+                in_features: 32,
+                out_features: 128,
+            },
+            &[r],
+        );
+        let ge = g.add(OpKind::GELU, &[f1]);
+        let f2 = g.add(
+            OpKind::Linear {
+                in_features: 128,
+                out_features: 32,
+            },
+            &[ge],
+        );
+        let gp = g.add(OpKind::GlobalAvgPool, &[f2]);
+        let fl = g.add(OpKind::Flatten, &[gp]);
+        let head = g.add(
+            OpKind::Linear {
+                in_features: 32,
+                out_features: 2,
+            },
+            &[fl],
+        );
+        // The channels/hw overrides are ignored by SeqInput.
+        let shapes = infer_shapes(&g, 4, 3, 32).unwrap();
+        assert_eq!(shapes[x], TensorShape::Seq { n: 4, t: 64, d: 1 });
+        assert_eq!(shapes[e], TensorShape::Seq { n: 4, t: 64, d: 32 });
+        assert_eq!(shapes[a], TensorShape::Seq { n: 4, t: 64, d: 32 });
+        assert_eq!(shapes[f1], TensorShape::Seq { n: 4, t: 64, d: 128 });
+        assert_eq!(
+            shapes[gp],
+            TensorShape::Map {
+                n: 4,
+                c: 32,
+                h: 1,
+                w: 1
+            }
+        );
+        assert_eq!(shapes[head], TensorShape::Vec { n: 4, f: 2 });
+    }
+
+    #[test]
+    fn map_viewed_as_patch_sequence() {
+        // ViT-style: conv patch-embed, then LayerNorm/MHA treat the
+        // 8×8 map as 64 tokens of 16 features.
+        let mut g = Graph::new("vit");
+        let x = g.add(OpKind::input(3, 32), &[]);
+        let pe = g.add(OpKind::conv(3, 16, 4, 4, 0), &[x]);
+        let ln = g.add(OpKind::LayerNorm { dim: 16 }, &[pe]);
+        let a = g.add(OpKind::mha(16, 2, 64), &[ln]);
+        let shapes = infer_shapes(&g, 2, 3, 32).unwrap();
+        assert_eq!(shapes[ln], TensorShape::Seq { n: 2, t: 64, d: 16 });
+        assert_eq!(shapes[a], TensorShape::Seq { n: 2, t: 64, d: 16 });
+    }
+
+    #[test]
+    fn attn_dim_mismatches_detected() {
+        // Wrong embed_dim.
+        let mut g = Graph::new("bad-mha-d");
+        let x = g.add(OpKind::seq_input(16, 100), &[]);
+        let e = g.add(OpKind::Embedding { vocab: 100, dim: 8 }, &[x]);
+        g.add(OpKind::mha(32, 4, 16), &[e]);
+        assert!(infer_shapes(&g, 1, 3, 32).is_err());
+        // Wrong seq_len.
+        let mut g2 = Graph::new("bad-mha-t");
+        let x = g2.add(OpKind::seq_input(16, 100), &[]);
+        let e = g2.add(OpKind::Embedding { vocab: 100, dim: 8 }, &[x]);
+        g2.add(OpKind::mha(8, 2, 99), &[e]);
+        assert!(infer_shapes(&g2, 1, 3, 32).is_err());
+        // Embedding over already-embedded tokens.
+        let mut g3 = Graph::new("bad-embed");
+        let x = g3.add(OpKind::seq_input(16, 100), &[]);
+        let e = g3.add(OpKind::Embedding { vocab: 100, dim: 8 }, &[x]);
+        g3.add(OpKind::Embedding { vocab: 100, dim: 8 }, &[e]);
+        assert!(infer_shapes(&g3, 1, 3, 32).is_err());
     }
 }

@@ -1,9 +1,11 @@
 //! Exporting graphs back to specs — the inverse of lowering.
 //!
 //! Every zoo network round-trips `Graph → spec → Graph` exactly, which
-//! gives the ingest pipeline a 34-network golden corpus: the spec of a
+//! gives the ingest pipeline a 38-network golden corpus: the spec of a
 //! zoo model must lower to a graph `==` the builder's, with identical
-//! params, FLOPs, feature vectors and cache keys.
+//! params, FLOPs, feature vectors and cache keys. Image graphs export
+//! under the v1 tag byte-for-byte as before; token-sequence graphs
+//! (`SeqInput` root) export a sequence input section under the v2 tag.
 
 use super::spec::{InputSpec, LayerSpec, ModelSpec, INPUT_ID};
 use crate::graph::{Graph, OpKind};
@@ -17,12 +19,14 @@ pub fn spec_from_graph(g: &Graph) -> crate::Result<ModelSpec> {
     let Some(first) = g.nodes.first() else {
         crate::bail!("cannot export an empty graph");
     };
-    let OpKind::Input { channels, hw } = first.kind else {
-        crate::bail!("graph must start with an Input node");
+    let input = match first.kind {
+        OpKind::Input { channels, hw } => InputSpec::image(channels, hw),
+        OpKind::SeqInput { seq_len, vocab } => InputSpec::sequence(seq_len, vocab),
+        _ => crate::bail!("graph must start with an Input node"),
     };
     let mut layers = Vec::with_capacity(g.len().saturating_sub(1));
     for (id, node) in g.nodes.iter().enumerate().skip(1) {
-        if matches!(node.kind, OpKind::Input { .. }) {
+        if matches!(node.kind, OpKind::Input { .. } | OpKind::SeqInput { .. }) {
             crate::bail!("node {id}: only single-input graphs are expressible as specs");
         }
         let inputs = node
@@ -45,7 +49,7 @@ pub fn spec_from_graph(g: &Graph) -> crate::Result<ModelSpec> {
     }
     Ok(ModelSpec {
         name: g.name.clone(),
-        input: InputSpec { channels, hw },
+        input,
         layers,
     })
 }
@@ -58,7 +62,9 @@ pub fn spec_for_zoo(name: &str, in_ch: usize, classes: usize) -> crate::Result<M
 /// The spec-format op name of a non-`Input` kind.
 fn op_name(kind: &OpKind) -> &'static str {
     match kind {
-        OpKind::Input { .. } => unreachable!("Input is the spec's input section, not a layer"),
+        OpKind::Input { .. } | OpKind::SeqInput { .. } => {
+            unreachable!("Input is the spec's input section, not a layer")
+        }
         OpKind::Conv2d(_) => "conv2d",
         OpKind::BatchNorm { .. } => "batchnorm",
         OpKind::ReLU => "relu",
@@ -74,6 +80,10 @@ fn op_name(kind: &OpKind) -> &'static str {
         OpKind::Softmax => "softmax",
         OpKind::ChannelShuffle { .. } => "channelshuffle",
         OpKind::Mul => "mul",
+        OpKind::Embedding { .. } => "embedding",
+        OpKind::LayerNorm { .. } => "layernorm",
+        OpKind::MultiHeadAttention { .. } => "multiheadattention",
+        OpKind::GELU => "gelu",
     }
 }
 
@@ -119,6 +129,20 @@ fn attrs_json(kind: &OpKind) -> BTreeMap<String, Json> {
             );
         }
         OpKind::ChannelShuffle { groups } => num(&mut m, "groups", *groups),
+        OpKind::Embedding { vocab, dim } => {
+            num(&mut m, "vocab", *vocab);
+            num(&mut m, "dim", *dim);
+        }
+        OpKind::LayerNorm { dim } => num(&mut m, "dim", *dim),
+        OpKind::MultiHeadAttention {
+            embed_dim,
+            heads,
+            seq_len,
+        } => {
+            num(&mut m, "embed_dim", *embed_dim);
+            num(&mut m, "heads", *heads);
+            num(&mut m, "seq_len", *seq_len);
+        }
         _ => {}
     }
     m
@@ -132,11 +156,12 @@ mod tests {
     use crate::sim::{DatasetKind, TrainConfig};
 
     /// The tentpole's golden-corpus guarantee: every zoo network
-    /// round-trips export → JSON text → parse → lower into a graph that
-    /// is `==` the builder's, with identical op counts, params, FLOPs,
-    /// and byte-identical feature vectors.
+    /// (CNN and transformer alike) round-trips export → JSON text →
+    /// parse → lower into a graph that is `==` the builder's, with
+    /// identical op counts, params, FLOPs, and byte-identical feature
+    /// vectors.
     #[test]
-    fn all_34_zoo_networks_roundtrip_exactly() {
+    fn all_38_zoo_networks_roundtrip_exactly() {
         let cfg = TrainConfig::paper_default(DatasetKind::Cifar100, 64);
         for name in zoo::all_names() {
             let built = zoo::build(name, 3, 100).unwrap();
@@ -161,6 +186,26 @@ mod tests {
                 "{name}: feature vectors must be byte-identical"
             );
         }
+    }
+
+    /// Transformer zoo exports must carry the v2 tag (they use v2-only
+    /// ops and a sequence input section), and parse back under version
+    /// dispatch; image exports keep the v1 tag byte-for-byte.
+    #[test]
+    fn transformer_exports_declare_v2_and_cnn_exports_stay_v1() {
+        for name in zoo::TRANSFORMER_4 {
+            let text = spec_for_zoo(name, 3, 100).unwrap().to_json().to_string();
+            assert!(
+                text.contains(super::super::spec::SPEC_FORMAT_V2),
+                "{name}: transformer export must be tagged v2"
+            );
+            ModelSpec::parse_str(&text).unwrap().compile().unwrap();
+        }
+        let cnn = spec_for_zoo("resnet18", 3, 100).unwrap().to_json().to_string();
+        assert!(
+            cnn.contains(super::super::spec::SPEC_FORMAT),
+            "image exports must keep the v1 tag"
+        );
     }
 
     #[test]

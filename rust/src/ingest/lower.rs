@@ -38,8 +38,13 @@ impl ParsedSpec {
         self.input.hw
     }
 
-    /// The dataset this spec's input geometry matches, if any.
+    /// The dataset this spec's input matches, if any. Token-sequence
+    /// specs match the sequence corpus directly — they never go through
+    /// the channels×hw image-geometry check.
     pub fn matching_dataset(&self) -> Option<DatasetKind> {
+        if self.input.is_sequence() {
+            return Some(DatasetKind::Sst2);
+        }
         DatasetKind::for_channels(self.input.channels)
             .filter(|d| d.hw() == self.input.hw)
     }
@@ -51,6 +56,32 @@ impl ParsedSpec {
     /// different one would silently describe a network that does not
     /// exist.
     pub fn check_dataset(&self, dataset: DatasetKind) -> crate::Result<()> {
+        if self.input.is_sequence() {
+            if !dataset.is_sequence() {
+                crate::bail!(
+                    "spec '{}' declares a {}-token sequence input but dataset {} provides \
+                     {}-channel {}x{} image samples",
+                    self.name,
+                    self.input.seq_len,
+                    dataset.name(),
+                    dataset.in_channels(),
+                    dataset.hw(),
+                    dataset.hw()
+                );
+            }
+            return Ok(());
+        }
+        if dataset.is_sequence() {
+            crate::bail!(
+                "spec '{}' declares a {}-channel {}x{} image input but dataset {} provides \
+                 token-sequence samples",
+                self.name,
+                self.input.channels,
+                self.input.hw,
+                self.input.hw,
+                dataset.name()
+            );
+        }
         if self.input.channels != dataset.in_channels() || self.input.hw != dataset.hw() {
             crate::bail!(
                 "spec '{}' declares a {}-channel {}x{} input but dataset {} provides \
@@ -102,7 +133,11 @@ pub fn compile(spec: &ModelSpec) -> crate::Result<ParsedSpec> {
 pub fn lower(spec: &ModelSpec) -> crate::Result<Graph> {
     let resolved = validate::resolve(spec)?;
     let mut g = Graph::new(&spec.name);
-    g.add(OpKind::input(spec.input.channels, spec.input.hw), &[]);
+    if spec.input.is_sequence() {
+        g.add(OpKind::seq_input(spec.input.seq_len, spec.input.vocab), &[]);
+    } else {
+        g.add(OpKind::input(spec.input.channels, spec.input.hw), &[]);
+    }
     for (kind, inputs) in resolved.kinds.into_iter().zip(&resolved.inputs) {
         g.add(kind, inputs);
     }
@@ -170,6 +205,46 @@ mod tests {
         hw64.input.hw = 64;
         assert_eq!(hw64.matching_dataset(), None);
         assert!(hw64.check_dataset(DatasetKind::Cifar100).is_err());
+    }
+
+    const SEQ_SPEC: &str = r#"{
+        "format": "dnnabacus-spec-v2",
+        "name": "seq-tiny",
+        "input": {"seq_len": 16, "vocab": 100},
+        "layers": [
+            {"op": "embedding", "attrs": {"vocab": 100, "dim": 8}},
+            {"op": "layernorm", "attrs": {"dim": 8}},
+            {"op": "multiheadattention",
+             "attrs": {"embed_dim": 8, "heads": 2, "seq_len": 16}},
+            {"op": "globalavgpool"},
+            {"op": "flatten"},
+            {"op": "linear", "attrs": {"in_features": 8, "out_features": 2}}
+        ]
+    }"#;
+
+    #[test]
+    fn sequence_spec_compiles_and_matches_sequence_dataset() {
+        let parsed = compile_str(SEQ_SPEC).unwrap();
+        assert!(matches!(
+            parsed.graph.nodes[0].kind,
+            crate::graph::OpKind::SeqInput { seq_len: 16, vocab: 100 }
+        ));
+        // The sequence path never consults channel geometry.
+        assert_eq!(parsed.matching_dataset(), Some(DatasetKind::Sst2));
+        parsed.check_dataset(DatasetKind::Sst2).unwrap();
+        let e = parsed.check_dataset(DatasetKind::Mnist).unwrap_err();
+        assert!(e.to_string().contains("token sequence"), "{e}");
+        // And image specs reject the sequence corpus.
+        let img = crate::ingest::ModelSpec::parse_str(BRANCHY)
+            .unwrap()
+            .compile()
+            .unwrap();
+        assert!(img.check_dataset(DatasetKind::Sst2).is_err());
+        // Featurizable end to end at the matched dataset.
+        let cfg = TrainConfig::paper_default(DatasetKind::Sst2, 32);
+        let f = feature_vector(&parsed.graph, &cfg, StructureRep::Nsm);
+        assert_eq!(f.len(), crate::features::feature_dim(StructureRep::Nsm));
+        assert!(f.iter().all(|x| x.is_finite()));
     }
 
     #[test]

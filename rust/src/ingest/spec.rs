@@ -22,6 +22,13 @@
 //! }
 //! ```
 //!
+//! Spec **v2** (`"format": "dnnabacus-spec-v2"`) is a strict superset:
+//! the `input` section may instead declare a token sequence
+//! (`{"seq_len": 128, "vocab": 30522}`) and four transformer-era ops
+//! become available (`embedding`, `layernorm`, `multiheadattention`,
+//! `gelu`). v1 documents parse exactly as before; using a v2 feature
+//! under the v1 tag is an error naming the offending layer.
+//!
 //! This module is deliberately *syntactic*: it checks JSON-level shape
 //! (fields present, right types) and translates per-layer `op`/`attrs`
 //! into [`OpKind`] with precise messages, but whole-spec properties
@@ -32,8 +39,13 @@ use crate::graph::op::{ConvAttrs, OpKind, PoolAttrs};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
-/// The format tag every spec document must carry (field `format`).
+/// The v1 format tag (field `format`): conv-era ops, image inputs only.
 pub const SPEC_FORMAT: &str = "dnnabacus-spec-v1";
+
+/// The v2 format tag: everything v1 accepts, plus sequence inputs
+/// (`seq_len`/`vocab`) and the transformer-era ops. v1 documents keep
+/// parsing unchanged — the version is dispatched per document.
+pub const SPEC_FORMAT_V2: &str = "dnnabacus-spec-v2";
 
 /// The reserved layer id naming the graph input.
 pub const INPUT_ID: &str = "input";
@@ -41,7 +53,7 @@ pub const INPUT_ID: &str = "input";
 /// Layer op names accepted in `op` fields, in NSM vocabulary order
 /// (minus `Input`, which is declared by the `input` section, not a
 /// layer).
-pub const OP_NAMES: [&str; 15] = [
+pub const OP_NAMES: [&str; 19] = [
     "conv2d",
     "batchnorm",
     "relu",
@@ -57,13 +69,50 @@ pub const OP_NAMES: [&str; 15] = [
     "softmax",
     "channelshuffle",
     "mul",
+    "embedding",
+    "layernorm",
+    "multiheadattention",
+    "gelu",
 ];
 
-/// The `input` section: a `channels × hw × hw` image batch.
+/// The ops a v1 document may not use — declaring one demands the
+/// [`SPEC_FORMAT_V2`] tag.
+pub const V2_ONLY_OPS: [&str; 4] = ["embedding", "layernorm", "multiheadattention", "gelu"];
+
+/// The `input` section: a `channels × hw × hw` image batch, or (spec v2)
+/// a `seq_len`-token sequence over a `vocab`-sized vocabulary. Exactly
+/// one of the two styles is populated; the other pair is zero.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct InputSpec {
     pub channels: usize,
     pub hw: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+impl InputSpec {
+    pub fn image(channels: usize, hw: usize) -> InputSpec {
+        InputSpec {
+            channels,
+            hw,
+            seq_len: 0,
+            vocab: 0,
+        }
+    }
+
+    pub fn sequence(seq_len: usize, vocab: usize) -> InputSpec {
+        InputSpec {
+            channels: 0,
+            hw: 0,
+            seq_len,
+            vocab,
+        }
+    }
+
+    /// Is this a token-sequence input (v2 style)?
+    pub fn is_sequence(&self) -> bool {
+        self.seq_len > 0
+    }
 }
 
 /// One layer: an op name, optional explicit inputs, optional attrs.
@@ -111,9 +160,13 @@ impl ModelSpec {
                 .ok_or_else(|| crate::err!("'format' must be a string"))?,
             None => crate::bail!("missing 'format' field (expected \"{SPEC_FORMAT}\")"),
         };
-        if format != SPEC_FORMAT {
-            crate::bail!("unsupported format '{format}' (this build reads \"{SPEC_FORMAT}\")");
-        }
+        let v2 = match format {
+            SPEC_FORMAT => false,
+            SPEC_FORMAT_V2 => true,
+            _ => crate::bail!(
+                "unsupported format '{format}' (this build reads \"{SPEC_FORMAT}\" and \"{SPEC_FORMAT_V2}\")"
+            ),
+        };
         let name = match doc.get("name") {
             Some(j) => j
                 .as_str()
@@ -126,15 +179,36 @@ impl ModelSpec {
         }
         let input = match doc.get("input") {
             Some(j @ Json::Obj(m)) => {
-                for key in m.keys() {
-                    if !matches!(key.as_str(), "channels" | "hw") {
-                        crate::bail!("input section: unknown field '{key}' (expected channels/hw)");
-                    }
+                let seq_style = m.contains_key("seq_len") || m.contains_key("vocab");
+                if seq_style && !v2 {
+                    crate::bail!(
+                        "input section: sequence inputs (seq_len/vocab) require format \"{SPEC_FORMAT_V2}\""
+                    );
                 }
-                InputSpec {
-                    channels: positive_usize(j, "channels")
-                        .map_err(|e| e.context("input section"))?,
-                    hw: positive_usize(j, "hw").map_err(|e| e.context("input section"))?,
+                if seq_style {
+                    for key in m.keys() {
+                        if !matches!(key.as_str(), "seq_len" | "vocab") {
+                            crate::bail!(
+                                "input section: unknown field '{key}' (expected seq_len/vocab)"
+                            );
+                        }
+                    }
+                    InputSpec::sequence(
+                        positive_usize(j, "seq_len").map_err(|e| e.context("input section"))?,
+                        positive_usize(j, "vocab").map_err(|e| e.context("input section"))?,
+                    )
+                } else {
+                    for key in m.keys() {
+                        if !matches!(key.as_str(), "channels" | "hw") {
+                            crate::bail!(
+                                "input section: unknown field '{key}' (expected channels/hw)"
+                            );
+                        }
+                    }
+                    InputSpec::image(
+                        positive_usize(j, "channels").map_err(|e| e.context("input section"))?,
+                        positive_usize(j, "hw").map_err(|e| e.context("input section"))?,
+                    )
                 }
             }
             Some(_) => crate::bail!("'input' must be an object"),
@@ -155,6 +229,17 @@ impl ModelSpec {
                 LayerSpec::from_json(l, idx).map_err(|e| e.context(format!("layer {idx}")))?,
             );
         }
+        if !v2 {
+            for l in &layers {
+                if V2_ONLY_OPS.contains(&l.op.as_str()) {
+                    crate::bail!(
+                        "layer '{}': op '{}' requires format \"{SPEC_FORMAT_V2}\"",
+                        l.id,
+                        l.op
+                    );
+                }
+            }
+        }
         Ok(ModelSpec {
             name,
             input,
@@ -162,15 +247,33 @@ impl ModelSpec {
         })
     }
 
+    /// Does this spec need the v2 format tag? True when the input is a
+    /// token sequence or any layer uses a v2-only op. Deriving the tag
+    /// from content (rather than storing one) keeps v1 documents
+    /// round-trip byte-stable.
+    pub fn needs_v2(&self) -> bool {
+        self.input.is_sequence()
+            || self
+                .layers
+                .iter()
+                .any(|l| V2_ONLY_OPS.contains(&l.op.as_str()))
+    }
+
     /// Serialize back to a JSON document (the inverse of
     /// [`ModelSpec::from_json`] — round-trip exact).
     pub fn to_json(&self) -> Json {
         let mut input = Json::obj();
-        input
-            .set("channels", self.input.channels)
-            .set("hw", self.input.hw);
+        if self.input.is_sequence() {
+            input
+                .set("seq_len", self.input.seq_len)
+                .set("vocab", self.input.vocab);
+        } else {
+            input
+                .set("channels", self.input.channels)
+                .set("hw", self.input.hw);
+        }
         let mut doc = Json::obj();
-        doc.set("format", SPEC_FORMAT)
+        doc.set("format", if self.needs_v2() { SPEC_FORMAT_V2 } else { SPEC_FORMAT })
             .set("name", self.name.as_str())
             .set("input", input)
             .set(
@@ -359,6 +462,31 @@ impl LayerSpec {
                 })
             }
             "mul" => self.no_attrs(OpKind::Mul),
+            "embedding" => {
+                self.check_attr_keys(&["vocab", "dim"])?;
+                Ok(OpKind::Embedding {
+                    vocab: nonzero(self.require("vocab")?, "vocab")?,
+                    dim: nonzero(self.require("dim")?, "dim")?,
+                })
+            }
+            "layernorm" => {
+                self.check_attr_keys(&["dim"])?;
+                Ok(OpKind::LayerNorm {
+                    dim: nonzero(self.require("dim")?, "dim")?,
+                })
+            }
+            // heads dividing embed_dim is *not* checked here: that is the
+            // analyzer's DA034, which reports it with a diagnostic rather
+            // than a parse failure.
+            "multiheadattention" => {
+                self.check_attr_keys(&["embed_dim", "heads", "seq_len"])?;
+                Ok(OpKind::MultiHeadAttention {
+                    embed_dim: nonzero(self.require("embed_dim")?, "embed_dim")?,
+                    heads: nonzero(self.require("heads")?, "heads")?,
+                    seq_len: nonzero(self.require("seq_len")?, "seq_len")?,
+                })
+            }
+            "gelu" => self.no_attrs(OpKind::GELU),
             other => crate::bail!("unknown op '{other}' (known ops: {})", OP_NAMES.join(", ")),
         }
     }
@@ -468,7 +596,7 @@ mod tests {
     fn parses_tiny_spec() {
         let s = ModelSpec::parse_str(TINY).unwrap();
         assert_eq!(s.name, "tiny");
-        assert_eq!(s.input, InputSpec { channels: 3, hw: 32 });
+        assert_eq!(s.input, InputSpec::image(3, 32));
         assert_eq!(s.layers.len(), 5);
         assert_eq!(s.layers[0].id, "c1");
         assert_eq!(s.layers[1].id, "layer1", "auto id");
@@ -595,6 +723,88 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{e:#}").contains("non-negative integer"), "{e:#}");
+    }
+
+    const TINY_V2: &str = r#"{
+        "format": "dnnabacus-spec-v2",
+        "name": "tiny-encoder",
+        "input": {"seq_len": 16, "vocab": 100},
+        "layers": [
+            {"id": "emb", "op": "embedding", "attrs": {"vocab": 100, "dim": 8}},
+            {"op": "layernorm", "attrs": {"dim": 8}},
+            {"op": "multiheadattention",
+             "attrs": {"embed_dim": 8, "heads": 2, "seq_len": 16}},
+            {"op": "gelu"},
+            {"op": "globalavgpool"},
+            {"op": "flatten"},
+            {"op": "linear", "attrs": {"in_features": 8, "out_features": 2}}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_v2_sequence_spec() {
+        let s = ModelSpec::parse_str(TINY_V2).unwrap();
+        assert_eq!(s.input, InputSpec::sequence(16, 100));
+        assert!(s.input.is_sequence());
+        assert!(s.needs_v2());
+        assert_eq!(s.layers[0].op_kind().unwrap(), OpKind::Embedding { vocab: 100, dim: 8 });
+        assert_eq!(s.layers[2].op_kind().unwrap(), OpKind::mha(8, 2, 16));
+    }
+
+    #[test]
+    fn v1_documents_cannot_use_v2_features() {
+        // v2-only op under the v1 tag: the error names the layer and op.
+        let e = ModelSpec::parse_str(
+            r#"{"format": "dnnabacus-spec-v1", "name": "x",
+                "input": {"channels": 3, "hw": 32},
+                "layers": [{"op": "relu"}, {"id": "ln", "op": "layernorm",
+                            "attrs": {"dim": 3}}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("layer 'ln'") && e.contains("dnnabacus-spec-v2"), "{e}");
+        // Sequence input under the v1 tag.
+        let e = ModelSpec::parse_str(
+            r#"{"format": "dnnabacus-spec-v1", "name": "x",
+                "input": {"seq_len": 16, "vocab": 100},
+                "layers": [{"op": "gelu"}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("require format"), "{e}");
+    }
+
+    #[test]
+    fn format_tag_is_derived_from_content() {
+        // A v1 document round-trips with the v1 tag (byte-stable corpus)…
+        let v1 = ModelSpec::parse_str(TINY).unwrap();
+        assert!(!v1.needs_v2());
+        assert_eq!(v1.to_json().get("format").unwrap().as_str(), Some(SPEC_FORMAT));
+        // …and a sequence document re-exports as v2 and re-parses equal.
+        let v2 = ModelSpec::parse_str(TINY_V2).unwrap();
+        assert_eq!(v2.to_json().get("format").unwrap().as_str(), Some(SPEC_FORMAT_V2));
+        let back = ModelSpec::from_json(&v2.to_json()).unwrap();
+        assert_eq!(back, ModelSpec::from_json(&back.to_json()).unwrap());
+        // A v2-tagged document using only v1 features normalizes to v1.
+        let plain = ModelSpec::parse_str(
+            r#"{"format": "dnnabacus-spec-v2", "name": "x",
+                "input": {"channels": 3, "hw": 32},
+                "layers": [{"op": "relu"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(plain.to_json().get("format").unwrap().as_str(), Some(SPEC_FORMAT));
+    }
+
+    #[test]
+    fn mixed_input_styles_rejected() {
+        let e = ModelSpec::parse_str(
+            r#"{"format": "dnnabacus-spec-v2", "name": "x",
+                "input": {"seq_len": 16, "vocab": 100, "hw": 32},
+                "layers": [{"op": "gelu"}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("unknown field 'hw'"), "{e}");
     }
 
     #[test]

@@ -152,7 +152,7 @@ mod tests {
     fn spec_of(layers: Vec<LayerSpec>) -> ModelSpec {
         ModelSpec {
             name: "t".into(),
-            input: InputSpec { channels: 3, hw: 32 },
+            input: InputSpec::image(3, 32),
             layers,
         }
     }

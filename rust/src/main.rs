@@ -14,7 +14,9 @@
 //!   train           train AutoML predictors, write model JSON
 //!   predict         predict one (model, config) cost
 //!   predict-spec    predict a user-defined network from a spec file
-//!                   (dnnabacus-spec-v1 JSON; see README "Model specs")
+//!                   (dnnabacus-spec-v1/-v2 JSON; see README "Model
+//!                   specs" — v2 adds token-sequence inputs and the
+//!                   transformer ops)
 //!   export-spec     write a zoo network as a spec file (--model, --out)
 //!   lint            static-analyze a network without predicting:
 //!                   --spec FILE (or positional) | --model NAME|all;
@@ -33,7 +35,7 @@
 //!   nsm-demo        print the NSM of a model (paper Figures 6-7)
 //!
 //! Common flags: --scale 0.35 --seed 42 --out dir --model vgg16
-//!               --batch 128 --dataset cifar100|mnist --device rtx2080
+//!               --batch 128 --dataset cifar100|mnist|sst2 --device rtx2080
 //!               --framework pytorch|tensorflow --backend automl|mlp
 //!               --json (predict/predict-spec/client/serve --listen:
 //!               machine-readable output)

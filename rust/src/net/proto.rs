@@ -539,7 +539,8 @@ pub fn dataset_by_name(name: &str) -> crate::Result<DatasetKind> {
     match name {
         "mnist" => Ok(DatasetKind::Mnist),
         "cifar100" => Ok(DatasetKind::Cifar100),
-        _ => crate::bail!("unknown dataset '{name}' (mnist|cifar100)"),
+        "sst2" => Ok(DatasetKind::Sst2),
+        _ => crate::bail!("unknown dataset '{name}' (mnist|cifar100|sst2)"),
     }
 }
 

@@ -1,7 +1,7 @@
 //! Histogram-based regression trees — the shared building block of the
 //! GBDT and forest models. Splits minimize child variance over 32
 //! quantile bins per feature (LightGBM-style), which keeps training
-//! tractable on the 20k-point datasets with 270 features.
+//! tractable on the 20k-point datasets with 417 features.
 
 use crate::util::json::Json;
 use crate::util::prng::Rng;

@@ -100,7 +100,7 @@ mod tests {
             return;
         }
         let m = Manifest::load(&artifacts_dir()).unwrap();
-        assert_eq!(m.input_dim, 270);
+        assert_eq!(m.input_dim, 417);
         assert_eq!(m.output_dim, 2);
         assert_eq!(m.layer_dims.len(), 4);
         assert!(m.infer_batches.contains(&32));

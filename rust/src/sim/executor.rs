@@ -183,6 +183,10 @@ pub fn simulate_training(graph: &Graph, cfg: &TrainConfig) -> Result<Measurement
                     startup_bench += sel.time * 4.0;
                 }
             }
+            OpKind::MultiHeadAttention { .. } => {
+                time += attention_time(graph, &shapes, id, cfg) + dispatch
+                    + cfg.device.launch_overhead;
+            }
             _ => {
                 time += elementwise_time(graph, &shapes, id, bw) + dispatch
                     + cfg.device.launch_overhead;
@@ -233,6 +237,12 @@ pub fn simulate_training(graph: &Graph, cfg: &TrainConfig) -> Result<Measurement
                     });
                     time += sel.time + dispatch;
                 }
+            }
+            OpKind::MultiHeadAttention { .. } => {
+                // Backward re-runs every projection and score GEMM twice
+                // (grad wrt data and weights), like the conv phases.
+                time += 2.0 * attention_time(graph, &shapes, id, cfg) + dispatch
+                    + cfg.device.launch_overhead;
             }
             _ => {
                 time += 2.0 * elementwise_time(graph, &shapes, id, bw) + dispatch
@@ -291,12 +301,32 @@ fn elementwise_time(
     let in_bytes: u64 = node.inputs.iter().map(|&s| shapes[s].bytes()).sum();
     let out_bytes = shapes[id].bytes();
     let factor = match node.kind {
-        // Linear layers are compute-ish but small here; BN does two passes.
-        OpKind::BatchNorm { .. } => 2.0,
+        // Linear layers are compute-ish but small here; BN and LN do two
+        // passes (statistics, then normalize).
+        OpKind::BatchNorm { .. } | OpKind::LayerNorm { .. } => 2.0,
         OpKind::Linear { .. } => 1.5,
         _ => 1.0,
     };
     (in_bytes + out_bytes) as f64 * factor / bw
+}
+
+/// Attention is compute-bound at realistic dims: four d×d projections
+/// plus the seq_len²-shaped score/softmax/mix GEMMs. Cost is the slower
+/// of the GEMM time (at a derated peak — attention issues many small
+/// kernels) and the tensor-streaming time.
+fn attention_time(
+    graph: &Graph,
+    shapes: &[crate::graph::shape::TensorShape],
+    id: usize,
+    cfg: &TrainConfig,
+) -> f64 {
+    let node = &graph.nodes[id];
+    let flops = crate::graph::flops::node_flops(graph, shapes, id, &node.kind) as f64;
+    let in_bytes: u64 = node.inputs.iter().map(|&s| shapes[s].bytes()).sum();
+    let bytes = (in_bytes + shapes[id].bytes()) as f64;
+    let compute = flops / (cfg.device.peak_flops * 0.35);
+    let memory = bytes / cfg.device.mem_bw;
+    compute.max(memory)
 }
 
 #[cfg(test)]
@@ -463,6 +493,34 @@ mod tests {
         let mv = simulate_training(&v, &cfg(16)).unwrap();
         let mix = mv.log.normalized_mix();
         assert!(mix[&crate::sim::ConvAlgo::WinogradNonfused] > 0.5, "{mix:?}");
+    }
+
+    #[test]
+    fn transformer_zoo_nets_simulate() {
+        for name in ["bert-tiny", "gpt-nano", "vit-lilliput"] {
+            let g = zoo::build(name, 3, 100).unwrap();
+            let m = simulate_training(&g, &cfg(32)).unwrap();
+            assert!(m.total_time > 0.0, "{name}");
+            assert!(m.peak_mem > 0, "{name}");
+            assert_eq!(m.iterations, 157, "{name}"); // 50k*0.1/32
+        }
+    }
+
+    #[test]
+    fn attention_time_grows_superlinearly_with_seq_len() {
+        let attn_net = |t: usize| {
+            let mut g = Graph::new("attn");
+            let x = g.add(OpKind::seq_input(t, 1000), &[]);
+            let e = g.add(OpKind::Embedding { vocab: 1000, dim: 256 }, &[x]);
+            g.add(OpKind::mha(256, 4, t), &[e]);
+            g
+        };
+        // Dims large enough that attention dwarfs the fixed per-iteration
+        // host overhead; 4× seq_len must then cost strictly more than 4×
+        // (the t² terms).
+        let t1 = simulate_training(&attn_net(256), &cfg(32)).unwrap().iter_time;
+        let t4 = simulate_training(&attn_net(1024), &cfg(32)).unwrap().iter_time;
+        assert!(t4 > 4.0 * t1, "t1={t1} t4={t4}");
     }
 
     #[test]

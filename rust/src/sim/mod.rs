@@ -22,12 +22,18 @@ pub use device::{parse_device_list, DeviceProfile, KNOWN_DEVICES};
 pub use executor::{simulate_training, Measurement, OomError};
 pub use selector::Framework;
 
-/// The two datasets the paper profiles on (§2.1). MNIST is zero-padded
-/// to 32×32 (the LeNet convention) so every zoo model applies to both.
+/// The two image datasets the paper profiles on (§2.1) plus a token-
+/// sequence corpus for the transformer-era workloads. MNIST is
+/// zero-padded to 32×32 (the LeNet convention) so every conv zoo model
+/// applies to both image sets.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DatasetKind {
     Mnist,
     Cifar100,
+    /// SST-2 sentence-classification corpus (GLUE): token sequences,
+    /// 2 classes. The image geometry accessors return harmless dummies —
+    /// sequence graphs take their length from their own `SeqInput` op.
+    Sst2,
 }
 
 impl DatasetKind {
@@ -35,6 +41,7 @@ impl DatasetKind {
         match self {
             DatasetKind::Mnist => "mnist",
             DatasetKind::Cifar100 => "cifar100",
+            DatasetKind::Sst2 => "sst2",
         }
     }
 
@@ -42,12 +49,13 @@ impl DatasetKind {
         match self {
             DatasetKind::Mnist => 60_000,
             DatasetKind::Cifar100 => 50_000,
+            DatasetKind::Sst2 => 67_349,
         }
     }
 
     pub fn in_channels(self) -> usize {
         match self {
-            DatasetKind::Mnist => 1,
+            DatasetKind::Mnist | DatasetKind::Sst2 => 1,
             DatasetKind::Cifar100 => 3,
         }
     }
@@ -56,6 +64,7 @@ impl DatasetKind {
         match self {
             DatasetKind::Mnist => 10,
             DatasetKind::Cifar100 => 100,
+            DatasetKind::Sst2 => 2,
         }
     }
 
@@ -63,8 +72,14 @@ impl DatasetKind {
         32
     }
 
-    /// The dataset whose samples have `channels` input channels, if any
-    /// (the ingest pipeline matches user specs to datasets with this).
+    /// Is this a token-sequence corpus (as opposed to an image set)?
+    pub fn is_sequence(self) -> bool {
+        matches!(self, DatasetKind::Sst2)
+    }
+
+    /// The *image* dataset whose samples have `channels` input channels,
+    /// if any (the ingest pipeline matches image specs to datasets with
+    /// this; sequence specs match [`DatasetKind::Sst2`] directly).
     pub fn for_channels(channels: usize) -> Option<DatasetKind> {
         match channels {
             1 => Some(DatasetKind::Mnist),
@@ -180,6 +195,12 @@ mod tests {
         assert_eq!(DatasetKind::Mnist.in_channels(), 1);
         assert_eq!(DatasetKind::Cifar100.classes(), 100);
         assert_eq!(DatasetKind::Mnist.hw(), 32);
+        assert_eq!(DatasetKind::Sst2.classes(), 2);
+        assert!(DatasetKind::Sst2.is_sequence());
+        assert!(!DatasetKind::Cifar100.is_sequence());
+        // Channel matching stays image-only: sequence specs match Sst2
+        // through the ingest path, never through channel geometry.
+        assert_eq!(DatasetKind::for_channels(1), Some(DatasetKind::Mnist));
     }
 
     #[test]

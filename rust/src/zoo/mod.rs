@@ -2,8 +2,9 @@
 //!
 //! 29 "classic" networks (paper §2.1 — used for the 17,300-point
 //! dataset and Figures 1–12), 5 "unseen" networks held out for the
-//! zero-shot evaluation (Figure 13), and the random model generator
-//! (5,500 extra points, §3.1).
+//! zero-shot evaluation (Figure 13), the random model generator
+//! (5,500 extra points, §3.1), and 4 transformer-era networks
+//! ([`transformer`]) exercising the sequence ops end to end.
 //!
 //! Every zoo graph also round-trips through the [`crate::ingest`] spec
 //! format (`export → parse → lower` is the identity), which makes this
@@ -17,6 +18,7 @@ pub mod mobilenet;
 pub mod random;
 pub mod resnet;
 pub mod shufflenet;
+pub mod transformer;
 pub mod vgg;
 
 pub use random::{random_net, RandomNetCfg};
@@ -69,6 +71,19 @@ pub const UNSEEN_5: [(&str, Builder); 5] = [
     ("se-resnet34", resnet::se_resnet34),
 ];
 
+/// The transformer-era family: three text encoders/decoders over a
+/// [`crate::graph::OpKind::SeqInput`] root and one ViT-style hybrid
+/// over an image root. Kept out of [`CLASSIC_29`]/[`UNSEEN_5`] so the
+/// paper's training/zero-shot splits stay byte-identical.
+pub const TRANSFORMER_4: [&str; 4] = ["bert-tiny", "bert-mini", "gpt-nano", "vit-lilliput"];
+
+const TRANSFORMER_BUILDERS: [(&str, Builder); 4] = [
+    ("bert-tiny", transformer::bert_tiny),
+    ("bert-mini", transformer::bert_mini),
+    ("gpt-nano", transformer::gpt_nano),
+    ("vit-lilliput", transformer::vit_lilliput),
+];
+
 /// The models the paper implements in "PyTorch" (18) vs "TensorFlow" (17),
 /// 6 shared — mapped onto our TorchSim/TfSim framework policies.
 pub fn torch_models() -> Vec<&'static str> {
@@ -89,11 +104,12 @@ pub const FIG12_MODELS: [&str; 5] = [
     "shufflenet-v2",
 ];
 
-/// Look up a builder by name across classic + unseen sets.
+/// Look up a builder by name across classic + unseen + transformer sets.
 pub fn builder(name: &str) -> Option<Builder> {
     CLASSIC_29
         .iter()
         .chain(UNSEEN_5.iter())
+        .chain(TRANSFORMER_BUILDERS.iter())
         .find(|(n, _)| *n == name)
         .map(|(_, b)| *b)
 }
@@ -105,12 +121,13 @@ pub fn build(name: &str, in_ch: usize, classes: usize) -> crate::Result<Graph> {
         .ok_or_else(|| crate::err!("unknown model '{name}'"))
 }
 
-/// All model names (classic then unseen).
+/// All model names (classic, then unseen, then transformer).
 pub fn all_names() -> Vec<&'static str> {
     CLASSIC_29
         .iter()
         .map(|(n, _)| *n)
         .chain(UNSEEN_5.iter().map(|(n, _)| *n))
+        .chain(TRANSFORMER_4)
         .collect()
 }
 
@@ -121,16 +138,20 @@ mod tests {
     use std::collections::BTreeSet;
 
     #[test]
-    fn exactly_29_classic_and_5_unseen_all_distinct() {
+    fn exactly_38_models_all_distinct() {
         let names: BTreeSet<&str> = all_names().into_iter().collect();
-        assert_eq!(names.len(), 34, "duplicate model names");
+        assert_eq!(names.len(), 38, "duplicate model names");
     }
 
     #[test]
-    fn unseen_set_is_disjoint_from_classic() {
+    fn unseen_and_transformer_sets_are_disjoint_from_classic() {
         let classic: BTreeSet<&str> = CLASSIC_29.iter().map(|(n, _)| *n).collect();
         for (n, _) in UNSEEN_5 {
             assert!(!classic.contains(n), "{n} leaked into training set");
+        }
+        for n in TRANSFORMER_4 {
+            assert!(!classic.contains(n), "{n} leaked into training set");
+            assert!(builder(n).is_some(), "{n} not registered");
         }
     }
 

@@ -1,0 +1,168 @@
+//! Transformer-era networks: tiny BERT-style encoders, a GPT-style
+//! decoder stack, and a ViT-style patch-embed hybrid.
+//!
+//! All four are sized for the profiling envelope (seq_len ≤ 256,
+//! embed_dim ≤ 256) rather than for accuracy — what the cost model
+//! needs from them is the attention-era *structure*: quadratic-in-t
+//! attention, position-wise feed-forward, pre-LN residual topology.
+//! Text models take a [`crate::graph::OpKind::SeqInput`] root and
+//! ignore the `in_ch` builder argument (token ids have no channels);
+//! the ViT hybrid keeps an image root so the conv patch embed adapts
+//! to MNIST/CIFAR channel counts like every CNN in the zoo.
+
+use super::common::gap_classifier;
+use crate::graph::{Graph, NodeId, OpKind};
+
+/// Pre-LN encoder block (the GPT-2/ViT ordering, which also matches
+/// BERT's cost structure): `x + MHA(LN(x))`, then `x + FFN(LN(x))`
+/// with a 4× GELU feed-forward.
+fn encoder_block(g: &mut Graph, x: NodeId, d: usize, heads: usize, seq: usize) -> NodeId {
+    let n1 = g.add(OpKind::LayerNorm { dim: d }, &[x]);
+    let attn = g.add(OpKind::mha(d, heads, seq), &[n1]);
+    let r1 = g.add(OpKind::Add, &[x, attn]);
+    let n2 = g.add(OpKind::LayerNorm { dim: d }, &[r1]);
+    let up = g.add(
+        OpKind::Linear {
+            in_features: d,
+            out_features: d * 4,
+        },
+        &[n2],
+    );
+    let act = g.add(OpKind::GELU, &[up]);
+    let down = g.add(
+        OpKind::Linear {
+            in_features: d * 4,
+            out_features: d,
+        },
+        &[act],
+    );
+    g.add(OpKind::Add, &[r1, down])
+}
+
+/// Token-classification encoder: embed → blocks → LN → GAP head
+/// (mean-pool over tokens, the standard sentence-classification head).
+#[allow(clippy::too_many_arguments)]
+fn text_encoder(
+    name: &str,
+    vocab: usize,
+    seq: usize,
+    d: usize,
+    heads: usize,
+    depth: usize,
+    embed_dropout: bool,
+    classes: usize,
+) -> Graph {
+    let mut g = Graph::new(name);
+    let x = g.add(OpKind::seq_input(seq, vocab), &[]);
+    let mut cur = g.add(OpKind::Embedding { vocab, dim: d }, &[x]);
+    if embed_dropout {
+        cur = g.add(OpKind::Dropout { p_keep_x100: 90 }, &[cur]);
+    }
+    for _ in 0..depth {
+        cur = encoder_block(&mut g, cur, d, heads, seq);
+    }
+    let norm = g.add(OpKind::LayerNorm { dim: d }, &[cur]);
+    gap_classifier(&mut g, norm, d, classes);
+    g
+}
+
+/// BERT-tiny-style encoder: 2 layers, 128 wide, 2 heads, WordPiece
+/// vocabulary. `in_ch` is ignored — token ids have no channels.
+pub fn bert_tiny(_in_ch: usize, classes: usize) -> Graph {
+    text_encoder("bert-tiny", 30_522, 128, 128, 2, 2, false, classes)
+}
+
+/// BERT-mini-style encoder: 4 layers, 256 wide, 4 heads.
+pub fn bert_mini(_in_ch: usize, classes: usize) -> Graph {
+    text_encoder("bert-mini", 30_522, 128, 256, 4, 4, false, classes)
+}
+
+/// GPT-style decoder stack: BPE vocabulary, longer context, embedding
+/// dropout. Causal masking changes which scores survive the softmax,
+/// not how many are computed, so the cost structure is the encoder's.
+pub fn gpt_nano(_in_ch: usize, classes: usize) -> Graph {
+    text_encoder("gpt-nano", 50_257, 256, 192, 3, 3, true, classes)
+}
+
+/// ViT-style hybrid: a 4×4/stride-4 conv patch embed turns the 32×32
+/// image into an 8×8 grid, which the first LayerNorm views as 64
+/// tokens of 192 features (`TensorShape::as_seq`) — no explicit
+/// reshape op needed. Two pre-LN blocks, then the usual GAP head.
+pub fn vit_lilliput(in_ch: usize, classes: usize) -> Graph {
+    const D: usize = 192;
+    let mut g = Graph::new("vit-lilliput");
+    let x = g.add(OpKind::input(in_ch, 32), &[]);
+    let patches = g.add(OpKind::conv(in_ch, D, 4, 4, 0), &[x]);
+    let mut cur = g.add(OpKind::LayerNorm { dim: D }, &[patches]);
+    for _ in 0..2 {
+        cur = encoder_block(&mut g, cur, D, 3, 64);
+    }
+    let norm = g.add(OpKind::LayerNorm { dim: D }, &[cur]);
+    gap_classifier(&mut g, norm, D, classes);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::infer_shapes;
+
+    #[test]
+    fn text_encoders_ignore_image_geometry() {
+        for (name, builder) in [
+            ("bert-tiny", bert_tiny as super::super::Builder),
+            ("bert-mini", bert_mini),
+            ("gpt-nano", gpt_nano),
+        ] {
+            let g = builder(3, 100);
+            g.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            // MNIST and CIFAR overrides must infer identically: the
+            // sequence root takes its geometry from the op itself.
+            let a = infer_shapes(&g, 2, 3, 32).unwrap();
+            let b = infer_shapes(&g, 2, 1, 32).unwrap();
+            assert_eq!(a, b, "{name}");
+            assert_eq!(a.last().unwrap().channels(), 100, "{name}");
+        }
+    }
+
+    #[test]
+    fn vit_patch_grid_is_64_tokens() {
+        let g = vit_lilliput(3, 10);
+        let shapes = infer_shapes(&g, 2, 3, 32).unwrap();
+        // Node 1 is the patch conv (8×8 map), node 2 the LN im2seq view.
+        assert_eq!(shapes[1].spatial(), 8);
+        assert!(matches!(
+            shapes[2],
+            crate::graph::shape::TensorShape::Seq { t: 64, d: 192, .. }
+        ));
+        assert_eq!(shapes.last().unwrap().channels(), 10);
+    }
+
+    #[test]
+    fn attention_dominates_bert_flops() {
+        // The whole point of threading seq ops through the stack: the
+        // featurizer must see attention cost, and attention + FFN must
+        // dominate the tiny head.
+        let g = bert_tiny(3, 2);
+        let total = g.flops_per_sample(3, 32).unwrap();
+        let mha: u64 = g
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| matches!(n.kind, OpKind::MultiHeadAttention { .. }))
+            .map(|(id, n)| {
+                let shapes = infer_shapes(&g, 1, 3, 32).unwrap();
+                crate::graph::flops::node_flops(&g, &shapes, id, &n.kind)
+            })
+            .sum();
+        assert!(mha > 0);
+        assert!(mha * 2 > total / 4, "attention must be a visible share");
+    }
+
+    #[test]
+    fn params_scale_with_depth_and_width() {
+        let tiny = bert_tiny(3, 2).param_count();
+        let mini = bert_mini(3, 2).param_count();
+        assert!(mini > 2 * tiny, "4 layers at 256 wide ≫ 2 layers at 128");
+    }
+}

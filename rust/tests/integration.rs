@@ -265,9 +265,11 @@ fn bad_spec_corpus_each_file_trips_its_seeded_diagnostic() {
         ("channel-bottleneck.json", &["DA021"]),
         ("dead-branch.json", &["DA010"]),
         ("degenerate-spatial.json", &["DA020"]),
+        ("heads-not-dividing.json", &["DA034"]),
         ("overflow-params.json", &["DA001", "DA002"]),
         ("padding-gt-kernel.json", &["DA031"]),
         ("pointwise-padding.json", &["DA032"]),
+        ("seqlen-envelope.json", &["DA035"]),
         ("stride-gt-kernel.json", &["DA030"]),
     ];
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("examples/specs/bad");
@@ -343,6 +345,37 @@ fn spec_request_serves_end_to_end_and_shares_cache_with_zoo_twin() {
     let m = svc.shutdown();
     assert_eq!(m.cache_hits, 1, "spec twin must hit the zoo entry");
     assert_eq!(m.served, 3);
+}
+
+#[test]
+fn transformer_requests_predict_through_trained_service() {
+    // Sequence-input networks ride the exact same service path as the
+    // CNNs: every transformer zoo net by name, plus the committed v2
+    // spec through the spec route, against a backend trained on the
+    // standard (CNN-heavy) sweep.
+    let ctx = tiny_ctx(9);
+    let corpus = ctx.training_corpus();
+    let backend = Arc::new(AutoMlBackend {
+        time_model: AutoMl::train_opt(&corpus, Target::Time, 9, true),
+        memory_model: AutoMl::train_opt(&corpus, Target::Memory, 9, true),
+    });
+    let svc = PredictionService::start(ServiceConfig::default(), backend);
+    let cfg = TrainConfig::paper_default(DatasetKind::Sst2, 32);
+
+    for (i, name) in zoo::TRANSFORMER_4.iter().enumerate() {
+        let p = svc
+            .predict(PredictRequest::zoo(i as u64 + 1, name, cfg.clone()))
+            .unwrap();
+        assert!(p.time_s > 0.0 && p.memory_bytes > 0.0, "{name}");
+    }
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("examples/specs/sst-pocket-encoder.json");
+    let novel = dnnabacus::ingest::compile_str(&std::fs::read_to_string(path).unwrap()).unwrap();
+    let p = svc.predict(PredictRequest::spec(5, novel, cfg)).unwrap();
+    assert!(p.time_s > 0.0 && p.memory_bytes > 0.0);
+    let m = svc.shutdown();
+    assert_eq!(m.served, 5);
 }
 
 #[test]

@@ -122,9 +122,8 @@ fn main() {
             })
             .collect();
         let mut doc = Json::obj();
-        doc.set("bench", "fleet_throughput")
-            .set("scale", scale)
-            .set("seed", seed)
+        dnnabacus::bench_harness::stamp(&mut doc, "fleet_throughput", scale);
+        doc.set("seed", seed)
             .set("jobs", n_jobs)
             .set("results", Json::Arr(rows));
         std::fs::write(path, doc.to_string()).expect("write bench json");

@@ -277,9 +277,8 @@ fn main() {
 
     if let Some(path) = args.get("json") {
         let mut doc = Json::obj();
-        doc.set("bench", "net_throughput")
-            .set("scale", scale)
-            .set("seed", seed)
+        dnnabacus::bench_harness::stamp(&mut doc, "net_throughput", scale);
+        doc.set("seed", seed)
             .set("clients", clients)
             .set("threads", threads)
             .set(

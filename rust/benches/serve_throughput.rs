@@ -136,9 +136,8 @@ fn main() {
 
     if let Some(path) = args.get("json") {
         let mut doc = Json::obj();
-        doc.set("bench", "serve_throughput")
-            .set("scale", scale)
-            .set("seed", seed)
+        dnnabacus::bench_harness::stamp(&mut doc, "serve_throughput", scale);
+        doc.set("seed", seed)
             .set(
                 "results",
                 Json::Arr(vec![

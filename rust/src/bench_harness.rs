@@ -8,6 +8,25 @@ use crate::util::json::Json;
 use crate::util::stats;
 use std::time::Instant;
 
+/// Version of the `BENCH_*.json` document layout. Every artifact
+/// carries it as a top-level `schema` field (alongside `bench` and
+/// `scale`) so the cross-PR bench trajectory can be compared
+/// mechanically. Bump only on breaking key changes; additions are
+/// backward-compatible.
+pub const BENCH_SCHEMA: u64 = 1;
+
+/// Add the common identification fields — `schema` version, bench
+/// `name`, and `--scale` — to a bench document. Used both by
+/// [`results_to_json`] and by the benches that assemble custom
+/// documents (net / serve / fleet throughput). Existing keys are not
+/// touched, so pre-schema consumers keep working byte-for-byte on the
+/// keys they know.
+pub fn stamp(doc: &mut Json, bench: &str, scale: f64) {
+    doc.set("schema", BENCH_SCHEMA)
+        .set("bench", bench)
+        .set("scale", scale);
+}
+
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -52,10 +71,11 @@ impl BenchResult {
     }
 }
 
-/// Bundle a bench run's results as one JSON document.
+/// Bundle a bench run's results as one JSON document (schema-stamped).
 pub fn results_to_json(bench: &str, scale: f64, results: &[BenchResult]) -> Json {
     let mut o = Json::obj();
-    o.set("bench", bench).set("scale", scale).set(
+    stamp(&mut o, bench, scale);
+    o.set(
         "results",
         Json::Arr(results.iter().map(BenchResult::to_json).collect()),
     );
@@ -116,9 +136,23 @@ mod tests {
         let j = results_to_json("perf_hotpaths", 0.05, &[r]);
         let back = Json::parse(&j.to_string()).unwrap();
         assert_eq!(back.str("bench").unwrap(), "perf_hotpaths");
+        assert_eq!(back.num("schema").unwrap(), BENCH_SCHEMA as f64);
+        assert_eq!(back.num("scale").unwrap(), 0.05);
         let rows = back.arr("results").unwrap();
         assert_eq!(rows.len(), 1);
         assert!(rows[0].num("mean_s").unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn stamp_adds_schema_without_touching_existing_keys() {
+        let mut doc = Json::obj();
+        doc.set("answered", 42u64).set("seed", 7u64);
+        stamp(&mut doc, "net_throughput", 1.0);
+        assert_eq!(doc.num("schema").unwrap(), BENCH_SCHEMA as f64);
+        assert_eq!(doc.str("bench").unwrap(), "net_throughput");
+        assert_eq!(doc.num("scale").unwrap(), 1.0);
+        assert_eq!(doc.num("answered").unwrap(), 42.0);
+        assert_eq!(doc.num("seed").unwrap(), 7.0);
     }
 
     #[test]

@@ -1,0 +1,248 @@
+//! The unseen-hardware calibration harness behind the `eval` CLI
+//! subcommand: train the predictor on every device profile *except*
+//! one, zero-shot predict on the held-out device, then spend a few
+//! recorded residual "shots" on an [`AffineCalibrator`] and measure how
+//! much of the transfer gap the correction closes — PreNeT-style
+//! few-shot hardware transfer, run against this crate's own simulator
+//! corpus.
+//!
+//! The shots flow through a real [`AccuracyLedger`] (seeded reservoir
+//! included), so the harness exercises the same record → fit → apply
+//! path the fleet loop and net server use, and its `--json` output
+//! carries the same `acc.*`-derived accuracy block as every other
+//! surface.
+
+use super::Ctx;
+use crate::obs::{accuracy, AccuracyLedger, Registry};
+use crate::predictor::{AffineCalibrator, AutoMl, Dataset, Target};
+use crate::sim::DeviceProfile;
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+use crate::util::stats;
+use crate::util::table::{fmt_pct, Table};
+
+/// Default number of held-out-device residuals granted to the
+/// calibrator ("shots") before evaluation.
+pub const DEFAULT_SHOTS: usize = 64;
+
+/// One target's holdout result.
+#[derive(Debug, Clone)]
+pub struct TargetEval {
+    pub target: Target,
+    /// Training points (all devices except the holdout).
+    pub n_train: usize,
+    /// Held-out-device points spent on calibration shots.
+    pub n_calib: usize,
+    /// Held-out-device points evaluated (disjoint from the shots).
+    pub n_eval: usize,
+    /// MRE of the uncorrected model on the evaluation points.
+    pub zero_shot_mre: f64,
+    /// MRE after the few-shot affine correction. Equals
+    /// `zero_shot_mre` exactly when the calibrator stayed identity.
+    pub calibrated_mre: f64,
+    pub calibrator: AffineCalibrator,
+}
+
+/// The full unseen-hardware report (`eval` CLI).
+#[derive(Debug, Clone)]
+pub struct HoldoutReport {
+    pub holdout: String,
+    pub shots: usize,
+    pub seed: u64,
+    pub scale: f64,
+    pub targets: Vec<TargetEval>,
+    /// The `acc.*`-derived accuracy block over the recorded shots —
+    /// the same shape `stats --json` and `serve --json` carry.
+    pub accuracy: Json,
+}
+
+impl HoldoutReport {
+    /// Machine-readable form (`eval --json`).
+    pub fn to_json(&self) -> Json {
+        let mut targets = Json::obj();
+        for t in &self.targets {
+            let mut o = Json::obj();
+            o.set("n_train", t.n_train)
+                .set("n_calib", t.n_calib)
+                .set("n_eval", t.n_eval)
+                .set("zero_shot_mre", t.zero_shot_mre)
+                .set("calibrated_mre", t.calibrated_mre)
+                .set("calibration_active", t.calibrator.active)
+                .set("a", t.calibrator.a)
+                .set("b", t.calibrator.b);
+            targets.set(t.target.name(), o);
+        }
+        let mut o = Json::obj();
+        o.set("schema", crate::bench_harness::BENCH_SCHEMA)
+            .set("bench", "calibration_holdout")
+            .set("scale", self.scale)
+            .set("seed", self.seed)
+            .set("holdout", self.holdout.as_str())
+            .set("shots", self.shots)
+            .set("targets", targets)
+            .set("accuracy", self.accuracy.clone());
+        o
+    }
+
+    /// Human-readable rendering.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!(
+                "Unseen hardware — train without {}, calibrate with {} shots",
+                self.holdout, self.shots
+            ),
+            &["target", "train", "eval", "zero-shot MRE", "calibrated MRE", "fit"],
+        );
+        for e in &self.targets {
+            let fit = if e.calibrator.active {
+                format!("a={:+.3} b={:.3}", e.calibrator.a, e.calibrator.b)
+            } else {
+                "identity".to_string()
+            };
+            t.row(vec![
+                e.target.name().to_string(),
+                e.n_train.to_string(),
+                e.n_eval.to_string(),
+                fmt_pct(e.zero_shot_mre),
+                fmt_pct(e.calibrated_mre),
+                fit,
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// Run the holdout harness: train on every device but `holdout`,
+/// zero-shot predict on `holdout`, fit the calibrator from `shots`
+/// recorded residuals, and evaluate both on the remaining points.
+pub fn holdout_eval(ctx: &Ctx, holdout: &str, shots: usize) -> crate::Result<HoldoutReport> {
+    // Resolve through the profile table so typos fail with the same
+    // message as everywhere else.
+    let device = DeviceProfile::by_name(holdout)?;
+    crate::ensure!(shots >= 1, "need at least 1 calibration shot, got {shots}");
+    let corpus = ctx.training_corpus();
+    let (train, held): (Vec<_>, Vec<_>) = corpus
+        .points
+        .into_iter()
+        .partition(|p| p.device != device.name);
+    crate::ensure!(
+        train.len() >= 10,
+        "only {} training points remain without '{}'; raise --scale",
+        train.len(),
+        holdout
+    );
+    let train = Dataset { points: train };
+    // Seeded shuffle of the held-out stream, then split into the
+    // calibration shots and the disjoint evaluation set.
+    let mut held = held;
+    let mut rng = Rng::new(ctx.seed ^ 0xCA11B);
+    rng.shuffle(&mut held);
+    crate::ensure!(
+        held.len() > shots,
+        "holdout '{}' has {} points, all consumed by {} shots; raise --scale or lower --shots",
+        holdout,
+        held.len(),
+        shots
+    );
+    let eval_points = held.split_off(shots);
+    let calib = Dataset { points: held };
+    let eval = Dataset { points: eval_points };
+
+    let registry = Registry::new();
+    let ledger = AccuracyLedger::register(&registry, ctx.seed);
+    let fast = ctx.scale < 0.3;
+    let mut targets = Vec::new();
+    for target in [Target::Time, Target::Memory] {
+        let model = AutoMl::train_opt(&train, target, ctx.seed, fast);
+        // Spend the shots online, exactly like the fleet loop does:
+        // record raw vs calibrated-so-far, then refit from the ledger's
+        // seeded reservoir.
+        let mut cal = AffineCalibrator::identity();
+        for p in &calib.points {
+            let raw = model.predict(&p.features);
+            let actual = match target {
+                Target::Time => p.time,
+                Target::Memory => p.memory,
+            };
+            ledger.record(device.name, &p.model, target, raw, cal.apply(raw), actual);
+            cal = AffineCalibrator::fit(&ledger.fit_samples(device.name, target));
+        }
+        // Disjoint evaluation: the calibrator never saw these points.
+        let raw_preds: Vec<f64> = eval.points.iter().map(|p| model.predict(&p.features)).collect();
+        let cal_preds: Vec<f64> = raw_preds.iter().map(|&p| cal.apply(p)).collect();
+        let truths = eval.raw_targets(target);
+        targets.push(TargetEval {
+            target,
+            n_train: train.len(),
+            n_calib: calib.len(),
+            n_eval: eval.len(),
+            zero_shot_mre: stats::mre(&raw_preds, &truths),
+            calibrated_mre: stats::mre(&cal_preds, &truths),
+            calibrator: cal,
+        });
+    }
+    Ok(HoldoutReport {
+        holdout: device.name.to_string(),
+        shots,
+        seed: ctx.seed,
+        scale: ctx.scale,
+        targets,
+        accuracy: accuracy::block_from_snapshot(&registry.snapshot()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_ctx() -> Ctx {
+        Ctx {
+            scale: 0.05,
+            seed: 3,
+            cache_dir: None,
+        }
+    }
+
+    #[test]
+    fn unknown_holdout_device_errors() {
+        let e = holdout_eval(&small_ctx(), "h100", 4).unwrap_err().to_string();
+        assert!(e.contains("h100"), "{e}");
+    }
+
+    #[test]
+    fn holdout_report_shapes_and_never_worsens_mre() {
+        let r = holdout_eval(&small_ctx(), "rtx3090", 16).unwrap();
+        assert_eq!(r.holdout, "rtx3090");
+        assert_eq!(r.targets.len(), 2);
+        for t in &r.targets {
+            assert!(t.n_eval > 0 && t.n_train >= 10);
+            assert_eq!(t.n_calib, 16);
+            assert!(t.zero_shot_mre.is_finite() && t.zero_shot_mre >= 0.0);
+            // The do-no-harm fit either improves or stays identity; an
+            // identity calibrator reproduces zero-shot MRE exactly.
+            if !t.calibrator.active {
+                assert_eq!(t.calibrated_mre, t.zero_shot_mre, "{t:?}");
+            }
+        }
+        let j = r.to_json();
+        assert_eq!(j.str("bench").unwrap(), "calibration_holdout");
+        assert_eq!(j.str("holdout").unwrap(), "rtx3090");
+        assert!(j.num("schema").unwrap() >= 1.0);
+        let time = j.get("targets").unwrap().get("time").unwrap();
+        assert!(time.num("zero_shot_mre").is_ok());
+        assert!(time.num("calibrated_mre").is_ok());
+        // The accuracy block reflects the recorded shots.
+        let acc = j.get("accuracy").unwrap();
+        assert_eq!(acc.num("samples").unwrap(), 32.0, "16 shots x 2 targets");
+        let text = r.render();
+        assert!(text.contains("rtx3090"), "{text}");
+        assert!(text.contains("zero-shot"), "{text}");
+    }
+
+    #[test]
+    fn holdout_eval_is_deterministic() {
+        let a = holdout_eval(&small_ctx(), "rtx2080", 8).unwrap();
+        let b = holdout_eval(&small_ctx(), "rtx2080", 8).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+}

@@ -8,7 +8,11 @@
 //!   Figure 12 (batch-size generalization), and the headline MRE.
 //! * [`unseen`] — §4.2: Figure 13 zero-shot (NSM vs graph embedding).
 //! * [`scheduling`] — §4.3: Figure 14 (optimal / random / GA).
+//! * [`calibration`] — the unseen-*hardware* harness behind the `eval`
+//!   CLI: train on N−1 device profiles, hold one out, and measure
+//!   zero-shot vs few-shot-calibrated MRE.
 
+pub mod calibration;
 pub mod phenomena;
 pub mod prediction;
 pub mod scheduling;

@@ -27,6 +27,40 @@ pub struct DeviceReport {
     pub utilization: f64,
 }
 
+/// Prediction-accuracy rollup of one placement run: MRE over every
+/// (job, device) cost query, before and after online calibration.
+/// All-zero when the run's [`CostSource`](crate::fleet::CostSource)
+/// exposes no ground truth (e.g. synthetic costs).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AccuracySummary {
+    /// Residual samples behind the numbers (per target).
+    pub samples: usize,
+    /// Mean relative error of raw (uncalibrated) time predictions.
+    pub mre_time_raw: f64,
+    /// Mean relative error of the calibrated time predictions the
+    /// planner actually consumed.
+    pub mre_time_cal: f64,
+    pub mre_mem_raw: f64,
+    pub mre_mem_cal: f64,
+}
+
+impl AccuracySummary {
+    /// JSON block shared by `fleet --json` and the wire reply:
+    /// `{samples, time: {mre_raw, mre_cal}, memory: {…}}`.
+    pub fn to_json(&self) -> Json {
+        let pair = |raw: f64, cal: f64| {
+            let mut o = Json::obj();
+            o.set("mre_raw", raw).set("mre_cal", cal);
+            o
+        };
+        let mut o = Json::obj();
+        o.set("samples", self.samples)
+            .set("time", pair(self.mre_time_raw, self.mre_time_cal))
+            .set("memory", pair(self.mre_mem_raw, self.mre_mem_cal));
+        o
+    }
+}
+
 /// The full report of one policy's placement run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FleetReport {
@@ -60,6 +94,8 @@ pub struct FleetReport {
     pub wait_max_s: f64,
     pub devices: Vec<DeviceReport>,
     pub placements: Vec<Placement>,
+    /// Before/after-calibration prediction accuracy over this run.
+    pub accuracy: AccuracySummary,
 }
 
 impl FleetReport {
@@ -118,7 +154,8 @@ impl FleetReport {
             .set("wait_p99_s", self.wait_p99_s)
             .set("wait_max_s", self.wait_max_s)
             .set("devices", Json::Arr(devices))
-            .set("placements", Json::Arr(placements));
+            .set("placements", Json::Arr(placements))
+            .set("accuracy", self.accuracy.to_json());
         o
     }
 
@@ -142,6 +179,17 @@ impl FleetReport {
             self.wait_p99_s,
             self.wait_max_s,
         );
+        if self.accuracy.samples > 0 {
+            out.push_str(&format!(
+                "accuracy over {} residuals: time MRE {:.1}% raw -> {:.1}% calibrated | \
+                 memory MRE {:.1}% raw -> {:.1}% calibrated\n",
+                self.accuracy.samples,
+                self.accuracy.mre_time_raw * 100.0,
+                self.accuracy.mre_time_cal * 100.0,
+                self.accuracy.mre_mem_raw * 100.0,
+                self.accuracy.mre_mem_cal * 100.0,
+            ));
+        }
         let mut t = Table::new("", &["device", "jobs", "busy (s)", "utilization"]);
         for d in &self.devices {
             t.row(vec![
@@ -220,6 +268,13 @@ mod tests {
                 start_s: 0.0,
                 finish_s: 50.0,
             }],
+            accuracy: AccuracySummary {
+                samples: 4,
+                mre_time_raw: 0.20,
+                mre_time_cal: 0.05,
+                mre_mem_raw: 0.10,
+                mre_mem_cal: 0.10,
+            },
         }
     }
 
@@ -234,6 +289,10 @@ mod tests {
         assert_eq!(j.arr("placements").unwrap().len(), 1);
         let d = &j.arr("devices").unwrap()[0];
         assert_eq!(d.str("name").unwrap(), "rtx3090-0");
+        let acc = j.get("accuracy").unwrap();
+        assert_eq!(acc.num("samples").unwrap(), 4.0);
+        assert_eq!(acc.get("time").unwrap().num("mre_raw").unwrap(), 0.20);
+        assert_eq!(acc.get("time").unwrap().num("mre_cal").unwrap(), 0.05);
         // The JSON round-trips through the in-tree parser.
         let back = Json::parse(&j.to_string()).unwrap();
         assert_eq!(back, j);
@@ -245,6 +304,7 @@ mod tests {
         let text = r.render();
         assert!(text.contains("least-finish"));
         assert!(text.contains("rtx3090-0"));
+        assert!(text.contains("calibrated"), "accuracy line missing:\n{text}");
         let table = comparison_table(&[r]).render();
         assert!(table.contains("least-finish"));
     }

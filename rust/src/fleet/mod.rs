@@ -18,7 +18,14 @@
 //!   or a synthetic formula ([`SyntheticCosts`]);
 //! * [`metrics`] — the [`FleetReport`]: makespan (predicted and
 //!   realized), per-device utilization, queue-wait percentiles, OOM
-//!   accounting, and regret against a clairvoyant ground-truth GA plan.
+//!   accounting, regret against a clairvoyant ground-truth GA plan, and
+//!   the before/after-calibration [`AccuracySummary`].
+//!
+//! [`CalibratedCosts`] wraps any cost source with the accuracy feedback
+//! loop: residuals stream into an
+//! [`AccuracyLedger`](crate::obs::AccuracyLedger) (→ `acc.*` gauges)
+//! and per-device affine calibrators learned from them correct the
+//! predictions the planner consumes.
 //!
 //! Served online: the `schedule` request kind in [`crate::net`] returns
 //! placement reports over `dnnabacus-wire-v1`, the `fleet` CLI
@@ -33,9 +40,9 @@ pub mod policy;
 pub mod simloop;
 
 pub use cluster::{Cluster, ClusterDevice, MAX_DEVICES};
-pub use metrics::{comparison_table, DeviceReport, FleetReport, Placement};
+pub use metrics::{comparison_table, AccuracySummary, DeviceReport, FleetReport, Placement};
 pub use policy::{make_policy, DeviceView, PlacementPolicy, PolicyKind, QueuedJob};
 pub use simloop::{
-    job_mix, register_metrics, run, run_with_registry, CostSource, FleetJob, ServiceCosts,
-    SimParams, SyntheticCosts, MEM_SAFETY,
+    job_mix, register_metrics, run, run_with_registry, CalibratedCosts, CostSource, FleetJob,
+    ServiceCosts, SimParams, SyntheticCosts, MEM_SAFETY,
 };

@@ -12,11 +12,12 @@
 //! placement loop itself.
 
 use super::cluster::Cluster;
-use super::metrics::{DeviceReport, FleetReport, Placement};
+use super::metrics::{AccuracySummary, DeviceReport, FleetReport, Placement};
 use super::policy::{DeviceView, PlacementPolicy, QueuedJob};
 use crate::coordinator::{ModelRef, PredictRequest, PredictionService};
 use crate::graph::Graph;
-use crate::obs::Registry;
+use crate::obs::{AccuracyLedger, Registry};
+use crate::predictor::{AffineCalibrator, Target};
 use crate::scheduler::{ga, JobCost};
 use crate::sim::{simulate_training, DatasetKind, DeviceProfile, TrainConfig};
 use crate::util::cache::hash64;
@@ -76,6 +77,13 @@ pub trait CostSource {
         job: &FleetJob,
         device: &DeviceProfile,
     ) -> crate::Result<Option<(f64, f64)>>;
+
+    /// Before/after-calibration accuracy over the residuals this source
+    /// has observed so far; `None` when the source does not track them
+    /// (the report then carries an all-zero block).
+    fn accuracy(&self) -> Option<AccuracySummary> {
+        None
+    }
 }
 
 /// The production [`CostSource`]: predictions from a running
@@ -147,6 +155,141 @@ impl CostSource for ServiceCosts<'_> {
         };
         self.truth_memo.insert(key, v);
         Ok(v)
+    }
+}
+
+/// Running (raw, calibrated) absolute-relative-error sums for one
+/// target stream.
+#[derive(Default)]
+struct ErrAcc {
+    raw: f64,
+    cal: f64,
+    n: usize,
+}
+
+impl ErrAcc {
+    fn add(&mut self, raw: f64, cal: f64, actual: f64) {
+        if actual.abs() > 1e-12 {
+            self.raw += ((raw - actual) / actual).abs();
+            self.cal += ((cal - actual) / actual).abs();
+            self.n += 1;
+        }
+    }
+
+    fn mre(&self) -> (f64, f64) {
+        if self.n == 0 {
+            (0.0, 0.0)
+        } else {
+            (self.raw / self.n as f64, self.cal / self.n as f64)
+        }
+    }
+}
+
+/// The accuracy feedback loop as a [`CostSource`] wrapper: raw inner
+/// predictions are corrected by per-(device, target)
+/// [`AffineCalibrator`]s, every ground-truth observation streams its
+/// residuals into the [`AccuracyLedger`] (→ `acc.*` gauges), and the
+/// observed device's calibrators refit from the ledger's seeded fit
+/// corpus right away. Because [`run_with_registry`] queries costs in
+/// arrival order, a run learns from its earlier jobs and plans the
+/// later ones with corrected figures — online few-shot calibration, not
+/// a separate training pass. Calibrators start as (and fall back to)
+/// exact identity, so a stream with nothing to correct is passed
+/// through bit-for-bit.
+pub struct CalibratedCosts<'a> {
+    inner: &'a mut dyn CostSource,
+    ledger: Arc<AccuracyLedger>,
+    cals: HashMap<(String, &'static str), AffineCalibrator>,
+    samples: usize,
+    time_err: ErrAcc,
+    mem_err: ErrAcc,
+}
+
+impl<'a> CalibratedCosts<'a> {
+    pub fn new(inner: &'a mut dyn CostSource, ledger: Arc<AccuracyLedger>) -> CalibratedCosts<'a> {
+        CalibratedCosts {
+            inner,
+            ledger,
+            cals: HashMap::new(),
+            samples: 0,
+            time_err: ErrAcc::default(),
+            mem_err: ErrAcc::default(),
+        }
+    }
+
+    /// The ledger residuals feed — shared, so calibration state can
+    /// outlive one run (the net server keeps one ledger per process).
+    pub fn ledger(&self) -> &Arc<AccuracyLedger> {
+        &self.ledger
+    }
+
+    /// Current calibrator for one (device, target) — identity until the
+    /// ledger has enough samples and the fit clears its do-no-harm bar.
+    pub fn calibrator(&self, device: &str, target: Target) -> AffineCalibrator {
+        self.cals
+            .get(&(device.to_string(), target.name()))
+            .copied()
+            .unwrap_or_default()
+    }
+
+    fn refit(&mut self, device: &str) {
+        for target in [Target::Time, Target::Memory] {
+            let fit = AffineCalibrator::fit(&self.ledger.fit_samples(device, target));
+            self.cals.insert((device.to_string(), target.name()), fit);
+        }
+    }
+}
+
+impl CostSource for CalibratedCosts<'_> {
+    fn predict(&mut self, job: &FleetJob, device: &DeviceProfile) -> crate::Result<(f64, f64)> {
+        let (t, m) = self.inner.predict(job, device)?;
+        Ok((
+            self.calibrator(&device.name, Target::Time).apply(t),
+            self.calibrator(&device.name, Target::Memory).apply(m),
+        ))
+    }
+
+    fn ground_truth(
+        &mut self,
+        job: &FleetJob,
+        device: &DeviceProfile,
+    ) -> crate::Result<Option<(f64, f64)>> {
+        // Re-query the raw prediction rather than memoizing by job name
+        // (names collide across streams; inner sources content-cache, so
+        // the re-query is cheap).
+        let (raw_t, raw_m) = self.inner.predict(job, device)?;
+        let truth = self.inner.ground_truth(job, device)?;
+        if let Some((true_t, true_m)) = truth {
+            // Evaluate with the calibrators `predict` used for this job
+            // — the refit below only affects later queries.
+            let cal_t = self.calibrator(&device.name, Target::Time).apply(raw_t);
+            let cal_m = self.calibrator(&device.name, Target::Memory).apply(raw_m);
+            let family = match &job.model {
+                ModelRef::Zoo(n) => n.as_str(),
+                ModelRef::Spec(p) => p.name.as_str(),
+            };
+            self.ledger
+                .record(&device.name, family, Target::Time, raw_t, cal_t, true_t);
+            self.ledger
+                .record(&device.name, family, Target::Memory, raw_m, cal_m, true_m);
+            self.time_err.add(raw_t, cal_t, true_t);
+            self.mem_err.add(raw_m, cal_m, true_m);
+            self.samples += 1;
+            self.refit(&device.name);
+        }
+        Ok(truth)
+    }
+
+    fn accuracy(&self) -> Option<AccuracySummary> {
+        let (mre_time_raw, mre_time_cal) = self.time_err.mre();
+        let (mre_mem_raw, mre_mem_cal) = self.mem_err.mre();
+        Some(AccuracySummary {
+            samples: self.samples,
+            mre_time_raw,
+            mre_time_cal,
+            mre_mem_raw,
+            mre_mem_cal,
+        })
     }
 }
 
@@ -573,6 +716,7 @@ pub fn run_with_registry(
         wait_max_s: 0.0,
         devices,
         placements: engine.placements,
+        accuracy: costs.accuracy().unwrap_or_default(),
     };
     report.set_waits(&engine.waits);
 
@@ -772,6 +916,130 @@ mod tests {
         // One queue-wait sample per placed job.
         let wait = snap.get("histograms").unwrap().get("fleet.wait_us").unwrap();
         assert_eq!(wait.num("count").unwrap(), r.placed as f64);
+    }
+
+    /// A device-shaped systematic error: time is over-predicted by a
+    /// constant factor (the unseen-hardware failure mode), memory is
+    /// predicted perfectly.
+    struct BiasedCosts {
+        seed: u64,
+        bias: f64,
+    }
+
+    impl BiasedCosts {
+        fn true_time(&self, job: &FleetJob, device: &DeviceProfile) -> f64 {
+            let key = format!("{}|{}", job.name, device.name);
+            30.0 + 100.0 * SyntheticCosts::unit(hash64(self.seed, key.as_bytes()))
+        }
+    }
+
+    impl CostSource for BiasedCosts {
+        fn predict(&mut self, job: &FleetJob, d: &DeviceProfile) -> crate::Result<(f64, f64)> {
+            Ok((self.true_time(job, d) * self.bias, 2.0 * (1u64 << 30) as f64))
+        }
+
+        fn ground_truth(
+            &mut self,
+            job: &FleetJob,
+            d: &DeviceProfile,
+        ) -> crate::Result<Option<(f64, f64)>> {
+            Ok(Some((self.true_time(job, d), 2.0 * (1u64 << 30) as f64)))
+        }
+    }
+
+    fn calibrated_biased_run(seed: u64, bias: f64, n: usize) -> (FleetReport, String) {
+        let cluster = Cluster::parse("rtx2080,rtx3090").unwrap();
+        let registry = Registry::new();
+        register_metrics(&registry);
+        let ledger = Arc::new(AccuracyLedger::register(&registry, seed));
+        let mut inner = BiasedCosts { seed, bias };
+        let mut costs = CalibratedCosts::new(&mut inner, ledger);
+        let jobs = synthetic_jobs(n);
+        let mut policy = make_policy(PolicyKind::LeastPredictedFinish, seed);
+        let r = run_with_registry(
+            &cluster,
+            &jobs,
+            policy.as_mut(),
+            &mut costs,
+            &SimParams { seed, ..SimParams::default() },
+            &registry,
+        )
+        .unwrap();
+        (r, registry.snapshot().to_string())
+    }
+
+    #[test]
+    fn calibration_learns_out_a_systematic_device_bias() {
+        let (r, snap) = calibrated_biased_run(5, 2.0, 30);
+        // Every (job, device) pair yields one residual observation.
+        assert_eq!(r.accuracy.samples, 60);
+        // Raw time error is the full 2x bias; the calibrated stream
+        // pays it only until the per-device fits warm up.
+        assert!(r.accuracy.mre_time_raw > 0.9, "{:?}", r.accuracy);
+        assert!(
+            r.accuracy.mre_time_cal < r.accuracy.mre_time_raw * 0.5,
+            "calibration did not shrink the bias: {:?}",
+            r.accuracy
+        );
+        // Memory was already perfect: the do-no-harm bar keeps its
+        // calibrator identity, so before == after exactly.
+        assert_eq!(r.accuracy.mre_mem_raw, 0.0);
+        assert_eq!(r.accuracy.mre_mem_cal, 0.0);
+        // The same numbers surfaced as acc.* gauges in the registry.
+        let snap = crate::util::json::Json::parse(&snap).unwrap();
+        let g = snap.get("gauges").unwrap();
+        let mre = g.num("acc.rtx2080.time.mre").unwrap();
+        let cal = g.num("acc.rtx2080.time.mre_cal").unwrap();
+        assert!(mre > 0.9, "rolling raw MRE should show the bias: {mre}");
+        assert!(cal < mre, "rolling calibrated MRE must improve: {cal} vs {mre}");
+        assert_eq!(
+            snap.get("counters").unwrap().num("acc.samples").unwrap(),
+            120.0, // 60 observations x 2 targets
+        );
+    }
+
+    #[test]
+    fn calibrated_runs_are_deterministic_down_to_snapshot_bytes() {
+        let (ra, sa) = calibrated_biased_run(7, 1.5, 20);
+        let (rb, sb) = calibrated_biased_run(7, 1.5, 20);
+        assert_eq!(ra, rb);
+        assert_eq!(sa, sb, "identical seeds must give byte-identical snapshots");
+    }
+
+    #[test]
+    fn calibration_is_exact_identity_on_perfect_predictions() {
+        let cluster = Cluster::parse("rtx2080x2,rtx3090").unwrap();
+        let jobs = synthetic_jobs(14);
+        let params = SimParams { seed: 2, ..SimParams::default() };
+        let mut raw_costs = SyntheticCosts { seed: 2, noise: 0.0 };
+        let mut policy = make_policy(PolicyKind::LeastPredictedFinish, 2);
+        let raw = run(&cluster, &jobs, policy.as_mut(), &mut raw_costs, &params).unwrap();
+
+        let registry = Registry::new();
+        let ledger = Arc::new(AccuracyLedger::register(&registry, 2));
+        let mut inner = SyntheticCosts { seed: 2, noise: 0.0 };
+        let mut costs = CalibratedCosts::new(&mut inner, ledger);
+        let mut policy = make_policy(PolicyKind::LeastPredictedFinish, 2);
+        let cal = run_with_registry(
+            &cluster,
+            &jobs,
+            policy.as_mut(),
+            &mut costs,
+            &params,
+            &registry,
+        )
+        .unwrap();
+
+        // Zero residuals: no calibrator activates, predictions pass
+        // through bit-for-bit, and the placement run is unchanged.
+        assert_eq!(raw.placements, cal.placements);
+        assert_eq!(raw.makespan_pred_s, cal.makespan_pred_s);
+        assert_eq!(raw.makespan_true_s, cal.makespan_true_s);
+        assert!(cal.accuracy.samples > 0);
+        assert_eq!(cal.accuracy.mre_time_raw, 0.0);
+        assert_eq!(cal.accuracy.mre_time_cal, 0.0);
+        assert!(!costs.calibrator("rtx2080", Target::Time).active);
+        assert!(!costs.calibrator("rtx3090", Target::Memory).active);
     }
 
     #[test]

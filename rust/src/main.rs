@@ -32,6 +32,9 @@
 //!   stats           render the unified metrics snapshot: scrape a live
 //!                   server (--addr HOST:PORT, --watch SECS) or run a
 //!                   seeded local load and report it (--json, --last K)
+//!   eval            unseen-hardware harness: train on every device
+//!                   profile except --holdout, measure zero-shot vs
+//!                   few-shot-calibrated MRE (--shots, --json [PATH])
 //!   nsm-demo        print the NSM of a model (paper Figures 6-7)
 //!
 //! Common flags: --scale 0.35 --seed 42 --out dir --model vgg16
@@ -66,6 +69,11 @@
 //!
 //! `lint` flags:   --spec FILE | --model NAME (or `all` for the whole
 //!                 zoo) --batch N (analysis batch; default 128) --json
+//!
+//! `eval` flags:   --holdout rtx3090 (device profile to hold out)
+//!                 --shots 64 (residuals granted to the calibrator)
+//!                 --json [PATH] (write the BENCH_*-schema report to
+//!                 PATH, or to stdout with a bare --json)
 //!
 //! `--backend mlp` needs the AOT artifacts (python/compile/aot.py) and a
 //! PJRT binding; this zero-dependency build ships a stub backend, so the
@@ -115,6 +123,7 @@ fn main() {
         Some("client") => client(&args),
         Some("fleet") => fleet(&args),
         Some("stats") => stats(&args),
+        Some("eval") => eval(&args),
         Some("nsm-demo") => nsm_demo(&args),
         Some(cmd) => run_experiment(cmd, &args),
         None => {
@@ -625,7 +634,10 @@ fn serve_listen(args: &Args) -> dnnabacus::Result<()> {
             .set("p50_latency_s", m.p50_latency_s)
             .set("p99_latency_s", m.p99_latency_s);
         let mut o = Json::obj();
-        o.set("wire", w).set("service", s).set("metrics", snapshot);
+        o.set("wire", w)
+            .set("service", s)
+            .set("accuracy", obs::block_from_snapshot(&snapshot))
+            .set("metrics", snapshot);
         println!("{o}");
     } else {
         println!(
@@ -639,6 +651,7 @@ fn serve_listen(args: &Args) -> dnnabacus::Result<()> {
             m.p50_latency_s * 1e3,
             m.p99_latency_s * 1e3
         );
+        print!("{}", obs::render_block(&obs::block_from_snapshot(&snapshot)));
     }
     Ok(())
 }
@@ -779,7 +792,12 @@ fn fleet(args: &Args) -> dnnabacus::Result<()> {
     // snapshot is the same unified key set `serve --json` emits.
     let registry = svc.registry();
     fleet::register_metrics(&registry);
-    let mut costs = fleet::ServiceCosts::new(&svc);
+    let ledger = Arc::new(obs::AccuracyLedger::register(&registry, ctx.seed));
+    // Wrap the service costs in the calibration seam: every placement's
+    // observed ground truth lands in the residual ledger, and later
+    // predictions consume the per-device affine correction.
+    let mut service_costs = fleet::ServiceCosts::new(&svc);
+    let mut costs = fleet::CalibratedCosts::new(&mut service_costs, Arc::clone(&ledger));
     let params = fleet::SimParams {
         seed: ctx.seed,
         arrival_rate,
@@ -799,6 +817,7 @@ fn fleet(args: &Args) -> dnnabacus::Result<()> {
     }
     // `costs` borrows the service; release it before the move-out drain.
     drop(costs);
+    drop(service_costs);
     svc.refresh_gauges();
     let snapshot = registry.snapshot();
     let m = svc.shutdown();
@@ -814,6 +833,7 @@ fn fleet(args: &Args) -> dnnabacus::Result<()> {
                 "reports",
                 Json::Arr(reports.iter().map(fleet::FleetReport::to_json).collect()),
             )
+            .set("accuracy", obs::block_from_snapshot(&snapshot))
             .set("metrics", snapshot);
         println!("{o}");
     } else {
@@ -859,7 +879,9 @@ fn stats(args: &Args) -> dnnabacus::Result<()> {
             };
             if json {
                 let mut o = Json::obj();
-                o.set("snapshot", snapshot).set("traces", Json::Arr(traces));
+                o.set("accuracy", obs::block_from_snapshot(&snapshot))
+                    .set("snapshot", snapshot)
+                    .set("traces", Json::Arr(traces));
                 println!("{o}");
             } else {
                 if watch.is_some() {
@@ -918,6 +940,7 @@ fn stats(args: &Args) -> dnnabacus::Result<()> {
         let mut o = Json::obj();
         o.set("requests", n)
             .set("failed", failed)
+            .set("accuracy", obs::block_from_snapshot(&snapshot))
             .set("snapshot", snapshot)
             .set("traces", Json::Arr(traces));
         println!("{o}");
@@ -928,10 +951,13 @@ fn stats(args: &Args) -> dnnabacus::Result<()> {
     Ok(())
 }
 
-/// Human rendering of one metrics scrape: the registry tables plus one
-/// line per recent trace (stage name and microseconds, in span order).
+/// Human rendering of one metrics scrape: the registry tables, the
+/// `acc.*` accuracy block (so `--watch` doubles as a drift dashboard),
+/// plus one line per recent trace (stage name and microseconds, in
+/// span order).
 fn print_stats_text(snapshot: &Json, traces: &[Json]) {
     print!("{}", obs::render_snapshot(snapshot));
+    print!("{}", obs::render_block(&obs::block_from_snapshot(snapshot)));
     if traces.is_empty() {
         return;
     }
@@ -954,6 +980,31 @@ fn print_stats_text(snapshot: &Json, traces: &[Json]) {
         };
         println!("  {id}  wall {wall:.0}us  {}", spans.join(" | "));
     }
+}
+
+/// `eval`: the unseen-hardware harness. Train the predictor on every
+/// device profile except `--holdout`, zero-shot predict on the held-out
+/// device, spend `--shots` recorded residuals on the online affine
+/// calibrator, and report zero-shot vs calibrated MRE on the disjoint
+/// remainder. `--json` prints the BENCH_*-schema report to stdout;
+/// `--json PATH` writes it to PATH (the CI bench-smoke artifact).
+fn eval(args: &Args) -> dnnabacus::Result<()> {
+    let ctx = ctx_from(args);
+    let holdout = args.str_or("holdout", "rtx3090");
+    let shots = args.usize_or("shots", experiments::calibration::DEFAULT_SHOTS);
+    let report = experiments::calibration::holdout_eval(&ctx, &holdout, shots)?;
+    match args.get("json") {
+        None => println!("{}", report.render()),
+        // A bare `--json` parses as the boolean "true".
+        Some("true") => println!("{}", report.to_json()),
+        Some(path) => {
+            std::fs::write(path, report.to_json().to_string())
+                .with_context(|| format!("writing {path}"))?;
+            println!("{}", report.render());
+            println!("wrote {path}");
+        }
+    }
+    Ok(())
 }
 
 /// Config overrides for wire requests, from explicitly-passed CLI flags

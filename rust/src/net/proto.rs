@@ -602,11 +602,15 @@ pub enum WireResponse {
         diagnostics: Vec<Json>,
     },
     /// A `schedule` request's placement report (the
-    /// [`crate::fleet::FleetReport`] JSON shape).
+    /// [`crate::fleet::FleetReport`] JSON shape, including its
+    /// before/after-calibration `accuracy` block).
     Schedule { id: u64, report: Json },
     /// A `metrics` scrape: the registry snapshot plus the last-K
     /// completed trace summaries ([`crate::obs::TraceSummary::to_json`]
-    /// shapes, oldest first).
+    /// shapes, oldest first). The snapshot carries every registered
+    /// instrument verbatim — including the `acc.*` accuracy gauges,
+    /// which clients can reshape with
+    /// [`crate::obs::block_from_snapshot`].
     Metrics {
         id: u64,
         snapshot: Json,
@@ -1054,6 +1058,7 @@ mod tests {
         let reg = crate::obs::Registry::new();
         reg.counter("net.answered").add(3);
         reg.histogram("stage.decode_us").record(42);
+        reg.gauge_f64("acc.rtx2080.time.mre").set(0.0375);
         let trace = crate::obs::Trace::forced(11);
         let summary = trace.finish().unwrap();
         let resp = WireResponse::Metrics {
@@ -1075,6 +1080,9 @@ mod tests {
                 assert_eq!(c.num("net.answered").unwrap(), 3.0);
                 let h = snapshot.get("histograms").unwrap().get("stage.decode_us");
                 assert_eq!(h.unwrap().num("count").unwrap(), 1.0);
+                // Fractional accuracy gauges survive the wire exactly.
+                let g = snapshot.get("gauges").unwrap();
+                assert_eq!(g.num("acc.rtx2080.time.mre").unwrap(), 0.0375);
                 assert_eq!(traces.len(), 1);
                 assert_eq!(traces[0].num("request_id").unwrap(), 11.0);
             }

@@ -34,7 +34,11 @@
 //! Observability: every wire counter lives in the service's
 //! [`crate::obs::Registry`] under a `net.*` name (one name, one export
 //! path — `serve --json`, the `metrics` wire request, and the `stats`
-//! CLI all render the same snapshot). Predict requests are sampled
+//! CLI all render the same snapshot). `schedule` calls additionally
+//! feed the server-wide [`AccuracyLedger`]: every (predicted, actual)
+//! residual the placement engine observes lands under `acc.*`, and the
+//! per-device calibrators learned from it correct the predictions
+//! later schedule calls plan with. Predict requests are sampled
 //! 1-in-[`ServerConfig::trace_sample`] into lifecycle traces: the loop
 //! records the `decode` and `reply` spans, the service records
 //! `cache`/`admission`, the workers `queue_wait`/`inference`; finished
@@ -48,7 +52,9 @@ use super::poll;
 use super::proto::{self, ErrorKind, WireResponse};
 use crate::coordinator::{PredictionService, ServiceMetrics};
 use crate::fleet;
-use crate::obs::{Counter, Gauge, Histogram, Registry, Sampler, Trace, TraceRing, TraceSummary};
+use crate::obs::{
+    AccuracyLedger, Counter, Gauge, Histogram, Registry, Sampler, Trace, TraceRing, TraceSummary,
+};
 use crate::util::error::Context as _;
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
@@ -60,6 +66,11 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 pub use super::conn::CONN_PIPELINE;
+
+/// Seed for the server's [`AccuracyLedger`] fit reservoirs. A fixed
+/// constant keeps `acc.*` exports reproducible for identical request
+/// streams (the wire protocol has no server-seed field to thread here).
+const ACC_LEDGER_SEED: u64 = 0xACC_1ED6E5;
 
 /// Cap on simultaneously-pending slot-refusal connections. Beyond it,
 /// a flood of excess connections is dropped without a reply rather
@@ -277,9 +288,13 @@ struct Shared {
     draining: AtomicBool,
     active_conns: AtomicUsize,
     /// The service's registry — one namespace for `svc.*`, `net.*`,
-    /// `stage.*`, and `fleet.*` metrics, so every export surface
-    /// renders the same snapshot.
+    /// `stage.*`, `fleet.*`, and `acc.*` metrics, so every export
+    /// surface renders the same snapshot.
     registry: Arc<Registry>,
+    /// Residual ledger behind the `acc.*` instruments. Shared across
+    /// `schedule` calls, so calibration fit corpora accumulate over the
+    /// server's life instead of resetting per request.
+    ledger: Arc<AccuracyLedger>,
     sampler: Sampler,
     ring: TraceRing,
     stages: StageHists,
@@ -357,7 +372,9 @@ impl Server {
         // which code paths traffic happened to exercise.
         let registry = svc.registry();
         fleet::register_metrics(&registry);
+        let ledger = Arc::new(AccuracyLedger::register(&registry, ACC_LEDGER_SEED));
         let shared = Arc::new(Shared {
+            ledger,
             sampler: Sampler::new(cfg.trace_sample),
             ring: TraceRing::default(),
             stages: StageHists::new(&registry),
@@ -948,7 +965,13 @@ fn enqueue(shared: &Arc<Shared>, sched_pool: &ThreadPool, payload: &[u8]) -> Pen
 /// schedule calls are free). The job cap in `proto` bounds one call's
 /// work; `sched_workers` bounds how many run at once.
 fn run_schedule(shared: &Shared, call: proto::ScheduleCall) -> WireResponse {
-    let mut costs = fleet::ServiceCosts::new(&shared.svc);
+    let mut service_costs = fleet::ServiceCosts::new(&shared.svc);
+    // The calibration wrapper: residuals stream into the server-wide
+    // ledger (→ `acc.*` gauges on every export surface) and predictions
+    // the planner consumes are corrected by per-device fits learned
+    // from it.
+    let mut costs =
+        fleet::CalibratedCosts::new(&mut service_costs, Arc::clone(&shared.ledger));
     let mut policy = fleet::make_policy(call.policy, call.seed);
     let params = fleet::SimParams {
         seed: call.seed,
@@ -1286,6 +1309,22 @@ mod tests {
         assert_eq!(report.num("true_oom_placements").unwrap(), 0.0);
         assert!(report.num("makespan_true_s").unwrap() > 0.0);
         assert_eq!(report.arr("devices").unwrap().len(), 2);
+        // The wire report carries the before/after-calibration block,
+        // fed by the residuals this very call observed.
+        let acc = report.get("accuracy").expect("accuracy block");
+        assert!(acc.num("samples").unwrap() > 0.0);
+        assert!(acc.get("time").unwrap().num("mre_raw").is_ok());
+        assert!(acc.get("time").unwrap().num("mre_cal").is_ok());
+        // ... and the same residuals surfaced in the unified registry.
+        let snap = client.metrics(90, 0).unwrap();
+        let snapshot = match snap {
+            WireResponse::Metrics { snapshot, .. } => snapshot,
+            other => panic!("expected a metrics response, got {other:?}"),
+        };
+        assert!(
+            snapshot.get("counters").unwrap().num("acc.samples").unwrap() > 0.0,
+            "schedule residuals must reach the acc.* counters"
+        );
         // Identical calls are deterministic, byte for byte.
         let second = client.schedule(&req).unwrap();
         match second {
@@ -1305,7 +1344,7 @@ mod tests {
         let (net, _) = server.shutdown();
         assert_eq!(net.schedules, 2);
         assert_eq!(net.bad_requests, 1);
-        assert_eq!(net.answered, 3);
+        assert_eq!(net.answered, 4);
     }
 
     #[test]
@@ -1522,8 +1561,13 @@ mod tests {
             "counters/net.answered",
             "counters/svc.served",
             "counters/fleet.runs",
+            "counters/acc.samples",
+            "counters/acc.drift_events",
             "gauges/net.peak_conns",
             "gauges/svc.in_flight",
+            "gauges/acc.drift_active",
+            "gauges/acc.rtx2080.time.mre",
+            "gauges/acc.rtx3090.memory.mre_cal",
             "histograms/stage.decode_us",
             "histograms/svc.latency_us",
             "histograms/fleet.wait_us",

@@ -1,0 +1,460 @@
+//! Accuracy observability: the residual ledger and drift monitor.
+//!
+//! The fleet loop observes ground truth after every placement, which
+//! makes (predicted, actual) residuals free telemetry — this module
+//! turns them into first-class `acc.*` instruments instead of throwing
+//! them away. An [`AccuracyLedger`] keeps a bounded, seeded-
+//! deterministic sample store per (device, target):
+//!
+//! * a **rolling window** of the last [`LEDGER_WINDOW`] samples, from
+//!   which MRE / MAE / signed-bias gauges are recomputed on every
+//!   record (`acc.<device>.<target>.{mre,mre_cal,mae,bias,samples}`);
+//! * an **all-time seeded reservoir** of [`FIT_RESERVOIR`]
+//!   (raw prediction, actual) pairs — the few-shot corpus the
+//!   [`crate::predictor::calibrate`] correction fits from, bounded no
+//!   matter how long the process lives and byte-deterministic for a
+//!   fixed seed and record order;
+//! * a windowed **mean-shift drift monitor**: the signed relative
+//!   error stream is chunked into [`DRIFT_WINDOW`]-sample windows, and
+//!   when a window's mean moves more than [`DRIFT_THRESHOLD`] from the
+//!   reference window's, `acc.drift_events` increments and
+//!   `acc.drift_active` marks the snapshot (cleared again by the next
+//!   stable window).
+//!
+//! All instruments for the known device profiles are registered up
+//! front by [`AccuracyLedger::register`], so a registry's exported key
+//! set never depends on whether residual traffic has happened yet.
+
+use super::registry::{Counter, Gauge, GaugeF, Registry};
+use crate::predictor::Target;
+use crate::sim::KNOWN_DEVICES;
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex, PoisonError};
+
+/// Rolling-window length per (device, target): the gauges summarize
+/// the most recent this-many residuals.
+pub const LEDGER_WINDOW: usize = 256;
+
+/// All-time reservoir capacity per (device, target) — the bounded
+/// few-shot sample the calibrator fits from.
+pub const FIT_RESERVOIR: usize = 64;
+
+/// Samples per drift-comparison window.
+pub const DRIFT_WINDOW: usize = 64;
+
+/// Mean signed-relative-error shift between windows that counts as
+/// drift. 0.25 = a 25-point swing in signed relative error.
+pub const DRIFT_THRESHOLD: f64 = 0.25;
+
+/// Targets below this magnitude are skipped (a relative error against
+/// ~0 is noise, and `stats::mre` applies the same floor).
+const MIN_ACTUAL: f64 = 1e-12;
+
+/// One (device, target) key's bounded state.
+struct KeyState {
+    /// Last [`LEDGER_WINDOW`] (raw prediction, calibrated prediction,
+    /// actual) triples, oldest first.
+    ring: VecDeque<(f64, f64, f64)>,
+    /// Seeded all-time reservoir of (raw prediction, actual) pairs.
+    reservoir: Vec<(f64, f64)>,
+    /// All-time samples recorded under this key.
+    seen: u64,
+    rng: Rng,
+    /// Signed relative errors of the current drift window.
+    window: Vec<f64>,
+    /// Mean of the reference window drift is measured against.
+    ref_mean: Option<f64>,
+    mre: Arc<GaugeF>,
+    mre_cal: Arc<GaugeF>,
+    mae: Arc<GaugeF>,
+    bias: Arc<GaugeF>,
+    samples: Arc<Gauge>,
+}
+
+impl KeyState {
+    fn new(registry: &Registry, device: &str, target: Target, seed: u64) -> KeyState {
+        let t = target.name();
+        let name = |metric: &str| format!("acc.{device}.{t}.{metric}");
+        KeyState {
+            ring: VecDeque::with_capacity(LEDGER_WINDOW),
+            reservoir: Vec::with_capacity(FIT_RESERVOIR),
+            seen: 0,
+            rng: Rng::new(seed ^ crate::util::cache::hash64(0x0ACC, name("").as_bytes())),
+            window: Vec::with_capacity(DRIFT_WINDOW),
+            ref_mean: None,
+            mre: registry.gauge_f64(&name("mre")),
+            mre_cal: registry.gauge_f64(&name("mre_cal")),
+            mae: registry.gauge_f64(&name("mae")),
+            bias: registry.gauge_f64(&name("bias")),
+            samples: registry.gauge(&name("samples")),
+        }
+    }
+
+    /// Recompute the rolling-window gauges from the ring.
+    fn refresh_gauges(&self) {
+        let mut abs_rel_raw = 0.0;
+        let mut abs_rel_cal = 0.0;
+        let mut abs_err = 0.0;
+        let mut signed_rel = 0.0;
+        let mut n = 0usize;
+        for &(raw, cal, actual) in &self.ring {
+            if actual.abs() <= MIN_ACTUAL {
+                continue;
+            }
+            abs_rel_raw += ((raw - actual) / actual).abs();
+            abs_rel_cal += ((cal - actual) / actual).abs();
+            abs_err += (raw - actual).abs();
+            signed_rel += (raw - actual) / actual;
+            n += 1;
+        }
+        let mean = |sum: f64| if n == 0 { 0.0 } else { sum / n as f64 };
+        self.mre.set(mean(abs_rel_raw));
+        self.mre_cal.set(mean(abs_rel_cal));
+        self.mae.set(mean(abs_err));
+        self.bias.set(mean(signed_rel));
+        self.samples.set(self.ring.len() as u64);
+    }
+}
+
+/// The bounded residual ledger. One instance per registry — the net
+/// server keeps one in its unified registry, the `fleet`/`eval` CLI
+/// paths build their own. Interior-mutexed: `record` takes `&self`, so
+/// an `Arc<AccuracyLedger>` can be shared across schedule workers.
+pub struct AccuracyLedger {
+    seed: u64,
+    keys: Mutex<BTreeMap<(String, &'static str), KeyState>>,
+    samples_total: Arc<Counter>,
+    drift_events: Arc<Counter>,
+    drift_active: Arc<Gauge>,
+}
+
+impl AccuracyLedger {
+    /// Build a ledger bound to `registry`, pre-registering every
+    /// `acc.*` instrument for the known device profiles so snapshot key
+    /// sets do not depend on traffic. Identical seeds and record
+    /// sequences produce byte-identical snapshots. Idempotent on the
+    /// registry side (instruments are get-or-register).
+    pub fn register(registry: &Registry, seed: u64) -> AccuracyLedger {
+        let mut keys = BTreeMap::new();
+        for device in KNOWN_DEVICES {
+            for target in [Target::Time, Target::Memory] {
+                keys.insert(
+                    (device.to_string(), target.name()),
+                    KeyState::new(registry, device, target, seed),
+                );
+            }
+        }
+        AccuracyLedger {
+            seed,
+            keys: Mutex::new(keys),
+            samples_total: registry.counter("acc.samples"),
+            drift_events: registry.counter("acc.drift_events"),
+            drift_active: registry.gauge("acc.drift_active"),
+        }
+    }
+
+    /// The seed this ledger's reservoirs were built with.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Record one residual: the raw (pre-calibration) prediction, the
+    /// calibrated prediction the consumer actually used, and the
+    /// observed actual. `family` is the model family the job came from
+    /// (recorded for the drift monitor's context; metrics are keyed per
+    /// device). Samples for devices outside the pre-registered profile
+    /// set are dropped — every production caller resolves devices
+    /// through [`crate::sim::DeviceProfile::by_name`].
+    pub fn record(
+        &self,
+        device: &str,
+        _family: &str,
+        target: Target,
+        raw: f64,
+        calibrated: f64,
+        actual: f64,
+    ) {
+        if !(raw.is_finite() && calibrated.is_finite() && actual.is_finite()) {
+            return;
+        }
+        let mut keys = self.keys.lock().unwrap_or_else(PoisonError::into_inner);
+        let Some(state) = keys.get_mut(&(device.to_string(), target.name())) else {
+            debug_assert!(false, "unregistered accuracy device '{device}'");
+            return;
+        };
+        if state.ring.len() == LEDGER_WINDOW {
+            state.ring.pop_front();
+        }
+        state.ring.push_back((raw, calibrated, actual));
+        state.seen += 1;
+        // Seeded reservoir: every all-time sample has equal probability
+        // of sitting in the fit corpus, deterministically per seed.
+        if state.reservoir.len() < FIT_RESERVOIR {
+            state.reservoir.push((raw, actual));
+        } else {
+            let j = state.rng.below(state.seen as usize);
+            if j < FIT_RESERVOIR {
+                state.reservoir[j] = (raw, actual);
+            }
+        }
+        self.samples_total.inc();
+        // Drift: fill the current window; compare full windows.
+        if actual.abs() > MIN_ACTUAL {
+            state.window.push((raw - actual) / actual);
+        }
+        if state.window.len() == DRIFT_WINDOW {
+            let cur = state.window.iter().sum::<f64>() / DRIFT_WINDOW as f64;
+            match state.ref_mean {
+                Some(reference) if (cur - reference).abs() > DRIFT_THRESHOLD => {
+                    self.drift_events.inc();
+                    self.drift_active.set(1);
+                    // The shifted distribution becomes the new reference.
+                    state.ref_mean = Some(cur);
+                }
+                Some(_) => self.drift_active.set(0),
+                None => state.ref_mean = Some(cur),
+            }
+            state.window.clear();
+        }
+        state.refresh_gauges();
+    }
+
+    /// The bounded all-time (raw prediction, actual) fit corpus for one
+    /// key — what the online calibrator trains from.
+    pub fn fit_samples(&self, device: &str, target: Target) -> Vec<(f64, f64)> {
+        let keys = self.keys.lock().unwrap_or_else(PoisonError::into_inner);
+        keys.get(&(device.to_string(), target.name()))
+            .map(|s| s.reservoir.clone())
+            .unwrap_or_default()
+    }
+
+    /// All-time samples recorded for one key (monotone; the ring and
+    /// reservoir stay bounded regardless).
+    pub fn seen(&self, device: &str, target: Target) -> u64 {
+        let keys = self.keys.lock().unwrap_or_else(PoisonError::into_inner);
+        keys.get(&(device.to_string(), target.name()))
+            .map(|s| s.seen)
+            .unwrap_or(0)
+    }
+}
+
+/// Assemble the structured `accuracy` block from a registry snapshot's
+/// `acc.*` entries — the shape `serve --json`, `fleet --json`,
+/// `stats --json` and `eval --json` all carry:
+///
+/// ```json
+/// {"samples": 12, "drift": {"events": 0, "active": 0},
+///  "devices": {"rtx2080": {"time": {"samples": 6, "mre": 0.04,
+///   "mre_cal": 0.01, "mae": 1.2, "bias": -0.03}, "memory": {…}}, …}}
+/// ```
+///
+/// Works on scraped snapshots too (the `stats --addr` path), where no
+/// live ledger exists client-side.
+pub fn block_from_snapshot(snapshot: &Json) -> Json {
+    let section = |name: &str| match snapshot.get(name) {
+        Some(Json::Obj(m)) => m.clone(),
+        _ => BTreeMap::new(),
+    };
+    let counters = section("counters");
+    let gauges = section("gauges");
+    let num = |m: &BTreeMap<String, Json>, k: &str| m.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    let mut drift = Json::obj();
+    drift
+        .set("events", num(&counters, "acc.drift_events"))
+        .set("active", num(&gauges, "acc.drift_active"));
+    let mut devices = Json::obj();
+    for (name, v) in &gauges {
+        // acc.<device>.<target>.<metric> — three dots; the global
+        // acc.samples / acc.drift_active names have fewer.
+        let Some(rest) = name.strip_prefix("acc.") else {
+            continue;
+        };
+        let parts: Vec<&str> = rest.split('.').collect();
+        let [device, target, metric] = parts[..] else {
+            continue;
+        };
+        let Json::Obj(devs) = &mut devices else {
+            unreachable!()
+        };
+        let dev = devs.entry(device.to_string()).or_insert_with(Json::obj);
+        let Json::Obj(targets) = dev else {
+            unreachable!()
+        };
+        let t = targets.entry(target.to_string()).or_insert_with(Json::obj);
+        t.set(metric, v.as_f64().unwrap_or(0.0));
+    }
+    let mut o = Json::obj();
+    o.set("samples", num(&counters, "acc.samples"))
+        .set("drift", drift)
+        .set("devices", devices);
+    o
+}
+
+/// Plain-text render of [`block_from_snapshot`]'s output — the accuracy
+/// section of the `stats` CLI (watch mode included).
+pub fn render_block(block: &Json) -> String {
+    let mut out = String::new();
+    let samples = block.num("samples").unwrap_or(0.0);
+    let events = block
+        .get("drift")
+        .and_then(|d| d.num("events").ok())
+        .unwrap_or(0.0);
+    let active = block
+        .get("drift")
+        .and_then(|d| d.num("active").ok())
+        .unwrap_or(0.0);
+    let _ = writeln!(
+        out,
+        "accuracy: {samples:.0} residuals, {events:.0} drift events{}",
+        if active > 0.0 { " [DRIFT]" } else { "" }
+    );
+    if let Some(Json::Obj(devices)) = block.get("devices") {
+        for (device, targets) in devices {
+            if let Json::Obj(targets) = targets {
+                for (target, m) in targets {
+                    let f = |k: &str| m.num(k).unwrap_or(0.0);
+                    let _ = writeln!(
+                        out,
+                        "  {:<24} n {:>4.0}  mre {:>7.2}%  cal {:>7.2}%  bias {:>+7.2}%",
+                        format!("{device}/{target}"),
+                        f("samples"),
+                        f("mre") * 100.0,
+                        f("mre_cal") * 100.0,
+                        f("bias") * 100.0,
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ledger() -> (Registry, AccuracyLedger) {
+        let r = Registry::new();
+        let l = AccuracyLedger::register(&r, 7);
+        (r, l)
+    }
+
+    #[test]
+    fn key_set_is_registered_up_front() {
+        let (r, _l) = ledger();
+        let snap = r.snapshot();
+        let g = snap.get("gauges").unwrap();
+        for device in KNOWN_DEVICES {
+            for target in ["time", "memory"] {
+                for metric in ["mre", "mre_cal", "mae", "bias", "samples"] {
+                    let name = format!("acc.{device}.{target}.{metric}");
+                    assert!(g.get(&name).is_some(), "missing {name}");
+                }
+            }
+        }
+        assert!(snap.get("counters").unwrap().get("acc.samples").is_some());
+        assert!(snap.get("counters").unwrap().get("acc.drift_events").is_some());
+        assert!(g.get("acc.drift_active").is_some());
+    }
+
+    #[test]
+    fn rolling_gauges_track_recorded_residuals() {
+        let (r, l) = ledger();
+        // 10% systematic over-prediction; calibration removes half.
+        for i in 0..20 {
+            let actual = 100.0 + i as f64;
+            l.record("rtx2080", "resnet18", Target::Time, actual * 1.1, actual * 1.05, actual);
+        }
+        let snap = r.snapshot();
+        let g = snap.get("gauges").unwrap();
+        let near = |k: &str, want: f64| {
+            let got = g.num(k).unwrap();
+            assert!((got - want).abs() < 1e-9, "{k}: {got} != {want}");
+        };
+        near("acc.rtx2080.time.mre", 0.1);
+        near("acc.rtx2080.time.mre_cal", 0.05);
+        near("acc.rtx2080.time.bias", 0.1);
+        near("acc.rtx2080.time.samples", 20.0);
+        assert_eq!(snap.get("counters").unwrap().num("acc.samples").unwrap(), 20.0);
+        // The untouched device/target keys stay at their zero defaults.
+        near("acc.rtx3090.memory.mre", 0.0);
+    }
+
+    #[test]
+    fn ledger_is_bounded_and_reservoir_deterministic() {
+        let (_r, a) = ledger();
+        let (_r2, b) = ledger();
+        for i in 0..(LEDGER_WINDOW * 3) {
+            let actual = 1.0 + (i % 37) as f64;
+            a.record("rtx3090", "vgg16", Target::Memory, actual * 1.2, actual * 1.2, actual);
+            b.record("rtx3090", "vgg16", Target::Memory, actual * 1.2, actual * 1.2, actual);
+        }
+        assert_eq!(a.seen("rtx3090", Target::Memory) as usize, LEDGER_WINDOW * 3);
+        let fa = a.fit_samples("rtx3090", Target::Memory);
+        let fb = b.fit_samples("rtx3090", Target::Memory);
+        assert_eq!(fa.len(), FIT_RESERVOIR, "reservoir stays bounded");
+        assert_eq!(fa, fb, "same seed + order must give identical reservoirs");
+    }
+
+    #[test]
+    fn drift_monitor_fires_on_mean_shift_and_clears() {
+        let (r, l) = ledger();
+        let mut rec = |rel: f64, n: usize| {
+            for _ in 0..n {
+                l.record("rtx2080", "m", Target::Time, 100.0 * (1.0 + rel), 100.0, 100.0);
+            }
+        };
+        // Reference window at ~0 signed error, then a shifted window.
+        rec(0.0, DRIFT_WINDOW);
+        assert_eq!(r.counter("acc.drift_events").get(), 0);
+        rec(0.5, DRIFT_WINDOW);
+        assert_eq!(r.counter("acc.drift_events").get(), 1);
+        assert_eq!(r.gauge("acc.drift_active").get(), 1);
+        // A stable window at the new level clears the mark.
+        rec(0.5, DRIFT_WINDOW);
+        assert_eq!(r.counter("acc.drift_events").get(), 1);
+        assert_eq!(r.gauge("acc.drift_active").get(), 0);
+    }
+
+    #[test]
+    fn identical_seeds_produce_byte_identical_snapshots() {
+        let ra = Registry::new();
+        let rb = Registry::new();
+        let a = AccuracyLedger::register(&ra, 42);
+        let b = AccuracyLedger::register(&rb, 42);
+        for i in 0..300u64 {
+            let actual = 10.0 + (i % 23) as f64;
+            let raw = actual * (1.0 + 0.01 * (i % 7) as f64);
+            a.record("rtx2080", "m", Target::Time, raw, raw * 0.99, actual);
+            b.record("rtx2080", "m", Target::Time, raw, raw * 0.99, actual);
+        }
+        assert_eq!(ra.snapshot().to_string(), rb.snapshot().to_string());
+    }
+
+    #[test]
+    fn block_from_snapshot_shapes_the_accuracy_block() {
+        let (r, l) = ledger();
+        for _ in 0..4 {
+            l.record("rtx2080", "m", Target::Time, 110.0, 104.0, 100.0);
+        }
+        let block = block_from_snapshot(&r.snapshot());
+        assert_eq!(block.num("samples").unwrap(), 4.0);
+        assert!(block.get("drift").unwrap().num("events").unwrap() >= 0.0);
+        let time = block
+            .get("devices")
+            .unwrap()
+            .get("rtx2080")
+            .unwrap()
+            .get("time")
+            .unwrap();
+        assert!((time.num("mre").unwrap() - 0.1).abs() < 1e-9);
+        assert!((time.num("mre_cal").unwrap() - 0.04).abs() < 1e-9);
+        assert_eq!(time.num("samples").unwrap(), 4.0);
+        let text = render_block(&block);
+        assert!(text.contains("rtx2080/time"), "{text}");
+        assert!(text.contains("accuracy: 4 residuals"), "{text}");
+    }
+}

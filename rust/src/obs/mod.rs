@@ -12,16 +12,25 @@
 //!   branch per call site.
 //! - [`ring`] — bounded buffer of recent completed [`TraceSummary`]s,
 //!   served back over the `metrics` wire request.
+//! - [`accuracy`] — the residual ledger: bounded (predicted, actual)
+//!   sample windows per (device, target) published as rolling
+//!   MRE/MAE/bias gauges under `acc.*`, plus a mean-shift drift
+//!   monitor and the seeded fit corpus the online calibrator reads.
 //!
 //! Naming convention: `<component>.<metric>[_<unit>]` — e.g.
 //! `net.answered`, `svc.cache_hits`, `stage.queue_wait_us`,
-//! `fleet.wait_us`. Durations are recorded in microseconds and carry
-//! the `_us` suffix. The full table lives in DESIGN.md §4f.
+//! `fleet.wait_us`, `acc.rtx2080.time.mre`. Durations are recorded in
+//! microseconds and carry the `_us` suffix. The full table lives in
+//! DESIGN.md §4f.
 
+pub mod accuracy;
 pub mod registry;
 pub mod ring;
 pub mod trace;
 
-pub use registry::{global, render_snapshot, stage_block, Counter, Gauge, Histogram, Registry};
+pub use accuracy::{block_from_snapshot, render_block, AccuracyLedger};
+pub use registry::{
+    global, render_snapshot, stage_block, Counter, Gauge, GaugeF, Histogram, Registry,
+};
 pub use ring::{TraceRing, TRACE_RING_CAP};
 pub use trace::{Sampler, SpanRec, Trace, TraceSummary};

@@ -83,6 +83,29 @@ impl Gauge {
     }
 }
 
+/// A fractional point-in-time value — ratios like a rolling MRE or a
+/// signed relative bias, which a `u64` [`Gauge`] would truncate to 0.
+/// Stored as [`f64::to_bits`] in one `AtomicU64`, so reads and writes
+/// stay lock-free and a torn value is impossible.
+#[derive(Debug)]
+pub struct GaugeF(AtomicU64);
+
+impl Default for GaugeF {
+    fn default() -> GaugeF {
+        GaugeF(AtomicU64::new(0f64.to_bits()))
+    }
+}
+
+impl GaugeF {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
 /// Map a value to its log-linear bucket index.
 fn bucket_index(v: u64) -> usize {
     if v < 2 * SUB_BUCKETS {
@@ -198,6 +221,9 @@ impl Histogram {
 pub struct Registry {
     counters: RwLock<BTreeMap<String, Arc<Counter>>>,
     gauges: RwLock<BTreeMap<String, Arc<Gauge>>>,
+    /// Fractional gauges share the snapshot's `gauges` section with the
+    /// integer ones — a name must live in exactly one of the two maps.
+    gauges_f: RwLock<BTreeMap<String, Arc<GaugeF>>>,
     histograms: RwLock<BTreeMap<String, Arc<Histogram>>>,
 }
 
@@ -231,6 +257,13 @@ impl Registry {
         get_or_register(&self.gauges, name)
     }
 
+    /// Get-or-register a fractional gauge. Renders into the snapshot's
+    /// `gauges` section alongside the integer ones; never reuse a name
+    /// that an integer gauge already holds.
+    pub fn gauge_f64(&self, name: &str) -> Arc<GaugeF> {
+        get_or_register(&self.gauges_f, name)
+    }
+
     pub fn histogram(&self, name: &str) -> Arc<Histogram> {
         get_or_register(&self.histograms, name)
     }
@@ -246,6 +279,11 @@ impl Registry {
         }
         let mut gauges = Json::obj();
         for (name, g) in read_lock(&self.gauges).iter() {
+            gauges.set(name, g.get());
+        }
+        // Json::Obj is a BTreeMap, so the merged section stays sorted
+        // no matter which map a gauge came from.
+        for (name, g) in read_lock(&self.gauges_f).iter() {
             gauges.set(name, g.get());
         }
         let mut histograms = Json::obj();
@@ -277,7 +315,13 @@ pub fn render_snapshot(doc: &Json) -> String {
             let _ = writeln!(out, "{section}:");
             for (name, v) in map {
                 let n = v.as_f64().unwrap_or(0.0);
-                let _ = writeln!(out, "  {name:<28} {n:>12.0}");
+                // Fractional gauges (MRE, bias) keep their decimals; the
+                // scraped JSON carries no type tag, so render by value.
+                if n == n.trunc() {
+                    let _ = writeln!(out, "  {name:<28} {n:>12.0}");
+                } else {
+                    let _ = writeln!(out, "  {name:<28} {n:>12.4}");
+                }
             }
         }
     }
@@ -346,6 +390,30 @@ mod tests {
         assert_eq!(g.get(), 3);
         g.sub(100); // saturates, never wraps
         assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn f64_gauges_keep_fractions_in_snapshot_and_render() {
+        let r = Registry::new();
+        r.gauge_f64("acc.rtx2080.time.mre").set(0.0375);
+        r.gauge_f64("acc.rtx2080.time.bias").set(-0.012);
+        r.gauge("acc.drift_active").set(1);
+        let snap = r.snapshot();
+        let g = snap.get("gauges").unwrap();
+        assert_eq!(g.num("acc.rtx2080.time.mre").unwrap(), 0.0375);
+        assert_eq!(g.num("acc.rtx2080.time.bias").unwrap(), -0.012);
+        assert_eq!(g.num("acc.drift_active").unwrap(), 1.0);
+        // Fractions survive a serialize/parse roundtrip (no truncation).
+        let back = Json::parse(&snap.to_string()).unwrap();
+        let gb = back.get("gauges").unwrap();
+        assert_eq!(gb.num("acc.rtx2080.time.mre").unwrap(), 0.0375);
+        // The text render keeps decimals for fractional values and the
+        // integer shape for whole ones.
+        let text = render_snapshot(&snap);
+        assert!(text.contains("0.0375"), "{text}");
+        assert!(!text.contains("drift_active                        1."), "{text}");
+        // Identical state serializes byte-identically, f64 gauges included.
+        assert_eq!(snap.to_string(), r.snapshot().to_string());
     }
 
     #[test]

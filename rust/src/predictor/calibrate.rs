@@ -1,0 +1,205 @@
+//! Online per-device affine calibration in log space.
+//!
+//! Zero-shot predictions on unseen hardware carry systematic, device-
+//! shaped error: the model has never seen the device's constants, so
+//! its residuals are mostly a multiplicative offset (and sometimes a
+//! mild scale warp) rather than white noise. PreNeT-style few-shot
+//! correction exploits exactly that: a handful of observed (predicted,
+//! actual) pairs is enough to fit
+//!
+//! ```text
+//! ln(actual) ≈ a + b · ln(predicted)
+//! ```
+//!
+//! and applying `exp(a + b·ln p)` to later predictions removes the
+//! systematic part. [`AffineCalibrator`] is that correction with three
+//! safety rails:
+//!
+//! * **identity until warm** — below [`MIN_SAMPLES`] usable pairs the
+//!   calibrator stays inactive and [`AffineCalibrator::apply`] returns
+//!   its input *bit-for-bit*;
+//! * **slope damping** — the OLS slope is shrunk toward 1 by
+//!   `n / (n + SLOPE_DAMP)` and clamped to `[0.25, 4]`, so a few noisy
+//!   shots cannot produce a wild warp (the intercept, the dominant
+//!   device-offset term, is not damped);
+//! * **do-no-harm activation** — the fit only activates if it improves
+//!   in-sample MRE by at least [`MIN_GAIN`]; otherwise it stays
+//!   identity. Calibrated error is therefore never worse than raw on
+//!   the corpus it trained from, and *exactly* equal when calibration
+//!   has nothing to offer (e.g. all residuals already zero).
+
+use crate::util::stats::mre;
+
+/// Usable (positive, finite) sample pairs required before a fit can
+/// activate.
+pub const MIN_SAMPLES: usize = 8;
+
+/// Minimum fractional in-sample MRE improvement required to activate:
+/// calibrated ≤ raw · (1 − MIN_GAIN).
+pub const MIN_GAIN: f64 = 0.05;
+
+/// Pseudo-count strength of the slope's pull toward 1.
+pub const SLOPE_DAMP: f64 = 8.0;
+
+/// A fitted (or identity) log-space affine correction for one
+/// (device, target) stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AffineCalibrator {
+    /// Log-space intercept.
+    pub a: f64,
+    /// Log-space slope (damped toward 1).
+    pub b: f64,
+    /// Usable samples behind the fit.
+    pub n: usize,
+    /// Whether [`apply`](AffineCalibrator::apply) transforms at all.
+    pub active: bool,
+}
+
+impl Default for AffineCalibrator {
+    fn default() -> AffineCalibrator {
+        AffineCalibrator::identity()
+    }
+}
+
+impl AffineCalibrator {
+    /// The do-nothing calibrator: `apply` returns its input unchanged.
+    pub fn identity() -> AffineCalibrator {
+        AffineCalibrator { a: 0.0, b: 1.0, n: 0, active: false }
+    }
+
+    /// Fit from (raw prediction, actual) pairs. Non-positive or
+    /// non-finite pairs are skipped (log space). Returns an inactive
+    /// identity unless there are ≥ [`MIN_SAMPLES`] usable pairs *and*
+    /// the fit clears the do-no-harm bar.
+    pub fn fit(samples: &[(f64, f64)]) -> AffineCalibrator {
+        let usable: Vec<(f64, f64)> = samples
+            .iter()
+            .copied()
+            .filter(|&(p, t)| {
+                p.is_finite() && t.is_finite() && p > 0.0 && t > 0.0
+            })
+            .collect();
+        let n = usable.len();
+        if n < MIN_SAMPLES {
+            return AffineCalibrator::identity();
+        }
+        let logs: Vec<(f64, f64)> = usable.iter().map(|&(p, t)| (p.ln(), t.ln())).collect();
+        let nf = n as f64;
+        let mx = logs.iter().map(|&(x, _)| x).sum::<f64>() / nf;
+        let my = logs.iter().map(|&(_, y)| y).sum::<f64>() / nf;
+        let sxx = logs.iter().map(|&(x, _)| (x - mx) * (x - mx)).sum::<f64>();
+        let sxy = logs.iter().map(|&(x, y)| (x - mx) * (y - my)).sum::<f64>();
+        let b_hat = if sxx < 1e-9 { 1.0 } else { sxy / sxx };
+        let b = (1.0 + (b_hat - 1.0) * nf / (nf + SLOPE_DAMP)).clamp(0.25, 4.0);
+        let a = my - b * mx;
+        let mut cal = AffineCalibrator { a, b, n, active: true };
+        // Do-no-harm: measure in-sample MRE with and without the fit.
+        let (preds, truths): (Vec<f64>, Vec<f64>) = usable.iter().copied().unzip();
+        let corrected: Vec<f64> = preds.iter().map(|&p| cal.apply(p)).collect();
+        let raw_mre = mre(&preds, &truths);
+        let cal_mre = mre(&corrected, &truths);
+        if !(cal_mre <= raw_mre * (1.0 - MIN_GAIN)) {
+            cal = AffineCalibrator::identity();
+        }
+        cal
+    }
+
+    /// Correct one prediction. Inactive calibrators — and non-positive
+    /// or non-finite inputs, which log space cannot represent — return
+    /// the input exactly.
+    pub fn apply(&self, pred: f64) -> f64 {
+        if !self.active || !pred.is_finite() || pred <= 0.0 {
+            return pred;
+        }
+        (self.a + self.b * pred.ln()).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_when_residuals_are_zero() {
+        // Perfect predictions: nothing to gain, so the fit must stay
+        // inactive and apply must be the exact identity.
+        let samples: Vec<(f64, f64)> = (1..40).map(|i| (i as f64, i as f64)).collect();
+        let cal = AffineCalibrator::fit(&samples);
+        assert!(!cal.active);
+        for &(p, _) in &samples {
+            assert_eq!(cal.apply(p), p, "inactive apply must be bit-exact identity");
+        }
+        assert_eq!(cal.apply(0.123456789), 0.123456789);
+    }
+
+    #[test]
+    fn identity_below_min_samples() {
+        // A strong 2x bias, but too few shots to act on it.
+        let samples: Vec<(f64, f64)> =
+            (1..MIN_SAMPLES).map(|i| (i as f64, 2.0 * i as f64)).collect();
+        let cal = AffineCalibrator::fit(&samples);
+        assert!(!cal.active);
+        assert_eq!(cal.apply(10.0), 10.0);
+    }
+
+    #[test]
+    fn removes_a_multiplicative_bias() {
+        // actual = 3.7 · predicted, exactly — the canonical unseen-
+        // device shape. The fit should recover it almost perfectly.
+        let samples: Vec<(f64, f64)> = (1..30)
+            .map(|i| {
+                let p = 0.5 * i as f64;
+                (p, 3.7 * p)
+            })
+            .collect();
+        let cal = AffineCalibrator::fit(&samples);
+        assert!(cal.active);
+        let corrected = cal.apply(10.0);
+        assert!(
+            (corrected - 37.0).abs() / 37.0 < 0.02,
+            "expected ~37, got {corrected}"
+        );
+    }
+
+    #[test]
+    fn slope_is_damped_and_clamped() {
+        // Pathological warp: actual = predicted^9. Raw OLS slope would
+        // be ~9; damping + clamping must keep it within [0.25, 4].
+        let samples: Vec<(f64, f64)> = (2..20)
+            .map(|i| {
+                let p = i as f64;
+                (p, p.powi(9))
+            })
+            .collect();
+        let cal = AffineCalibrator::fit(&samples);
+        assert!(cal.b <= 4.0 && cal.b >= 0.25, "slope {} escaped clamp", cal.b);
+    }
+
+    #[test]
+    fn skips_unusable_pairs_and_preserves_them_on_apply() {
+        let mut samples: Vec<(f64, f64)> = (1..30).map(|i| (i as f64, 2.0 * i as f64)).collect();
+        samples.push((f64::NAN, 1.0));
+        samples.push((-3.0, 1.0));
+        samples.push((1.0, 0.0));
+        let cal = AffineCalibrator::fit(&samples);
+        assert!(cal.active);
+        assert_eq!(cal.n, 29, "only the positive finite pairs count");
+        assert_eq!(cal.apply(-3.0), -3.0, "non-positive inputs pass through");
+        assert!(cal.apply(f64::NAN).is_nan());
+    }
+
+    #[test]
+    fn do_no_harm_rejects_marginal_fits() {
+        // Symmetric noise around y = x: any affine fit is chance-level,
+        // so the do-no-harm bar must keep the calibrator inactive.
+        let samples: Vec<(f64, f64)> = (1..40)
+            .map(|i| {
+                let p = i as f64;
+                let t = if i % 2 == 0 { p * 1.05 } else { p / 1.05 };
+                (p, t)
+            })
+            .collect();
+        let cal = AffineCalibrator::fit(&samples);
+        assert!(!cal.active, "marginal fit must not activate: {cal:?}");
+    }
+}

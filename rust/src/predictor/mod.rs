@@ -9,6 +9,7 @@
 //! magnitude across the zoo).
 
 pub mod automl;
+pub mod calibrate;
 pub mod dataset;
 pub mod forest;
 pub mod gbdt;
@@ -17,6 +18,7 @@ pub mod shape_inference;
 pub mod tree;
 
 pub use automl::{AutoMl, AutoMlReport, ModelKind};
+pub use calibrate::AffineCalibrator;
 pub use dataset::{DataPoint, Dataset, Target};
 
 use crate::util::json::Json;

@@ -15,7 +15,10 @@
 //! 5. raw atomic counters live only in `obs/` — every other module
 //!    counts through the [`crate::obs`] registry, so no metric can
 //!    exist outside the unified snapshot (explicit allowlist for the
-//!    one non-metric atomic).
+//!    one non-metric atomic);
+//! 6. every metric-name prefix (`svc.`, `net.`, `stage.`, `fleet.`,
+//!    `acc.`) has a row in DESIGN.md §4f's naming table, so new
+//!    instrument families cannot ship undocumented.
 
 #[cfg(test)]
 mod tests {
@@ -166,6 +169,19 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn every_metric_prefix_has_a_naming_table_row() {
+        let design = read(&root().join("DESIGN.md"));
+        let missing: Vec<&str> = ["svc.", "net.", "stage.", "fleet.", "acc."]
+            .into_iter()
+            .filter(|prefix| !design.contains(&format!("| `{prefix}` |")))
+            .collect();
+        assert!(
+            missing.is_empty(),
+            "DESIGN.md §4f naming table is missing prefix rows {missing:?}"
+        );
     }
 
     #[test]
